@@ -1,0 +1,129 @@
+//! End-to-end validation driver (DESIGN.md): train the application DNN
+//! through the full three-layer stack — Rust coordinator -> PJRT -> AOT
+//! JAX/Pallas train step — under VeloC checkpointing, inject a node
+//! failure mid-run, restart from the best surviving level, and log a loss
+//! curve that continues smoothly across the failure.
+//!
+//! This is the paper's §3 "productive checkpointing" scenario (DeepFreeze
+//! [3]): the model's parameter tensors are critical memory regions,
+//! captured fine-grained after each optimizer update.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example dnn_training [-- --steps 300]
+
+use anyhow::Result;
+use std::sync::Arc;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::app::{CaptureMode, DnnTrainer};
+use veloc::cluster::FailureScope;
+use veloc::pipeline::level_name;
+use veloc::runtime::PjrtEngine;
+use veloc::util::cli::Cli;
+
+fn main() -> Result<()> {
+    let cli = Cli::new(
+        "dnn_training",
+        "end-to-end: DNN training under VeloC with failure + restart",
+    )
+    .opt("steps", "300", "total training steps")
+    .opt("ckpt-every", "25", "checkpoint every N steps")
+    .opt("fail-at", "150", "inject a node failure after this step (0=off)")
+    .opt("lr", "0.05", "SGD learning rate")
+    .parse();
+    let steps = cli.get_u64("steps");
+    let every = cli.get_u64("ckpt-every").max(1);
+    let fail_at = cli.get_u64("fail-at");
+    let lr = cli.get_f64("lr") as f32;
+
+    let mut cfg = VelocConfig::default().with_nodes(4, 1);
+    cfg.use_kernels = true; // checksum digests through the Pallas kernel
+    cfg.stack.use_kernels = true;
+    // Only this rank checkpoints, so the group-collective erasure level
+    // stays off; partner replication + PFS flush protect the model.
+    cfg.stack.erasure_group = 0;
+    let rt = VelocRuntime::new(cfg)?;
+    let engine = PjrtEngine::load(&rt.config().artifacts_dir())?;
+    engine.warm(&["dnn_train_step", "dnn_loss"])?;
+
+    // Rank 0 trains; the other ranks exist so partner/erasure levels have
+    // real failure domains to land on. (Data-parallel replicas would each
+    // run this same loop.)
+    let client = rt.client(0);
+    let mut trainer = DnnTrainer::new(
+        &client,
+        Arc::clone(&engine),
+        "dnn",
+        lr,
+        CaptureMode::FineGrained,
+        42,
+    )?;
+    println!(
+        "model: {} parameters; capture=fine-grained; ckpt every {every} steps",
+        trainer.param_count()
+    );
+    println!("{:>6} {:>10} {:>8}  note", "step", "loss", "acc");
+
+    let mut losses: Vec<(u64, f32)> = Vec::new();
+    let mut injected = false;
+    while trainer.step < steps {
+        let loss = trainer.train_step()?;
+        losses.push((trainer.step, loss));
+        if trainer.step % every == 0 {
+            let v = trainer.checkpoint(&client)?;
+            client.checkpoint_wait("dnn", v)?;
+            let (eval_loss, acc) = trainer.evaluate()?;
+            println!(
+                "{:>6} {:>10.4} {:>8.3}  checkpoint v{v}",
+                trainer.step, eval_loss, acc
+            );
+        }
+        if !injected && fail_at > 0 && trainer.step >= fail_at {
+            injected = true;
+            rt.drain();
+            println!("!! node 0 failure injected at step {}", trainer.step);
+            rt.inject_failure(&FailureScope::Node(0));
+            rt.revive_all();
+            // Respawned process: fresh trainer, restore via VeloC.
+            let client2 = rt.client(0);
+            let mut t2 = DnnTrainer::new(
+                &client2,
+                Arc::clone(&engine),
+                "dnn",
+                lr,
+                CaptureMode::FineGrained,
+                42,
+            )?;
+            let restored = t2.restart(&client2)?.expect("restart must succeed");
+            // Which level served it?
+            let m = rt.metrics();
+            let lvl = (1..=5)
+                .find(|l| m.counter(&format!("restart.level{l}")) > 0)
+                .unwrap_or(0);
+            println!(
+                "   restarted from v{restored} (level {lvl} = {}), resuming at step {}",
+                level_name(lvl as u8),
+                t2.step
+            );
+            trainer = t2;
+        }
+    }
+    rt.drain();
+
+    let (final_loss, final_acc) = trainer.evaluate()?;
+    println!("\nfinal: step {} loss {:.4} acc {:.3}", trainer.step, final_loss, final_acc);
+
+    // Loss-curve sanity for EXPERIMENTS.md: model learned, and the curve
+    // continued (no blow-up after restart).
+    let first = losses.first().unwrap().1;
+    let last = losses.last().unwrap().1;
+    println!(
+        "loss curve: start {:.4} -> end {:.4} ({} recorded steps, failure {})",
+        first,
+        last,
+        losses.len(),
+        if injected { "injected+recovered" } else { "none" }
+    );
+    assert!(last < first, "training must reduce loss");
+    println!("OK: end-to-end three-layer stack validated");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+"""L1 Pallas kernels for VeloC's compute hot-spots.
+
+- xor_parity: erasure-group parity encode (resilience level 3)
+- block_checksum: integrity-module checksum
+- fused_linear: MXU-shaped linear layer used by the L2 MLPs
+"""
+
+from .checksum import BLOCK, block_checksum
+from .fused_linear import fused_linear
+from .xor_parity import BLOCK_N, xor_parity
+
+__all__ = [
+    "BLOCK",
+    "BLOCK_N",
+    "block_checksum",
+    "fused_linear",
+    "xor_parity",
+]

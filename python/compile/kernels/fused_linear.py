@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: fused linear layer (matmul + bias + optional ReLU).
+
+Used by both L2 MLPs (the interval-prediction network of paper ref [1] and
+the application DNN that the DeepFreeze-style experiments checkpoint).
+
+TPU adaptation: the whole (B, In) x (In, Out) product is expressed as one
+MXU-shaped matmul per output tile with the bias add and ReLU fused
+in-register, instead of three separate HLO ops. Block sizes are multiples of
+the (8, 128) TPU tile. A custom_vjp keeps the kernel on the *training* path:
+forward runs the Pallas kernel, backward is plain jnp (standard dense-layer
+gradients), so jax.grad works through it and everything lowers into one HLO
+module.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _fused_linear_impl(x, w, b, relu):
+    bsz, d_in = x.shape
+    d_out = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_fused_linear_kernel, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((bsz, d_out), jnp.float32),
+        # Single block: the MLP layers here are small enough to sit in VMEM
+        # whole (max layer 784x512 f32 = 1.6 MiB). For larger layers the
+        # grid would tile (bsz, d_out) into (128, 128) MXU blocks.
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, relu=True):
+    """relu(x @ w + b) (or affine only) with a Pallas forward."""
+    return _fused_linear_impl(x, w, b, relu)
+
+
+def _fwd(x, w, b, relu):
+    y = _fused_linear_impl(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0).astype(g.dtype)
+    gx = g @ w.T
+    gw = x.T @ g
+    gb = jnp.sum(g, axis=0)
+    return gx, gw, gb
+
+
+fused_linear.defvjp(_fwd, _bwd)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+pytest asserts kernel-vs-ref allclose across hypothesis-driven shape/dtype
+sweeps (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def xor_parity_ref(x):
+    """x: (k, n) int -> (n,) XOR reduction over the shard axis."""
+    out = x[0]
+    for i in range(1, x.shape[0]):
+        out = jnp.bitwise_xor(out, x[i])
+    return out
+
+
+def block_checksum_ref(x):
+    """x: (rows, blk) int32 -> (rows,) position-weighted wrapping sum."""
+    w = (2 * jnp.arange(x.shape[1], dtype=jnp.int32) + 1)
+    return jnp.sum(x * w[None, :], axis=1, dtype=jnp.int32)
+
+
+def fused_linear_ref(x, w, b, relu=True):
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y

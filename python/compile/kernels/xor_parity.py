@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: XOR parity encode over a k-shard erasure group.
+
+This is the compute hot-spot of VeloC's erasure-coding resilience level:
+given k equally-sized checkpoint shards (one per group member), produce the
+XOR parity shard that allows reconstructing any single lost shard.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): an HPC erasure library does
+word-wide SIMD XOR on CPU; on TPU we tile the (k, n) shard group into
+VMEM-resident blocks via BlockSpec and reduce across the shard axis with a
+vectorized `bitwise_xor`, streaming HBM->VMEM block by block along n.
+
+Lowered with interpret=True (CPU PJRT cannot run Mosaic custom-calls); the
+real-TPU VMEM/MXU estimate lives in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block width along the data axis. 512 int32 lanes = 2 KiB per shard row;
+# with k<=8 shards resident the block is <=16 KiB of VMEM, far under budget,
+# and a multiple of the 128-lane TPU vector width.
+BLOCK_N = 512
+
+
+def _xor_kernel(x_ref, o_ref):
+    """x_ref: (k, BLOCK_N) int32 block; o_ref: (BLOCK_N,) int32 parity."""
+    blk = x_ref[...]
+    # Reduce across the shard axis. k is small and static, so an unrolled
+    # lax.reduce via jnp keeps everything in registers.
+    o_ref[...] = jax.lax.reduce(
+        blk, jnp.int32(0), jax.lax.bitwise_xor, dimensions=(0,)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def xor_parity(x, block_n=BLOCK_N):
+    """XOR-reduce shards: x (k, n) int32 -> parity (n,) int32.
+
+    n must be a multiple of block_n (the Rust caller pads checkpoint chunks
+    to the block size; see rust/src/modules/erasure.rs).
+    """
+    k, n = x.shape
+    assert n % block_n == 0, f"n={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _xor_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        interpret=True,
+    )(x)

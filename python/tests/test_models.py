@@ -1,0 +1,143 @@
+"""L2 model correctness: shapes, training signal, numerical sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# Interval MLP
+# ---------------------------------------------------------------------------
+
+def test_interval_mlp_fwd_shape(key):
+    params = model.interval_mlp_init(key)
+    x = jax.random.normal(key, (model.INTERVAL_BATCH, model.INTERVAL_FEATURES))
+    (y,) = model.interval_mlp_fwd(*params, x)
+    assert y.shape == (model.INTERVAL_BATCH,)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_interval_mlp_learns_young_daly(key):
+    """The MLP fits a Young/Daly-like target sqrt(2*C*MTBF) from features."""
+    params = model.interval_mlp_init(key)
+    step = jax.jit(model.interval_mlp_train)
+    lr = jnp.float32(0.01)
+    k = key
+    losses = []
+    for i in range(200):
+        k, ka, kb = jax.random.split(k, 3)
+        x = jax.random.uniform(
+            ka, (model.INTERVAL_BATCH, model.INTERVAL_FEATURES),
+            minval=0.1, maxval=1.0)
+        # target: normalized Young/Daly from features 0 (ckpt cost) and 1 (mtbf)
+        y = jnp.sqrt(2.0 * x[:, 0] * x[:, 1])
+        out = step(*params, x, y, lr)
+        params, loss = out[:-1], out[-1]
+        losses.append(float(loss))
+    assert losses[-1] < 0.25 * losses[0], (losses[0], losses[-1])
+
+
+def test_interval_mlp_train_preserves_shapes(key):
+    params = model.interval_mlp_init(key)
+    x = jax.random.normal(key, (model.INTERVAL_BATCH, model.INTERVAL_FEATURES))
+    y = jax.random.normal(key, (model.INTERVAL_BATCH,))
+    out = model.interval_mlp_train(*params, x, y, jnp.float32(0.01))
+    assert len(out) == 7
+    for p, p2 in zip(params, out[:-1]):
+        assert p.shape == p2.shape
+
+
+# ---------------------------------------------------------------------------
+# Seq2seq GRU
+# ---------------------------------------------------------------------------
+
+def test_seq2seq_fwd_shape_and_range(key):
+    params = model.seq2seq_init(key)
+    window = jax.random.uniform(key, (3, model.SEQ_WINDOW))
+    (pred,) = model.seq2seq_fwd(*params, window)
+    assert pred.shape == (3, model.SEQ_HORIZON)
+    p = np.asarray(pred)
+    assert (p >= 0).all() and (p <= 1).all()  # sigmoid head
+
+
+def test_seq2seq_learns_constant_signal(key):
+    """Sanity: a constant utilization trace is learnable quickly."""
+    params = model.seq2seq_init(key)
+    step = jax.jit(model.seq2seq_train)
+    window = jnp.full((8, model.SEQ_WINDOW), 0.8)
+    target = jnp.full((8, model.SEQ_HORIZON), 0.8)
+    lr = jnp.float32(0.1)
+    first = last = None
+    for i in range(60):
+        out = step(*params, window, target, lr)
+        params, loss = out[:-1], out[-1]
+        if i == 0:
+            first = float(loss)
+        last = float(loss)
+    assert last < 0.5 * first, (first, last)
+
+
+def test_seq2seq_batch_independence(key):
+    """Row i of a batched forward == forward of row i alone."""
+    params = model.seq2seq_init(key)
+    window = jax.random.uniform(key, (4, model.SEQ_WINDOW))
+    (batched,) = model.seq2seq_fwd(*params, window)
+    (single,) = model.seq2seq_fwd(*params, window[2:3])
+    np.testing.assert_allclose(np.asarray(batched[2]), np.asarray(single[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Application DNN
+# ---------------------------------------------------------------------------
+
+def _batch(key):
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (model.DNN_BATCH, model.DNN_IN))
+    y = jax.random.randint(ky, (model.DNN_BATCH,), 0, model.DNN_CLASSES)
+    return x, y
+
+
+def test_dnn_loss_initial_is_chance(key):
+    """Untrained model: CE loss ~= ln(10), accuracy ~= 10%."""
+    params = model.dnn_init(key)
+    x, y = _batch(key)
+    loss, acc = model.dnn_loss(*params, x, y)
+    assert abs(float(loss) - np.log(model.DNN_CLASSES)) < 2.0
+    assert float(acc) < 0.5
+
+
+def test_dnn_train_reduces_loss(key):
+    """Overfit a single synthetic batch — loss must fall sharply."""
+    params = model.dnn_init(key)
+    x, y = _batch(key)
+    step = jax.jit(model.dnn_train_step)
+    lr = jnp.float32(0.05)
+    first = last = None
+    for i in range(40):
+        out = step(*params, x, y, lr)
+        params, loss = out[:-1], out[-1]
+        if i == 0:
+            first = float(loss)
+        last = float(loss)
+    assert last < 0.3 * first, (first, last)
+
+
+def test_dnn_train_step_grad_direction(key):
+    """A single step with tiny lr must not increase the loss."""
+    params = model.dnn_init(key)
+    x, y = _batch(key)
+    out = model.dnn_train_step(*params, x, y, jnp.float32(1e-3))
+    params2, loss1 = out[:-1], out[-1]
+    loss2, _ = model.dnn_loss(*params2, x, y)
+    assert float(loss2) <= float(loss1) + 1e-4

@@ -1,0 +1,104 @@
+//! E10 — erasure-encode backend ablation (DESIGN.md): XOR parity fold via
+//! the Pallas kernel through PJRT vs the native u64-wide fold vs the naive
+//! scalar loop, across payload sizes.
+//!
+//! Also reports the modeled TPU picture for the kernel (DESIGN.md
+//! §Hardware-Adaptation): VMEM bytes per grid step and the arithmetic
+//! intensity, since interpret-mode wallclock is a CPU-numpy number, not a
+//! TPU proxy.
+
+#[path = "harness.rs"]
+mod harness;
+
+use veloc::modules::{xor_fold, XorBackend};
+use veloc::runtime::{default_artifacts_dir, PjrtEngine};
+use veloc::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(10);
+    let k = 4usize;
+
+    let kernel = PjrtEngine::load(&default_artifacts_dir()).ok();
+    if kernel.is_none() {
+        println!("(kernel rows skipped: run `make artifacts`)");
+    }
+
+    harness::section("E10: XOR parity fold, k=4 shards");
+    harness::table_header();
+    for mb in [1usize, 4, 16] {
+        let len = mb << 20;
+        let bufs: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let mut b = vec![0u8; len];
+                rng.fill_bytes(&mut b);
+                b
+            })
+            .collect();
+        let refs: Vec<&[u8]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let total = (k * len) as u64;
+
+        let reps = harness::scaled(if mb >= 16 { 4 } else { 10 });
+        let r = harness::bench_bytes(
+            &format!("{mb} MiB/shard scalar"),
+            total,
+            1,
+            reps,
+            || {
+                std::hint::black_box(
+                    xor_fold(&refs, &XorBackend::NativeScalar).unwrap(),
+                );
+            },
+        );
+        harness::row(&r);
+        let r = harness::bench_bytes(
+            &format!("{mb} MiB/shard wide(u64)"),
+            total,
+            1,
+            reps,
+            || {
+                std::hint::black_box(
+                    xor_fold(&refs, &XorBackend::NativeWide).unwrap(),
+                );
+            },
+        );
+        harness::row(&r);
+        if let Some(engine) = &kernel {
+            let be = XorBackend::Kernel(engine.clone());
+            let r = harness::bench_bytes(
+                &format!("{mb} MiB/shard pallas-pjrt"),
+                total,
+                1,
+                reps.min(4),
+                || {
+                    std::hint::black_box(xor_fold(&refs, &be).unwrap());
+                },
+            );
+            harness::row(&r);
+        }
+    }
+
+    harness::section("E10b: kernel TPU model (DESIGN.md §Hardware-Adaptation)");
+    if let Some(engine) = &kernel {
+        let rows = engine.manifest().constant("xor_shards").unwrap();
+        let chunk = engine.manifest().constant("xor_chunk").unwrap();
+        let block_n = engine.manifest().constant("xor_block_n").unwrap();
+        let vmem_in = rows * block_n * 4;
+        let vmem_out = block_n * 4;
+        println!("grid step: ({rows} x {block_n}) i32 block");
+        println!("VMEM per step: {} B in + {} B out (budget 16 MiB)", vmem_in, vmem_out);
+        println!("lanes per call: {rows} x {chunk} = {} i32", rows * chunk);
+        println!(
+            "arithmetic intensity: {} XOR ops / {} B moved = {:.3} op/B\n\
+             -> memory-bound; roofline = HBM bandwidth; the (8,128)-aligned\n\
+             512-lane block streams full vector registers per cycle.",
+            (rows - 1) * block_n,
+            (rows + 1) * block_n * 4,
+            ((rows - 1) * block_n) as f64 / (((rows + 1) * block_n * 4) as f64)
+        );
+        println!(
+            "\nnote: pallas interpret=True wallclock above is a CPU-numpy\n\
+             emulation figure (expected orders slower); the production L3\n\
+             path uses the native wide fold, the kernel is the TPU artifact."
+        );
+    }
+}

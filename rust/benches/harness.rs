@@ -1,0 +1,131 @@
+//! Shared mini-bench harness (criterion replacement): warmup + timed
+//! repetitions, mean/p50/p95, paper-style table printing.
+//!
+//! Included by each bench target via `#[path = "harness.rs"] mod harness;`.
+
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+use veloc::util::stats::Samples;
+
+pub struct BenchResult {
+    pub label: String,
+    pub samples: Samples,
+    pub bytes_per_iter: u64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples.mean()
+    }
+
+    pub fn throughput_gbps(&self) -> f64 {
+        if self.bytes_per_iter == 0 {
+            return 0.0;
+        }
+        self.bytes_per_iter as f64 / self.mean() / 1e9
+    }
+}
+
+/// Time `iters` runs of `f` after `warmup` runs.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push_duration(t0.elapsed());
+    }
+    BenchResult {
+        label: label.to_string(),
+        samples,
+        bytes_per_iter: 0,
+    }
+}
+
+pub fn bench_bytes<F: FnMut()>(
+    label: &str,
+    bytes: u64,
+    warmup: usize,
+    iters: usize,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(label, warmup, iters, f);
+    r.bytes_per_iter = bytes;
+    r
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+/// Print a header for a bench section.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print one table row: label, mean, p95, optional throughput.
+pub fn row(r: &BenchResult) {
+    if r.bytes_per_iter > 0 {
+        println!(
+            "{:<34} {:>12} {:>12} {:>10.2} GB/s",
+            r.label,
+            fmt_secs(r.mean()),
+            fmt_secs(r.samples.p95()),
+            r.throughput_gbps()
+        );
+    } else {
+        println!(
+            "{:<34} {:>12} {:>12}",
+            r.label,
+            fmt_secs(r.mean()),
+            fmt_secs(r.samples.p95())
+        );
+    }
+}
+
+pub fn table_header() {
+    println!(
+        "{:<34} {:>12} {:>12} {:>15}",
+        "case", "mean", "p95", "throughput"
+    );
+}
+
+/// Quick-mode guard: `VELOC_BENCH_QUICK=1` shrinks iteration counts so
+/// `cargo bench` finishes fast in CI.
+pub fn quick() -> bool {
+    std::env::var("VELOC_BENCH_QUICK").map_or(false, |v| v == "1")
+}
+
+pub fn scaled(n: usize) -> usize {
+    if quick() {
+        (n / 4).max(1)
+    } else {
+        n
+    }
+}
+
+/// Best-effort total time limiter for sweep loops.
+pub struct Budget {
+    deadline: Instant,
+}
+
+impl Budget {
+    pub fn new(d: Duration) -> Self {
+        Budget {
+            deadline: Instant::now() + d,
+        }
+    }
+
+    pub fn ok(&self) -> bool {
+        Instant::now() < self.deadline
+    }
+}

@@ -1,0 +1,127 @@
+//! E8 / F1 — pipeline modularity: per-module cost breakdown, dispatch
+//! overhead of the engine itself, and the cost of enabling the custom
+//! modules (compression, checksum) the paper lists as pipeline extensions.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::pipeline::{CkptContext, CkptStatus};
+use veloc::util::bytes::Checkpoint;
+use veloc::util::rng::Rng;
+use veloc::util::stats::Samples;
+
+fn ctx(bytes: usize, version: u64, rng: &mut Rng) -> CkptContext {
+    let mut data = vec![0u8; bytes];
+    rng.fill_bytes(&mut data);
+    let mut c = Checkpoint::new("e8", 0, version);
+    c.push_region(0, data);
+    CkptContext::new("e8", 0, 0, version, c)
+}
+
+fn main() {
+    let bytes = 1 << 20;
+    let mut rng = Rng::new(4);
+
+    // --- per-module breakdown (sync, driven module by module) ----------
+    let mut cfg = VelocConfig::default().with_nodes(4, 1);
+    cfg.stack.erasure_group = 4;
+    cfg.stack.with_compression = true;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let engine = rt.engine(0);
+
+    harness::section("E8a: per-module cost (1 MiB checkpoint, sync drive)");
+    println!("{:<12} {:>6} {:>12} {:>12}", "module", "prio", "mean", "p95");
+    let reps = harness::scaled(20);
+    let mut version = 0;
+    // Warm the group: erasure needs all members' local copies; drive the
+    // other ranks' local modules directly.
+    for m in engine.modules() {
+        let mut s = Samples::new();
+        for _ in 0..reps {
+            version += 1;
+            // Provide group members' local copies so erasure can run.
+            for peer in 1..4 {
+                let mut pc = ctx(bytes, version, &mut rng);
+                pc.rank = peer;
+                pc.node = peer;
+                rt.engine(peer)
+                    .module_named("local")
+                    .unwrap()
+                    .process(&mut pc)
+                    .unwrap();
+            }
+            let mut c = ctx(bytes, version, &mut rng);
+            // Prior stages must have run for later stages to make sense.
+            for prior in engine.modules() {
+                if prior.priority() >= m.priority() {
+                    break;
+                }
+                prior.process(&mut c).unwrap();
+            }
+            let (_, d) = veloc::util::stats::time_it(|| {
+                m.process(&mut c).unwrap();
+            });
+            s.push_duration(d);
+        }
+        println!(
+            "{:<12} {:>6} {:>12} {:>12}",
+            m.name(),
+            m.priority(),
+            harness::fmt_secs(s.mean()),
+            harness::fmt_secs(s.p95())
+        );
+    }
+
+    // --- engine dispatch overhead ---------------------------------------
+    harness::section("E8b: engine dispatch overhead (empty-ish command)");
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    cfg.stack.with_transfer = false;
+    cfg.stack.with_partner = false;
+    cfg.stack.with_checksum = false;
+    let rt2 = VelocRuntime::new(cfg).unwrap();
+    let client = rt2.client(0);
+    client.mem_protect(0, vec![0u8; 64]);
+    let r = harness::bench("local-only checkpoint", 10, harness::scaled(300), || {
+        version += 1;
+        client.checkpoint("tiny", version).unwrap();
+        let st = client.checkpoint_wait("tiny", version).unwrap();
+        assert!(matches!(st, CkptStatus::Done(_)));
+    });
+    harness::table_header();
+    harness::row(&r);
+
+    // --- toggling custom modules -----------------------------------------
+    harness::section("E8c: end-to-end cost with custom modules toggled");
+    println!("{:<30} {:>12}", "stack", "mean/ckpt");
+    for (label, compression, checksum) in [
+        ("base (no checksum/compress)", false, false),
+        ("+ checksum", false, true),
+        ("+ compression", true, false),
+        ("+ both", true, true),
+    ] {
+        let mut cfg = VelocConfig::default().with_nodes(4, 1);
+        cfg.stack.erasure_group = 0;
+        cfg.stack.with_compression = compression;
+        cfg.stack.with_checksum = checksum;
+        let rt3 = VelocRuntime::new(cfg).unwrap();
+        let client = rt3.client(0);
+        // Compressible payload so the compression stage has real work.
+        client.mem_protect(0, vec![7u8; bytes]);
+        let mut v = 0u64;
+        let mut s = Samples::new();
+        for _ in 0..harness::scaled(30) {
+            v += 1;
+            let (_, d) = veloc::util::stats::time_it(|| {
+                client.checkpoint("t", v).unwrap();
+                client.checkpoint_wait("t", v).unwrap();
+            });
+            s.push_duration(d);
+        }
+        let rt3: Arc<VelocRuntime> = rt3;
+        rt3.drain();
+        println!("{:<30} {:>12}", label, harness::fmt_secs(s.mean()));
+    }
+}

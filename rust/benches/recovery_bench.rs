@@ -1,0 +1,134 @@
+//! E3 + E9 — multi-level recovery: survival under escalating failure
+//! severities, recovery-level distribution under the default severity mix,
+//! and restart latency per level.
+//!
+//! Shape to reproduce: every single-group-loss failure recovers; most
+//! recoveries come from the cheap levels (the multi-level premise); and
+//! restart latency is ordered local < partner < erasure < PFS.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Instant;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::cluster::{FailureInjector, FailureScope};
+use veloc::pipeline::level_name;
+use veloc::util::rng::Rng;
+use veloc::util::stats::Samples;
+
+fn runtime() -> Arc<VelocRuntime> {
+    let mut cfg = VelocConfig::default().with_nodes(8, 1);
+    cfg.stack.erasure_group = 4;
+    VelocRuntime::new(cfg).unwrap()
+}
+
+fn checkpoint_world(rt: &Arc<VelocRuntime>, v: u64, bytes: usize) {
+    let world = rt.topology().world_size();
+    let hs: Vec<_> = (0..world)
+        .map(|rank| {
+            let rt = Arc::clone(rt);
+            std::thread::spawn(move || {
+                let client = rt.client(rank);
+                client.mem_protect(0, vec![(rank as u8).wrapping_add(v as u8); bytes]);
+                client.checkpoint("e3", v).unwrap();
+                client.checkpoint_wait("e3", v).unwrap();
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    rt.drain();
+}
+
+fn main() {
+    let bytes = 64 << 10;
+    let trials = harness::scaled(60);
+
+    harness::section("E3: recovery under the default severity mix");
+    let rt = runtime();
+    let topo = rt.topology();
+    let inj = FailureInjector::new(topo, 100.0);
+    let mut rng = Rng::new(99);
+    let mut level_hist = [0usize; 6];
+    let mut failed = 0usize;
+    let mut latency: Vec<Samples> = (0..6).map(|_| Samples::new()).collect();
+    let mut version = 0u64;
+    for _ in 0..trials {
+        version += 1;
+        checkpoint_world(&rt, version, bytes);
+        // One failure event per trial, drawn from the paper-family mix.
+        let scope = {
+            let evs = inj.schedule(&mut rng, 1e9);
+            evs.into_iter().next().unwrap().scope
+        };
+        rt.inject_failure(&scope);
+        rt.revive_all();
+        for rank in inj.affected_ranks(&scope) {
+            let client = rt.client(rank);
+            client.mem_protect(0, Vec::new());
+            let t0 = Instant::now();
+            match client.restart("e3").unwrap() {
+                Some(info) => {
+                    level_hist[info.level as usize] += 1;
+                    latency[info.level as usize].push_duration(t0.elapsed());
+                }
+                None => failed += 1,
+            }
+        }
+    }
+    println!(
+        "{:>10} {:>8} {:>14}",
+        "level", "count", "restart mean"
+    );
+    for l in 1..6 {
+        if level_hist[l] > 0 {
+            println!(
+                "{:>10} {:>8} {:>14}",
+                level_name(l as u8),
+                level_hist[l],
+                harness::fmt_secs(latency[l].mean())
+            );
+        }
+    }
+    println!("unrecovered rank-restores: {failed}");
+    let total: usize = level_hist.iter().sum();
+    println!(
+        "recovered {}/{} affected ranks ({:.1}%)",
+        total,
+        total + failed,
+        100.0 * total as f64 / (total + failed).max(1) as f64
+    );
+
+    harness::section("E9: restart latency per level (forced)");
+    println!("{:>10} {:>14} {:>14}", "level", "mean", "p95");
+    let cases: Vec<(&str, FailureScope)> = vec![
+        ("local", FailureScope::Rank(0)),
+        ("partner", FailureScope::Node(0)),
+        ("erasure", FailureScope::MultiNode(vec![0, 1])),
+        ("pfs", FailureScope::System),
+    ];
+    for (label, scope) in cases {
+        let rt = runtime();
+        let mut s = Samples::new();
+        let reps = harness::scaled(8);
+        for v in 1..=reps as u64 {
+            checkpoint_world(&rt, v, bytes);
+            rt.inject_failure(&scope);
+            rt.revive_all();
+            let client = rt.client(0);
+            client.mem_protect(0, Vec::new());
+            let t0 = Instant::now();
+            let info = client.restart("e3").unwrap().expect("must recover");
+            s.push_duration(t0.elapsed());
+            assert_eq!(level_name(info.level), label, "wrong level served");
+        }
+        println!(
+            "{:>10} {:>14} {:>14}",
+            label,
+            harness::fmt_secs(s.mean()),
+            harness::fmt_secs(s.p95())
+        );
+    }
+}

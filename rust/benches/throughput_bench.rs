@@ -1,0 +1,97 @@
+//! E1 — aggregate local (L1) checkpoint throughput vs rank count, plus the
+//! Summit-scale extrapolation of the paper's §4 headline (224 TB/s).
+//!
+//! Shape to reproduce: L1 scales linearly with ranks (dedicated DRAM
+//! staging), while direct-PFS throughput saturates at the shared aggregate
+//! bandwidth — the gap that motivates multi-level checkpointing.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::pipeline::CkptStatus;
+use veloc::storage::contention::fair_share_secs;
+use std::time::Duration;
+
+fn world_checkpoint(rt: &Arc<VelocRuntime>, version: u64, bytes: usize) -> f64 {
+    let world = rt.topology().world_size();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let rt = Arc::clone(rt);
+            std::thread::spawn(move || {
+                let client = rt.client(rank);
+                client.mem_protect(0, vec![rank as u8; bytes]);
+                let t0 = std::time::Instant::now();
+                client.checkpoint("e1", version).unwrap();
+                let blocking = t0.elapsed().as_secs_f64();
+                let st = client.checkpoint_wait("e1", version).unwrap();
+                assert!(matches!(st, CkptStatus::Done(_)));
+                blocking
+            })
+        })
+        .collect();
+    let mut max_block = 0.0f64;
+    for h in handles {
+        max_block = max_block.max(h.join().unwrap());
+    }
+    rt.drain();
+    max_block
+}
+
+fn main() {
+    let mb = 4usize;
+    let bytes = mb << 20;
+
+    harness::section("E1a: live runtime — blocking L1 capture vs ranks");
+    println!(
+        "{:>6} {:>14} {:>20}",
+        "ranks", "max block", "aggregate (wall)"
+    );
+    for (nodes, rpn) in [(2usize, 1usize), (4, 1), (4, 2), (8, 2)] {
+        let mut cfg = VelocConfig::default().with_nodes(nodes, rpn);
+        cfg.stack.erasure_group = 0; // isolate L1+partner+flush
+        cfg.fabric.dram_capacity = (bytes as u64) * 8;
+        let rt = VelocRuntime::new(cfg).unwrap();
+        let world = nodes * rpn;
+        // warmup + 3 measured collective checkpoints
+        world_checkpoint(&rt, 1, bytes);
+        let mut blocks = veloc::util::stats::Samples::new();
+        for v in 2..5u64 {
+            blocks.push(world_checkpoint(&rt, v, bytes));
+        }
+        let agg_gbps = (world * bytes) as f64 / blocks.mean() / 1e9;
+        println!(
+            "{:>6} {:>11.2} ms {:>17.2} GB/s",
+            world,
+            blocks.mean() * 1e3,
+            agg_gbps
+        );
+    }
+
+    harness::section("E1b: model — L1 (linear) vs direct PFS (saturating)");
+    println!(
+        "{:>8} {:>16} {:>16} {:>8}",
+        "ranks", "L1 aggregate", "PFS aggregate", "ratio"
+    );
+    let dram_bw = 10.0e9; // presets::dram per-rank
+    let pfs_bw = 5.0e9; // FabricConfig::default aggregate
+    for ranks in [8usize, 64, 512, 4096, 27648] {
+        let l1 = ranks as f64 * dram_bw;
+        let pfs_t = fair_share_secs(bytes as u64, pfs_bw, ranks, Duration::from_millis(2));
+        let pfs = ranks as f64 * bytes as f64 / (pfs_t * ranks as f64).max(1e-12);
+        println!(
+            "{:>8} {:>13.1} TB/s {:>13.4} TB/s {:>7.0}x",
+            ranks,
+            l1 / 1e12,
+            pfs / 1e12,
+            l1 / pfs
+        );
+    }
+    println!(
+        "\nSummit headline: 27648 ranks x ~8-10 GB/s DRAM staging\n\
+         => 221-276 TB/s aggregate blocking L1 — the paper's 224 TB/s\n\
+         sits inside this band; PFS saturates at its aggregate bandwidth\n\
+         regardless of rank count (motivating multi-level checkpointing)."
+    );
+}

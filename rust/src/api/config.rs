@@ -1,0 +1,182 @@
+//! Runtime configuration, loadable from JSON (`veloc --config file.json`).
+
+use crate::modules::{StackConfig, TierPolicy};
+use crate::pipeline::EngineMode;
+use crate::scheduler::SchedulerPolicy;
+use crate::storage::{FabricConfig, TimeMode};
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Full runtime configuration.
+#[derive(Clone)]
+pub struct VelocConfig {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    pub engine_mode: EngineMode,
+    pub scheduler: SchedulerPolicy,
+    /// Run the interference calibration micro-benchmark at start-up.
+    pub calibrate_interference: bool,
+    /// Execute erasure/checksum through the Pallas kernels via PJRT.
+    pub use_kernels: bool,
+    pub backend_threads: usize,
+    pub wait_timeout: Duration,
+    pub stack: StackConfig,
+    pub fabric: FabricConfig,
+    /// Override for the artifacts directory.
+    pub artifacts: Option<PathBuf>,
+}
+
+impl Default for VelocConfig {
+    fn default() -> Self {
+        let fabric = FabricConfig::default();
+        VelocConfig {
+            nodes: fabric.nodes,
+            ranks_per_node: 2,
+            engine_mode: EngineMode::Async,
+            scheduler: SchedulerPolicy::LowPriority,
+            calibrate_interference: false,
+            use_kernels: false,
+            backend_threads: 4,
+            wait_timeout: Duration::from_secs(60),
+            stack: StackConfig::default(),
+            fabric,
+            artifacts: None,
+        }
+    }
+}
+
+impl VelocConfig {
+    pub fn artifacts_dir(&self) -> PathBuf {
+        self.artifacts
+            .clone()
+            .unwrap_or_else(crate::runtime::default_artifacts_dir)
+    }
+
+    /// Keep `fabric.nodes` consistent with `nodes`.
+    pub fn with_nodes(mut self, nodes: usize, ranks_per_node: usize) -> Self {
+        self.nodes = nodes;
+        self.ranks_per_node = ranks_per_node;
+        self.fabric.nodes = nodes;
+        self
+    }
+
+    /// Parse from a JSON document (missing keys keep defaults).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = VelocConfig::default();
+        cfg.nodes = j.usize_or("nodes", cfg.nodes);
+        cfg.ranks_per_node = j.usize_or("ranks_per_node", cfg.ranks_per_node);
+        cfg.fabric.nodes = cfg.nodes;
+        cfg.engine_mode = match j.str_or("engine_mode", "async") {
+            "sync" => EngineMode::Sync,
+            "async" => EngineMode::Async,
+            other => bail!("engine_mode must be sync|async, got {other}"),
+        };
+        cfg.scheduler = match j.str_or("scheduler", "low-priority") {
+            "greedy" => SchedulerPolicy::Greedy,
+            "low-priority" => SchedulerPolicy::LowPriority,
+            "predictive" => SchedulerPolicy::Predictive,
+            other => bail!("unknown scheduler policy {other}"),
+        };
+        cfg.use_kernels = j.bool_or("use_kernels", cfg.use_kernels);
+        cfg.calibrate_interference =
+            j.bool_or("calibrate_interference", cfg.calibrate_interference);
+        cfg.backend_threads = j.usize_or("backend_threads", cfg.backend_threads);
+        if let Some(t) = j.get("wait_timeout_secs").and_then(Json::as_f64) {
+            cfg.wait_timeout = Duration::from_secs_f64(t);
+        }
+        if let Some(s) = j.get("stack") {
+            cfg.stack.tier_policy = match s.str_or("tier_policy", "fastest") {
+                "fastest" => TierPolicy::FastestFirst,
+                "concurrency-aware" => TierPolicy::ConcurrencyAware,
+                other => bail!("unknown tier_policy {other}"),
+            };
+            cfg.stack.erasure_group = s.usize_or("erasure_group", cfg.stack.erasure_group);
+            cfg.stack.use_kernels = cfg.use_kernels;
+            cfg.stack.with_checksum = s.bool_or("checksum", cfg.stack.with_checksum);
+            cfg.stack.with_compression =
+                s.bool_or("compression", cfg.stack.with_compression);
+            cfg.stack.with_kv = s.bool_or("kvstore", cfg.stack.with_kv);
+            cfg.stack.with_partner = s.bool_or("partner", cfg.stack.with_partner);
+            cfg.stack.with_transfer = s.bool_or("transfer", cfg.stack.with_transfer);
+            cfg.stack.keep_versions = s.usize_or("keep_versions", cfg.stack.keep_versions);
+        } else {
+            cfg.stack.use_kernels = cfg.use_kernels;
+        }
+        if let Some(f) = j.get("fabric") {
+            cfg.fabric.dram_capacity =
+                f.usize_or("dram_capacity", cfg.fabric.dram_capacity as usize) as u64;
+            cfg.fabric.with_nvme = f.bool_or("nvme", cfg.fabric.with_nvme);
+            cfg.fabric.with_ssd = f.bool_or("ssd", cfg.fabric.with_ssd);
+            cfg.fabric.with_kv = f.bool_or("kv", cfg.fabric.with_kv);
+            cfg.fabric.with_burst_buffer =
+                f.bool_or("burst_buffer", cfg.fabric.with_burst_buffer);
+            cfg.fabric.pfs_bw = f.f64_or("pfs_bw", cfg.fabric.pfs_bw);
+            if let Some(scale) = f.get("emulate_scale").and_then(Json::as_f64) {
+                cfg.fabric.time_mode = TimeMode::Emulate { scale };
+            }
+        }
+        // KV module needs the KV tier.
+        if cfg.stack.with_kv {
+            cfg.fabric.with_kv = true;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&crate::util::json::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_consistent() {
+        let c = VelocConfig::default();
+        assert_eq!(c.nodes, c.fabric.nodes);
+        assert_eq!(c.engine_mode, EngineMode::Async);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{
+                "nodes": 8, "ranks_per_node": 4,
+                "engine_mode": "sync",
+                "scheduler": "predictive",
+                "stack": {"tier_policy": "concurrency-aware", "erasure_group": 8,
+                          "compression": true, "kvstore": true},
+                "fabric": {"pfs_bw": 1e9}
+            }"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert_eq!(c.nodes, 8);
+        assert_eq!(c.fabric.nodes, 8);
+        assert_eq!(c.engine_mode, EngineMode::Sync);
+        assert_eq!(c.scheduler, SchedulerPolicy::Predictive);
+        assert_eq!(c.stack.tier_policy, TierPolicy::ConcurrencyAware);
+        assert_eq!(c.stack.erasure_group, 8);
+        assert!(c.stack.with_compression);
+        assert!(c.fabric.with_kv, "kv module implies kv tier");
+        assert_eq!(c.fabric.pfs_bw, 1e9);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let j = Json::parse(r#"{"engine_mode": "turbo"}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"scheduler": "wat"}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn with_nodes_updates_fabric() {
+        let c = VelocConfig::default().with_nodes(16, 1);
+        assert_eq!(c.fabric.nodes, 16);
+        assert_eq!(c.ranks_per_node, 1);
+    }
+}

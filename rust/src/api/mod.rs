@@ -1,0 +1,374 @@
+//! Public VeloC API — the "simple API at user level" of the abstract.
+//!
+//! Applications (or the workload harnesses in [`crate::app`]) interact
+//! with two types:
+//!
+//! - [`VelocRuntime`] — one per simulated cluster: owns storage fabric,
+//!   topology, the active backend pool, the PJRT engine, the version
+//!   registry and one pipeline [`Engine`] per rank.
+//! - [`VelocClient`] — one per rank: `mem_protect` critical memory
+//!   regions, then `checkpoint` / `checkpoint_wait` / `restart`.
+//!
+//! ```no_run
+//! use veloc::api::{VelocConfig, VelocRuntime};
+//! let rt = VelocRuntime::new(VelocConfig::default()).unwrap();
+//! let client = rt.client(0);
+//! let region = client.mem_protect(0, vec![0u8; 1 << 20]);
+//! client.checkpoint("app", 1).unwrap();
+//! client.checkpoint_wait("app", 1).unwrap();
+//! ```
+
+pub mod config;
+
+pub use config::VelocConfig;
+
+use crate::cluster::{KillSwitch, Topology};
+use crate::metrics::Metrics;
+use crate::modules::{build_stack, ChecksumBackend, Env, VersionRegistry};
+use crate::pipeline::{CkptContext, CkptStatus, Engine};
+use crate::recovery::{Recovery, Restored};
+use crate::runtime::PjrtEngine;
+use crate::scheduler::{
+    build_gate, InterferenceModel, SchedulerPolicy, UtilizationMonitor,
+    UtilizationPredictor,
+};
+use crate::storage::StorageFabric;
+use crate::util::bytes::Checkpoint;
+use crate::util::pool::{Priority, ThreadPool};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Handle to a protected memory region: the application mutates the
+/// contents through the lock; `checkpoint()` snapshots it atomically.
+pub type RegionHandle = Arc<Mutex<Vec<u8>>>;
+
+/// Cluster-wide runtime.
+pub struct VelocRuntime {
+    config: VelocConfig,
+    topology: Topology,
+    env: Arc<Env>,
+    engines: Vec<Arc<Engine>>,
+    backend: Arc<ThreadPool>,
+    recovery: Recovery,
+    kill: KillSwitch,
+    monitor: Arc<UtilizationMonitor>,
+    metrics: Arc<Metrics>,
+}
+
+impl VelocRuntime {
+    pub fn new(config: VelocConfig) -> Result<Arc<Self>> {
+        let topology = Topology::new(config.nodes, config.ranks_per_node);
+        let fabric = Arc::new(StorageFabric::build(&config.fabric)?);
+        let registry = VersionRegistry::new();
+        let pjrt = if config.use_kernels || config.scheduler == SchedulerPolicy::Predictive {
+            match PjrtEngine::load(&config.artifacts_dir()) {
+                Ok(e) => Some(e),
+                Err(e) => {
+                    if config.use_kernels {
+                        return Err(anyhow!("kernels requested but artifacts unavailable: {e}"));
+                    }
+                    None
+                }
+            }
+        } else {
+            None
+        };
+
+        let monitor = UtilizationMonitor::new(32);
+        let interference = if config.calibrate_interference {
+            InterferenceModel::calibrate()
+        } else {
+            InterferenceModel::assumed()
+        };
+        let predictor = pjrt
+            .as_ref()
+            .and_then(|e| UtilizationPredictor::from_engine(Arc::clone(e)).ok())
+            .map(Arc::new);
+        let gate = build_gate(
+            config.scheduler,
+            &interference,
+            predictor,
+            Arc::clone(&monitor),
+            config.fabric.pfs_bw,
+        );
+
+        let env = Arc::new(Env {
+            topology,
+            fabric,
+            pjrt: pjrt.clone(),
+            registry,
+            scheduler_gate: Some(gate),
+        });
+
+        // Mitigated policies run the active backend at low OS priority
+        // (nice 19), the paper's time-slicing strategy; greedy keeps the
+        // default priority (the interference baseline).
+        let backend_nice = match config.scheduler {
+            SchedulerPolicy::Greedy => 0,
+            _ => 19,
+        };
+        let backend = Arc::new(ThreadPool::with_nice(
+            config.backend_threads,
+            backend_nice,
+        ));
+        let backend_priority = match config.scheduler {
+            SchedulerPolicy::Greedy => Priority::Normal,
+            _ => Priority::Background,
+        };
+        let mut engines = Vec::with_capacity(topology.world_size());
+        for _rank in 0..topology.world_size() {
+            let stack = build_stack(&env, &config.stack)?;
+            let engine = Engine::new(stack, config.engine_mode, Some(Arc::clone(&backend)))?
+                .with_background_priority(backend_priority);
+            engines.push(Arc::new(engine));
+        }
+        let checksum = match (&pjrt, config.use_kernels) {
+            (Some(e), true) => ChecksumBackend::Kernel(Arc::clone(e)),
+            _ => ChecksumBackend::Crc32,
+        };
+        let recovery = Recovery::new(Arc::clone(&env), checksum);
+        Ok(Arc::new(VelocRuntime {
+            kill: KillSwitch::new(topology.world_size()),
+            config,
+            topology,
+            env,
+            engines,
+            backend,
+            recovery,
+            monitor,
+            metrics: Metrics::new(),
+        }))
+    }
+
+    pub fn config(&self) -> &VelocConfig {
+        &self.config
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    pub fn env(&self) -> &Arc<Env> {
+        &self.env
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    pub fn monitor(&self) -> &Arc<UtilizationMonitor> {
+        &self.monitor
+    }
+
+    pub fn backend(&self) -> &Arc<ThreadPool> {
+        &self.backend
+    }
+
+    pub fn recovery(&self) -> &Recovery {
+        &self.recovery
+    }
+
+    pub fn engine(&self, rank: usize) -> &Arc<Engine> {
+        &self.engines[rank]
+    }
+
+    pub fn engines(&self) -> &[Arc<Engine>] {
+        &self.engines
+    }
+
+    pub fn kill_switch(&self) -> &KillSwitch {
+        &self.kill
+    }
+
+    /// Per-rank client handle.
+    pub fn client(self: &Arc<Self>, rank: usize) -> VelocClient {
+        assert!(rank < self.topology.world_size());
+        VelocClient {
+            runtime: Arc::clone(self),
+            rank,
+            node: self.topology.node_of(rank),
+            regions: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Inject a failure: kill the affected ranks and wipe the storage of
+    /// the affected failure domains.
+    pub fn inject_failure(&self, scope: &crate::cluster::FailureScope) {
+        let inj = crate::cluster::FailureInjector::new(self.topology, 1.0);
+        for r in inj.affected_ranks(scope) {
+            self.kill.kill(r);
+        }
+        for n in inj.affected_nodes(scope) {
+            self.env.fabric.fail_node(n);
+        }
+        if matches!(scope, crate::cluster::FailureScope::System) {
+            self.env.fabric.fail_system();
+        }
+        self.metrics.incr("failures.injected", 1);
+    }
+
+    /// Revive killed ranks (model of the job scheduler respawning them).
+    pub fn revive_all(&self) {
+        for r in 0..self.topology.world_size() {
+            self.kill.revive(r);
+        }
+    }
+
+    /// Wait until the active backend drained all queued pipeline tails.
+    pub fn drain(&self) {
+        self.backend.wait_idle();
+    }
+
+    /// Cold restart: reload the persisted lineage of `name` from the PFS
+    /// into the (empty) in-process registry, so `restart()` can find the
+    /// PFS copies a previous process wrote. Returns false if no lineage
+    /// object exists. Requires a persistent PFS backing (`fabric.pfs_dir`)
+    /// to be meaningful across processes.
+    pub fn reload_lineage(&self, name: &str) -> Result<bool> {
+        let Some((data, _)) = self
+            .env
+            .fabric
+            .pfs()
+            .get(&format!("lineage.{name}.json"))
+        else {
+            return Ok(false);
+        };
+        let j = crate::util::json::Json::parse(std::str::from_utf8(&data)?)
+            .map_err(|e| anyhow!("lineage.{name}.json: {e}"))?;
+        self.env.registry.load_json(&j)?;
+        Ok(true)
+    }
+}
+
+/// Per-rank client: the paper's user-facing API.
+pub struct VelocClient {
+    runtime: Arc<VelocRuntime>,
+    rank: usize,
+    node: usize,
+    regions: Mutex<BTreeMap<u32, RegionHandle>>,
+}
+
+impl VelocClient {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Declare a critical memory region (paper §2: fine-grained
+    /// declarations separate from the checkpoint request). Returns the
+    /// handle through which the application mutates the region.
+    pub fn mem_protect(&self, id: u32, initial: Vec<u8>) -> RegionHandle {
+        let handle: RegionHandle = Arc::new(Mutex::new(initial));
+        self.regions
+            .lock()
+            .unwrap()
+            .insert(id, Arc::clone(&handle));
+        handle
+    }
+
+    /// Forget a region.
+    pub fn mem_unprotect(&self, id: u32) {
+        self.regions.lock().unwrap().remove(&id);
+    }
+
+    pub fn protected_bytes(&self) -> u64 {
+        self.regions
+            .lock()
+            .unwrap()
+            .values()
+            .map(|r| r.lock().unwrap().len() as u64)
+            .sum()
+    }
+
+    /// Take a checkpoint of all protected regions. Returns once the
+    /// blocking prefix completed (async mode) or the whole pipeline ran
+    /// (sync mode). The (name, version) pair must be collectively unique.
+    pub fn checkpoint(&self, name: &str, version: u64) -> Result<()> {
+        if self.runtime.kill.is_killed(self.rank) {
+            return Err(anyhow!("rank {} is failed", self.rank));
+        }
+        let t0 = Instant::now();
+        let mut ckpt = Checkpoint::new(name, self.rank, version);
+        {
+            let regions = self.regions.lock().unwrap();
+            for (&id, handle) in regions.iter() {
+                ckpt.push_region(id, handle.lock().unwrap().clone());
+            }
+        }
+        let bytes = ckpt.payload_bytes();
+        let ctx = CkptContext::new(name, self.rank, self.node, version, ckpt);
+        self.runtime.engine(self.rank).submit(ctx)?;
+        let m = &self.runtime.metrics;
+        m.incr("ckpt.requests", 1);
+        m.incr("ckpt.bytes", bytes);
+        m.observe_duration("ckpt.blocking", t0.elapsed());
+        Ok(())
+    }
+
+    /// Wait for an earlier checkpoint to settle across all levels.
+    pub fn checkpoint_wait(&self, name: &str, version: u64) -> Result<CkptStatus> {
+        self.runtime.engine(self.rank).wait(
+            self.rank,
+            name,
+            version,
+            self.runtime.config.wait_timeout,
+        )
+    }
+
+    /// Restore the freshest recoverable version and load region contents
+    /// back into the protected handles. Returns what was restored.
+    pub fn restart(&self, name: &str) -> Result<Option<RestartInfo>> {
+        let restored = self.runtime.recovery.restore_latest(
+            self.runtime.engine(self.rank),
+            name,
+            self.rank,
+        )?;
+        self.apply(restored)
+    }
+
+    /// Restore a specific version.
+    pub fn restart_version(&self, name: &str, version: u64) -> Result<Option<RestartInfo>> {
+        let restored = self.runtime.recovery.restore_version(
+            self.runtime.engine(self.rank),
+            name,
+            self.rank,
+            version,
+        )?;
+        self.apply(restored)
+    }
+
+    fn apply(&self, restored: Option<Restored>) -> Result<Option<RestartInfo>> {
+        let Some(r) = restored else {
+            return Ok(None);
+        };
+        let regions = self.regions.lock().unwrap();
+        for region in &r.ckpt.regions {
+            if let Some(handle) = regions.get(&region.id) {
+                *handle.lock().unwrap() = region.data.clone();
+            }
+        }
+        self.runtime.metrics.incr("restart.success", 1);
+        self.runtime
+            .metrics
+            .incr(&format!("restart.level{}", r.level), 1);
+        Ok(Some(RestartInfo {
+            version: r.version,
+            level: r.level,
+            iteration: r.ckpt.meta.iteration,
+        }))
+    }
+
+    /// Report application utilization (feeds the predictive scheduler).
+    pub fn report_utilization(&self, util: f32) {
+        self.runtime.monitor.record(util);
+    }
+}
+
+/// Outcome of a successful restart.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RestartInfo {
+    pub version: u64,
+    pub level: u8,
+    pub iteration: u64,
+}

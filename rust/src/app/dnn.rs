@@ -1,0 +1,212 @@
+//! DNN training workload — the *productive checkpointing* scenario of
+//! paper §3 (DeepFreeze [3] / DeepClone [5] / the model-discovery
+//! workflows of [7]).
+//!
+//! The model is the AOT-compiled application MLP (L2 `dnn_train_step`
+//! through PJRT); its parameter tensors are VeloC critical memory regions.
+//! Checkpointing supports two modes:
+//!
+//! - `Monolithic` — all tensors snapshotted in one region set at the
+//!   checkpoint call (the classic blocking approach).
+//! - `FineGrained` — DeepFreeze's idea adapted: each layer's tensors are
+//!   captured as their own region immediately after the optimizer updates
+//!   them, overlapping capture of layer `i` with the (PJRT) update of the
+//!   rest of the step; the checkpoint call then only assembles
+//!   already-captured regions.
+
+use crate::api::{RegionHandle, VelocClient};
+use crate::runtime::{PjrtEngine, Tensor};
+use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Synthetic classification task: inputs drawn from class-dependent
+/// Gaussian clusters (so the model can actually learn and the loss curve
+/// in EXPERIMENTS.md means something).
+pub struct SyntheticData {
+    rng: Rng,
+    dim: usize,
+    classes: usize,
+    /// class centroids
+    centroids: Vec<Vec<f32>>,
+}
+
+impl SyntheticData {
+    pub fn new(dim: usize, classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let centroids = (0..classes)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32 * 2.0).collect())
+            .collect();
+        SyntheticData {
+            rng,
+            dim,
+            classes,
+            centroids,
+        }
+    }
+
+    /// Draw a batch: (x flat [b*dim], labels [b]).
+    pub fn batch(&mut self, b: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(b * self.dim);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            let c = self.rng.range_usize(0, self.classes);
+            y.push(c as i32);
+            for d in 0..self.dim {
+                x.push(self.centroids[c][d] + self.rng.normal() as f32);
+            }
+        }
+        (x, y)
+    }
+}
+
+/// Checkpoint capture strategy (E7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaptureMode {
+    Monolithic,
+    FineGrained,
+}
+
+pub struct DnnTrainer {
+    engine: Arc<PjrtEngine>,
+    client_name: String,
+    /// Current parameters (6 tensors: w1,b1,w2,b2,w3,b3).
+    params: Vec<Tensor>,
+    /// One protected region per parameter tensor.
+    regions: Vec<RegionHandle>,
+    pub step: u64,
+    batch: usize,
+    dim: usize,
+    lr: f32,
+    mode: CaptureMode,
+    data: SyntheticData,
+}
+
+impl DnnTrainer {
+    pub fn new(
+        client: &VelocClient,
+        engine: Arc<PjrtEngine>,
+        name: &str,
+        lr: f32,
+        mode: CaptureMode,
+        seed: u64,
+    ) -> Result<Self> {
+        let man = engine.manifest();
+        let batch = man.constant("dnn_batch")?;
+        let dim = man.constant("dnn_in")?;
+        let classes = man.constant("dnn_classes")?;
+        let params: Vec<Tensor> = man
+            .load_params("dnn_init")?
+            .iter()
+            .map(Tensor::from)
+            .collect();
+        // Region 0 holds (step u64); regions 1..=6 hold the tensors.
+        let mut regions = vec![client.mem_protect(0, vec![0u8; 8])];
+        for (i, p) in params.iter().enumerate() {
+            let bytes = f32s_to_bytes(p.as_f32()?);
+            regions.push(client.mem_protect(1 + i as u32, bytes));
+        }
+        Ok(DnnTrainer {
+            engine,
+            client_name: name.to_string(),
+            params,
+            regions,
+            step: 0,
+            batch,
+            dim,
+            lr,
+            mode,
+            data: SyntheticData::new(dim, classes, seed),
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape().iter().product::<usize>())
+            .sum()
+    }
+
+    /// One SGD step through PJRT; returns the loss. In `FineGrained` mode
+    /// the updated tensors are copied into their protected regions as they
+    /// come back (per-layer capture, overlap-style); in `Monolithic` mode
+    /// regions are only refreshed by an explicit [`Self::capture`].
+    pub fn train_step(&mut self) -> Result<f32> {
+        let (x, y) = self.data.batch(self.batch);
+        let mut args = self.params.clone();
+        args.push(Tensor::f32(&[self.batch, self.dim], x));
+        args.push(Tensor::i32(&[self.batch], y));
+        args.push(Tensor::scalar_f32(self.lr));
+        let out = self.engine.run("dnn_train_step", &args)?;
+        let loss = out[6].as_f32()?[0];
+        for (i, t) in out.into_iter().take(6).enumerate() {
+            if self.mode == CaptureMode::FineGrained {
+                // capture layer i immediately (cheap memcpy into region)
+                *self.regions[1 + i].lock().unwrap() =
+                    f32s_to_bytes(t.as_f32()?);
+            }
+            self.params[i] = t;
+        }
+        self.step += 1;
+        *self.regions[0].lock().unwrap() = self.step.to_le_bytes().to_vec();
+        Ok(loss)
+    }
+
+    /// Snapshot all tensors into their regions (Monolithic path; no-op
+    /// cost in FineGrained because regions are already fresh).
+    pub fn capture(&self) -> Result<()> {
+        if self.mode == CaptureMode::Monolithic {
+            for (i, p) in self.params.iter().enumerate() {
+                *self.regions[1 + i].lock().unwrap() = f32s_to_bytes(p.as_f32()?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Capture + VeloC checkpoint under version = step.
+    pub fn checkpoint(&self, client: &VelocClient) -> Result<u64> {
+        self.capture()?;
+        client.checkpoint(&self.client_name, self.step)?;
+        Ok(self.step)
+    }
+
+    /// Evaluate current parameters on a fresh batch: (loss, accuracy).
+    pub fn evaluate(&mut self) -> Result<(f32, f32)> {
+        let (x, y) = self.data.batch(self.batch);
+        let mut args = self.params.clone();
+        args.push(Tensor::f32(&[self.batch, self.dim], x));
+        args.push(Tensor::i32(&[self.batch], y));
+        let out = self.engine.run("dnn_loss", &args)?;
+        Ok((out[0].as_f32()?[0], out[1].as_f32()?[0]))
+    }
+
+    /// Restore params from the freshest VeloC checkpoint.
+    pub fn restart(&mut self, client: &VelocClient) -> Result<Option<u64>> {
+        let Some(info) = client.restart(&self.client_name)? else {
+            return Ok(None);
+        };
+        // Region 0: step counter.
+        {
+            let r0 = self.regions[0].lock().unwrap();
+            self.step = u64::from_le_bytes(r0[..8].try_into().unwrap());
+        }
+        let shapes: Vec<Vec<usize>> =
+            self.params.iter().map(|p| p.shape().to_vec()).collect();
+        for (i, shape) in shapes.iter().enumerate() {
+            let bytes = self.regions[1 + i].lock().unwrap().clone();
+            let data = bytes_to_f32s(&bytes)
+                .map_err(|e| anyhow!("region {}: {e}", i + 1))?;
+            if data.len() != shape.iter().product::<usize>() {
+                return Err(anyhow!(
+                    "region {} length {} does not match tensor shape {:?}",
+                    i + 1,
+                    data.len(),
+                    shape
+                ));
+            }
+            self.params[i] = Tensor::f32(shape, data);
+        }
+        Ok(Some(info.version))
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload harnesses: the applications whose state VeloC protects.
+
+pub mod bsp;
+pub mod dnn;
+pub mod iterative;
+
+pub use bsp::BspApp;
+pub use dnn::{CaptureMode, DnnTrainer, SyntheticData};
+pub use iterative::IterativeApp;

@@ -1,0 +1,331 @@
+//! In-process message passing between ranks — the MPI substitute.
+//!
+//! Each rank owns a tagged mailbox; `send` is non-blocking, `recv` blocks
+//! with a timeout (so a failed partner surfaces as `Timeout` instead of a
+//! hang, which is how the resilience modules detect a dead peer mid-
+//! protocol). Collectives (barrier, gather, bcast, allreduce) are built on
+//! the point-to-point layer exactly like a textbook MPI implementation.
+
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A tagged message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Message {
+    pub from: usize,
+    pub tag: u32,
+    pub data: Vec<u8>,
+}
+
+struct Mailbox {
+    queue: Mutex<VecDeque<Message>>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    count: usize,
+    generation: u64,
+}
+
+struct WorldInner {
+    mailboxes: Vec<Mailbox>,
+    barrier: Mutex<BarrierState>,
+    barrier_cv: Condvar,
+}
+
+/// Shared communicator for `n` ranks.
+#[derive(Clone)]
+pub struct CommWorld {
+    inner: Arc<WorldInner>,
+}
+
+impl CommWorld {
+    pub fn new(world_size: usize) -> Self {
+        let mailboxes = (0..world_size)
+            .map(|_| Mailbox {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+            })
+            .collect();
+        CommWorld {
+            inner: Arc::new(WorldInner {
+                mailboxes,
+                barrier: Mutex::new(BarrierState {
+                    count: 0,
+                    generation: 0,
+                }),
+                barrier_cv: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.inner.mailboxes.len()
+    }
+
+    /// Per-rank endpoint handle.
+    pub fn endpoint(&self, rank: usize) -> Endpoint {
+        assert!(rank < self.world_size());
+        Endpoint {
+            world: self.clone(),
+            rank,
+        }
+    }
+}
+
+/// A rank's view of the communicator.
+#[derive(Clone)]
+pub struct Endpoint {
+    world: CommWorld,
+    rank: usize,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.world.world_size()
+    }
+
+    /// Non-blocking send.
+    pub fn send(&self, to: usize, tag: u32, data: Vec<u8>) {
+        let mb = &self.world.inner.mailboxes[to];
+        mb.queue.lock().unwrap().push_back(Message {
+            from: self.rank,
+            tag,
+            data,
+        });
+        mb.cv.notify_all();
+    }
+
+    /// Blocking receive of the first message matching `tag` (and `from`, if
+    /// given), leaving non-matching messages queued.
+    pub fn recv(
+        &self,
+        from: Option<usize>,
+        tag: u32,
+        timeout: Duration,
+    ) -> Result<Message> {
+        let mb = &self.world.inner.mailboxes[self.rank];
+        let deadline = Instant::now() + timeout;
+        let mut q = mb.queue.lock().unwrap();
+        loop {
+            if let Some(pos) = q
+                .iter()
+                .position(|m| m.tag == tag && from.map_or(true, |f| m.from == f))
+            {
+                return Ok(q.remove(pos).unwrap());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "recv timeout: rank {} waiting for tag {tag} from {:?}",
+                    self.rank,
+                    from
+                );
+            }
+            let (guard, _t) = mb.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Generation-counted reusable barrier over all ranks.
+    pub fn barrier(&self, timeout: Duration) -> Result<()> {
+        let inner = &self.world.inner;
+        let mut st = inner.barrier.lock().unwrap();
+        let gen = st.generation;
+        st.count += 1;
+        if st.count == self.world.world_size() {
+            st.count = 0;
+            st.generation += 1;
+            inner.barrier_cv.notify_all();
+            return Ok(());
+        }
+        let deadline = Instant::now() + timeout;
+        while st.generation == gen {
+            let now = Instant::now();
+            if now >= deadline {
+                // Withdraw our contribution so a later retry is consistent.
+                st.count = st.count.saturating_sub(1);
+                bail!("barrier timeout at rank {}", self.rank);
+            }
+            let (guard, _t) = inner
+                .barrier_cv
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+        Ok(())
+    }
+
+    /// Gather byte payloads at `root`; returns `Some(vec_by_rank)` at root.
+    pub fn gather(
+        &self,
+        root: usize,
+        tag: u32,
+        data: Vec<u8>,
+        timeout: Duration,
+    ) -> Result<Option<Vec<Vec<u8>>>> {
+        if self.rank == root {
+            let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.world_size()];
+            out[root] = data;
+            for _ in 0..self.world_size() - 1 {
+                let m = self.recv(None, tag, timeout)?;
+                out[m.from] = m.data;
+            }
+            Ok(Some(out))
+        } else {
+            self.send(root, tag, data);
+            Ok(None)
+        }
+    }
+
+    /// Broadcast from `root` to everyone; returns the payload.
+    pub fn bcast(
+        &self,
+        root: usize,
+        tag: u32,
+        data: Option<Vec<u8>>,
+        timeout: Duration,
+    ) -> Result<Vec<u8>> {
+        if self.rank == root {
+            let data = data.expect("root must supply bcast payload");
+            for r in 0..self.world_size() {
+                if r != root {
+                    self.send(r, tag, data.clone());
+                }
+            }
+            Ok(data)
+        } else {
+            Ok(self.recv(Some(root), tag, timeout)?.data)
+        }
+    }
+
+    /// All-reduce a u64 with `op` (via gather at rank 0 + bcast).
+    pub fn allreduce_u64(
+        &self,
+        tag: u32,
+        value: u64,
+        op: fn(u64, u64) -> u64,
+        timeout: Duration,
+    ) -> Result<u64> {
+        let gathered =
+            self.gather(0, tag, value.to_le_bytes().to_vec(), timeout)?;
+        let reduced = if let Some(all) = gathered {
+            let mut acc: Option<u64> = None;
+            for bytes in all {
+                let v = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+                acc = Some(match acc {
+                    None => v,
+                    Some(a) => op(a, v),
+                });
+            }
+            Some(acc.unwrap().to_le_bytes().to_vec())
+        } else {
+            None
+        };
+        let out = self.bcast(0, tag.wrapping_add(1), reduced, timeout)?;
+        Ok(u64::from_le_bytes(out[..8].try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    const T: Duration = Duration::from_secs(5);
+
+    #[test]
+    fn send_recv_tag_matching() {
+        let world = CommWorld::new(2);
+        let a = world.endpoint(0);
+        let b = world.endpoint(1);
+        a.send(1, 7, vec![1]);
+        a.send(1, 9, vec![2]);
+        // Receive tag 9 first even though tag 7 arrived earlier.
+        assert_eq!(b.recv(None, 9, T).unwrap().data, vec![2]);
+        assert_eq!(b.recv(Some(0), 7, T).unwrap().data, vec![1]);
+    }
+
+    #[test]
+    fn recv_timeout_errors() {
+        let world = CommWorld::new(1);
+        let e = world.endpoint(0);
+        let err = e.recv(None, 1, Duration::from_millis(20));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        let world = CommWorld::new(4);
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let ep = world.endpoint(r);
+                thread::spawn(move || {
+                    for _ in 0..10 {
+                        ep.barrier(T).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn barrier_times_out_when_rank_missing() {
+        let world = CommWorld::new(2);
+        let e = world.endpoint(0);
+        assert!(e.barrier(Duration::from_millis(30)).is_err());
+    }
+
+    #[test]
+    fn gather_and_bcast() {
+        let world = CommWorld::new(3);
+        let handles: Vec<_> = (0..3)
+            .map(|r| {
+                let ep = world.endpoint(r);
+                thread::spawn(move || {
+                    let g = ep.gather(0, 5, vec![r as u8], T).unwrap();
+                    if r == 0 {
+                        assert_eq!(
+                            g.unwrap(),
+                            vec![vec![0u8], vec![1u8], vec![2u8]]
+                        );
+                    }
+                    let payload = if r == 0 { Some(vec![42u8]) } else { None };
+                    let b = ep.bcast(0, 6, payload, T).unwrap();
+                    assert_eq!(b, vec![42u8]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn allreduce_max() {
+        let world = CommWorld::new(4);
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let ep = world.endpoint(r);
+                thread::spawn(move || {
+                    let m = ep
+                        .allreduce_u64(11, (r * 10) as u64, u64::max, T)
+                        .unwrap();
+                    assert_eq!(m, 30);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

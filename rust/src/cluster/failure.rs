@@ -1,0 +1,275 @@
+//! Failure injection: Poisson failure process with severity levels.
+//!
+//! Multi-level checkpointing exists because failures are *not* uniform:
+//! most take out a single process or node (survivable from node-local or
+//! partner copies), few take out several nodes (erasure rebuild), and only
+//! rare catastrophes need the PFS copy. The default severity mix follows
+//! the failure studies the VeloC/SCR line of work cites (~80/10/7/3).
+
+use crate::cluster::topology::Topology;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// What a failure takes out.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FailureScope {
+    /// One process dies; node-local storage of its node survives.
+    Rank(usize),
+    /// A whole node (all its ranks + node-local tiers).
+    Node(usize),
+    /// Several nodes at once (e.g. a rack / PDU event).
+    MultiNode(Vec<usize>),
+    /// Full-system outage; only persistent storage survives.
+    System,
+}
+
+impl FailureScope {
+    /// Minimum resilience level able to recover this failure:
+    /// 1 = local, 2 = partner, 3 = erasure, 4 = PFS. (A node failure is
+    /// recoverable from a partner on another node; a multi-node event may
+    /// take a partner pair together, needing erasure or PFS.)
+    pub fn min_level(&self) -> u8 {
+        match self {
+            FailureScope::Rank(_) => 1,
+            FailureScope::Node(_) => 2,
+            FailureScope::MultiNode(_) => 3,
+            FailureScope::System => 4,
+        }
+    }
+}
+
+/// One scheduled failure at virtual time `at` seconds.
+#[derive(Clone, Debug)]
+pub struct FailureEvent {
+    pub at: f64,
+    pub scope: FailureScope,
+}
+
+/// Severity mix (probabilities sum to 1).
+#[derive(Clone, Copy, Debug)]
+pub struct SeverityMix {
+    pub rank: f64,
+    pub node: f64,
+    pub multi_node: f64,
+    pub system: f64,
+}
+
+impl Default for SeverityMix {
+    fn default() -> Self {
+        SeverityMix {
+            rank: 0.80,
+            node: 0.10,
+            multi_node: 0.07,
+            system: 0.03,
+        }
+    }
+}
+
+/// Poisson failure process over a topology.
+#[derive(Clone, Debug)]
+pub struct FailureInjector {
+    pub topology: Topology,
+    /// System-wide mean time between failures, seconds.
+    pub mtbf: f64,
+    pub mix: SeverityMix,
+}
+
+impl FailureInjector {
+    pub fn new(topology: Topology, mtbf: f64) -> Self {
+        FailureInjector {
+            topology,
+            mtbf,
+            mix: SeverityMix::default(),
+        }
+    }
+
+    pub fn with_mix(mut self, mix: SeverityMix) -> Self {
+        self.mix = mix;
+        self
+    }
+
+    fn sample_scope(&self, rng: &mut Rng) -> FailureScope {
+        let x = rng.f64();
+        let m = &self.mix;
+        if x < m.rank {
+            FailureScope::Rank(rng.range_usize(0, self.topology.world_size()))
+        } else if x < m.rank + m.node {
+            FailureScope::Node(rng.range_usize(0, self.topology.nodes))
+        } else if x < m.rank + m.node + m.multi_node {
+            // A node and its ring-neighbour: exactly the pattern that kills
+            // a partner pair and forces erasure/PFS recovery.
+            let n = rng.range_usize(0, self.topology.nodes);
+            let m2 = (n + 1) % self.topology.nodes;
+            if m2 == n {
+                FailureScope::Node(n)
+            } else {
+                FailureScope::MultiNode(vec![n, m2])
+            }
+        } else {
+            FailureScope::System
+        }
+    }
+
+    /// Draw the failure schedule for `horizon` seconds of execution.
+    pub fn schedule(&self, rng: &mut Rng, horizon: f64) -> Vec<FailureEvent> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / self.mtbf);
+            if t >= horizon {
+                break;
+            }
+            out.push(FailureEvent {
+                at: t,
+                scope: self.sample_scope(rng),
+            });
+        }
+        out
+    }
+
+    /// Ranks killed by a scope.
+    pub fn affected_ranks(&self, scope: &FailureScope) -> Vec<usize> {
+        match scope {
+            FailureScope::Rank(r) => vec![*r],
+            FailureScope::Node(n) => self.topology.ranks_of_node(*n).collect(),
+            FailureScope::MultiNode(ns) => ns
+                .iter()
+                .flat_map(|&n| self.topology.ranks_of_node(n))
+                .collect(),
+            FailureScope::System => (0..self.topology.world_size()).collect(),
+        }
+    }
+
+    /// Nodes whose local storage is wiped by a scope.
+    pub fn affected_nodes(&self, scope: &FailureScope) -> Vec<usize> {
+        match scope {
+            // A rank crash does NOT wipe node storage — that is exactly why
+            // level-1 (node-local) recovery works for it.
+            FailureScope::Rank(_) => vec![],
+            FailureScope::Node(n) => vec![*n],
+            FailureScope::MultiNode(ns) => ns.clone(),
+            FailureScope::System => (0..self.topology.nodes).collect(),
+        }
+    }
+}
+
+/// Per-rank kill switches checked by running rank loops.
+#[derive(Clone)]
+pub struct KillSwitch {
+    flags: Arc<Vec<AtomicBool>>,
+}
+
+impl KillSwitch {
+    pub fn new(world_size: usize) -> Self {
+        KillSwitch {
+            flags: Arc::new((0..world_size).map(|_| AtomicBool::new(false)).collect()),
+        }
+    }
+
+    pub fn kill(&self, rank: usize) {
+        self.flags[rank].store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_killed(&self, rank: usize) -> bool {
+        self.flags[rank].load(Ordering::SeqCst)
+    }
+
+    pub fn revive(&self, rank: usize) {
+        self.flags[rank].store(false, Ordering::SeqCst);
+    }
+
+    pub fn any_killed(&self) -> bool {
+        self.flags.iter().any(|f| f.load(Ordering::SeqCst))
+    }
+
+    pub fn killed_ranks(&self) -> Vec<usize> {
+        self.flags
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.load(Ordering::SeqCst))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inj() -> FailureInjector {
+        FailureInjector::new(Topology::new(8, 2), 100.0)
+    }
+
+    #[test]
+    fn schedule_rate_matches_mtbf() {
+        let mut rng = Rng::new(1);
+        let events = inj().schedule(&mut rng, 100_000.0);
+        // Expect ~1000 events at MTBF 100s over 100k s.
+        assert!(
+            (events.len() as f64 - 1000.0).abs() < 150.0,
+            "{} events",
+            events.len()
+        );
+        assert!(events.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn severity_mix_roughly_respected() {
+        let mut rng = Rng::new(2);
+        let events = inj().schedule(&mut rng, 1_000_000.0);
+        let total = events.len() as f64;
+        let ranks = events
+            .iter()
+            .filter(|e| matches!(e.scope, FailureScope::Rank(_)))
+            .count() as f64;
+        assert!((ranks / total - 0.80).abs() < 0.05, "{}", ranks / total);
+    }
+
+    #[test]
+    fn min_levels_ordered_by_severity() {
+        assert_eq!(FailureScope::Rank(0).min_level(), 1);
+        assert_eq!(FailureScope::Node(0).min_level(), 2);
+        assert_eq!(FailureScope::MultiNode(vec![0, 1]).min_level(), 3);
+        assert_eq!(FailureScope::System.min_level(), 4);
+    }
+
+    #[test]
+    fn affected_sets() {
+        let i = inj();
+        assert_eq!(i.affected_ranks(&FailureScope::Node(1)), vec![2, 3]);
+        assert!(i.affected_nodes(&FailureScope::Rank(5)).is_empty());
+        assert_eq!(
+            i.affected_nodes(&FailureScope::MultiNode(vec![0, 1])),
+            vec![0, 1]
+        );
+        assert_eq!(i.affected_ranks(&FailureScope::System).len(), 16);
+    }
+
+    #[test]
+    fn kill_switch_lifecycle() {
+        let ks = KillSwitch::new(4);
+        assert!(!ks.any_killed());
+        ks.kill(2);
+        assert!(ks.is_killed(2));
+        assert_eq!(ks.killed_ranks(), vec![2]);
+        ks.revive(2);
+        assert!(!ks.any_killed());
+    }
+
+    #[test]
+    fn multinode_kills_partner_pair() {
+        // Adjacent nodes are exactly partner pairs under the ring mapping;
+        // verify the generated multi-node scope has that shape.
+        let i = inj();
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            if let FailureScope::MultiNode(ns) = i.sample_scope(&mut rng) {
+                assert_eq!(ns.len(), 2);
+                assert_eq!(ns[1], (ns[0] + 1) % i.topology.nodes);
+                return;
+            }
+        }
+        panic!("no multi-node event sampled");
+    }
+}

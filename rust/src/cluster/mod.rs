@@ -1,0 +1,9 @@
+//! Simulated multi-node cluster: topology, rank communication, failures.
+
+pub mod comm;
+pub mod failure;
+pub mod topology;
+
+pub use comm::{CommWorld, Endpoint, Message};
+pub use failure::{FailureEvent, FailureInjector, FailureScope, KillSwitch, SeverityMix};
+pub use topology::Topology;

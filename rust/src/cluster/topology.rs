@@ -1,0 +1,147 @@
+//! Cluster topology: rank <-> node mapping, partner selection, erasure
+//! groups.
+//!
+//! Replaces the MPI process grid of the original system (DESIGN.md
+//! substitution table): ranks are in-process workers, but partner/group
+//! construction follows the same rules multi-level checkpointing libraries
+//! (SCR, VeloC) use — partners and erasure-group members must live in
+//! *different failure domains* (nodes) or the redundancy is worthless.
+
+/// Static description of the simulated cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, ranks_per_node: usize) -> Self {
+        assert!(nodes > 0 && ranks_per_node > 0);
+        Topology {
+            nodes,
+            ranks_per_node,
+        }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    /// Node hosting a rank (block distribution, like `mpirun --map-by node`
+    /// with consecutive slots).
+    pub fn node_of(&self, rank: usize) -> usize {
+        assert!(rank < self.world_size());
+        rank / self.ranks_per_node
+    }
+
+    pub fn ranks_of_node(&self, node: usize) -> std::ops::Range<usize> {
+        assert!(node < self.nodes);
+        node * self.ranks_per_node..(node + 1) * self.ranks_per_node
+    }
+
+    /// Partner for replication: same slot on the next node (ring over
+    /// nodes), guaranteeing a distinct failure domain whenever nodes > 1.
+    pub fn partner_of(&self, rank: usize) -> usize {
+        let node = self.node_of(rank);
+        let slot = rank % self.ranks_per_node;
+        let pnode = (node + 1) % self.nodes;
+        pnode * self.ranks_per_node + slot
+    }
+
+    /// Inverse of [`partner_of`]: whose partner am I?
+    pub fn partner_source(&self, rank: usize) -> usize {
+        let node = self.node_of(rank);
+        let slot = rank % self.ranks_per_node;
+        let pnode = (node + self.nodes - 1) % self.nodes;
+        pnode * self.ranks_per_node + slot
+    }
+
+    /// Erasure group of `rank` for group size `g`: members are node-strided
+    /// (same slot, nodes i, i+s, i+2s, ...), so one node failure costs at
+    /// most one member per group — the single-erasure XOR code can always
+    /// rebuild. Requires `nodes % g == 0`.
+    pub fn erasure_group(&self, rank: usize, g: usize) -> Vec<usize> {
+        assert!(g >= 2, "erasure group needs >= 2 members");
+        assert!(
+            self.nodes % g == 0,
+            "nodes ({}) must be a multiple of group size ({g})",
+            self.nodes
+        );
+        let slot = rank % self.ranks_per_node;
+        let node = self.node_of(rank);
+        let span = self.nodes / g; // node stride between members
+        let base = node % span;
+        (0..g)
+            .map(|j| (base + j * span) * self.ranks_per_node + slot)
+            .collect()
+    }
+
+    /// Index of `rank` within its erasure group.
+    pub fn erasure_index(&self, rank: usize, g: usize) -> usize {
+        self.erasure_group(rank, g)
+            .iter()
+            .position(|&r| r == rank)
+            .expect("rank must be in its own group")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_mapping_block() {
+        let t = Topology::new(4, 2);
+        assert_eq!(t.world_size(), 8);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(1), 0);
+        assert_eq!(t.node_of(2), 1);
+        assert_eq!(t.ranks_of_node(1), 2..4);
+    }
+
+    #[test]
+    fn partner_is_on_different_node() {
+        let t = Topology::new(4, 2);
+        for r in 0..t.world_size() {
+            let p = t.partner_of(r);
+            assert_ne!(t.node_of(r), t.node_of(p), "rank {r}");
+            assert_eq!(t.partner_source(p), r);
+        }
+    }
+
+    #[test]
+    fn partner_ring_wraps() {
+        let t = Topology::new(3, 1);
+        assert_eq!(t.partner_of(2), 0);
+        assert_eq!(t.partner_source(0), 2);
+    }
+
+    #[test]
+    fn erasure_groups_node_disjoint() {
+        let t = Topology::new(8, 2);
+        for r in 0..t.world_size() {
+            let grp = t.erasure_group(r, 4);
+            assert_eq!(grp.len(), 4);
+            assert!(grp.contains(&r));
+            let nodes: std::collections::BTreeSet<_> =
+                grp.iter().map(|&m| t.node_of(m)).collect();
+            assert_eq!(nodes.len(), 4, "group of {r} spans distinct nodes");
+        }
+    }
+
+    #[test]
+    fn erasure_groups_consistent_across_members() {
+        let t = Topology::new(8, 1);
+        let g0 = t.erasure_group(0, 4);
+        for &m in &g0 {
+            assert_eq!(t.erasure_group(m, 4), g0);
+        }
+        assert_eq!(t.erasure_index(g0[2], 4), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn erasure_group_requires_divisibility() {
+        Topology::new(6, 1).erasure_group(0, 4);
+    }
+}

@@ -1,0 +1,127 @@
+//! Failure-scenario dataset for the ML interval optimizer (paper ref [1]:
+//! sample representative scenarios, label each with the DES optimum, train
+//! a model to fill the gaps of the search space).
+
+use crate::cluster::failure::SeverityMix;
+use crate::interval::simulator::{optimal_interval, Scenario};
+use crate::util::rng::Rng;
+
+/// One labelled example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub scenario: Scenario,
+    pub features: [f32; 10],
+    /// DES-optimal interval, log10-scaled for regression stability.
+    pub label: f32,
+    /// Efficiency at the optimum (diagnostics).
+    pub best_eff: f64,
+}
+
+/// Label transform: intervals span decades, regress on log10.
+pub fn label_of(interval: f64) -> f32 {
+    (interval.max(1.0)).log10() as f32
+}
+
+pub fn interval_of(label: f32) -> f64 {
+    10f64.powf(label as f64)
+}
+
+/// Draw a random but realistic scenario.
+pub fn random_scenario(rng: &mut Rng) -> Scenario {
+    let mtbf = 10f64.powf(rng.range_f64(2.3, 4.3)); // 200 s .. 20k s
+    let l1_cost = 10f64.powf(rng.range_f64(-0.5, 1.5)); // 0.3 .. 30 s
+    let rank_p = rng.range_f64(0.6, 0.9);
+    let node_p = rng.range_f64(0.05, 0.2);
+    let multi_p = rng.range_f64(0.02, 0.1);
+    let sys_p = (1.0 - rank_p - node_p - multi_p).max(0.01);
+    let norm = rank_p + node_p + multi_p + sys_p;
+    Scenario {
+        mtbf,
+        l1_cost,
+        l23_lag: l1_cost * rng.range_f64(1.0, 4.0),
+        l4_lag: l1_cost * rng.range_f64(5.0, 40.0),
+        restart_fast: l1_cost * rng.range_f64(1.0, 5.0),
+        restart_pfs: l1_cost * rng.range_f64(10.0, 50.0),
+        work: mtbf * rng.range_f64(10.0, 30.0),
+        mix: SeverityMix {
+            rank: rank_p / norm,
+            node: node_p / norm,
+            multi_node: multi_p / norm,
+            system: sys_p / norm,
+        },
+    }
+}
+
+/// Generate a labelled dataset. `grid`/`trials` control DES label quality.
+pub fn generate(n: usize, grid: usize, trials: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut srng = rng.fork(i as u64);
+            let scenario = random_scenario(&mut srng);
+            let (w, e) = optimal_interval(&scenario, grid, trials, seed ^ (i as u64) << 1);
+            Example {
+                features: scenario.features(),
+                scenario,
+                label: label_of(w),
+                best_eff: e,
+            }
+        })
+        .collect()
+}
+
+/// Split into (train, test).
+pub fn split(data: Vec<Example>, test_fraction: f64) -> (Vec<Example>, Vec<Example>) {
+    let n_test = ((data.len() as f64) * test_fraction).round() as usize;
+    let n_train = data.len() - n_test;
+    let mut it = data.into_iter();
+    let train: Vec<Example> = it.by_ref().take(n_train).collect();
+    let test: Vec<Example> = it.collect();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_roundtrip() {
+        for w in [1.0, 10.0, 123.0, 5000.0] {
+            assert!((interval_of(label_of(w)) - w).abs() / w < 1e-4);
+        }
+    }
+
+    #[test]
+    fn scenarios_realistic() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let s = random_scenario(&mut rng);
+            assert!(s.mtbf >= 100.0);
+            assert!(s.l1_cost > 0.0);
+            assert!(s.l4_lag > s.l23_lag);
+            assert!(s.restart_pfs > s.restart_fast);
+            let total = s.mix.rank + s.mix.node + s.mix.multi_node + s.mix.system;
+            assert!((total - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_labelled() {
+        let a = generate(3, 6, 2, 11);
+        let b = generate(3, 6, 2, 11);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert!(x.best_eff > 0.0);
+            assert!(x.label > 0.0); // intervals > 1 s
+        }
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = generate(10, 4, 1, 5);
+        let (tr, te) = split(d, 0.3);
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+    }
+}

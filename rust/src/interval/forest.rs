@@ -1,0 +1,217 @@
+//! Random-forest regression baseline (pure Rust) — the comparator the
+//! paper's ref [1] reports the neural network *outperforming* (E6).
+//!
+//! Standard CART regression trees: bootstrap sampling per tree, random
+//! feature subset per split, variance-reduction splitting, mean-leaf
+//! prediction, ensemble averaging.
+
+use crate::util::rng::Rng;
+
+const F: usize = 10; // feature dimensionality (matches Scenario::features)
+
+enum Node {
+    Leaf(f32),
+    Split {
+        feat: usize,
+        thresh: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+impl Node {
+    fn predict(&self, x: &[f32; F]) -> f32 {
+        match self {
+            Node::Leaf(v) => *v,
+            Node::Split {
+                feat,
+                thresh,
+                left,
+                right,
+            } => {
+                if x[*feat] <= *thresh {
+                    left.predict(x)
+                } else {
+                    right.predict(x)
+                }
+            }
+        }
+    }
+
+    fn depth(&self) -> usize {
+        match self {
+            Node::Leaf(_) => 1,
+            Node::Split { left, right, .. } => 1 + left.depth().max(right.depth()),
+        }
+    }
+}
+
+fn mean(ys: &[f32], idx: &[usize]) -> f32 {
+    idx.iter().map(|&i| ys[i]).sum::<f32>() / idx.len().max(1) as f32
+}
+
+fn sse(ys: &[f32], idx: &[usize]) -> f32 {
+    let m = mean(ys, idx);
+    idx.iter().map(|&i| (ys[i] - m) * (ys[i] - m)).sum()
+}
+
+fn build(
+    xs: &[[f32; F]],
+    ys: &[f32],
+    idx: &mut Vec<usize>,
+    depth: usize,
+    max_depth: usize,
+    min_leaf: usize,
+    rng: &mut Rng,
+) -> Node {
+    if depth >= max_depth || idx.len() < 2 * min_leaf || sse(ys, idx) < 1e-8 {
+        return Node::Leaf(mean(ys, idx));
+    }
+    // Random sqrt-subset of features.
+    let mut feats: Vec<usize> = (0..F).collect();
+    rng.shuffle(&mut feats);
+    let n_try = (F as f64).sqrt().ceil() as usize;
+    let mut best: Option<(f32, usize, f32)> = None; // (score, feat, thresh)
+    let parent = sse(ys, idx);
+    for &f in feats.iter().take(n_try) {
+        // Candidate thresholds: a handful of random sample values.
+        for _ in 0..8 {
+            let pivot = xs[idx[rng.range_usize(0, idx.len())]][f];
+            let (mut li, mut ri): (Vec<usize>, Vec<usize>) = (vec![], vec![]);
+            for &i in idx.iter() {
+                if xs[i][f] <= pivot {
+                    li.push(i)
+                } else {
+                    ri.push(i)
+                }
+            }
+            if li.len() < min_leaf || ri.len() < min_leaf {
+                continue;
+            }
+            let score = sse(ys, &li) + sse(ys, &ri);
+            if score < parent && best.map_or(true, |(b, _, _)| score < b) {
+                best = Some((score, f, pivot));
+            }
+        }
+    }
+    let Some((_, feat, thresh)) = best else {
+        return Node::Leaf(mean(ys, idx));
+    };
+    let (mut li, mut ri): (Vec<usize>, Vec<usize>) = (vec![], vec![]);
+    for &i in idx.iter() {
+        if xs[i][feat] <= thresh {
+            li.push(i)
+        } else {
+            ri.push(i)
+        }
+    }
+    Node::Split {
+        feat,
+        thresh,
+        left: Box::new(build(xs, ys, &mut li, depth + 1, max_depth, min_leaf, rng)),
+        right: Box::new(build(xs, ys, &mut ri, depth + 1, max_depth, min_leaf, rng)),
+    }
+}
+
+/// The forest.
+pub struct RandomForest {
+    trees: Vec<Node>,
+}
+
+impl RandomForest {
+    /// Fit on features/labels.
+    pub fn fit(
+        xs: &[[f32; F]],
+        ys: &[f32],
+        n_trees: usize,
+        max_depth: usize,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let mut rng = Rng::new(seed);
+        let trees = (0..n_trees)
+            .map(|t| {
+                let mut trng = rng.fork(t as u64);
+                // Bootstrap sample.
+                let mut idx: Vec<usize> = (0..xs.len())
+                    .map(|_| trng.range_usize(0, xs.len()))
+                    .collect();
+                build(xs, ys, &mut idx, 0, max_depth, 2, &mut trng)
+            })
+            .collect();
+        RandomForest { trees }
+    }
+
+    pub fn predict(&self, x: &[f32; F]) -> f32 {
+        self.trees.iter().map(|t| t.predict(x)).sum::<f32>() / self.trees.len() as f32
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.trees.iter().map(|t| t.depth()).max().unwrap_or(0)
+    }
+
+    /// Mean absolute error on a labelled set.
+    pub fn mae(&self, xs: &[[f32; F]], ys: &[f32]) -> f32 {
+        xs.iter()
+            .zip(ys)
+            .map(|(x, &y)| (self.predict(x) - y).abs())
+            .sum::<f32>()
+            / xs.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// y = 2*x0 + x3, noise-free.
+    fn toy(n: usize, seed: u64) -> (Vec<[f32; F]>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let mut x = [0f32; F];
+            for v in x.iter_mut() {
+                *v = rng.f32();
+            }
+            xs.push(x);
+            ys.push(2.0 * x[0] + x[3]);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn learns_toy_function() {
+        let (xs, ys) = toy(400, 1);
+        let rf = RandomForest::fit(&xs, &ys, 30, 8, 2);
+        let (xt, yt) = toy(100, 3);
+        let mae = rf.mae(&xt, &yt);
+        // Baseline: predicting the mean gives MAE ~0.45.
+        assert!(mae < 0.25, "mae {mae}");
+    }
+
+    #[test]
+    fn beats_constant_predictor() {
+        let (xs, ys) = toy(300, 5);
+        let rf = RandomForest::fit(&xs, &ys, 20, 8, 6);
+        let mean_y = ys.iter().sum::<f32>() / ys.len() as f32;
+        let mae_const = ys.iter().map(|y| (y - mean_y).abs()).sum::<f32>() / ys.len() as f32;
+        assert!(rf.mae(&xs, &ys) < mae_const * 0.6);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (xs, ys) = toy(200, 7);
+        let rf = RandomForest::fit(&xs, &ys, 5, 3, 9);
+        assert!(rf.max_depth() <= 4); // root at depth 1 + 3 splits
+    }
+
+    #[test]
+    fn deterministic() {
+        let (xs, ys) = toy(100, 11);
+        let a = RandomForest::fit(&xs, &ys, 5, 5, 13).predict(&xs[0]);
+        let b = RandomForest::fit(&xs, &ys, 5, 5, 13).predict(&xs[0]);
+        assert_eq!(a, b);
+    }
+}

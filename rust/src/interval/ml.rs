@@ -1,0 +1,104 @@
+//! Neural-network interval optimizer (paper ref [1]): the AOT-compiled
+//! interval MLP is *trained at runtime from Rust* on the DES-labelled
+//! scenario dataset, entirely through PJRT — Python never runs.
+
+use crate::interval::dataset::{interval_of, Example};
+use crate::runtime::{PjrtEngine, Tensor};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct NnOptimizer {
+    engine: Arc<PjrtEngine>,
+    params: Vec<Tensor>, // w1,b1,w2,b2,w3,b3
+    batch: usize,
+    features: usize,
+}
+
+impl NnOptimizer {
+    /// Fresh optimizer from the exported initial weights.
+    pub fn new(engine: Arc<PjrtEngine>) -> Result<Self> {
+        let man = engine.manifest();
+        let params = man
+            .load_params("interval_init")?
+            .iter()
+            .map(Tensor::from)
+            .collect();
+        let batch = man.constant("interval_batch")?;
+        let features = man.constant("interval_features")?;
+        Ok(NnOptimizer {
+            engine,
+            params,
+            batch,
+            features,
+        })
+    }
+
+    /// SGD on (features -> log10 interval). Returns per-epoch mean loss.
+    pub fn fit(&mut self, data: &[Example], epochs: usize, lr: f32, seed: u64) -> Result<Vec<f32>> {
+        assert!(!data.is_empty());
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        let mut history = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut losses = Vec::new();
+            for chunk in order.chunks(self.batch) {
+                // Pad the mini-batch to the compiled batch size by
+                // repeating examples (gradient weighting shift is tiny and
+                // vanishes with shuffling).
+                let mut x = Vec::with_capacity(self.batch * self.features);
+                let mut y = Vec::with_capacity(self.batch);
+                for i in 0..self.batch {
+                    let ex = &data[chunk[i % chunk.len()]];
+                    x.extend_from_slice(&ex.features);
+                    y.push(ex.label);
+                }
+                let mut args = self.params.clone();
+                args.push(Tensor::f32(&[self.batch, self.features], x));
+                args.push(Tensor::f32(&[self.batch], y));
+                args.push(Tensor::scalar_f32(lr));
+                let out = self.engine.run("interval_mlp_train", &args)?;
+                losses.push(out[6].as_f32()?[0]);
+                for (i, t) in out.into_iter().take(6).enumerate() {
+                    self.params[i] = t;
+                }
+            }
+            history.push(losses.iter().sum::<f32>() / losses.len() as f32);
+        }
+        Ok(history)
+    }
+
+    /// Predict log10-interval labels for a feature batch.
+    pub fn predict_labels(&self, feats: &[[f32; 10]]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(self.batch) {
+            let mut x = Vec::with_capacity(self.batch * self.features);
+            for i in 0..self.batch {
+                x.extend_from_slice(&chunk[i.min(chunk.len() - 1)]);
+            }
+            let mut args = self.params.clone();
+            args.push(Tensor::f32(&[self.batch, self.features], x));
+            let res = self.engine.run("interval_mlp_fwd", &args)?;
+            out.extend_from_slice(&res[0].as_f32()?[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// Predict the checkpoint interval (seconds) for one scenario.
+    pub fn predict_interval(&self, features: &[f32; 10]) -> Result<f64> {
+        Ok(interval_of(self.predict_labels(&[*features])?[0]))
+    }
+
+    /// Mean absolute error in label (log10) space.
+    pub fn mae(&self, data: &[Example]) -> Result<f32> {
+        let feats: Vec<[f32; 10]> = data.iter().map(|e| e.features).collect();
+        let preds = self.predict_labels(&feats)?;
+        Ok(preds
+            .iter()
+            .zip(data)
+            .map(|(p, e)| (p - e.label).abs())
+            .sum::<f32>()
+            / data.len() as f32)
+    }
+}

@@ -1,0 +1,16 @@
+//! Checkpoint-interval optimization (paper §2, "ML-Optimized Checkpoint
+//! Intervals"): closed-form baselines, the DES ground truth, the scenario
+//! dataset, the runtime-trained NN optimizer and the random-forest
+//! comparator.
+
+pub mod dataset;
+pub mod forest;
+pub mod ml;
+pub mod simulator;
+pub mod young_daly;
+
+pub use dataset::{generate, interval_of, label_of, split, Example};
+pub use forest::RandomForest;
+pub use ml::NnOptimizer;
+pub use simulator::{mean_efficiency, optimal_interval, simulate, Scenario, SimResult};
+pub use young_daly::{daly, efficiency_first_order, young};

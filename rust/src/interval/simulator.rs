@@ -1,0 +1,266 @@
+//! Discrete-event simulator of multi-level asynchronous checkpointing.
+//!
+//! Serves three roles:
+//! 1. Ground truth for the checkpoint-interval experiments (E6): sweep
+//!    intervals, pick the efficiency-maximizing one per scenario.
+//! 2. Training-set generator for the ML optimizer (paper ref [1]:
+//!    "sampling a subset of representative failure scenarios").
+//! 3. Scale extrapolation for the E1 Summit headline: the same fair-share
+//!    bandwidth model as the live `storage` stack, at 4k+ nodes.
+//!
+//! The model: an application runs for `work` seconds of useful compute,
+//! checkpointing every `interval` seconds. A checkpoint blocks for the
+//! level-1 (local) cost, then the deeper levels complete asynchronously.
+//! Failures arrive as a Poisson process with severity levels; a failure is
+//! recoverable from level L only if a checkpoint at level >= L *finished*
+//! before the failure; rework = time since that checkpoint, plus the
+//! level's restart cost.
+
+use crate::cluster::failure::SeverityMix;
+use crate::util::rng::Rng;
+
+/// Scenario parameters (one row of the ML dataset).
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    /// System-level MTBF (s).
+    pub mtbf: f64,
+    /// Blocking (level-1 local) checkpoint cost (s).
+    pub l1_cost: f64,
+    /// Async completion lag of partner/erasure levels after L1 (s).
+    pub l23_lag: f64,
+    /// Async completion lag of the PFS flush after L1 (s).
+    pub l4_lag: f64,
+    /// Restart cost from local/partner/erasure (s).
+    pub restart_fast: f64,
+    /// Restart cost from the PFS (s).
+    pub restart_pfs: f64,
+    /// Total useful work to complete (s).
+    pub work: f64,
+    /// Failure severity mix.
+    pub mix: SeverityMix,
+}
+
+impl Scenario {
+    /// Normalized feature vector for the ML optimizer (10 features,
+    /// matching `interval_features` in the AOT manifest).
+    pub fn features(&self) -> [f32; 10] {
+        [
+            (self.mtbf / 10_000.0) as f32,
+            (self.l1_cost / 100.0) as f32,
+            (self.l23_lag / 100.0) as f32,
+            (self.l4_lag / 1000.0) as f32,
+            (self.restart_fast / 100.0) as f32,
+            (self.restart_pfs / 1000.0) as f32,
+            (self.work / 100_000.0) as f32,
+            self.mix.rank as f32,
+            self.mix.node as f32,
+            (self.mix.multi_node + self.mix.system) as f32,
+        ]
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Clone, Copy, Debug)]
+pub struct SimResult {
+    /// Wall-clock to finish all work (s).
+    pub makespan: f64,
+    /// work / makespan.
+    pub efficiency: f64,
+    pub failures: usize,
+    /// Failures that needed the PFS level.
+    pub pfs_recoveries: usize,
+}
+
+/// Simulate one run at a fixed checkpoint interval.
+pub fn simulate(s: &Scenario, interval: f64, rng: &mut Rng) -> SimResult {
+    let mut t = 0.0; // wall clock
+    let mut done = 0.0; // completed useful work
+    let mut failures = 0usize;
+    let mut pfs_recoveries = 0usize;
+
+    // Last *completed* checkpoint per level class: (work_done, wall_done)
+    let mut last_fast: Option<(f64, f64)> = None; // levels 1-3
+    let mut last_pfs: Option<(f64, f64)> = None; // level 4
+
+    let mut next_failure = t + rng.exponential(1.0 / s.mtbf);
+
+    let sample_level = |rng: &mut Rng, mix: &SeverityMix| -> u8 {
+        let x = rng.f64();
+        if x < mix.rank {
+            1
+        } else if x < mix.rank + mix.node {
+            2
+        } else if x < mix.rank + mix.node + mix.multi_node {
+            3
+        } else {
+            4
+        }
+    };
+
+    let max_steps = 2_000_000;
+    let mut steps = 0;
+    while done < s.work && steps < max_steps {
+        steps += 1;
+        // Next segment: compute until the next checkpoint or completion.
+        let seg = interval.min(s.work - done);
+        let seg_end = t + seg;
+        if next_failure <= seg_end {
+            // Failure mid-segment.
+            t = next_failure;
+            failures += 1;
+            let min_level = sample_level(rng, &s.mix);
+            // Which saved state can serve this severity? Fast levels
+            // survive severities 1-3 (partner/erasure by construction);
+            // system failures need the PFS copy.
+            let (saved, restart_cost) = if min_level <= 3 {
+                match (last_fast, last_pfs) {
+                    (Some(f), _) => (Some(f), s.restart_fast),
+                    (None, Some(p)) => (Some(p), s.restart_pfs),
+                    (None, None) => (None, s.restart_fast),
+                }
+            } else {
+                pfs_recoveries += 1;
+                (last_pfs, s.restart_pfs)
+            };
+            match saved {
+                Some((w, _)) => {
+                    done = w;
+                }
+                None => {
+                    done = 0.0;
+                }
+            }
+            t += restart_cost;
+            next_failure = t + rng.exponential(1.0 / s.mtbf);
+            continue;
+        }
+        // Segment completed.
+        t = seg_end;
+        done += seg;
+        if done >= s.work {
+            break;
+        }
+        // Take a checkpoint: block for L1, deeper levels complete later.
+        t += s.l1_cost;
+        let fast_ready = t + s.l23_lag;
+        let pfs_ready = t + s.l4_lag;
+        // A failure between now and *_ready leaves the previous copy as
+        // the newest usable one; model by committing the new checkpoint
+        // only when its completion time has passed the next failure check.
+        if next_failure > fast_ready {
+            last_fast = Some((done, fast_ready));
+        }
+        if next_failure > pfs_ready {
+            last_pfs = Some((done, pfs_ready));
+        }
+    }
+    let makespan = t.max(1e-9);
+    SimResult {
+        makespan,
+        efficiency: (s.work / makespan).min(1.0),
+        failures,
+        pfs_recoveries,
+    }
+}
+
+/// Average efficiency over `trials` random failure draws.
+pub fn mean_efficiency(s: &Scenario, interval: f64, trials: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut sum = 0.0;
+    for t in 0..trials {
+        let mut r = rng.fork(t as u64);
+        sum += simulate(s, interval, &mut r).efficiency;
+    }
+    sum / trials as f64
+}
+
+/// Sweep a log-spaced interval grid, return (best_interval, best_eff).
+pub fn optimal_interval(
+    s: &Scenario,
+    grid: usize,
+    trials: usize,
+    seed: u64,
+) -> (f64, f64) {
+    // Interval range: from ~2x the blocking cost up to MTBF.
+    let lo = (2.0 * s.l1_cost).max(1.0);
+    let hi = (s.mtbf * 2.0).max(lo * 4.0);
+    let mut best = (lo, -1.0);
+    for g in 0..grid {
+        let f = g as f64 / (grid - 1).max(1) as f64;
+        let w = lo * (hi / lo).powf(f);
+        let e = mean_efficiency(s, w, trials, seed ^ g as u64);
+        if e > best.1 {
+            best = (w, e);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interval::young_daly::young;
+
+    fn scenario() -> Scenario {
+        Scenario {
+            mtbf: 2000.0,
+            l1_cost: 5.0,
+            l23_lag: 10.0,
+            l4_lag: 60.0,
+            restart_fast: 15.0,
+            restart_pfs: 120.0,
+            work: 50_000.0,
+            mix: SeverityMix::default(),
+        }
+    }
+
+    #[test]
+    fn no_failures_efficiency_is_ckpt_overhead_only() {
+        let mut s = scenario();
+        s.mtbf = 1e12; // effectively failure-free
+        let r = simulate(&s, 100.0, &mut Rng::new(1));
+        // overhead = 5s per 100s of work
+        assert!((r.efficiency - 100.0 / 105.0).abs() < 0.01, "{}", r.efficiency);
+        assert_eq!(r.failures, 0);
+    }
+
+    #[test]
+    fn failures_cost_rework() {
+        let s = scenario();
+        let r = simulate(&s, 100.0, &mut Rng::new(2));
+        assert!(r.failures > 0);
+        assert!(r.efficiency < 0.99);
+        assert!(r.efficiency > 0.5, "{}", r.efficiency);
+        assert!(r.makespan > s.work);
+    }
+
+    #[test]
+    fn optimum_is_interior_and_near_young_scale() {
+        let s = scenario();
+        let (w, e) = optimal_interval(&s, 12, 6, 42);
+        let y = young(s.l1_cost, s.mtbf);
+        // The DES optimum should be the same order of magnitude as Young.
+        assert!(w > y / 10.0 && w < y * 10.0, "w={w} young={y}");
+        assert!(e > 0.5 && e <= 1.0);
+        // Extremes must be worse.
+        let e_tiny = mean_efficiency(&s, s.l1_cost * 2.0, 6, 42);
+        let e_huge = mean_efficiency(&s, s.mtbf * 2.0, 6, 42);
+        assert!(e >= e_tiny, "{e} vs tiny {e_tiny}");
+        assert!(e >= e_huge, "{e} vs huge {e_huge}");
+    }
+
+    #[test]
+    fn features_are_finite_and_scaled() {
+        let f = scenario().features();
+        assert!(f.iter().all(|x| x.is_finite()));
+        assert!(f.iter().all(|&x| (0.0..=100.0).contains(&x)));
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let s = scenario();
+        let a = mean_efficiency(&s, 150.0, 4, 7);
+        let b = mean_efficiency(&s, 150.0, 4, 7);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,74 @@
+//! Closed-form checkpoint interval baselines.
+//!
+//! Young's first-order formula and Daly's higher-order refinement give the
+//! optimal interval for a *single-level, fixed-cost* checkpoint system.
+//! The paper's point (§2, "ML-Optimized Checkpoint Intervals") is exactly
+//! that these break down for asynchronous multi-level systems — which the
+//! E6 experiment demonstrates against the DES ground truth.
+
+/// Young 1974: W* = sqrt(2 * C * MTBF), C = checkpoint cost (s).
+pub fn young(ckpt_cost: f64, mtbf: f64) -> f64 {
+    assert!(ckpt_cost > 0.0 && mtbf > 0.0);
+    (2.0 * ckpt_cost * mtbf).sqrt()
+}
+
+/// Daly 2006 higher-order estimate (valid for C < 2*MTBF):
+/// W* = sqrt(2*C*M) * [1 + 1/3 sqrt(C/(2M)) + C/(9*2M)] - C
+pub fn daly(ckpt_cost: f64, mtbf: f64) -> f64 {
+    assert!(ckpt_cost > 0.0 && mtbf > 0.0);
+    let c = ckpt_cost;
+    let m = mtbf;
+    if c >= 2.0 * m {
+        return m; // formula out of range; degenerate regime
+    }
+    let s = (2.0 * c * m).sqrt();
+    (s * (1.0 + (c / (2.0 * m)).sqrt() / 3.0 + c / (18.0 * m)) - c).max(c)
+}
+
+/// Expected efficiency (useful-work fraction) of periodic checkpointing at
+/// interval `w` under exponential failures — the classic first-order
+/// model used to sanity-check the DES.
+pub fn efficiency_first_order(w: f64, ckpt_cost: f64, restart_cost: f64, mtbf: f64) -> f64 {
+    // fraction of time spent on checkpoints:
+    let ckpt_overhead = ckpt_cost / (w + ckpt_cost);
+    // expected rework per failure ~ w/2 + restart
+    let failure_rate = 1.0 / mtbf;
+    let rework = failure_rate * (w / 2.0 + restart_cost);
+    ((1.0 - ckpt_overhead) * (1.0 - rework)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn young_formula_exact() {
+        assert!((young(10.0, 2000.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn daly_close_to_young_when_cheap() {
+        // C << MTBF: Daly ~ Young
+        let y = young(1.0, 100_000.0);
+        let d = daly(1.0, 100_000.0);
+        assert!((d - y).abs() / y < 0.02, "young {y} daly {d}");
+    }
+
+    #[test]
+    fn daly_below_young_for_expensive_ckpts() {
+        let y = young(100.0, 1000.0);
+        let d = daly(100.0, 1000.0);
+        assert!(d < y);
+        assert!(d > 0.0);
+    }
+
+    #[test]
+    fn efficiency_peaks_near_young() {
+        let (c, r, m) = (10.0, 20.0, 2000.0);
+        let w_star = young(c, m);
+        let e_star = efficiency_first_order(w_star, c, r, m);
+        for w in [w_star / 8.0, w_star * 8.0] {
+            assert!(efficiency_first_order(w, c, r, m) < e_star, "w={w}");
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! # VeloC-rs — VEry Low Overhead Checkpointing (paper reproduction)
+//!
+//! A three-layer reproduction of *VELOC: VEry Low Overhead Checkpointing in
+//! the Age of Exascale* (Nicolae et al., SuperCheck'21):
+//!
+//! - **L3 (this crate)** — the VeloC runtime: client API
+//!   ([`api::VelocClient`]), module pipeline ([`pipeline`]), multi-level
+//!   resilience modules ([`modules`]), heterogeneous storage tiers
+//!   ([`storage`]), cluster + failure simulation ([`cluster`]), recovery
+//!   ([`recovery`]), background-flush scheduling ([`scheduler`]),
+//!   checkpoint-interval optimization ([`interval`]) and workloads ([`app`]).
+//! - **L2** — JAX compute graphs (interval MLP, seq2seq predictor, the
+//!   checkpointed application DNN), AOT-lowered to `artifacts/*.hlo.txt`.
+//! - **L1** — Pallas kernels (XOR erasure parity, block checksum, fused
+//!   linear), loaded and executed from Rust through [`runtime`] via PJRT.
+//!
+//! Python runs only at build time (`make artifacts`); the request path is
+//! pure Rust + PJRT.
+
+pub mod api;
+pub mod app;
+pub mod cluster;
+pub mod interval;
+pub mod metrics;
+pub mod modules;
+pub mod pipeline;
+pub mod recovery;
+pub mod runtime;
+pub mod scheduler;
+pub mod storage;
+pub mod util;

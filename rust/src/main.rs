@@ -1,0 +1,195 @@
+//! `veloc` — CLI entry point for the VeloC runtime.
+//!
+//! Subcommands:
+//!   info       print platform, artifact and pipeline information
+//!   run        run the HACC-like iterative workload under checkpointing
+//!   interval   Young/Daly vs DES interval recommendations
+//!
+//! Examples live in `examples/` (quickstart, hacc_sim, dnn_training,
+//! interval_tuning); this binary is the thin operational front-end.
+
+use anyhow::Result;
+use std::time::Instant;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::app::IterativeApp;
+use veloc::cluster::FailureScope;
+use veloc::interval::{self, Scenario};
+use veloc::util::cli::Cli;
+use veloc::util::stats::{format_bytes, format_duration, format_throughput};
+
+fn main() {
+    let cli = Cli::new(
+        "veloc",
+        "VEry Low Overhead Checkpointing — paper reproduction runtime",
+    )
+    .opt("cmd", "info", "info | run | interval")
+    .opt("config", "", "JSON config file (empty = defaults)")
+    .opt("nodes", "4", "simulated nodes")
+    .opt("ranks-per-node", "2", "ranks per node")
+    .opt("iters", "50", "run: iterations")
+    .opt("ckpt-every", "10", "run: checkpoint interval (iterations)")
+    .opt("region-mb", "4", "run: per-rank state size (MiB)")
+    .opt("mtbf", "2000", "interval: system MTBF seconds")
+    .opt("l1-cost", "5", "interval: blocking checkpoint cost seconds")
+    .flag("fail", "run: inject a node failure mid-run and restart")
+    .parse();
+
+    let cmd = cli.positional().first().cloned().unwrap_or(cli.get("cmd"));
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&cli),
+        "run" => cmd_run(&cli),
+        "interval" => cmd_interval(&cli),
+        other => {
+            eprintln!("unknown command '{other}' (try info | run | interval)");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from(cli: &Cli) -> Result<VelocConfig> {
+    let path = cli.get("config");
+    let mut cfg = if path.is_empty() {
+        VelocConfig::default()
+    } else {
+        VelocConfig::from_file(std::path::Path::new(&path))?
+    };
+    if path.is_empty() {
+        cfg = cfg.with_nodes(cli.get_usize("nodes"), cli.get_usize("ranks-per-node"));
+    }
+    Ok(cfg)
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let cfg = config_from(cli)?;
+    let rt = VelocRuntime::new(cfg)?;
+    let topo = rt.topology();
+    println!(
+        "veloc runtime: {} nodes x {} ranks = {} ranks",
+        topo.nodes,
+        topo.ranks_per_node,
+        topo.world_size()
+    );
+    println!("local tiers per node:");
+    for t in rt.env().fabric.local_tiers(0) {
+        let s = t.spec();
+        println!(
+            "  {:<14} write {:>12}  capacity {}",
+            s.kind.name(),
+            format_throughput(s.write_bw as u64, std::time::Duration::from_secs(1)),
+            format_bytes(s.capacity)
+        );
+    }
+    let pfs = rt.env().fabric.pfs().spec();
+    println!(
+        "shared pfs: write {} (aggregate)",
+        format_throughput(pfs.write_bw as u64, std::time::Duration::from_secs(1))
+    );
+    println!();
+    print!("{}", rt.engine(0).describe());
+    match &rt.env().pjrt {
+        Some(e) => println!(
+            "pjrt: {} ({} modules)",
+            e.platform(),
+            e.manifest().modules.len()
+        ),
+        None => println!("pjrt: disabled (native backends)"),
+    }
+    Ok(())
+}
+
+fn cmd_run(cli: &Cli) -> Result<()> {
+    let cfg = config_from(cli)?;
+    let rt = VelocRuntime::new(cfg)?;
+    let topo = rt.topology();
+    let iters = cli.get_u64("iters");
+    let every = cli.get_u64("ckpt-every").max(1);
+    let mb = cli.get_usize("region-mb");
+    let inject = cli.get_bool("fail");
+
+    let world = topo.world_size();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let rt = rt.clone();
+            std::thread::spawn(move || -> Result<(u64, u64)> {
+                let client = rt.client(rank);
+                let mut app =
+                    IterativeApp::new(&client, "hacc", 4, mb << 18, 1.0, 42);
+                let mut ckpts = 0u64;
+                while app.iteration < iters {
+                    if rt.kill_switch().is_killed(rank) {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                        continue;
+                    }
+                    app.step();
+                    client.report_utilization(0.9);
+                    if app.iteration % every == 0 {
+                        let v = app.checkpoint(&client)?;
+                        client.checkpoint_wait("hacc", v)?;
+                        ckpts += 1;
+                    }
+                }
+                Ok((app.iteration, ckpts))
+            })
+        })
+        .collect();
+
+    if inject {
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        println!("!! injecting failure: node 1 down");
+        rt.inject_failure(&FailureScope::Node(1));
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        // Respawn: revive ranks; a fresh app instance restores its state.
+        rt.revive_all();
+        for rank in topo.ranks_of_node(1) {
+            let client = rt.client(rank);
+            let mut app = IterativeApp::new(&client, "hacc", 4, mb << 18, 1.0, 42);
+            if let Some(v) = app.restart(&client)? {
+                println!("   rank {rank} restarted from v{v}");
+            }
+        }
+    }
+
+    let t0 = Instant::now();
+    let mut total_ckpts = 0;
+    for (rank, h) in handles.into_iter().enumerate() {
+        let (it, ck) = h.join().expect("rank thread")?;
+        total_ckpts += ck;
+        if rank == 0 {
+            println!("rank 0 finished {it} iterations, {ck} checkpoints");
+        }
+    }
+    rt.drain();
+    println!(
+        "done: {} ranks, {} checkpoints total, wall {}",
+        world,
+        total_ckpts,
+        format_duration(t0.elapsed())
+    );
+    println!("{}", rt.metrics().to_json().to_pretty());
+    Ok(())
+}
+
+fn cmd_interval(cli: &Cli) -> Result<()> {
+    let mtbf = cli.get_f64("mtbf");
+    let l1 = cli.get_f64("l1-cost");
+    let s = Scenario {
+        mtbf,
+        l1_cost: l1,
+        l23_lag: l1 * 2.0,
+        l4_lag: l1 * 12.0,
+        restart_fast: l1 * 3.0,
+        restart_pfs: l1 * 30.0,
+        work: mtbf * 20.0,
+        mix: Default::default(),
+    };
+    println!("scenario: MTBF {mtbf} s, L1 cost {l1} s");
+    println!("  young        : {:>10.1} s", interval::young(l1, mtbf));
+    println!("  daly         : {:>10.1} s", interval::daly(l1, mtbf));
+    let (w, e) = interval::optimal_interval(&s, 16, 8, 7);
+    println!("  DES optimum  : {:>10.1} s (efficiency {:.3})", w, e);
+    Ok(())
+}

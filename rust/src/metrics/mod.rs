@@ -1,0 +1,113 @@
+//! Lightweight metrics registry: named counters and duration samples,
+//! dumped as JSON for the bench harness and the `veloc report` command.
+
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    samples: Mutex<BTreeMap<String, Samples>>,
+}
+
+impl Metrics {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Metrics::default())
+    }
+
+    fn counter_handle(&self, name: &str) -> Arc<AtomicU64> {
+        let mut g = self.counters.lock().unwrap();
+        Arc::clone(
+            g.entry(name.to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0))),
+        )
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        self.counter_handle(name).fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counter_handle(name).load(Ordering::Relaxed)
+    }
+
+    pub fn observe(&self, name: &str, value: f64) {
+        self.samples
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(value);
+    }
+
+    pub fn observe_duration(&self, name: &str, d: Duration) {
+        self.observe(name, d.as_secs_f64());
+    }
+
+    pub fn samples(&self, name: &str) -> Option<Samples> {
+        self.samples.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters = counters.set(k, v.load(Ordering::Relaxed));
+        }
+        let mut samples = Json::obj();
+        for (k, s) in self.samples.lock().unwrap().iter() {
+            samples = samples.set(
+                k,
+                Json::obj()
+                    .set("count", s.len())
+                    .set("mean", s.mean())
+                    .set("p50", s.p50())
+                    .set("p95", s.p95())
+                    .set("p99", s.p99())
+                    .set("max", s.max()),
+            );
+        }
+        Json::obj().set("counters", counters).set("samples", samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("ckpt.count", 1);
+        m.incr("ckpt.count", 2);
+        assert_eq!(m.counter("ckpt.count"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn samples_summarize() {
+        let m = Metrics::new();
+        for i in 1..=10 {
+            m.observe("lat", i as f64);
+        }
+        let s = m.samples("lat").unwrap();
+        assert_eq!(s.len(), 10);
+        assert!((s.mean() - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let m = Metrics::new();
+        m.incr("a", 7);
+        m.observe("b", 1.0);
+        let j = m.to_json();
+        assert_eq!(j.at(&["counters", "a"]).unwrap().as_u64(), Some(7));
+        assert_eq!(
+            j.at(&["samples", "b", "count"]).unwrap().as_usize(),
+            Some(1)
+        );
+    }
+}

@@ -1,0 +1,374 @@
+//! Level-3 module: XOR erasure coding across a group of ranks.
+//!
+//! RAID-5-style rotated parity over erasure groups of size `k` (node-
+//! disjoint members, see `Topology::erasure_group`). Storage overhead is
+//! `1/(k-1)` of the checkpoint instead of the full copy partner
+//! replication costs, and any *single* member loss per group is
+//! recoverable — including losses where a partner pair died together
+//! (the multi-node failure class).
+//!
+//! ## Scheme
+//!
+//! Group member index `j` holds data `D_j` (its level-1 local copy),
+//! zero-padded to `(k-1) * h` bytes where `h = ceil(max_len / (k-1))`
+//! (lane-aligned). `D_j` is split into `k-1` chunks `C_j[0..k-1)` of `h`
+//! bytes. Member `r` additionally stores the parity
+//!
+//! ```text
+//!   P_r = XOR_{j != r} C_j[(r - j - 1) mod k]
+//! ```
+//!
+//! Every chunk of every member appears in exactly one parity row, and
+//! never in a row held by its owner. Losing member `f` loses `D_f` and
+//! `P_f`; each chunk `C_f[c]` is rebuilt from row `r = (f + 1 + c) mod k`
+//! (always a survivor) as `P_r XOR (other survivors' chunks of row r)`.
+//!
+//! The XOR itself goes through [`crate::modules::xor`] — Pallas kernel via
+//! PJRT or a native fold, selected by config (E10 ablation).
+//!
+//! Modeling note: each member reads every other member's local copy
+//! directly from the fabric (standing in for the group reduce-scatter);
+//! read costs are charged by the source tiers.
+
+use crate::modules::xor::{xor_fold, XorBackend};
+use crate::modules::Env;
+use crate::pipeline::context::{CkptContext, Outcome, RestoreContext, LEVEL_ERASURE};
+use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::util::bytes::Checkpoint;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const PARITY_MAGIC: &[u8; 4] = b"VXOR";
+
+pub struct ErasureModule {
+    env: Arc<Env>,
+    /// Group size k (nodes must be a multiple; k >= 2).
+    k: usize,
+    backend: XorBackend,
+    /// How long to wait for group members' local copies to appear.
+    member_timeout: Duration,
+    switch: ModuleSwitch,
+}
+
+/// Parity container: magic, k, holder index, member lengths, h, parity.
+fn encode_parity(k: usize, me: usize, lens: &[u64], h: usize, parity: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 8 + lens.len() * 8 + 8 + parity.len());
+    out.extend_from_slice(PARITY_MAGIC);
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    out.extend_from_slice(&(me as u32).to_le_bytes());
+    for &l in lens {
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+    out.extend_from_slice(&(h as u64).to_le_bytes());
+    out.extend_from_slice(parity);
+    out
+}
+
+struct ParityBlob {
+    k: usize,
+    #[allow(dead_code)]
+    holder: usize,
+    lens: Vec<u64>,
+    h: usize,
+    parity: Vec<u8>,
+}
+
+fn decode_parity(buf: &[u8]) -> Result<ParityBlob> {
+    if buf.len() < 12 || &buf[0..4] != PARITY_MAGIC {
+        bail!("bad parity container");
+    }
+    let k = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let holder = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let mut off = 12;
+    let mut lens = Vec::with_capacity(k);
+    for _ in 0..k {
+        lens.push(u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()));
+        off += 8;
+    }
+    let h = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()) as usize;
+    off += 8;
+    let parity = buf[off..].to_vec();
+    if parity.len() != h {
+        bail!("parity length {} != h {}", parity.len(), h);
+    }
+    Ok(ParityBlob {
+        k,
+        holder,
+        lens,
+        h,
+        parity,
+    })
+}
+
+/// chunk index of member j covered by parity row r (r != j).
+fn chunk_of(j: usize, r: usize, k: usize) -> usize {
+    (r + k - j - 1) % k
+}
+
+/// Stripe height: max length split over k-1 chunks, 8-byte aligned.
+fn stripe_h(max_len: usize, k: usize) -> usize {
+    let h = max_len.div_ceil(k - 1);
+    h.div_ceil(8) * 8
+}
+
+/// Zero-padded chunk c of a buffer under stripe height h.
+fn chunk_bytes(data: &[u8], c: usize, h: usize) -> Vec<u8> {
+    let mut out = vec![0u8; h];
+    let start = c * h;
+    if start < data.len() {
+        let end = (start + h).min(data.len());
+        out[..end - start].copy_from_slice(&data[start..end]);
+    }
+    out
+}
+
+impl ErasureModule {
+    pub fn new(
+        env: Arc<Env>,
+        k: usize,
+        backend: XorBackend,
+        member_timeout: Duration,
+    ) -> Arc<Self> {
+        Arc::new(ErasureModule {
+            env,
+            k,
+            backend,
+            member_timeout,
+            switch: ModuleSwitch::new(true),
+        })
+    }
+
+    fn group_supported(&self) -> bool {
+        self.k >= 2 && self.env.topology.nodes % self.k == 0 && self.env.topology.nodes >= self.k
+    }
+
+    /// Find a member's level-1 copy across its node's tiers.
+    fn read_local_copy(&self, member: usize, name: &str, version: u64) -> Option<Vec<u8>> {
+        let node = self.env.topology.node_of(member);
+        let key = format!("local.{name}.r{member}.v{version}");
+        for tier in self.env.fabric.local_tiers(node) {
+            if let Some((data, _)) = tier.get(&key) {
+                return Some(data);
+            }
+        }
+        None
+    }
+
+    fn wait_for_members(
+        &self,
+        group: &[usize],
+        name: &str,
+        version: u64,
+    ) -> Result<Vec<Vec<u8>>> {
+        let deadline = Instant::now() + self.member_timeout;
+        let mut copies: Vec<Option<Vec<u8>>> = vec![None; group.len()];
+        loop {
+            let mut missing = 0;
+            for (i, &m) in group.iter().enumerate() {
+                if copies[i].is_none() {
+                    copies[i] = self.read_local_copy(m, name, version);
+                    if copies[i].is_none() {
+                        missing += 1;
+                    }
+                }
+            }
+            if missing == 0 {
+                return Ok(copies.into_iter().map(Option::unwrap).collect());
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "erasure: {missing}/{} group members never produced local copies for {name} v{version}",
+                    group.len()
+                );
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn read_parity(&self, member: usize, name: &str, version: u64) -> Option<ParityBlob> {
+        let node = self.env.topology.node_of(member);
+        let key = format!("erasure.{name}.r{member}.v{version}");
+        for tier in self.env.fabric.local_tiers(node) {
+            if let Some((data, _)) = tier.get(&key) {
+                return decode_parity(&data).ok();
+            }
+        }
+        None
+    }
+}
+
+impl Module for ErasureModule {
+    fn name(&self) -> &'static str {
+        "erasure"
+    }
+
+    fn priority(&self) -> i32 {
+        30
+    }
+
+    fn level(&self) -> u8 {
+        LEVEL_ERASURE
+    }
+
+    fn process(&self, ctx: &mut CkptContext) -> Result<Outcome> {
+        if !self.group_supported() {
+            return Ok(Outcome::Skipped);
+        }
+        let t0 = Instant::now();
+        let k = self.k;
+        let group = self.env.topology.erasure_group(ctx.rank, k);
+        let me = self.env.topology.erasure_index(ctx.rank, k);
+        let copies = self.wait_for_members(&group, &ctx.name, ctx.version)?;
+        let lens: Vec<u64> = copies.iter().map(|c| c.len() as u64).collect();
+        let max_len = *lens.iter().max().unwrap() as usize;
+        let h = stripe_h(max_len, k);
+        // P_me = XOR over members j != me of their chunk (me - j - 1) mod k.
+        let chunks: Vec<Vec<u8>> = group
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != me)
+            .map(|(j, _)| chunk_bytes(&copies[j], chunk_of(j, me, k), h))
+            .collect();
+        let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let parity = xor_fold(&refs, &self.backend)?;
+        let blob = encode_parity(k, me, &lens, h, &parity);
+        // Store on my node (fastest tier with capacity).
+        let tiers = self.env.fabric.local_tiers(ctx.node);
+        let tier = tiers
+            .iter()
+            .find(|t| t.used_bytes() + blob.len() as u64 <= t.spec().capacity)
+            .ok_or_else(|| anyhow!("no local capacity for parity"))?;
+        let stat = tier.put(&ctx.key("erasure"), &blob)?;
+        ctx.record(self.name(), LEVEL_ERASURE, t0.elapsed().max(stat.modeled), stat.bytes);
+        Ok(Outcome::Done)
+    }
+
+    fn restore(&self, ctx: &RestoreContext) -> Result<Option<Checkpoint>> {
+        let Some(version) = ctx.version else {
+            return Ok(None);
+        };
+        if !self.group_supported() {
+            return Ok(None);
+        }
+        let k = self.k;
+        let group = self.env.topology.erasure_group(ctx.rank, k);
+        let me = self.env.topology.erasure_index(ctx.rank, k);
+        // Survivors' data.
+        let mut data: Vec<Option<Vec<u8>>> = vec![None; k];
+        for (j, &m) in group.iter().enumerate() {
+            if j != me {
+                data[j] = self.read_local_copy(m, &ctx.name, version);
+                if data[j].is_none() {
+                    return Ok(None); // second loss in group: not our level
+                }
+            }
+        }
+        // Parities of all rows != me (rows are held by the member with the
+        // same index).
+        let mut lens: Option<Vec<u64>> = None;
+        let mut h = 0usize;
+        let mut parities: Vec<Option<Vec<u8>>> = vec![None; k];
+        for (r, &m) in group.iter().enumerate() {
+            if r == me {
+                continue;
+            }
+            let Some(blob) = self.read_parity(m, &ctx.name, version) else {
+                return Ok(None);
+            };
+            if blob.k != k {
+                return Ok(None);
+            }
+            h = blob.h;
+            lens.get_or_insert(blob.lens.clone());
+            parities[r] = Some(blob.parity);
+        }
+        let lens = lens.ok_or_else(|| anyhow!("no parity found"))?;
+        let my_len = lens[me] as usize;
+        // Rebuild my k-1 chunks.
+        let mut rebuilt = Vec::with_capacity((k - 1) * h);
+        for c in 0..k - 1 {
+            let r = (me + 1 + c) % k;
+            let parity = parities[r].as_ref().unwrap();
+            let mut pieces: Vec<Vec<u8>> = vec![parity.clone()];
+            for j in 0..k {
+                if j == r || j == me {
+                    continue;
+                }
+                pieces.push(chunk_bytes(
+                    data[j].as_ref().unwrap(),
+                    chunk_of(j, r, k),
+                    h,
+                ));
+            }
+            let refs: Vec<&[u8]> = pieces.iter().map(|p| p.as_slice()).collect();
+            rebuilt.extend_from_slice(&xor_fold(&refs, &self.backend)?);
+        }
+        rebuilt.truncate(my_len);
+        Ok(Some(Checkpoint::decode(&rebuilt)?))
+    }
+
+    fn switch(&self) -> &ModuleSwitch {
+        &self.switch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_mapping_bijective_and_owner_free() {
+        for k in [2usize, 3, 4, 8] {
+            for j in 0..k {
+                let mut seen = vec![false; k - 1];
+                for r in (0..k).filter(|&r| r != j) {
+                    let c = chunk_of(j, r, k);
+                    assert!(c < k - 1, "k={k} j={j} r={r} c={c}");
+                    assert!(!seen[c], "duplicate chunk k={k} j={j}");
+                    seen[c] = true;
+                }
+                assert!(seen.iter().all(|&s| s));
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_row_is_survivor() {
+        for k in [2usize, 4, 8] {
+            for f in 0..k {
+                for c in 0..k - 1 {
+                    let r = (f + 1 + c) % k;
+                    assert_ne!(r, f, "k={k} f={f} c={c}");
+                    assert_eq!(chunk_of(f, r, k), c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stripe_alignment() {
+        assert_eq!(stripe_h(100, 4), 40); // ceil(100/3)=34 -> 40
+        assert_eq!(stripe_h(24, 4), 8);
+        assert_eq!(stripe_h(1, 2), 8);
+    }
+
+    #[test]
+    fn chunk_bytes_pads() {
+        let d = vec![1u8, 2, 3];
+        assert_eq!(chunk_bytes(&d, 0, 8), vec![1, 2, 3, 0, 0, 0, 0, 0]);
+        assert_eq!(chunk_bytes(&d, 1, 8), vec![0u8; 8]);
+    }
+
+    #[test]
+    fn parity_container_roundtrip() {
+        let blob = encode_parity(4, 2, &[10, 20, 30, 40], 8, &[7u8; 8]);
+        let p = decode_parity(&blob).unwrap();
+        assert_eq!(p.k, 4);
+        assert_eq!(p.holder, 2);
+        assert_eq!(p.lens, vec![10, 20, 30, 40]);
+        assert_eq!(p.h, 8);
+        assert_eq!(p.parity, vec![7u8; 8]);
+        assert!(decode_parity(&blob[..10]).is_err());
+    }
+}

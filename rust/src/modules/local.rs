@@ -1,0 +1,192 @@
+//! Level-1 module: write the checkpoint to node-local storage.
+//!
+//! This is the *blocking* stage — the only one the application waits for in
+//! async mode (paper §1: "block the application only while writing to the
+//! fastest level"). Tier choice is a policy:
+//!
+//! - `FastestFirst` — always the fastest local tier with capacity. The
+//!   obvious choice, and the baseline of the E5 experiment.
+//! - `ConcurrencyAware` — picks the tier with the best *effective* service
+//!   time given current concurrent transfers. Under I/O concurrency
+//!   (e.g. the async flush still draining the previous checkpoint from the
+//!   fast tier) a nominally slower idle tier wins — the non-obvious
+//!   producer-consumer result of paper ref [4].
+
+use crate::modules::Env;
+use crate::pipeline::context::{CkptContext, Outcome, RestoreContext, LEVEL_LOCAL};
+use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::storage::StorageTier;
+use crate::util::bytes::Checkpoint;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierPolicy {
+    FastestFirst,
+    ConcurrencyAware,
+}
+
+pub struct LocalModule {
+    env: Arc<Env>,
+    policy: TierPolicy,
+    switch: ModuleSwitch,
+}
+
+impl LocalModule {
+    pub fn new(env: Arc<Env>, policy: TierPolicy) -> Arc<Self> {
+        Arc::new(LocalModule {
+            env,
+            policy,
+            switch: ModuleSwitch::new(true),
+        })
+    }
+
+    pub fn policy(&self) -> TierPolicy {
+        self.policy
+    }
+
+    /// Pick the target tier under the configured policy.
+    fn select_tier<'a>(
+        &self,
+        tiers: &'a [Arc<StorageTier>],
+        bytes: u64,
+    ) -> Option<&'a Arc<StorageTier>> {
+        let fits =
+            |t: &&'a Arc<StorageTier>| t.used_bytes() + bytes <= t.spec().capacity;
+        match self.policy {
+            TierPolicy::FastestFirst => tiers.iter().find(fits),
+            TierPolicy::ConcurrencyAware => tiers
+                .iter()
+                .filter(fits)
+                .min_by(|a, b| {
+                    let score = |t: &Arc<StorageTier>| {
+                        let n = if t.spec().shared {
+                            t.active_transfers() + 1
+                        } else {
+                            1
+                        };
+                        // effective seconds to land the checkpoint
+                        t.spec().latency.as_secs_f64()
+                            + bytes as f64 * n as f64 / t.spec().write_bw
+                    };
+                    score(a).partial_cmp(&score(b)).unwrap()
+                }),
+        }
+    }
+}
+
+impl Module for LocalModule {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn priority(&self) -> i32 {
+        10
+    }
+
+    fn level(&self) -> u8 {
+        LEVEL_LOCAL
+    }
+
+    fn blocking(&self) -> bool {
+        true
+    }
+
+    fn process(&self, ctx: &mut CkptContext) -> Result<Outcome> {
+        let tiers = self.env.fabric.local_tiers(ctx.node);
+        let bytes = ctx.encoded.len() as u64;
+        let Some(tier) = self.select_tier(tiers, bytes) else {
+            bail!("no local tier has {bytes} bytes of capacity");
+        };
+        let stat = tier.put_shared(&ctx.key("local"), &ctx.encoded)?;
+        ctx.record(self.name(), LEVEL_LOCAL, stat.modeled, stat.bytes);
+        Ok(Outcome::Done)
+    }
+
+    fn restore(&self, ctx: &RestoreContext) -> Result<Option<Checkpoint>> {
+        let Some(version) = ctx.version else {
+            return Ok(None);
+        };
+        let key = format!("local.{}.r{}.v{}", ctx.name, ctx.rank, version);
+        for tier in self.env.fabric.local_tiers(ctx.node) {
+            if let Some((data, _stat)) = tier.get(&key) {
+                return Ok(Some(Checkpoint::decode(&data)?));
+            }
+        }
+        Ok(None)
+    }
+
+    fn switch(&self) -> &ModuleSwitch {
+        &self.switch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::modules::VersionRegistry;
+    use crate::storage::{presets, FabricConfig, StorageFabric, TimeMode};
+
+    fn env_with_tiers() -> Arc<Env> {
+        Arc::new(Env {
+            topology: Topology::new(2, 1),
+            fabric: Arc::new(
+                StorageFabric::build(&FabricConfig {
+                    nodes: 2,
+                    ..Default::default()
+                })
+                .unwrap(),
+            ),
+            pjrt: None,
+            registry: VersionRegistry::new(),
+            scheduler_gate: None,
+        })
+    }
+
+    #[test]
+    fn fastest_first_prefers_dram() {
+        let env = env_with_tiers();
+        let m = LocalModule::new(Arc::clone(&env), TierPolicy::FastestFirst);
+        let tiers = env.fabric.local_tiers(0);
+        let t = m.select_tier(tiers, 1024).unwrap();
+        assert_eq!(t.kind(), crate::storage::TierKind::Dram);
+    }
+
+    #[test]
+    fn fastest_first_falls_back_on_capacity() {
+        let env = env_with_tiers();
+        let m = LocalModule::new(Arc::clone(&env), TierPolicy::FastestFirst);
+        let tiers = env.fabric.local_tiers(0);
+        // Larger than the DRAM staging area (1 GiB default).
+        let t = m.select_tier(tiers, 2 << 30).unwrap();
+        assert_ne!(t.kind(), crate::storage::TierKind::Dram);
+    }
+
+    #[test]
+    fn concurrency_aware_avoids_contended_shared_tier() {
+        // Build a 2-tier node where the nominally faster tier is shared
+        // and busy, the slower one idle.
+        let fast = StorageTier::memory(presets::nvme(u64::MAX / 2), TimeMode::Model);
+        let slow = StorageTier::memory(presets::ssd(u64::MAX / 2), TimeMode::Model);
+        let env = env_with_tiers();
+        let m = LocalModule::new(env, TierPolicy::ConcurrencyAware);
+        let tiers = vec![Arc::clone(&fast), Arc::clone(&slow)];
+        // Idle: fast wins despite being shared.
+        let t = m.select_tier(&tiers, 64 << 20).unwrap();
+        assert_eq!(t.kind(), crate::storage::TierKind::Nvme);
+        // Six concurrent flush readbacks on the fast tier: effective
+        // service flips to the idle SSD (paper [4]).
+        let _guards: Vec<_> = (0..6).map(|_| fast.hold_transfer()).collect();
+        let t = m.select_tier(&tiers, 64 << 20).unwrap();
+        assert_eq!(t.kind(), crate::storage::TierKind::Ssd);
+    }
+
+    #[test]
+    fn no_capacity_anywhere_is_none() {
+        let env = env_with_tiers();
+        let m = LocalModule::new(Arc::clone(&env), TierPolicy::FastestFirst);
+        let tiers = env.fabric.local_tiers(0);
+        assert!(m.select_tier(tiers, u64::MAX / 2).is_none());
+    }
+}

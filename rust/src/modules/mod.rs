@@ -1,0 +1,195 @@
+//! Resilience / I/O pipeline modules (paper §2) and their shared
+//! environment.
+
+pub mod checksum;
+pub mod compression;
+pub mod erasure;
+pub mod kvstore;
+pub mod local;
+pub mod partner;
+pub mod transfer;
+pub mod version;
+pub mod xor;
+
+pub use checksum::{ChecksumBackend, ChecksumModule};
+pub use compression::CompressionModule;
+pub use erasure::ErasureModule;
+pub use kvstore::KvStoreModule;
+pub use local::{LocalModule, TierPolicy};
+pub use partner::PartnerModule;
+pub use transfer::TransferModule;
+pub use version::{VersionModule, VersionRegistry};
+pub use xor::{xor_fold, XorBackend};
+
+use crate::cluster::Topology;
+use crate::pipeline::module::Module;
+use crate::runtime::PjrtEngine;
+use crate::storage::StorageFabric;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Throttle hook the transfer module consults between flush chunks — the
+/// interference-mitigation lever (implemented by `crate::scheduler`).
+pub trait FlushGate: Send + Sync {
+    /// Called before flushing `bytes` more bytes; may sleep (priority
+    /// throttling) or block until a predicted-idle phase.
+    fn before_chunk(&self, bytes: usize);
+}
+
+/// Shared environment every module sees.
+pub struct Env {
+    pub topology: Topology,
+    pub fabric: Arc<StorageFabric>,
+    /// PJRT engine for kernel-backed modules (None = native backends only).
+    pub pjrt: Option<Arc<PjrtEngine>>,
+    pub registry: Arc<VersionRegistry>,
+    /// Optional flush throttle installed by the scheduler.
+    pub scheduler_gate: Option<Arc<dyn FlushGate>>,
+}
+
+/// Configuration of the default module stack.
+#[derive(Clone)]
+pub struct StackConfig {
+    /// Tier selection policy for the level-1 capture.
+    pub tier_policy: TierPolicy,
+    /// Erasure group size (0 disables the erasure module).
+    pub erasure_group: usize,
+    /// Use the Pallas kernels through PJRT where available.
+    pub use_kernels: bool,
+    /// Enable the integrity checksum stage.
+    pub with_checksum: bool,
+    /// Enable zlib compression of remote copies.
+    pub with_compression: bool,
+    /// Enable the KV repository module.
+    pub with_kv: bool,
+    /// Enable partner replication.
+    pub with_partner: bool,
+    /// Enable the PFS flush.
+    pub with_transfer: bool,
+    /// Versions retained per checkpoint name.
+    pub keep_versions: usize,
+    /// PFS flush chunk size (scheduler pacing granularity).
+    pub flush_chunk: usize,
+    /// How long erasure waits for group members.
+    pub erasure_timeout: Duration,
+}
+
+impl Default for StackConfig {
+    fn default() -> Self {
+        StackConfig {
+            tier_policy: TierPolicy::FastestFirst,
+            erasure_group: 4,
+            use_kernels: false,
+            with_checksum: true,
+            with_compression: false,
+            with_kv: false,
+            with_partner: true,
+            with_transfer: true,
+            keep_versions: 2,
+            flush_chunk: 4 << 20,
+            erasure_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Build the default module stack (checksum < local < partner < erasure <
+/// compression < transfer < kv < version) for one rank's engine.
+pub fn build_stack(env: &Arc<Env>, cfg: &StackConfig) -> Result<Vec<Arc<dyn Module>>> {
+    let mut stack: Vec<Arc<dyn Module>> = Vec::new();
+    if cfg.with_checksum {
+        let backend = match (&env.pjrt, cfg.use_kernels) {
+            (Some(e), true) => ChecksumBackend::Kernel(Arc::clone(e)),
+            _ => ChecksumBackend::Crc32,
+        };
+        stack.push(ChecksumModule::new(Arc::clone(env), backend, true));
+    }
+    stack.push(LocalModule::new(Arc::clone(env), cfg.tier_policy));
+    if cfg.with_partner {
+        stack.push(PartnerModule::new(Arc::clone(env)));
+    }
+    if cfg.erasure_group >= 2 {
+        let backend = match (&env.pjrt, cfg.use_kernels) {
+            (Some(e), true) => XorBackend::Kernel(Arc::clone(e)),
+            _ => XorBackend::NativeWide,
+        };
+        stack.push(ErasureModule::new(
+            Arc::clone(env),
+            cfg.erasure_group,
+            backend,
+            cfg.erasure_timeout,
+        ));
+    }
+    if cfg.with_compression {
+        stack.push(CompressionModule::new(true, 3));
+    }
+    if cfg.with_transfer {
+        stack.push(TransferModule::new(Arc::clone(env), cfg.flush_chunk));
+    }
+    if cfg.with_kv {
+        stack.push(KvStoreModule::new(Arc::clone(env), true));
+    }
+    stack.push(VersionModule::new(
+        Arc::clone(&env.registry),
+        Arc::clone(&env.fabric),
+        cfg.keep_versions,
+        env.topology.world_size(),
+    ));
+    Ok(stack)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::FabricConfig;
+
+    fn env() -> Arc<Env> {
+        Arc::new(Env {
+            topology: Topology::new(4, 1),
+            fabric: Arc::new(
+                StorageFabric::build(&FabricConfig {
+                    nodes: 4,
+                    with_kv: true,
+                    ..Default::default()
+                })
+                .unwrap(),
+            ),
+            pjrt: None,
+            registry: VersionRegistry::new(),
+            scheduler_gate: None,
+        })
+    }
+
+    #[test]
+    fn default_stack_order() {
+        let e = env();
+        let stack = build_stack(&e, &StackConfig::default()).unwrap();
+        let names: Vec<&str> = stack.iter().map(|m| m.name()).collect();
+        assert_eq!(
+            names,
+            vec!["checksum", "local", "partner", "erasure", "transfer", "version"]
+        );
+        // priorities strictly increasing
+        let prios: Vec<i32> = stack.iter().map(|m| m.priority()).collect();
+        assert!(prios.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn optional_modules_toggle() {
+        let e = env();
+        let cfg = StackConfig {
+            with_checksum: false,
+            with_partner: false,
+            erasure_group: 0,
+            with_compression: true,
+            with_kv: true,
+            ..Default::default()
+        };
+        let names: Vec<&str> = build_stack(&e, &cfg)
+            .unwrap()
+            .iter()
+            .map(|m| m.name())
+            .collect();
+        assert_eq!(names, vec!["local", "compress", "transfer", "kvstore", "version"]);
+    }
+}

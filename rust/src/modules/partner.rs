@@ -1,0 +1,102 @@
+//! Level-2 module: partner replication.
+//!
+//! Each rank pushes its encoded checkpoint to the node-local storage of its
+//! ring partner (same slot, next node — a distinct failure domain, see
+//! `cluster::topology::Topology::partner_of`). A node failure then leaves a
+//! full copy of every lost rank's state on a surviving node.
+//!
+//! Modeling note: the push is a direct write into the partner node's tier
+//! (standing in for the RDMA/interconnect transfer the real system does);
+//! the charged cost is the partner tier's write cost, which dominates the
+//! network hop on the machines the paper targets.
+
+use crate::modules::Env;
+use crate::pipeline::context::{CkptContext, Outcome, RestoreContext, LEVEL_PARTNER};
+use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::util::bytes::Checkpoint;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+pub struct PartnerModule {
+    env: Arc<Env>,
+    switch: ModuleSwitch,
+}
+
+impl PartnerModule {
+    pub fn new(env: Arc<Env>) -> Arc<Self> {
+        Arc::new(PartnerModule {
+            env,
+            switch: ModuleSwitch::new(true),
+        })
+    }
+
+    /// Partner copies go to the partner node's *largest* local tier so they
+    /// do not evict the partner's own level-1 copies from the fast tier.
+    fn target_tier(
+        &self,
+        node: usize,
+        bytes: u64,
+    ) -> Option<Arc<crate::storage::StorageTier>> {
+        let tiers = self.env.fabric.local_tiers(node);
+        tiers
+            .iter()
+            .rev() // slowest/biggest first
+            .find(|t| t.used_bytes() + bytes <= t.spec().capacity)
+            .cloned()
+    }
+}
+
+impl Module for PartnerModule {
+    fn name(&self) -> &'static str {
+        "partner"
+    }
+
+    fn priority(&self) -> i32 {
+        20
+    }
+
+    fn level(&self) -> u8 {
+        LEVEL_PARTNER
+    }
+
+    fn process(&self, ctx: &mut CkptContext) -> Result<Outcome> {
+        if self.env.topology.nodes < 2 {
+            // No distinct failure domain to replicate into.
+            return Ok(Outcome::Skipped);
+        }
+        let partner = self.env.topology.partner_of(ctx.rank);
+        let pnode = self.env.topology.node_of(partner);
+        let bytes = ctx.encoded.len() as u64;
+        let Some(tier) = self.target_tier(pnode, bytes) else {
+            bail!("partner node {pnode} has no capacity for {bytes} bytes");
+        };
+        // Keyed by the *source* rank so recovery of rank r knows where to
+        // look regardless of which rank stored it.
+        let stat = tier.put_shared(&ctx.key("partner"), &ctx.encoded)?;
+        ctx.record(self.name(), LEVEL_PARTNER, stat.modeled, stat.bytes);
+        Ok(Outcome::Done)
+    }
+
+    fn restore(&self, ctx: &RestoreContext) -> Result<Option<Checkpoint>> {
+        let Some(version) = ctx.version else {
+            return Ok(None);
+        };
+        if self.env.topology.nodes < 2 {
+            return Ok(None);
+        }
+        // My copy lives on my partner's node.
+        let partner = self.env.topology.partner_of(ctx.rank);
+        let pnode = self.env.topology.node_of(partner);
+        let key = format!("partner.{}.r{}.v{}", ctx.name, ctx.rank, version);
+        for tier in self.env.fabric.local_tiers(pnode) {
+            if let Some((data, _)) = tier.get(&key) {
+                return Ok(Some(Checkpoint::decode(&data)?));
+            }
+        }
+        Ok(None)
+    }
+
+    fn switch(&self) -> &ModuleSwitch {
+        &self.switch
+    }
+}

@@ -1,0 +1,119 @@
+//! Level-4 module: asynchronous flush to the parallel file system.
+//!
+//! In async engine mode this stage runs on the active backend, so the
+//! application never blocks on PFS bandwidth — the core VeloC claim (the
+//! Summit run: "negligible runtime overhead for flushing the local
+//! checkpoints to Lustre in the background"). The flush *reads back* the
+//! level-1 copy from whichever local tier holds it (charging that tier's
+//! read cost — this read traffic is what makes fastest-tier-always
+//! suboptimal, paper [4] / experiment E5), then streams it to the PFS in
+//! chunks so the scheduler can throttle between chunks.
+
+use crate::modules::Env;
+use crate::pipeline::context::{CkptContext, Outcome, RestoreContext, LEVEL_PFS};
+use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::util::bytes::Checkpoint;
+use anyhow::Result;
+use std::io::Read;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct TransferModule {
+    env: Arc<Env>,
+    /// Stream chunk size: between chunks the module consults the scheduler
+    /// gate (throttle/pause), bounding interference bursts.
+    chunk: usize,
+    switch: ModuleSwitch,
+}
+
+impl TransferModule {
+    pub fn new(env: Arc<Env>, chunk: usize) -> Arc<Self> {
+        Arc::new(TransferModule {
+            env,
+            chunk: chunk.max(4096),
+            switch: ModuleSwitch::new(true),
+        })
+    }
+
+    /// Read back the level-1 copy (preferred: charges the local tier's
+    /// read cost, modeling the real producer-consumer pattern); fall back
+    /// to the in-context bytes if the local copy is gone.
+    fn read_back(&self, ctx: &CkptContext) -> (Arc<Vec<u8>>, bool) {
+        let key = ctx.key("local");
+        for tier in self.env.fabric.local_tiers(ctx.node) {
+            if let Some((data, _)) = tier.get(&key) {
+                return (Arc::new(data), true);
+            }
+        }
+        (Arc::clone(&ctx.encoded), false)
+    }
+}
+
+/// Sniff the payload encoding: raw VCKP vs zlib (compression module).
+pub fn maybe_decompress(data: Vec<u8>) -> Result<Vec<u8>> {
+    if data.starts_with(crate::util::bytes::MAGIC) {
+        return Ok(data);
+    }
+    // zlib stream (RFC 1950): 0x78 CMF for 32K window deflate.
+    let mut out = Vec::new();
+    flate2::read::ZlibDecoder::new(&data[..]).read_to_end(&mut out)?;
+    Ok(out)
+}
+
+impl Module for TransferModule {
+    fn name(&self) -> &'static str {
+        "transfer"
+    }
+
+    fn priority(&self) -> i32 {
+        40
+    }
+
+    fn level(&self) -> u8 {
+        LEVEL_PFS
+    }
+
+    fn process(&self, ctx: &mut CkptContext) -> Result<Outcome> {
+        let t0 = Instant::now();
+        // Compressed payloads travel from the context (compression runs
+        // after local capture, so the local copy is raw).
+        let (data, _from_tier) = if ctx.encoding == "raw" {
+            self.read_back(ctx)
+        } else {
+            (Arc::clone(&ctx.encoded), false)
+        };
+        let pfs = self.env.fabric.pfs();
+        let key = ctx.key("pfs");
+        // Pace the flush chunk by chunk under the scheduler gate (priority
+        // throttling / predicted-idle pausing), then publish the object in
+        // one atomic put whose model charges the PFS bandwidth.
+        if let Some(gate) = &self.env.scheduler_gate {
+            let mut off = 0;
+            while off < data.len() {
+                gate.before_chunk(self.chunk.min(data.len() - off));
+                off += self.chunk;
+            }
+        }
+        let stat = pfs.put_shared(&key, &data)?;
+        ctx.record(self.name(), LEVEL_PFS, t0.elapsed().max(stat.modeled), stat.bytes);
+        Ok(Outcome::Done)
+    }
+
+    fn restore(&self, ctx: &RestoreContext) -> Result<Option<Checkpoint>> {
+        let Some(version) = ctx.version else {
+            return Ok(None);
+        };
+        let key = format!("pfs.{}.r{}.v{}", ctx.name, ctx.rank, version);
+        match self.env.fabric.pfs().get(&key) {
+            Some((data, _)) => {
+                let raw = maybe_decompress(data)?;
+                Ok(Some(Checkpoint::decode(&raw)?))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn switch(&self) -> &ModuleSwitch {
+        &self.switch
+    }
+}

@@ -1,0 +1,374 @@
+//! Version registry + version module (pipeline tail).
+//!
+//! Tracks which versions of which named checkpoint reached which resilience
+//! level on which rank — the lineage that makes snapshots "discoverable and
+//! accessible", the *data states* idea the paper cites ([2]). The registry
+//! also drives restart (latest complete version) and garbage collection
+//! (keep the last K versions per level).
+
+use crate::pipeline::context::{CkptContext, Outcome};
+use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// Per (name, version, rank) record.
+#[derive(Clone, Debug, Default)]
+pub struct VersionInfo {
+    /// Levels that completed for this rank.
+    pub levels: Vec<u8>,
+    pub bytes: u64,
+    /// Payload encoding of remote copies ("raw" or "zlib").
+    pub encoding: String,
+    /// Integrity checksum of the encoded container (crc32 or kernel).
+    pub checksum: Option<u32>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    /// name -> version -> rank -> info
+    entries: HashMap<String, BTreeMap<u64, HashMap<usize, VersionInfo>>>,
+}
+
+/// Global (process-wide) version registry shared by all ranks.
+#[derive(Default)]
+pub struct VersionRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl VersionRegistry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(VersionRegistry::default())
+    }
+
+    pub fn record_level(
+        &self,
+        name: &str,
+        version: u64,
+        rank: usize,
+        level: u8,
+        bytes: u64,
+        encoding: &str,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let info = g
+            .entries
+            .entry(name.to_string())
+            .or_default()
+            .entry(version)
+            .or_default()
+            .entry(rank)
+            .or_default();
+        if !info.levels.contains(&level) {
+            info.levels.push(level);
+            info.levels.sort_unstable();
+        }
+        info.bytes = bytes;
+        info.encoding = encoding.to_string();
+    }
+
+    pub fn set_checksum(&self, name: &str, version: u64, rank: usize, crc: u32) {
+        let mut g = self.inner.lock().unwrap();
+        g.entries
+            .entry(name.to_string())
+            .or_default()
+            .entry(version)
+            .or_default()
+            .entry(rank)
+            .or_default()
+            .checksum = Some(crc);
+    }
+
+    pub fn info(&self, name: &str, version: u64, rank: usize) -> Option<VersionInfo> {
+        let g = self.inner.lock().unwrap();
+        g.entries.get(name)?.get(&version)?.get(&rank).cloned()
+    }
+
+    /// All versions of `name`, newest first.
+    pub fn versions(&self, name: &str) -> Vec<u64> {
+        let g = self.inner.lock().unwrap();
+        g.entries
+            .get(name)
+            .map(|m| m.keys().rev().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Has every one of `world` ranks recorded at least one level for this
+    /// version (i.e. every rank's pipeline tail finished it)?
+    pub fn complete(&self, name: &str, version: u64, world: usize) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.entries
+            .get(name)
+            .and_then(|m| m.get(&version))
+            .map(|ranks| {
+                ranks.len() == world && ranks.values().all(|i| !i.levels.is_empty())
+            })
+            .unwrap_or(false)
+    }
+
+    /// Latest version for which every one of `world` ranks reached at least
+    /// one level (the restartable frontier).
+    pub fn latest_complete(&self, name: &str, world: usize) -> Option<u64> {
+        let g = self.inner.lock().unwrap();
+        let versions = g.entries.get(name)?;
+        versions
+            .iter()
+            .rev()
+            .find(|(_, ranks)| {
+                ranks.len() == world
+                    && ranks.values().all(|i| !i.levels.is_empty())
+            })
+            .map(|(&v, _)| v)
+    }
+
+    /// Versions older than the newest `keep` for `name` (GC candidates).
+    pub fn gc_candidates(&self, name: &str, keep: usize) -> Vec<u64> {
+        let vs = self.versions(name);
+        vs.into_iter().skip(keep).collect()
+    }
+
+    pub fn forget(&self, name: &str, version: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(m) = g.entries.get_mut(name) {
+            m.remove(&version);
+        }
+    }
+
+    /// Rehydrate a registry entry from a persisted lineage JSON (cold
+    /// restart: the in-process registry is empty but the PFS survived).
+    pub fn load_json(&self, j: &Json) -> anyhow::Result<()> {
+        use anyhow::anyhow;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("lineage missing name"))?;
+        for v in j
+            .get("versions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("lineage missing versions"))?
+        {
+            let version = v
+                .get("version")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("version entry missing number"))?;
+            for r in v.get("ranks").and_then(Json::as_arr).unwrap_or(&[]) {
+                let rank = r
+                    .get("rank")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("rank entry missing rank"))?;
+                let bytes = r.get("bytes").and_then(Json::as_u64).unwrap_or(0);
+                let encoding = r.str_or("encoding", "raw").to_string();
+                for l in r.get("levels").and_then(Json::as_arr).unwrap_or(&[]) {
+                    if let Some(level) = l.as_u64() {
+                        self.record_level(
+                            name,
+                            version,
+                            rank,
+                            level as u8,
+                            bytes,
+                            &encoding,
+                        );
+                    }
+                }
+                if let Some(c) = r.get("checksum").and_then(Json::as_u64) {
+                    self.set_checksum(name, version, rank, c as u32);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON dump (persisted to the PFS by the version module so that a
+    /// cold restart can rediscover the lineage).
+    pub fn to_json(&self, name: &str) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut versions = Vec::new();
+        if let Some(m) = g.entries.get(name) {
+            for (&v, ranks) in m {
+                let mut rank_arr = Vec::new();
+                for (&r, info) in ranks {
+                    let mut entry = Json::obj()
+                        .set("rank", r)
+                        .set(
+                            "levels",
+                            info.levels
+                                .iter()
+                                .map(|&l| Json::Num(l as f64))
+                                .collect::<Vec<_>>(),
+                        )
+                        .set("bytes", info.bytes)
+                        .set("encoding", info.encoding.as_str());
+                    if let Some(c) = info.checksum {
+                        entry = entry.set("checksum", c as u64);
+                    }
+                    rank_arr.push(entry);
+                }
+                versions.push(
+                    Json::obj()
+                        .set("version", v)
+                        .set("ranks", Json::Arr(rank_arr)),
+                );
+            }
+        }
+        Json::obj()
+            .set("name", name)
+            .set("versions", Json::Arr(versions))
+    }
+}
+
+/// Pipeline tail: records completion in the registry and garbage-collects
+/// old versions from every tier.
+pub struct VersionModule {
+    registry: Arc<VersionRegistry>,
+    fabric: Arc<crate::storage::StorageFabric>,
+    /// Keep this many newest versions per name (per rank).
+    keep: usize,
+    /// World size: GC only touches versions every rank has finished
+    /// (otherwise a fast rank could delete local copies a slow peer's
+    /// erasure stage is still reading — a real race observed under a
+    /// saturated active backend).
+    world: usize,
+    switch: ModuleSwitch,
+}
+
+impl VersionModule {
+    pub fn new(
+        registry: Arc<VersionRegistry>,
+        fabric: Arc<crate::storage::StorageFabric>,
+        keep: usize,
+        world: usize,
+    ) -> Arc<Self> {
+        Arc::new(VersionModule {
+            registry,
+            fabric,
+            keep: keep.max(1),
+            world: world.max(1),
+            switch: ModuleSwitch::new(true),
+        })
+    }
+
+    /// GC candidates: strictly older than the `keep` newest versions AND
+    /// fully recorded by all ranks (pipeline tails complete everywhere).
+    fn safe_gc_candidates(&self, name: &str) -> Vec<u64> {
+        self.registry
+            .gc_candidates(name, self.keep)
+            .into_iter()
+            .filter(|&v| self.registry.complete(name, v, self.world))
+            .collect()
+    }
+
+    fn delete_version_keys(&self, name: &str, rank: usize, node: usize, version: u64) {
+        let suffix = format!("{name}.r{rank}.v{version}");
+        for tier in self.fabric.local_tiers(node) {
+            for prefix in ["local", "partner", "erasure"] {
+                tier.delete(&format!("{prefix}.{suffix}"));
+            }
+        }
+        self.fabric.pfs().delete(&format!("pfs.{suffix}"));
+        if let Some(kv) = self.fabric.kv() {
+            kv.delete(&format!("kv.{suffix}"));
+        }
+    }
+}
+
+impl Module for VersionModule {
+    fn name(&self) -> &'static str {
+        "version"
+    }
+
+    fn priority(&self) -> i32 {
+        50
+    }
+
+    fn process(&self, ctx: &mut CkptContext) -> Result<Outcome> {
+        // Record every level the earlier stages completed.
+        for r in &ctx.results {
+            if r.level > 0 {
+                self.registry.record_level(
+                    &ctx.name,
+                    ctx.version,
+                    ctx.rank,
+                    r.level,
+                    ctx.ckpt.payload_bytes(),
+                    ctx.encoding,
+                );
+            }
+        }
+        // GC old versions for this rank (only globally-complete ones).
+        for v in self.safe_gc_candidates(&ctx.name) {
+            self.delete_version_keys(&ctx.name, ctx.rank, ctx.node, v);
+        }
+        // Persist the lineage to the PFS (DataStates, paper [2]): small
+        // JSON, last-writer-wins; every rank's view converges as the
+        // pipeline tails complete. A cold restart reloads it via
+        // `VersionRegistry::load_json` / `VelocRuntime::reload_lineage`.
+        let lineage = self.registry.to_json(&ctx.name).to_string();
+        let _ = self
+            .fabric
+            .pfs()
+            .put(&format!("lineage.{}.json", ctx.name), lineage.as_bytes());
+        Ok(Outcome::Done)
+    }
+
+    fn switch(&self) -> &ModuleSwitch {
+        &self.switch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let r = VersionRegistry::new();
+        r.record_level("app", 1, 0, 1, 100, "raw");
+        r.record_level("app", 1, 0, 4, 100, "raw");
+        r.record_level("app", 1, 1, 1, 100, "raw");
+        let info = r.info("app", 1, 0).unwrap();
+        assert_eq!(info.levels, vec![1, 4]);
+        assert_eq!(r.versions("app"), vec![1]);
+        assert_eq!(r.latest_complete("app", 2), Some(1));
+        assert_eq!(r.latest_complete("app", 3), None);
+    }
+
+    #[test]
+    fn latest_complete_requires_all_ranks() {
+        let r = VersionRegistry::new();
+        r.record_level("a", 1, 0, 1, 10, "raw");
+        r.record_level("a", 1, 1, 1, 10, "raw");
+        r.record_level("a", 2, 0, 1, 10, "raw"); // rank 1 missing at v2
+        assert_eq!(r.latest_complete("a", 2), Some(1));
+        r.record_level("a", 2, 1, 2, 10, "raw");
+        assert_eq!(r.latest_complete("a", 2), Some(2));
+    }
+
+    #[test]
+    fn gc_candidates_skip_newest() {
+        let r = VersionRegistry::new();
+        for v in 1..=5 {
+            r.record_level("a", v, 0, 1, 10, "raw");
+        }
+        assert_eq!(r.gc_candidates("a", 2), vec![3, 2, 1]);
+        r.forget("a", 1);
+        assert_eq!(r.versions("a"), vec![5, 4, 3, 2]);
+    }
+
+    #[test]
+    fn checksum_round_trip() {
+        let r = VersionRegistry::new();
+        r.set_checksum("a", 1, 3, 0xDEADBEEF);
+        assert_eq!(r.info("a", 1, 3).unwrap().checksum, Some(0xDEADBEEF));
+    }
+
+    #[test]
+    fn json_dump_shape() {
+        let r = VersionRegistry::new();
+        r.record_level("a", 7, 0, 1, 10, "raw");
+        let j = r.to_json("a");
+        assert_eq!(j.str_or("name", ""), "a");
+        let v = j.get("versions").unwrap().idx(0).unwrap();
+        assert_eq!(v.usize_or("version", 0), 7);
+    }
+}

@@ -1,0 +1,153 @@
+//! Command contexts flowing through the module pipeline.
+
+use crate::util::bytes::Checkpoint;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Resilience level identifiers (paper §2's multi-level hierarchy).
+pub const LEVEL_LOCAL: u8 = 1;
+pub const LEVEL_PARTNER: u8 = 2;
+pub const LEVEL_ERASURE: u8 = 3;
+pub const LEVEL_PFS: u8 = 4;
+pub const LEVEL_KV: u8 = 5;
+
+pub fn level_name(level: u8) -> &'static str {
+    match level {
+        LEVEL_LOCAL => "local",
+        LEVEL_PARTNER => "partner",
+        LEVEL_ERASURE => "erasure",
+        LEVEL_PFS => "pfs",
+        LEVEL_KV => "kv",
+        _ => "unknown",
+    }
+}
+
+/// What one module did with a command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    /// Module completed its resilience level.
+    Done,
+    /// Module chose not to act (disabled levels pass through, paper §2:
+    /// "can do so or simply pass based on its own internal state").
+    Skipped,
+}
+
+/// Record of one completed pipeline stage.
+#[derive(Clone, Debug)]
+pub struct LevelResult {
+    pub module: String,
+    pub level: u8,
+    pub duration: Duration,
+    pub bytes: u64,
+}
+
+/// A checkpoint command travelling down the pipeline.
+pub struct CkptContext {
+    /// Application-chosen checkpoint name.
+    pub name: String,
+    pub rank: usize,
+    pub node: usize,
+    /// Monotonic version.
+    pub version: u64,
+    /// Decoded checkpoint (regions + meta).
+    pub ckpt: Arc<Checkpoint>,
+    /// VCKP-encoded container (what modules move around). Modules that
+    /// transform the payload (compression) swap this and set `encoding`.
+    pub encoded: Arc<Vec<u8>>,
+    /// Payload encoding tag stored in the version registry ("raw"/"zlib").
+    pub encoding: &'static str,
+    /// Completed stages, in pipeline order.
+    pub results: Vec<LevelResult>,
+}
+
+impl CkptContext {
+    pub fn new(
+        name: &str,
+        rank: usize,
+        node: usize,
+        version: u64,
+        ckpt: Checkpoint,
+    ) -> Self {
+        let encoded = Arc::new(ckpt.encode());
+        CkptContext {
+            name: name.to_string(),
+            rank,
+            node,
+            version,
+            ckpt: Arc::new(ckpt),
+            encoded,
+            encoding: "raw",
+            results: Vec::new(),
+        }
+    }
+
+    /// Storage key for this rank's copy at a given level prefix.
+    pub fn key(&self, prefix: &str) -> String {
+        format!("{prefix}.{}.r{}.v{}", self.name, self.rank, self.version)
+    }
+
+    pub fn record(&mut self, module: &str, level: u8, duration: Duration, bytes: u64) {
+        self.results.push(LevelResult {
+            module: module.to_string(),
+            level,
+            duration,
+            bytes,
+        });
+    }
+
+    /// Highest resilience level achieved so far.
+    pub fn max_level(&self) -> u8 {
+        self.results.iter().map(|r| r.level).max().unwrap_or(0)
+    }
+}
+
+/// A restart command: probe levels for the freshest recoverable version.
+pub struct RestoreContext {
+    pub name: String,
+    pub rank: usize,
+    pub node: usize,
+    /// Specific version to restore, or None = latest available.
+    pub version: Option<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> CkptContext {
+        let mut c = Checkpoint::new("app", 2, 9);
+        c.push_region(0, vec![1, 2, 3]);
+        CkptContext::new("app", 2, 1, 9, c)
+    }
+
+    #[test]
+    fn key_namespacing() {
+        let c = ctx();
+        assert_eq!(c.key("local"), "local.app.r2.v9");
+        assert_eq!(c.key("partner"), "partner.app.r2.v9");
+    }
+
+    #[test]
+    fn encoded_is_valid_vckp() {
+        let c = ctx();
+        let d = Checkpoint::decode(&c.encoded).unwrap();
+        assert_eq!(d.meta.iteration, 9);
+    }
+
+    #[test]
+    fn max_level_tracks_records() {
+        let mut c = ctx();
+        assert_eq!(c.max_level(), 0);
+        c.record("local", LEVEL_LOCAL, Duration::ZERO, 10);
+        c.record("pfs", LEVEL_PFS, Duration::ZERO, 10);
+        assert_eq!(c.max_level(), LEVEL_PFS);
+        assert_eq!(c.results.len(), 2);
+    }
+
+    #[test]
+    fn level_names() {
+        assert_eq!(level_name(LEVEL_LOCAL), "local");
+        assert_eq!(level_name(LEVEL_KV), "kv");
+        assert_eq!(level_name(99), "unknown");
+    }
+}

@@ -1,0 +1,416 @@
+//! The pipeline engine (paper Figure 1): triggers each module in priority
+//! order, either synchronously (engine linked into the application) or
+//! asynchronously (engine runs in the *active backend* — here a priority
+//! thread pool, matching VeloC's separate backend process).
+
+use crate::pipeline::context::{CkptContext, Outcome, RestoreContext};
+use crate::pipeline::module::Module;
+use crate::util::bytes::Checkpoint;
+use crate::util::pool::{Priority, ThreadPool};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Engine execution mode (Figure 1: linked-in library vs active backend).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// All modules run inline in `checkpoint()`.
+    Sync,
+    /// Only `blocking()` modules run inline; the rest run in the backend.
+    Async,
+}
+
+/// Completion state of one (rank, name, version) checkpoint command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CkptStatus {
+    InFlight,
+    /// Highest resilience level achieved.
+    Done(u8),
+    Failed(String),
+}
+
+#[derive(Default)]
+struct Tracker {
+    states: Mutex<HashMap<(usize, String, u64), CkptStatus>>,
+    cv: Condvar,
+}
+
+impl Tracker {
+    fn set(&self, rank: usize, name: &str, version: u64, st: CkptStatus) {
+        self.states
+            .lock()
+            .unwrap()
+            .insert((rank, name.to_string(), version), st);
+        self.cv.notify_all();
+    }
+
+    fn wait(
+        &self,
+        rank: usize,
+        name: &str,
+        version: u64,
+        timeout: Duration,
+    ) -> Result<CkptStatus> {
+        let key = (rank, name.to_string(), version);
+        let deadline = Instant::now() + timeout;
+        let mut states = self.states.lock().unwrap();
+        loop {
+            match states.get(&key) {
+                Some(CkptStatus::InFlight) | None => {}
+                Some(done) => return Ok(done.clone()),
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("checkpoint_wait timeout: {name} v{version} rank {rank}");
+            }
+            let (g, _t) = self.cv.wait_timeout(states, deadline - now).unwrap();
+            states = g;
+        }
+    }
+}
+
+/// The per-rank pipeline engine.
+pub struct Engine {
+    /// Modules sorted by ascending priority.
+    modules: Vec<Arc<dyn Module>>,
+    mode: EngineMode,
+    /// Active backend (shared across ranks); required for Async mode.
+    backend: Option<Arc<ThreadPool>>,
+    /// Backend priority for the async tail (Background enables the
+    /// interference-mitigation path).
+    background_priority: Priority,
+    tracker: Arc<Tracker>,
+}
+
+impl Engine {
+    pub fn new(
+        mut modules: Vec<Arc<dyn Module>>,
+        mode: EngineMode,
+        backend: Option<Arc<ThreadPool>>,
+    ) -> Result<Self> {
+        if mode == EngineMode::Async && backend.is_none() {
+            bail!("async engine mode requires an active backend pool");
+        }
+        modules.sort_by_key(|m| m.priority());
+        Ok(Engine {
+            modules,
+            mode,
+            backend,
+            background_priority: Priority::Normal,
+            tracker: Arc::new(Tracker::default()),
+        })
+    }
+
+    pub fn with_background_priority(mut self, p: Priority) -> Self {
+        self.background_priority = p;
+        self
+    }
+
+    pub fn mode(&self) -> EngineMode {
+        self.mode
+    }
+
+    pub fn modules(&self) -> &[Arc<dyn Module>] {
+        &self.modules
+    }
+
+    pub fn module_named(&self, name: &str) -> Option<&Arc<dyn Module>> {
+        self.modules.iter().find(|m| m.name() == name)
+    }
+
+    /// Pipeline description for diagnostics (quickstart prints this).
+    pub fn describe(&self) -> String {
+        let mut s = format!("pipeline ({:?} engine):\n", self.mode);
+        for m in &self.modules {
+            s.push_str(&format!(
+                "  [{:>3}] {:<12} level={} blocking={} enabled={}\n",
+                m.priority(),
+                m.name(),
+                m.level(),
+                m.blocking(),
+                m.is_enabled()
+            ));
+        }
+        s
+    }
+
+    fn run_stage(m: &Arc<dyn Module>, ctx: &mut CkptContext) -> Result<Outcome> {
+        if !m.is_enabled() {
+            return Ok(Outcome::Skipped);
+        }
+        m.process(ctx)
+    }
+
+    /// Run modules [from..] over the context; returns first error after
+    /// attempting every stage (one failed level must not block the rest —
+    /// that is the point of multi-level redundancy).
+    fn run_range(
+        modules: &[Arc<dyn Module>],
+        ctx: &mut CkptContext,
+    ) -> Result<()> {
+        let mut first_err: Option<anyhow::Error> = None;
+        for m in modules {
+            if let Err(e) = Self::run_stage(m, ctx) {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("{}: {e}", m.name()));
+                }
+            }
+        }
+        match first_err {
+            Some(e) if ctx.max_level() == 0 => Err(e.context("all levels failed")),
+            _ => Ok(()),
+        }
+    }
+
+    /// Submit a checkpoint command. In `Sync` mode the call returns when
+    /// every module ran; in `Async` mode it returns after the blocking
+    /// prefix, with the rest scheduled on the backend.
+    pub fn submit(&self, mut ctx: CkptContext) -> Result<()> {
+        let rank = ctx.rank;
+        let name = ctx.name.clone();
+        let version = ctx.version;
+        self.tracker.set(rank, &name, version, CkptStatus::InFlight);
+
+        let split = match self.mode {
+            EngineMode::Sync => self.modules.len(),
+            EngineMode::Async => self
+                .modules
+                .iter()
+                .position(|m| !m.blocking())
+                .unwrap_or(self.modules.len()),
+        };
+        // Blocking prefix, inline.
+        if let Err(e) = Self::run_range(&self.modules[..split], &mut ctx) {
+            self.tracker
+                .set(rank, &name, version, CkptStatus::Failed(e.to_string()));
+            return Err(e);
+        }
+        if split == self.modules.len() {
+            self.tracker
+                .set(rank, &name, version, CkptStatus::Done(ctx.max_level()));
+            return Ok(());
+        }
+        // Async tail on the active backend.
+        let tail: Vec<Arc<dyn Module>> = self.modules[split..].to_vec();
+        let tracker = Arc::clone(&self.tracker);
+        let pool = self.backend.as_ref().expect("checked in new").clone();
+        pool.submit(self.background_priority, move || {
+            let st = match Engine::run_range(&tail, &mut ctx) {
+                Ok(()) => CkptStatus::Done(ctx.max_level()),
+                Err(e) => CkptStatus::Failed(e.to_string()),
+            };
+            tracker.set(ctx.rank, &ctx.name, ctx.version, st);
+        });
+        Ok(())
+    }
+
+    /// Wait for an async checkpoint to settle; returns its final status.
+    pub fn wait(
+        &self,
+        rank: usize,
+        name: &str,
+        version: u64,
+        timeout: Duration,
+    ) -> Result<CkptStatus> {
+        self.tracker.wait(rank, name, version, timeout)
+    }
+
+    /// Probe modules in priority order (fastest level first) for a copy of
+    /// the requested version.
+    pub fn restore(&self, ctx: &RestoreContext) -> Result<Option<(u8, Checkpoint)>> {
+        for m in &self.modules {
+            if !m.is_enabled() || m.level() == 0 {
+                continue;
+            }
+            match m.restore(ctx) {
+                Ok(Some(ckpt)) => return Ok(Some((m.level(), ckpt))),
+                Ok(None) => continue,
+                Err(_e) => continue, // corrupt copy at this level: fall through
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::context::LEVEL_LOCAL;
+    use crate::pipeline::module::ModuleSwitch;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct TestModule {
+        name: &'static str,
+        prio: i32,
+        blocking: bool,
+        fail: bool,
+        ran: Arc<AtomicUsize>,
+        switch: ModuleSwitch,
+    }
+
+    impl TestModule {
+        fn new(
+            name: &'static str,
+            prio: i32,
+            blocking: bool,
+            fail: bool,
+            ran: Arc<AtomicUsize>,
+        ) -> Arc<dyn Module> {
+            Arc::new(TestModule {
+                name,
+                prio,
+                blocking,
+                fail,
+                ran,
+                switch: ModuleSwitch::new(true),
+            })
+        }
+    }
+
+    impl Module for TestModule {
+        fn name(&self) -> &'static str {
+            self.name
+        }
+        fn priority(&self) -> i32 {
+            self.prio
+        }
+        fn level(&self) -> u8 {
+            LEVEL_LOCAL
+        }
+        fn blocking(&self) -> bool {
+            self.blocking
+        }
+        fn process(&self, ctx: &mut CkptContext) -> Result<Outcome> {
+            self.ran.fetch_add(1, Ordering::SeqCst);
+            if self.fail {
+                bail!("boom");
+            }
+            ctx.record(self.name, LEVEL_LOCAL, Duration::ZERO, 1);
+            Ok(Outcome::Done)
+        }
+        fn switch(&self) -> &ModuleSwitch {
+            &self.switch
+        }
+    }
+
+    fn ctx() -> CkptContext {
+        let mut c = Checkpoint::new("t", 0, 1);
+        c.push_region(0, vec![0; 8]);
+        CkptContext::new("t", 0, 0, 1, c)
+    }
+
+    #[test]
+    fn sync_runs_all_in_priority_order() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let eng = Engine::new(
+            vec![
+                TestModule::new("b", 20, false, false, ran.clone()),
+                TestModule::new("a", 10, true, false, ran.clone()),
+            ],
+            EngineMode::Sync,
+            None,
+        )
+        .unwrap();
+        assert_eq!(eng.modules()[0].name(), "a");
+        eng.submit(ctx()).unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 2);
+        let st = eng.wait(0, "t", 1, Duration::from_secs(1)).unwrap();
+        assert_eq!(st, CkptStatus::Done(LEVEL_LOCAL));
+    }
+
+    #[test]
+    fn async_defers_non_blocking_tail() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let pool = Arc::new(ThreadPool::new(1));
+        let eng = Engine::new(
+            vec![
+                TestModule::new("fast", 10, true, false, ran.clone()),
+                TestModule::new("slow", 20, false, false, ran.clone()),
+            ],
+            EngineMode::Async,
+            Some(pool),
+        )
+        .unwrap();
+        eng.submit(ctx()).unwrap();
+        let st = eng.wait(0, "t", 1, Duration::from_secs(5)).unwrap();
+        assert!(matches!(st, CkptStatus::Done(_)));
+        assert_eq!(ran.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn async_mode_requires_pool() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        assert!(Engine::new(
+            vec![TestModule::new("x", 1, true, false, ran)],
+            EngineMode::Async,
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn one_failed_level_does_not_abort_pipeline() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let eng = Engine::new(
+            vec![
+                TestModule::new("bad", 10, false, true, ran.clone()),
+                TestModule::new("good", 20, false, false, ran.clone()),
+            ],
+            EngineMode::Sync,
+            None,
+        )
+        .unwrap();
+        eng.submit(ctx()).unwrap(); // good level succeeded => Ok
+        assert_eq!(ran.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn all_levels_failing_is_an_error() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let eng = Engine::new(
+            vec![TestModule::new("bad", 10, false, true, ran)],
+            EngineMode::Sync,
+            None,
+        )
+        .unwrap();
+        assert!(eng.submit(ctx()).is_err());
+    }
+
+    #[test]
+    fn disabled_module_skipped() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let good = TestModule::new("good", 20, false, false, ran.clone());
+        let eng = Engine::new(
+            vec![
+                TestModule::new("off", 10, false, false, ran.clone()),
+                good,
+            ],
+            EngineMode::Sync,
+            None,
+        )
+        .unwrap();
+        eng.module_named("off").unwrap().switch().set(false);
+        eng.submit(ctx()).unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        eng.module_named("off").unwrap().switch().set(true);
+        let mut c2 = ctx();
+        c2.version = 2;
+        eng.submit(c2).unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn describe_lists_modules() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let eng = Engine::new(
+            vec![TestModule::new("local", 10, true, false, ran)],
+            EngineMode::Sync,
+            None,
+        )
+        .unwrap();
+        let d = eng.describe();
+        assert!(d.contains("local"));
+        assert!(d.contains("blocking=true"));
+    }
+}

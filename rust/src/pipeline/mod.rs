@@ -1,0 +1,13 @@
+//! Module pipeline (paper Figure 1): command contexts, the `Module` trait,
+//! and the sync/async engine with its active backend.
+
+pub mod context;
+pub mod engine;
+pub mod module;
+
+pub use context::{
+    level_name, CkptContext, LevelResult, Outcome, RestoreContext,
+    LEVEL_ERASURE, LEVEL_KV, LEVEL_LOCAL, LEVEL_PARTNER, LEVEL_PFS,
+};
+pub use engine::{CkptStatus, Engine, EngineMode};
+pub use module::{Module, ModuleSwitch};

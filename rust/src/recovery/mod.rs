@@ -1,0 +1,117 @@
+//! Restart orchestration: find the freshest version any level can serve,
+//! validate it, and report which level served it (E3/E9).
+//!
+//! Probe order is the pipeline's priority order, i.e. fastest level first:
+//! local -> partner -> erasure rebuild -> PFS -> KV. Every candidate is
+//! CRC-validated by the VCKP decode and, when the checksum module recorded
+//! a digest, re-verified against the registry before being accepted.
+
+use crate::modules::checksum::{digest, ChecksumBackend};
+use crate::modules::{Env, VersionRegistry};
+use crate::pipeline::{Engine, RestoreContext};
+use crate::util::bytes::Checkpoint;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A successful restore.
+pub struct Restored {
+    pub version: u64,
+    /// Resilience level that served the copy (1..=5).
+    pub level: u8,
+    pub ckpt: Checkpoint,
+}
+
+pub struct Recovery {
+    env: Arc<Env>,
+    checksum: ChecksumBackend,
+}
+
+impl Recovery {
+    pub fn new(env: Arc<Env>, checksum: ChecksumBackend) -> Self {
+        Recovery { env, checksum }
+    }
+
+    pub fn registry(&self) -> &Arc<VersionRegistry> {
+        &self.env.registry
+    }
+
+    /// Validate a candidate against the recorded checksum (if any). The
+    /// VCKP encode is deterministic, so re-encoding the decoded checkpoint
+    /// reproduces the exact container bytes the checksum module digested.
+    fn validate(&self, name: &str, version: u64, rank: usize, ckpt: &Checkpoint) -> bool {
+        let Some(info) = self.env.registry.info(name, version, rank) else {
+            return true; // no record: nothing to compare against
+        };
+        let Some(expected) = info.checksum else {
+            return true;
+        };
+        match digest(&self.checksum, &ckpt.encode()) {
+            Ok(actual) => actual == expected,
+            Err(_) => false,
+        }
+    }
+
+    /// Restore a specific version for one rank through its engine.
+    pub fn restore_version(
+        &self,
+        engine: &Engine,
+        name: &str,
+        rank: usize,
+        version: u64,
+    ) -> Result<Option<Restored>> {
+        let node = self.env.topology.node_of(rank);
+        let ctx = RestoreContext {
+            name: name.to_string(),
+            rank,
+            node,
+            version: Some(version),
+        };
+        if let Some((level, ckpt)) = engine.restore(&ctx)? {
+            if self.validate(name, version, rank, &ckpt) {
+                return Ok(Some(Restored {
+                    version,
+                    level,
+                    ckpt,
+                }));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Restore the freshest version available at any level for one rank.
+    pub fn restore_latest(
+        &self,
+        engine: &Engine,
+        name: &str,
+        rank: usize,
+    ) -> Result<Option<Restored>> {
+        for version in self.env.registry.versions(name) {
+            if let Some(r) = self.restore_version(engine, name, rank, version)? {
+                return Ok(Some(r));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Find the freshest version *all* ranks can restore — the globally
+    /// consistent restart frontier (checkpoints are collective; a version
+    /// only some ranks can recover is useless).
+    pub fn restorable_frontier(
+        &self,
+        engines: &[Arc<Engine>],
+        name: &str,
+    ) -> Result<Option<u64>> {
+        'versions: for version in self.env.registry.versions(name) {
+            for (rank, engine) in engines.iter().enumerate() {
+                if self
+                    .restore_version(engine, name, rank, version)?
+                    .is_none()
+                {
+                    continue 'versions;
+                }
+            }
+            return Ok(Some(version));
+        }
+        Ok(None)
+    }
+}

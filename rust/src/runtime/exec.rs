@@ -1,0 +1,411 @@
+//! PJRT execution engine: load `artifacts/*.hlo.txt`, compile once per
+//! module on the CPU PJRT client, execute from the L3 hot path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO *text* -> `HloModuleProto::
+//! from_text_file` -> `XlaComputation::from_proto` -> `client.compile` ->
+//! `execute`. Executables are compiled lazily and cached, so the first
+//! caller pays the compile and everyone else hits the cache.
+
+use crate::runtime::manifest::{DType, Manifest, ModuleSpec, NamedTensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// `xla::PjRtLoadedExecutable` holds raw C pointers and is not marked Send/
+/// Sync by the binding crate, but the underlying PJRT CPU client is thread-
+/// safe (it owns its own thread pool and the C API guarantees concurrent
+/// `Execute` is legal). We wrap it to share across rank threads; execution
+/// itself takes no Rust-side lock.
+struct SendExecutable(xla::PjRtLoadedExecutable);
+unsafe impl Send for SendExecutable {}
+unsafe impl Sync for SendExecutable {}
+
+struct SendClient(xla::PjRtClient);
+unsafe impl Send for SendClient {}
+unsafe impl Sync for SendClient {}
+
+/// Typed host-side tensor passed to / returned from executions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Tensor::I32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(Tensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+impl From<&NamedTensor> for Tensor {
+    fn from(t: &NamedTensor) -> Tensor {
+        Tensor::F32 {
+            shape: t.shape.clone(),
+            data: t.data.clone(),
+        }
+    }
+}
+
+/// The engine: one PJRT CPU client + compiled executable cache + manifest.
+pub struct PjrtEngine {
+    client: SendClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<SendExecutable>>>,
+}
+
+impl PjrtEngine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Arc<Self>> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Arc::new(PjrtEngine {
+            client: SendClient(client),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    fn executable(&self, name: &str) -> Result<Arc<SendExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let spec = self.manifest.module(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("parsing {}: {e}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let exe = Arc::new(SendExecutable(exe));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Eagerly compile a set of modules (start-up warm path).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    fn check_args(spec: &ModuleSpec, args: &[Tensor]) -> Result<()> {
+        if args.len() != spec.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                spec.name,
+                spec.args.len(),
+                args.len()
+            );
+        }
+        for (i, ((shape, dt), t)) in spec.args.iter().zip(args).enumerate() {
+            if t.shape() != shape.as_slice() || t.dtype() != *dt {
+                bail!(
+                    "{} arg {i}: expected {:?}/{:?}, got {:?}/{:?}",
+                    spec.name,
+                    shape,
+                    dt,
+                    t.shape(),
+                    t.dtype()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a module; returns the output tuple as host tensors.
+    pub fn run(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.module(name)?.clone();
+        Self::check_args(&spec, args)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .0
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e}"))?;
+        if parts.len() != spec.outputs {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs,
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+            .context("converting outputs")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Arc<PjrtEngine>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(PjrtEngine::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn xor_parity_executes_and_matches_host() {
+        let Some(eng) = engine() else { return };
+        let k = eng.manifest().constant("xor_shards").unwrap();
+        let n = eng.manifest().constant("xor_chunk").unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let data: Vec<i32> =
+            (0..k * n).map(|_| rng.next_u64() as i32).collect();
+        let out = eng
+            .run("xor_parity", &[Tensor::i32(&[k, n], data.clone())])
+            .unwrap();
+        let got = out[0].as_i32().unwrap();
+        for j in 0..n {
+            let mut want = 0i32;
+            for i in 0..k {
+                want ^= data[i * n + j];
+            }
+            assert_eq!(got[j], want, "lane {j}");
+        }
+    }
+
+    #[test]
+    fn checksum_executes() {
+        let Some(eng) = engine() else { return };
+        let rows = eng.manifest().constant("csum_rows").unwrap();
+        let blk = eng.manifest().constant("csum_block").unwrap();
+        let data: Vec<i32> = (0..rows * blk).map(|i| i as i32).collect();
+        let out = eng
+            .run("checksum", &[Tensor::i32(&[rows, blk], data.clone())])
+            .unwrap();
+        let got = out[0].as_i32().unwrap();
+        assert_eq!(got.len(), rows);
+        // Host oracle for row 0.
+        let mut want: i32 = 0;
+        for j in 0..blk {
+            want = want
+                .wrapping_add((data[j]).wrapping_mul(2 * j as i32 + 1));
+        }
+        assert_eq!(got[0], want);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let Some(eng) = engine() else { return };
+        let err = eng
+            .run("xor_parity", &[Tensor::i32(&[2, 2], vec![0; 4])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected"), "{err}");
+    }
+
+    #[test]
+    fn dnn_train_step_decreases_loss() {
+        let Some(eng) = engine() else { return };
+        let man = eng.manifest();
+        let b = man.constant("dnn_batch").unwrap();
+        let d = man.constant("dnn_in").unwrap();
+        let c = man.constant("dnn_classes").unwrap();
+        let params = man.load_params("dnn_init").unwrap();
+        let mut args: Vec<Tensor> = params.iter().map(Tensor::from).collect();
+        let mut rng = crate::util::rng::Rng::new(11);
+        let x: Vec<f32> =
+            (0..b * d).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> =
+            (0..b).map(|_| rng.below(c as u64) as i32).collect();
+        args.push(Tensor::f32(&[b, d], x.clone()));
+        args.push(Tensor::i32(&[b], y.clone()));
+        args.push(Tensor::scalar_f32(0.05));
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..5 {
+            let out = eng.run("dnn_train_step", &args).unwrap();
+            let loss = out[6].as_f32().unwrap()[0];
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            // Feed updated params back in.
+            for i in 0..6 {
+                args[i] = out[i].clone();
+            }
+        }
+        assert!(last < first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn interval_mlp_fwd_shape() {
+        let Some(eng) = engine() else { return };
+        let man = eng.manifest();
+        let f = man.constant("interval_features").unwrap();
+        let bsz = man.constant("interval_batch").unwrap();
+        let params = man.load_params("interval_init").unwrap();
+        let mut args: Vec<Tensor> = params.iter().map(Tensor::from).collect();
+        args.push(Tensor::f32(&[bsz, f], vec![0.5; bsz * f]));
+        let out = eng.run("interval_mlp_fwd", &args).unwrap();
+        assert_eq!(out[0].shape(), &[bsz]);
+        assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn seq2seq_fwd_in_unit_range() {
+        let Some(eng) = engine() else { return };
+        let man = eng.manifest();
+        let w = man.constant("seq_window").unwrap();
+        let h = man.constant("seq_horizon").unwrap();
+        let params = man.load_params("seq2seq").unwrap();
+        let mut args: Vec<Tensor> = params.iter().map(Tensor::from).collect();
+        args.push(Tensor::f32(&[1, w], vec![0.8; w]));
+        let out = eng.run("seq2seq_fwd", &args).unwrap();
+        assert_eq!(out[0].shape(), &[1, h]);
+        for &p in out[0].as_f32().unwrap() {
+            assert!((0.0..=1.0).contains(&p));
+        }
+    }
+
+    #[test]
+    fn concurrent_execution_is_safe() {
+        let Some(eng) = engine() else { return };
+        let k = eng.manifest().constant("xor_shards").unwrap();
+        let n = eng.manifest().constant("xor_chunk").unwrap();
+        eng.warm(&["xor_parity"]).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                std::thread::spawn(move || {
+                    let data: Vec<i32> = vec![t as i32; k * n];
+                    let out = eng
+                        .run("xor_parity", &[Tensor::i32(&[k, n], data)])
+                        .unwrap();
+                    // xor of 4 identical values = 0 for even k
+                    assert!(out[0]
+                        .as_i32()
+                        .unwrap()
+                        .iter()
+                        .all(|&v| v == 0));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

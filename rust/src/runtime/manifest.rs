@@ -1,0 +1,258 @@
+//! Parsed `artifacts/manifest.json` — the contract between the Python AOT
+//! compile path and the Rust runtime (shapes, dtypes, parameter blobs).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// Argument (shape, dtype) list in call order.
+    pub args: Vec<(Vec<usize>, DType)>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+/// One tensor inside a parameter blob.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset in the blob.
+    pub offset: usize,
+    /// Element count.
+    pub len: usize,
+}
+
+/// One exported parameter blob (raw little-endian f32).
+#[derive(Clone, Debug)]
+pub struct ParamsSpec {
+    pub file: PathBuf,
+    pub tensors: Vec<TensorSpec>,
+}
+
+/// The whole artifacts manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub modules: BTreeMap<String, ModuleSpec>,
+    pub params: BTreeMap<String, ParamsSpec>,
+    pub constants: BTreeMap<String, f64>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = json::load(&dir.join("manifest.json"))?;
+        let mut modules = BTreeMap::new();
+        for (name, m) in j
+            .get("modules")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing modules"))?
+        {
+            let args = m
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing args"))?
+                .iter()
+                .map(|a| {
+                    let shape = shape_of(
+                        a.get("shape").ok_or_else(|| anyhow!("missing shape"))?,
+                    )?;
+                    let dt = DType::parse(
+                        a.get("dtype")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("missing dtype"))?,
+                    )?;
+                    Ok((shape, dt))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            modules.insert(
+                name.clone(),
+                ModuleSpec {
+                    name: name.clone(),
+                    file: dir.join(m.str_or("file", "")),
+                    args,
+                    outputs: m.usize_or("outputs", 1),
+                },
+            );
+        }
+        let mut params = BTreeMap::new();
+        if let Some(ps) = j.get("params").and_then(Json::as_obj) {
+            for (name, p) in ps {
+                let tensors = p
+                    .get("tensors")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing tensors"))?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            name: t.str_or("name", "").to_string(),
+                            shape: shape_of(
+                                t.get("shape")
+                                    .ok_or_else(|| anyhow!("missing shape"))?,
+                            )?,
+                            offset: t.usize_or("offset", 0),
+                            len: t.usize_or("len", 0),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                params.insert(
+                    name.clone(),
+                    ParamsSpec {
+                        file: dir.join(p.str_or("file", "")),
+                        tensors,
+                    },
+                );
+            }
+        }
+        let mut constants = BTreeMap::new();
+        if let Some(cs) = j.get("constants").and_then(Json::as_obj) {
+            for (k, v) in cs {
+                if let Some(x) = v.as_f64() {
+                    constants.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            modules,
+            params,
+            constants,
+        })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no module '{name}'"))
+    }
+
+    pub fn constant(&self, name: &str) -> Result<usize> {
+        self.constants
+            .get(name)
+            .map(|&v| v as usize)
+            .ok_or_else(|| anyhow!("manifest has no constant '{name}'"))
+    }
+
+    /// Load a parameter blob as named f32 tensors.
+    pub fn load_params(&self, name: &str) -> Result<Vec<NamedTensor>> {
+        let spec = self
+            .params
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no params '{name}'"))?;
+        let raw = std::fs::read(&spec.file)
+            .map_err(|e| anyhow!("reading {}: {e}", spec.file.display()))?;
+        spec.tensors
+            .iter()
+            .map(|t| {
+                let end = t.offset + t.len * 4;
+                if end > raw.len() {
+                    bail!("{name}/{}: blob truncated", t.name);
+                }
+                let data = raw[t.offset..end]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(NamedTensor {
+                    name: t.name.clone(),
+                    shape: t.shape.clone(),
+                    data,
+                })
+            })
+            .collect()
+    }
+}
+
+/// A named f32 tensor loaded from a parameter blob.
+#[derive(Clone, Debug)]
+pub struct NamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let xp = m.module("xor_parity").unwrap();
+        assert_eq!(xp.args.len(), 1);
+        assert_eq!(xp.args[0].1, DType::I32);
+        let train = m.module("dnn_train_step").unwrap();
+        assert_eq!(train.args.len(), 9);
+        assert_eq!(train.outputs, 7);
+        assert!(m.constant("dnn_in").unwrap() > 0);
+    }
+
+    #[test]
+    fn loads_param_blobs() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let dnn = m.load_params("dnn_init").unwrap();
+        assert_eq!(dnn.len(), 6);
+        let w1 = &dnn[0];
+        assert_eq!(w1.name, "w1");
+        assert_eq!(w1.data.len(), w1.shape.iter().product::<usize>());
+        assert!(w1.data.iter().all(|x| x.is_finite()));
+        // He-init spread sanity
+        let mean: f32 =
+            w1.data.iter().sum::<f32>() / w1.data.len() as f32;
+        assert!(mean.abs() < 0.01);
+    }
+
+    #[test]
+    fn missing_module_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.module("nope").is_err());
+        assert!(m.constant("nope").is_err());
+        assert!(m.load_params("nope").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: manifest parsing and AOT-module execution (the bridge to
+//! the L2/L1 artifacts produced by `python/compile/aot.py`).
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{PjrtEngine, Tensor};
+pub use manifest::{DType, Manifest, ModuleSpec, NamedTensor};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$VELOC_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("VELOC_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

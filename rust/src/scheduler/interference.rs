@@ -1,0 +1,108 @@
+//! Interference micro-benchmark model (paper §2: "performance modeling
+//! using micro-benchmarks focused on interference patterns can be used to
+//! control the priority").
+//!
+//! Calibration runs a fixed compute kernel alone, then again while a
+//! competitor thread hammers memory — the measured slowdown is the
+//! machine's sensitivity to background I/O-ish work, and feeds the
+//! `PriorityGate` pacing.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Result of interference calibration.
+#[derive(Clone, Copy, Debug)]
+pub struct InterferenceModel {
+    /// Compute time alone (seconds) for the probe kernel.
+    pub baseline: f64,
+    /// Compute time under one background competitor.
+    pub contended: f64,
+}
+
+impl InterferenceModel {
+    /// slowdown >= 1: how much one background stream inflates foreground
+    /// compute on this host.
+    pub fn slowdown_factor(&self) -> f64 {
+        (self.contended / self.baseline).max(1.0)
+    }
+
+    /// A neutral model (no calibration run): mild assumed interference.
+    pub fn assumed() -> Self {
+        InterferenceModel {
+            baseline: 1.0,
+            contended: 1.15,
+        }
+    }
+
+    /// Run the calibration micro-benchmark (~tens of milliseconds).
+    pub fn calibrate() -> Self {
+        let probe = || {
+            // Memory-walking probe: sensitive to bandwidth competition.
+            let mut v = vec![1u64; 1 << 18];
+            let t0 = Instant::now();
+            for round in 0..20u64 {
+                for i in 0..v.len() {
+                    v[i] = v[i].wrapping_mul(6364136223846793005).wrapping_add(round);
+                }
+            }
+            std::hint::black_box(&v);
+            t0.elapsed().as_secs_f64()
+        };
+        let baseline = probe();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let competitor = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 1 << 22];
+            let mut x = 0u8;
+            while !stop2.load(Ordering::Relaxed) {
+                for b in buf.iter_mut() {
+                    *b = b.wrapping_add(x);
+                }
+                x = x.wrapping_add(1);
+            }
+            std::hint::black_box(&buf);
+        });
+        let contended = probe();
+        stop.store(true, Ordering::Relaxed);
+        let _ = competitor.join();
+        InterferenceModel {
+            baseline,
+            contended,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slowdown_at_least_one() {
+        let m = InterferenceModel {
+            baseline: 2.0,
+            contended: 1.5, // noise can make this < baseline
+        };
+        assert_eq!(m.slowdown_factor(), 1.0);
+        let m2 = InterferenceModel {
+            baseline: 1.0,
+            contended: 1.3,
+        };
+        assert!((m2.slowdown_factor() - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibration_runs_and_is_sane() {
+        let m = InterferenceModel::calibrate();
+        assert!(m.baseline > 0.0);
+        assert!(m.contended > 0.0);
+        let s = m.slowdown_factor();
+        assert!((1.0..10.0).contains(&s), "slowdown {s}");
+    }
+
+    #[test]
+    fn assumed_model_mild() {
+        let m = InterferenceModel::assumed();
+        assert!(m.slowdown_factor() < 1.5);
+    }
+}

@@ -1,0 +1,247 @@
+//! Background-operation scheduling — the paper's two complementary
+//! interference-mitigation strategies (§2, "Optimized Asynchronous
+//! Multi-Level Strategies"):
+//!
+//! 1. **Priority throttling** ([`PriorityGate`]): background flushes run at
+//!    low priority and self-throttle between chunks, giving the
+//!    application the large time slice. The throttle factor comes from the
+//!    interference micro-benchmark model ([`interference`]).
+//! 2. **Predictive scheduling** ([`PredictiveGate`]): for applications
+//!    with repetitive phase behaviour, a seq2seq model (paper ref [6],
+//!    AOT-compiled, executed via PJRT) forecasts near-future utilization
+//!    from a sliding window; flushes proceed only through predicted-idle
+//!    phases.
+
+pub mod interference;
+pub mod predictor;
+
+pub use interference::InterferenceModel;
+pub use predictor::{UtilizationMonitor, UtilizationPredictor};
+
+use crate::modules::FlushGate;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Scheduling policy for background flushes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerPolicy {
+    /// Flush at full speed (the interference baseline).
+    Greedy,
+    /// Low-priority throttled flush.
+    LowPriority,
+    /// Seq2seq-predicted idle-phase flush.
+    Predictive,
+}
+
+/// Greedy gate: no pacing.
+pub struct GreedyGate;
+
+impl FlushGate for GreedyGate {
+    fn before_chunk(&self, _bytes: usize) {}
+}
+
+/// Priority-throttled gate: sleep `throttle * service_time(chunk)` between
+/// chunks — the "nice" model where the OS hands the application the bulk
+/// of each time slice.
+pub struct PriorityGate {
+    /// Seconds of pause per byte flushed (derived from the interference
+    /// model and the flush bandwidth).
+    pause_per_byte: f64,
+}
+
+impl PriorityGate {
+    pub fn new(pause_per_byte: f64) -> Arc<Self> {
+        Arc::new(PriorityGate { pause_per_byte })
+    }
+
+    /// Derive pacing from the interference model: pause long enough that
+    /// the background stream consumes at most `budget` fraction of the
+    /// contended resource.
+    pub fn from_model(model: &InterferenceModel, flush_bw: f64, budget: f64) -> Arc<Self> {
+        let budget = budget.clamp(0.01, 1.0);
+        // service time per byte at full speed:
+        let service = 1.0 / flush_bw;
+        // slow the stream down to `budget` utilization:
+        let pause = service * (1.0 - budget) / budget * model.slowdown_factor();
+        Arc::new(PriorityGate {
+            pause_per_byte: pause,
+        })
+    }
+}
+
+impl FlushGate for PriorityGate {
+    fn before_chunk(&self, bytes: usize) {
+        let pause = self.pause_per_byte * bytes as f64;
+        if pause > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(pause.min(0.1)));
+        }
+    }
+}
+
+/// Predictive gate: consult the utilization forecast; while the
+/// application is predicted busy, wait (bounded) for the next idle phase.
+pub struct PredictiveGate {
+    predictor: Arc<UtilizationPredictor>,
+    monitor: Arc<UtilizationMonitor>,
+    /// Utilization above this counts as "busy".
+    busy_threshold: f32,
+    /// Poll interval while waiting for an idle phase.
+    poll: Duration,
+    /// Give up waiting after this long (flush must eventually proceed).
+    max_wait: Duration,
+}
+
+impl PredictiveGate {
+    pub fn new(
+        predictor: Arc<UtilizationPredictor>,
+        monitor: Arc<UtilizationMonitor>,
+        busy_threshold: f32,
+    ) -> Arc<Self> {
+        Arc::new(PredictiveGate {
+            predictor,
+            monitor,
+            busy_threshold,
+            poll: Duration::from_millis(2),
+            max_wait: Duration::from_millis(250),
+        })
+    }
+}
+
+impl FlushGate for PredictiveGate {
+    fn before_chunk(&self, _bytes: usize) {
+        let deadline = std::time::Instant::now() + self.max_wait;
+        loop {
+            // A quiescent application (no fresh samples) cannot be
+            // interfered with: flush freely.
+            match self.monitor.staleness() {
+                None => return,
+                Some(s) if s > Duration::from_millis(50) => return,
+                _ => {}
+            }
+            let window = self.monitor.window();
+            let forecast = self.predictor.predict(&window);
+            // Proceed when the immediate future looks idle.
+            let next = forecast.first().copied().unwrap_or(0.0);
+            if next <= self.busy_threshold || std::time::Instant::now() >= deadline {
+                return;
+            }
+            std::thread::sleep(self.poll);
+        }
+    }
+}
+
+/// Build the configured gate.
+pub fn build_gate(
+    policy: SchedulerPolicy,
+    model: &InterferenceModel,
+    predictor: Option<Arc<UtilizationPredictor>>,
+    monitor: Arc<UtilizationMonitor>,
+    flush_bw: f64,
+) -> Arc<dyn FlushGate> {
+    match policy {
+        SchedulerPolicy::Greedy => Arc::new(GreedyGate),
+        SchedulerPolicy::LowPriority => {
+            PriorityGate::from_model(model, flush_bw, 0.3)
+        }
+        SchedulerPolicy::Predictive => {
+            let p = predictor
+                .unwrap_or_else(|| Arc::new(UtilizationPredictor::heuristic()));
+            PredictiveGate::new(p, monitor, 0.5)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_gate_is_instant() {
+        let g = GreedyGate;
+        let t0 = std::time::Instant::now();
+        g.before_chunk(1 << 20);
+        assert!(t0.elapsed() < Duration::from_millis(2));
+    }
+
+    #[test]
+    fn priority_gate_paces() {
+        let g = PriorityGate::new(10e-9); // 10 ns per byte
+        let t0 = std::time::Instant::now();
+        g.before_chunk(1 << 20); // ~10.5 ms pause
+        let e = t0.elapsed();
+        assert!(e >= Duration::from_millis(8), "{e:?}");
+    }
+
+    #[test]
+    fn priority_gate_pause_capped() {
+        let g = PriorityGate::new(1.0); // absurd: 1 s/byte
+        let t0 = std::time::Instant::now();
+        g.before_chunk(1 << 20);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn predictive_gate_passes_when_idle() {
+        let monitor = UtilizationMonitor::new(32);
+        for _ in 0..32 {
+            monitor.record(0.1); // idle history
+        }
+        let g = PredictiveGate::new(
+            Arc::new(UtilizationPredictor::heuristic()),
+            monitor,
+            0.5,
+        );
+        let t0 = std::time::Instant::now();
+        g.before_chunk(1024);
+        assert!(t0.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn predictive_gate_waits_when_busy_then_gives_up() {
+        let monitor = UtilizationMonitor::new(32);
+        for _ in 0..32 {
+            monitor.record(0.95); // solid busy history
+        }
+        // Keep the monitor fresh (a live busy application) while the gate
+        // deliberates.
+        let m2 = Arc::clone(&monitor);
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let s2 = Arc::clone(&stop);
+        let feeder = std::thread::spawn(move || {
+            while !s2.load(std::sync::atomic::Ordering::Relaxed) {
+                m2.record(0.95);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let g = PredictiveGate::new(
+            Arc::new(UtilizationPredictor::heuristic()),
+            monitor,
+            0.5,
+        );
+        let t0 = std::time::Instant::now();
+        g.before_chunk(1024);
+        let e = t0.elapsed();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        feeder.join().unwrap();
+        // waited up to max_wait, then proceeded
+        assert!(e >= Duration::from_millis(200), "{e:?}");
+        assert!(e < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn predictive_gate_ignores_stale_busy_history() {
+        let monitor = UtilizationMonitor::new(32);
+        for _ in 0..32 {
+            monitor.record(0.95);
+        }
+        std::thread::sleep(Duration::from_millis(60)); // app went quiet
+        let g = PredictiveGate::new(
+            Arc::new(UtilizationPredictor::heuristic()),
+            monitor,
+            0.5,
+        );
+        let t0 = std::time::Instant::now();
+        g.before_chunk(1024);
+        assert!(t0.elapsed() < Duration::from_millis(20));
+    }
+}

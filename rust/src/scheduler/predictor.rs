@@ -1,0 +1,233 @@
+//! Application-behaviour prediction (paper ref [6]): a sliding window of
+//! observed resource utilization feeds a seq2seq GRU (AOT-compiled at
+//! build time, weights trained in `python/compile/aot.py` on synthetic
+//! phase traces) that forecasts the next phase. A heuristic fallback
+//! (persistence forecast) covers kernel-less configurations.
+
+use crate::runtime::{PjrtEngine, Tensor};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// Sliding window of recent utilization samples in [0, 1], fed by the
+/// application harness after every iteration.
+pub struct UtilizationMonitor {
+    window: Mutex<VecDeque<f32>>,
+    capacity: usize,
+    last_update: Mutex<Option<std::time::Instant>>,
+}
+
+impl UtilizationMonitor {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        Arc::new(UtilizationMonitor {
+            window: Mutex::new(VecDeque::with_capacity(capacity)),
+            capacity,
+            last_update: Mutex::new(None),
+        })
+    }
+
+    pub fn record(&self, util: f32) {
+        let mut w = self.window.lock().unwrap();
+        if w.len() == self.capacity {
+            w.pop_front();
+        }
+        w.push_back(util.clamp(0.0, 1.0));
+        *self.last_update.lock().unwrap() = Some(std::time::Instant::now());
+    }
+
+    /// Time since the last sample (None = never reported). A stale monitor
+    /// means the application stopped reporting — i.e. it is quiescent and
+    /// background work cannot interfere with it.
+    pub fn staleness(&self) -> Option<std::time::Duration> {
+        self.last_update.lock().unwrap().map(|t| t.elapsed())
+    }
+
+    /// Current window, front-padded with the oldest sample (or 0.5) to
+    /// always return `capacity` values.
+    pub fn window(&self) -> Vec<f32> {
+        let w = self.window.lock().unwrap();
+        let pad = w.front().copied().unwrap_or(0.5);
+        let mut out = vec![pad; self.capacity - w.len()];
+        out.extend(w.iter().copied());
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+enum Backend {
+    /// seq2seq GRU through PJRT (window/horizon from the manifest).
+    Kernel {
+        engine: Arc<PjrtEngine>,
+        params: Vec<Tensor>,
+        window: usize,
+        horizon: usize,
+    },
+    /// Persistence forecast: tomorrow looks like the recent average.
+    Heuristic,
+}
+
+/// Utilization forecaster.
+pub struct UtilizationPredictor {
+    backend: Backend,
+}
+
+impl UtilizationPredictor {
+    /// Kernel-backed predictor with the build-time-trained weights.
+    pub fn from_engine(engine: Arc<PjrtEngine>) -> Result<Self> {
+        let params: Vec<Tensor> = engine
+            .manifest()
+            .load_params("seq2seq")?
+            .iter()
+            .map(Tensor::from)
+            .collect();
+        let window = engine.manifest().constant("seq_window")?;
+        let horizon = engine.manifest().constant("seq_horizon")?;
+        Ok(UtilizationPredictor {
+            backend: Backend::Kernel {
+                engine,
+                params,
+                window,
+                horizon,
+            },
+        })
+    }
+
+    pub fn heuristic() -> Self {
+        UtilizationPredictor {
+            backend: Backend::Heuristic,
+        }
+    }
+
+    pub fn is_kernel_backed(&self) -> bool {
+        matches!(self.backend, Backend::Kernel { .. })
+    }
+
+    /// Forecast the next phase's utilization from a window of samples
+    /// (values in [0,1]; the window is resampled to the model's length).
+    pub fn predict(&self, window: &[f32]) -> Vec<f32> {
+        match &self.backend {
+            Backend::Heuristic => {
+                let n = window.len().min(8).max(1);
+                let recent = &window[window.len() - n..];
+                let mean = recent.iter().sum::<f32>() / n as f32;
+                vec![mean; 8]
+            }
+            Backend::Kernel {
+                engine,
+                params,
+                window: wlen,
+                horizon,
+            } => {
+                let w = resample(window, *wlen);
+                let mut args = params.clone();
+                args.push(Tensor::f32(&[1, *wlen], w));
+                match engine.run("seq2seq_fwd", &args) {
+                    Ok(out) => out[0].as_f32().map(|s| s.to_vec()).unwrap_or_else(|_| vec![0.5; *horizon]),
+                    Err(_) => vec![0.5; *horizon],
+                }
+            }
+        }
+    }
+}
+
+/// Linear resample of `xs` to length `n` (pad with edge value if short).
+fn resample(xs: &[f32], n: usize) -> Vec<f32> {
+    if xs.is_empty() {
+        return vec![0.5; n];
+    }
+    if xs.len() == n {
+        return xs.to_vec();
+    }
+    if xs.len() < n {
+        let mut out = vec![xs[0]; n - xs.len()];
+        out.extend_from_slice(xs);
+        return out;
+    }
+    // downsample by averaging buckets
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let lo = i * xs.len() / n;
+        let hi = ((i + 1) * xs.len() / n).max(lo + 1);
+        let mean = xs[lo..hi].iter().sum::<f32>() / (hi - lo) as f32;
+        out.push(mean);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monitor_ring_semantics() {
+        let m = UtilizationMonitor::new(4);
+        assert!(m.is_empty());
+        for i in 0..6 {
+            m.record(i as f32 / 10.0);
+        }
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.window(), vec![0.2, 0.3, 0.4, 0.5]);
+    }
+
+    #[test]
+    fn monitor_pads_short_windows() {
+        let m = UtilizationMonitor::new(4);
+        m.record(0.8);
+        assert_eq!(m.window(), vec![0.8, 0.8, 0.8, 0.8]);
+    }
+
+    #[test]
+    fn monitor_clamps() {
+        let m = UtilizationMonitor::new(2);
+        m.record(7.0);
+        m.record(-3.0);
+        assert_eq!(m.window(), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn heuristic_tracks_recent_mean() {
+        let p = UtilizationPredictor::heuristic();
+        let f = p.predict(&[0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        assert!(f[0] > 0.7);
+        let f2 = p.predict(&[0.1; 16]);
+        assert!((f2[0] - 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn resample_shapes() {
+        assert_eq!(resample(&[1.0, 2.0], 4), vec![1.0, 1.0, 1.0, 2.0]);
+        assert_eq!(resample(&[1.0; 8], 8).len(), 8);
+        let down = resample(&(0..16).map(|i| i as f32).collect::<Vec<_>>(), 4);
+        assert_eq!(down.len(), 4);
+        assert!(down[0] < down[3]);
+        assert_eq!(resample(&[], 3), vec![0.5; 3]);
+    }
+
+    #[test]
+    fn kernel_predictor_distinguishes_phases() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let eng = PjrtEngine::load(&dir).unwrap();
+        let p = UtilizationPredictor::from_engine(eng).unwrap();
+        assert!(p.is_kernel_backed());
+        let busy = p.predict(&[0.85; 32]);
+        let idle = p.predict(&[0.15; 32]);
+        assert_eq!(busy.len(), 8);
+        // The GRU was trained on phase traces; a solidly busy history must
+        // forecast higher utilization than a solidly idle one.
+        let mb = busy.iter().sum::<f32>() / busy.len() as f32;
+        let mi = idle.iter().sum::<f32>() / idle.len() as f32;
+        assert!(mb > mi, "busy {mb} vs idle {mi}");
+    }
+}

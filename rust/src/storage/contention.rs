@@ -1,0 +1,134 @@
+//! Shared-bandwidth contention model.
+//!
+//! Shared tiers (PFS, burst buffer, KV store) fair-share their aggregate
+//! bandwidth across concurrent transfers — the effect that makes direct
+//! PFS checkpointing collapse under write concurrency (paper §1: "high
+//! write concurrency that overwhelms the I/O bandwidth").
+//!
+//! Model: a transfer of `B` bytes that observes `n` concurrent transfers
+//! (including itself) is charged `latency + B / (bw / n)`. This is the
+//! fair-share-at-start approximation of progressive filling: exact for
+//! synchronized bursts (the checkpoint pattern we care about) and within a
+//! small factor for staggered arrivals. The DES in `interval::simulator`
+//! uses the same formula, so real-runtime and extrapolated numbers agree.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+#[derive(Debug)]
+pub struct BandwidthPool {
+    write_bw: f64,
+    read_bw: f64,
+    active: AtomicUsize,
+}
+
+impl BandwidthPool {
+    pub fn new(write_bw: f64, read_bw: f64) -> Self {
+        assert!(write_bw > 0.0 && read_bw > 0.0);
+        BandwidthPool {
+            write_bw,
+            read_bw,
+            active: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    fn charge(&self, bytes: u64, latency: Duration, bw: f64, shared: bool) -> Duration {
+        let n = self.active.fetch_add(1, Ordering::SeqCst) + 1;
+        let effective = if shared { bw / n as f64 } else { bw };
+        let secs = latency.as_secs_f64() + bytes as f64 / effective;
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        Duration::from_secs_f64(secs)
+    }
+
+    /// Model a write; returns the charged duration.
+    pub fn write(&self, bytes: u64, latency: Duration, shared: bool) -> Duration {
+        self.charge(bytes, latency, self.write_bw, shared)
+    }
+
+    pub fn read(&self, bytes: u64, latency: Duration, shared: bool) -> Duration {
+        self.charge(bytes, latency, self.read_bw, shared)
+    }
+
+    /// RAII guard marking a long-lived transfer as active so that *other*
+    /// transfers see the contention (used by the async flush path, whose
+    /// transfers span many model steps).
+    pub fn hold(&self) -> ActiveGuard<'_> {
+        self.active.fetch_add(1, Ordering::SeqCst);
+        ActiveGuard { pool: self }
+    }
+}
+
+pub struct ActiveGuard<'a> {
+    pool: &'a BandwidthPool,
+}
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.pool.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Closed-form fair-share duration for `writers` synchronized writers each
+/// moving `bytes` over a `bw` pool — used by benches and the DES to compute
+/// expected values without touching a live pool.
+pub fn fair_share_secs(bytes: u64, bw: f64, writers: usize, latency: Duration) -> f64 {
+    latency.as_secs_f64() + bytes as f64 * writers as f64 / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unshared_ignores_concurrency() {
+        let p = BandwidthPool::new(1e9, 1e9);
+        let _g1 = p.hold();
+        let _g2 = p.hold();
+        let d = p.write(1_000_000, Duration::ZERO, false);
+        assert!((d.as_secs_f64() - 1e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shared_divides_bandwidth() {
+        let p = BandwidthPool::new(1e9, 1e9);
+        let base = p.write(1_000_000, Duration::ZERO, true).as_secs_f64();
+        let _g1 = p.hold();
+        let _g2 = p.hold();
+        let contended = p.write(1_000_000, Duration::ZERO, true).as_secs_f64();
+        assert!((contended / base - 3.0).abs() < 0.01, "{contended} vs {base}");
+    }
+
+    #[test]
+    fn guard_releases_on_drop() {
+        let p = BandwidthPool::new(1e9, 1e9);
+        {
+            let _g = p.hold();
+            assert_eq!(p.active(), 1);
+        }
+        assert_eq!(p.active(), 0);
+    }
+
+    #[test]
+    fn latency_added() {
+        let p = BandwidthPool::new(1e9, 1e9);
+        let d = p.write(0, Duration::from_millis(5), true);
+        assert!((d.as_secs_f64() - 5e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fair_share_closed_form() {
+        let s = fair_share_secs(1_000_000, 1e9, 4, Duration::ZERO);
+        assert!((s - 4e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn read_uses_read_bw() {
+        let p = BandwidthPool::new(1e9, 2e9);
+        let d = p.read(2_000_000, Duration::ZERO, false);
+        assert!((d.as_secs_f64() - 1e-3).abs() < 1e-6);
+    }
+}

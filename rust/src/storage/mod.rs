@@ -1,0 +1,240 @@
+//! Heterogeneous storage substrate: tier models, contention, presets and
+//! the per-cluster [`StorageFabric`].
+
+pub mod contention;
+pub mod presets;
+pub mod tier;
+
+pub use tier::{FailureDomain, StorageTier, TierKind, TierSpec, TimeMode, TransferStat};
+
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Configuration for building a fabric; all bandwidths in bytes/s.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    pub nodes: usize,
+    /// Per-node DRAM staging capacity.
+    pub dram_capacity: u64,
+    pub nvme_capacity: u64,
+    pub ssd_capacity: u64,
+    /// Whether nodes have the NVMe / SSD levels at all (heterogeneity knob).
+    pub with_nvme: bool,
+    pub with_ssd: bool,
+    pub with_burst_buffer: bool,
+    pub with_kv: bool,
+    pub pfs_bw: f64,
+    pub bb_bw: f64,
+    pub kv_bw: f64,
+    pub time_mode: TimeMode,
+    /// When set, the PFS tier is backed by a real directory (tmpfs) so that
+    /// checkpoints genuinely survive the process; otherwise in-memory.
+    pub pfs_dir: Option<PathBuf>,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            nodes: 4,
+            dram_capacity: 1 << 30,
+            nvme_capacity: 8 << 30,
+            ssd_capacity: 32 << 30,
+            with_nvme: true,
+            with_ssd: true,
+            with_burst_buffer: false,
+            with_kv: false,
+            pfs_bw: 5.0e9,
+            bb_bw: 20.0e9,
+            kv_bw: 10.0e9,
+            time_mode: TimeMode::Model,
+            pfs_dir: None,
+        }
+    }
+}
+
+/// All storage of one simulated cluster: node-local tier lists (fastest
+/// first) plus the shared system tiers.
+pub struct StorageFabric {
+    /// `local[node]` = ordered local tiers of that node (fast -> slow).
+    local: Vec<Vec<Arc<StorageTier>>>,
+    burst_buffer: Option<Arc<StorageTier>>,
+    pfs: Arc<StorageTier>,
+    kv: Option<Arc<StorageTier>>,
+}
+
+impl StorageFabric {
+    pub fn build(cfg: &FabricConfig) -> Result<Self> {
+        let mut local = Vec::with_capacity(cfg.nodes);
+        for _ in 0..cfg.nodes {
+            let mut tiers: Vec<Arc<StorageTier>> = vec![StorageTier::memory(
+                presets::dram(cfg.dram_capacity),
+                cfg.time_mode,
+            )];
+            if cfg.with_nvme {
+                tiers.push(StorageTier::memory(
+                    presets::nvme(cfg.nvme_capacity),
+                    cfg.time_mode,
+                ));
+            }
+            if cfg.with_ssd {
+                tiers.push(StorageTier::memory(
+                    presets::ssd(cfg.ssd_capacity),
+                    cfg.time_mode,
+                ));
+            }
+            local.push(tiers);
+        }
+        let burst_buffer = if cfg.with_burst_buffer {
+            Some(StorageTier::memory(
+                presets::burst_buffer(u64::MAX / 2, cfg.bb_bw),
+                cfg.time_mode,
+            ))
+        } else {
+            None
+        };
+        let pfs_spec = presets::pfs(u64::MAX / 2, cfg.pfs_bw);
+        let pfs = match &cfg.pfs_dir {
+            Some(dir) => StorageTier::dir(pfs_spec, dir.clone(), cfg.time_mode)?,
+            None => StorageTier::memory(pfs_spec, cfg.time_mode),
+        };
+        let kv = if cfg.with_kv {
+            Some(StorageTier::memory(
+                presets::kv_store(u64::MAX / 2, cfg.kv_bw),
+                cfg.time_mode,
+            ))
+        } else {
+            None
+        };
+        Ok(StorageFabric {
+            local,
+            burst_buffer,
+            pfs,
+            kv,
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.local.len()
+    }
+
+    /// Ordered local tiers (fastest first) of a node.
+    pub fn local_tiers(&self, node: usize) -> &[Arc<StorageTier>] {
+        &self.local[node]
+    }
+
+    pub fn pfs(&self) -> &Arc<StorageTier> {
+        &self.pfs
+    }
+
+    pub fn burst_buffer(&self) -> Option<&Arc<StorageTier>> {
+        self.burst_buffer.as_ref()
+    }
+
+    pub fn kv(&self) -> Option<&Arc<StorageTier>> {
+        self.kv.as_ref()
+    }
+
+    /// Apply a node failure: wipe every tier whose failure domain is the
+    /// node (paper §2: lighter levels do not survive their domain).
+    pub fn fail_node(&self, node: usize) {
+        for t in &self.local[node] {
+            if t.spec().failure_domain == FailureDomain::Node {
+                t.wipe();
+            }
+        }
+    }
+
+    /// Apply a full-system failure: everything non-persistent is lost.
+    pub fn fail_system(&self) {
+        for node in &self.local {
+            for t in node {
+                if t.spec().failure_domain != FailureDomain::Persistent {
+                    t.wipe();
+                }
+            }
+        }
+        if let Some(bb) = &self.burst_buffer {
+            if bb.spec().failure_domain != FailureDomain::Persistent {
+                bb.wipe();
+            }
+        }
+    }
+
+    /// Total bytes held across all tiers (diagnostics).
+    pub fn total_used(&self) -> u64 {
+        let mut sum: u64 = self
+            .local
+            .iter()
+            .flatten()
+            .map(|t| t.used_bytes())
+            .sum();
+        sum += self.pfs.used_bytes();
+        if let Some(bb) = &self.burst_buffer {
+            sum += bb.used_bytes();
+        }
+        if let Some(kv) = &self.kv {
+            sum += kv.used_bytes();
+        }
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> StorageFabric {
+        StorageFabric::build(&FabricConfig {
+            nodes: 2,
+            with_kv: true,
+            with_burst_buffer: true,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn builds_expected_topology() {
+        let f = fabric();
+        assert_eq!(f.nodes(), 2);
+        assert_eq!(f.local_tiers(0).len(), 3); // dram, nvme, ssd
+        assert_eq!(f.local_tiers(0)[0].kind(), TierKind::Dram);
+        assert!(f.kv().is_some());
+        assert!(f.burst_buffer().is_some());
+    }
+
+    #[test]
+    fn node_failure_wipes_local_only() {
+        let f = fabric();
+        f.local_tiers(0)[0].put("x", b"1").unwrap();
+        f.local_tiers(1)[0].put("y", b"2").unwrap();
+        f.pfs().put("z", b"3").unwrap();
+        f.fail_node(0);
+        assert!(!f.local_tiers(0)[0].exists("x"));
+        assert!(f.local_tiers(1)[0].exists("y"));
+        assert!(f.pfs().exists("z"));
+    }
+
+    #[test]
+    fn system_failure_spares_persistent() {
+        let f = fabric();
+        f.local_tiers(0)[0].put("x", b"1").unwrap();
+        f.burst_buffer().unwrap().put("b", b"2").unwrap();
+        f.pfs().put("z", b"3").unwrap();
+        f.kv().unwrap().put("k", b"4").unwrap();
+        f.fail_system();
+        assert!(!f.local_tiers(0)[0].exists("x"));
+        assert!(!f.burst_buffer().unwrap().exists("b"));
+        assert!(f.pfs().exists("z"));
+        assert!(f.kv().unwrap().exists("k"));
+    }
+
+    #[test]
+    fn total_used_accounts_everything() {
+        let f = fabric();
+        f.local_tiers(0)[0].put("x", &vec![0u8; 10]).unwrap();
+        f.pfs().put("z", &vec![0u8; 5]).unwrap();
+        assert_eq!(f.total_used(), 15);
+    }
+}

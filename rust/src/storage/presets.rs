@@ -1,0 +1,124 @@
+//! Tier presets loosely calibrated to published Summit-class numbers
+//! (scaled; see DESIGN.md §Reproduction bands / substitutions). Absolute
+//! values are not the point — the *ratios* between levels are what drive
+//! VeloC's behaviour, and those follow the machines the paper names:
+//! DRAM >> NVMe >> SSD >> burst buffer > PFS-per-node under contention.
+
+use super::tier::{FailureDomain, TierKind, TierSpec};
+use std::time::Duration;
+
+/// Node-local DRAM staging area (the level-1 "in-memory checkpoint" of the
+/// 224 TB/s Summit headline: ~10 GB/s memcpy-class bandwidth per rank).
+pub fn dram(capacity: u64) -> TierSpec {
+    TierSpec {
+        kind: TierKind::Dram,
+        write_bw: 10.0e9,
+        read_bw: 12.0e9,
+        latency: Duration::from_micros(1),
+        capacity,
+        shared: false,
+        failure_domain: FailureDomain::Node,
+    }
+}
+
+/// Node-local NVMe (Summit's 1.6 TB Samsung drives: ~2.1 GB/s write).
+/// Shared among the ranks of one node.
+pub fn nvme(capacity: u64) -> TierSpec {
+    TierSpec {
+        kind: TierKind::Nvme,
+        write_bw: 2.1e9,
+        read_bw: 5.5e9,
+        latency: Duration::from_micros(80),
+        capacity,
+        shared: true,
+        failure_domain: FailureDomain::Node,
+    }
+}
+
+/// Node-local SATA SSD class device (the "slower but bigger" local level
+/// that makes tier selection non-obvious under concurrency, paper [4]).
+pub fn ssd(capacity: u64) -> TierSpec {
+    TierSpec {
+        kind: TierKind::Ssd,
+        write_bw: 0.5e9,
+        read_bw: 1.0e9,
+        latency: Duration::from_micros(120),
+        capacity,
+        shared: true,
+        failure_domain: FailureDomain::Node,
+    }
+}
+
+/// Shared burst buffer (aggregate bandwidth across the whole allocation).
+pub fn burst_buffer(capacity: u64, aggregate_bw: f64) -> TierSpec {
+    TierSpec {
+        kind: TierKind::BurstBuffer,
+        write_bw: aggregate_bw,
+        read_bw: aggregate_bw * 1.2,
+        latency: Duration::from_micros(250),
+        capacity,
+        shared: true,
+        failure_domain: FailureDomain::System,
+    }
+}
+
+/// Lustre-like parallel file system: persistent, aggregate-bandwidth
+/// shared by every rank, high per-op latency.
+pub fn pfs(capacity: u64, aggregate_bw: f64) -> TierSpec {
+    TierSpec {
+        kind: TierKind::Pfs,
+        write_bw: aggregate_bw,
+        read_bw: aggregate_bw * 1.5,
+        latency: Duration::from_millis(2),
+        capacity,
+        shared: true,
+        failure_domain: FailureDomain::Persistent,
+    }
+}
+
+/// DAOS-like key-value object store (paper §4): persistent like the PFS
+/// but with much lower per-op latency and better small-object behaviour.
+pub fn kv_store(capacity: u64, aggregate_bw: f64) -> TierSpec {
+    TierSpec {
+        kind: TierKind::KvStore,
+        write_bw: aggregate_bw,
+        read_bw: aggregate_bw * 1.3,
+        latency: Duration::from_micros(30),
+        capacity,
+        shared: true,
+        failure_domain: FailureDomain::Persistent,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_ordering_holds() {
+        // The defining property: each level is slower than the previous.
+        let d = dram(1);
+        let n = nvme(1);
+        let s = ssd(1);
+        assert!(d.write_bw > n.write_bw);
+        assert!(n.write_bw > s.write_bw);
+        assert!(d.latency < n.latency);
+        assert!(n.latency < s.latency);
+    }
+
+    #[test]
+    fn persistency_domains() {
+        assert_eq!(dram(1).failure_domain, FailureDomain::Node);
+        assert_eq!(pfs(1, 1e9).failure_domain, FailureDomain::Persistent);
+        assert_eq!(kv_store(1, 1e9).failure_domain, FailureDomain::Persistent);
+        assert_eq!(
+            burst_buffer(1, 1e9).failure_domain,
+            FailureDomain::System
+        );
+    }
+
+    #[test]
+    fn kv_latency_beats_pfs() {
+        assert!(kv_store(1, 1e9).latency < pfs(1, 1e9).latency);
+    }
+}

@@ -1,0 +1,486 @@
+//! Heterogeneous storage tier model.
+//!
+//! A [`StorageTier`] couples a *performance model* (bandwidth, latency,
+//! capacity, sharing) with a *backing store* (in-memory map or a real
+//! directory, e.g. on tmpfs). The paper's observation that the storage stack
+//! is heterogeneous — deep node-local memory hierarchies plus burst buffers,
+//! key-value stores and parallel file systems — maps to one `TierSpec` per
+//! level; VeloC's modules consult the specs instead of hard-coding vendor
+//! APIs (the portability argument of §1).
+//!
+//! Time accounting: every transfer returns a *modeled* duration computed
+//! from the spec (fair-shared for `shared` tiers, see
+//! [`super::contention::BandwidthPool`]). Depending on the stack's
+//! [`TimeMode`] the call may also sleep a scaled amount of that duration to
+//! emulate the tier in wall-clock time (examples use a small scale; unit
+//! tests use pure modeling).
+
+use crate::storage::contention::BandwidthPool;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Where a tier sits in the hierarchy and what failure takes it out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TierKind {
+    /// Node-local DRAM (fastest, lost on node failure).
+    Dram,
+    /// Node-local NVMe.
+    Nvme,
+    /// Node-local SATA SSD.
+    Ssd,
+    /// Shared burst buffer.
+    BurstBuffer,
+    /// Parallel file system (Lustre-like, shared, persistent).
+    Pfs,
+    /// Key-value object store (DAOS-like, shared, persistent).
+    KvStore,
+}
+
+impl TierKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TierKind::Dram => "dram",
+            TierKind::Nvme => "nvme",
+            TierKind::Ssd => "ssd",
+            TierKind::BurstBuffer => "burst-buffer",
+            TierKind::Pfs => "pfs",
+            TierKind::KvStore => "kv-store",
+        }
+    }
+}
+
+/// What survives which failure (paper §2: "lighter resilience levels").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureDomain {
+    /// Contents lost when the owning node fails.
+    Node,
+    /// Contents survive node failures, lost only on full-system failure.
+    System,
+    /// Persistent: survives everything.
+    Persistent,
+}
+
+/// Performance/persistency description of one tier.
+#[derive(Clone, Debug)]
+pub struct TierSpec {
+    pub kind: TierKind,
+    /// Sustained write bandwidth in bytes/s (per writer for local tiers,
+    /// aggregate for shared tiers).
+    pub write_bw: f64,
+    /// Sustained read bandwidth in bytes/s.
+    pub read_bw: f64,
+    /// Per-operation latency.
+    pub latency: Duration,
+    /// Usable capacity in bytes.
+    pub capacity: u64,
+    /// Shared across ranks (bandwidth fair-shared) or per-rank dedicated.
+    pub shared: bool,
+    pub failure_domain: FailureDomain,
+}
+
+/// How modeled durations translate to wall-clock time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TimeMode {
+    /// Account modeled durations only; never sleep (unit tests, DES).
+    Model,
+    /// Sleep `modeled * scale` (examples/benches; scale << 1 compresses
+    /// minutes of I/O into milliseconds while preserving ratios).
+    Emulate { scale: f64 },
+}
+
+impl TimeMode {
+    fn apply(&self, modeled: Duration) {
+        if let TimeMode::Emulate { scale } = self {
+            let d = modeled.mul_f64(*scale);
+            if d > Duration::ZERO {
+                std::thread::sleep(d);
+            }
+        }
+    }
+}
+
+/// Result of one put/get.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferStat {
+    pub bytes: u64,
+    /// Duration predicted by the tier model (fair-share aware).
+    pub modeled: Duration,
+}
+
+impl TransferStat {
+    pub fn throughput_bps(&self) -> f64 {
+        self.bytes as f64 / self.modeled.as_secs_f64().max(1e-12)
+    }
+}
+
+enum Backing {
+    Memory(Mutex<HashMap<String, Arc<Vec<u8>>>>),
+    Dir(PathBuf),
+}
+
+/// One storage level: performance model + backing store.
+pub struct StorageTier {
+    spec: TierSpec,
+    backing: Backing,
+    pool: BandwidthPool,
+    time_mode: TimeMode,
+    used: AtomicU64,
+    puts: AtomicU64,
+    gets: AtomicU64,
+}
+
+fn sanitize_key(key: &str) -> String {
+    key.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+        .collect()
+}
+
+impl StorageTier {
+    /// In-memory backed tier (DRAM levels, simulated remote stores).
+    pub fn memory(spec: TierSpec, time_mode: TimeMode) -> Arc<Self> {
+        let pool = BandwidthPool::new(spec.write_bw, spec.read_bw);
+        Arc::new(StorageTier {
+            spec,
+            backing: Backing::Memory(Mutex::new(HashMap::new())),
+            pool,
+            time_mode,
+            used: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+            gets: AtomicU64::new(0),
+        })
+    }
+
+    /// Directory-backed tier (real files, e.g. tmpfs or scratch).
+    pub fn dir(spec: TierSpec, root: PathBuf, time_mode: TimeMode) -> Result<Arc<Self>> {
+        std::fs::create_dir_all(&root)?;
+        let pool = BandwidthPool::new(spec.write_bw, spec.read_bw);
+        Ok(Arc::new(StorageTier {
+            spec,
+            backing: Backing::Dir(root),
+            pool,
+            time_mode,
+            used: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+            gets: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn spec(&self) -> &TierSpec {
+        &self.spec
+    }
+
+    pub fn kind(&self) -> TierKind {
+        self.spec.kind
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    pub fn put_count(&self) -> u64 {
+        self.puts.load(Ordering::Relaxed)
+    }
+
+    pub fn get_count(&self) -> u64 {
+        self.gets.load(Ordering::Relaxed)
+    }
+
+    /// Currently active transfers (writers+readers) — the signal the
+    /// producer-consumer-aware tier selection policy uses (paper [4]).
+    pub fn active_transfers(&self) -> usize {
+        self.pool.active()
+    }
+
+    /// Mark a long-lived transfer (e.g. an in-flight flush readback) as
+    /// active on this tier so other transfers observe the contention.
+    pub fn hold_transfer(&self) -> crate::storage::contention::ActiveGuard<'_> {
+        self.pool.hold()
+    }
+
+    /// Store an object without copying when the backing is in-memory: the
+    /// tier keeps a reference to the shared buffer (§Perf: saves one full
+    /// memcpy per resilience level on the capture path; the VCKP container
+    /// is immutable once encoded, so sharing is safe). Directory backings
+    /// still write the bytes out.
+    pub fn put_shared(&self, key: &str, data: &Arc<Vec<u8>>) -> Result<TransferStat> {
+        let len = data.len() as u64;
+        let prev = self.used.fetch_add(len, Ordering::SeqCst);
+        if prev + len > self.spec.capacity {
+            self.used.fetch_sub(len, Ordering::SeqCst);
+            bail!(
+                "TierFull: {} over capacity ({} + {} > {})",
+                self.spec.kind.name(),
+                prev,
+                len,
+                self.spec.capacity
+            );
+        }
+        let modeled = self.pool.write(len, self.spec.latency, self.spec.shared);
+        match &self.backing {
+            Backing::Memory(m) => {
+                let old = m
+                    .lock()
+                    .unwrap()
+                    .insert(key.to_string(), Arc::clone(data));
+                if let Some(old) = old {
+                    self.used.fetch_sub(old.len() as u64, Ordering::SeqCst);
+                }
+            }
+            Backing::Dir(root) => {
+                let path = root.join(sanitize_key(key));
+                if let Ok(meta) = std::fs::metadata(&path) {
+                    self.used.fetch_sub(meta.len(), Ordering::SeqCst);
+                }
+                let tmp = root.join(format!(".{}.tmp", sanitize_key(key)));
+                std::fs::write(&tmp, data.as_slice())?;
+                std::fs::rename(&tmp, &path)?;
+            }
+        }
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.time_mode.apply(modeled);
+        Ok(TransferStat {
+            bytes: len,
+            modeled,
+        })
+    }
+
+    /// Store an object. Fails with `TierFull` if capacity would be exceeded.
+    pub fn put(&self, key: &str, data: &[u8]) -> Result<TransferStat> {
+        let len = data.len() as u64;
+        // Reserve capacity first (subtract on failure).
+        let prev = self.used.fetch_add(len, Ordering::SeqCst);
+        if prev + len > self.spec.capacity {
+            self.used.fetch_sub(len, Ordering::SeqCst);
+            bail!(
+                "TierFull: {} over capacity ({} + {} > {})",
+                self.spec.kind.name(),
+                prev,
+                len,
+                self.spec.capacity
+            );
+        }
+        let modeled = self.pool.write(len, self.spec.latency, self.spec.shared);
+        match &self.backing {
+            Backing::Memory(m) => {
+                let old = m
+                    .lock()
+                    .unwrap()
+                    .insert(key.to_string(), Arc::new(data.to_vec()));
+                if let Some(old) = old {
+                    self.used.fetch_sub(old.len() as u64, Ordering::SeqCst);
+                }
+            }
+            Backing::Dir(root) => {
+                let path = root.join(sanitize_key(key));
+                if let Ok(meta) = std::fs::metadata(&path) {
+                    self.used.fetch_sub(meta.len(), Ordering::SeqCst);
+                }
+                let tmp = root.join(format!(".{}.tmp", sanitize_key(key)));
+                std::fs::write(&tmp, data)?;
+                std::fs::rename(&tmp, &path)?; // atomic publish
+            }
+        }
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.time_mode.apply(modeled);
+        Ok(TransferStat {
+            bytes: len,
+            modeled,
+        })
+    }
+
+    /// Fetch an object (None if missing).
+    pub fn get(&self, key: &str) -> Option<(Vec<u8>, TransferStat)> {
+        let data: Vec<u8> = match &self.backing {
+            Backing::Memory(m) => {
+                let map = m.lock().unwrap();
+                map.get(key).map(|a| a.as_ref().clone())?
+            }
+            Backing::Dir(root) => {
+                std::fs::read(root.join(sanitize_key(key))).ok()?
+            }
+        };
+        let modeled =
+            self.pool
+                .read(data.len() as u64, self.spec.latency, self.spec.shared);
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.time_mode.apply(modeled);
+        let stat = TransferStat {
+            bytes: data.len() as u64,
+            modeled,
+        };
+        Some((data, stat))
+    }
+
+    pub fn exists(&self, key: &str) -> bool {
+        match &self.backing {
+            Backing::Memory(m) => m.lock().unwrap().contains_key(key),
+            Backing::Dir(root) => root.join(sanitize_key(key)).exists(),
+        }
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        match &self.backing {
+            Backing::Memory(m) => {
+                if let Some(old) = m.lock().unwrap().remove(key) {
+                    self.used.fetch_sub(old.len() as u64, Ordering::SeqCst);
+                    true
+                } else {
+                    false
+                }
+            }
+            Backing::Dir(root) => {
+                let path = root.join(sanitize_key(key));
+                if let Ok(meta) = std::fs::metadata(&path) {
+                    if std::fs::remove_file(&path).is_ok() {
+                        self.used.fetch_sub(meta.len(), Ordering::SeqCst);
+                        return true;
+                    }
+                }
+                false
+            }
+        }
+    }
+
+    /// List stored keys with the given prefix (memory backing returns exact
+    /// keys; dir backing returns sanitized names, which match for the
+    /// key alphabet VeloC uses).
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        match &self.backing {
+            Backing::Memory(m) => {
+                let mut v: Vec<String> = m
+                    .lock()
+                    .unwrap()
+                    .keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned()
+                    .collect();
+                v.sort();
+                v
+            }
+            Backing::Dir(root) => {
+                let sp = sanitize_key(prefix);
+                let mut v: Vec<String> = std::fs::read_dir(root)
+                    .map(|rd| {
+                        rd.filter_map(|e| e.ok())
+                            .filter_map(|e| e.file_name().into_string().ok())
+                            .filter(|n| n.starts_with(&sp) && !n.starts_with('.'))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                v.sort();
+                v
+            }
+        }
+    }
+
+    /// Drop all contents — models loss of the tier's failure domain
+    /// (node crash wipes DRAM/NVMe tiers of that node).
+    pub fn wipe(&self) {
+        match &self.backing {
+            Backing::Memory(m) => m.lock().unwrap().clear(),
+            Backing::Dir(root) => {
+                if let Ok(rd) = std::fs::read_dir(root) {
+                    for e in rd.filter_map(|e| e.ok()) {
+                        let _ = std::fs::remove_file(e.path());
+                    }
+                }
+            }
+        }
+        self.used.store(0, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(capacity: u64, shared: bool) -> TierSpec {
+        TierSpec {
+            kind: TierKind::Dram,
+            write_bw: 1e9,
+            read_bw: 2e9,
+            latency: Duration::from_micros(10),
+            capacity,
+            shared,
+            failure_domain: FailureDomain::Node,
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip_memory() {
+        let t = StorageTier::memory(spec(1 << 20, false), TimeMode::Model);
+        let stat = t.put("a", b"hello").unwrap();
+        assert_eq!(stat.bytes, 5);
+        let (data, _) = t.get("a").unwrap();
+        assert_eq!(data, b"hello");
+        assert!(t.exists("a"));
+        assert!(!t.exists("b"));
+    }
+
+    #[test]
+    fn put_get_roundtrip_dir() {
+        let dir = std::env::temp_dir().join(format!("veloc-tier-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = StorageTier::dir(spec(1 << 20, false), dir.clone(), TimeMode::Model).unwrap();
+        t.put("ckpt/r0/v1", b"payload").unwrap();
+        let (data, _) = t.get("ckpt/r0/v1").unwrap();
+        assert_eq!(data, b"payload");
+        assert_eq!(t.list("ckpt").len(), 1);
+        assert!(t.delete("ckpt/r0/v1"));
+        assert!(t.get("ckpt/r0/v1").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn modeled_duration_matches_bandwidth() {
+        let t = StorageTier::memory(spec(1 << 30, false), TimeMode::Model);
+        let stat = t.put("x", &vec![0u8; 1_000_000]).unwrap();
+        // 1 MB at 1 GB/s = 1 ms + 10 µs latency
+        let ms = stat.modeled.as_secs_f64() * 1e3;
+        assert!((ms - 1.01).abs() < 0.05, "modeled {ms} ms");
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let t = StorageTier::memory(spec(100, false), TimeMode::Model);
+        t.put("a", &vec![0u8; 60]).unwrap();
+        let err = t.put("b", &vec![0u8; 60]).unwrap_err().to_string();
+        assert!(err.contains("TierFull"), "{err}");
+        // Overwrite of same key reclaims space.
+        t.put("a", &vec![0u8; 40]).unwrap();
+        assert_eq!(t.used_bytes(), 40);
+    }
+
+    #[test]
+    fn delete_reclaims_capacity() {
+        let t = StorageTier::memory(spec(100, false), TimeMode::Model);
+        t.put("a", &vec![0u8; 80]).unwrap();
+        assert!(t.delete("a"));
+        assert_eq!(t.used_bytes(), 0);
+        t.put("b", &vec![0u8; 80]).unwrap();
+    }
+
+    #[test]
+    fn wipe_clears_everything() {
+        let t = StorageTier::memory(spec(1 << 20, false), TimeMode::Model);
+        t.put("a", b"1").unwrap();
+        t.put("b", b"2").unwrap();
+        t.wipe();
+        assert!(!t.exists("a"));
+        assert_eq!(t.used_bytes(), 0);
+        assert!(t.list("").is_empty());
+    }
+
+    #[test]
+    fn list_prefix_sorted() {
+        let t = StorageTier::memory(spec(1 << 20, false), TimeMode::Model);
+        t.put("ck.2", b"x").unwrap();
+        t.put("ck.1", b"x").unwrap();
+        t.put("other", b"x").unwrap();
+        assert_eq!(t.list("ck."), vec!["ck.1".to_string(), "ck.2".to_string()]);
+    }
+}

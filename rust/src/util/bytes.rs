@@ -1,0 +1,289 @@
+//! VCKP — VeloC checkpoint container format.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   "VCKP"            4 bytes
+//! version u32               format version (1)
+//! hlen    u32               header JSON length
+//! header  JSON              {"id","rank","iteration","regions":[{"id","len"}]}
+//! body    region payloads   concatenated in header order
+//! crc     u32               CRC32 of everything above
+//! ```
+//!
+//! The same encoding is written to every resilience level (local tier,
+//! partner copy, PFS, KV store), so recovery can validate any copy with the
+//! trailing CRC before the integrity module's checksum kernel re-verifies
+//! region contents.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+pub const MAGIC: &[u8; 4] = b"VCKP";
+pub const VERSION: u32 = 1;
+
+/// Checkpoint metadata carried in the header.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptMeta {
+    /// Checkpoint name (application-chosen, e.g. "hacc").
+    pub name: String,
+    pub rank: usize,
+    /// Monotonic checkpoint version number.
+    pub iteration: u64,
+}
+
+/// One registered memory region's payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Region {
+    pub id: u32,
+    pub data: Vec<u8>,
+}
+
+/// In-memory checkpoint: metadata + region payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub meta: CkptMeta,
+    pub regions: Vec<Region>,
+}
+
+impl Checkpoint {
+    pub fn new(name: &str, rank: usize, iteration: u64) -> Self {
+        Checkpoint {
+            meta: CkptMeta {
+                name: name.to_string(),
+                rank,
+                iteration,
+            },
+            regions: Vec::new(),
+        }
+    }
+
+    pub fn push_region(&mut self, id: u32, data: Vec<u8>) {
+        self.regions.push(Region { id, data });
+    }
+
+    pub fn region(&self, id: u32) -> Option<&Region> {
+        self.regions.iter().find(|r| r.id == id)
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.regions.iter().map(|r| r.data.len() as u64).sum()
+    }
+
+    /// Serialize into the VCKP container.
+    pub fn encode(&self) -> Vec<u8> {
+        let regions: Vec<Json> = self
+            .regions
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("id", r.id as u64)
+                    .set("len", r.data.len() as u64)
+            })
+            .collect();
+        let header = Json::obj()
+            .set("name", self.meta.name.as_str())
+            .set("rank", self.meta.rank)
+            .set("iteration", self.meta.iteration)
+            .set("regions", Json::Arr(regions))
+            .to_string();
+        let hbytes = header.as_bytes();
+        let body_len: usize = self.regions.iter().map(|r| r.data.len()).sum();
+        let mut out =
+            Vec::with_capacity(4 + 4 + 4 + hbytes.len() + body_len + 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(hbytes);
+        for r in &self.regions {
+            out.extend_from_slice(&r.data);
+        }
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and CRC-validate a VCKP container.
+    pub fn decode(buf: &[u8]) -> Result<Checkpoint> {
+        if buf.len() < 16 {
+            bail!("VCKP too short ({} bytes)", buf.len());
+        }
+        if &buf[0..4] != MAGIC {
+            bail!("bad VCKP magic");
+        }
+        let stored_crc =
+            u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        let actual_crc = crc32fast::hash(&buf[..buf.len() - 4]);
+        if stored_crc != actual_crc {
+            bail!(
+                "VCKP CRC mismatch: stored {stored_crc:#010x}, actual {actual_crc:#010x}"
+            );
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported VCKP version {version}");
+        }
+        let hlen =
+            u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+        let hend = 12 + hlen;
+        if buf.len() < hend + 4 {
+            bail!("VCKP header truncated");
+        }
+        let header = std::str::from_utf8(&buf[12..hend])
+            .map_err(|_| anyhow!("VCKP header not utf-8"))?;
+        let j = Json::parse(header).map_err(|e| anyhow!("VCKP header: {e}"))?;
+        let meta = CkptMeta {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("header missing name"))?
+                .to_string(),
+            rank: j
+                .get("rank")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("header missing rank"))?,
+            iteration: j
+                .get("iteration")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("header missing iteration"))?,
+        };
+        let rspecs = j
+            .get("regions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("header missing regions"))?;
+        let mut regions = Vec::with_capacity(rspecs.len());
+        let mut off = hend;
+        for rs in rspecs {
+            let id = rs
+                .get("id")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("region missing id"))? as u32;
+            let len = rs
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("region missing len"))?;
+            if off + len > buf.len() - 4 {
+                bail!("region {id} overruns container");
+            }
+            regions.push(Region {
+                id,
+                data: buf[off..off + len].to_vec(),
+            });
+            off += len;
+        }
+        if off != buf.len() - 4 {
+            bail!("trailing bytes in VCKP body");
+        }
+        Ok(Checkpoint { meta, regions })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed slice <-> byte helpers (DNN parameter regions are f32 tensors).
+// ---------------------------------------------------------------------------
+
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        bail!("byte length {} not a multiple of 4", b.len());
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub fn i32s_to_bytes(xs: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Reinterpret bytes as i32 lanes, zero-padding the tail to `align` lanes.
+pub fn bytes_to_i32s_padded(b: &[u8], align: usize) -> Vec<i32> {
+    let lanes = b.len().div_ceil(4);
+    let padded = if align > 0 { lanes.div_ceil(align) * align } else { lanes };
+    let mut out = vec![0i32; padded];
+    for (i, c) in b.chunks(4).enumerate() {
+        let mut word = [0u8; 4];
+        word[..c.len()].copy_from_slice(c);
+        out[i] = i32::from_le_bytes(word);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut c = Checkpoint::new("app", 3, 17);
+        c.push_region(0, vec![1, 2, 3, 4, 5]);
+        c.push_region(7, vec![9; 1000]);
+        c.push_region(2, Vec::new()); // empty regions are legal
+        c
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        let buf = c.encode();
+        let d = Checkpoint::decode(&buf).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(d.meta.iteration, 17);
+        assert_eq!(d.region(7).unwrap().data.len(), 1000);
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut buf = sample().encode();
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0xFF;
+        let err = Checkpoint::decode(&buf).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let buf = sample().encode();
+        assert!(Checkpoint::decode(&buf[..buf.len() - 10]).is_err());
+        assert!(Checkpoint::decode(&buf[..8]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = sample().encode();
+        buf[0] = b'X';
+        assert!(Checkpoint::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)).unwrap(), xs);
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn i32_padding() {
+        let b = vec![1u8, 0, 0, 0, 2]; // 1 full lane + 1 partial
+        let lanes = bytes_to_i32s_padded(&b, 4);
+        assert_eq!(lanes.len(), 4);
+        assert_eq!(lanes[0], 1);
+        assert_eq!(lanes[1], 2);
+        assert_eq!(lanes[2], 0);
+    }
+
+    #[test]
+    fn payload_bytes_sums_regions() {
+        assert_eq!(sample().payload_bytes(), 1005);
+    }
+}

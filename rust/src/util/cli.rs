@@ -1,0 +1,239 @@
+//! Declarative CLI argument parser (clap is not available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, defaults and
+//! auto-generated `--help`. Used by the `veloc` binary and every example.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct ArgSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Builder + parse result in one struct.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<ArgSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Option with a value and default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(ArgSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Option with a value, no default (required unless absent is OK).
+    pub fn opt_req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(ArgSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean flag, defaults to false.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(ArgSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <value>", spec.name)
+            };
+            let def = match &spec.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            s.push_str(&format!("{head:<28} {}{def}\n", spec.help));
+        }
+        s.push_str("  --help                     show this message\n");
+        s
+    }
+
+    /// Parse an explicit argv (without the program name).
+    pub fn parse_from(mut self, args: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?
+                    .clone();
+                let val = if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("option --{key} needs a value"))?
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Parse process args; on `--help` or error, print and exit.
+    pub fn parse(self) -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&args) {
+            Ok(c) => c,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with("unknown") { 2 } else { 0 });
+            }
+        }
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name)
+            .unwrap_or_else(|| panic!("missing required option --{name}"))
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<String> {
+        self.raw(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        let v = self.get(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name}: expected integer, got '{v}'"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        let v = self.get(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name}: expected integer, got '{v}'"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        let v = self.get(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name}: expected number, got '{v}'"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.raw(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn base() -> Cli {
+        Cli::new("t", "test")
+            .opt("ranks", "8", "rank count")
+            .opt_req("out", "output file")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = base().parse_from(&argv(&["--out", "x"])).unwrap();
+        assert_eq!(c.get_usize("ranks"), 8);
+        assert_eq!(c.get("out"), "x");
+        assert!(!c.get_bool("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let c = base()
+            .parse_from(&argv(&["--ranks=32", "--out", "y", "--verbose"]))
+            .unwrap();
+        assert_eq!(c.get_usize("ranks"), 32);
+        assert!(c.get_bool("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(base().parse_from(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(base().parse_from(&argv(&["--ranks"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let err = base().parse_from(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--ranks"));
+        assert!(err.contains("rank count"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let c = base().parse_from(&argv(&["--out", "x", "cmd"])).unwrap();
+        assert_eq!(c.positional(), &["cmd".to_string()]);
+    }
+}

@@ -1,0 +1,13 @@
+//! From-scratch substrates: JSON, PRNG, CLI, priority thread pool,
+//! statistics, and the VCKP checkpoint container format.
+//!
+//! These exist because the offline crate set has no serde/clap/rand/tokio/
+//! criterion — and because determinism and priority semantics are part of
+//! the system's contract (see DESIGN.md §System inventory).
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,401 @@
+//! Priority worker pool — the execution engine behind VeloC's *active
+//! backend* (tokio is not available offline; OS threads also match the real
+//! VeloC design, whose backend is a separate process/thread, not async).
+//!
+//! Jobs carry a [`Priority`]; the paper's interference-mitigation strategy
+//! ("run background operations with lower priority", §2) maps to
+//! `Priority::Background` jobs that (a) sort after foreground work in the
+//! queue and (b) optionally self-throttle between chunks via the pool's
+//! `nice_sleep` knob (the micro-benchmark-calibrated time-slice model).
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Application-blocking work (e.g. capture to the fastest tier).
+    Foreground = 2,
+    /// Ordinary async pipeline stages.
+    Normal = 1,
+    /// Interference-mitigated background flushes.
+    Background = 0,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueuedJob {
+    prio: Priority,
+    seq: u64, // FIFO within a priority class (smaller = older)
+    job: Job,
+}
+
+impl PartialEq for QueuedJob {
+    fn eq(&self, other: &Self) -> bool {
+        self.prio == other.prio && self.seq == other.seq
+    }
+}
+impl Eq for QueuedJob {}
+impl PartialOrd for QueuedJob {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedJob {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap: higher priority first, then older seq first.
+        self.prio
+            .cmp(&other.prio)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct PoolState {
+    queue: BinaryHeap<QueuedJob>,
+    shutdown: bool,
+    active: usize,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    idle_cv: Condvar,
+    seq: AtomicU64,
+}
+
+/// Completion handle for a submitted job.
+pub struct JobHandle {
+    done: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl JobHandle {
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.done;
+        let mut done = lock.lock().unwrap();
+        while !*done {
+            done = cv.wait(done).unwrap();
+        }
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> bool {
+        let (lock, cv) = &*self.done;
+        let mut done = lock.lock().unwrap();
+        let deadline = std::time::Instant::now() + d;
+        while !*done {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _timeout) = cv.wait_timeout(done, deadline - now).unwrap();
+            done = g;
+        }
+        true
+    }
+
+    pub fn is_done(&self) -> bool {
+        *self.done.0.lock().unwrap()
+    }
+}
+
+/// Fixed-size priority thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    paused: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        Self::with_nice(workers, 0)
+    }
+
+    /// Pool whose worker threads run at the given OS nice level. This is
+    /// the paper's second mitigation strategy verbatim: "the background
+    /// operations can be scheduled such that they run with lower priority
+    /// [and] the operating system will reduce contention by giving the
+    /// application a large time slice".
+    pub fn with_nice(workers: usize, nice: i32) -> Self {
+        assert!(workers > 0);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                queue: BinaryHeap::new(),
+                shutdown: false,
+                active: 0,
+            }),
+            cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            seq: AtomicU64::new(0),
+        });
+        let paused = Arc::new(AtomicBool::new(false));
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                let pa = Arc::clone(&paused);
+                std::thread::Builder::new()
+                    .name(format!("veloc-backend-{i}"))
+                    .spawn(move || {
+                        set_thread_nice(nice);
+                        worker_loop(sh, pa)
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            workers: handles,
+            paused,
+        }
+    }
+
+    pub fn submit<F>(&self, prio: Priority, f: F) -> JobHandle
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let done = Arc::new((Mutex::new(false), Condvar::new()));
+        let done2 = Arc::clone(&done);
+        let job: Job = Box::new(move || {
+            f();
+            let (lock, cv) = &*done2;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        let seq = self.shared.seq.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(!st.shutdown, "submit after shutdown");
+            st.queue.push(QueuedJob { prio, seq, job });
+        }
+        self.shared.cv.notify_one();
+        JobHandle { done }
+    }
+
+    /// Number of queued (not yet started) jobs.
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Jobs currently executing.
+    pub fn active(&self) -> usize {
+        self.shared.state.lock().unwrap().active
+    }
+
+    /// Block until queue is empty and all workers idle.
+    pub fn wait_idle(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while !st.queue.is_empty() || st.active > 0 {
+            st = self.shared.idle_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Pause/resume dequeueing of *Background* jobs (the scheduler's lever:
+    /// predicted-busy phases suspend background flushes entirely).
+    pub fn pause_background(&self, paused: bool) {
+        self.paused.store(paused, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+    }
+
+    pub fn background_paused(&self) -> bool {
+        self.paused.load(Ordering::SeqCst)
+    }
+}
+
+/// Lower the calling thread's scheduling priority (Linux: per-thread nice
+/// via setpriority on the tid; no-op elsewhere or on failure — priority is
+/// an optimization, not a correctness requirement).
+fn set_thread_nice(nice: i32) {
+    if nice == 0 {
+        return;
+    }
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let tid = libc::syscall(libc::SYS_gettid) as libc::id_t;
+        let _ = libc::setpriority(libc::PRIO_PROCESS, tid, nice);
+    }
+    #[cfg(not(target_os = "linux"))]
+    let _ = nice;
+}
+
+fn worker_loop(sh: Arc<Shared>, paused: Arc<AtomicBool>) {
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.shutdown && st.queue.is_empty() {
+                    return;
+                }
+                let bg_paused = paused.load(Ordering::SeqCst);
+                // If background is paused and only background jobs remain,
+                // keep waiting (with a timeout so resume is prompt).
+                let runnable = st
+                    .queue
+                    .peek()
+                    .map(|q| !(bg_paused && q.prio == Priority::Background))
+                    .unwrap_or(false);
+                if runnable {
+                    let q = st.queue.pop().unwrap();
+                    st.active += 1;
+                    break q.job;
+                }
+                let (g, _t) = sh
+                    .cv
+                    .wait_timeout(st, Duration::from_millis(20))
+                    .unwrap();
+                st = g;
+            }
+        };
+        job();
+        let mut st = sh.state.lock().unwrap();
+        st.active -= 1;
+        if st.queue.is_empty() && st.active == 0 {
+            sh.idle_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..32)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit(Priority::Normal, move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.wait();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn priority_ordering_single_worker() {
+        let pool = ThreadPool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        // Occupy the worker so the queue builds up.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        let blocker = pool.submit(Priority::Foreground, move || {
+            let (l, cv) = &*g2;
+            let mut open = l.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        let push = |p: Priority, tag: &'static str| {
+            let o = Arc::clone(&order);
+            pool.submit(p, move || o.lock().unwrap().push(tag))
+        };
+        let h1 = push(Priority::Background, "bg");
+        let h2 = push(Priority::Foreground, "fg");
+        let h3 = push(Priority::Normal, "norm");
+        // Open the gate.
+        {
+            let (l, cv) = &*gate;
+            *l.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        blocker.wait();
+        h1.wait();
+        h2.wait();
+        h3.wait();
+        assert_eq!(*order.lock().unwrap(), vec!["fg", "norm", "bg"]);
+    }
+
+    #[test]
+    fn wait_idle_drains() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            pool.submit(Priority::Normal, move || {
+                std::thread::sleep(Duration::from_millis(2));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        assert_eq!(pool.queued(), 0);
+    }
+
+    #[test]
+    fn pause_background_defers_bg_jobs() {
+        let pool = ThreadPool::new(1);
+        pool.pause_background(true);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&ran);
+        let h = pool.submit(Priority::Background, move || {
+            r2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(!h.wait_timeout(Duration::from_millis(80)));
+        assert_eq!(ran.load(Ordering::SeqCst), 0);
+        pool.pause_background(false);
+        h.wait();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn fifo_within_class() {
+        let pool = ThreadPool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        pool.submit(Priority::Foreground, move || {
+            let (l, cv) = &*g2;
+            let mut open = l.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        let hs: Vec<_> = (0..5)
+            .map(|i| {
+                let o = Arc::clone(&order);
+                pool.submit(Priority::Normal, move || {
+                    o.lock().unwrap().push(i)
+                })
+            })
+            .collect();
+        {
+            let (l, cv) = &*gate;
+            *l.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for h in hs {
+            h.wait();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn handle_timeout_and_done() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(Priority::Normal, || {
+            std::thread::sleep(Duration::from_millis(30))
+        });
+        assert!(!h.wait_timeout(Duration::from_millis(1)));
+        assert!(h.wait_timeout(Duration::from_secs(5)));
+        assert!(h.is_done());
+    }
+}

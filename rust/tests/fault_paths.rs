@@ -1,0 +1,163 @@
+//! Edge-case and failure-injection paths: checksum rejection, capacity
+//! fallback, explicit-version restore, missing-level degradation, wait
+//! semantics.
+
+use std::sync::Arc;
+use std::time::Duration;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::cluster::FailureScope;
+use veloc::pipeline::{LEVEL_LOCAL, LEVEL_PFS};
+
+fn ckpt_all(rt: &Arc<VelocRuntime>, name: &str, v: u64, bytes: usize) {
+    for rank in 0..rt.topology().world_size() {
+        let client = rt.client(rank);
+        client.mem_protect(0, vec![(rank as u8) ^ (v as u8); bytes]);
+        client.checkpoint(name, v).unwrap();
+        client.checkpoint_wait(name, v).unwrap();
+    }
+    rt.drain();
+}
+
+#[test]
+fn tampered_checksum_rejects_every_copy_of_that_version() {
+    let mut cfg = VelocConfig::default().with_nodes(4, 1);
+    cfg.stack.erasure_group = 0;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    ckpt_all(&rt, "t", 1, 8 << 10);
+    ckpt_all(&rt, "t", 2, 8 << 10);
+    // Corrupt the *registry digest* of v2 for rank 0: every stored copy of
+    // v2 now fails validation, so restart falls back to v1.
+    rt.env().registry.set_checksum("t", 2, 0, 0xBAD0BAD);
+    let client = rt.client(0);
+    client.mem_protect(0, Vec::new());
+    let info = client.restart("t").unwrap().unwrap();
+    assert_eq!(info.version, 1, "must fall back to the older valid version");
+    // Other ranks still restore v2.
+    let c1 = rt.client(1);
+    c1.mem_protect(0, Vec::new());
+    assert_eq!(c1.restart("t").unwrap().unwrap().version, 2);
+}
+
+#[test]
+fn restart_version_pins_older_checkpoint() {
+    let mut cfg = VelocConfig::default().with_nodes(4, 1);
+    cfg.stack.erasure_group = 0;
+    cfg.stack.keep_versions = 4;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    for v in 1..=3 {
+        ckpt_all(&rt, "pin", v, 4 << 10);
+    }
+    let client = rt.client(2);
+    let h = client.mem_protect(0, Vec::new());
+    let info = client.restart_version("pin", 2).unwrap().unwrap();
+    assert_eq!(info.version, 2);
+    assert_eq!(*h.lock().unwrap(), vec![2u8 ^ 2u8; 4 << 10]);
+    // Nonexistent version: None, and regions untouched.
+    assert!(client.restart_version("pin", 99).unwrap().is_none());
+}
+
+#[test]
+fn dram_exhaustion_falls_back_to_next_local_tier() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.fabric.dram_capacity = 16 << 10; // tiny staging area
+    cfg.stack.erasure_group = 0;
+    cfg.stack.with_partner = false;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let client = rt.client(0);
+    client.mem_protect(0, vec![7u8; 64 << 10]); // > DRAM capacity
+    client.checkpoint("big", 1).unwrap();
+    client.checkpoint_wait("big", 1).unwrap();
+    rt.drain();
+    // Landed on NVMe, not DRAM.
+    let tiers = rt.env().fabric.local_tiers(0);
+    assert_eq!(tiers[0].used_bytes(), 0, "dram must be skipped");
+    assert!(tiers[1].used_bytes() > 0, "nvme holds the copy");
+    // And restores fine.
+    let h = client.mem_protect(0, Vec::new());
+    let info = client.restart("big").unwrap().unwrap();
+    assert_eq!(info.level, LEVEL_LOCAL);
+    assert_eq!(h.lock().unwrap().len(), 64 << 10);
+}
+
+#[test]
+fn without_erasure_partner_pair_loss_degrades_to_pfs() {
+    let mut cfg = VelocConfig::default().with_nodes(8, 1);
+    cfg.stack.erasure_group = 0; // no erasure level
+    let rt = VelocRuntime::new(cfg).unwrap();
+    ckpt_all(&rt, "deg", 1, 8 << 10);
+    rt.inject_failure(&FailureScope::MultiNode(vec![2, 3]));
+    rt.revive_all();
+    // Rank 2 lost local + partner; with no erasure only the PFS serves.
+    let client = rt.client(2);
+    client.mem_protect(0, Vec::new());
+    let info = client.restart("deg").unwrap().unwrap();
+    assert_eq!(info.level, LEVEL_PFS);
+}
+
+#[test]
+fn wait_times_out_for_unknown_checkpoint() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.wait_timeout = Duration::from_millis(50);
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let client = rt.client(0);
+    let err = client.checkpoint_wait("never", 1).unwrap_err().to_string();
+    assert!(err.contains("timeout"), "{err}");
+}
+
+#[test]
+fn duplicate_version_overwrites_cleanly() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let client = rt.client(0);
+    let h = client.mem_protect(0, vec![1u8; 4 << 10]);
+    client.checkpoint("dup", 1).unwrap();
+    client.checkpoint_wait("dup", 1).unwrap();
+    *h.lock().unwrap() = vec![2u8; 4 << 10];
+    client.checkpoint("dup", 1).unwrap(); // same version again
+    client.checkpoint_wait("dup", 1).unwrap();
+    rt.drain();
+    let h2 = client.mem_protect(0, Vec::new());
+    client.restart("dup").unwrap().unwrap();
+    assert_eq!(*h2.lock().unwrap(), vec![2u8; 4 << 10]);
+}
+
+#[test]
+fn unprotected_region_ids_ignored_on_restore() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let client = rt.client(0);
+    client.mem_protect(0, vec![1u8; 128]);
+    client.mem_protect(7, vec![2u8; 128]);
+    client.checkpoint("r", 1).unwrap();
+    client.checkpoint_wait("r", 1).unwrap();
+    rt.drain();
+    // New client protects only region 7: restore fills it, skips 0.
+    let c2 = rt.client(0);
+    let h7 = c2.mem_protect(7, Vec::new());
+    let info = c2.restart("r").unwrap().unwrap();
+    assert_eq!(info.version, 1);
+    assert_eq!(*h7.lock().unwrap(), vec![2u8; 128]);
+}
+
+#[test]
+fn mem_unprotect_removes_region_from_next_checkpoint() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let client = rt.client(0);
+    client.mem_protect(0, vec![1u8; 64]);
+    client.mem_protect(1, vec![2u8; 64]);
+    assert_eq!(client.protected_bytes(), 128);
+    client.mem_unprotect(1);
+    assert_eq!(client.protected_bytes(), 64);
+    client.checkpoint("u", 1).unwrap();
+    client.checkpoint_wait("u", 1).unwrap();
+    rt.drain();
+    assert_eq!(
+        rt.env().registry.info("u", 1, 0).unwrap().bytes,
+        64,
+        "dropped region must not be captured"
+    );
+}

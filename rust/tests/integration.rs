@@ -1,0 +1,400 @@
+//! End-to-end integration tests over the full runtime: client API, module
+//! pipeline, storage fabric, failure injection and multi-level recovery.
+
+use std::sync::Arc;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::cluster::FailureScope;
+use veloc::modules::TierPolicy;
+use veloc::pipeline::{
+    CkptStatus, EngineMode, LEVEL_ERASURE, LEVEL_LOCAL, LEVEL_PARTNER, LEVEL_PFS,
+};
+use veloc::util::rng::Rng;
+
+fn runtime(nodes: usize, rpn: usize) -> Arc<VelocRuntime> {
+    let mut cfg = VelocConfig::default().with_nodes(nodes, rpn);
+    cfg.stack.erasure_group = if nodes % 4 == 0 { 4 } else { 0 };
+    VelocRuntime::new(cfg).unwrap()
+}
+
+fn payload(rng: &mut Rng, n: usize) -> Vec<u8> {
+    let mut v = vec![0u8; n];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// Checkpoint all ranks collectively at `version`; returns each rank's data.
+fn checkpoint_world(
+    rt: &Arc<VelocRuntime>,
+    name: &str,
+    version: u64,
+    bytes: usize,
+) -> Vec<Vec<u8>> {
+    let world = rt.topology().world_size();
+    let mut rng = Rng::new(version * 1000 + 7);
+    let datas: Vec<Vec<u8>> = (0..world).map(|_| payload(&mut rng, bytes)).collect();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let rt = Arc::clone(rt);
+            let data = datas[rank].clone();
+            let name = name.to_string();
+            std::thread::spawn(move || {
+                let client = rt.client(rank);
+                client.mem_protect(0, data);
+                client.checkpoint(&name, version).unwrap();
+                let st = client.checkpoint_wait(&name, version).unwrap();
+                assert!(matches!(st, CkptStatus::Done(_)), "rank {rank}: {st:?}");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    datas
+}
+
+/// Restore rank `rank` and return (version, level, region-0 bytes).
+fn restore_rank(rt: &Arc<VelocRuntime>, name: &str, rank: usize) -> Option<(u64, u8, Vec<u8>)> {
+    let client = rt.client(rank);
+    let handle = client.mem_protect(0, Vec::new());
+    let info = client.restart(name).unwrap()?;
+    let data = handle.lock().unwrap().clone();
+    Some((info.version, info.level, data))
+}
+
+#[test]
+fn all_ranks_checkpoint_and_reach_pfs() {
+    let rt = runtime(4, 2);
+    checkpoint_world(&rt, "app", 1, 64 << 10);
+    rt.drain();
+    let world = rt.topology().world_size();
+    for rank in 0..world {
+        let info = rt
+            .env()
+            .registry
+            .info("app", 1, rank)
+            .expect("registry entry");
+        assert!(
+            info.levels.contains(&LEVEL_LOCAL),
+            "rank {rank}: {:?}",
+            info.levels
+        );
+        assert!(info.levels.contains(&LEVEL_PARTNER));
+        assert!(info.levels.contains(&LEVEL_ERASURE));
+        assert!(info.levels.contains(&LEVEL_PFS));
+        assert!(info.checksum.is_some());
+    }
+    assert_eq!(rt.env().registry.latest_complete("app", world), Some(1));
+}
+
+#[test]
+fn rank_failure_recovers_from_local() {
+    let rt = runtime(4, 2);
+    let datas = checkpoint_world(&rt, "app", 3, 32 << 10);
+    rt.drain();
+    rt.inject_failure(&FailureScope::Rank(5));
+    rt.revive_all();
+    let (v, level, data) = restore_rank(&rt, "app", 5).unwrap();
+    assert_eq!(v, 3);
+    assert_eq!(level, LEVEL_LOCAL, "rank crash should restore from local");
+    assert_eq!(data, datas[5]);
+}
+
+#[test]
+fn node_failure_recovers_from_partner() {
+    let rt = runtime(4, 2);
+    let datas = checkpoint_world(&rt, "app", 1, 32 << 10);
+    rt.drain();
+    rt.inject_failure(&FailureScope::Node(1)); // ranks 2,3 + local storage
+    rt.revive_all();
+    for rank in [2usize, 3] {
+        let (v, level, data) = restore_rank(&rt, "app", rank).unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(level, LEVEL_PARTNER, "rank {rank}");
+        assert_eq!(data, datas[rank]);
+    }
+    // Unaffected ranks still restore locally.
+    let (_, level, _) = restore_rank(&rt, "app", 0).unwrap();
+    assert_eq!(level, LEVEL_LOCAL);
+}
+
+#[test]
+fn partner_pair_loss_recovers_from_erasure() {
+    // Partner of node n is node n+1; killing both wipes rank r's local
+    // copy *and* its partner copy. Erasure groups stride 2 nodes apart
+    // (8 nodes, k=4), so exactly one group member is lost -> XOR rebuild.
+    let rt = runtime(8, 1);
+    let datas = checkpoint_world(&rt, "app", 2, 48 << 10);
+    rt.drain();
+    rt.inject_failure(&FailureScope::MultiNode(vec![2, 3]));
+    rt.revive_all();
+    // Rank 2's partner copy lived on node 3 (also dead) -> XOR rebuild.
+    let (v, level, data) = restore_rank(&rt, "app", 2).unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(level, LEVEL_ERASURE, "rank 2 must need the erasure level");
+    assert_eq!(data, datas[2], "rank 2 rebuilt bytes differ");
+    // Rank 3's partner copy lives on node 4 (alive) -> partner level.
+    let (v, level, data) = restore_rank(&rt, "app", 3).unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(level, LEVEL_PARTNER, "rank 3 restores from its partner");
+    assert_eq!(data, datas[3]);
+}
+
+#[test]
+fn system_failure_recovers_from_pfs() {
+    let rt = runtime(4, 2);
+    let datas = checkpoint_world(&rt, "app", 9, 24 << 10);
+    rt.drain();
+    rt.inject_failure(&FailureScope::System);
+    rt.revive_all();
+    for rank in 0..rt.topology().world_size() {
+        let (v, level, data) = restore_rank(&rt, "app", rank).unwrap();
+        assert_eq!(v, 9);
+        assert_eq!(level, LEVEL_PFS, "rank {rank}");
+        assert_eq!(data, datas[rank]);
+    }
+}
+
+#[test]
+fn restores_freshest_available_version() {
+    let rt = runtime(4, 1);
+    checkpoint_world(&rt, "app", 1, 8 << 10);
+    let d2 = checkpoint_world(&rt, "app", 2, 8 << 10);
+    rt.drain();
+    let (v, _, data) = restore_rank(&rt, "app", 0).unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(data, d2[0]);
+}
+
+#[test]
+fn gc_prunes_old_versions() {
+    let rt = runtime(4, 1); // keep_versions = 2 (default)
+    for v in 1..=4 {
+        checkpoint_world(&rt, "app", v, 4 << 10);
+        rt.drain();
+    }
+    let versions = rt.env().registry.versions("app");
+    assert!(versions.contains(&4) && versions.contains(&3));
+    let t = &rt.env().fabric.local_tiers(0)[0];
+    assert!(!t.exists("local.app.r0.v1"));
+    assert!(t.exists("local.app.r0.v4"));
+}
+
+#[test]
+fn sync_engine_equivalent_results() {
+    let mut cfg = VelocConfig::default().with_nodes(4, 1);
+    cfg.engine_mode = EngineMode::Sync;
+    cfg.stack.erasure_group = 4;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let datas = checkpoint_world(&rt, "s", 1, 16 << 10);
+    // No drain needed: sync mode completed everything inline.
+    rt.inject_failure(&FailureScope::System);
+    rt.revive_all();
+    let (_, level, data) = restore_rank(&rt, "s", 2).unwrap();
+    assert_eq!(level, LEVEL_PFS);
+    assert_eq!(data, datas[2]);
+}
+
+#[test]
+fn compression_roundtrips_through_pfs() {
+    let mut cfg = VelocConfig::default().with_nodes(4, 1);
+    cfg.stack.with_compression = true;
+    cfg.stack.erasure_group = 0;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let world = rt.topology().world_size();
+    for rank in 0..world {
+        let client = rt.client(rank);
+        client.mem_protect(0, vec![42u8; 256 << 10]); // compressible
+        client.checkpoint("c", 1).unwrap();
+        client.checkpoint_wait("c", 1).unwrap();
+    }
+    rt.drain();
+    // PFS copy must be much smaller than the raw payload.
+    let pfs_used = rt.env().fabric.pfs().used_bytes();
+    assert!(pfs_used < (world as u64) * (64 << 10), "pfs holds {pfs_used}");
+    rt.inject_failure(&FailureScope::System);
+    rt.revive_all();
+    let (_, level, data) = restore_rank(&rt, "c", 1).unwrap();
+    assert_eq!(level, LEVEL_PFS);
+    assert_eq!(data, vec![42u8; 256 << 10]);
+}
+
+#[test]
+fn kv_module_serves_restore() {
+    let mut cfg = VelocConfig::default().with_nodes(4, 1);
+    cfg.stack.with_kv = true;
+    cfg.fabric.with_kv = true;
+    cfg.stack.with_transfer = false; // KV is the only persistent level
+    cfg.stack.erasure_group = 0;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let datas = checkpoint_world(&rt, "k", 1, 16 << 10);
+    rt.drain();
+    rt.inject_failure(&FailureScope::System);
+    rt.revive_all();
+    let (_, level, data) = restore_rank(&rt, "k", 0).unwrap();
+    assert_eq!(level, veloc::pipeline::LEVEL_KV);
+    assert_eq!(data, datas[0]);
+}
+
+#[test]
+fn concurrency_aware_policy_still_correct() {
+    let mut cfg = VelocConfig::default().with_nodes(4, 2);
+    cfg.stack.tier_policy = TierPolicy::ConcurrencyAware;
+    cfg.stack.erasure_group = 4;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let datas = checkpoint_world(&rt, "p", 1, 32 << 10);
+    rt.drain();
+    rt.inject_failure(&FailureScope::Rank(3));
+    rt.revive_all();
+    let (_, _, data) = restore_rank(&rt, "p", 3).unwrap();
+    assert_eq!(data, datas[3]);
+}
+
+#[test]
+fn corrupted_local_copy_falls_through_to_partner() {
+    let rt = runtime(4, 1);
+    let datas = checkpoint_world(&rt, "x", 1, 16 << 10);
+    rt.drain();
+    // Corrupt rank 0's local copy in place.
+    let tier = &rt.env().fabric.local_tiers(0)[0];
+    let key = "local.x.r0.v1";
+    let (mut data, _) = tier.get(key).unwrap();
+    let mid = data.len() / 2;
+    data[mid] ^= 0xFF;
+    tier.put(key, &data).unwrap();
+    let (_, level, restored) = restore_rank(&rt, "x", 0).unwrap();
+    assert!(level >= LEVEL_PARTNER, "level {level}");
+    assert_eq!(restored, datas[0]);
+}
+
+#[test]
+fn module_switch_disables_level_at_runtime() {
+    let rt = runtime(4, 1);
+    rt.engine(0)
+        .module_named("partner")
+        .unwrap()
+        .switch()
+        .set(false);
+    checkpoint_world(&rt, "sw", 1, 8 << 10);
+    rt.drain();
+    let info = rt.env().registry.info("sw", 1, 0).unwrap();
+    assert!(!info.levels.contains(&LEVEL_PARTNER));
+    assert!(info.levels.contains(&LEVEL_PFS));
+    // Other ranks unaffected.
+    let info1 = rt.env().registry.info("sw", 1, 1).unwrap();
+    assert!(info1.levels.contains(&LEVEL_PARTNER));
+}
+
+#[test]
+fn no_checkpoint_means_no_restore() {
+    let rt = runtime(4, 1);
+    let client = rt.client(0);
+    client.mem_protect(0, vec![1, 2, 3]);
+    assert!(client.restart("never").unwrap().is_none());
+}
+
+#[test]
+fn killed_rank_cannot_checkpoint() {
+    let rt = runtime(4, 1);
+    rt.inject_failure(&FailureScope::Rank(0));
+    let client = rt.client(0);
+    client.mem_protect(0, vec![0u8; 128]);
+    assert!(client.checkpoint("z", 1).is_err());
+}
+
+#[test]
+fn restorable_frontier_is_consistent() {
+    let rt = runtime(4, 1);
+    checkpoint_world(&rt, "f", 1, 8 << 10);
+    checkpoint_world(&rt, "f", 2, 8 << 10);
+    rt.drain();
+    let frontier = rt
+        .recovery()
+        .restorable_frontier(rt.engines(), "f")
+        .unwrap();
+    assert_eq!(frontier, Some(2));
+}
+
+/// Randomized property: for any single-failure scope, every rank restores
+/// bytes identical to what it checkpointed.
+#[test]
+fn property_single_failure_always_recovers_exact_bytes() {
+    let rt = runtime(8, 1);
+    let mut rng = Rng::new(2024);
+    let datas = checkpoint_world(&rt, "prop", 1, 16 << 10);
+    rt.drain();
+    let mut datas = datas;
+    let mut version = 1u64;
+    for trial in 0..20 {
+        let scope = match rng.below(3) {
+            0 => FailureScope::Rank(rng.range_usize(0, 8)),
+            1 => FailureScope::Node(rng.range_usize(0, 8)),
+            _ => {
+                let n = rng.range_usize(0, 8);
+                FailureScope::MultiNode(vec![n, (n + 1) % 8])
+            }
+        };
+        rt.inject_failure(&scope);
+        rt.revive_all();
+        for rank in 0..8 {
+            let (v, _, data) = restore_rank(&rt, "prop", rank)
+                .unwrap_or_else(|| panic!("trial {trial} {scope:?} rank {rank}"));
+            assert_eq!(v, version);
+            assert_eq!(data, datas[rank], "trial {trial} {scope:?} rank {rank}");
+        }
+        // Re-establish all levels for the next trial.
+        version += 1;
+        datas = checkpoint_world(&rt, "prop", version, 16 << 10);
+        rt.drain();
+    }
+}
+
+#[test]
+fn cold_restart_reloads_lineage_from_persistent_pfs() {
+    // Process 1: real-directory PFS, checkpoint, then drop the runtime.
+    let dir = std::env::temp_dir().join(format!("veloc-cold-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk = || {
+        let mut cfg = VelocConfig::default().with_nodes(4, 1);
+        cfg.stack.erasure_group = 0;
+        cfg.fabric.pfs_dir = Some(dir.clone());
+        VelocRuntime::new(cfg).unwrap()
+    };
+    let datas;
+    {
+        let rt1 = mk();
+        datas = checkpoint_world(&rt1, "cold", 7, 16 << 10);
+        rt1.drain();
+    } // rt1 dropped: in-memory tiers and registry are gone.
+
+    // Process 2: fresh runtime over the same PFS directory.
+    let rt2 = mk();
+    assert!(rt2.env().registry.versions("cold").is_empty());
+    assert!(rt2.reload_lineage("cold").unwrap());
+    assert_eq!(rt2.env().registry.versions("cold"), vec![7]);
+    // Node-local copies never existed in this process: PFS serves.
+    for rank in 0..4 {
+        let (v, level, data) = restore_rank(&rt2, "cold", rank).unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(level, LEVEL_PFS);
+        assert_eq!(data, datas[rank], "rank {rank}");
+    }
+    assert!(!rt2.reload_lineage("missing").unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lineage_json_preserves_checksums() {
+    let rt = runtime(4, 1);
+    checkpoint_world(&rt, "lj", 1, 4 << 10);
+    rt.drain();
+    let reg = &rt.env().registry;
+    let before = reg.info("lj", 1, 0).unwrap();
+    assert!(before.checksum.is_some());
+    let j = reg.to_json("lj");
+    let reg2 = veloc::modules::VersionRegistry::new();
+    reg2.load_json(&j).unwrap();
+    let after = reg2.info("lj", 1, 0).unwrap();
+    assert_eq!(after.checksum, before.checksum);
+    assert_eq!(after.levels, before.levels);
+    assert_eq!(after.bytes, before.bytes);
+}

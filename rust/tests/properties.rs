@@ -1,0 +1,208 @@
+//! Randomized property tests on coordinator invariants (proptest is not
+//! available offline; we drive the same shrink-free random exploration
+//! with the deterministic xoshiro PRNG — failures print the seed).
+
+use veloc::cluster::Topology;
+use veloc::modules::{xor_fold, XorBackend};
+use veloc::util::bytes::Checkpoint;
+use veloc::util::json::Json;
+use veloc::util::rng::Rng;
+
+/// VCKP decode(encode(x)) == x for arbitrary region sets, and the encode
+/// is deterministic (the recovery checksum validation relies on it).
+#[test]
+fn prop_vckp_roundtrip_and_deterministic() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for trial in 0..200 {
+        let n_regions = rng.range_usize(0, 6);
+        let mut c = Checkpoint::new(
+            &format!("n{}", rng.below(5)),
+            rng.range_usize(0, 64),
+            rng.next_u64() % 1_000_000,
+        );
+        for _ in 0..n_regions {
+            let len = rng.range_usize(0, 4096);
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            c.push_region(rng.next_u64() as u32, data);
+        }
+        let enc1 = c.encode();
+        let enc2 = c.encode();
+        assert_eq!(enc1, enc2, "trial {trial}: encode not deterministic");
+        let d = Checkpoint::decode(&enc1).unwrap();
+        assert_eq!(d, c, "trial {trial}");
+        let enc3 = d.encode();
+        assert_eq!(enc1, enc3, "trial {trial}: re-encode differs");
+    }
+}
+
+/// Any single corrupted byte in a VCKP container is detected.
+#[test]
+fn prop_vckp_crc_catches_any_single_corruption() {
+    let mut rng = Rng::new(0xBEEF);
+    let mut c = Checkpoint::new("x", 1, 2);
+    let mut data = vec![0u8; 2048];
+    rng.fill_bytes(&mut data);
+    c.push_region(0, data);
+    let enc = c.encode();
+    for _ in 0..300 {
+        let pos = rng.range_usize(0, enc.len());
+        let bit = 1u8 << rng.below(8);
+        let mut bad = enc.clone();
+        bad[pos] ^= bit;
+        assert!(
+            Checkpoint::decode(&bad).is_err(),
+            "corruption at byte {pos} bit {bit} undetected"
+        );
+    }
+}
+
+/// XOR backends agree on arbitrary shapes, and parity reconstructs any
+/// erased buffer.
+#[test]
+fn prop_xor_backends_agree_and_reconstruct() {
+    let mut rng = Rng::new(0xAB);
+    for trial in 0..60 {
+        let k = rng.range_usize(2, 9);
+        let len = rng.range_usize(1, 20_000);
+        let bufs: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let mut b = vec![0u8; len];
+                rng.fill_bytes(&mut b);
+                b
+            })
+            .collect();
+        let refs: Vec<&[u8]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let scalar = xor_fold(&refs, &XorBackend::NativeScalar).unwrap();
+        let wide = xor_fold(&refs, &XorBackend::NativeWide).unwrap();
+        assert_eq!(scalar, wide, "trial {trial} k={k} len={len}");
+        // Erase buffer e; parity ^ others == erased.
+        let e = rng.range_usize(0, k);
+        let mut pieces: Vec<&[u8]> = vec![&scalar];
+        for (i, b) in bufs.iter().enumerate() {
+            if i != e {
+                pieces.push(b);
+            }
+        }
+        let rebuilt = xor_fold(&pieces, &XorBackend::NativeWide).unwrap();
+        assert_eq!(rebuilt, bufs[e], "trial {trial} erase {e}");
+    }
+}
+
+/// Topology invariants for arbitrary shapes: partner bijectivity on a
+/// different node; erasure groups are consistent partitions with
+/// node-disjoint members.
+#[test]
+fn prop_topology_invariants() {
+    let mut rng = Rng::new(0x7070);
+    for _ in 0..100 {
+        let nodes = rng.range_usize(2, 17);
+        let rpn = rng.range_usize(1, 5);
+        let t = Topology::new(nodes, rpn);
+        let world = t.world_size();
+        // Partner is a bijection with distinct node.
+        let mut seen = vec![false; world];
+        for r in 0..world {
+            let p = t.partner_of(r);
+            assert!(!seen[p], "partner collision");
+            seen[p] = true;
+            assert_ne!(t.node_of(r), t.node_of(p));
+            assert_eq!(t.partner_source(p), r);
+        }
+        // Erasure groups for every divisor group size.
+        for g in 2..=nodes {
+            if nodes % g != 0 {
+                continue;
+            }
+            for r in 0..world {
+                let grp = t.erasure_group(r, g);
+                assert_eq!(grp.len(), g);
+                assert!(grp.contains(&r));
+                let distinct_nodes: std::collections::BTreeSet<_> =
+                    grp.iter().map(|&m| t.node_of(m)).collect();
+                assert_eq!(distinct_nodes.len(), g, "group members share nodes");
+                for &m in &grp {
+                    assert_eq!(t.erasure_group(m, g), grp, "inconsistent group");
+                }
+            }
+        }
+    }
+}
+
+/// JSON roundtrip for arbitrary generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => {
+                // Limit magnitude so f64 formatting roundtrips exactly.
+                Json::Num((rng.next_u64() % (1u64 << 50)) as f64 - (1u64 << 49) as f64)
+            }
+            3 => {
+                let len = rng.range_usize(0, 12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\\'
+                        }
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.range_usize(0, 5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.range_usize(0, 5) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    let mut rng = Rng::new(0x15);
+    for trial in 0..300 {
+        let doc = gen(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("trial {trial}: {e}\n{text}"));
+        assert_eq!(doc, back, "trial {trial}");
+        let pretty = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(doc, pretty, "trial {trial} (pretty)");
+    }
+}
+
+/// Failure schedules: events sorted, scopes valid for the topology.
+#[test]
+fn prop_failure_schedules_valid() {
+    use veloc::cluster::{FailureInjector, FailureScope};
+    let mut rng = Rng::new(0xF417);
+    for _ in 0..30 {
+        let nodes = rng.range_usize(2, 12);
+        let rpn = rng.range_usize(1, 4);
+        let t = Topology::new(nodes, rpn);
+        let inj = FailureInjector::new(t, rng.range_f64(50.0, 5000.0));
+        let mut srng = rng.fork(1);
+        let events = inj.schedule(&mut srng, 20_000.0);
+        let mut prev = 0.0;
+        for e in &events {
+            assert!(e.at >= prev);
+            prev = e.at;
+            match &e.scope {
+                FailureScope::Rank(r) => assert!(*r < t.world_size()),
+                FailureScope::Node(n) => assert!(*n < nodes),
+                FailureScope::MultiNode(ns) => {
+                    assert!(!ns.is_empty());
+                    assert!(ns.iter().all(|n| *n < nodes));
+                }
+                FailureScope::System => {}
+            }
+            let affected = inj.affected_ranks(&e.scope);
+            assert!(!affected.is_empty());
+            assert!(affected.iter().all(|r| *r < t.world_size()));
+        }
+    }
+}

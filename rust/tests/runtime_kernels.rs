@@ -1,0 +1,208 @@
+//! Integration tests of the AOT kernel path: full VeloC runtime with
+//! `use_kernels = true` (erasure XOR + checksum through PJRT), DNN trainer
+//! end-to-end, and ML interval optimizer training through PJRT.
+//!
+//! These tests need `make artifacts`; they self-skip otherwise.
+
+use std::sync::Arc;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::app::{CaptureMode, DnnTrainer};
+use veloc::cluster::FailureScope;
+use veloc::interval::{dataset, NnOptimizer};
+use veloc::pipeline::{CkptStatus, LEVEL_ERASURE};
+use veloc::runtime::{default_artifacts_dir, PjrtEngine};
+
+fn have_artifacts() -> bool {
+    let ok = default_artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn kernel_runtime(nodes: usize) -> Arc<VelocRuntime> {
+    let mut cfg = VelocConfig::default().with_nodes(nodes, 1);
+    cfg.use_kernels = true;
+    cfg.stack.use_kernels = true;
+    cfg.stack.erasure_group = 4;
+    VelocRuntime::new(cfg).unwrap()
+}
+
+/// Kernel runtime without the group-collective erasure level — for
+/// single-client scenarios (only one rank checkpoints, so erasure's
+/// group barrier would just time out in the pipeline tail).
+fn solo_kernel_runtime(nodes: usize) -> Arc<VelocRuntime> {
+    let mut cfg = VelocConfig::default().with_nodes(nodes, 1);
+    cfg.use_kernels = true;
+    cfg.stack.use_kernels = true;
+    cfg.stack.erasure_group = 0;
+    VelocRuntime::new(cfg).unwrap()
+}
+
+#[test]
+fn kernel_erasure_rebuild_matches_bytes() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = kernel_runtime(8);
+    let world = rt.topology().world_size();
+    let mut datas = Vec::new();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let rt = Arc::clone(&rt);
+            std::thread::spawn(move || {
+                let client = rt.client(rank);
+                let data = vec![rank as u8 ^ 0x5A; 96 << 10];
+                client.mem_protect(0, data.clone());
+                client.checkpoint("kx", 1).unwrap();
+                let st = client.checkpoint_wait("kx", 1).unwrap();
+                assert!(matches!(st, CkptStatus::Done(_)));
+                data
+            })
+        })
+        .collect();
+    for h in handles {
+        datas.push(h.join().unwrap());
+    }
+    rt.drain();
+    // Kill an adjacent node pair: rank 4's partner copy (on node 5) dies
+    // with it, so only the kernel-backed erasure rebuild can serve rank 4.
+    rt.inject_failure(&FailureScope::MultiNode(vec![4, 5]));
+    rt.revive_all();
+    let client = rt.client(4);
+    let handle = client.mem_protect(0, Vec::new());
+    let info = client.restart("kx").unwrap().expect("erasure restore");
+    assert_eq!(info.level, LEVEL_ERASURE);
+    assert_eq!(*handle.lock().unwrap(), datas[4]);
+    // Rank 5 recovers too (partner copy on surviving node 6).
+    let client5 = rt.client(5);
+    let handle5 = client5.mem_protect(0, Vec::new());
+    client5.restart("kx").unwrap().expect("restore");
+    assert_eq!(*handle5.lock().unwrap(), datas[5]);
+}
+
+#[test]
+fn kernel_checksum_validates_and_rejects() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = solo_kernel_runtime(4);
+    let client = rt.client(0);
+    client.mem_protect(0, vec![9u8; 32 << 10]);
+    client.checkpoint("kc", 1).unwrap();
+    client.checkpoint_wait("kc", 1).unwrap();
+    rt.drain();
+    // Registry carries a kernel digest.
+    let info = rt.env().registry.info("kc", 1, 0).unwrap();
+    assert!(info.checksum.is_some());
+    // Restart validates against it.
+    let handle = client.mem_protect(0, Vec::new());
+    assert!(client.restart("kc").unwrap().is_some());
+    assert_eq!(*handle.lock().unwrap(), vec![9u8; 32 << 10]);
+}
+
+#[test]
+fn dnn_trainer_learns_and_survives_failure() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = solo_kernel_runtime(4);
+    let engine = PjrtEngine::load(&default_artifacts_dir()).unwrap();
+    let client = rt.client(0);
+    let mut trainer = DnnTrainer::new(
+        &client,
+        Arc::clone(&engine),
+        "dnn",
+        0.05,
+        CaptureMode::FineGrained,
+        3,
+    )
+    .unwrap();
+    assert!(trainer.param_count() > 500_000);
+    let mut first = f32::NAN;
+    let mut at_ckpt = f32::NAN;
+    for i in 0..30 {
+        let loss = trainer.train_step().unwrap();
+        if i == 0 {
+            first = loss;
+        }
+        at_ckpt = loss;
+    }
+    let v = trainer.checkpoint(&client).unwrap();
+    client.checkpoint_wait("dnn", v).unwrap();
+    rt.drain();
+    assert!(at_ckpt < first, "training must learn: {first} -> {at_ckpt}");
+
+    // Node failure; restore into a fresh trainer (fresh process model).
+    rt.inject_failure(&FailureScope::Node(0));
+    rt.revive_all();
+    let client2 = rt.client(0);
+    let mut t2 = DnnTrainer::new(
+        &client2,
+        Arc::clone(&engine),
+        "dnn",
+        0.05,
+        CaptureMode::FineGrained,
+        3,
+    )
+    .unwrap();
+    let restored = t2.restart(&client2).unwrap().expect("restart");
+    assert_eq!(restored, 30);
+    assert_eq!(t2.step, 30);
+    // Restored parameters keep the learned loss (same data stream seed,
+    // so the next losses continue from the checkpointed regime).
+    let next = t2.train_step().unwrap();
+    assert!(
+        next < first * 0.8,
+        "restored model should not regress to init: {next} vs {first}"
+    );
+}
+
+#[test]
+fn monolithic_capture_equivalent_contents() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = solo_kernel_runtime(4);
+    let engine = PjrtEngine::load(&default_artifacts_dir()).unwrap();
+    let client = rt.client(0);
+    let mut trainer = DnnTrainer::new(
+        &client,
+        engine,
+        "mono",
+        0.05,
+        CaptureMode::Monolithic,
+        3,
+    )
+    .unwrap();
+    for _ in 0..3 {
+        trainer.train_step().unwrap();
+    }
+    let v = trainer.checkpoint(&client).unwrap();
+    client.checkpoint_wait("mono", v).unwrap();
+    rt.drain();
+    let info = rt.env().registry.info("mono", v, 0).unwrap();
+    assert!(info.bytes > 2_000_000, "all tensors captured: {}", info.bytes);
+}
+
+#[test]
+fn nn_interval_optimizer_trains_through_pjrt() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = PjrtEngine::load(&default_artifacts_dir()).unwrap();
+    let mut nn = NnOptimizer::new(engine).unwrap();
+    let data = dataset::generate(48, 6, 2, 5);
+    let hist = nn.fit(&data, 60, 0.02, 9).unwrap();
+    assert!(
+        hist.last().unwrap() < &(hist[0] * 0.8),
+        "NN loss must fall: {:?} -> {:?}",
+        hist.first(),
+        hist.last()
+    );
+    let mae = nn.mae(&data).unwrap();
+    assert!(mae < 1.0, "train MAE in log10 space too big: {mae}");
+    // Prediction is a usable interval.
+    let w = nn.predict_interval(&data[0].features).unwrap();
+    assert!(w.is_finite() && w > 0.5 && w < 1e6, "{w}");
+}
