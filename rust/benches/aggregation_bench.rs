@@ -1,0 +1,113 @@
+//! E-agg — aggregated vs file-per-rank PFS flush (model time mode).
+//!
+//! Sweeps rank count x per-rank checkpoint size and compares the modeled
+//! aggregate flush throughput of the file-per-rank pattern (one PFS object
+//! per rank, paying the per-op latency every time) against the aggregated
+//! containers (per-group write combining; few large sequential writes).
+//! The acceptance shape: >= 2x at 64 ranks x 1 MiB.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+use veloc::aggregation::{AggregationConfig, Aggregator};
+use veloc::cluster::Topology;
+use veloc::storage::{FabricConfig, StorageFabric};
+
+fn fabric() -> Arc<StorageFabric> {
+    Arc::new(
+        StorageFabric::build(&FabricConfig {
+            nodes: 8,
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+/// Modeled time for one collective flush wave, file-per-rank.
+fn file_per_rank_secs(ranks: usize, bytes: usize) -> f64 {
+    let f = fabric();
+    let data = Arc::new(vec![0xABu8; bytes]);
+    let mut total = Duration::ZERO;
+    for r in 0..ranks {
+        let stat = f
+            .pfs()
+            .put_shared(&format!("pfs.app.r{r}.v1"), &data)
+            .unwrap();
+        total += stat.modeled;
+    }
+    total.as_secs_f64()
+}
+
+/// Modeled time for the same wave through the aggregator; also returns
+/// (containers, mean write bytes, write amplification).
+fn aggregated_secs(ranks: usize, bytes: usize, group: usize) -> (f64, u64, f64, f64) {
+    let data = Arc::new(vec![0xABu8; bytes]);
+    let agg = Aggregator::new(
+        Topology::new(ranks, 1),
+        fabric(),
+        AggregationConfig {
+            enabled: true,
+            group_ranks: group,
+            ..Default::default()
+        },
+        None,
+        None,
+    );
+    let mut total = Duration::ZERO;
+    for r in 0..ranks {
+        let stat = agg.submit("app", 1, r, "raw", Arc::clone(&data)).unwrap();
+        total += stat.modeled;
+    }
+    total += agg.flush_all().unwrap().modeled;
+    let rep = agg.report();
+    (
+        total.as_secs_f64(),
+        rep.containers,
+        rep.mean_write_bytes(),
+        rep.write_amplification(),
+    )
+}
+
+fn main() {
+    harness::section("E-agg: file-per-rank vs aggregated PFS flush (model)");
+    println!(
+        "{:>6} {:>9} {:>6} {:>13} {:>13} {:>8} {:>6} {:>12} {:>7}",
+        "ranks", "size", "group", "fpr agg-bw", "agg agg-bw", "speedup", "conts", "mean write", "amplif"
+    );
+    let group = 8usize;
+    for &ranks in &[8usize, 64, 256] {
+        for &kib in &[256usize, 1024, 4096] {
+            let bytes = kib << 10;
+            let total_bytes = (ranks * bytes) as f64;
+            let fpr = file_per_rank_secs(ranks, bytes);
+            let (agg, containers, mean_write, amplif) =
+                aggregated_secs(ranks, bytes, group);
+            let speedup = fpr / agg.max(1e-12);
+            println!(
+                "{:>6} {:>8}K {:>6} {:>10.2} GB/s {:>10.2} GB/s {:>7.1}x {:>6} {:>9.1} MiB {:>7.4}",
+                ranks,
+                kib,
+                group,
+                total_bytes / fpr / 1e9,
+                total_bytes / agg / 1e9,
+                speedup,
+                containers,
+                mean_write / (1 << 20) as f64,
+                amplif
+            );
+            if ranks == 64 && kib == 1024 {
+                assert!(
+                    speedup >= 2.0,
+                    "acceptance: >= 2x at 64 ranks x 1 MiB, got {speedup:.2}x"
+                );
+            }
+        }
+    }
+    println!(
+        "\nshape: per-op PFS latency dominates small per-rank objects; packing\n\
+         a group's wave into one sequential container amortizes it. The win\n\
+         shrinks as per-rank checkpoints grow (bandwidth-bound regime)."
+    );
+}

@@ -1,0 +1,295 @@
+//! VAGG — aggregated checkpoint container format.
+//!
+//! One container coalesces many per-rank checkpoint payloads (VCKP or zlib
+//! blobs) into a single large sequential object, the write pattern the PFS
+//! is good at. Layout (little-endian):
+//!
+//! ```text
+//! magic   "VAGG"            4 bytes
+//! version u32               format version (1)
+//! hlen    u32               header JSON length
+//! header  JSON              {"container","group","segments":[
+//!                             {"name","version","rank","len","encoding","crc"}]}
+//! body    segment payloads  concatenated in header order
+//! crc     u32               CRC32 of everything above
+//! ```
+//!
+//! The header is *self-describing*: segment offsets are the cumulative sums
+//! of the declared lengths, so the segment index can always be rebuilt from
+//! container headers alone (the missing-index recovery path). Each segment
+//! additionally carries its own CRC32 so a single-rank extraction validates
+//! without touching the rest of the body.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+pub const AGG_MAGIC: &[u8; 4] = b"VAGG";
+pub const AGG_VERSION: u32 = 1;
+
+/// Metadata of one packed segment (one rank's checkpoint payload).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentMeta {
+    pub name: String,
+    pub version: u64,
+    pub rank: usize,
+    pub len: usize,
+    /// Payload encoding tag ("raw" VCKP or "zlib").
+    pub encoding: String,
+    /// CRC32 of the segment payload bytes.
+    pub crc: u32,
+}
+
+/// Decoded container header.
+#[derive(Clone, Debug)]
+pub struct ContainerHeader {
+    /// Container id (also its storage key suffix).
+    pub id: String,
+    /// Aggregation group that produced it.
+    pub group: usize,
+    pub segments: Vec<SegmentMeta>,
+    /// Byte offset of the body (first segment payload) in the container.
+    pub body_offset: usize,
+}
+
+impl ContainerHeader {
+    /// Offset of segment `i`'s payload relative to the container start.
+    pub fn segment_offset(&self, i: usize) -> usize {
+        let before: usize = self.segments[..i].iter().map(|s| s.len).sum();
+        self.body_offset + before
+    }
+
+    /// Find a segment by its (name, version, rank) identity.
+    pub fn find(&self, name: &str, version: u64, rank: usize) -> Option<usize> {
+        self.segments
+            .iter()
+            .position(|s| s.rank == rank && s.version == version && s.name == name)
+    }
+}
+
+/// Serialize segments into one VAGG container.
+pub fn encode(id: &str, group: usize, segments: &[(SegmentMeta, &[u8])]) -> Vec<u8> {
+    let seg_json: Vec<Json> = segments
+        .iter()
+        .map(|(m, _)| {
+            Json::obj()
+                .set("name", m.name.as_str())
+                .set("version", m.version)
+                .set("rank", m.rank)
+                .set("len", m.len as u64)
+                .set("encoding", m.encoding.as_str())
+                .set("crc", m.crc as u64)
+        })
+        .collect();
+    let header = Json::obj()
+        .set("container", id)
+        .set("group", group)
+        .set("segments", Json::Arr(seg_json))
+        .to_string();
+    let hbytes = header.as_bytes();
+    let body_len: usize = segments.iter().map(|(m, _)| m.len).sum();
+    let mut out = Vec::with_capacity(4 + 4 + 4 + hbytes.len() + body_len + 4);
+    out.extend_from_slice(AGG_MAGIC);
+    out.extend_from_slice(&AGG_VERSION.to_le_bytes());
+    out.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(hbytes);
+    for (_, data) in segments {
+        out.extend_from_slice(data);
+    }
+    let crc = crc32fast::hash(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse a container header (without validating the body — extraction
+/// validates per-segment CRCs, so index rebuilds stay cheap even when only
+/// the header region is intact).
+pub fn decode_header(buf: &[u8]) -> Result<ContainerHeader> {
+    if buf.len() < 12 {
+        bail!("VAGG too short ({} bytes)", buf.len());
+    }
+    if &buf[0..4] != AGG_MAGIC {
+        bail!("bad VAGG magic");
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != AGG_VERSION {
+        bail!("unsupported VAGG version {version}");
+    }
+    let hlen = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let hend = 12 + hlen;
+    if buf.len() < hend {
+        bail!("VAGG header truncated");
+    }
+    let header = std::str::from_utf8(&buf[12..hend])
+        .map_err(|_| anyhow!("VAGG header not utf-8"))?;
+    let j = Json::parse(header).map_err(|e| anyhow!("VAGG header: {e}"))?;
+    let id = j
+        .get("container")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("header missing container id"))?
+        .to_string();
+    let group = j
+        .get("group")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("header missing group"))?;
+    let mut segments = Vec::new();
+    for s in j
+        .get("segments")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("header missing segments"))?
+    {
+        segments.push(SegmentMeta {
+            name: s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("segment missing name"))?
+                .to_string(),
+            version: s
+                .get("version")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("segment missing version"))?,
+            rank: s
+                .get("rank")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("segment missing rank"))?,
+            len: s
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("segment missing len"))?,
+            encoding: s.str_or("encoding", "raw").to_string(),
+            crc: s.get("crc").and_then(Json::as_u64).unwrap_or(0) as u32,
+        });
+    }
+    // Reject headers whose declared lengths overflow: segment_offset sums
+    // them, and a hostile/corrupt header must not be able to panic it.
+    segments
+        .iter()
+        .try_fold(0usize, |acc, s| acc.checked_add(s.len))
+        .ok_or_else(|| anyhow!("VAGG header declares oversized body"))?;
+    Ok(ContainerHeader {
+        id,
+        group,
+        segments,
+        body_offset: hend,
+    })
+}
+
+/// Extract one segment's payload, validating bounds and the per-segment
+/// CRC (catches truncated or corrupted containers without relying on the
+/// trailing whole-container checksum).
+pub fn extract(buf: &[u8], header: &ContainerHeader, i: usize) -> Result<Vec<u8>> {
+    let meta = header
+        .segments
+        .get(i)
+        .ok_or_else(|| anyhow!("segment index {i} out of range"))?;
+    let off = header.segment_offset(i);
+    // The last 4 container bytes are the trailing CRC, never payload.
+    let end = off
+        .checked_add(meta.len)
+        .and_then(|e| e.checked_add(4))
+        .ok_or_else(|| anyhow!("segment bounds overflow"))?;
+    if end > buf.len() {
+        bail!(
+            "segment {} r{} v{} overruns container ({} + {} > {})",
+            meta.name,
+            meta.rank,
+            meta.version,
+            off,
+            meta.len,
+            buf.len().saturating_sub(4)
+        );
+    }
+    let data = &buf[off..off + meta.len];
+    let actual = crc32fast::hash(data);
+    if actual != meta.crc {
+        bail!(
+            "segment {} r{} v{} CRC mismatch: stored {:#010x}, actual {actual:#010x}",
+            meta.name,
+            meta.rank,
+            meta.version,
+            meta.crc
+        );
+    }
+    Ok(data.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(name: &str, version: u64, rank: usize, data: &[u8]) -> SegmentMeta {
+        SegmentMeta {
+            name: name.to_string(),
+            version,
+            rank,
+            len: data.len(),
+            encoding: "raw".to_string(),
+            crc: crc32fast::hash(data),
+        }
+    }
+
+    fn sample() -> (Vec<u8>, Vec<Vec<u8>>) {
+        let payloads = vec![vec![1u8; 100], vec![2u8; 250], vec![3u8; 7]];
+        let metas: Vec<(SegmentMeta, &[u8])> = payloads
+            .iter()
+            .enumerate()
+            .map(|(r, p)| (seg("app", 3, r, p), p.as_slice()))
+            .collect();
+        (encode("g0.c1", 0, &metas), payloads)
+    }
+
+    #[test]
+    fn roundtrip_all_segments() {
+        let (buf, payloads) = sample();
+        let h = decode_header(&buf).unwrap();
+        assert_eq!(h.id, "g0.c1");
+        assert_eq!(h.group, 0);
+        assert_eq!(h.segments.len(), 3);
+        for (i, p) in payloads.iter().enumerate() {
+            assert_eq!(&extract(&buf, &h, i).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn find_by_identity() {
+        let (buf, _) = sample();
+        let h = decode_header(&buf).unwrap();
+        assert_eq!(h.find("app", 3, 1), Some(1));
+        assert_eq!(h.find("app", 2, 1), None);
+        assert_eq!(h.find("other", 3, 1), None);
+    }
+
+    #[test]
+    fn truncation_detected_on_extract() {
+        let (buf, _) = sample();
+        let h = decode_header(&buf).unwrap();
+        // Cut into the last segment's payload.
+        let cut = &buf[..buf.len() - 8];
+        assert!(extract(cut, &h, 2).is_err());
+        // Earlier segments still extract (partial-container salvage).
+        assert!(extract(cut, &h, 0).is_ok());
+    }
+
+    #[test]
+    fn corruption_detected_by_segment_crc() {
+        let (mut buf, _) = sample();
+        let h = decode_header(&buf).unwrap();
+        let off = h.segment_offset(1);
+        buf[off + 3] ^= 0xFF;
+        assert!(extract(&buf, &h, 1).is_err());
+        assert!(extract(&buf, &h, 0).is_ok());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let (mut buf, _) = sample();
+        buf[0] = b'X';
+        assert!(decode_header(&buf).is_err());
+    }
+
+    #[test]
+    fn header_truncation_rejected() {
+        let (buf, _) = sample();
+        assert!(decode_header(&buf[..10]).is_err());
+        assert!(decode_header(&buf[..20]).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Segment index: `(name, version, rank) → (container, offset, len)`.
+//!
+//! The index is the fast path for single-rank restores out of aggregated
+//! containers (one `get` of the right container instead of scanning every
+//! container header). It is persisted as a small JSON object next to the
+//! containers; because the containers are self-describing, a lost or
+//! corrupted index is never fatal — [`SegmentIndex::load_json`] failures
+//! fall back to a rebuild from container headers (see
+//! `Aggregator::rebuild_index`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Storage key of the persisted index on the drain target tier.
+pub const INDEX_KEY: &str = "agg.index.json";
+
+/// Location of one rank's checkpoint payload inside a container.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentLoc {
+    /// Storage key of the container holding the segment.
+    pub container: String,
+    /// Byte offset of the payload within the container.
+    pub offset: usize,
+    pub len: usize,
+    /// Payload encoding tag ("raw" or "zlib").
+    pub encoding: String,
+    /// CRC32 of the payload bytes.
+    pub crc: u32,
+}
+
+/// In-memory index (callers serialize access; the aggregator wraps it in a
+/// mutex).
+#[derive(Default)]
+pub struct SegmentIndex {
+    entries: HashMap<(String, u64, usize), SegmentLoc>,
+}
+
+impl SegmentIndex {
+    pub fn new() -> Self {
+        SegmentIndex::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn insert(&mut self, name: &str, version: u64, rank: usize, loc: SegmentLoc) {
+        self.entries
+            .insert((name.to_string(), version, rank), loc);
+    }
+
+    pub fn get(&self, name: &str, version: u64, rank: usize) -> Option<&SegmentLoc> {
+        self.entries.get(&(name.to_string(), version, rank))
+    }
+
+    pub fn remove_version(&mut self, name: &str, version: u64) {
+        self.entries
+            .retain(|(n, v, _), _| !(n == name && *v == version));
+    }
+
+    /// Container keys holding at least one segment of (name, version).
+    pub fn containers_of_version(&self, name: &str, version: u64) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|((n, ver, _), _)| n == name && *ver == version)
+            .map(|(_, loc)| loc.container.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Does any live segment still point into this container?
+    pub fn references_container(&self, key: &str) -> bool {
+        self.entries.values().any(|loc| loc.container == key)
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Serialize for persistence alongside the containers.
+    pub fn to_json(&self) -> Json {
+        // Sort for a deterministic on-tier representation.
+        let mut keys: Vec<_> = self.entries.keys().cloned().collect();
+        keys.sort();
+        let segments: Vec<Json> = keys
+            .iter()
+            .map(|k| {
+                let loc = &self.entries[k];
+                Json::obj()
+                    .set("name", k.0.as_str())
+                    .set("version", k.1)
+                    .set("rank", k.2)
+                    .set("container", loc.container.as_str())
+                    .set("offset", loc.offset as u64)
+                    .set("len", loc.len as u64)
+                    .set("encoding", loc.encoding.as_str())
+                    .set("crc", loc.crc as u64)
+            })
+            .collect();
+        Json::obj().set("segments", Json::Arr(segments))
+    }
+
+    /// Merge entries from a persisted index document. Fails on malformed
+    /// documents (the caller then rebuilds from container headers).
+    pub fn load_json(&mut self, j: &Json) -> Result<()> {
+        for s in j
+            .get("segments")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("index missing segments"))?
+        {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("index entry missing name"))?;
+            let version = s
+                .get("version")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("index entry missing version"))?;
+            let rank = s
+                .get("rank")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("index entry missing rank"))?;
+            let loc = SegmentLoc {
+                container: s
+                    .get("container")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("index entry missing container"))?
+                    .to_string(),
+                offset: s
+                    .get("offset")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("index entry missing offset"))?,
+                len: s
+                    .get("len")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("index entry missing len"))?,
+                encoding: s.str_or("encoding", "raw").to_string(),
+                crc: s.get("crc").and_then(Json::as_u64).unwrap_or(0) as u32,
+            };
+            self.insert(name, version, rank, loc);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loc(container: &str, offset: usize) -> SegmentLoc {
+        SegmentLoc {
+            container: container.to_string(),
+            offset,
+            len: 64,
+            encoding: "raw".to_string(),
+            crc: 0xABCD,
+        }
+    }
+
+    #[test]
+    fn insert_get_remove() {
+        let mut idx = SegmentIndex::new();
+        idx.insert("app", 1, 0, loc("agg.g0.c0", 32));
+        idx.insert("app", 1, 1, loc("agg.g0.c0", 96));
+        idx.insert("app", 2, 0, loc("agg.g0.c1", 32));
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx.get("app", 1, 1).unwrap().offset, 96);
+        assert!(idx.get("app", 3, 0).is_none());
+        idx.remove_version("app", 1);
+        assert_eq!(idx.len(), 1);
+        assert!(idx.get("app", 2, 0).is_some());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut idx = SegmentIndex::new();
+        idx.insert("app", 7, 3, loc("agg.g1.c4", 1024));
+        let j = idx.to_json();
+        let mut idx2 = SegmentIndex::new();
+        idx2.load_json(&j).unwrap();
+        assert_eq!(idx2.get("app", 7, 3), idx.get("app", 7, 3));
+    }
+
+    #[test]
+    fn malformed_json_rejected() {
+        let mut idx = SegmentIndex::new();
+        assert!(idx.load_json(&Json::obj()).is_err());
+        let j = Json::parse(r#"{"segments":[{"name":"a"}]}"#).unwrap();
+        assert!(idx.load_json(&j).is_err());
+    }
+}

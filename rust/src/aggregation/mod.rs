@@ -1,0 +1,119 @@
+//! Aggregated asynchronous flush (paper follow-on: *Towards Aggregated
+//! Asynchronous Checkpointing*, Gossman & Nicolae et al.).
+//!
+//! At exascale rank counts, a file-per-rank flush is exactly the PFS
+//! metadata/small-write pattern the paper's abstract warns about. This
+//! subsystem coalesces many per-rank checkpoints into a few large
+//! sequential container writes before they hit the shared tier:
+//!
+//! - [`Aggregator`] — per-group write-combining buffers absorbing level-4
+//!   flushes, drained under configurable policies (size threshold, age
+//!   threshold, version-complete barrier) in scheduler-gated chunks.
+//! - [`container`] — the self-describing VAGG container format.
+//! - [`index`] — the `(name, version, rank) → (container, offset, len)`
+//!   segment index, persisted next to the containers and rebuildable from
+//!   container headers when lost.
+//!
+//! `modules::transfer` routes through the aggregator when
+//! `VelocConfig::aggregation.enabled` is set; restore falls back to the
+//! aggregated containers transparently.
+
+pub mod aggregator;
+pub mod container;
+pub mod index;
+
+pub use aggregator::{AggregationReport, Aggregator, DrainStat, SubmitStat};
+pub use container::{ContainerHeader, SegmentMeta};
+pub use index::{SegmentIndex, SegmentLoc, INDEX_KEY};
+
+use std::time::Duration;
+
+/// Shared tier the aggregated containers drain to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggTarget {
+    /// Parallel file system (persistent).
+    Pfs,
+    /// Burst buffer (survives node failures, not full-system ones).
+    BurstBuffer,
+}
+
+impl AggTarget {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggTarget::Pfs => "pfs",
+            AggTarget::BurstBuffer => "burst-buffer",
+        }
+    }
+
+    /// Parse the JSON/CLI spelling (single source of truth for both).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "pfs" => Ok(AggTarget::Pfs),
+            "burst-buffer" | "bb" => Ok(AggTarget::BurstBuffer),
+            other => anyhow::bail!("aggregation target must be pfs|burst-buffer, got {other}"),
+        }
+    }
+}
+
+/// Aggregation knobs (see `VelocConfig::aggregation` and the JSON
+/// `"aggregation"` section).
+#[derive(Clone, Debug)]
+pub struct AggregationConfig {
+    /// Route level-4 flushes through the aggregator.
+    pub enabled: bool,
+    /// Ranks per write-combining group; 0 groups by node (the common
+    /// burst-buffer topology: one writer per node).
+    pub group_ranks: usize,
+    /// Size-threshold drain: flush a group once it buffers this much.
+    pub flush_bytes: u64,
+    /// Age-threshold drain: flush a group once its oldest segment has
+    /// waited this long.
+    pub max_delay: Duration,
+    /// Version-complete barrier: drain as soon as every rank of the group
+    /// submitted the same (name, version) — one container per checkpoint
+    /// wave per group.
+    pub version_barrier: bool,
+    /// Chunk size for scheduler-gated drain pacing (>= 4 KiB).
+    pub drain_chunk: usize,
+    pub target: AggTarget,
+}
+
+impl Default for AggregationConfig {
+    fn default() -> Self {
+        AggregationConfig {
+            enabled: false,
+            group_ranks: 0,
+            flush_bytes: 32 << 20,
+            max_delay: Duration::from_millis(500),
+            version_barrier: true,
+            drain_chunk: 4 << 20,
+            target: AggTarget::Pfs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = AggregationConfig::default();
+        assert!(!c.enabled);
+        assert_eq!(c.group_ranks, 0, "group by node by default");
+        assert!(c.version_barrier);
+        assert!(c.drain_chunk >= 4096);
+        assert_eq!(c.target, AggTarget::Pfs);
+    }
+
+    #[test]
+    fn target_names_roundtrip_parse() {
+        assert_eq!(AggTarget::Pfs.name(), "pfs");
+        assert_eq!(AggTarget::BurstBuffer.name(), "burst-buffer");
+        for t in [AggTarget::Pfs, AggTarget::BurstBuffer] {
+            assert_eq!(AggTarget::parse(t.name()).unwrap(), t);
+        }
+        assert_eq!(AggTarget::parse("bb").unwrap(), AggTarget::BurstBuffer);
+        assert!(AggTarget::parse("floppy").is_err());
+    }
+}

@@ -1,5 +1,6 @@
 //! Runtime configuration, loadable from JSON (`veloc --config file.json`).
 
+use crate::aggregation::{AggTarget, AggregationConfig};
 use crate::modules::{StackConfig, TierPolicy};
 use crate::pipeline::EngineMode;
 use crate::scheduler::SchedulerPolicy;
@@ -8,6 +9,10 @@ use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 use std::time::Duration;
+
+/// Smallest chunk the flush pacing paths accept. `TransferModule` used to
+/// clamp smaller values silently; configuration now rejects them instead.
+pub const MIN_FLUSH_CHUNK: usize = 4096;
 
 /// Full runtime configuration.
 #[derive(Clone)]
@@ -24,6 +29,9 @@ pub struct VelocConfig {
     pub wait_timeout: Duration,
     pub stack: StackConfig,
     pub fabric: FabricConfig,
+    /// Aggregated asynchronous flush (write-combining per-rank checkpoints
+    /// into shared containers).
+    pub aggregation: AggregationConfig,
     /// Override for the artifacts directory.
     pub artifacts: Option<PathBuf>,
 }
@@ -42,6 +50,7 @@ impl Default for VelocConfig {
             wait_timeout: Duration::from_secs(60),
             stack: StackConfig::default(),
             fabric,
+            aggregation: AggregationConfig::default(),
             artifacts: None,
         }
     }
@@ -101,6 +110,7 @@ impl VelocConfig {
             cfg.stack.with_partner = s.bool_or("partner", cfg.stack.with_partner);
             cfg.stack.with_transfer = s.bool_or("transfer", cfg.stack.with_transfer);
             cfg.stack.keep_versions = s.usize_or("keep_versions", cfg.stack.keep_versions);
+            cfg.stack.flush_chunk = s.usize_or("flush_chunk", cfg.stack.flush_chunk);
         } else {
             cfg.stack.use_kernels = cfg.use_kernels;
         }
@@ -117,11 +127,66 @@ impl VelocConfig {
                 cfg.fabric.time_mode = TimeMode::Emulate { scale };
             }
         }
-        // KV module needs the KV tier.
+        if let Some(a) = j.get("aggregation") {
+            cfg.aggregation.enabled = a.bool_or("enabled", cfg.aggregation.enabled);
+            cfg.aggregation.group_ranks =
+                a.usize_or("group_ranks", cfg.aggregation.group_ranks);
+            if let Some(mb) = a.get("flush_mb").and_then(Json::as_f64) {
+                if !(mb >= 0.0) {
+                    bail!("aggregation.flush_mb must be >= 0, got {mb}");
+                }
+                cfg.aggregation.flush_bytes = (mb * (1u64 << 20) as f64) as u64;
+            }
+            if let Some(ms) = a.get("max_delay_ms").and_then(Json::as_f64) {
+                if !(ms >= 0.0) {
+                    bail!("aggregation.max_delay_ms must be >= 0, got {ms}");
+                }
+                cfg.aggregation.max_delay = Duration::from_secs_f64(ms / 1e3);
+            }
+            cfg.aggregation.version_barrier =
+                a.bool_or("version_barrier", cfg.aggregation.version_barrier);
+            cfg.aggregation.drain_chunk =
+                a.usize_or("drain_chunk", cfg.aggregation.drain_chunk);
+            cfg.aggregation.target =
+                AggTarget::parse(a.str_or("target", cfg.aggregation.target.name()))?;
+        }
+        // KV module needs the KV tier; a burst-buffer drain target needs
+        // the burst-buffer tier.
         if cfg.stack.with_kv {
             cfg.fabric.with_kv = true;
         }
+        if cfg.aggregation.enabled && cfg.aggregation.target == AggTarget::BurstBuffer {
+            cfg.fabric.with_burst_buffer = true;
+        }
+        cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Reject configurations the runtime would otherwise have to patch up
+    /// silently. Called by `from_json` and `VelocRuntime::new`.
+    pub fn validate(&self) -> Result<()> {
+        if self.stack.flush_chunk < MIN_FLUSH_CHUNK {
+            bail!(
+                "stack.flush_chunk = {} is below the {} byte minimum: sub-4KiB \
+                 PFS writes defeat the flush pacing (raise flush_chunk)",
+                self.stack.flush_chunk,
+                MIN_FLUSH_CHUNK
+            );
+        }
+        if self.aggregation.drain_chunk < MIN_FLUSH_CHUNK {
+            bail!(
+                "aggregation.drain_chunk = {} is below the {} byte minimum",
+                self.aggregation.drain_chunk,
+                MIN_FLUSH_CHUNK
+            );
+        }
+        if self.aggregation.enabled
+            && self.aggregation.target == AggTarget::BurstBuffer
+            && !self.fabric.with_burst_buffer
+        {
+            bail!("aggregation targets the burst buffer but fabric.with_burst_buffer is off");
+        }
+        Ok(())
     }
 
     pub fn from_file(path: &std::path::Path) -> Result<Self> {
@@ -178,5 +243,72 @@ mod tests {
         let c = VelocConfig::default().with_nodes(16, 1);
         assert_eq!(c.fabric.nodes, 16);
         assert_eq!(c.ranks_per_node, 1);
+    }
+
+    #[test]
+    fn aggregation_section_parsed() {
+        let j = Json::parse(
+            r#"{
+                "aggregation": {"enabled": true, "group_ranks": 8,
+                                "flush_mb": 16, "max_delay_ms": 250,
+                                "version_barrier": false,
+                                "target": "burst-buffer"}
+            }"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert!(c.aggregation.enabled);
+        assert_eq!(c.aggregation.group_ranks, 8);
+        assert_eq!(c.aggregation.flush_bytes, 16 << 20);
+        assert_eq!(c.aggregation.max_delay, Duration::from_millis(250));
+        assert!(!c.aggregation.version_barrier);
+        assert_eq!(c.aggregation.target, AggTarget::BurstBuffer);
+        assert!(
+            c.fabric.with_burst_buffer,
+            "burst-buffer drain target implies the burst-buffer tier"
+        );
+    }
+
+    #[test]
+    fn bad_aggregation_target_rejected() {
+        let j = Json::parse(r#"{"aggregation": {"target": "floppy"}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn negative_aggregation_values_rejected() {
+        let j = Json::parse(r#"{"aggregation": {"max_delay_ms": -5}}"#).unwrap();
+        let err = VelocConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("max_delay_ms"), "{err}");
+        let j = Json::parse(r#"{"aggregation": {"flush_mb": -1}}"#).unwrap();
+        let err = VelocConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("flush_mb"), "{err}");
+    }
+
+    #[test]
+    fn sub_4k_flush_chunk_rejected() {
+        let j = Json::parse(r#"{"stack": {"flush_chunk": 512}}"#).unwrap();
+        let err = VelocConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("flush_chunk"), "{err}");
+
+        let mut c = VelocConfig::default();
+        c.stack.flush_chunk = 1024;
+        assert!(c.validate().is_err());
+        c.stack.flush_chunk = MIN_FLUSH_CHUNK;
+        assert!(c.validate().is_ok());
+
+        let mut c = VelocConfig::default();
+        c.aggregation.drain_chunk = 100;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn burst_buffer_target_without_tier_rejected() {
+        let mut c = VelocConfig::default();
+        c.aggregation.enabled = true;
+        c.aggregation.target = AggTarget::BurstBuffer;
+        assert!(c.validate().is_err());
+        c.fabric.with_burst_buffer = true;
+        assert!(c.validate().is_ok());
     }
 }

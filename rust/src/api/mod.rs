@@ -22,6 +22,7 @@ pub mod config;
 
 pub use config::VelocConfig;
 
+use crate::aggregation::Aggregator;
 use crate::cluster::{KillSwitch, Topology};
 use crate::metrics::Metrics;
 use crate::modules::{build_stack, ChecksumBackend, Env, VersionRegistry};
@@ -59,6 +60,7 @@ pub struct VelocRuntime {
 
 impl VelocRuntime {
     pub fn new(config: VelocConfig) -> Result<Arc<Self>> {
+        config.validate()?;
         let topology = Topology::new(config.nodes, config.ranks_per_node);
         let fabric = Arc::new(StorageFabric::build(&config.fabric)?);
         let registry = VersionRegistry::new();
@@ -94,12 +96,42 @@ impl VelocRuntime {
             config.fabric.pfs_bw,
         );
 
+        let metrics = Metrics::new();
+        let aggregator = if config.aggregation.enabled {
+            let agg = Aggregator::with_registry(
+                topology,
+                Arc::clone(&fabric),
+                config.aggregation.clone(),
+                Some(Arc::clone(&gate)),
+                Some(Arc::clone(&metrics)),
+                Some(Arc::clone(&registry)),
+            );
+            // Age-policy driver: a detached ticker drains groups whose
+            // oldest segment exceeded max_delay even when no further
+            // submits arrive. Holds only a Weak ref, so it dies with the
+            // runtime.
+            let weak = Arc::downgrade(&agg);
+            let period = (config.aggregation.max_delay / 2)
+                .max(std::time::Duration::from_millis(10));
+            std::thread::spawn(move || {
+                while let Some(a) = weak.upgrade() {
+                    let _ = a.flush_aged();
+                    drop(a);
+                    std::thread::sleep(period);
+                }
+            });
+            Some(agg)
+        } else {
+            None
+        };
+
         let env = Arc::new(Env {
             topology,
             fabric,
             pjrt: pjrt.clone(),
             registry,
             scheduler_gate: Some(gate),
+            aggregator,
         });
 
         // Mitigated policies run the active backend at low OS priority
@@ -138,7 +170,7 @@ impl VelocRuntime {
             backend,
             recovery,
             monitor,
-            metrics: Metrics::new(),
+            metrics,
         }))
     }
 
@@ -168,6 +200,11 @@ impl VelocRuntime {
 
     pub fn recovery(&self) -> &Recovery {
         &self.recovery
+    }
+
+    /// The write-combining aggregator, when aggregation is enabled.
+    pub fn aggregator(&self) -> Option<&Arc<Aggregator>> {
+        self.env.aggregator.as_ref()
     }
 
     pub fn engine(&self, rank: usize) -> &Arc<Engine> {
@@ -202,9 +239,17 @@ impl VelocRuntime {
         }
         for n in inj.affected_nodes(scope) {
             self.env.fabric.fail_node(n);
+            // Write-combining buffers are node memory: segments staged by
+            // the failed node's ranks die with it.
+            if let Some(agg) = &self.env.aggregator {
+                agg.fail_node(n);
+            }
         }
         if matches!(scope, crate::cluster::FailureScope::System) {
             self.env.fabric.fail_system();
+            if let Some(agg) = &self.env.aggregator {
+                agg.fail_all_buffers();
+            }
         }
         self.metrics.incr("failures.injected", 1);
     }
@@ -216,9 +261,19 @@ impl VelocRuntime {
         }
     }
 
-    /// Wait until the active backend drained all queued pipeline tails.
+    /// Wait until the active backend drained all queued pipeline tails,
+    /// then force out any checkpoint segments still buffered in the
+    /// aggregator (straggler groups below every drain threshold).
     pub fn drain(&self) {
         self.backend.wait_idle();
+        if let Some(agg) = &self.env.aggregator {
+            if let Err(e) = agg.flush_all() {
+                // Buffered segments are still volatile; make that visible
+                // instead of silently reporting a clean drain.
+                self.metrics.incr("agg.drain.errors", 1);
+                eprintln!("veloc: aggregated drain failed: {e:#}");
+            }
+        }
     }
 
     /// Cold restart: reload the persisted lineage of `name` from the PFS

@@ -6,7 +6,9 @@
 //! - **L3 (this crate)** — the VeloC runtime: client API
 //!   ([`api::VelocClient`]), module pipeline ([`pipeline`]), multi-level
 //!   resilience modules ([`modules`]), heterogeneous storage tiers
-//!   ([`storage`]), cluster + failure simulation ([`cluster`]), recovery
+//!   ([`storage`]), aggregated asynchronous flush ([`aggregation`]:
+//!   write-combining per-rank checkpoints into large shared-tier
+//!   containers), cluster + failure simulation ([`cluster`]), recovery
 //!   ([`recovery`]), background-flush scheduling ([`scheduler`]),
 //!   checkpoint-interval optimization ([`interval`]) and workloads ([`app`]).
 //! - **L2** — JAX compute graphs (interval MLP, seq2seq predictor, the
@@ -17,6 +19,7 @@
 //! Python runs only at build time (`make artifacts`); the request path is
 //! pure Rust + PJRT.
 
+pub mod aggregation;
 pub mod api;
 pub mod app;
 pub mod cluster;

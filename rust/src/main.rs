@@ -32,6 +32,10 @@ fn main() {
     .opt("mtbf", "2000", "interval: system MTBF seconds")
     .opt("l1-cost", "5", "interval: blocking checkpoint cost seconds")
     .flag("fail", "run: inject a node failure mid-run and restart")
+    .flag("aggregate", "coalesce per-rank flushes into shared containers")
+    .opt("agg-group-ranks", "0", "aggregation group size (0 = per node)")
+    .opt("agg-flush-mb", "32", "aggregation size-threshold drain (MiB)")
+    .opt("agg-target", "pfs", "aggregation drain tier: pfs | burst-buffer")
     .parse();
 
     let cmd = cli.positional().first().cloned().unwrap_or(cli.get("cmd"));
@@ -59,6 +63,15 @@ fn config_from(cli: &Cli) -> Result<VelocConfig> {
     };
     if path.is_empty() {
         cfg = cfg.with_nodes(cli.get_usize("nodes"), cli.get_usize("ranks-per-node"));
+    }
+    if cli.get_bool("aggregate") {
+        cfg.aggregation.enabled = true;
+        cfg.aggregation.group_ranks = cli.get_usize("agg-group-ranks");
+        cfg.aggregation.flush_bytes = (cli.get_u64("agg-flush-mb")) << 20;
+        cfg.aggregation.target = veloc::aggregation::AggTarget::parse(&cli.get("agg-target"))?;
+        if cfg.aggregation.target == veloc::aggregation::AggTarget::BurstBuffer {
+            cfg.fabric.with_burst_buffer = true;
+        }
     }
     Ok(cfg)
 }
@@ -169,6 +182,17 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         total_ckpts,
         format_duration(t0.elapsed())
     );
+    if let Some(agg) = rt.aggregator() {
+        let r = agg.report();
+        println!(
+            "aggregation: {} containers, {:.1} segments/container, mean write {}, \
+             write amplification {:.4}",
+            r.containers,
+            r.segments_per_container(),
+            format_bytes(r.mean_write_bytes() as u64),
+            r.write_amplification()
+        );
+    }
     println!("{}", rt.metrics().to_json().to_pretty());
     Ok(())
 }

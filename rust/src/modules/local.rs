@@ -141,6 +141,7 @@ mod tests {
             pjrt: None,
             registry: VersionRegistry::new(),
             scheduler_gate: None,
+            aggregator: None,
         })
     }
 

@@ -46,6 +46,9 @@ pub struct Env {
     pub registry: Arc<VersionRegistry>,
     /// Optional flush throttle installed by the scheduler.
     pub scheduler_gate: Option<Arc<dyn FlushGate>>,
+    /// When set, level-4 flushes route through the write-combining
+    /// aggregator instead of writing one shared-tier object per rank.
+    pub aggregator: Option<Arc<crate::aggregation::Aggregator>>,
 }
 
 /// Configuration of the default module stack.
@@ -132,6 +135,7 @@ pub fn build_stack(env: &Arc<Env>, cfg: &StackConfig) -> Result<Vec<Arc<dyn Modu
     stack.push(VersionModule::new(
         Arc::clone(&env.registry),
         Arc::clone(&env.fabric),
+        env.aggregator.clone(),
         cfg.keep_versions,
         env.topology.world_size(),
     ));
@@ -157,6 +161,7 @@ mod tests {
             pjrt: None,
             registry: VersionRegistry::new(),
             scheduler_gate: None,
+            aggregator: None,
         })
     }
 

@@ -28,9 +28,16 @@ pub struct TransferModule {
 
 impl TransferModule {
     pub fn new(env: Arc<Env>, chunk: usize) -> Arc<Self> {
+        // Config validation rejects sub-4KiB chunks (`VelocConfig::
+        // validate`); a direct caller bypassing it fails loudly here
+        // instead of getting a silently patched value.
+        assert!(
+            chunk >= 4096,
+            "transfer chunk {chunk} below the 4096-byte minimum"
+        );
         Arc::new(TransferModule {
             env,
-            chunk: chunk.max(4096),
+            chunk,
             switch: ModuleSwitch::new(true),
         })
     }
@@ -82,6 +89,21 @@ impl Module for TransferModule {
         } else {
             (Arc::clone(&ctx.encoded), false)
         };
+        // Aggregated path: hand the payload to the write-combining
+        // aggregator (it paces its own container drains under the gate)
+        // instead of writing a file-per-rank object to the shared tier.
+        if let Some(agg) = &self.env.aggregator {
+            let stat = agg.submit(&ctx.name, ctx.version, ctx.rank, ctx.encoding, data)?;
+            // Level-4 completion is only recorded once the bytes are
+            // durable: either here (this submit triggered the container
+            // drain) or by the aggregator itself when another rank's
+            // submit, the age ticker or a runtime drain flushes the
+            // group. A buffered segment is still volatile node memory.
+            if stat.drained {
+                ctx.record(self.name(), LEVEL_PFS, t0.elapsed().max(stat.modeled), stat.bytes);
+            }
+            return Ok(Outcome::Done);
+        }
         let pfs = self.env.fabric.pfs();
         let key = ctx.key("pfs");
         // Pace the flush chunk by chunk under the scheduler gate (priority
@@ -104,13 +126,19 @@ impl Module for TransferModule {
             return Ok(None);
         };
         let key = format!("pfs.{}.r{}.v{}", ctx.name, ctx.rank, version);
-        match self.env.fabric.pfs().get(&key) {
-            Some((data, _)) => {
-                let raw = maybe_decompress(data)?;
-                Ok(Some(Checkpoint::decode(&raw)?))
-            }
-            None => Ok(None),
+        if let Some((data, _)) = self.env.fabric.pfs().get(&key) {
+            let raw = maybe_decompress(data)?;
+            return Ok(Some(Checkpoint::decode(&raw)?));
         }
+        // No file-per-rank object: try the aggregated containers (index
+        // lookup, with persisted-index and header-rebuild fallbacks).
+        if let Some(agg) = &self.env.aggregator {
+            if let Some(data) = agg.restore(&ctx.name, version, ctx.rank)? {
+                let raw = maybe_decompress(data)?;
+                return Ok(Some(Checkpoint::decode(&raw)?));
+            }
+        }
+        Ok(None)
     }
 
     fn switch(&self) -> &ModuleSwitch {

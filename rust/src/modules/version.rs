@@ -68,6 +68,36 @@ impl VersionRegistry {
         info.encoding = encoding.to_string();
     }
 
+    /// Append a completed level without touching the recorded payload
+    /// size (the aggregator calls this at container-drain time, when the
+    /// payload became durable — it only knows encoded container bytes, and
+    /// the pipeline already recorded the accurate payload size).
+    pub fn record_level_only(
+        &self,
+        name: &str,
+        version: u64,
+        rank: usize,
+        level: u8,
+        encoding: &str,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let info = g
+            .entries
+            .entry(name.to_string())
+            .or_default()
+            .entry(version)
+            .or_default()
+            .entry(rank)
+            .or_default();
+        if !info.levels.contains(&level) {
+            info.levels.push(level);
+            info.levels.sort_unstable();
+        }
+        if info.encoding.is_empty() {
+            info.encoding = encoding.to_string();
+        }
+    }
+
     pub fn set_checksum(&self, name: &str, version: u64, rank: usize, crc: u32) {
         let mut g = self.inner.lock().unwrap();
         g.entries
@@ -222,6 +252,8 @@ impl VersionRegistry {
 pub struct VersionModule {
     registry: Arc<VersionRegistry>,
     fabric: Arc<crate::storage::StorageFabric>,
+    /// When aggregation is on, GC also reclaims orphaned containers.
+    aggregator: Option<Arc<crate::aggregation::Aggregator>>,
     /// Keep this many newest versions per name (per rank).
     keep: usize,
     /// World size: GC only touches versions every rank has finished
@@ -236,12 +268,14 @@ impl VersionModule {
     pub fn new(
         registry: Arc<VersionRegistry>,
         fabric: Arc<crate::storage::StorageFabric>,
+        aggregator: Option<Arc<crate::aggregation::Aggregator>>,
         keep: usize,
         world: usize,
     ) -> Arc<Self> {
         Arc::new(VersionModule {
             registry,
             fabric,
+            aggregator,
             keep: keep.max(1),
             world: world.max(1),
             switch: ModuleSwitch::new(true),
@@ -268,6 +302,11 @@ impl VersionModule {
         self.fabric.pfs().delete(&format!("pfs.{suffix}"));
         if let Some(kv) = self.fabric.kv() {
             kv.delete(&format!("kv.{suffix}"));
+        }
+        // Aggregated copies: drop the version from the segment index and
+        // delete containers it orphaned (idempotent across ranks).
+        if let Some(agg) = &self.aggregator {
+            let _ = agg.gc_version(name, version);
         }
     }
 }

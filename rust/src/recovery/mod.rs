@@ -5,9 +5,17 @@
 //! local -> partner -> erasure rebuild -> PFS -> KV. Every candidate is
 //! CRC-validated by the VCKP decode and, when the checksum module recorded
 //! a digest, re-verified against the registry before being accepted.
+//!
+//! When the aggregated flush is enabled, the PFS probe transparently reads
+//! a single rank's checkpoint back out of the shared containers through
+//! the segment index (rebuilding the index from container headers when the
+//! index object itself is lost); [`Recovery::restore_aggregated`] exposes
+//! that path directly for tooling and tests.
 
 use crate::modules::checksum::{digest, ChecksumBackend};
+use crate::modules::transfer::maybe_decompress;
 use crate::modules::{Env, VersionRegistry};
+use crate::pipeline::context::LEVEL_PFS;
 use crate::pipeline::{Engine, RestoreContext};
 use crate::util::bytes::Checkpoint;
 use anyhow::Result;
@@ -76,6 +84,33 @@ impl Recovery {
             }
         }
         Ok(None)
+    }
+
+    /// Restore one rank's checkpoint straight out of the aggregated
+    /// containers, bypassing the per-level probe (diagnostics / cold
+    /// tooling). Validation matches the probed path: VCKP CRC plus the
+    /// registry digest when one was recorded.
+    pub fn restore_aggregated(
+        &self,
+        name: &str,
+        rank: usize,
+        version: u64,
+    ) -> Result<Option<Restored>> {
+        let Some(agg) = &self.env.aggregator else {
+            return Ok(None);
+        };
+        let Some(data) = agg.restore(name, version, rank)? else {
+            return Ok(None);
+        };
+        let ckpt = Checkpoint::decode(&maybe_decompress(data)?)?;
+        if !self.validate(name, version, rank, &ckpt) {
+            return Ok(None);
+        }
+        Ok(Some(Restored {
+            version,
+            level: LEVEL_PFS,
+            ckpt,
+        }))
     }
 
     /// Restore the freshest version available at any level for one rank.

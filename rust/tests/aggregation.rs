@@ -1,0 +1,224 @@
+//! Aggregated asynchronous flush: end-to-end round-trip through the full
+//! runtime, drain-policy behaviour, and the modeled throughput win over
+//! the file-per-rank flush pattern.
+
+use std::sync::Arc;
+use std::time::Duration;
+use veloc::aggregation::{AggregationConfig, Aggregator};
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::cluster::Topology;
+use veloc::pipeline::LEVEL_PFS;
+use veloc::storage::{FabricConfig, StorageFabric};
+
+/// Aggregation-enabled runtime with only local + transfer + version levels
+/// (partner/erasure off so the PFS containers are the sole remote copy).
+fn agg_runtime(nodes: usize, rpn: usize) -> Arc<VelocRuntime> {
+    let mut cfg = VelocConfig::default().with_nodes(nodes, rpn);
+    cfg.stack.erasure_group = 0;
+    cfg.stack.with_partner = false;
+    cfg.aggregation.enabled = true;
+    VelocRuntime::new(cfg).unwrap()
+}
+
+/// Deterministic per-rank payload (distinct content, not just a fill byte,
+/// so a cross-rank mixup cannot pass the bit-identical check).
+fn payload(rank: usize, len: usize) -> Vec<u8> {
+    (0..len)
+        .map(|i| ((i * (rank + 3) + rank) % 251) as u8)
+        .collect()
+}
+
+#[test]
+fn aggregated_restore_round_trip_survives_local_tier_loss() {
+    let nodes = 4;
+    let rpn = 2;
+    let world = nodes * rpn;
+    let rt = agg_runtime(nodes, rpn);
+    for rank in 0..world {
+        let client = rt.client(rank);
+        client.mem_protect(0, payload(rank, 64 << 10));
+        client.checkpoint("agg", 1).unwrap();
+        client.checkpoint_wait("agg", 1).unwrap();
+    }
+    rt.drain();
+
+    // One container per node group, all ranks packed.
+    let report = rt.aggregator().unwrap().report();
+    assert_eq!(report.containers, nodes as u64, "one container per group");
+    assert_eq!(report.segments, world as u64);
+    assert!(report.write_amplification() < 1.01, "headers must stay small");
+    assert_eq!(rt.metrics().counter("agg.containers"), nodes as u64);
+
+    // Kill every local tier: only the aggregated PFS containers survive.
+    for node in 0..nodes {
+        rt.env().fabric.fail_node(node);
+    }
+    for rank in 0..world {
+        let client = rt.client(rank);
+        let handle = client.mem_protect(0, Vec::new());
+        let info = client.restart("agg").unwrap().expect("aggregated restore");
+        assert_eq!(info.level, LEVEL_PFS, "rank {rank} must restore from PFS");
+        assert_eq!(info.version, 1);
+        assert_eq!(
+            *handle.lock().unwrap(),
+            payload(rank, 64 << 10),
+            "rank {rank} bytes must be bit-identical"
+        );
+    }
+}
+
+#[test]
+fn aggregated_restore_direct_recovery_path() {
+    let rt = agg_runtime(2, 2);
+    for rank in 0..4 {
+        let client = rt.client(rank);
+        client.mem_protect(0, payload(rank, 8 << 10));
+        client.checkpoint("direct", 1).unwrap();
+        client.checkpoint_wait("direct", 1).unwrap();
+    }
+    rt.drain();
+    let restored = rt
+        .recovery()
+        .restore_aggregated("direct", 3, 1)
+        .unwrap()
+        .expect("direct aggregated restore");
+    assert_eq!(restored.level, LEVEL_PFS);
+    assert_eq!(restored.ckpt.region(0).unwrap().data, payload(3, 8 << 10));
+}
+
+#[test]
+fn fewer_larger_pfs_writes_than_file_per_rank() {
+    let rt = agg_runtime(2, 4);
+    let before = rt.env().fabric.pfs().put_count();
+    for rank in 0..8 {
+        let client = rt.client(rank);
+        client.mem_protect(0, payload(rank, 16 << 10));
+        client.checkpoint("w", 1).unwrap();
+        client.checkpoint_wait("w", 1).unwrap();
+    }
+    rt.drain();
+    let report = rt.aggregator().unwrap().report();
+    assert_eq!(report.containers, 2);
+    // Data objects hitting the PFS: 2 containers (+ index + lineage
+    // bookkeeping), far below the 8 of file-per-rank.
+    let data_puts = report.containers;
+    assert!(
+        data_puts < 8,
+        "aggregation must cut PFS data writes: {data_puts} vs 8"
+    );
+    assert!(rt.env().fabric.pfs().put_count() > before);
+    assert!(
+        report.mean_write_bytes() > 2.0 * (16 << 10) as f64,
+        "containers must be multiples of a rank's checkpoint"
+    );
+}
+
+/// The acceptance benchmark shape, as a deterministic model-time test:
+/// 64 ranks x 1 MiB, aggregated drain >= 2x the file-per-rank flush
+/// throughput.
+#[test]
+fn model_speedup_at_64_ranks_1mib_is_at_least_2x() {
+    let ranks = 64usize;
+    let bytes = 1usize << 20;
+    let data = Arc::new(vec![0xCDu8; bytes]);
+
+    // File-per-rank: one PFS object per rank (sequential model charges:
+    // per-op latency + fair-share transfer each).
+    let fabric = StorageFabric::build(&FabricConfig {
+        nodes: 8,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut file_per_rank = Duration::ZERO;
+    for r in 0..ranks {
+        let stat = fabric
+            .pfs()
+            .put_shared(&format!("pfs.app.r{r}.v1"), &data)
+            .unwrap();
+        file_per_rank += stat.modeled;
+    }
+
+    // Aggregated: groups of 8 ranks -> 8 container writes.
+    let fabric = Arc::new(
+        StorageFabric::build(&FabricConfig {
+            nodes: 8,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let agg = Aggregator::new(
+        Topology::new(ranks, 1),
+        Arc::clone(&fabric),
+        AggregationConfig {
+            enabled: true,
+            group_ranks: 8,
+            ..Default::default()
+        },
+        None,
+        None,
+    );
+    let mut aggregated = Duration::ZERO;
+    for r in 0..ranks {
+        let stat = agg.submit("app", 1, r, "raw", Arc::clone(&data)).unwrap();
+        aggregated += stat.modeled;
+    }
+    aggregated += agg.flush_all().unwrap().modeled;
+    assert_eq!(agg.report().containers, 8);
+
+    let speedup = file_per_rank.as_secs_f64() / aggregated.as_secs_f64().max(1e-12);
+    assert!(
+        speedup >= 2.0,
+        "aggregated flush must be >= 2x faster in the PFS model: \
+         file-per-rank {file_per_rank:?}, aggregated {aggregated:?} ({speedup:.1}x)"
+    );
+}
+
+#[test]
+fn age_threshold_drains_stale_group() {
+    let fabric = Arc::new(
+        StorageFabric::build(&FabricConfig {
+            nodes: 2,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let agg = Aggregator::new(
+        Topology::new(2, 2),
+        fabric,
+        AggregationConfig {
+            enabled: true,
+            version_barrier: false,
+            max_delay: Duration::from_millis(20),
+            ..Default::default()
+        },
+        None,
+        None,
+    );
+    // Half a group: below the size threshold, no barrier.
+    agg.submit("app", 1, 0, "raw", Arc::new(vec![1u8; 1024]))
+        .unwrap();
+    assert_eq!(agg.report().containers, 0);
+    std::thread::sleep(Duration::from_millis(30));
+    let stat = agg.flush_aged().unwrap();
+    assert_eq!(stat.containers, 1, "aged group must drain");
+    assert_eq!(agg.pending_bytes(), 0);
+}
+
+#[test]
+fn duplicate_version_resubmission_keeps_last_writer() {
+    let rt = agg_runtime(2, 1);
+    let client = rt.client(0);
+    let h = client.mem_protect(0, payload(0, 4 << 10));
+    client.checkpoint("dup", 1).unwrap();
+    client.checkpoint_wait("dup", 1).unwrap();
+    *h.lock().unwrap() = payload(7, 4 << 10);
+    client.checkpoint("dup", 1).unwrap();
+    client.checkpoint_wait("dup", 1).unwrap();
+    rt.drain();
+    for node in 0..2 {
+        rt.env().fabric.fail_node(node);
+    }
+    let h2 = client.mem_protect(0, Vec::new());
+    client.restart("dup").unwrap().expect("restore");
+    assert_eq!(*h2.lock().unwrap(), payload(7, 4 << 10));
+}

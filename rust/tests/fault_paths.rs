@@ -1,9 +1,11 @@
 //! Edge-case and failure-injection paths: checksum rejection, capacity
 //! fallback, explicit-version restore, missing-level degradation, wait
-//! semantics.
+//! semantics, and aggregated-container damage (truncation, index
+//! corruption, index loss).
 
 use std::sync::Arc;
 use std::time::Duration;
+use veloc::aggregation::{container, Aggregator, INDEX_KEY};
 use veloc::api::{VelocConfig, VelocRuntime};
 use veloc::cluster::FailureScope;
 use veloc::pipeline::{LEVEL_LOCAL, LEVEL_PFS};
@@ -139,6 +141,90 @@ fn unprotected_region_ids_ignored_on_restore() {
     let info = c2.restart("r").unwrap().unwrap();
     assert_eq!(info.version, 1);
     assert_eq!(*h7.lock().unwrap(), vec![2u8; 128]);
+}
+
+/// Aggregation-enabled runtime where the PFS containers are the only
+/// remote copy (no partner/erasure), so damage to them is observable.
+fn agg_rt(nodes: usize) -> Arc<VelocRuntime> {
+    let mut cfg = VelocConfig::default().with_nodes(nodes, 1);
+    cfg.stack.erasure_group = 0;
+    cfg.stack.with_partner = false;
+    cfg.aggregation.enabled = true;
+    VelocRuntime::new(cfg).unwrap()
+}
+
+/// A fresh aggregator over the same fabric — the cold-restart view with an
+/// empty in-memory index (forces the persisted-index / rebuild paths).
+fn cold_aggregator(rt: &Arc<VelocRuntime>) -> Arc<Aggregator> {
+    Aggregator::new(
+        rt.topology(),
+        Arc::clone(&rt.env().fabric),
+        rt.config().aggregation.clone(),
+        None,
+        None,
+    )
+}
+
+#[test]
+fn truncated_aggregated_container_falls_back_to_older_version() {
+    let rt = agg_rt(2);
+    ckpt_all(&rt, "trunc", 1, 8 << 10);
+    ckpt_all(&rt, "trunc", 2, 8 << 10);
+    // Truncate every container holding a v2 segment (headers survive; the
+    // payload region does not).
+    let pfs = rt.env().fabric.pfs();
+    for key in pfs.list("agg.g") {
+        let (bytes, _) = pfs.get(&key).unwrap();
+        let header = container::decode_header(&bytes).unwrap();
+        if header.segments.iter().any(|s| s.version == 2) {
+            pfs.put(&key, &bytes[..bytes.len() / 2]).unwrap();
+        }
+    }
+    for node in 0..2 {
+        rt.env().fabric.fail_node(node);
+    }
+    let client = rt.client(0);
+    client.mem_protect(0, Vec::new());
+    let info = client.restart("trunc").unwrap().expect("fallback restore");
+    assert_eq!(
+        info.version, 1,
+        "truncated v2 container must degrade to the older intact version"
+    );
+}
+
+#[test]
+fn corrupted_segment_index_rebuilds_from_container_headers() {
+    let rt = agg_rt(2);
+    ckpt_all(&rt, "cidx", 1, 8 << 10);
+    let pfs = rt.env().fabric.pfs();
+    pfs.put(INDEX_KEY, b"{ definitely not an index }").unwrap();
+    // Cold aggregator: the garbage persisted index must not poison it —
+    // restore falls through to the header rebuild.
+    let cold = cold_aggregator(&rt);
+    let data = cold
+        .restore("cidx", 1, 1)
+        .unwrap()
+        .expect("rebuild from headers");
+    let ckpt = veloc::util::bytes::Checkpoint::decode(&data).unwrap();
+    assert_eq!(ckpt.region(0).unwrap().data, vec![1u8 ^ 1u8; 8 << 10]);
+    // The rebuild healed the persisted index.
+    let (fixed, _) = pfs.get(INDEX_KEY).unwrap();
+    assert!(veloc::util::json::Json::parse(std::str::from_utf8(&fixed).unwrap()).is_ok());
+}
+
+#[test]
+fn missing_index_rebuilt_from_container_headers() {
+    let rt = agg_rt(2);
+    ckpt_all(&rt, "midx", 1, 8 << 10);
+    assert!(rt.env().fabric.pfs().delete(INDEX_KEY));
+    let cold = cold_aggregator(&rt);
+    let data = cold
+        .restore("midx", 1, 0)
+        .unwrap()
+        .expect("rebuild from headers");
+    let ckpt = veloc::util::bytes::Checkpoint::decode(&data).unwrap();
+    assert_eq!(ckpt.region(0).unwrap().data, vec![0u8 ^ 1u8; 8 << 10]);
+    assert!(rt.env().fabric.pfs().exists(INDEX_KEY), "index re-persisted");
 }
 
 #[test]
