@@ -21,10 +21,21 @@ use crate::modules::FlushGate;
 use crate::pipeline::context::LEVEL_PFS;
 use crate::storage::{StorageFabric, StorageTier};
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Named crash window inside [`Aggregator::drain_locked`]: after the
+/// container was durably published but before the segment index was
+/// updated/persisted. A failure landing here leaves a durable-but-unindexed
+/// container that recovery must find via the header rebuild.
+pub const FAULT_PRE_INDEX: &str = "drain.pre_index";
+
+/// Test/sim instrumentation fired at named fault points inside the
+/// aggregator. Returning `true` means the simulated failure lands at that
+/// point: the drain stops there, exactly as a crashed writer would.
+pub type AggFaultHook = Arc<dyn Fn(&str) -> bool + Send + Sync>;
 
 /// One rank's checkpoint payload waiting in a group buffer.
 struct PendingSegment {
@@ -143,6 +154,9 @@ pub struct Aggregator {
     /// scanning. After the sync the in-memory index is authoritative and
     /// repeated misses stay cheap.
     cold_sync: Mutex<bool>,
+    /// Optional fault-point hook ([`FAULT_PRE_INDEX`]); installed by the
+    /// scenario engine, None in production.
+    fault_hook: Mutex<Option<AggFaultHook>>,
     /// Global container sequence (keys stay unique across groups; seeded
     /// past any containers already on a persistent tier so a restarted
     /// runtime never overwrites a prior run's containers).
@@ -185,6 +199,7 @@ impl Aggregator {
             groups,
             index: Mutex::new(SegmentIndex::new()),
             cold_sync: Mutex::new(false),
+            fault_hook: Mutex::new(None),
             seq: AtomicU64::new(seq0),
             containers: AtomicU64::new(0),
             segments: AtomicU64::new(0),
@@ -195,6 +210,17 @@ impl Aggregator {
 
     pub fn config(&self) -> &AggregationConfig {
         &self.cfg
+    }
+
+    /// Install (or clear) the fault-point hook — scenario-engine
+    /// instrumentation, never set in production.
+    pub fn set_fault_hook(&self, hook: Option<AggFaultHook>) {
+        *self.fault_hook.lock().unwrap() = hook;
+    }
+
+    fn fault_at(&self, point: &str) -> bool {
+        let hook = self.fault_hook.lock().unwrap().clone();
+        hook.map(|h| h(point)).unwrap_or(false)
     }
 
     /// First free container sequence number: one past the highest
@@ -348,31 +374,48 @@ impl Aggregator {
         })
     }
 
-    /// Drain every non-empty group buffer (runtime `drain()` / barriers).
-    pub fn flush_all(&self) -> Result<DrainStat> {
+    /// Drain every group whose buffer satisfies `should_drain`. One
+    /// group's failed drain must not leave later groups buffered: every
+    /// matching group is attempted, and the first error is reported after.
+    fn drain_matching(
+        &self,
+        should_drain: impl Fn(&GroupBuffer) -> bool,
+    ) -> Result<DrainStat> {
         let mut total = DrainStat::default();
+        let mut first_err = None;
         for g in 0..self.groups.len() {
             let mut buf = self.groups[g].lock().unwrap();
-            total.absorb(self.drain_locked(g, &mut buf)?);
+            if !should_drain(&*buf) {
+                continue;
+            }
+            match self.drain_locked(g, &mut buf) {
+                Ok(stat) => total.absorb(stat),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
         }
-        Ok(total)
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(total),
+        }
+    }
+
+    /// Drain every non-empty group buffer (runtime `drain()` / barriers).
+    pub fn flush_all(&self) -> Result<DrainStat> {
+        self.drain_matching(|_| true)
     }
 
     /// Drain only groups whose oldest segment exceeded the age threshold
     /// (for callers running a periodic tick).
     pub fn flush_aged(&self) -> Result<DrainStat> {
-        let mut total = DrainStat::default();
-        for g in 0..self.groups.len() {
-            let mut buf = self.groups[g].lock().unwrap();
-            let aged = buf
-                .first_at
+        self.drain_matching(|buf| {
+            buf.first_at
                 .map(|t| t.elapsed() >= self.cfg.max_delay)
-                .unwrap_or(false);
-            if aged {
-                total.absorb(self.drain_locked(g, &mut buf)?);
-            }
-        }
-        Ok(total)
+                .unwrap_or(false)
+        })
     }
 
     /// Pack the buffer into one container, pace it through the scheduler
@@ -410,17 +453,48 @@ impl Aggregator {
         let key = format!("agg.{id}");
         let encoded = Arc::new(container::encode(&id, group, &metas));
         drop(metas);
+        // The drain writer is colocated with the group's buffers; use the
+        // first buffered segment's rank to ask the gate whether a failure
+        // landed on that node mid-drain.
+        let writer_rank = buf.pending.first().map(|p| p.rank);
         // Pace the large sequential write chunk by chunk under the gate,
-        // then publish atomically (same pattern as the direct flush).
+        // then publish atomically (same pattern as the direct flush). A
+        // failure mid-drain abandons the container before the publish: the
+        // segments stay buffered (and die with the node when it is wiped).
         if let Some(gate) = &self.gate {
             let mut off = 0;
             while off < encoded.len() {
                 gate.before_chunk(self.cfg.drain_chunk.min(encoded.len() - off));
+                if let Some(r) = writer_rank {
+                    if gate.aborted_for(r) {
+                        bail!(
+                            "aggregated drain aborted: group {group} writer \
+                             (rank {r}) failed mid-drain at offset {off}"
+                        );
+                    }
+                }
                 off += self.cfg.drain_chunk;
             }
         }
         let tier = self.target_tier()?;
         let stat = tier.put_shared(&key, &encoded)?;
+        let n = buf.pending.len() as u64;
+        // Crash window: container durable, index not yet updated. A failure
+        // landing here kills the writer after the publish — the buffered
+        // segments die with the node, the in-memory/persisted index never
+        // learns about the container, and recovery must rebuild the index
+        // from the self-describing container headers.
+        if self.fault_at(FAULT_PRE_INDEX) {
+            buf.pending.clear();
+            buf.bytes = 0;
+            buf.first_at = None;
+            return Ok(DrainStat {
+                containers: 1,
+                segments: n,
+                written_bytes: stat.bytes,
+                modeled: stat.modeled,
+            });
+        }
         // Index the freshly-published segments and persist the index next
         // to the containers. The put happens under the index lock so that
         // concurrent group drains cannot persist a stale snapshot last.
@@ -451,7 +525,6 @@ impl Aggregator {
                 reg.record_level_only(&m.name, m.version, m.rank, LEVEL_PFS, &m.encoding);
             }
         }
-        let n = buf.pending.len() as u64;
         self.containers.fetch_add(1, Ordering::Relaxed);
         self.segments.fetch_add(n, Ordering::Relaxed);
         self.payload_bytes.fetch_add(buf.bytes, Ordering::Relaxed);
@@ -900,6 +973,34 @@ mod tests {
         assert!(a.restore("app", 1, 1).unwrap().is_some());
         a.fail_all_buffers();
         assert_eq!(a.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn pre_index_crash_leaves_rebuildable_container() {
+        use std::sync::atomic::AtomicBool;
+        let f = fabric(2);
+        let topo = Topology::new(2, 1);
+        let a = Aggregator::new(topo, Arc::clone(&f), AggregationConfig::default(), None, None);
+        // First wave drains and persists a healthy index.
+        a.submit("app", 1, 0, "raw", payload(0, 1)).unwrap();
+        // Arm a one-shot pre-index crash for the next drain.
+        let fired = Arc::new(AtomicBool::new(false));
+        let fired2 = Arc::clone(&fired);
+        a.set_fault_hook(Some(Arc::new(move |point: &str| {
+            point == FAULT_PRE_INDEX && !fired2.swap(true, Ordering::SeqCst)
+        })));
+        a.submit("app", 2, 0, "raw", payload(0, 2)).unwrap();
+        assert!(fired.load(Ordering::SeqCst), "fault point must fire");
+        // Buffer cleared (the writer died after publishing the container).
+        assert_eq!(a.pending_bytes(), 0);
+        // Container durable; index (in-memory and persisted) stale.
+        assert_eq!(f.pfs().list("agg.g").len(), 2);
+        // Same-process restore: the stale persisted index does not resolve
+        // v2, so the cold-sync path rebuilds from container headers.
+        assert_eq!(a.restore("app", 2, 0).unwrap().unwrap(), *payload(0, 2));
+        // A cold aggregator resolves it too (rebuild re-persisted).
+        let b = Aggregator::new(topo, Arc::clone(&f), AggregationConfig::default(), None, None);
+        assert_eq!(b.restore("app", 2, 0).unwrap().unwrap(), *payload(0, 2));
     }
 
     #[test]

@@ -22,7 +22,9 @@ pub mod aggregator;
 pub mod container;
 pub mod index;
 
-pub use aggregator::{AggregationReport, Aggregator, DrainStat, SubmitStat};
+pub use aggregator::{
+    AggFaultHook, AggregationReport, Aggregator, DrainStat, SubmitStat, FAULT_PRE_INDEX,
+};
 pub use container::{ContainerHeader, SegmentMeta};
 pub use index::{SegmentIndex, SegmentLoc, INDEX_KEY};
 

@@ -25,8 +25,8 @@ pub use config::VelocConfig;
 use crate::aggregation::Aggregator;
 use crate::cluster::{KillSwitch, Topology};
 use crate::metrics::Metrics;
-use crate::modules::{build_stack, ChecksumBackend, Env, VersionRegistry};
-use crate::pipeline::{CkptContext, CkptStatus, Engine};
+use crate::modules::{build_stack, ChecksumBackend, Env, FlushGate, VersionRegistry};
+use crate::pipeline::{BoundaryHook, CkptContext, CkptStatus, Engine};
 use crate::recovery::{Recovery, Restored};
 use crate::runtime::PjrtEngine;
 use crate::scheduler::{
@@ -45,6 +45,19 @@ use std::time::Instant;
 /// contents through the lock; `checkpoint()` snapshots it atomically.
 pub type RegionHandle = Arc<Mutex<Vec<u8>>>;
 
+/// Fault-injection instrumentation installed at runtime construction —
+/// used by the deterministic scenario engine ([`crate::sim`]) to land
+/// failures at arbitrary points of the pipeline. Production callers use
+/// [`VelocRuntime::new`], which installs none of it.
+#[derive(Default)]
+pub struct SimHooks {
+    /// Wraps the scheduler's flush gate (e.g. with the sim's
+    /// chunk-counting fault gate) before it is installed into the env.
+    pub wrap_gate: Option<Box<dyn FnOnce(Arc<dyn FlushGate>) -> Arc<dyn FlushGate> + Send>>,
+    /// Module-boundary hook installed into every rank engine.
+    pub boundary: Option<Arc<dyn BoundaryHook>>,
+}
+
 /// Cluster-wide runtime.
 pub struct VelocRuntime {
     config: VelocConfig,
@@ -60,6 +73,13 @@ pub struct VelocRuntime {
 
 impl VelocRuntime {
     pub fn new(config: VelocConfig) -> Result<Arc<Self>> {
+        Self::new_with_hooks(config, SimHooks::default())
+    }
+
+    /// Build a runtime with fault-injection instrumentation (the scenario
+    /// engine's entry point; behaves exactly like [`VelocRuntime::new`]
+    /// when `hooks` is empty).
+    pub fn new_with_hooks(config: VelocConfig, hooks: SimHooks) -> Result<Arc<Self>> {
         config.validate()?;
         let topology = Topology::new(config.nodes, config.ranks_per_node);
         let fabric = Arc::new(StorageFabric::build(&config.fabric)?);
@@ -95,6 +115,12 @@ impl VelocRuntime {
             Arc::clone(&monitor),
             config.fabric.pfs_bw,
         );
+        // Scenario instrumentation: wrap the gate (fault-injecting gates
+        // count chunks and land a failure mid-stream).
+        let gate = match hooks.wrap_gate {
+            Some(wrap) => wrap(gate),
+            None => gate,
+        };
 
         let metrics = Metrics::new();
         let aggregator = if config.aggregation.enabled {
@@ -152,8 +178,11 @@ impl VelocRuntime {
         let mut engines = Vec::with_capacity(topology.world_size());
         for _rank in 0..topology.world_size() {
             let stack = build_stack(&env, &config.stack)?;
-            let engine = Engine::new(stack, config.engine_mode, Some(Arc::clone(&backend)))?
+            let mut engine = Engine::new(stack, config.engine_mode, Some(Arc::clone(&backend)))?
                 .with_background_priority(backend_priority);
+            if let Some(hook) = &hooks.boundary {
+                engine = engine.with_boundary_hook(Arc::clone(hook));
+            }
             engines.push(Arc::new(engine));
         }
         let checksum = match (&pjrt, config.use_kernels) {

@@ -123,6 +123,31 @@ impl IterativeApp {
         Ok(Some(info.version))
     }
 
+    /// Deep copy of every protected region, in region-id order — the
+    /// shadow state the scenario engine verifies restores against
+    /// bit-for-bit.
+    pub fn snapshot(&self) -> Vec<Vec<u8>> {
+        self.regions
+            .iter()
+            .map(|r| r.lock().unwrap().clone())
+            .collect()
+    }
+
+    /// Region indices whose current bytes differ from a snapshot (empty =
+    /// bit-for-bit identical). A length mismatch marks every region.
+    pub fn diff_snapshot(&self, snap: &[Vec<u8>]) -> Vec<usize> {
+        if snap.len() != self.regions.len() {
+            return (0..self.regions.len().max(snap.len())).collect();
+        }
+        let mut bad = Vec::new();
+        for (i, r) in self.regions.iter().enumerate() {
+            if *r.lock().unwrap() != snap[i] {
+                bad.push(i);
+            }
+        }
+        bad
+    }
+
     /// A digest of the whole state (for exactness tests).
     pub fn state_digest(&self) -> u32 {
         let mut h = crc32fast::Hasher::new();

@@ -8,7 +8,8 @@
 //!   resilience modules ([`modules`]), heterogeneous storage tiers
 //!   ([`storage`]), aggregated asynchronous flush ([`aggregation`]:
 //!   write-combining per-rank checkpoints into large shared-tier
-//!   containers), cluster + failure simulation ([`cluster`]), recovery
+//!   containers), cluster + failure simulation ([`cluster`]), the
+//!   deterministic crash–recover–verify scenario engine ([`sim`]), recovery
 //!   ([`recovery`]), background-flush scheduling ([`scheduler`]),
 //!   checkpoint-interval optimization ([`interval`]) and workloads ([`app`]).
 //! - **L2** — JAX compute graphs (interval MLP, seq2seq predictor, the
@@ -30,5 +31,6 @@ pub mod pipeline;
 pub mod recovery;
 pub mod runtime;
 pub mod scheduler;
+pub mod sim;
 pub mod storage;
 pub mod util;

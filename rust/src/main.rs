@@ -4,6 +4,8 @@
 //!   info       print platform, artifact and pipeline information
 //!   run        run the HACC-like iterative workload under checkpointing
 //!   interval   Young/Daly vs DES interval recommendations
+//!   sim        deterministic crash–recover–verify scenarios (one spec,
+//!              a saved-trace replay, or the standard sweep matrix)
 //!
 //! Examples live in `examples/` (quickstart, hacc_sim, dnn_training,
 //! interval_tuning); this binary is the thin operational front-end.
@@ -22,7 +24,7 @@ fn main() {
         "veloc",
         "VEry Low Overhead Checkpointing — paper reproduction runtime",
     )
-    .opt("cmd", "info", "info | run | interval")
+    .opt("cmd", "info", "info | run | interval | sim")
     .opt("config", "", "JSON config file (empty = defaults)")
     .opt("nodes", "4", "simulated nodes")
     .opt("ranks-per-node", "2", "ranks per node")
@@ -36,6 +38,13 @@ fn main() {
     .opt("agg-group-ranks", "0", "aggregation group size (0 = per node)")
     .opt("agg-flush-mb", "32", "aggregation size-threshold drain (MiB)")
     .opt("agg-target", "pfs", "aggregation drain tier: pfs | burst-buffer")
+    .opt("json", "", "sim: inline scenario spec (one-line JSON)")
+    .opt("file", "", "sim: scenario spec file")
+    .opt("replay", "", "sim: re-run a saved trace and require an exact match")
+    .flag("matrix", "sim: run the standard scenario sweep")
+    .opt("seed", "1", "sim: base seed for the matrix / default spec")
+    .opt("trace-out", "", "sim: write the run's event trace to this file")
+    .opt("trace-dir", "", "sim: write failing scenario traces into this dir")
     .parse();
 
     let cmd = cli.positional().first().cloned().unwrap_or(cli.get("cmd"));
@@ -43,8 +52,9 @@ fn main() {
         "info" => cmd_info(&cli),
         "run" => cmd_run(&cli),
         "interval" => cmd_interval(&cli),
+        "sim" => cmd_sim(&cli),
         other => {
-            eprintln!("unknown command '{other}' (try info | run | interval)");
+            eprintln!("unknown command '{other}' (try info | run | interval | sim)");
             std::process::exit(2);
         }
     };
@@ -195,6 +205,83 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     }
     println!("{}", rt.metrics().to_json().to_pretty());
     Ok(())
+}
+
+fn cmd_sim(cli: &Cli) -> Result<()> {
+    use veloc::sim::{base_spec, replay_file, run_scenario_traced, standard_matrix, ScenarioSpec};
+
+    let replay = cli.get("replay");
+    if !replay.is_empty() {
+        let report = replay_file(std::path::Path::new(&replay))?;
+        println!("replay ok: {}", report.summary());
+        return Ok(());
+    }
+    let trace_dir = cli.get("trace-dir");
+    if !trace_dir.is_empty() {
+        std::fs::create_dir_all(&trace_dir)?;
+    }
+
+    if cli.get_bool("matrix") {
+        let seed = cli.get_u64("seed");
+        let specs = standard_matrix(seed);
+        println!("sim matrix: {} scenarios (base seed {seed})", specs.len());
+        let mut failed = 0usize;
+        for (i, spec) in specs.iter().enumerate() {
+            let (result, trace) = run_scenario_traced(spec);
+            match result {
+                Ok(report) => println!("  ok   [{i:>2}] {}", report.summary()),
+                Err(e) => {
+                    failed += 1;
+                    eprintln!("  FAIL [{i:>2}] {e:#}");
+                    if !trace_dir.is_empty() {
+                        let path = std::path::Path::new(&trace_dir)
+                            .join(format!("scenario-{i:02}-seed{}.json", spec.seed));
+                        if trace.save(spec, &path).is_ok() {
+                            eprintln!("         trace: {}", path.display());
+                        }
+                    }
+                }
+            }
+        }
+        if failed > 0 {
+            anyhow::bail!("{failed} scenario(s) failed — every FAIL line above carries its one-line repro");
+        }
+        println!("all scenarios passed");
+        return Ok(());
+    }
+
+    // Single scenario: --json, --file, or the seeded default spec.
+    let inline = cli.get("json");
+    let file = cli.get("file");
+    let spec = if !inline.is_empty() {
+        ScenarioSpec::from_str_json(&inline)?
+    } else if !file.is_empty() {
+        ScenarioSpec::from_str_json(&std::fs::read_to_string(&file)?)?
+    } else {
+        base_spec(cli.get_u64("seed"))
+    };
+    let (result, trace) = run_scenario_traced(&spec);
+    let trace_out = cli.get("trace-out");
+    if !trace_out.is_empty() {
+        trace.save(&spec, std::path::Path::new(&trace_out))?;
+        println!("trace written to {trace_out}");
+    }
+    match result {
+        Ok(report) => {
+            println!("ok: {}", report.summary());
+            Ok(())
+        }
+        Err(e) => {
+            if !trace_dir.is_empty() {
+                let path = std::path::Path::new(&trace_dir)
+                    .join(format!("scenario-seed{}.json", spec.seed));
+                if trace.save(&spec, &path).is_ok() {
+                    eprintln!("failing trace: {}", path.display());
+                }
+            }
+            Err(e)
+        }
+    }
 }
 
 fn cmd_interval(cli: &Cli) -> Result<()> {

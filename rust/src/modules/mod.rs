@@ -35,6 +35,15 @@ pub trait FlushGate: Send + Sync {
     /// Called before flushing `bytes` more bytes; may sleep (priority
     /// throttling) or block until a predicted-idle phase.
     fn before_chunk(&self, bytes: usize);
+
+    /// Has a (simulated) failure landed that kills `rank`'s in-flight
+    /// transfer? Flushers poll this between chunks and abandon the stream
+    /// when it turns true, modeling a process that dies mid-flush without
+    /// publishing its object. The scheduler gates never abort; only the
+    /// fault-injecting gate of [`crate::sim`] overrides this.
+    fn aborted_for(&self, _rank: usize) -> bool {
+        false
+    }
 }
 
 /// Shared environment every module sees.

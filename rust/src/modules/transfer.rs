@@ -108,11 +108,19 @@ impl Module for TransferModule {
         let key = ctx.key("pfs");
         // Pace the flush chunk by chunk under the scheduler gate (priority
         // throttling / predicted-idle pausing), then publish the object in
-        // one atomic put whose model charges the PFS bandwidth.
+        // one atomic put whose model charges the PFS bandwidth. A failure
+        // landing mid-stream (fault-injecting gate) abandons the transfer
+        // before the atomic publish — no partial object ever appears.
         if let Some(gate) = &self.env.scheduler_gate {
             let mut off = 0;
             while off < data.len() {
                 gate.before_chunk(self.chunk.min(data.len() - off));
+                if gate.aborted_for(ctx.rank) {
+                    anyhow::bail!(
+                        "flush aborted: rank {} failed mid-transfer at offset {off}",
+                        ctx.rank
+                    );
+                }
                 off += self.chunk;
             }
         }
@@ -143,5 +151,81 @@ impl Module for TransferModule {
 
     fn switch(&self) -> &ModuleSwitch {
         &self.switch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::modules::VersionRegistry;
+    use crate::storage::{FabricConfig, StorageFabric};
+
+    fn env() -> Arc<Env> {
+        Arc::new(Env {
+            topology: Topology::new(2, 1),
+            fabric: Arc::new(
+                StorageFabric::build(&FabricConfig {
+                    nodes: 2,
+                    ..Default::default()
+                })
+                .unwrap(),
+            ),
+            pjrt: None,
+            registry: VersionRegistry::new(),
+            scheduler_gate: None,
+            aggregator: None,
+        })
+    }
+
+    fn ctx() -> CkptContext {
+        let mut c = crate::util::bytes::Checkpoint::new("t", 0, 1);
+        c.push_region(0, vec![9u8; 8 << 10]);
+        CkptContext::new("t", 0, 0, 1, c)
+    }
+
+    /// Regression: the flush must succeed from the in-context bytes when
+    /// the level-1 copy was evicted (or never landed) before the async
+    /// flush runs — and must not charge any local-tier read for the
+    /// fallback probe (misses are free).
+    #[test]
+    fn read_back_falls_back_to_context_bytes_after_eviction() {
+        let env = env();
+        let t = TransferModule::new(Arc::clone(&env), 4096);
+        let mut c = ctx();
+        // No local module ran: every local tier misses.
+        t.process(&mut c).unwrap();
+        assert_eq!(c.max_level(), LEVEL_PFS);
+        assert!(env.fabric.pfs().exists("pfs.t.r0.v1"));
+        for tier in env.fabric.local_tiers(0) {
+            assert_eq!(
+                tier.get_count(),
+                0,
+                "{}: evicted-copy fallback must not charge local reads",
+                tier.spec().kind.name()
+            );
+        }
+        // And the flushed object restores.
+        let rc = RestoreContext {
+            name: "t".to_string(),
+            rank: 0,
+            node: 0,
+            version: Some(1),
+        };
+        let restored = t.restore(&rc).unwrap().unwrap();
+        assert_eq!(restored.region(0).unwrap().data, vec![9u8; 8 << 10]);
+    }
+
+    /// The preferred path still reads back the level-1 copy (charging the
+    /// holding tier's read) when one exists.
+    #[test]
+    fn read_back_prefers_local_copy_when_present() {
+        let env = env();
+        let t = TransferModule::new(Arc::clone(&env), 4096);
+        let mut c = ctx();
+        let tier = &env.fabric.local_tiers(0)[0];
+        tier.put_shared(&c.key("local"), &c.encoded).unwrap();
+        t.process(&mut c).unwrap();
+        assert_eq!(tier.get_count(), 1, "local read-back must be charged");
     }
 }

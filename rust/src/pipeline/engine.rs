@@ -21,6 +21,17 @@ pub enum EngineMode {
     Async,
 }
 
+/// Instrumentation hook consulted at every module boundary of a checkpoint
+/// command (between pipeline stages). The fault-injection scenario engine
+/// ([`crate::sim`]) uses it to land a failure *mid-pipeline*: returning
+/// `false` means the rank died at this boundary — the engine abandons the
+/// remaining stages, exactly as a crashed process would.
+pub trait BoundaryHook: Send + Sync {
+    /// Called before each module runs; `next` is the module about to run.
+    /// Return `false` to abort the rest of the pipeline for this command.
+    fn before_module(&self, ctx: &CkptContext, next: &'static str) -> bool;
+}
+
 /// Completion state of one (rank, name, version) checkpoint command.
 #[derive(Clone, Debug, PartialEq)]
 pub enum CkptStatus {
@@ -80,6 +91,8 @@ pub struct Engine {
     /// Backend priority for the async tail (Background enables the
     /// interference-mitigation path).
     background_priority: Priority,
+    /// Optional module-boundary instrumentation (fault injection).
+    boundary_hook: Option<Arc<dyn BoundaryHook>>,
     tracker: Arc<Tracker>,
 }
 
@@ -98,12 +111,19 @@ impl Engine {
             mode,
             backend,
             background_priority: Priority::Normal,
+            boundary_hook: None,
             tracker: Arc::new(Tracker::default()),
         })
     }
 
     pub fn with_background_priority(mut self, p: Priority) -> Self {
         self.background_priority = p;
+        self
+    }
+
+    /// Install a module-boundary hook (fault-injection instrumentation).
+    pub fn with_boundary_hook(mut self, hook: Arc<dyn BoundaryHook>) -> Self {
+        self.boundary_hook = Some(hook);
         self
     }
 
@@ -144,13 +164,21 @@ impl Engine {
 
     /// Run modules [from..] over the context; returns first error after
     /// attempting every stage (one failed level must not block the rest —
-    /// that is the point of multi-level redundancy).
+    /// that is the point of multi-level redundancy). `Ok(Some(name))` means
+    /// the boundary hook aborted the pipeline before module `name` (the
+    /// rank died there); `Ok(None)` means every stage was attempted.
     fn run_range(
         modules: &[Arc<dyn Module>],
         ctx: &mut CkptContext,
-    ) -> Result<()> {
+        hook: Option<&Arc<dyn BoundaryHook>>,
+    ) -> Result<Option<&'static str>> {
         let mut first_err: Option<anyhow::Error> = None;
         for m in modules {
+            if let Some(h) = hook {
+                if !h.before_module(ctx, m.name()) {
+                    return Ok(Some(m.name()));
+                }
+            }
             if let Err(e) = Self::run_stage(m, ctx) {
                 if first_err.is_none() {
                     first_err = Some(anyhow!("{}: {e}", m.name()));
@@ -159,7 +187,7 @@ impl Engine {
         }
         match first_err {
             Some(e) if ctx.max_level() == 0 => Err(e.context("all levels failed")),
-            _ => Ok(()),
+            _ => Ok(None),
         }
     }
 
@@ -181,10 +209,24 @@ impl Engine {
                 .unwrap_or(self.modules.len()),
         };
         // Blocking prefix, inline.
-        if let Err(e) = Self::run_range(&self.modules[..split], &mut ctx) {
-            self.tracker
-                .set(rank, &name, version, CkptStatus::Failed(e.to_string()));
-            return Err(e);
+        match Self::run_range(&self.modules[..split], &mut ctx, self.boundary_hook.as_ref()) {
+            Err(e) => {
+                self.tracker
+                    .set(rank, &name, version, CkptStatus::Failed(e.to_string()));
+                return Err(e);
+            }
+            Ok(Some(module)) => {
+                // The rank died mid-pipeline (injected failure): the command
+                // never completes, but the submit itself was accepted.
+                self.tracker.set(
+                    rank,
+                    &name,
+                    version,
+                    CkptStatus::Failed(format!("rank {rank} died at {module} boundary")),
+                );
+                return Ok(());
+            }
+            Ok(None) => {}
         }
         if split == self.modules.len() {
             self.tracker
@@ -194,10 +236,15 @@ impl Engine {
         // Async tail on the active backend.
         let tail: Vec<Arc<dyn Module>> = self.modules[split..].to_vec();
         let tracker = Arc::clone(&self.tracker);
+        let hook = self.boundary_hook.clone();
         let pool = self.backend.as_ref().expect("checked in new").clone();
         pool.submit(self.background_priority, move || {
-            let st = match Engine::run_range(&tail, &mut ctx) {
-                Ok(()) => CkptStatus::Done(ctx.max_level()),
+            let st = match Engine::run_range(&tail, &mut ctx, hook.as_ref()) {
+                Ok(None) => CkptStatus::Done(ctx.max_level()),
+                Ok(Some(module)) => CkptStatus::Failed(format!(
+                    "rank {} died at {module} boundary",
+                    ctx.rank
+                )),
                 Err(e) => CkptStatus::Failed(e.to_string()),
             };
             tracker.set(ctx.rank, &ctx.name, ctx.version, st);
@@ -398,6 +445,36 @@ mod tests {
         c2.version = 2;
         eng.submit(c2).unwrap();
         assert_eq!(ran.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn boundary_hook_aborts_remaining_stages() {
+        struct DieBefore(&'static str);
+        impl BoundaryHook for DieBefore {
+            fn before_module(&self, _ctx: &CkptContext, next: &'static str) -> bool {
+                next != self.0
+            }
+        }
+        let ran = Arc::new(AtomicUsize::new(0));
+        let eng = Engine::new(
+            vec![
+                TestModule::new("a", 10, false, false, ran.clone()),
+                TestModule::new("b", 20, false, false, ran.clone()),
+            ],
+            EngineMode::Sync,
+            None,
+        )
+        .unwrap()
+        .with_boundary_hook(Arc::new(DieBefore("b")));
+        eng.submit(ctx()).unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "b must never run");
+        let st = eng.wait(0, "t", 1, Duration::from_secs(1)).unwrap();
+        match st {
+            CkptStatus::Failed(msg) => {
+                assert!(msg.contains("died at b boundary"), "{msg}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
     }
 
     #[test]

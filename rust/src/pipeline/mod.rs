@@ -9,5 +9,5 @@ pub use context::{
     level_name, CkptContext, LevelResult, Outcome, RestoreContext,
     LEVEL_ERASURE, LEVEL_KV, LEVEL_LOCAL, LEVEL_PARTNER, LEVEL_PFS,
 };
-pub use engine::{CkptStatus, Engine, EngineMode};
+pub use engine::{BoundaryHook, CkptStatus, Engine, EngineMode};
 pub use module::{Module, ModuleSwitch};

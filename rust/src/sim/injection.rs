@@ -1,0 +1,247 @@
+//! Fault-injection instrumentation: the shared death ledger every hook
+//! reports into, plus the chunk-counting fault gate that lands failures
+//! mid-transfer / mid-aggregation-drain.
+//!
+//! Design rule for determinism: hooks only *mark ranks dead* (and abort
+//! their in-flight pipelines); the actual storage wipe is always performed
+//! by the single-threaded scenario runner after the checkpoint wave
+//! settles, so the observable end state never depends on thread timing.
+
+use crate::modules::FlushGate;
+use crate::pipeline::{BoundaryHook, CkptContext};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Boundary plan: the victim ranks die right before `module` runs for
+/// checkpoint `version` — the "failure lands mid-pipeline" family.
+#[derive(Clone, Debug)]
+pub struct BoundaryPlan {
+    pub module: String,
+    pub version: u64,
+    pub victims: Vec<usize>,
+}
+
+/// Shared fault ledger. Implements [`BoundaryHook`]: a dead rank's pipeline
+/// aborts at the next module boundary (its process no longer exists), and
+/// the levels it had completed at death are recorded so the scenario
+/// engine can compute the exact recoverability expectation.
+#[derive(Default)]
+pub struct FaultState {
+    dead: Mutex<BTreeSet<usize>>,
+    /// rank -> (version it died in, levels completed at death).
+    at_death: Mutex<BTreeMap<usize, (u64, Vec<u8>)>>,
+    plan: Mutex<Option<BoundaryPlan>>,
+}
+
+impl FaultState {
+    pub fn new() -> Arc<Self> {
+        Arc::new(FaultState::default())
+    }
+
+    /// Arm a module-boundary death plan.
+    pub fn set_plan(&self, plan: BoundaryPlan) {
+        *self.plan.lock().unwrap() = Some(plan);
+    }
+
+    /// Mark ranks dead (called by the fault gate / aggregation fault hook
+    /// at the instant the simulated failure lands).
+    pub fn kill_all(&self, ranks: &[usize]) {
+        let mut dead = self.dead.lock().unwrap();
+        for &r in ranks {
+            dead.insert(r);
+        }
+    }
+
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.dead.lock().unwrap().contains(&rank)
+    }
+
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        self.dead.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Levels a rank had completed when it died, if its pipeline was cut
+    /// short (ranks that died between commands have no entry — their
+    /// registry records are complete).
+    pub fn death_levels(&self, rank: usize) -> Option<(u64, Vec<u8>)> {
+        self.at_death.lock().unwrap().get(&rank).cloned()
+    }
+
+    fn record_death(&self, ctx: &CkptContext) {
+        self.at_death
+            .lock()
+            .unwrap()
+            .entry(ctx.rank)
+            .or_insert_with(|| {
+                let mut levels: Vec<u8> = ctx
+                    .results
+                    .iter()
+                    .map(|r| r.level)
+                    .filter(|&l| l > 0)
+                    .collect();
+                levels.sort_unstable();
+                levels.dedup();
+                (ctx.version, levels)
+            });
+    }
+}
+
+impl BoundaryHook for FaultState {
+    fn before_module(&self, ctx: &CkptContext, next: &'static str) -> bool {
+        if self.dead.lock().unwrap().contains(&ctx.rank) {
+            self.record_death(ctx);
+            return false;
+        }
+        let planned = {
+            let plan = self.plan.lock().unwrap();
+            plan.as_ref().map_or(false, |p| {
+                p.version == ctx.version
+                    && p.module == next
+                    && p.victims.contains(&ctx.rank)
+            })
+        };
+        if planned {
+            self.dead.lock().unwrap().insert(ctx.rank);
+            self.record_death(ctx);
+            return false;
+        }
+        true
+    }
+}
+
+/// Chunk-counting fault gate: wraps the scheduler's flush gate and, after
+/// a configured number of chunks crossed it, marks the victim ranks dead.
+/// Flushers polling [`FlushGate::aborted_for`] then abandon the victims'
+/// in-flight transfers before the atomic publish — the failure landed
+/// mid-transfer-chunk (or mid-aggregation-drain; both paths pace through
+/// the same gate).
+pub struct FaultGate {
+    state: Arc<FaultState>,
+    inner: Mutex<Option<Arc<dyn FlushGate>>>,
+    /// Chunks remaining until the fault fires; negative = disarmed.
+    fuse: AtomicI64,
+    fired: AtomicBool,
+    victims: Mutex<Vec<usize>>,
+}
+
+impl FaultGate {
+    pub fn new(state: Arc<FaultState>) -> Arc<Self> {
+        Arc::new(FaultGate {
+            state,
+            inner: Mutex::new(None),
+            fuse: AtomicI64::new(-1),
+            fired: AtomicBool::new(false),
+            victims: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Install the wrapped production gate (called from the runtime's
+    /// gate-wrapping hook).
+    pub fn set_inner(&self, gate: Arc<dyn FlushGate>) {
+        *self.inner.lock().unwrap() = Some(gate);
+    }
+
+    /// Arm the fuse: the fault lands on the `chunks`-th chunk (1-based)
+    /// crossing the gate from now on.
+    pub fn arm(&self, chunks: usize, victims: Vec<usize>) {
+        assert!(chunks >= 1, "fuse must be at least one chunk");
+        *self.victims.lock().unwrap() = victims;
+        self.fired.store(false, Ordering::SeqCst);
+        self.fuse.store(chunks as i64, Ordering::SeqCst);
+    }
+
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+impl FlushGate for FaultGate {
+    fn before_chunk(&self, bytes: usize) {
+        let inner = self.inner.lock().unwrap().clone();
+        if let Some(g) = inner {
+            g.before_chunk(bytes);
+        }
+        if self.fuse.load(Ordering::SeqCst) >= 0 && !self.fired.load(Ordering::SeqCst) {
+            let prev = self.fuse.fetch_sub(1, Ordering::SeqCst);
+            if prev == 1 {
+                self.fired.store(true, Ordering::SeqCst);
+                let victims = self.victims.lock().unwrap().clone();
+                self.state.kill_all(&victims);
+            }
+        }
+    }
+
+    fn aborted_for(&self, rank: usize) -> bool {
+        self.fired.load(Ordering::SeqCst)
+            && self.victims.lock().unwrap().contains(&rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::Checkpoint;
+
+    fn ctx(rank: usize, version: u64) -> CkptContext {
+        let mut c = Checkpoint::new("t", rank, version);
+        c.push_region(0, vec![0u8; 64]);
+        CkptContext::new("t", rank, 0, version, c)
+    }
+
+    #[test]
+    fn boundary_plan_kills_only_victims_at_target_version() {
+        let st = FaultState::new();
+        st.set_plan(BoundaryPlan {
+            module: "transfer".to_string(),
+            version: 3,
+            victims: vec![1],
+        });
+        assert!(st.before_module(&ctx(0, 3), "transfer"), "non-victim lives");
+        assert!(st.before_module(&ctx(1, 2), "transfer"), "other version lives");
+        assert!(st.before_module(&ctx(1, 3), "local"), "other module lives");
+        assert!(!st.before_module(&ctx(1, 3), "transfer"), "victim dies");
+        assert!(st.is_dead(1));
+        // Once dead, every later boundary aborts too.
+        assert!(!st.before_module(&ctx(1, 3), "version"));
+        let (v, levels) = st.death_levels(1).unwrap();
+        assert_eq!(v, 3);
+        assert!(levels.is_empty(), "no stage recorded anything yet");
+    }
+
+    #[test]
+    fn death_levels_capture_completed_stages() {
+        let st = FaultState::new();
+        st.kill_all(&[2]);
+        let mut c = ctx(2, 5);
+        c.record("local", 1, std::time::Duration::ZERO, 10);
+        c.record("partner", 2, std::time::Duration::ZERO, 10);
+        assert!(!st.before_module(&c, "erasure"));
+        assert_eq!(st.death_levels(2).unwrap(), (5, vec![1, 2]));
+    }
+
+    #[test]
+    fn fault_gate_fires_on_nth_chunk_and_aborts_victims_only() {
+        let st = FaultState::new();
+        let gate = FaultGate::new(Arc::clone(&st));
+        gate.arm(3, vec![4]);
+        gate.before_chunk(1024);
+        gate.before_chunk(1024);
+        assert!(!gate.fired());
+        assert!(!gate.aborted_for(4));
+        gate.before_chunk(1024);
+        assert!(gate.fired());
+        assert!(gate.aborted_for(4));
+        assert!(!gate.aborted_for(0), "non-victims keep flushing");
+        assert!(st.is_dead(4));
+    }
+
+    #[test]
+    fn disarmed_gate_never_fires() {
+        let gate = FaultGate::new(FaultState::new());
+        for _ in 0..100 {
+            gate.before_chunk(4096);
+        }
+        assert!(!gate.fired());
+    }
+}

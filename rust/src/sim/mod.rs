@@ -1,0 +1,37 @@
+//! Deterministic crash–recover–verify scenario engine with trace replay.
+//!
+//! The testing backbone for the multi-level pipeline's core claim: that
+//! the local → partner/XOR → erasure → PFS hierarchy survives the
+//! realistic failure mix. A scenario runs a seeded multi-node application
+//! lifetime end to end — iterate → checkpoint (sync or async engine) →
+//! land a [`cluster::FailureScope`](crate::cluster::FailureScope) at an
+//! arbitrary *injection point* (between pipeline modules, mid-transfer
+//! chunk through a fault-injecting flush gate, mid-aggregation-drain, in
+//! the pre-index crash window, or mid-restart) → restart survivors →
+//! restore → verify restored bytes bit-for-bit against shadow copies.
+//!
+//! - [`scenario`] — specs: seed + cluster shape + stack permutation +
+//!   scope + injection point, one line of JSON each, plus the standard
+//!   sweep matrix asserting the `FailureScope::min_level` contract.
+//! - [`injection`] — the death ledger ([`FaultState`], a
+//!   [`BoundaryHook`](crate::pipeline::BoundaryHook)) and the
+//!   chunk-counting [`FaultGate`].
+//! - [`trace`] — structured event traces; saved traces replay exactly
+//!   from their embedded spec.
+//! - [`runner`] — the orchestrator; every failing exploration shrinks to
+//!   the one-line repro `veloc sim --json '<spec>'`.
+
+pub mod injection;
+pub mod runner;
+pub mod scenario;
+pub mod trace;
+
+pub use injection::{BoundaryPlan, FaultGate, FaultState};
+pub use runner::{
+    replay_file, run_scenario, run_scenario_traced, ScenarioReport, SCENARIO_APP,
+};
+pub use scenario::{
+    base_spec, standard_matrix, ContractMode, InjectionPoint, ScenarioSpec, ScopeKind,
+    ScopeSpec,
+};
+pub use trace::Trace;

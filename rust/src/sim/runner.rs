@@ -1,0 +1,576 @@
+//! The scenario runner: seeded multi-node application lifetimes end to
+//! end — iterate, checkpoint (sync or async engine), land a failure at the
+//! configured injection point, restart the survivors, restore, and verify
+//! the restored bytes bit-for-bit against shadow copies of the
+//! application state.
+//!
+//! ## Determinism
+//!
+//! Everything observable is a pure function of the spec:
+//! - the workload is the deterministic [`IterativeApp`] with zero compute
+//!   budget (no wall-clock dependence),
+//! - checkpoint waves hold the async tails behind a backend pause until
+//!   every rank's blocking prefix ran, then let them drain FIFO on the
+//!   single backend thread — so an injected fault firing inside a tail
+//!   can never race another rank's prefix; threads are only used for
+//!   sync-engine waves with erasure (which needs concurrent group
+//!   members) and no event is recorded from inside them,
+//! - trace events are recorded only by this single orchestrator thread,
+//!   from settled state (the version registry, wait statuses),
+//! - fault hooks mark ranks dead at the injection instant; the storage
+//!   wipe itself is always performed here, after the wave settles.
+//!
+//! ## The `min_level` contract
+//!
+//! After the failure, the runner computes the *expected* restorable
+//! frontier from what each rank had durably completed when the failure
+//! landed (registry records, or the death ledger for ranks cut short
+//! mid-pipeline) and the failure's blast radius — i.e. a failure is
+//! recoverable iff a checkpoint at a sufficient level completed before
+//! it. The actual frontier must match exactly (strict scenarios) or reach
+//! at least the prediction (the pre-index crash window, where a durable
+//! container outlives the completion bookkeeping).
+
+use crate::api::{SimHooks, VelocClient, VelocRuntime};
+use crate::app::IterativeApp;
+use crate::cluster::{FailureInjector, FailureScope};
+use crate::modules::FlushGate;
+use crate::pipeline::{BoundaryHook, CkptStatus, EngineMode};
+use crate::sim::injection::{BoundaryPlan, FaultGate, FaultState};
+use crate::sim::scenario::{ContractMode, InjectionPoint, ScenarioSpec};
+use crate::sim::trace::Trace;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Checkpoint name every scenario uses.
+pub const SCENARIO_APP: &str = "sim";
+
+/// Outcome of a successful scenario run.
+pub struct ScenarioReport {
+    pub spec: ScenarioSpec,
+    pub scope: FailureScope,
+    /// Frontier predicted by the min_level contract model.
+    pub expected_frontier: Option<u64>,
+    /// Frontier the recovery actually served.
+    pub frontier: Option<u64>,
+    /// (rank, level) each restore was served from.
+    pub restored: Vec<(usize, u8)>,
+    /// Ranks whose restored bytes matched the shadow copy bit-for-bit.
+    pub verified_ranks: usize,
+    pub index_rebuilds: u64,
+}
+
+impl ScenarioReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "seed {:>6}  {:<22} scope {:<14} frontier {:?} (expected {:?})  \
+             restored {} ranks, verified {}",
+            self.spec.seed,
+            self.spec.inject.name(),
+            scope_str(&self.scope),
+            self.frontier,
+            self.expected_frontier,
+            self.restored.len(),
+            self.verified_ranks,
+        )
+    }
+}
+
+/// Everything a run produces besides its trace.
+struct RunOutcome {
+    scope: FailureScope,
+    expected_frontier: Option<u64>,
+    frontier: Option<u64>,
+    restored: Vec<(usize, u8)>,
+    verified_ranks: usize,
+    index_rebuilds: u64,
+}
+
+/// Run one scenario; any violated invariant returns an error carrying the
+/// seed and the one-line repro.
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
+    run_scenario_traced(spec).0
+}
+
+/// Like [`run_scenario`], but always hands back the event trace — on
+/// failure it covers everything up to the violated invariant, which is
+/// exactly what gets uploaded as a CI artifact.
+pub fn run_scenario_traced(spec: &ScenarioSpec) -> (Result<ScenarioReport>, Trace) {
+    let mut trace = Trace::new();
+    let result = run_inner(spec, &mut trace)
+        .map_err(|e| {
+            anyhow!(
+                "scenario failed (seed {}): {e:#}\n  repro: {}",
+                spec.seed,
+                spec.repro()
+            )
+        })
+        .map(|o| ScenarioReport {
+            spec: spec.clone(),
+            scope: o.scope,
+            expected_frontier: o.expected_frontier,
+            frontier: o.frontier,
+            restored: o.restored,
+            verified_ranks: o.verified_ranks,
+            index_rebuilds: o.index_rebuilds,
+        });
+    (result, trace)
+}
+
+/// Re-run the spec embedded in a saved trace and require the replayed
+/// event stream to match the recorded one exactly. The diff runs before
+/// the scenario's own verdict is reported: a recorded *failure* (the
+/// traces CI uploads) replays faithfully when the event streams match,
+/// in which case the original failure is returned.
+pub fn replay_file(path: &Path) -> Result<ScenarioReport> {
+    let (spec, recorded) = Trace::load(path)?;
+    let (result, replayed) = run_scenario_traced(&spec);
+    if let Some(diff) = recorded.diff(&replayed) {
+        bail!(
+            "replay diverged from {} — {diff}\n  repro: {}",
+            path.display(),
+            spec.repro()
+        );
+    }
+    result
+}
+
+fn scope_str(scope: &FailureScope) -> String {
+    match scope {
+        FailureScope::Rank(r) => format!("rank:{r}"),
+        FailureScope::Node(n) => format!("node:{n}"),
+        FailureScope::MultiNode(ns) => format!(
+            "multi-node:{}",
+            ns.iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join("+")
+        ),
+        FailureScope::System => "system".to_string(),
+    }
+}
+
+fn levels_json(levels: &[u8]) -> Json {
+    Json::Arr(levels.iter().map(|&l| Json::Num(l as f64)).collect())
+}
+
+fn opt_version_json(v: Option<u64>) -> Json {
+    match v {
+        Some(v) => Json::from(v),
+        None => Json::Null,
+    }
+}
+
+fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
+    spec.validate()?;
+    let topo = spec.topology();
+    let world = topo.world_size();
+    let scope = spec.scope.resolve(&topo, spec.seed);
+    let injector = FailureInjector::new(topo, 1.0);
+    let victims = injector.affected_ranks(&scope);
+
+    // Fault instrumentation: the shared death ledger (boundary hook) and,
+    // for chunk-fused injections, the wrapping fault gate.
+    let state = FaultState::new();
+    let gate = FaultGate::new(Arc::clone(&state));
+    let boundary: Arc<dyn BoundaryHook> = Arc::clone(&state);
+    let mut hooks = SimHooks {
+        wrap_gate: None,
+        boundary: Some(boundary),
+    };
+    if matches!(spec.inject, InjectionPoint::MidFlushChunk(_)) {
+        let g = Arc::clone(&gate);
+        hooks.wrap_gate = Some(Box::new(move |inner| {
+            g.set_inner(inner);
+            let wrapped: Arc<dyn FlushGate> = g;
+            wrapped
+        }));
+    }
+    let rt = VelocRuntime::new_with_hooks(spec.to_config(), hooks)?;
+
+    // Pre-index crash window: armed just before the last wave; fires once
+    // on the first drain that crosses it and kills the victims.
+    let pre_index_arm = if matches!(spec.inject, InjectionPoint::MidDrainPreIndex) {
+        let agg = rt
+            .aggregator()
+            .ok_or_else(|| anyhow!("mid-drain injection requires aggregation"))?;
+        let armed = Arc::new(AtomicBool::new(false));
+        let fired = Arc::new(AtomicBool::new(false));
+        let armed2 = Arc::clone(&armed);
+        let st = Arc::clone(&state);
+        let victims2 = victims.clone();
+        agg.set_fault_hook(Some(Arc::new(move |point: &str| {
+            if point != crate::aggregation::FAULT_PRE_INDEX
+                || !armed2.load(Ordering::SeqCst)
+                || fired.swap(true, Ordering::SeqCst)
+            {
+                return false;
+            }
+            st.kill_all(&victims2);
+            true
+        })));
+        Some(armed)
+    } else {
+        None
+    };
+
+    trace.push(
+        Json::obj()
+            .set("ev", "start")
+            // String, not Json::Num: f64-backed numbers round above 2^53.
+            .set("seed", spec.seed.to_string())
+            .set("world", world)
+            .set("scope", scope_str(&scope))
+            .set("inject", spec.inject.name()),
+    );
+
+    // One client + deterministic app per rank.
+    let mut pairs: Vec<(VelocClient, IterativeApp)> = Vec::with_capacity(world);
+    for rank in 0..world {
+        let client = rt.client(rank);
+        let app = IterativeApp::new(
+            &client,
+            SCENARIO_APP,
+            spec.regions,
+            spec.region_bytes,
+            0.0,
+            spec.seed,
+        );
+        pairs.push((client, app));
+    }
+
+    // version -> per-rank shadow copies captured at checkpoint time.
+    let mut shadows: BTreeMap<u64, Vec<Vec<Vec<u8>>>> = BTreeMap::new();
+    let threaded_waves = spec.engine_mode == EngineMode::Sync && spec.erasure_group >= 2;
+
+    for wave in 1..=spec.waves {
+        for (_c, app) in pairs.iter_mut() {
+            for _ in 0..spec.steps_per_wave {
+                app.step();
+            }
+        }
+        let version = pairs[0].1.iteration;
+        if wave == spec.waves {
+            // Arm the injection for the final wave.
+            match &spec.inject {
+                InjectionPoint::BeforeModule(module) => state.set_plan(BoundaryPlan {
+                    module: module.clone(),
+                    version,
+                    victims: victims.clone(),
+                }),
+                InjectionPoint::MidFlushChunk(chunks) => {
+                    gate.arm(*chunks, victims.clone())
+                }
+                InjectionPoint::MidDrainPreIndex => {
+                    if let Some(armed) = &pre_index_arm {
+                        armed.store(true, Ordering::SeqCst);
+                    }
+                }
+                InjectionPoint::AfterCheckpoint | InjectionPoint::MidRestart(_) => {}
+            }
+        }
+        shadows.insert(version, pairs.iter().map(|(_, a)| a.snapshot()).collect());
+
+        // Submit the collective wave. Erasure under a sync engine needs
+        // concurrent group members; every other shape submits
+        // sequentially (async tails settle FIFO on the single backend
+        // thread).
+        if threaded_waves {
+            let results: Vec<Result<()>> = std::thread::scope(|s| {
+                let handles: Vec<_> = pairs
+                    .iter()
+                    .map(|(c, _)| s.spawn(move || c.checkpoint(SCENARIO_APP, version)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("rank checkpoint thread"))
+                    .collect()
+            });
+            for r in results {
+                r?;
+            }
+        } else {
+            // Barrier: hold the Background-priority async tails until
+            // every rank's blocking prefix ran inline, so a chunk-fused
+            // fault firing inside an early tail can never race a later
+            // rank's prefix — tails then drain FIFO on the single
+            // backend thread. (Sync engines run everything inline; the
+            // pause is a no-op for them.)
+            rt.backend().pause_background(true);
+            let submitted: Result<()> = pairs
+                .iter()
+                .try_for_each(|(c, _)| c.checkpoint(SCENARIO_APP, version));
+            rt.backend().pause_background(false);
+            submitted?;
+        }
+        // Settle every rank's pipeline.
+        let mut statuses = Vec::with_capacity(world);
+        for (c, _) in &pairs {
+            statuses.push(c.checkpoint_wait(SCENARIO_APP, version)?);
+        }
+        // Record the wave from settled state (registry + statuses).
+        let registry = &rt.env().registry;
+        let mut ranks = Vec::with_capacity(world);
+        for rank in 0..world {
+            let levels = registry
+                .info(SCENARIO_APP, version, rank)
+                .map(|i| i.levels)
+                .unwrap_or_default();
+            let status = match &statuses[rank] {
+                CkptStatus::Done(l) => format!("done:{l}"),
+                CkptStatus::Failed(_) => "failed".to_string(),
+                CkptStatus::InFlight => "in-flight".to_string(),
+            };
+            ranks.push(
+                Json::obj()
+                    .set("rank", rank)
+                    .set("status", status)
+                    .set("levels", levels_json(&levels)),
+            );
+        }
+        trace.push(
+            Json::obj()
+                .set("ev", "wave")
+                .set("version", version)
+                .set("ranks", Json::Arr(ranks)),
+        );
+    }
+    let last_version = spec.waves * spec.steps_per_wave;
+
+    // The failure lands: kill the ranks, wipe the affected failure
+    // domains (idempotent for the mid-* points whose victims already
+    // died), then flush surviving stragglers.
+    rt.inject_failure(&scope);
+    trace.push(
+        Json::obj()
+            .set("ev", "inject")
+            .set("point", spec.inject.name())
+            .set("scope", scope_str(&scope))
+            .set("version", last_version),
+    );
+    rt.drain();
+
+    // Contract: predict the restorable frontier from what durably
+    // completed before the failure, then compare with reality.
+    let expected = expected_frontier(spec, &topo, &scope, &rt, &state, world);
+    rt.revive_all();
+    let frontier = rt
+        .recovery()
+        .restorable_frontier(rt.engines(), SCENARIO_APP)?;
+    trace.push(
+        Json::obj()
+            .set("ev", "frontier")
+            .set("expected", opt_version_json(expected))
+            .set("actual", opt_version_json(frontier))
+            .set(
+                "mode",
+                match spec.contract() {
+                    ContractMode::Strict => "strict",
+                    ContractMode::AtLeast => "at-least",
+                },
+            ),
+    );
+    match spec.contract() {
+        ContractMode::Strict => ensure!(
+            frontier == expected,
+            "min_level contract violated: expected restorable frontier {expected:?}, \
+             recovery served {frontier:?}"
+        ),
+        ContractMode::AtLeast => {
+            if let Some(e) = expected {
+                let a = frontier.ok_or_else(|| {
+                    anyhow!("expected a restorable frontier >= {e}, recovery served none")
+                })?;
+                ensure!(
+                    a >= e,
+                    "recovery served frontier {a}, older than the guaranteed {e}"
+                );
+            }
+        }
+    }
+
+    // Restore + verify phase.
+    let mut restored: Vec<(usize, u8)> = Vec::new();
+    let mut verified_ranks = 0usize;
+    if let Some(version) = frontier {
+        let snaps = shadows
+            .get(&version)
+            .ok_or_else(|| anyhow!("no shadow copy for restored version {version}"))?;
+        match spec.inject {
+            InjectionPoint::MidRestart(after) => {
+                // Restart storm interrupted by a second blow of the same
+                // scope, then completed — restart must be idempotent.
+                let mut reinjected = false;
+                for rank in 0..world {
+                    let level = restore_and_verify(&rt, spec, rank, version, snaps, trace)?;
+                    restored.push((rank, level));
+                    verified_ranks += 1;
+                    // validate() bounds `after` to 1..=world, so the
+                    // second blow always fires within this loop.
+                    if !reinjected && rank + 1 >= after {
+                        rt.inject_failure(&scope);
+                        rt.revive_all();
+                        reinjected = true;
+                        trace.push(
+                            Json::obj()
+                                .set("ev", "reinject")
+                                .set("scope", scope_str(&scope))
+                                .set("after_ranks", rank + 1),
+                        );
+                    }
+                }
+                // Every affected rank died again mid-restart: restore
+                // them once more and re-verify.
+                for &rank in &victims {
+                    restore_and_verify(&rt, spec, rank, version, snaps, trace)?;
+                    verified_ranks += 1;
+                }
+            }
+            _ => {
+                for rank in 0..world {
+                    let level = restore_and_verify(&rt, spec, rank, version, snaps, trace)?;
+                    restored.push((rank, level));
+                    verified_ranks += 1;
+                }
+            }
+        }
+    } else {
+        ensure!(
+            expected.is_none(),
+            "recovery served no version although {expected:?} was expected"
+        );
+    }
+
+    let index_rebuilds = rt.metrics().counter("agg.index.rebuilds");
+    if matches!(spec.inject, InjectionPoint::MidDrainPreIndex) && frontier == Some(last_version)
+    {
+        // The final wave's group-0 container was never indexed; serving
+        // it proves the header rebuild ran.
+        ensure!(
+            index_rebuilds >= 1,
+            "durable-but-unindexed container restored without an index rebuild"
+        );
+    }
+
+    trace.push(
+        Json::obj()
+            .set("ev", "end")
+            .set("ok", true)
+            .set("verified", verified_ranks),
+    );
+    Ok(RunOutcome {
+        scope,
+        expected_frontier: expected,
+        frontier,
+        restored,
+        verified_ranks,
+        index_rebuilds,
+    })
+}
+
+/// Restore one rank into a fresh client + app (fresh-process semantics)
+/// and verify the restored bytes bit-for-bit against the shadow copy.
+/// Returns the level that served the restore.
+fn restore_and_verify(
+    rt: &Arc<VelocRuntime>,
+    spec: &ScenarioSpec,
+    rank: usize,
+    version: u64,
+    snaps: &[Vec<Vec<u8>>],
+    trace: &mut Trace,
+) -> Result<u8> {
+    let client = rt.client(rank);
+    let app = IterativeApp::new(
+        &client,
+        SCENARIO_APP,
+        spec.regions,
+        spec.region_bytes,
+        0.0,
+        spec.seed,
+    );
+    let info = client
+        .restart_version(SCENARIO_APP, version)?
+        .ok_or_else(|| anyhow!("rank {rank}: restore of frontier v{version} failed"))?;
+    ensure!(
+        info.version == version,
+        "rank {rank}: asked for v{version}, restored v{}",
+        info.version
+    );
+    let diff = app.diff_snapshot(&snaps[rank]);
+    ensure!(
+        diff.is_empty(),
+        "rank {rank}: restored v{version} differs from the shadow copy in regions {diff:?}"
+    );
+    trace.push(
+        Json::obj()
+            .set("ev", "restore")
+            .set("rank", rank)
+            .set("version", version)
+            .set("level", info.level as u64)
+            .set("crc", app.state_digest() as u64),
+    );
+    Ok(info.level)
+}
+
+/// Predict the newest version every rank can still restore, given the
+/// failure's blast radius and what each rank durably completed before it
+/// died (registry records, or the death ledger for pipelines cut short).
+fn expected_frontier(
+    spec: &ScenarioSpec,
+    topo: &crate::cluster::Topology,
+    scope: &FailureScope,
+    rt: &Arc<VelocRuntime>,
+    state: &Arc<FaultState>,
+    world: usize,
+) -> Option<u64> {
+    let injector = FailureInjector::new(*topo, 1.0);
+    let wiped: BTreeSet<usize> = injector.affected_nodes(scope).into_iter().collect();
+    let system = matches!(scope, FailureScope::System);
+    let registry = &rt.env().registry;
+    let node_ok = |n: usize| !system && !wiped.contains(&n);
+    let levels_of = |rank: usize, version: u64| -> Vec<u8> {
+        if let Some((v, levels)) = state.death_levels(rank) {
+            if v == version {
+                return levels;
+            }
+        }
+        registry
+            .info(SCENARIO_APP, version, rank)
+            .map(|i| i.levels)
+            .unwrap_or_default()
+    };
+    'versions: for version in registry.versions(SCENARIO_APP) {
+        for rank in 0..world {
+            let levels = levels_of(rank, version);
+            // Level 1: the rank's own node-local copy.
+            let mut ok = levels.contains(&1) && node_ok(topo.node_of(rank));
+            // Level 2: my copy on my partner's node.
+            if !ok && spec.with_partner && levels.contains(&2) {
+                let pnode = topo.node_of(topo.partner_of(rank));
+                ok = pnode != topo.node_of(rank) && node_ok(pnode);
+            }
+            // Level 3: rebuilt from every *other* group member's local
+            // copy + parity (the rank's own parity is not needed).
+            if !ok && spec.erasure_group >= 2 && topo.nodes % spec.erasure_group == 0 {
+                let group = topo.erasure_group(rank, spec.erasure_group);
+                ok = group.iter().filter(|&&m| m != rank).all(|&m| {
+                    let lm = levels_of(m, version);
+                    node_ok(topo.node_of(m)) && lm.contains(&1) && lm.contains(&3)
+                });
+            }
+            // Level 4: the PFS survives everything the matrix throws.
+            if !ok {
+                ok = levels.contains(&4);
+            }
+            if !ok {
+                continue 'versions;
+            }
+        }
+        return Some(version);
+    }
+    None
+}

@@ -1,0 +1,609 @@
+//! Scenario specifications: seed + cluster shape + module-stack
+//! permutation + failure scope + injection point. A spec serializes to one
+//! line of JSON, so any failing exploration reproduces exactly with
+//! `veloc sim --json '<spec>'` (the repro line every failure prints).
+
+use crate::api::VelocConfig;
+use crate::cluster::{FailureScope, Topology};
+use crate::modules::TierPolicy;
+use crate::pipeline::EngineMode;
+use crate::scheduler::SchedulerPolicy;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::time::Duration;
+
+/// Failure-scope family; the concrete target is either pinned or derived
+/// deterministically from the scenario seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScopeKind {
+    Rank,
+    Node,
+    MultiNode,
+    System,
+}
+
+impl ScopeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScopeKind::Rank => "rank",
+            ScopeKind::Node => "node",
+            ScopeKind::MultiNode => "multi-node",
+            ScopeKind::System => "system",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "rank" => Ok(ScopeKind::Rank),
+            "node" => Ok(ScopeKind::Node),
+            "multi-node" => Ok(ScopeKind::MultiNode),
+            "system" => Ok(ScopeKind::System),
+            other => bail!("scope must be rank|node|multi-node|system, got {other}"),
+        }
+    }
+}
+
+/// Scope family plus an optional pinned target (rank id for `Rank`, first
+/// node id otherwise; `MultiNode` takes the pinned node and its ring
+/// neighbour — exactly the partner-pair-killing pattern).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScopeSpec {
+    pub kind: ScopeKind,
+    pub target: Option<usize>,
+}
+
+impl ScopeSpec {
+    /// Materialize the concrete scope; unpinned targets derive from the
+    /// seed, so the same spec always kills the same ranks.
+    pub fn resolve(&self, topo: &Topology, seed: u64) -> FailureScope {
+        let mut rng = Rng::new(seed ^ 0x5C0_9E5C);
+        match self.kind {
+            ScopeKind::Rank => {
+                let r = match self.target {
+                    Some(t) => t,
+                    None => rng.range_usize(0, topo.world_size()),
+                };
+                FailureScope::Rank(r)
+            }
+            ScopeKind::Node => {
+                let n = match self.target {
+                    Some(t) => t,
+                    None => rng.range_usize(0, topo.nodes),
+                };
+                FailureScope::Node(n)
+            }
+            ScopeKind::MultiNode => {
+                let n = match self.target {
+                    Some(t) => t,
+                    None => rng.range_usize(0, topo.nodes),
+                };
+                FailureScope::MultiNode(vec![n, (n + 1) % topo.nodes])
+            }
+            ScopeKind::System => FailureScope::System,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        let j = Json::obj().set("kind", self.kind.name());
+        match self.target {
+            Some(t) => j.set("target", t),
+            None => j,
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ScopeSpec {
+            kind: ScopeKind::parse(j.str_or("kind", "node"))?,
+            target: j.get("target").and_then(Json::as_usize),
+        })
+    }
+}
+
+/// Where in the checkpoint/restart lifetime the failure lands.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InjectionPoint {
+    /// After the final checkpoint wave fully settled (the baseline the
+    /// `min_level` contract is exact for).
+    AfterCheckpoint,
+    /// Victim ranks die right before the named module runs — the failure
+    /// lands between pipeline stages, mid-module-stack.
+    BeforeModule(String),
+    /// The failure lands on the N-th flush chunk crossing the scheduler
+    /// gate — mid-transfer-chunk for the direct PFS path, mid-drain for
+    /// the aggregated path (both pace through the same gate).
+    MidFlushChunk(usize),
+    /// The aggregation writer dies between container publish and index
+    /// persist; recovery must rebuild the index from container headers.
+    MidDrainPreIndex,
+    /// The failure repeats mid-restart: after N ranks restored, the same
+    /// scope fires again and the restart must complete idempotently.
+    MidRestart(usize),
+}
+
+impl InjectionPoint {
+    pub fn name(&self) -> String {
+        match self {
+            InjectionPoint::AfterCheckpoint => "after-checkpoint".to_string(),
+            InjectionPoint::BeforeModule(m) => format!("before-module:{m}"),
+            InjectionPoint::MidFlushChunk(c) => format!("mid-flush-chunk:{c}"),
+            InjectionPoint::MidDrainPreIndex => "mid-drain-pre-index".to_string(),
+            InjectionPoint::MidRestart(k) => format!("mid-restart:{k}"),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            InjectionPoint::AfterCheckpoint => Json::obj().set("point", "after-checkpoint"),
+            InjectionPoint::BeforeModule(m) => Json::obj()
+                .set("point", "before-module")
+                .set("module", m.as_str()),
+            InjectionPoint::MidFlushChunk(c) => Json::obj()
+                .set("point", "mid-flush-chunk")
+                .set("chunk", *c),
+            InjectionPoint::MidDrainPreIndex => {
+                Json::obj().set("point", "mid-drain-pre-index")
+            }
+            InjectionPoint::MidRestart(k) => Json::obj()
+                .set("point", "mid-restart")
+                .set("after_ranks", *k),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        match j.str_or("point", "after-checkpoint") {
+            "after-checkpoint" => Ok(InjectionPoint::AfterCheckpoint),
+            "before-module" => Ok(InjectionPoint::BeforeModule(
+                j.get("module")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("before-module needs a \"module\""))?
+                    .to_string(),
+            )),
+            "mid-flush-chunk" => Ok(InjectionPoint::MidFlushChunk(j.usize_or("chunk", 1))),
+            "mid-drain-pre-index" => Ok(InjectionPoint::MidDrainPreIndex),
+            "mid-restart" => Ok(InjectionPoint::MidRestart(j.usize_or("after_ranks", 1))),
+            other => bail!("unknown injection point {other}"),
+        }
+    }
+}
+
+/// How exactly the `FailureScope::min_level` contract is asserted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContractMode {
+    /// The restorable frontier must equal the model's prediction exactly.
+    Strict,
+    /// The actual frontier may exceed the prediction: the pre-index crash
+    /// leaves a durable container the completion bookkeeping never saw.
+    AtLeast,
+}
+
+/// One fully-specified scenario. Everything the run does — workload
+/// mutations, failure targets, injection timing — derives from these
+/// fields, so `seed + spec` is a complete one-line repro.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub seed: u64,
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    pub engine_mode: EngineMode,
+    pub tier_policy: TierPolicy,
+    pub with_partner: bool,
+    /// 0 disables the erasure module.
+    pub erasure_group: usize,
+    /// Route level-4 flushes through the write-combining aggregator.
+    pub aggregation: bool,
+    /// Checkpoint waves taken before the failure.
+    pub waves: u64,
+    /// Application steps between checkpoints (version = step count).
+    pub steps_per_wave: u64,
+    pub regions: usize,
+    pub region_bytes: usize,
+    pub scope: ScopeSpec,
+    pub inject: InjectionPoint,
+}
+
+impl ScenarioSpec {
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.nodes, self.ranks_per_node)
+    }
+
+    pub fn contract(&self) -> ContractMode {
+        match self.inject {
+            InjectionPoint::MidDrainPreIndex => ContractMode::AtLeast,
+            _ => ContractMode::Strict,
+        }
+    }
+
+    /// The runtime configuration this scenario runs under. Deterministic
+    /// choices: a single backend thread (FIFO async tails), the
+    /// low-priority scheduler (tails run at `Priority::Background`, which
+    /// lets the runner hold them behind a pause barrier until every
+    /// rank's blocking prefix ran; its gate pacing is microseconds per
+    /// 4 KiB chunk and records nothing in the trace), a large age
+    /// threshold (no wall-clock drains) and enough retained versions that
+    /// GC never interferes.
+    pub fn to_config(&self) -> VelocConfig {
+        let mut cfg = VelocConfig::default().with_nodes(self.nodes, self.ranks_per_node);
+        cfg.engine_mode = self.engine_mode;
+        cfg.scheduler = SchedulerPolicy::LowPriority;
+        cfg.backend_threads = 1;
+        cfg.wait_timeout = Duration::from_secs(30);
+        cfg.stack.tier_policy = self.tier_policy;
+        cfg.stack.with_partner = self.with_partner;
+        cfg.stack.erasure_group = self.erasure_group;
+        cfg.stack.keep_versions = 64;
+        cfg.stack.flush_chunk = 4096;
+        cfg.stack.erasure_timeout = Duration::from_millis(200);
+        cfg.aggregation.enabled = self.aggregation;
+        cfg.aggregation.drain_chunk = 4096;
+        cfg.aggregation.max_delay = Duration::from_secs(120);
+        cfg
+    }
+
+    /// One-line exact repro for this scenario.
+    pub fn repro(&self) -> String {
+        format!("veloc sim --json '{}'", self.to_json().to_string())
+    }
+
+    pub fn to_json(&self) -> Json {
+        // The seed serializes as a string: Json numbers are f64-backed and
+        // would silently round seeds above 2^53, breaking the exact-repro
+        // guarantee.
+        Json::obj()
+            .set("seed", self.seed.to_string())
+            .set("nodes", self.nodes)
+            .set("ranks_per_node", self.ranks_per_node)
+            .set(
+                "engine_mode",
+                match self.engine_mode {
+                    EngineMode::Sync => "sync",
+                    EngineMode::Async => "async",
+                },
+            )
+            .set(
+                "tier_policy",
+                match self.tier_policy {
+                    TierPolicy::FastestFirst => "fastest",
+                    TierPolicy::ConcurrencyAware => "concurrency-aware",
+                },
+            )
+            .set("partner", self.with_partner)
+            .set("erasure_group", self.erasure_group)
+            .set("aggregation", self.aggregation)
+            .set("waves", self.waves)
+            .set("steps_per_wave", self.steps_per_wave)
+            .set("regions", self.regions)
+            .set("region_bytes", self.region_bytes)
+            .set("scope", self.scope.to_json())
+            .set("inject", self.inject.to_json())
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let seed = match j.get("seed") {
+            None => 1,
+            Some(Json::Str(s)) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow!("seed must be a u64, got {s:?}"))?,
+            Some(n) => n
+                .as_u64()
+                .ok_or_else(|| anyhow!("seed must be a non-negative integer"))?,
+        };
+        let spec = ScenarioSpec {
+            seed,
+            nodes: j.usize_or("nodes", 4),
+            ranks_per_node: j.usize_or("ranks_per_node", 2),
+            engine_mode: match j.str_or("engine_mode", "async") {
+                "sync" => EngineMode::Sync,
+                "async" => EngineMode::Async,
+                other => bail!("engine_mode must be sync|async, got {other}"),
+            },
+            tier_policy: match j.str_or("tier_policy", "fastest") {
+                "fastest" => TierPolicy::FastestFirst,
+                "concurrency-aware" => TierPolicy::ConcurrencyAware,
+                other => bail!("unknown tier_policy {other}"),
+            },
+            with_partner: j.bool_or("partner", true),
+            erasure_group: j.usize_or("erasure_group", 0),
+            aggregation: j.bool_or("aggregation", false),
+            waves: j.get("waves").and_then(Json::as_u64).unwrap_or(3),
+            steps_per_wave: j.get("steps_per_wave").and_then(Json::as_u64).unwrap_or(2),
+            regions: j.usize_or("regions", 2),
+            region_bytes: j.usize_or("region_bytes", 4096),
+            scope: ScopeSpec::from_json(
+                j.get("scope").unwrap_or(&Json::Null),
+            )?,
+            inject: InjectionPoint::from_json(
+                j.get("inject").unwrap_or(&Json::Null),
+            )?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_str_json(s: &str) -> Result<Self> {
+        let j = Json::parse(s).map_err(|e| anyhow!("scenario json: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Reject combinations the engine cannot run deterministically or that
+    /// are internally inconsistent.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes < 2 || self.ranks_per_node == 0 {
+            bail!("scenario needs >= 2 nodes and >= 1 rank per node");
+        }
+        if self.waves == 0 || self.steps_per_wave == 0 {
+            bail!("scenario needs >= 1 wave and >= 1 step per wave");
+        }
+        if self.regions == 0 || self.region_bytes < 16 {
+            bail!("scenario needs >= 1 region of >= 16 bytes");
+        }
+        if self.erasure_group == 1 {
+            bail!("erasure_group 1 is meaningless (0 disables, >= 2 enables)");
+        }
+        if self.erasure_group >= 2 && self.nodes % self.erasure_group != 0 {
+            bail!(
+                "nodes ({}) must be a multiple of erasure_group ({})",
+                self.nodes,
+                self.erasure_group
+            );
+        }
+        if self.scope.kind == ScopeKind::MultiNode && self.nodes < 3 {
+            bail!("multi-node scope needs >= 3 nodes (else it is a system outage)");
+        }
+        match &self.inject {
+            InjectionPoint::AfterCheckpoint => {}
+            InjectionPoint::MidRestart(after) => {
+                let world = self.nodes * self.ranks_per_node;
+                if *after == 0 || *after > world {
+                    bail!(
+                        "mid-restart after_ranks ({after}) must be in 1..={world} \
+                         or the second failure never fires"
+                    );
+                }
+            }
+            InjectionPoint::BeforeModule(m) => {
+                const KNOWN: [&str; 6] =
+                    ["checksum", "local", "partner", "erasure", "transfer", "version"];
+                if !KNOWN.contains(&m.as_str()) {
+                    bail!("unknown boundary module {m} (one of {KNOWN:?})");
+                }
+                if m == "partner" && !self.with_partner {
+                    bail!("boundary module partner requires the partner stage");
+                }
+                if m == "erasure" && self.erasure_group < 2 {
+                    bail!("boundary module erasure requires erasure_group >= 2");
+                }
+            }
+            InjectionPoint::MidFlushChunk(c) => {
+                if *c == 0 {
+                    bail!("mid-flush-chunk fuse must be >= 1");
+                }
+                if self.engine_mode == EngineMode::Sync && self.erasure_group >= 2 {
+                    bail!(
+                        "mid-flush-chunk with a sync engine + erasure needs threaded \
+                         waves, which make chunk ordering nondeterministic"
+                    );
+                }
+            }
+            InjectionPoint::MidDrainPreIndex => {
+                if !self.aggregation {
+                    bail!("mid-drain-pre-index requires aggregation");
+                }
+                if self.with_partner || self.erasure_group >= 2 {
+                    bail!(
+                        "mid-drain-pre-index isolates the aggregated level: \
+                         disable partner and erasure"
+                    );
+                }
+                if self.scope.kind != ScopeKind::Node || self.scope.target != Some(0) {
+                    bail!(
+                        "mid-drain-pre-index fires on the first drained group: \
+                         pin the scope to node 0"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Baseline spec the matrix derives from (4 nodes x 2 ranks, async engine,
+/// partner + 4-wide erasure, 3 waves of 2 steps).
+pub fn base_spec(seed: u64) -> ScenarioSpec {
+    ScenarioSpec {
+        seed,
+        nodes: 4,
+        ranks_per_node: 2,
+        engine_mode: EngineMode::Async,
+        tier_policy: TierPolicy::FastestFirst,
+        with_partner: true,
+        erasure_group: 4,
+        aggregation: false,
+        waves: 3,
+        steps_per_wave: 2,
+        regions: 2,
+        region_bytes: 4096,
+        scope: ScopeSpec {
+            kind: ScopeKind::Node,
+            target: None,
+        },
+        inject: InjectionPoint::AfterCheckpoint,
+    }
+}
+
+/// The standard sweep: module-stack permutations (sync/async engine, XOR
+/// partner vs erasure group sizes, aggregation on/off, tier policies)
+/// crossed with every injection-point family. 28 scenarios; each is an
+/// independent one-line repro.
+pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
+    let s = |i: u64| base_seed.wrapping_add(i.wrapping_mul(7919));
+    let scope = |kind: ScopeKind| ScopeSpec { kind, target: None };
+    let node0 = ScopeSpec {
+        kind: ScopeKind::Node,
+        target: Some(0),
+    };
+    let before = |m: &str| InjectionPoint::BeforeModule(m.to_string());
+
+    let mut specs = Vec::new();
+
+    // Stack 1: async, partner, erasure x4.
+    let s1 = base_spec(0);
+    specs.push(ScenarioSpec { seed: s(1), scope: scope(ScopeKind::Node), ..s1.clone() });
+    specs.push(ScenarioSpec { seed: s(2), scope: scope(ScopeKind::System), ..s1.clone() });
+    specs.push(ScenarioSpec { seed: s(3), scope: scope(ScopeKind::Node), inject: before("transfer"), ..s1.clone() });
+    specs.push(ScenarioSpec { seed: s(4), scope: scope(ScopeKind::MultiNode), inject: before("erasure"), ..s1.clone() });
+    specs.push(ScenarioSpec { seed: s(5), scope: scope(ScopeKind::Node), inject: before("local"), ..s1.clone() });
+    specs.push(ScenarioSpec { seed: s(6), scope: scope(ScopeKind::Node), inject: InjectionPoint::MidFlushChunk(2), ..s1.clone() });
+    specs.push(ScenarioSpec { seed: s(7), scope: scope(ScopeKind::Rank), inject: InjectionPoint::MidFlushChunk(5), ..s1.clone() });
+    specs.push(ScenarioSpec { seed: s(8), scope: scope(ScopeKind::Node), inject: InjectionPoint::MidRestart(3), ..s1.clone() });
+
+    // Stack 2: sync engine, partner, erasure x4 (threaded waves).
+    let s2 = ScenarioSpec { engine_mode: EngineMode::Sync, ..base_spec(0) };
+    specs.push(ScenarioSpec { seed: s(9), scope: scope(ScopeKind::Node), ..s2.clone() });
+    specs.push(ScenarioSpec { seed: s(10), scope: scope(ScopeKind::MultiNode), inject: before("partner"), ..s2.clone() });
+    specs.push(ScenarioSpec { seed: s(11), scope: scope(ScopeKind::Rank), inject: InjectionPoint::MidRestart(1), ..s2.clone() });
+    specs.push(ScenarioSpec { seed: s(12), scope: scope(ScopeKind::MultiNode), ..s2.clone() });
+
+    // Stack 3: async, partner only (no erasure), concurrency-aware tiers.
+    let s3 = ScenarioSpec {
+        erasure_group: 0,
+        tier_policy: TierPolicy::ConcurrencyAware,
+        ..base_spec(0)
+    };
+    specs.push(ScenarioSpec { seed: s(13), scope: scope(ScopeKind::Node), ..s3.clone() });
+    specs.push(ScenarioSpec { seed: s(14), scope: scope(ScopeKind::Node), inject: before("transfer"), ..s3.clone() });
+    specs.push(ScenarioSpec { seed: s(15), scope: scope(ScopeKind::MultiNode), inject: InjectionPoint::MidFlushChunk(3), ..s3.clone() });
+    specs.push(ScenarioSpec { seed: s(16), scope: scope(ScopeKind::System), inject: InjectionPoint::MidRestart(2), ..s3.clone() });
+
+    // Stack 4: async, erasure x2 only (no partner).
+    let s4 = ScenarioSpec {
+        with_partner: false,
+        erasure_group: 2,
+        ..base_spec(0)
+    };
+    specs.push(ScenarioSpec { seed: s(17), scope: scope(ScopeKind::MultiNode), ..s4.clone() });
+    specs.push(ScenarioSpec { seed: s(18), scope: scope(ScopeKind::Node), inject: before("erasure"), ..s4.clone() });
+    specs.push(ScenarioSpec { seed: s(19), scope: scope(ScopeKind::Node), inject: InjectionPoint::MidFlushChunk(1), ..s4.clone() });
+    specs.push(ScenarioSpec { seed: s(20), scope: scope(ScopeKind::Rank), ..s4.clone() });
+
+    // Stack 5: async, aggregated flush only (no partner/erasure).
+    let s5 = ScenarioSpec {
+        with_partner: false,
+        erasure_group: 0,
+        aggregation: true,
+        ..base_spec(0)
+    };
+    specs.push(ScenarioSpec { seed: s(21), scope: scope(ScopeKind::Node), ..s5.clone() });
+    specs.push(ScenarioSpec { seed: s(22), scope: scope(ScopeKind::Node), inject: InjectionPoint::MidFlushChunk(2), ..s5.clone() });
+    specs.push(ScenarioSpec { seed: s(23), scope: node0, inject: InjectionPoint::MidDrainPreIndex, ..s5.clone() });
+    specs.push(ScenarioSpec { seed: s(24), scope: scope(ScopeKind::Node), inject: InjectionPoint::MidRestart(2), ..s5.clone() });
+    specs.push(ScenarioSpec { seed: s(25), scope: scope(ScopeKind::System), ..s5.clone() });
+
+    // Stack 6: sync engine + aggregated flush.
+    let s6 = ScenarioSpec {
+        engine_mode: EngineMode::Sync,
+        with_partner: false,
+        erasure_group: 0,
+        aggregation: true,
+        ..base_spec(0)
+    };
+    specs.push(ScenarioSpec { seed: s(26), scope: scope(ScopeKind::Node), ..s6.clone() });
+    specs.push(ScenarioSpec { seed: s(27), scope: node0, inject: InjectionPoint::MidDrainPreIndex, ..s6.clone() });
+    specs.push(ScenarioSpec { seed: s(28), scope: scope(ScopeKind::Node), inject: before("transfer"), ..s6.clone() });
+
+    specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrip() {
+        for spec in standard_matrix(42) {
+            let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn repro_is_one_line_and_parseable() {
+        let spec = base_spec(7);
+        let repro = spec.repro();
+        assert!(!repro.contains('\n'));
+        let json = repro
+            .strip_prefix("veloc sim --json '")
+            .and_then(|s| s.strip_suffix('\''))
+            .unwrap();
+        assert_eq!(ScenarioSpec::from_str_json(json).unwrap(), spec);
+    }
+
+    #[test]
+    fn huge_seeds_roundtrip_exactly() {
+        // Above 2^53: a float-backed number would round; the string form
+        // must not.
+        let spec = base_spec(u64::MAX - 12345);
+        let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.seed, u64::MAX - 12345);
+        // Plain numeric seeds (hand-written specs) still parse.
+        let j = Json::parse(r#"{"seed": 42}"#).unwrap();
+        assert_eq!(ScenarioSpec::from_json(&j).unwrap().seed, 42);
+    }
+
+    #[test]
+    fn matrix_is_large_and_valid() {
+        let specs = standard_matrix(1);
+        assert!(specs.len() >= 24, "{} scenarios", specs.len());
+        for spec in &specs {
+            spec.validate().unwrap();
+        }
+        // Distinct (stack, injection) combinations.
+        let mut combos = std::collections::BTreeSet::new();
+        for spec in &specs {
+            combos.insert(format!(
+                "{:?}/{}/{}/{}/{}",
+                spec.engine_mode,
+                spec.with_partner,
+                spec.erasure_group,
+                spec.aggregation,
+                spec.inject.name()
+            ));
+        }
+        assert!(combos.len() >= 24, "{} distinct combos", combos.len());
+    }
+
+    #[test]
+    fn scope_resolution_is_seed_deterministic() {
+        let topo = Topology::new(4, 2);
+        let sc = ScopeSpec { kind: ScopeKind::Node, target: None };
+        assert_eq!(sc.resolve(&topo, 9), sc.resolve(&topo, 9));
+        let pinned = ScopeSpec { kind: ScopeKind::MultiNode, target: Some(3) };
+        assert_eq!(
+            pinned.resolve(&topo, 1),
+            FailureScope::MultiNode(vec![3, 0])
+        );
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let mut bad = base_spec(1);
+        bad.erasure_group = 3; // 4 % 3 != 0
+        assert!(bad.validate().is_err());
+        let mut bad = base_spec(1);
+        bad.inject = InjectionPoint::BeforeModule("warp".to_string());
+        assert!(bad.validate().is_err());
+        let mut bad = base_spec(1);
+        bad.inject = InjectionPoint::MidDrainPreIndex; // no aggregation
+        assert!(bad.validate().is_err());
+        let mut bad = base_spec(1);
+        bad.engine_mode = EngineMode::Sync;
+        bad.inject = InjectionPoint::MidFlushChunk(1); // threaded + fuse
+        assert!(bad.validate().is_err());
+        let mut bad = base_spec(1);
+        bad.inject = InjectionPoint::MidRestart(0); // never fires
+        assert!(bad.validate().is_err());
+        let mut bad = base_spec(1);
+        bad.inject = InjectionPoint::MidRestart(9); // > world (8)
+        assert!(bad.validate().is_err());
+    }
+}

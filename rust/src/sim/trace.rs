@@ -1,0 +1,119 @@
+//! Structured event traces: every scenario run emits an ordered list of
+//! JSON events recorded exclusively by the single-threaded orchestrator,
+//! so a run's trace is a pure function of its spec (seed included). Saved
+//! traces replay exactly: re-running the embedded spec must reproduce the
+//! event list byte for byte.
+
+use crate::sim::scenario::ScenarioSpec;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    events: Vec<Json>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace::default()
+    }
+
+    pub fn push(&mut self, event: Json) {
+        self.events.push(event);
+    }
+
+    pub fn events(&self) -> &[Json] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Full trace document: the spec that produced it plus the events.
+    pub fn to_json(&self, spec: &ScenarioSpec) -> Json {
+        Json::obj()
+            .set("scenario", spec.to_json())
+            .set("events", Json::Arr(self.events.clone()))
+    }
+
+    pub fn save(&self, spec: &ScenarioSpec, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json(spec).to_pretty())
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+
+    /// Load a saved trace (spec + events) for replay.
+    pub fn load(path: &Path) -> Result<(ScenarioSpec, Trace)> {
+        let j = crate::util::json::load(path)?;
+        let spec = ScenarioSpec::from_json(
+            j.get("scenario")
+                .ok_or_else(|| anyhow!("{}: no \"scenario\" object", path.display()))?,
+        )?;
+        let events = j
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{}: no \"events\" array", path.display()))?
+            .to_vec();
+        Ok((spec, Trace { events }))
+    }
+
+    /// First divergence between this (recorded) trace and another
+    /// (replayed) one; None = identical event streams.
+    pub fn diff(&self, other: &Trace) -> Option<String> {
+        let n = self.events.len().max(other.events.len());
+        for i in 0..n {
+            let a = self.events.get(i).map(Json::to_string);
+            let b = other.events.get(i).map(Json::to_string);
+            if a != b {
+                return Some(format!(
+                    "event {i} diverges:\n  recorded: {}\n  replayed: {}",
+                    a.unwrap_or_else(|| "<missing>".to_string()),
+                    b.unwrap_or_else(|| "<missing>".to_string()),
+                ));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::scenario::base_spec;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let spec = base_spec(5);
+        let mut t = Trace::new();
+        t.push(Json::obj().set("ev", "start").set("seed", 5u64));
+        t.push(Json::obj().set("ev", "end").set("ok", true));
+        let dir = std::env::temp_dir().join("veloc-sim-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        t.save(&spec, &path).unwrap();
+        let (spec2, t2) = Trace::load(&path).unwrap();
+        assert_eq!(spec2, spec);
+        assert!(t.diff(&t2).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn diff_reports_first_divergence() {
+        let mut a = Trace::new();
+        a.push(Json::obj().set("ev", "x"));
+        a.push(Json::obj().set("ev", "y"));
+        let mut b = Trace::new();
+        b.push(Json::obj().set("ev", "x"));
+        b.push(Json::obj().set("ev", "z"));
+        let d = a.diff(&b).unwrap();
+        assert!(d.contains("event 1"), "{d}");
+        let mut c = Trace::new();
+        c.push(Json::obj().set("ev", "x"));
+        assert!(a.diff(&c).unwrap().contains("<missing>"));
+    }
+}

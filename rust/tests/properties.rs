@@ -175,6 +175,66 @@ fn prop_json_roundtrip() {
     }
 }
 
+/// `FailureScope::min_level` is monotone under scope widening
+/// (Rank ⊂ Node ⊂ MultiNode ⊂ System) for random topologies: a wider
+/// blast radius never needs a *lighter* resilience level, and the
+/// affected rank/node sets grow along the chain.
+#[test]
+fn prop_min_level_monotone_under_scope_widening() {
+    use std::collections::BTreeSet;
+    use veloc::cluster::{FailureInjector, FailureScope};
+    let mut rng = Rng::new(0x111E7);
+    for trial in 0..200 {
+        let nodes = rng.range_usize(2, 12);
+        let rpn = rng.range_usize(1, 5);
+        let t = Topology::new(nodes, rpn);
+        let inj = FailureInjector::new(t, 100.0);
+        let r = rng.range_usize(0, t.world_size());
+        let node = t.node_of(r);
+        // Widening chain anchored at a random rank.
+        let chain = [
+            FailureScope::Rank(r),
+            FailureScope::Node(node),
+            FailureScope::MultiNode(vec![node, (node + 1) % nodes]),
+            FailureScope::System,
+        ];
+        for w in chain.windows(2) {
+            assert!(
+                w[0].min_level() <= w[1].min_level(),
+                "trial {trial}: min_level({:?}) > min_level({:?})",
+                w[0],
+                w[1]
+            );
+            let narrow: BTreeSet<usize> =
+                inj.affected_ranks(&w[0]).into_iter().collect();
+            let wide: BTreeSet<usize> =
+                inj.affected_ranks(&w[1]).into_iter().collect();
+            assert!(
+                narrow.is_subset(&wide),
+                "trial {trial}: affected ranks of {:?} not within {:?}",
+                w[0],
+                w[1]
+            );
+            let narrow_nodes: BTreeSet<usize> =
+                inj.affected_nodes(&w[0]).into_iter().collect();
+            let wide_nodes: BTreeSet<usize> =
+                inj.affected_nodes(&w[1]).into_iter().collect();
+            assert!(
+                narrow_nodes.is_subset(&wide_nodes),
+                "trial {trial}: affected nodes of {:?} not within {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        // And min_level itself spans exactly the four levels, in order.
+        assert_eq!(
+            chain.iter().map(|s| s.min_level()).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4],
+            "trial {trial}"
+        );
+    }
+}
+
 /// Failure schedules: events sorted, scopes valid for the topology.
 #[test]
 fn prop_failure_schedules_valid() {

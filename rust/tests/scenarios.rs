@@ -1,0 +1,160 @@
+//! The crash–recover–verify scenario matrix: stack permutations (sync vs
+//! async engine, partner vs XOR erasure group sizes, aggregation on/off,
+//! tier policies) crossed with every injection-point family (between
+//! pipeline modules, mid-transfer-chunk, mid-aggregation-drain, the
+//! pre-index crash window, mid-restart). Every scenario verifies restored
+//! application state bit-for-bit against shadow copies and asserts the
+//! `FailureScope::min_level` contract; every failure message carries the
+//! seed and the exact `veloc sim --json '...'` repro line.
+
+use veloc::pipeline::EngineMode;
+use veloc::sim::{
+    base_spec, replay_file, run_scenario, run_scenario_traced, standard_matrix,
+    InjectionPoint, ScopeKind,
+};
+
+/// The full sweep: >= 24 distinct (stack-permutation x injection-point)
+/// scenarios, all passing. A failing scenario prints its seed and the
+/// one-line CLI repro.
+#[test]
+fn standard_matrix_covers_and_passes() {
+    let specs = standard_matrix(0x5EED);
+    assert!(
+        specs.len() >= 24,
+        "matrix shrank below the 24-scenario floor: {}",
+        specs.len()
+    );
+    let mut stacks = std::collections::BTreeSet::new();
+    let mut points = std::collections::BTreeSet::new();
+    for spec in &specs {
+        stacks.insert(format!(
+            "{:?}/{}/{}/{}",
+            spec.engine_mode, spec.with_partner, spec.erasure_group, spec.aggregation
+        ));
+        points.insert(spec.inject.name());
+    }
+    assert!(stacks.len() >= 5, "stack permutations: {stacks:?}");
+    assert!(points.len() >= 10, "injection points: {points:?}");
+
+    let mut failures = Vec::new();
+    for spec in &specs {
+        if let Err(e) = run_scenario(spec) {
+            failures.push(format!("{e:#}"));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{}/{} scenarios failed:\n{}",
+        failures.len(),
+        specs.len(),
+        failures.join("\n")
+    );
+}
+
+/// Determinism: the same spec yields byte-identical event traces, for one
+/// representative of each injection mechanism.
+#[test]
+fn traces_replay_exactly_from_their_seed() {
+    let specs = standard_matrix(77);
+    let pick = |f: &dyn Fn(&InjectionPoint) -> bool| {
+        specs
+            .iter()
+            .find(|s| f(&s.inject))
+            .expect("matrix covers every mechanism")
+    };
+    let representatives = [
+        pick(&|i| matches!(i, InjectionPoint::AfterCheckpoint)),
+        pick(&|i| matches!(i, InjectionPoint::BeforeModule(_))),
+        pick(&|i| matches!(i, InjectionPoint::MidFlushChunk(_))),
+        pick(&|i| matches!(i, InjectionPoint::MidDrainPreIndex)),
+        pick(&|i| matches!(i, InjectionPoint::MidRestart(_))),
+    ];
+    for spec in representatives {
+        let (r1, t1) = run_scenario_traced(spec);
+        r1.unwrap_or_else(|e| panic!("{e:#}"));
+        let (r2, t2) = run_scenario_traced(spec);
+        r2.unwrap_or_else(|e| panic!("{e:#}"));
+        if let Some(diff) = t1.diff(&t2) {
+            panic!(
+                "nondeterministic trace for {} (seed {}): {diff}",
+                spec.inject.name(),
+                spec.seed
+            );
+        }
+    }
+}
+
+/// A saved trace replays exactly through the file-based replay path (the
+/// `veloc sim --replay` workflow).
+#[test]
+fn saved_trace_replays_via_file() {
+    let spec = base_spec(0xBEEF1);
+    let (result, trace) = run_scenario_traced(&spec);
+    result.unwrap_or_else(|e| panic!("{e:#}"));
+    let dir = std::env::temp_dir().join("veloc-scenarios-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("replay.json");
+    trace.save(&spec, &path).unwrap();
+    let report = replay_file(&path).unwrap_or_else(|e| panic!("{e:#}"));
+    assert_eq!(report.spec, spec);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Satellite: aggregation restart race — a node dies between container
+/// drain and index persist; recovery must rebuild the index from the
+/// self-describing container headers and still serve the final wave.
+#[test]
+fn aggregation_drain_index_race_rebuilds_from_headers() {
+    for engine in [EngineMode::Async, EngineMode::Sync] {
+        let spec = standard_matrix(0xA66)
+            .into_iter()
+            .find(|s| {
+                s.inject == InjectionPoint::MidDrainPreIndex && s.engine_mode == engine
+            })
+            .expect("matrix carries pre-index scenarios for both engines");
+        let report = run_scenario(&spec).unwrap_or_else(|e| panic!("{e:#}"));
+        assert!(
+            report.index_rebuilds >= 1,
+            "{engine:?}: recovery must rebuild the segment index from container headers"
+        );
+        assert_eq!(
+            report.frontier,
+            Some(spec.waves * spec.steps_per_wave),
+            "{engine:?}: the durable-but-unindexed container must serve the final wave"
+        );
+        assert_eq!(
+            report.verified_ranks,
+            spec.nodes * spec.ranks_per_node,
+            "{engine:?}: every rank must verify bit-for-bit"
+        );
+    }
+}
+
+/// A failing exploration shrinks to `seed + spec`: the error message
+/// carries both the seed and the exact CLI repro line.
+#[test]
+fn failing_run_reports_seed_and_repro() {
+    let mut spec = base_spec(1234);
+    spec.erasure_group = 3; // invalid: 4 nodes % 3 != 0
+    let err = run_scenario(&spec).unwrap_err().to_string();
+    assert!(err.contains("seed 1234"), "{err}");
+    assert!(err.contains("veloc sim --json '"), "{err}");
+}
+
+/// The negative contract case: a system outage before any level-4 flush
+/// completed leaves nothing recoverable — and the engine must predict
+/// exactly that (frontier None on both sides).
+#[test]
+fn unflushed_system_outage_is_unrecoverable_and_predicted() {
+    let mut spec = base_spec(0xDEAD5);
+    spec.waves = 1;
+    spec.scope = veloc::sim::ScopeSpec {
+        kind: ScopeKind::System,
+        target: None,
+    };
+    spec.inject = InjectionPoint::BeforeModule("transfer".to_string());
+    let report = run_scenario(&spec).unwrap_or_else(|e| panic!("{e:#}"));
+    assert_eq!(report.expected_frontier, None);
+    assert_eq!(report.frontier, None);
+    assert_eq!(report.verified_ranks, 0);
+}
