@@ -1,0 +1,123 @@
+//! E-delta — full vs incremental checkpointing (model time mode).
+//!
+//! An iterative workload mutates a fixed fraction of its protected state
+//! per step and checkpoints every step. The full pipeline moves the whole
+//! snapshot to the PFS each time; the delta pipeline moves one forced
+//! full plus thin containers (manifest + novel chunks). The acceptance
+//! shape: >= 5x reduction in physical PFS bytes at 1% mutation.
+//!
+//! Physical bytes are read off the PFS tier itself (`used_bytes` with GC
+//! disabled), so the comparison measures exactly what hit the shared
+//! tier, container/manifest overhead included.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::pipeline::CkptStatus;
+use veloc::util::rng::Rng;
+use veloc::util::stats::format_bytes;
+
+struct RunResult {
+    pfs_bytes: u64,
+    secs: f64,
+    logical: u64,
+}
+
+/// One mode run: `world` ranks, `waves` checkpoints, mutating `rate` of
+/// the state (one contiguous run per rank) between checkpoints.
+fn run_mode(delta: bool, rate: f64, waves: u64, state_bytes: usize) -> RunResult {
+    let mut cfg = VelocConfig::default().with_nodes(4, 1);
+    cfg.stack.with_partner = false;
+    cfg.stack.erasure_group = 0;
+    cfg.stack.keep_versions = 64; // no GC: PFS bytes accumulate per wave
+    if delta {
+        cfg.delta.enabled = true;
+        cfg.delta.min_chunk = 2 << 10;
+        cfg.delta.avg_chunk = 8 << 10;
+        cfg.delta.max_chunk = 64 << 10;
+        cfg.delta.max_chain = 16;
+    }
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let world = rt.topology().world_size();
+    let mut rng = Rng::new(0xBE9C);
+    let mut states: Vec<Vec<u8>> = (0..world)
+        .map(|_| {
+            let mut d = vec![0u8; state_bytes];
+            rng.fill_bytes(&mut d);
+            d
+        })
+        .collect();
+    let run = ((state_bytes as f64 * rate) as usize).max(1);
+    let t0 = Instant::now();
+    for version in 1..=waves {
+        for (rank, state) in states.iter_mut().enumerate() {
+            let span = state.len() - run.min(state.len() - 1);
+            let off = (version as usize)
+                .wrapping_mul(2_654_435_761)
+                .wrapping_add(rank * 7919)
+                % span;
+            for b in &mut state[off..off + run.min(state.len() - off)] {
+                *b = b.wrapping_add(1);
+            }
+            let client = rt.client(rank);
+            client.mem_protect(0, state.clone());
+            client.checkpoint("bench", version).unwrap();
+            let st = client.checkpoint_wait("bench", version).unwrap();
+            assert!(matches!(st, CkptStatus::Done(_)), "rank {rank}: {st:?}");
+        }
+    }
+    rt.drain();
+    RunResult {
+        pfs_bytes: rt.env().fabric.pfs().used_bytes(),
+        secs: t0.elapsed().as_secs_f64(),
+        logical: waves * world as u64 * state_bytes as u64,
+    }
+}
+
+fn main() {
+    harness::section("E-delta: full vs incremental checkpoint traffic");
+    let state_bytes = 4 << 20; // per rank
+    // Fixed wave count: the 5x acceptance ratio amortizes one forced full
+    // over the chain, so shrinking waves would shrink the ratio itself.
+    let waves = 10u64;
+    println!(
+        "{:>9} {:>6} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "mutation", "mode", "logical", "pfs bytes", "reduction", "time", "dedup"
+    );
+    for &rate in &[0.01f64, 0.10, 0.50] {
+        let full = run_mode(false, rate, waves, state_bytes);
+        let delta = run_mode(true, rate, waves, state_bytes);
+        let reduction = full.pfs_bytes as f64 / delta.pfs_bytes.max(1) as f64;
+        for (label, r) in [("full", &full), ("delta", &delta)] {
+            println!(
+                "{:>8.0}% {:>6} {:>12} {:>12} {:>11} {:>9.2}s {:>9.1}x",
+                rate * 100.0,
+                label,
+                format_bytes(r.logical),
+                format_bytes(r.pfs_bytes),
+                if label == "delta" {
+                    format!("{reduction:.1}x")
+                } else {
+                    "-".to_string()
+                },
+                r.secs,
+                r.logical as f64 / r.pfs_bytes.max(1) as f64,
+            );
+        }
+        if (rate - 0.01).abs() < 1e-9 {
+            assert!(
+                reduction >= 5.0,
+                "acceptance: >= 5x physical-byte reduction at 1% mutation, got {reduction:.2}x"
+            );
+        }
+    }
+    println!(
+        "\nshape: at low mutation rates the physical traffic collapses to one\n\
+         forced full per chain plus manifests and novel chunks; as the\n\
+         mutation fraction grows the delta containers converge back to full\n\
+         snapshots and the reduction fades — the chunk/diff CPU cost only\n\
+         pays for itself below that crossover."
+    );
+}

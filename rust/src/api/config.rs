@@ -1,6 +1,7 @@
 //! Runtime configuration, loadable from JSON (`veloc --config file.json`).
 
 use crate::aggregation::{AggTarget, AggregationConfig};
+use crate::delta::DeltaConfig;
 use crate::modules::{StackConfig, TierPolicy};
 use crate::pipeline::EngineMode;
 use crate::scheduler::SchedulerPolicy;
@@ -32,6 +33,9 @@ pub struct VelocConfig {
     /// Aggregated asynchronous flush (write-combining per-rank checkpoints
     /// into shared containers).
     pub aggregation: AggregationConfig,
+    /// Incremental deduplicated checkpointing (content-defined chunking +
+    /// delta manifests; only novel chunks move through the levels).
+    pub delta: DeltaConfig,
     /// Override for the artifacts directory.
     pub artifacts: Option<PathBuf>,
 }
@@ -51,6 +55,7 @@ impl Default for VelocConfig {
             stack: StackConfig::default(),
             fabric,
             aggregation: AggregationConfig::default(),
+            delta: DeltaConfig::default(),
             artifacts: None,
         }
     }
@@ -150,6 +155,15 @@ impl VelocConfig {
             cfg.aggregation.target =
                 AggTarget::parse(a.str_or("target", cfg.aggregation.target.name()))?;
         }
+        if let Some(d) = j.get("delta") {
+            cfg.delta.enabled = d.bool_or("enabled", cfg.delta.enabled);
+            cfg.delta.min_chunk = d.usize_or("min_chunk", cfg.delta.min_chunk);
+            cfg.delta.avg_chunk = d.usize_or("avg_chunk", cfg.delta.avg_chunk);
+            cfg.delta.max_chunk = d.usize_or("max_chunk", cfg.delta.max_chunk);
+            if let Some(c) = d.get("max_chain").and_then(Json::as_u64) {
+                cfg.delta.max_chain = c;
+            }
+        }
         // KV module needs the KV tier; a burst-buffer drain target needs
         // the burst-buffer tier.
         if cfg.stack.with_kv {
@@ -186,6 +200,7 @@ impl VelocConfig {
         {
             bail!("aggregation targets the burst buffer but fabric.with_burst_buffer is off");
         }
+        self.delta.validate()?;
         Ok(())
     }
 
@@ -300,6 +315,34 @@ mod tests {
         let mut c = VelocConfig::default();
         c.aggregation.drain_chunk = 100;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn delta_section_parsed_and_validated() {
+        let j = Json::parse(
+            r#"{
+                "delta": {"enabled": true, "min_chunk": 1024,
+                          "avg_chunk": 4096, "max_chunk": 32768,
+                          "max_chain": 5}
+            }"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert!(c.delta.enabled);
+        assert_eq!(c.delta.min_chunk, 1024);
+        assert_eq!(c.delta.avg_chunk, 4096);
+        assert_eq!(c.delta.max_chunk, 32768);
+        assert_eq!(c.delta.max_chain, 5);
+
+        // Non-power-of-two average rejected when enabled.
+        let j = Json::parse(r#"{"delta": {"enabled": true, "avg_chunk": 5000}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        // Zero chain rejected.
+        let j = Json::parse(r#"{"delta": {"enabled": true, "max_chain": 0}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        // Disabled section with odd values still parses (not validated).
+        let j = Json::parse(r#"{"delta": {"avg_chunk": 5000}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_ok());
     }
 
     #[test]

@@ -123,6 +123,18 @@ impl VelocRuntime {
         };
 
         let metrics = Metrics::new();
+        // Incremental dedup state: chunker + per-node refcounted chunk
+        // stores + manifest history (the delta pipeline stage and the
+        // restore paths both reach it through the env).
+        let delta = if config.delta.enabled {
+            Some(crate::delta::DeltaState::new(
+                config.delta.clone(),
+                &fabric,
+                Some(Arc::clone(&metrics)),
+            )?)
+        } else {
+            None
+        };
         let aggregator = if config.aggregation.enabled {
             let agg = Aggregator::with_registry(
                 topology,
@@ -158,6 +170,7 @@ impl VelocRuntime {
             registry,
             scheduler_gate: Some(gate),
             aggregator,
+            delta,
         });
 
         // Mitigated policies run the active backend at low OS priority
@@ -236,6 +249,11 @@ impl VelocRuntime {
         self.env.aggregator.as_ref()
     }
 
+    /// The incremental-dedup state, when delta checkpointing is enabled.
+    pub fn delta(&self) -> Option<&Arc<crate::delta::DeltaState>> {
+        self.env.delta.as_ref()
+    }
+
     pub fn engine(&self, rank: usize) -> &Arc<Engine> {
         &self.engines[rank]
     }
@@ -273,11 +291,21 @@ impl VelocRuntime {
             if let Some(agg) = &self.env.aggregator {
                 agg.fail_node(n);
             }
+            // Chunk-store counts and manifest history are node state too:
+            // void them so post-restart checkpoints re-write payloads and
+            // start a fresh full chain instead of referencing wiped data.
+            if let Some(d) = &self.env.delta {
+                let ranks: Vec<usize> = self.topology.ranks_of_node(n).collect();
+                d.fail_node(n, &ranks);
+            }
         }
         if matches!(scope, crate::cluster::FailureScope::System) {
             self.env.fabric.fail_system();
             if let Some(agg) = &self.env.aggregator {
                 agg.fail_all_buffers();
+            }
+            if let Some(d) = &self.env.delta {
+                d.fail_all();
             }
         }
         self.metrics.incr("failures.injected", 1);
@@ -287,6 +315,11 @@ impl VelocRuntime {
     pub fn revive_all(&self) {
         for r in 0..self.topology.world_size() {
             self.kill.revive(r);
+        }
+        // A respawned backend replays any GC intent a crashed writer left
+        // behind (the chunk stores' refcount-ledger replay).
+        if let Some(d) = &self.env.delta {
+            d.recover_all();
         }
     }
 

@@ -1,0 +1,234 @@
+//! Content-defined chunking: a FastCDC-style rolling-hash chunker plus the
+//! chunk fingerprint the dedup store is keyed by.
+//!
+//! Boundaries are chosen where a gear rolling hash of the recent bytes
+//! matches a mask, so they depend only on *content near the boundary* —
+//! an in-place edit shifts or invalidates the chunks covering it and the
+//! boundary stream re-synchronizes within a chunk or two, leaving every
+//! other chunk (and therefore its fingerprint) untouched. That boundary
+//! stability is what makes fingerprint-level dedup effective for
+//! iterative applications that mutate a small fraction of their protected
+//! state per step.
+//!
+//! Normalized chunking (FastCDC): below the target average size a stricter
+//! mask suppresses early cuts, above it a looser mask forces late ones, so
+//! real chunk sizes cluster around `avg` instead of the long-tailed
+//! geometric distribution a single mask produces.
+
+use anyhow::{anyhow, Result};
+
+/// Content fingerprint of one chunk: crc32 + length + FNV-1a64, packed
+/// into 128 bits. Three independent digests must collide simultaneously
+/// for two distinct chunks to alias — negligible at checkpoint scale, and
+/// cheap enough to verify on every reassembly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u128);
+
+impl Fingerprint {
+    pub fn of(data: &[u8]) -> Fingerprint {
+        let crc = crc32fast::hash(data) as u128;
+        let len = (data.len() as u32) as u128;
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for &b in data {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        Fingerprint((crc << 96) | (len << 64) | h as u128)
+    }
+
+    /// Chunk payload length carried inside the fingerprint.
+    pub fn payload_len(&self) -> usize {
+        ((self.0 >> 64) as u32) as usize
+    }
+
+    /// Canonical 32-hex-digit spelling (store keys, manifests, ledgers).
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    pub fn parse(s: &str) -> Result<Fingerprint> {
+        u128::from_str_radix(s, 16)
+            .map(Fingerprint)
+            .map_err(|_| anyhow!("bad fingerprint {s:?}"))
+    }
+}
+
+/// Gear table: one 64-bit mix per byte value, derived deterministically
+/// (splitmix64) so boundaries are stable across processes and versions.
+fn gear_table() -> [u64; 256] {
+    let mut table = [0u64; 256];
+    let mut x: u64 = 0x9E37_79B9_7F4A_7C15;
+    for entry in table.iter_mut() {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        *entry = z ^ (z >> 31);
+    }
+    table
+}
+
+/// The chunker; construction validates the size triplet.
+pub struct Chunker {
+    min: usize,
+    avg: usize,
+    max: usize,
+    /// Mask used below `avg` (one bit more than the average: cuts rarer).
+    mask_strict: u64,
+    /// Mask used past `avg` (one bit less: cuts likelier).
+    mask_loose: u64,
+    table: [u64; 256],
+}
+
+impl Chunker {
+    /// `avg` must be a power of two (the cut masks derive from its log2),
+    /// with `16 <= min <= avg <= max`.
+    pub fn new(min: usize, avg: usize, max: usize) -> Result<Chunker> {
+        if !(16..=avg).contains(&min) || avg > max {
+            return Err(anyhow!(
+                "chunker needs 16 <= min <= avg <= max, got {min}/{avg}/{max}"
+            ));
+        }
+        if !avg.is_power_of_two() || avg < 256 {
+            return Err(anyhow!(
+                "chunker avg must be a power of two >= 256, got {avg}"
+            ));
+        }
+        let bits = avg.trailing_zeros();
+        Ok(Chunker {
+            min,
+            avg,
+            max,
+            mask_strict: (1u64 << (bits + 1)) - 1,
+            mask_loose: (1u64 << (bits - 1)) - 1,
+            table: gear_table(),
+        })
+    }
+
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        (self.min, self.avg, self.max)
+    }
+
+    /// Length of the first chunk of `data` (never 0 for non-empty input).
+    fn cut(&self, data: &[u8]) -> usize {
+        let n = data.len();
+        if n <= self.min {
+            return n;
+        }
+        let end = self.max.min(n);
+        let norm = self.avg.min(end);
+        let mut h: u64 = 0;
+        for (i, &b) in data.iter().enumerate().take(end).skip(self.min) {
+            h = (h << 1).wrapping_add(self.table[b as usize]);
+            let mask = if i < norm {
+                self.mask_strict
+            } else {
+                self.mask_loose
+            };
+            if h & mask == 0 {
+                return i + 1;
+            }
+        }
+        end
+    }
+
+    /// Split a buffer into content-defined chunks; concatenating the
+    /// chunks reproduces the buffer exactly. Empty input yields no chunks.
+    pub fn split<'a>(&self, mut data: &'a [u8]) -> Vec<&'a [u8]> {
+        let mut out = Vec::with_capacity(data.len() / self.avg + 1);
+        while !data.is_empty() {
+            let cut = self.cut(data);
+            out.push(&data[..cut]);
+            data = &data[cut..];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunker() -> Chunker {
+        Chunker::new(64, 256, 1024).unwrap()
+    }
+
+    #[test]
+    fn split_is_identity_under_concat() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 2654435761) as u8).collect();
+        let chunks = chunker().split(&data);
+        assert!(chunks.len() > 4, "{} chunks", chunks.len());
+        let rebuilt: Vec<u8> = chunks.concat();
+        assert_eq!(rebuilt, data);
+    }
+
+    #[test]
+    fn chunk_sizes_bounded() {
+        let data: Vec<u8> = (0..50_000u32).map(|i| (i ^ (i >> 3)) as u8).collect();
+        let c = chunker();
+        let chunks = c.split(&data);
+        for (i, ch) in chunks.iter().enumerate() {
+            assert!(ch.len() <= 1024, "chunk {i} is {} bytes", ch.len());
+            if i + 1 < chunks.len() {
+                assert!(ch.len() > 64, "non-final chunk {i} is {} bytes", ch.len());
+            }
+        }
+    }
+
+    #[test]
+    fn boundaries_deterministic_and_content_defined() {
+        // Aperiodic filler: a plain `(i * k) as u8` repeats every 256
+        // bytes, collapsing the distinct-fingerprint sets this asserts on.
+        let data: Vec<u8> = (0..20_000u32)
+            .map(|i| (i.wrapping_mul(2_654_435_761) >> 13) as u8)
+            .collect();
+        let c = chunker();
+        let a: Vec<usize> = c.split(&data).iter().map(|s| s.len()).collect();
+        let b: Vec<usize> = c.split(&data).iter().map(|s| s.len()).collect();
+        assert_eq!(a, b, "same bytes must chunk identically");
+        // Two buffers sharing only a suffix must still dedup most of that
+        // suffix: boundaries are content-defined, so they re-synchronize
+        // shortly after the differing prefixes end.
+        let mut other = data.clone();
+        for byte in other.iter_mut().take(10_000) {
+            *byte = byte.wrapping_add(131);
+        }
+        let fps = |buf: &[u8]| -> std::collections::BTreeSet<u128> {
+            c.split(buf).iter().map(|s| Fingerprint::of(s).0).collect()
+        };
+        let shared = fps(&data).intersection(&fps(&other)).count();
+        assert!(
+            shared >= 10,
+            "only {shared} shared chunks across a 10 KiB common suffix"
+        );
+    }
+
+    #[test]
+    fn tiny_and_empty_inputs() {
+        let c = chunker();
+        assert!(c.split(&[]).is_empty());
+        let small = vec![9u8; 10];
+        let chunks = c.split(&small);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0], &small[..]);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_and_roundtrips() {
+        let a = Fingerprint::of(b"hello world");
+        let b = Fingerprint::of(b"hello worle");
+        assert_ne!(a, b);
+        assert_eq!(a, Fingerprint::of(b"hello world"));
+        assert_eq!(a.payload_len(), 11);
+        assert_eq!(Fingerprint::parse(&a.hex()).unwrap(), a);
+        assert!(Fingerprint::parse("xyz").is_err());
+    }
+
+    #[test]
+    fn bad_size_triplets_rejected() {
+        assert!(Chunker::new(8, 256, 1024).is_err()); // min too small
+        assert!(Chunker::new(512, 256, 1024).is_err()); // min > avg
+        assert!(Chunker::new(64, 300, 1024).is_err()); // avg not 2^n
+        assert!(Chunker::new(64, 256, 128).is_err()); // max < avg
+    }
+}

@@ -1,0 +1,377 @@
+//! Delta manifests and the VDLT container that carries them.
+//!
+//! A manifest is the recipe for one checkpoint version: per region, the
+//! ordered fingerprint list of its content-defined chunks, plus the link
+//! to the *base* version it was diffed against (`None` for a full
+//! checkpoint) and the number of delta links back to the nearest full
+//! (`chain_len`, bounded by `DeltaConfig::max_chain`).
+//!
+//! The VDLT container is what the resilience levels move instead of the
+//! raw VCKP once delta is enabled:
+//!
+//! ```text
+//! magic   "VDLT"          4 bytes
+//! version u32             format version (1)
+//! hlen    u32             header JSON length
+//! header  JSON            {"manifest": {...}, "novel": [["fp-hex", len], ...]}
+//! body    novel payloads  concatenated in "novel" order
+//! crc     u32             CRC32 of everything above
+//! ```
+//!
+//! Only chunks *novel to the manifest chain* ride in the body — unchanged
+//! chunks are resolved at restore time from the per-node chunk store or
+//! from ancestor containers (see [`super::materialize`]).
+
+use crate::delta::chunker::Fingerprint;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeSet, HashMap};
+
+pub const VDLT_MAGIC: &[u8; 4] = b"VDLT";
+pub const VDLT_VERSION: u32 = 1;
+
+/// One chunk reference inside a region recipe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkRef {
+    pub fp: Fingerprint,
+    pub len: usize,
+}
+
+/// Chunk recipe of one protected region, in payload order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RegionChunks {
+    pub id: u32,
+    pub chunks: Vec<ChunkRef>,
+}
+
+/// The per-(name, rank, version) delta manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DeltaManifest {
+    pub name: String,
+    pub rank: usize,
+    /// Pipeline version (storage-key component, drives the chain walk).
+    pub version: u64,
+    /// Application iteration carried in the checkpoint metadata (usually
+    /// equal to `version`, but preserved independently so reassembly is
+    /// bit-for-bit even when a caller picked different numbering).
+    pub iteration: u64,
+    /// Version this manifest was diffed against; `None` = full checkpoint.
+    pub base: Option<u64>,
+    /// Delta links between this version and its nearest full (0 = full).
+    pub chain_len: u64,
+    /// Regions in checkpoint order.
+    pub regions: Vec<RegionChunks>,
+}
+
+impl DeltaManifest {
+    /// Unique fingerprints referenced by this manifest.
+    pub fn fp_set(&self) -> BTreeSet<Fingerprint> {
+        self.regions
+            .iter()
+            .flat_map(|r| r.chunks.iter().map(|c| c.fp))
+            .collect()
+    }
+
+    /// Total payload bytes the manifest describes.
+    pub fn logical_bytes(&self) -> u64 {
+        self.regions
+            .iter()
+            .flat_map(|r| r.chunks.iter())
+            .map(|c| c.len as u64)
+            .sum()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.base.is_none()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let regions: Vec<Json> = self
+            .regions
+            .iter()
+            .map(|r| {
+                let chunks: Vec<Json> = r
+                    .chunks
+                    .iter()
+                    .map(|c| {
+                        Json::Arr(vec![
+                            Json::Str(c.fp.hex()),
+                            Json::Num(c.len as f64),
+                        ])
+                    })
+                    .collect();
+                Json::obj()
+                    .set("id", r.id as u64)
+                    .set("chunks", Json::Arr(chunks))
+            })
+            .collect();
+        let j = Json::obj()
+            .set("name", self.name.as_str())
+            .set("rank", self.rank)
+            .set("version", self.version)
+            .set("iteration", self.iteration)
+            .set("chain_len", self.chain_len)
+            .set("regions", Json::Arr(regions));
+        match self.base {
+            Some(b) => j.set("base", b),
+            None => j,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<DeltaManifest> {
+        let mut regions = Vec::new();
+        for r in j
+            .get("regions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing regions"))?
+        {
+            let id = r
+                .get("id")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("region missing id"))? as u32;
+            let mut chunks = Vec::new();
+            for c in r
+                .get("chunks")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("region missing chunks"))?
+            {
+                chunks.push(chunk_pair(c)?);
+            }
+            regions.push(RegionChunks { id, chunks });
+        }
+        Ok(DeltaManifest {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest missing name"))?
+                .to_string(),
+            rank: j
+                .get("rank")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing rank"))?,
+            version: j
+                .get("version")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest missing version"))?,
+            iteration: j
+                .get("iteration")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest missing iteration"))?,
+            base: j.get("base").and_then(Json::as_u64),
+            chain_len: j.get("chain_len").and_then(Json::as_u64).unwrap_or(0),
+            regions,
+        })
+    }
+}
+
+/// Parse one `["fp-hex", len]` pair.
+fn chunk_pair(c: &Json) -> Result<ChunkRef> {
+    let arr = c.as_arr().ok_or_else(|| anyhow!("chunk ref not a pair"))?;
+    if arr.len() != 2 {
+        bail!("chunk ref needs [fp, len]");
+    }
+    let fp = Fingerprint::parse(
+        arr[0]
+            .as_str()
+            .ok_or_else(|| anyhow!("chunk fp not a string"))?,
+    )?;
+    let len = arr[1]
+        .as_usize()
+        .ok_or_else(|| anyhow!("chunk len not a number"))?;
+    Ok(ChunkRef { fp, len })
+}
+
+/// Does this buffer carry a VDLT container?
+pub fn is_delta(buf: &[u8]) -> bool {
+    buf.len() >= 4 && &buf[0..4] == VDLT_MAGIC
+}
+
+/// Serialize a manifest plus its novel chunk payloads.
+pub fn encode(manifest: &DeltaManifest, novel: &[(Fingerprint, &[u8])]) -> Vec<u8> {
+    let novel_json: Vec<Json> = novel
+        .iter()
+        .map(|(fp, data)| {
+            Json::Arr(vec![Json::Str(fp.hex()), Json::Num(data.len() as f64)])
+        })
+        .collect();
+    let header = Json::obj()
+        .set("manifest", manifest.to_json())
+        .set("novel", Json::Arr(novel_json))
+        .to_string();
+    let hbytes = header.as_bytes();
+    let body_len: usize = novel.iter().map(|(_, d)| d.len()).sum();
+    let mut out = Vec::with_capacity(4 + 4 + 4 + hbytes.len() + body_len + 4);
+    out.extend_from_slice(VDLT_MAGIC);
+    out.extend_from_slice(&VDLT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(hbytes);
+    for (_, data) in novel {
+        out.extend_from_slice(data);
+    }
+    let crc = crc32fast::hash(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse and CRC-validate a VDLT container into its manifest and the
+/// chunk payloads it carries.
+pub fn decode(buf: &[u8]) -> Result<(DeltaManifest, HashMap<Fingerprint, Vec<u8>>)> {
+    if buf.len() < 16 {
+        bail!("VDLT too short ({} bytes)", buf.len());
+    }
+    if !is_delta(buf) {
+        bail!("bad VDLT magic");
+    }
+    let stored_crc = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+    let actual_crc = crc32fast::hash(&buf[..buf.len() - 4]);
+    if stored_crc != actual_crc {
+        bail!("VDLT CRC mismatch: stored {stored_crc:#010x}, actual {actual_crc:#010x}");
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != VDLT_VERSION {
+        bail!("unsupported VDLT version {version}");
+    }
+    let hlen = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let hend = 12 + hlen;
+    if buf.len() < hend + 4 {
+        bail!("VDLT header truncated");
+    }
+    let header = std::str::from_utf8(&buf[12..hend])
+        .map_err(|_| anyhow!("VDLT header not utf-8"))?;
+    let j = Json::parse(header).map_err(|e| anyhow!("VDLT header: {e}"))?;
+    let manifest = DeltaManifest::from_json(
+        j.get("manifest")
+            .ok_or_else(|| anyhow!("VDLT header missing manifest"))?,
+    )?;
+    let mut chunks = HashMap::new();
+    let mut off = hend;
+    for entry in j
+        .get("novel")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("VDLT header missing novel list"))?
+    {
+        let c = chunk_pair(entry)?;
+        if off + c.len > buf.len() - 4 {
+            bail!("novel chunk {} overruns container", c.fp.hex());
+        }
+        let data = buf[off..off + c.len].to_vec();
+        if Fingerprint::of(&data) != c.fp {
+            bail!("novel chunk payload does not match fingerprint {}", c.fp.hex());
+        }
+        chunks.insert(c.fp, data);
+        off += c.len;
+    }
+    if off != buf.len() - 4 {
+        bail!("trailing bytes in VDLT body");
+    }
+    Ok((manifest, chunks))
+}
+
+/// Re-encode a container with every novel payload stripped (manifest kept
+/// intact) — the sim's model of a torn flush that persisted the manifest
+/// but lost the chunk data.
+pub fn strip_payloads(buf: &[u8]) -> Result<Vec<u8>> {
+    let (manifest, _) = decode(buf)?;
+    Ok(encode(&manifest, &[]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (DeltaManifest, Vec<(Fingerprint, Vec<u8>)>) {
+        let a = vec![1u8; 300];
+        let b = vec![2u8; 500];
+        let fa = Fingerprint::of(&a);
+        let fb = Fingerprint::of(&b);
+        let manifest = DeltaManifest {
+            name: "app".to_string(),
+            rank: 3,
+            version: 7,
+            iteration: 7,
+            base: Some(5),
+            chain_len: 2,
+            regions: vec![
+                RegionChunks {
+                    id: 0,
+                    chunks: vec![
+                        ChunkRef { fp: fa, len: 300 },
+                        ChunkRef { fp: fb, len: 500 },
+                    ],
+                },
+                RegionChunks {
+                    id: 4,
+                    chunks: vec![ChunkRef { fp: fa, len: 300 }],
+                },
+            ],
+        };
+        (manifest, vec![(fa, a), (fb, b)])
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let (m, _) = sample();
+        let back = DeltaManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(m.fp_set().len(), 2);
+        assert_eq!(m.logical_bytes(), 1100);
+        assert!(!m.is_full());
+    }
+
+    #[test]
+    fn container_roundtrip() {
+        let (m, novel) = sample();
+        let pairs: Vec<(Fingerprint, &[u8])> =
+            novel.iter().map(|(f, d)| (*f, d.as_slice())).collect();
+        let buf = encode(&m, &pairs);
+        assert!(is_delta(&buf));
+        let (back, chunks) = decode(&buf).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[&novel[0].0], novel[0].1);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let (m, novel) = sample();
+        let pairs: Vec<(Fingerprint, &[u8])> =
+            novel.iter().map(|(f, d)| (*f, d.as_slice())).collect();
+        let mut buf = encode(&m, &pairs);
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0x40;
+        let err = decode(&buf).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        assert!(decode(&buf[..12]).is_err());
+    }
+
+    #[test]
+    fn strip_keeps_manifest_loses_payloads() {
+        let (m, novel) = sample();
+        let pairs: Vec<(Fingerprint, &[u8])> =
+            novel.iter().map(|(f, d)| (*f, d.as_slice())).collect();
+        let buf = encode(&m, &pairs);
+        let stripped = strip_payloads(&buf).unwrap();
+        assert!(stripped.len() < buf.len());
+        let (back, chunks) = decode(&stripped).unwrap();
+        assert_eq!(back, m);
+        assert!(chunks.is_empty());
+    }
+
+    #[test]
+    fn empty_manifest_encodes() {
+        let m = DeltaManifest {
+            name: "x".to_string(),
+            rank: 0,
+            version: 1,
+            iteration: 1,
+            base: None,
+            chain_len: 0,
+            regions: vec![RegionChunks { id: 0, chunks: vec![] }],
+        };
+        let buf = encode(&m, &[]);
+        let (back, chunks) = decode(&buf).unwrap();
+        assert_eq!(back, m);
+        assert!(chunks.is_empty());
+        assert!(back.is_full());
+    }
+}

@@ -1,0 +1,152 @@
+//! Incremental deduplicated checkpointing (differential checkpointing in
+//! the OpenCHK model's terms — "Extending the OpenCHK Model with Advanced
+//! Checkpoint Features").
+//!
+//! Iterative applications mutate a small fraction of their protected
+//! state per step, yet a plain multi-level pipeline moves a full snapshot
+//! through every resilience level on every `checkpoint()`. This subsystem
+//! cuts the logical→physical byte ratio at the source:
+//!
+//! - [`chunker`] — a FastCDC-style content-defined chunker with stable,
+//!   content-derived boundaries and 128-bit chunk [`Fingerprint`]s.
+//! - [`store`] — one refcounted [`ChunkStore`] per node (fingerprint-keyed
+//!   chunk payloads on a local [`StorageTier`](crate::storage::StorageTier)),
+//!   with a write-ahead GC intent ledger replayed after crashes.
+//! - [`manifest`] — per-version delta manifests (ordered fingerprint
+//!   recipe + base-version link) and the VDLT container that carries a
+//!   manifest plus only its chain-novel chunk payloads.
+//! - [`state`] — the runtime-wide [`DeltaState`]: chunk, diff against the
+//!   previous version's manifest chain, publish, emit the container.
+//! - [`reassemble`] — [`materialize`]: bit-for-bit reconstruction from a
+//!   manifest chain at restore time, bounded by periodic forced fulls.
+//!
+//! The pipeline integration lives in
+//! [`modules::delta`](crate::modules::delta): a stage ahead of the level-1
+//! capture swaps the context's encoded payload for the VDLT container, so
+//! every downstream level (local, partner, erasure, PFS flush — aggregated
+//! or direct — and the version registry) moves only novel bytes.
+
+pub mod chunker;
+pub mod manifest;
+pub mod reassemble;
+pub mod state;
+pub mod store;
+
+pub use chunker::{Chunker, Fingerprint};
+pub use manifest::{is_delta, strip_payloads, ChunkRef, DeltaManifest, RegionChunks, VDLT_MAGIC};
+pub use reassemble::materialize;
+pub use state::DeltaState;
+pub use store::{ChunkStore, DeltaFaultHook, PublishStat, FAULT_GC_INTENT};
+
+use anyhow::{bail, Result};
+
+/// Knobs for incremental deduplicated checkpointing (see the JSON
+/// `"delta"` section and the `--delta*` CLI flags).
+#[derive(Clone, Debug)]
+pub struct DeltaConfig {
+    /// Route checkpoints through the chunk/dedup stage.
+    pub enabled: bool,
+    /// Smallest chunk the cut search may produce.
+    pub min_chunk: usize,
+    /// Target average chunk size; must be a power of two (the FastCDC cut
+    /// masks derive from its log2).
+    pub avg_chunk: usize,
+    /// Hard upper bound on chunk size.
+    pub max_chunk: usize,
+    /// Checkpoints per chain: after `max_chain - 1` incremental deltas a
+    /// full checkpoint is forced, bounding restore fan-in and GC pinning
+    /// (1 = every checkpoint full, i.e. dedup store only, no chains).
+    pub max_chain: u64,
+}
+
+impl Default for DeltaConfig {
+    fn default() -> Self {
+        DeltaConfig {
+            enabled: false,
+            min_chunk: 2 << 10,
+            avg_chunk: 8 << 10,
+            max_chunk: 64 << 10,
+            max_chain: 8,
+        }
+    }
+}
+
+impl DeltaConfig {
+    /// Reject size/chain combinations the chunker or recovery could only
+    /// patch up silently. Called by `VelocConfig::validate`.
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.min_chunk < 64 {
+            bail!(
+                "delta.min_chunk = {} is below the 64-byte minimum",
+                self.min_chunk
+            );
+        }
+        if !(self.min_chunk <= self.avg_chunk && self.avg_chunk <= self.max_chunk) {
+            bail!(
+                "delta chunk sizes must satisfy min <= avg <= max, got {}/{}/{}",
+                self.min_chunk,
+                self.avg_chunk,
+                self.max_chunk
+            );
+        }
+        if !self.avg_chunk.is_power_of_two() || self.avg_chunk < 256 {
+            bail!(
+                "delta.avg_chunk must be a power of two >= 256 (the FastCDC \
+                 cut masks derive from it), got {}",
+                self.avg_chunk
+            );
+        }
+        if self.max_chunk > 64 << 20 {
+            bail!("delta.max_chunk = {} exceeds the 64 MiB bound", self.max_chunk);
+        }
+        if self.max_chain == 0 {
+            bail!("delta.max_chain must be >= 1 (1 = every checkpoint full)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_disabled_and_valid_when_enabled() {
+        let c = DeltaConfig::default();
+        assert!(!c.enabled);
+        assert!(c.validate().is_ok());
+        let on = DeltaConfig {
+            enabled: true,
+            ..Default::default()
+        };
+        assert!(on.validate().is_ok());
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let base = DeltaConfig {
+            enabled: true,
+            ..Default::default()
+        };
+        let mut c = base.clone();
+        c.min_chunk = 16;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.avg_chunk = 3000; // not a power of two
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.max_chunk = c.avg_chunk / 2;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.max_chain = 0;
+        assert!(c.validate().is_err());
+        // Disabled configs skip validation entirely.
+        let mut c = base;
+        c.enabled = false;
+        c.avg_chunk = 3000;
+        assert!(c.validate().is_ok());
+    }
+}

@@ -1,0 +1,232 @@
+//! Chain reassembly: turn a restored container (VCKP, zlib'd VCKP, or a
+//! VDLT delta container) back into the exact [`Checkpoint`] it encodes.
+//!
+//! For delta containers the needed chunks are resolved in cost order:
+//! payloads carried by the container itself, then the node's chunk store
+//! (fingerprint-verified), then a walk up the manifest chain fetching
+//! ancestor containers through the caller-provided `fetch` closure — each
+//! resilience level supplies its own fetcher (local tiers, partner tiers,
+//! PFS objects, aggregated containers, erasure rebuilds). A broken chain
+//! (ancestor container or chunk unavailable) is an error; the engine's
+//! restore loop treats it like any other corrupt copy and falls back to
+//! the next level — and recovery's version descent falls back to an older
+//! version whose chain is intact, bounded by the periodic forced fulls.
+
+use crate::delta::chunker::Fingerprint;
+use crate::delta::manifest;
+use crate::delta::store::ChunkStore;
+use crate::modules::transfer::maybe_decompress;
+use crate::util::bytes::Checkpoint;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::HashMap;
+
+/// Hard safety bound on chain walks (configuration bounds real chains far
+/// lower via forced fulls).
+const MAX_CHAIN_HOPS: usize = 1024;
+
+/// Reassemble a checkpoint from container bytes. `store` is the optional
+/// node-local chunk store fast path; `fetch` returns the (possibly
+/// compressed) container bytes of an ancestor version at the same level.
+/// Non-delta containers pass straight through, so callers can use this
+/// unconditionally in place of `Checkpoint::decode`.
+pub fn materialize(
+    data: Vec<u8>,
+    store: Option<&ChunkStore>,
+    fetch: &dyn Fn(u64) -> Option<Vec<u8>>,
+) -> Result<Checkpoint> {
+    let raw = maybe_decompress(data)?;
+    if !manifest::is_delta(&raw) {
+        return Checkpoint::decode(&raw);
+    }
+    let (target, mut have) = manifest::decode(&raw)?;
+    let needed = target.fp_set();
+
+    let missing = |have: &HashMap<Fingerprint, Vec<u8>>| -> Vec<Fingerprint> {
+        needed
+            .iter()
+            .filter(|fp| !have.contains_key(*fp))
+            .copied()
+            .collect()
+    };
+
+    // Node store fast path (fingerprint-verified, so a stale or wiped
+    // store degrades to a miss, never to wrong bytes).
+    if let Some(s) = store {
+        for fp in missing(&have) {
+            if let Some(d) = s.get(&fp) {
+                have.insert(fp, d);
+            }
+        }
+    }
+
+    // Walk the manifest chain for whatever is still unresolved.
+    let mut base = target.base;
+    let mut hops = 0;
+    while !missing(&have).is_empty() {
+        let Some(v) = base else {
+            bail!(
+                "delta restore of {} v{} rank {}: {} chunk(s) missing and the \
+                 manifest chain is exhausted",
+                target.name,
+                target.version,
+                target.rank,
+                missing(&have).len()
+            );
+        };
+        hops += 1;
+        if hops > MAX_CHAIN_HOPS {
+            bail!(
+                "manifest chain of {} v{} exceeds {MAX_CHAIN_HOPS} links",
+                target.name,
+                target.version
+            );
+        }
+        let bytes = fetch(v).ok_or_else(|| {
+            anyhow!(
+                "delta restore of {} v{} rank {}: chain broken — version {v} unavailable",
+                target.name,
+                target.version,
+                target.rank
+            )
+        })?;
+        let braw = maybe_decompress(bytes)?;
+        if !manifest::is_delta(&braw) {
+            bail!("chain version {v} of {} is not a delta container", target.name);
+        }
+        let (ancestor, carried) = manifest::decode(&braw)?;
+        for (fp, d) in carried {
+            if needed.contains(&fp) {
+                have.entry(fp).or_insert(d);
+            }
+        }
+        base = ancestor.base;
+    }
+
+    // Assemble regions in manifest order; lengths double-checked against
+    // the recipe (payloads were fingerprint-verified on the way in).
+    let mut ckpt = Checkpoint::new(&target.name, target.rank, target.iteration);
+    for r in &target.regions {
+        let total: usize = r.chunks.iter().map(|c| c.len).sum();
+        let mut data = Vec::with_capacity(total);
+        for c in &r.chunks {
+            let piece = have
+                .get(&c.fp)
+                .expect("every needed fingerprint resolved above");
+            ensure!(
+                piece.len() == c.len,
+                "chunk {} of region {} is {} bytes, recipe says {}",
+                c.fp.hex(),
+                r.id,
+                piece.len(),
+                c.len
+            );
+            data.extend_from_slice(piece);
+        }
+        ckpt.push_region(r.id, data);
+    }
+    Ok(ckpt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{DeltaConfig, DeltaState};
+    use crate::storage::{FabricConfig, StorageFabric};
+    use std::collections::BTreeMap;
+
+    fn state() -> (StorageFabric, std::sync::Arc<DeltaState>) {
+        let f = StorageFabric::build(&FabricConfig {
+            nodes: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let cfg = DeltaConfig {
+            enabled: true,
+            min_chunk: 64,
+            avg_chunk: 256,
+            max_chunk: 1024,
+            max_chain: 4,
+        };
+        let s = DeltaState::new(cfg, &f, None).unwrap();
+        (f, s)
+    }
+
+    fn ckpt(version: u64, data: &[u8]) -> Checkpoint {
+        let mut c = Checkpoint::new("app", 0, version);
+        c.push_region(0, data.to_vec());
+        c.push_region(3, data.iter().rev().copied().collect());
+        c
+    }
+
+    #[test]
+    fn vckp_passthrough() {
+        let c = ckpt(1, &[5u8; 2000]);
+        let out = materialize(c.encode(), None, &|_| None).unwrap();
+        assert_eq!(out, c);
+    }
+
+    /// Aperiodic filler (a plain `(i * k) as u8` repeats every 256 bytes,
+    /// which would dedup chunks *within* one checkpoint and skew tests).
+    fn noise(n: usize) -> Vec<u8> {
+        (0..n as u32)
+            .map(|i| (i.wrapping_mul(2_654_435_761) >> 13) as u8)
+            .collect()
+    }
+
+    #[test]
+    fn chain_materializes_bit_for_bit() {
+        let (_f, state) = state();
+        let mut data = noise(12_288);
+        let mut containers: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+        let mut expected = None;
+        for v in 1..=3u64 {
+            data[(v as usize) * 700] ^= 0xA5;
+            let c = ckpt(v, &data);
+            containers.insert(v, state.encode_checkpoint(&c, v, 0, &|_| true).unwrap());
+            expected = Some(c);
+        }
+        let last = expected.unwrap();
+        // Through the chain only (no store).
+        let fetch = |v: u64| containers.get(&v).cloned();
+        let out = materialize(containers[&3].clone(), None, &fetch).unwrap();
+        assert_eq!(out, last);
+        assert_eq!(out.encode(), last.encode(), "re-encode must be identical");
+        // Through the store only (no chain fetch).
+        let out = materialize(
+            containers[&3].clone(),
+            Some(state.store(0).as_ref()),
+            &|_| None,
+        )
+        .unwrap();
+        assert_eq!(out, last);
+    }
+
+    #[test]
+    fn broken_chain_is_an_error_not_wrong_bytes() {
+        let (_f, state) = state();
+        let mut data = noise(8_192);
+        let mut containers: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+        for v in 1..=3u64 {
+            containers.insert(
+                v,
+                state.encode_checkpoint(&ckpt(v, &data), v, 0, &|_| true).unwrap(),
+            );
+            data[(v as usize) * 900] ^= 0x3C;
+        }
+        // Lose the middle link and hide the store: v3 must fail loudly.
+        let fetch = |v: u64| {
+            if v == 2 {
+                None
+            } else {
+                containers.get(&v).cloned()
+            }
+        };
+        let err = materialize(containers[&3].clone(), None, &fetch)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("chain broken"), "{err}");
+        // The full base still materializes.
+        let out = materialize(containers[&1].clone(), None, &|_| None).unwrap();
+        assert_eq!(out.meta.iteration, 1);
+    }
+}

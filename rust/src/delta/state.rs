@@ -1,0 +1,442 @@
+//! Runtime-wide delta state: the chunker, one [`ChunkStore`] per node and
+//! the manifest history every incremental checkpoint diffs against.
+//!
+//! [`DeltaState::encode_checkpoint`] is the hot path, run by the pipeline's
+//! delta stage before the level-1 capture: chunk every region, diff the
+//! fingerprints against the previous version's manifest *chain*, publish
+//! the chunks into the node store (refcounted; only payloads not already
+//! stored are written) and emit the VDLT container that the resilience
+//! levels move instead of the full VCKP. Chain length is bounded by
+//! [`DeltaConfig::max_chain`](super::DeltaConfig::max_chain): once
+//! `max_chain - 1` deltas ride on a full, the next checkpoint is forced
+//! full again, which bounds both restore fan-in and how many old versions
+//! garbage collection must pin.
+
+use crate::delta::chunker::{Chunker, Fingerprint};
+use crate::delta::manifest::{self, ChunkRef, DeltaManifest, RegionChunks};
+use crate::delta::store::{ChunkStore, DeltaFaultHook};
+use crate::delta::DeltaConfig;
+use crate::metrics::Metrics;
+use crate::storage::StorageFabric;
+use crate::util::bytes::Checkpoint;
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// One (name, rank)'s manifest history: version -> manifest.
+type ManifestHistory = BTreeMap<u64, Arc<DeltaManifest>>;
+
+pub struct DeltaState {
+    cfg: DeltaConfig,
+    chunker: Chunker,
+    /// One chunk store per node, backed by the node's largest local tier.
+    stores: Vec<Arc<ChunkStore>>,
+    /// (name, rank) -> manifest history, for chain diffing and GC.
+    manifests: Mutex<HashMap<(String, usize), ManifestHistory>>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl DeltaState {
+    pub fn new(
+        cfg: DeltaConfig,
+        fabric: &StorageFabric,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Result<Arc<DeltaState>> {
+        cfg.validate()?;
+        let chunker = Chunker::new(cfg.min_chunk, cfg.avg_chunk, cfg.max_chunk)?;
+        let mut stores = Vec::with_capacity(fabric.nodes());
+        for node in 0..fabric.nodes() {
+            let tier = fabric
+                .local_tiers(node)
+                .last()
+                .ok_or_else(|| anyhow!("node {node} has no local tier for the chunk store"))?;
+            stores.push(ChunkStore::new(Arc::clone(tier), node, metrics.clone()));
+        }
+        Ok(Arc::new(DeltaState {
+            cfg,
+            chunker,
+            stores,
+            manifests: Mutex::new(HashMap::new()),
+            metrics,
+        }))
+    }
+
+    pub fn config(&self) -> &DeltaConfig {
+        &self.cfg
+    }
+
+    pub fn store(&self, node: usize) -> &Arc<ChunkStore> {
+        &self.stores[node]
+    }
+
+    /// Install (or clear) the fault hook on every node store — scenario
+    /// engine instrumentation, never set in production.
+    pub fn set_fault_hook(&self, hook: Option<DeltaFaultHook>) {
+        for s in &self.stores {
+            s.set_fault_hook(hook.clone());
+        }
+    }
+
+    /// Replay any pending GC intents (respawn path). Returns how many
+    /// stores had an unapplied intent.
+    pub fn recover_all(&self) -> u64 {
+        let mut replayed = 0;
+        for s in &self.stores {
+            if s.replay_intent().unwrap_or(false) {
+                replayed += 1;
+            }
+        }
+        replayed
+    }
+
+    /// Model a node failure: the node's chunk-store tier was wiped, so
+    /// its in-memory counts are void, and the manifest history of the
+    /// node's ranks must be dropped — their next checkpoint then emits a
+    /// self-contained full (fresh-process semantics) instead of a delta
+    /// whose chain and chunks died with the node.
+    pub fn fail_node(&self, node: usize, ranks: &[usize]) {
+        self.stores[node].reset();
+        let mut g = self.manifests.lock().unwrap();
+        g.retain(|(_, rank), _| !ranks.contains(rank));
+    }
+
+    /// Model a full-system failure: every node store and every manifest
+    /// history is lost.
+    pub fn fail_all(&self) {
+        for s in &self.stores {
+            s.reset();
+        }
+        self.manifests.lock().unwrap().clear();
+    }
+
+    /// Does any rank still hold an in-memory manifest for this version?
+    /// (GC uses this to tell "full checkpoint, no ancestors" apart from
+    /// "delta checkpoint whose chain knowledge died with a node".)
+    pub fn has_manifest(&self, name: &str, version: u64) -> bool {
+        let g = self.manifests.lock().unwrap();
+        g.iter()
+            .any(|((n, _), h)| n == name && h.contains_key(&version))
+    }
+
+    /// Live manifests of one (name, rank), oldest first.
+    pub fn manifests_of(&self, name: &str, rank: usize) -> Vec<Arc<DeltaManifest>> {
+        let g = self.manifests.lock().unwrap();
+        g.get(&(name.to_string(), rank))
+            .map(|m| m.values().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Chain ancestors (strictly older versions a restore of `version`
+    /// may need), unioned across ranks. Used by version GC to pin
+    /// containers that newer deltas still reference.
+    pub fn chain_ancestors(&self, name: &str, version: u64) -> BTreeSet<u64> {
+        let g = self.manifests.lock().unwrap();
+        let mut out = BTreeSet::new();
+        for ((n, _), history) in g.iter() {
+            if n != name {
+                continue;
+            }
+            let mut cur = history.get(&version).and_then(|m| m.base);
+            while let Some(v) = cur {
+                if !out.insert(v) {
+                    break;
+                }
+                cur = history.get(&v).and_then(|m| m.base);
+            }
+        }
+        out
+    }
+
+    /// Retire one rank's manifest of a version: forget it and drop its
+    /// chunk references (reclaiming payloads that hit zero).
+    pub fn retire(&self, name: &str, version: u64, rank: usize, node: usize) -> Result<()> {
+        let removed = {
+            let mut g = self.manifests.lock().unwrap();
+            g.get_mut(&(name.to_string(), rank))
+                .and_then(|m| m.remove(&version))
+        };
+        if let Some(m) = removed {
+            self.store(node).release(&m.fp_set(), rank)?;
+        }
+        Ok(())
+    }
+
+    /// Chunk + dedup one checkpoint; returns the VDLT container to send
+    /// down the pipeline in place of the raw VCKP.
+    ///
+    /// `base_ok` reports whether a candidate base version's container
+    /// actually landed anywhere (the pipeline stage probes the level-1
+    /// copy). A version whose pipeline failed after the delta stage would
+    /// otherwise linger in the history as a *phantom link*: later deltas
+    /// would base on it, omit its chunks, and a remote chain restore
+    /// would break on a version no level ever stored. A rejected base
+    /// forces a self-contained full and evicts the phantom manifest.
+    pub fn encode_checkpoint(
+        &self,
+        ckpt: &Checkpoint,
+        version: u64,
+        node: usize,
+        base_ok: &dyn Fn(u64) -> bool,
+    ) -> Result<Vec<u8>> {
+        let name = ckpt.meta.name.clone();
+        let rank = ckpt.meta.rank;
+
+        // Chunk every region; remember one payload slice per fingerprint.
+        let mut regions = Vec::with_capacity(ckpt.regions.len());
+        let mut payloads: BTreeMap<Fingerprint, &[u8]> = BTreeMap::new();
+        for r in &ckpt.regions {
+            let mut chunks = Vec::new();
+            for piece in self.chunker.split(&r.data) {
+                let fp = Fingerprint::of(piece);
+                chunks.push(ChunkRef {
+                    fp,
+                    len: piece.len(),
+                });
+                payloads.entry(fp).or_insert(piece);
+            }
+            regions.push(RegionChunks { id: r.id, chunks });
+        }
+
+        // Base selection: the previous version, unless the chain budget is
+        // spent, the candidate was never stored, or its in-memory chain is
+        // broken (fresh process) — then force a self-contained full. The
+        // lock covers only the map walks; the base-durability probe and
+        // all tier I/O run outside it so concurrent ranks' blocking delta
+        // stages do not serialize on one mutex.
+        let (prev, chain_manifests) = {
+            let g = self.manifests.lock().unwrap();
+            let history = g.get(&(name.clone(), rank));
+            let prev = history.and_then(|h| {
+                h.range(..version).next_back().map(|(_, m)| Arc::clone(m))
+            });
+            let chain = match (history, &prev) {
+                (Some(h), Some(p)) => Self::chain_manifests(h, p),
+                _ => None,
+            };
+            (prev, chain)
+        };
+        let (base, chain_len, chain_fps, phantom) = match prev {
+            // Chain budget spent: forced full, no probe needed.
+            Some(p) if p.chain_len + 1 >= self.cfg.max_chain => {
+                (None, 0, BTreeSet::new(), None)
+            }
+            // The candidate base was never stored: force a full and
+            // schedule the phantom manifest for eviction.
+            Some(p) if !base_ok(p.version) => (None, 0, BTreeSet::new(), Some(p)),
+            Some(p) => match chain_manifests {
+                Some(ms) => {
+                    let mut fps = BTreeSet::new();
+                    for m in &ms {
+                        fps.extend(m.fp_set());
+                    }
+                    (Some(p.version), p.chain_len + 1, fps, None)
+                }
+                None => (None, 0, BTreeSet::new(), None),
+            },
+            None => (None, 0, BTreeSet::new(), None),
+        };
+        if let Some(p) = phantom {
+            let _ = self.retire(&name, p.version, rank, node);
+        }
+
+        let manifest = DeltaManifest {
+            name,
+            rank,
+            version,
+            iteration: ckpt.meta.iteration,
+            base,
+            chain_len,
+            regions,
+        };
+
+        // Novel payloads (not resolvable from the chain), in deterministic
+        // first-appearance order.
+        let mut seen = BTreeSet::new();
+        let mut novel: Vec<(Fingerprint, &[u8])> = Vec::new();
+        for r in &manifest.regions {
+            for c in &r.chunks {
+                if chain_fps.contains(&c.fp) || !seen.insert(c.fp) {
+                    continue;
+                }
+                novel.push((c.fp, payloads[&c.fp]));
+            }
+        }
+
+        self.store(node).publish(&payloads)?;
+        let container = manifest::encode(&manifest, &novel);
+
+        if let Some(m) = &self.metrics {
+            m.incr("delta.bytes.logical", manifest.logical_bytes());
+            m.incr("delta.bytes.physical", container.len() as u64);
+            m.incr("delta.chunks.total", payloads.len() as u64);
+            m.incr("delta.chunks.novel", novel.len() as u64);
+            m.incr(
+                if manifest.is_full() {
+                    "delta.ckpt.full"
+                } else {
+                    "delta.ckpt.incremental"
+                },
+                1,
+            );
+        }
+        let key = (manifest.name.clone(), rank);
+        let superseded = self
+            .manifests
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_default()
+            .insert(version, Arc::new(manifest));
+        // A re-checkpointed version (caller retried the same number)
+        // replaces its manifest; drop the old one's references or its
+        // chunks would leak forever. Newer manifests hold their own refs
+        // for everything they reference, so this can never free a chunk
+        // a live chain still needs.
+        if let Some(old) = superseded {
+            let _ = self.store(node).release(&old.fp_set(), rank);
+        }
+        Ok(container)
+    }
+
+    /// Every manifest reachable from `from` through its base chain
+    /// (inclusive), or `None` when a link is missing from the in-memory
+    /// history. Cheap map walks only — safe to call under the lock.
+    fn chain_manifests(
+        history: &ManifestHistory,
+        from: &Arc<DeltaManifest>,
+    ) -> Option<Vec<Arc<DeltaManifest>>> {
+        let mut out = Vec::new();
+        let mut cur = Some(from.version);
+        while let Some(v) = cur {
+            let m = history.get(&v)?;
+            out.push(Arc::clone(m));
+            cur = m.base;
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::FabricConfig;
+
+    fn fabric() -> StorageFabric {
+        StorageFabric::build(&FabricConfig {
+            nodes: 2,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn cfg() -> DeltaConfig {
+        DeltaConfig {
+            enabled: true,
+            min_chunk: 64,
+            avg_chunk: 256,
+            max_chunk: 1024,
+            max_chain: 3,
+        }
+    }
+
+    fn ckpt(version: u64, data: &[u8]) -> Checkpoint {
+        let mut c = Checkpoint::new("app", 0, version);
+        c.push_region(0, data.to_vec());
+        c
+    }
+
+    /// Aperiodic filler — periodic patterns dedup within one checkpoint
+    /// and would skew the size assertions.
+    fn noise(n: usize) -> Vec<u8> {
+        (0..n as u32)
+            .map(|i| (i.wrapping_mul(2_654_435_761) >> 13) as u8)
+            .collect()
+    }
+
+    #[test]
+    fn first_checkpoint_is_full_then_deltas_then_forced_full() {
+        let f = fabric();
+        let state = DeltaState::new(cfg(), &f, None).unwrap();
+        let mut data = noise(16_384);
+        let full = state.encode_checkpoint(&ckpt(1, &data), 1, 0, &|_| true).unwrap();
+        data[100] ^= 0xFF;
+        let d2 = state.encode_checkpoint(&ckpt(2, &data), 2, 0, &|_| true).unwrap();
+        data[9000] ^= 0xFF;
+        let d3 = state.encode_checkpoint(&ckpt(3, &data), 3, 0, &|_| true).unwrap();
+        data[12_000] ^= 0xFF;
+        let f4 = state.encode_checkpoint(&ckpt(4, &data), 4, 0, &|_| true).unwrap();
+
+        let (m1, _) = manifest::decode(&full).unwrap();
+        let (m2, _) = manifest::decode(&d2).unwrap();
+        let (m3, _) = manifest::decode(&d3).unwrap();
+        let (m4, _) = manifest::decode(&f4).unwrap();
+        assert!(m1.is_full());
+        assert_eq!(m2.base, Some(1));
+        assert_eq!(m2.chain_len, 1);
+        assert_eq!(m3.base, Some(2));
+        assert_eq!(m3.chain_len, 2);
+        assert!(m4.is_full(), "chain budget of 3 forces a full at the 4th");
+        // Deltas are far smaller than fulls.
+        assert!(d2.len() * 4 < full.len(), "{} vs {}", d2.len(), full.len());
+        assert!(d3.len() * 4 < full.len());
+    }
+
+    #[test]
+    fn chain_ancestors_and_retire_release_refcounts() {
+        let f = fabric();
+        let state = DeltaState::new(cfg(), &f, None).unwrap();
+        let mut data = noise(8_192);
+        for v in 1..=3u64 {
+            state.encode_checkpoint(&ckpt(v, &data), v, 0, &|_| true).unwrap();
+            data[(v as usize) * 500] ^= 0x55;
+        }
+        assert_eq!(
+            state.chain_ancestors("app", 3),
+            [1u64, 2].into_iter().collect::<BTreeSet<_>>()
+        );
+        assert!(state.chain_ancestors("app", 1).is_empty());
+        // Retiring v1 releases refs but shared chunks stay (v2/v3 refs).
+        let m1 = state.manifests_of("app", 0)[0].clone();
+        state.retire("app", 1, 0, 0).unwrap();
+        assert_eq!(state.manifests_of("app", 0).len(), 2);
+        let shared: Vec<_> = m1.fp_set().into_iter().collect();
+        assert!(
+            shared.iter().any(|fp| state.store(0).contains(fp)),
+            "chunks still referenced by v2/v3 must survive v1's retirement"
+        );
+    }
+
+    #[test]
+    fn phantom_base_rejected_and_evicted() {
+        let f = fabric();
+        let state = DeltaState::new(cfg(), &f, None).unwrap();
+        let data = noise(8_192);
+        state
+            .encode_checkpoint(&ckpt(1, &data), 1, 0, &|_| true)
+            .unwrap();
+        // v1's container never landed anywhere (pipeline failed after the
+        // delta stage): v2 must refuse the phantom base, emit a full and
+        // evict the dangling manifest.
+        let c2 = state
+            .encode_checkpoint(&ckpt(2, &data), 2, 0, &|_| false)
+            .unwrap();
+        let (m2, _) = manifest::decode(&c2).unwrap();
+        assert!(m2.is_full(), "phantom base must not be used");
+        let live = state.manifests_of("app", 0);
+        assert_eq!(live.len(), 1, "phantom manifest must be evicted");
+        assert_eq!(live[0].version, 2);
+    }
+
+    #[test]
+    fn fresh_state_forces_full_after_history_loss() {
+        let f = fabric();
+        let data = noise(4_096);
+        let state = DeltaState::new(cfg(), &f, None).unwrap();
+        state.encode_checkpoint(&ckpt(1, &data), 1, 0, &|_| true).unwrap();
+        // A respawned process builds a fresh state over the same fabric.
+        let state2 = DeltaState::new(cfg(), &f, None).unwrap();
+        let c = state2.encode_checkpoint(&ckpt(2, &data), 2, 0, &|_| true).unwrap();
+        let (m, _) = manifest::decode(&c).unwrap();
+        assert!(m.is_full(), "no in-memory history: must emit a full");
+    }
+}

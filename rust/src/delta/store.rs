@@ -1,0 +1,508 @@
+//! Per-node refcounted chunk store.
+//!
+//! Unique chunk payloads live as fingerprint-keyed objects on one local
+//! [`StorageTier`] of the node (the largest, so dedup state does not evict
+//! level-1 copies from the fast tier). Reference counts track how many
+//! live manifests name each chunk; when the version registry retires a
+//! version, [`ChunkStore::release`] decrements and deletes chunks that hit
+//! zero.
+//!
+//! ## Crash consistency: the GC intent ledger
+//!
+//! A release is not atomic against process death: the writer could die
+//! after deciding to free chunks but before the deletions and the ledger
+//! snapshot land. The store therefore write-ahead-logs every release:
+//!
+//! 1. persist the *intent* (`{seq, fps}`) on the tier,
+//! 2. apply the decrefs in memory and delete zero-ref chunk objects,
+//! 3. persist the refcount *ledger* snapshot (`{seq, refs}`),
+//! 4. delete the intent.
+//!
+//! A crash between 1 and 4 leaves the intent durable. Replay
+//! ([`ChunkStore::replay_intent`], run by the next release on the node or
+//! by [`super::DeltaState::recover_all`] after a respawn) compares the
+//! intent's sequence number with the ledger's: an already-applied intent
+//! (ledger seq >= intent seq) is simply cleared; an unapplied one resets
+//! the in-memory counts to the durable ledger snapshot, re-applies the
+//! decrefs exactly once and re-persists — idempotent under repeated
+//! crashes in the same window.
+//!
+//! Cost note: the ledger snapshot is also persisted on every publish so
+//! that a replay never resets counts to a state missing recent increfs.
+//! That write is O(unique chunks in the store) — fine at the modeled
+//! scale this repo targets; a production port would append per-publish
+//! ref deltas to a journal and snapshot only at release time.
+
+use crate::delta::chunker::Fingerprint;
+use crate::metrics::Metrics;
+use crate::storage::StorageTier;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// Named crash window inside [`ChunkStore::release`]: the GC intent is
+/// durable, the decrefs/deletions are not. The scenario engine lands
+/// simulated failures here; production installs no hook.
+pub const FAULT_GC_INTENT: &str = "delta.gc.post_intent";
+
+/// Fault hook consulted at named points; arguments are the point name and
+/// the rank performing the operation. Returning `true` means the failure
+/// lands there: the operation stops as a crashed writer would.
+pub type DeltaFaultHook = Arc<dyn Fn(&str, usize) -> bool + Send + Sync>;
+
+#[derive(Default)]
+struct StoreInner {
+    refs: HashMap<Fingerprint, u64>,
+    /// Sequence number of the last *applied* GC. The ledger always
+    /// persists this value — never a provisional one — so an intent with
+    /// seq > ledger seq is exactly "durable but not applied", no matter
+    /// how many publishes land between a crashed release and its replay.
+    applied_seq: u64,
+}
+
+/// Outcome of one [`ChunkStore::publish`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PublishStat {
+    /// Chunks whose payload was actually written (not already stored).
+    pub novel_chunks: u64,
+    pub novel_bytes: u64,
+}
+
+pub struct ChunkStore {
+    tier: Arc<StorageTier>,
+    node: usize,
+    inner: Mutex<StoreInner>,
+    metrics: Option<Arc<Metrics>>,
+    fault_hook: Mutex<Option<DeltaFaultHook>>,
+}
+
+impl ChunkStore {
+    pub fn new(
+        tier: Arc<StorageTier>,
+        node: usize,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Arc<ChunkStore> {
+        let store = Arc::new(ChunkStore {
+            tier,
+            node,
+            inner: Mutex::new(StoreInner::default()),
+            metrics,
+            fault_hook: Mutex::new(None),
+        });
+        // A store built over a tier with prior GC history must not start
+        // its sequence below the durable ledger's, or publishes would
+        // regress the persisted seq and a pending intent could read as
+        // already applied.
+        if let Ok((seq, _)) = store.load_ledger() {
+            store.inner.lock().unwrap().applied_seq = seq;
+        }
+        // And a pending intent must be settled *before* this store's
+        // first publish snapshots the ledger, or the stale decrefs would
+        // later be applied against refcounts they no longer describe.
+        let _ = store.replay_intent();
+        store
+    }
+
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    pub fn set_fault_hook(&self, hook: Option<DeltaFaultHook>) {
+        *self.fault_hook.lock().unwrap() = hook;
+    }
+
+    fn fault_at(&self, point: &str, rank: usize) -> bool {
+        let hook = self.fault_hook.lock().unwrap().clone();
+        hook.map(|h| h(point, rank)).unwrap_or(false)
+    }
+
+    fn chunk_key(fp: &Fingerprint) -> String {
+        format!("delta.c.{}", fp.hex())
+    }
+
+    fn ledger_key(&self) -> String {
+        format!("delta.n{}.ledger", self.node)
+    }
+
+    fn intent_key(&self) -> String {
+        format!("delta.n{}.gcintent", self.node)
+    }
+
+    /// Absorb one manifest's chunks: write payloads not yet stored and
+    /// take one reference per unique fingerprint. Persists the ledger so
+    /// a later replay sees counts current up to this publish.
+    pub fn publish(&self, chunks: &BTreeMap<Fingerprint, &[u8]>) -> Result<PublishStat> {
+        let mut stat = PublishStat::default();
+        // Payload writes run outside the store mutex (they dominate the
+        // blocking delta stage; chunk objects are content-addressed, so a
+        // concurrent publish of the same fingerprint is idempotent).
+        for (fp, data) in chunks {
+            let key = Self::chunk_key(fp);
+            if !self.tier.exists(&key) {
+                self.tier.put(&key, data)?;
+                stat.novel_chunks += 1;
+                stat.novel_bytes += data.len() as u64;
+            }
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for (fp, data) in chunks {
+            // Re-check under the lock: a concurrent release may have
+            // reclaimed a just-written chunk before our references took
+            // hold (release deletes only while holding this mutex).
+            let key = Self::chunk_key(fp);
+            let count = inner.refs.entry(*fp).or_insert(0);
+            if *count == 0 && !self.tier.exists(&key) {
+                self.tier.put(&key, data)?;
+                stat.novel_chunks += 1;
+                stat.novel_bytes += data.len() as u64;
+            }
+            *count += 1;
+        }
+        self.persist_ledger(&inner)?;
+        Ok(stat)
+    }
+
+    /// Fetch a chunk payload, verifying it against its fingerprint.
+    pub fn get(&self, fp: &Fingerprint) -> Option<Vec<u8>> {
+        let (data, _) = self.tier.get(&Self::chunk_key(fp))?;
+        if Fingerprint::of(&data) != *fp {
+            return None;
+        }
+        Some(data)
+    }
+
+    /// Is the chunk payload present on the backing tier?
+    pub fn contains(&self, fp: &Fingerprint) -> bool {
+        self.tier.exists(&Self::chunk_key(fp))
+    }
+
+    /// Model the owning node's failure: the backing tier was wiped, so
+    /// the in-memory counts are meaningless — forget them, or later
+    /// publishes would skip re-writing payloads the wipe destroyed.
+    pub fn reset(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.refs.clear();
+        inner.applied_seq = 0;
+    }
+
+    pub fn refcount(&self, fp: &Fingerprint) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .refs
+            .get(fp)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Drop one reference per fingerprint (a manifest retired); deletes
+    /// chunks whose count hits zero. `rank` identifies the GC writer for
+    /// fault-injection purposes. Returns the number of chunks reclaimed.
+    pub fn release(&self, fps: &BTreeSet<Fingerprint>, rank: usize) -> Result<u64> {
+        self.replay_intent()?;
+        let mut inner = self.inner.lock().unwrap();
+        // The intent gets the *next* sequence number, but `applied_seq`
+        // only advances after the decrefs land — publishes in between
+        // persist the old value, keeping the intent recognizably pending.
+        // (`applied_seq` can never trail the durable ledger: new() syncs
+        // it at construction and replay/release keep it current.)
+        let iseq = inner.applied_seq + 1;
+        let intent = Json::obj()
+            .set("seq", iseq)
+            .set(
+                "fps",
+                Json::Arr(fps.iter().map(|f| Json::Str(f.hex())).collect()),
+            )
+            .to_string();
+        self.tier.put(&self.intent_key(), intent.as_bytes())?;
+        if self.fault_at(FAULT_GC_INTENT, rank) {
+            // Simulated writer death: intent durable, decrefs not applied.
+            return Ok(0);
+        }
+        let deleted = Self::apply_decrefs(&self.tier, &mut inner, fps);
+        inner.applied_seq = iseq;
+        self.persist_ledger(&inner)?;
+        self.tier.delete(&self.intent_key());
+        if let Some(m) = &self.metrics {
+            m.incr("delta.chunks.gc", deleted);
+        }
+        Ok(deleted)
+    }
+
+    fn apply_decrefs(
+        tier: &Arc<StorageTier>,
+        inner: &mut StoreInner,
+        fps: &BTreeSet<Fingerprint>,
+    ) -> u64 {
+        let mut deleted = 0;
+        for fp in fps {
+            match inner.refs.get_mut(fp) {
+                Some(c) if *c > 1 => *c -= 1,
+                Some(_) => {
+                    inner.refs.remove(fp);
+                    if tier.delete(&Self::chunk_key(fp)) {
+                        deleted += 1;
+                    }
+                }
+                None => {}
+            }
+        }
+        deleted
+    }
+
+    /// Replay a pending GC intent left by a crashed writer. Returns true
+    /// when an unapplied intent was found and applied.
+    pub fn replay_intent(&self) -> Result<bool> {
+        let Some((bytes, _)) = self.tier.get(&self.intent_key()) else {
+            return Ok(false);
+        };
+        // A torn/corrupt intent must not wedge reclamation forever (every
+        // release starts with a replay): quarantine it instead. Dropping
+        // a corrupt intent leaks at most its one decref set — bounded —
+        // versus erroring out of every future GC on the node.
+        let parsed: Option<(u64, BTreeSet<Fingerprint>)> = (|| {
+            let j = Json::parse(std::str::from_utf8(&bytes).ok()?).ok()?;
+            let seq = j.get("seq").and_then(Json::as_u64)?;
+            let mut fps = BTreeSet::new();
+            for f in j.get("fps").and_then(Json::as_arr).unwrap_or(&[]) {
+                fps.insert(Fingerprint::parse(f.as_str()?).ok()?);
+            }
+            Some((seq, fps))
+        })();
+        let Some((iseq, fps)) = parsed else {
+            self.tier.delete(&self.intent_key());
+            if let Some(m) = &self.metrics {
+                m.incr("delta.gc.intent_corrupt", 1);
+            }
+            return Ok(false);
+        };
+        let mut inner = self.inner.lock().unwrap();
+        let (lseq, lrefs) = self.load_ledger()?;
+        if lseq >= iseq {
+            // The crashed writer got as far as persisting the ledger: the
+            // intent is already applied, only the cleanup is missing.
+            inner.applied_seq = inner.applied_seq.max(lseq);
+            self.tier.delete(&self.intent_key());
+            return Ok(false);
+        }
+        // A respawned writer lost the in-memory counts; restart from the
+        // durable snapshot and apply the interrupted GC exactly once.
+        inner.refs = lrefs;
+        Self::apply_decrefs(&self.tier, &mut inner, &fps);
+        inner.applied_seq = iseq;
+        self.persist_ledger(&inner)?;
+        self.tier.delete(&self.intent_key());
+        if let Some(m) = &self.metrics {
+            m.incr("delta.gc.replays", 1);
+        }
+        Ok(true)
+    }
+
+    fn persist_ledger(&self, inner: &StoreInner) -> Result<()> {
+        // BTreeMap ordering keeps the snapshot deterministic.
+        let sorted: BTreeMap<&Fingerprint, &u64> = inner.refs.iter().collect();
+        let refs: Vec<Json> = sorted
+            .into_iter()
+            .map(|(fp, n)| Json::Arr(vec![Json::Str(fp.hex()), Json::Num(*n as f64)]))
+            .collect();
+        let ledger = Json::obj()
+            .set("seq", inner.applied_seq)
+            .set("refs", Json::Arr(refs))
+            .to_string();
+        self.tier.put(&self.ledger_key(), ledger.as_bytes())?;
+        Ok(())
+    }
+
+    fn load_ledger(&self) -> Result<(u64, HashMap<Fingerprint, u64>)> {
+        let Some((bytes, _)) = self.tier.get(&self.ledger_key()) else {
+            return Ok((0, HashMap::new()));
+        };
+        let j = Json::parse(std::str::from_utf8(&bytes)?)
+            .map_err(|e| anyhow!("delta ledger: {e}"))?;
+        let seq = j.get("seq").and_then(Json::as_u64).unwrap_or(0);
+        let mut refs = HashMap::new();
+        for entry in j.get("refs").and_then(Json::as_arr).unwrap_or(&[]) {
+            let arr = entry
+                .as_arr()
+                .ok_or_else(|| anyhow!("ledger entry not a pair"))?;
+            if arr.len() != 2 {
+                continue;
+            }
+            let fp = Fingerprint::parse(
+                arr[0]
+                    .as_str()
+                    .ok_or_else(|| anyhow!("ledger fp not a string"))?,
+            )?;
+            let n = arr[1].as_u64().unwrap_or(0);
+            if n > 0 {
+                refs.insert(fp, n);
+            }
+        }
+        Ok((seq, refs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{presets, TimeMode};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    fn store() -> Arc<ChunkStore> {
+        let tier = StorageTier::memory(presets::ssd(1 << 30), TimeMode::Model);
+        ChunkStore::new(tier, 0, None)
+    }
+
+    fn fps_of(chunks: &[&[u8]]) -> (BTreeMap<Fingerprint, &'static [u8]>, BTreeSet<Fingerprint>) {
+        // Helper only used with 'static test data.
+        let mut map = BTreeMap::new();
+        let mut set = BTreeSet::new();
+        for c in chunks {
+            let data: &'static [u8] = Box::leak(c.to_vec().into_boxed_slice());
+            let fp = Fingerprint::of(data);
+            map.insert(fp, data);
+            set.insert(fp);
+        }
+        (map, set)
+    }
+
+    #[test]
+    fn publish_dedups_and_counts() {
+        let s = store();
+        let (map, set) = fps_of(&[&b"aaaa"[..], &b"bbbb"[..]]);
+        let stat = s.publish(&map).unwrap();
+        assert_eq!(stat.novel_chunks, 2);
+        let stat = s.publish(&map).unwrap();
+        assert_eq!(stat.novel_chunks, 0, "second manifest re-stores nothing");
+        for fp in &set {
+            assert_eq!(s.refcount(fp), 2);
+            assert!(s.contains(fp));
+            assert_eq!(s.get(fp).unwrap(), fp_payload(&map, fp));
+        }
+    }
+
+    fn fp_payload<'a>(map: &BTreeMap<Fingerprint, &'a [u8]>, fp: &Fingerprint) -> &'a [u8] {
+        map.get(fp).unwrap()
+    }
+
+    #[test]
+    fn release_reclaims_at_zero_refs() {
+        let s = store();
+        let (map, set) = fps_of(&[&b"cccc"[..], &b"dddd"[..]]);
+        s.publish(&map).unwrap();
+        s.publish(&map).unwrap();
+        assert_eq!(s.release(&set, 0).unwrap(), 0, "one ref left");
+        assert!(set.iter().all(|fp| s.contains(fp)));
+        assert_eq!(s.release(&set, 0).unwrap(), 2, "last ref frees");
+        assert!(set.iter().all(|fp| !s.contains(fp)));
+        assert_eq!(s.release(&set, 0).unwrap(), 0, "idempotent on unknown fps");
+    }
+
+    #[test]
+    fn crash_after_intent_replays_exactly_once() {
+        let s = store();
+        let (map, set) = fps_of(&[&b"eeee"[..], &b"ffff"[..]]);
+        s.publish(&map).unwrap();
+        // Arm a one-shot crash in the post-intent window.
+        let fired = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&fired);
+        s.set_fault_hook(Some(Arc::new(move |point: &str, _rank| {
+            point == FAULT_GC_INTENT && !f2.swap(true, Ordering::SeqCst)
+        })));
+        assert_eq!(s.release(&set, 3).unwrap(), 0, "writer died post-intent");
+        assert!(fired.load(Ordering::SeqCst));
+        // Chunks still present, refcounts undisturbed on disk.
+        assert!(set.iter().all(|fp| s.contains(fp)));
+        // Replay applies the pending decrefs exactly once.
+        assert!(s.replay_intent().unwrap());
+        assert!(set.iter().all(|fp| !s.contains(fp)));
+        assert!(!s.replay_intent().unwrap(), "no double replay");
+        assert!(set.iter().all(|fp| s.refcount(fp) == 0));
+    }
+
+    #[test]
+    fn next_release_replays_pending_intent_first() {
+        let s = store();
+        let (map_a, set_a) = fps_of(&[&b"g1g1"[..]]);
+        let (map_b, set_b) = fps_of(&[&b"h2h2"[..]]);
+        s.publish(&map_a).unwrap();
+        s.publish(&map_b).unwrap();
+        let fired = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&fired);
+        s.set_fault_hook(Some(Arc::new(move |point: &str, _rank| {
+            point == FAULT_GC_INTENT && !f2.swap(true, Ordering::SeqCst)
+        })));
+        s.release(&set_a, 0).unwrap(); // dies post-intent
+        assert!(set_a.iter().all(|fp| s.contains(fp)));
+        // A later GC (another writer on the node) replays, then proceeds.
+        assert_eq!(s.release(&set_b, 1).unwrap(), 1);
+        assert!(set_a.iter().all(|fp| !s.contains(fp)), "intent replayed");
+        assert!(set_b.iter().all(|fp| !s.contains(fp)));
+    }
+
+    /// Regression: a publish landing between a crashed release and its
+    /// replay persists the ledger — that snapshot must not mask the
+    /// pending intent (the ledger carries the *applied* seq, not the
+    /// provisional one the crashed release took).
+    #[test]
+    fn publish_between_crash_and_replay_does_not_mask_the_intent() {
+        let s = store();
+        let (map_a, set_a) = fps_of(&[&b"k3k3"[..]]);
+        let (map_b, set_b) = fps_of(&[&b"m4m4"[..]]);
+        s.publish(&map_a).unwrap();
+        let fired = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&fired);
+        s.set_fault_hook(Some(Arc::new(move |point: &str, _rank| {
+            point == FAULT_GC_INTENT && !f2.swap(true, Ordering::SeqCst)
+        })));
+        s.release(&set_a, 0).unwrap(); // dies post-intent
+        s.publish(&map_b).unwrap(); // another writer keeps working
+        assert!(s.replay_intent().unwrap(), "intent must still be pending");
+        assert!(set_a.iter().all(|fp| !s.contains(fp)), "decrefs applied");
+        assert!(
+            set_b.iter().all(|fp| s.contains(fp) && s.refcount(fp) == 1),
+            "the interleaved publish must survive the replay"
+        );
+    }
+
+    /// A torn intent object must be quarantined, not allowed to error out
+    /// of every future release on the node.
+    #[test]
+    fn corrupt_intent_is_quarantined_not_wedging_gc() {
+        let s = store();
+        let (map, set) = fps_of(&[&b"p6p6"[..]]);
+        s.publish(&map).unwrap();
+        s.tier.put(&s.intent_key(), b"{not json").unwrap();
+        assert!(!s.replay_intent().unwrap());
+        assert!(!s.tier.exists(&s.intent_key()), "corrupt intent cleared");
+        assert_eq!(s.release(&set, 0).unwrap(), 1, "GC must still work");
+    }
+
+    #[test]
+    fn reset_forgets_counts_so_publish_rewrites_after_wipe() {
+        let s = store();
+        let (map, set) = fps_of(&[&b"n5n5"[..]]);
+        s.publish(&map).unwrap();
+        // Node failure: tier wiped out from under the store.
+        s.tier.wipe();
+        assert!(set.iter().all(|fp| !s.contains(fp)));
+        s.reset();
+        let stat = s.publish(&map).unwrap();
+        assert_eq!(stat.novel_chunks, 1, "payload must be re-written");
+        assert!(set.iter().all(|fp| s.contains(fp)));
+    }
+
+    #[test]
+    fn get_rejects_corrupt_payload() {
+        let s = store();
+        let (map, set) = fps_of(&[&b"iiii"[..]]);
+        s.publish(&map).unwrap();
+        let fp = set.iter().next().unwrap();
+        // Overwrite the stored object with different bytes.
+        s.tier
+            .put(&ChunkStore::chunk_key(fp), b"JJJJ")
+            .unwrap();
+        assert!(s.get(fp).is_none(), "fingerprint mismatch must miss");
+    }
+}

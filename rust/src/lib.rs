@@ -8,7 +8,10 @@
 //!   resilience modules ([`modules`]), heterogeneous storage tiers
 //!   ([`storage`]), aggregated asynchronous flush ([`aggregation`]:
 //!   write-combining per-rank checkpoints into large shared-tier
-//!   containers), cluster + failure simulation ([`cluster`]), the
+//!   containers), incremental deduplicated checkpointing ([`delta`]:
+//!   content-defined chunking, per-node refcounted chunk stores, delta
+//!   manifests with chain recovery), cluster + failure simulation
+//!   ([`cluster`]), the
 //!   deterministic crash–recover–verify scenario engine ([`sim`]), recovery
 //!   ([`recovery`]), background-flush scheduling ([`scheduler`]),
 //!   checkpoint-interval optimization ([`interval`]) and workloads ([`app`]).
@@ -24,6 +27,7 @@ pub mod aggregation;
 pub mod api;
 pub mod app;
 pub mod cluster;
+pub mod delta;
 pub mod interval;
 pub mod metrics;
 pub mod modules;

@@ -38,6 +38,9 @@ fn main() {
     .opt("agg-group-ranks", "0", "aggregation group size (0 = per node)")
     .opt("agg-flush-mb", "32", "aggregation size-threshold drain (MiB)")
     .opt("agg-target", "pfs", "aggregation drain tier: pfs | burst-buffer")
+    .flag("delta", "incremental dedup: move only novel chunks per checkpoint")
+    .opt("delta-chunk-kb", "8", "delta: average chunk size (KiB, power of two)")
+    .opt("delta-max-chain", "8", "delta: checkpoints between forced fulls")
     .opt("json", "", "sim: inline scenario spec (one-line JSON)")
     .opt("file", "", "sim: scenario spec file")
     .opt("replay", "", "sim: re-run a saved trace and require an exact match")
@@ -82,6 +85,14 @@ fn config_from(cli: &Cli) -> Result<VelocConfig> {
         if cfg.aggregation.target == veloc::aggregation::AggTarget::BurstBuffer {
             cfg.fabric.with_burst_buffer = true;
         }
+    }
+    if cli.get_bool("delta") {
+        cfg.delta.enabled = true;
+        let avg = cli.get_usize("delta-chunk-kb").max(1) << 10;
+        cfg.delta.avg_chunk = avg;
+        cfg.delta.min_chunk = (avg / 4).max(64);
+        cfg.delta.max_chunk = avg * 8;
+        cfg.delta.max_chain = cli.get_u64("delta-max-chain").max(1);
     }
     Ok(cfg)
 }
@@ -201,6 +212,22 @@ fn cmd_run(cli: &Cli) -> Result<()> {
             r.segments_per_container(),
             format_bytes(r.mean_write_bytes() as u64),
             r.write_amplification()
+        );
+    }
+    let m = rt.metrics();
+    let logical = m.counter("delta.bytes.logical");
+    if logical > 0 {
+        let physical = m.counter("delta.bytes.physical").max(1);
+        println!(
+            "delta: {} logical -> {} physical ({:.1}x dedup), {} full + {} \
+             incremental checkpoints, {} novel of {} chunks",
+            format_bytes(logical),
+            format_bytes(physical),
+            logical as f64 / physical as f64,
+            m.counter("delta.ckpt.full"),
+            m.counter("delta.ckpt.incremental"),
+            m.counter("delta.chunks.novel"),
+            m.counter("delta.chunks.total"),
         );
     }
     println!("{}", rt.metrics().to_json().to_pretty());

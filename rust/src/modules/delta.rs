@@ -1,0 +1,168 @@
+//! Delta stage: content-defined dedup ahead of the level-1 capture.
+//!
+//! Runs between the integrity checksum (which digests the full VCKP, so
+//! restore validation stays end-to-end: a chain reassembly that is not
+//! bit-for-bit fails the recorded digest) and the local module. It chunks
+//! every protected region, diffs the fingerprints against the previous
+//! version's manifest chain, publishes chunk payloads into the node's
+//! refcounted store and swaps the context's encoded payload for the thin
+//! VDLT container — so every downstream level (local, partner, erasure,
+//! PFS flush, VAGG containers) moves only the manifest plus chain-novel
+//! chunks instead of a full snapshot.
+//!
+//! Blocking: the swap must happen before the level-1 capture, which is
+//! itself blocking — the chunk/diff cost is part of the paper's "blocked
+//! only while writing to the fastest level" window and is what buys the
+//! much smaller writes at every level after it.
+
+use crate::modules::Env;
+use crate::pipeline::context::{CkptContext, Outcome};
+use crate::pipeline::module::{Module, ModuleSwitch};
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct DeltaModule {
+    env: Arc<Env>,
+    switch: ModuleSwitch,
+}
+
+impl DeltaModule {
+    pub fn new(env: Arc<Env>) -> Arc<Self> {
+        Arc::new(DeltaModule {
+            env,
+            switch: ModuleSwitch::new(true),
+        })
+    }
+}
+
+impl Module for DeltaModule {
+    fn name(&self) -> &'static str {
+        "delta"
+    }
+
+    fn priority(&self) -> i32 {
+        8 // after checksum (5), before the level-1 capture (10)
+    }
+
+    fn blocking(&self) -> bool {
+        true
+    }
+
+    fn process(&self, ctx: &mut CkptContext) -> Result<Outcome> {
+        let Some(delta) = &self.env.delta else {
+            return Ok(Outcome::Skipped);
+        };
+        // Base-durability probe: a version is an acceptable chain base
+        // only if its level-1 container actually landed (a checkpoint
+        // whose pipeline failed after the delta stage must not become a
+        // phantom chain link). `exists` is free — no modeled read charge.
+        let tiers = self.env.fabric.local_tiers(ctx.node);
+        let base_ok = |v: u64| {
+            let key = crate::pipeline::storage_key("local", &ctx.name, ctx.rank, v);
+            tiers.iter().any(|t| t.exists(&key))
+        };
+        let container =
+            delta.encode_checkpoint(&ctx.ckpt, ctx.version, ctx.node, &base_ok)?;
+        ctx.encoded = Arc::new(container);
+        ctx.encoding = "delta";
+        Ok(Outcome::Done)
+    }
+
+    fn switch(&self) -> &ModuleSwitch {
+        &self.switch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::delta::{self, DeltaConfig, DeltaState};
+    use crate::modules::VersionRegistry;
+    use crate::storage::{FabricConfig, StorageFabric};
+    use crate::util::bytes::Checkpoint;
+
+    fn env(with_delta: bool) -> Arc<Env> {
+        let fabric = Arc::new(
+            StorageFabric::build(&FabricConfig {
+                nodes: 2,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let cfg = DeltaConfig {
+            enabled: true,
+            min_chunk: 64,
+            avg_chunk: 256,
+            max_chunk: 1024,
+            max_chain: 4,
+        };
+        let state = if with_delta {
+            Some(DeltaState::new(cfg, &fabric, None).unwrap())
+        } else {
+            None
+        };
+        Arc::new(Env {
+            topology: Topology::new(2, 1),
+            fabric,
+            pjrt: None,
+            registry: VersionRegistry::new(),
+            scheduler_gate: None,
+            aggregator: None,
+            delta: state,
+        })
+    }
+
+    fn ctx(version: u64, data: Vec<u8>) -> CkptContext {
+        let mut c = Checkpoint::new("t", 0, version);
+        c.push_region(0, data);
+        CkptContext::new("t", 0, 0, version, c)
+    }
+
+    #[test]
+    fn swaps_payload_for_delta_container() {
+        let e = env(true);
+        let m = DeltaModule::new(Arc::clone(&e));
+        let data: Vec<u8> = (0..8_192u32)
+            .map(|i| (i.wrapping_mul(2_654_435_761) >> 13) as u8)
+            .collect();
+        let mut c1 = ctx(1, data.clone());
+        m.process(&mut c1).unwrap();
+        assert_eq!(c1.encoding, "delta");
+        assert!(delta::is_delta(&c1.encoded));
+        // The base-durability probe checks the level-1 copy; stand in for
+        // the local module (this unit test runs the delta stage alone).
+        e.fabric.local_tiers(0)[0]
+            .put(&c1.key("local"), &c1.encoded)
+            .unwrap();
+        // Second version with a tiny edit: far smaller container.
+        let mut edited = data;
+        edited[4_000] ^= 0xFF;
+        let mut c2 = ctx(2, edited);
+        m.process(&mut c2).unwrap();
+        assert!(
+            c2.encoded.len() * 3 < c1.encoded.len(),
+            "incremental container {} vs full {}",
+            c2.encoded.len(),
+            c1.encoded.len()
+        );
+        // The container materializes bit-for-bit through the node store.
+        let state = e.delta.as_ref().unwrap();
+        let out = delta::materialize(
+            c2.encoded.as_ref().clone(),
+            Some(state.store(0).as_ref()),
+            &|_| None,
+        )
+        .unwrap();
+        assert_eq!(out, *c2.ckpt);
+    }
+
+    #[test]
+    fn without_state_the_stage_skips() {
+        let e = env(false);
+        let m = DeltaModule::new(e);
+        let mut c = ctx(1, vec![1u8; 512]);
+        assert_eq!(m.process(&mut c).unwrap(), Outcome::Skipped);
+        assert_eq!(c.encoding, "raw");
+    }
+}

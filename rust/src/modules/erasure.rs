@@ -146,7 +146,7 @@ impl ErasureModule {
     /// Find a member's level-1 copy across its node's tiers.
     fn read_local_copy(&self, member: usize, name: &str, version: u64) -> Option<Vec<u8>> {
         let node = self.env.topology.node_of(member);
-        let key = format!("local.{name}.r{member}.v{version}");
+        let key = crate::pipeline::storage_key("local", name, member, version);
         for tier in self.env.fabric.local_tiers(node) {
             if let Some((data, _)) = tier.get(&key) {
                 return Some(data);
@@ -195,6 +195,71 @@ impl ErasureModule {
             }
         }
         None
+    }
+
+    /// Rebuild the rank's container bytes for one version from the other
+    /// group members' local copies plus the rotated parity. `None` when
+    /// this level cannot serve the version (e.g. a second loss in the
+    /// group).
+    fn rebuild_bytes(&self, name: &str, rank: usize, version: u64) -> Result<Option<Vec<u8>>> {
+        if !self.group_supported() {
+            return Ok(None);
+        }
+        let k = self.k;
+        let group = self.env.topology.erasure_group(rank, k);
+        let me = self.env.topology.erasure_index(rank, k);
+        // Survivors' data.
+        let mut data: Vec<Option<Vec<u8>>> = vec![None; k];
+        for (j, &m) in group.iter().enumerate() {
+            if j != me {
+                data[j] = self.read_local_copy(m, name, version);
+                if data[j].is_none() {
+                    return Ok(None); // second loss in group: not our level
+                }
+            }
+        }
+        // Parities of all rows != me (rows are held by the member with the
+        // same index).
+        let mut lens: Option<Vec<u64>> = None;
+        let mut h = 0usize;
+        let mut parities: Vec<Option<Vec<u8>>> = vec![None; k];
+        for (r, &m) in group.iter().enumerate() {
+            if r == me {
+                continue;
+            }
+            let Some(blob) = self.read_parity(m, name, version) else {
+                return Ok(None);
+            };
+            if blob.k != k {
+                return Ok(None);
+            }
+            h = blob.h;
+            lens.get_or_insert(blob.lens.clone());
+            parities[r] = Some(blob.parity);
+        }
+        let lens = lens.ok_or_else(|| anyhow!("no parity found"))?;
+        let my_len = lens[me] as usize;
+        // Rebuild my k-1 chunks.
+        let mut rebuilt = Vec::with_capacity((k - 1) * h);
+        for c in 0..k - 1 {
+            let r = (me + 1 + c) % k;
+            let parity = parities[r].as_ref().unwrap();
+            let mut pieces: Vec<Vec<u8>> = vec![parity.clone()];
+            for j in 0..k {
+                if j == r || j == me {
+                    continue;
+                }
+                pieces.push(chunk_bytes(
+                    data[j].as_ref().unwrap(),
+                    chunk_of(j, r, k),
+                    h,
+                ));
+            }
+            let refs: Vec<&[u8]> = pieces.iter().map(|p| p.as_slice()).collect();
+            rebuilt.extend_from_slice(&xor_fold(&refs, &self.backend)?);
+        }
+        rebuilt.truncate(my_len);
+        Ok(Some(rebuilt))
     }
 }
 
@@ -248,64 +313,18 @@ impl Module for ErasureModule {
         let Some(version) = ctx.version else {
             return Ok(None);
         };
-        if !self.group_supported() {
+        let Some(bytes) = self.rebuild_bytes(&ctx.name, ctx.rank, version)? else {
             return Ok(None);
-        }
-        let k = self.k;
-        let group = self.env.topology.erasure_group(ctx.rank, k);
-        let me = self.env.topology.erasure_index(ctx.rank, k);
-        // Survivors' data.
-        let mut data: Vec<Option<Vec<u8>>> = vec![None; k];
-        for (j, &m) in group.iter().enumerate() {
-            if j != me {
-                data[j] = self.read_local_copy(m, &ctx.name, version);
-                if data[j].is_none() {
-                    return Ok(None); // second loss in group: not our level
-                }
-            }
-        }
-        // Parities of all rows != me (rows are held by the member with the
-        // same index).
-        let mut lens: Option<Vec<u64>> = None;
-        let mut h = 0usize;
-        let mut parities: Vec<Option<Vec<u8>>> = vec![None; k];
-        for (r, &m) in group.iter().enumerate() {
-            if r == me {
-                continue;
-            }
-            let Some(blob) = self.read_parity(m, &ctx.name, version) else {
-                return Ok(None);
-            };
-            if blob.k != k {
-                return Ok(None);
-            }
-            h = blob.h;
-            lens.get_or_insert(blob.lens.clone());
-            parities[r] = Some(blob.parity);
-        }
-        let lens = lens.ok_or_else(|| anyhow!("no parity found"))?;
-        let my_len = lens[me] as usize;
-        // Rebuild my k-1 chunks.
-        let mut rebuilt = Vec::with_capacity((k - 1) * h);
-        for c in 0..k - 1 {
-            let r = (me + 1 + c) % k;
-            let parity = parities[r].as_ref().unwrap();
-            let mut pieces: Vec<Vec<u8>> = vec![parity.clone()];
-            for j in 0..k {
-                if j == r || j == me {
-                    continue;
-                }
-                pieces.push(chunk_bytes(
-                    data[j].as_ref().unwrap(),
-                    chunk_of(j, r, k),
-                    h,
-                ));
-            }
-            let refs: Vec<&[u8]> = pieces.iter().map(|p| p.as_slice()).collect();
-            rebuilt.extend_from_slice(&xor_fold(&refs, &self.backend)?);
-        }
-        rebuilt.truncate(my_len);
-        Ok(Some(Checkpoint::decode(&rebuilt)?))
+        };
+        // Delta chains prefer the rank's own surviving local copy of an
+        // ancestor and fall back to rebuilding the ancestor from the
+        // group, exactly like the primary version.
+        let fetch_at = |v: u64| -> Option<Vec<u8>> {
+            self.read_local_copy(ctx.rank, &ctx.name, v)
+                .or_else(|| self.rebuild_bytes(&ctx.name, ctx.rank, v).unwrap_or(None))
+        };
+        let store = self.env.delta.as_ref().map(|d| d.store(ctx.node).as_ref());
+        Ok(Some(crate::delta::materialize(bytes, store, &fetch_at)?))
     }
 
     fn switch(&self) -> &ModuleSwitch {

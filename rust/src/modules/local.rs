@@ -107,13 +107,19 @@ impl Module for LocalModule {
         let Some(version) = ctx.version else {
             return Ok(None);
         };
-        let key = format!("local.{}.r{}.v{}", ctx.name, ctx.rank, version);
-        for tier in self.env.fabric.local_tiers(ctx.node) {
-            if let Some((data, _stat)) = tier.get(&key) {
-                return Ok(Some(Checkpoint::decode(&data)?));
-            }
-        }
-        Ok(None)
+        let tiers = self.env.fabric.local_tiers(ctx.node);
+        let fetch_at = |v: u64| -> Option<Vec<u8>> {
+            let key = crate::pipeline::storage_key("local", &ctx.name, ctx.rank, v);
+            tiers.iter().find_map(|t| t.get(&key).map(|(d, _)| d))
+        };
+        let Some(data) = fetch_at(version) else {
+            return Ok(None);
+        };
+        // Delta containers reassemble through the node chunk store and,
+        // for anything the store lost, the local manifest chain; raw VCKP
+        // passes straight through.
+        let store = self.env.delta.as_ref().map(|d| d.store(ctx.node).as_ref());
+        Ok(Some(crate::delta::materialize(data, store, &fetch_at)?))
     }
 
     fn switch(&self) -> &ModuleSwitch {
@@ -142,6 +148,7 @@ mod tests {
             registry: VersionRegistry::new(),
             scheduler_gate: None,
             aggregator: None,
+            delta: None,
         })
     }
 

@@ -3,6 +3,7 @@
 
 pub mod checksum;
 pub mod compression;
+pub mod delta;
 pub mod erasure;
 pub mod kvstore;
 pub mod local;
@@ -13,6 +14,7 @@ pub mod xor;
 
 pub use checksum::{ChecksumBackend, ChecksumModule};
 pub use compression::CompressionModule;
+pub use delta::DeltaModule;
 pub use erasure::ErasureModule;
 pub use kvstore::KvStoreModule;
 pub use local::{LocalModule, TierPolicy};
@@ -58,6 +60,10 @@ pub struct Env {
     /// When set, level-4 flushes route through the write-combining
     /// aggregator instead of writing one shared-tier object per rank.
     pub aggregator: Option<Arc<crate::aggregation::Aggregator>>,
+    /// When set, checkpoints pass through the content-defined dedup stage
+    /// and every level moves thin delta containers; restore paths
+    /// reassemble through the manifest chain (`crate::delta`).
+    pub delta: Option<Arc<crate::delta::DeltaState>>,
 }
 
 /// Configuration of the default module stack.
@@ -105,8 +111,10 @@ impl Default for StackConfig {
     }
 }
 
-/// Build the default module stack (checksum < local < partner < erasure <
-/// compression < transfer < kv < version) for one rank's engine.
+/// Build the default module stack (checksum < delta < local < partner <
+/// erasure < compression < transfer < kv < version) for one rank's engine.
+/// The delta stage joins the stack whenever the environment carries a
+/// [`crate::delta::DeltaState`] (i.e. `VelocConfig::delta.enabled`).
 pub fn build_stack(env: &Arc<Env>, cfg: &StackConfig) -> Result<Vec<Arc<dyn Module>>> {
     let mut stack: Vec<Arc<dyn Module>> = Vec::new();
     if cfg.with_checksum {
@@ -115,6 +123,9 @@ pub fn build_stack(env: &Arc<Env>, cfg: &StackConfig) -> Result<Vec<Arc<dyn Modu
             _ => ChecksumBackend::Crc32,
         };
         stack.push(ChecksumModule::new(Arc::clone(env), backend, true));
+    }
+    if env.delta.is_some() {
+        stack.push(DeltaModule::new(Arc::clone(env)));
     }
     stack.push(LocalModule::new(Arc::clone(env), cfg.tier_policy));
     if cfg.with_partner {
@@ -145,8 +156,9 @@ pub fn build_stack(env: &Arc<Env>, cfg: &StackConfig) -> Result<Vec<Arc<dyn Modu
         Arc::clone(&env.registry),
         Arc::clone(&env.fabric),
         env.aggregator.clone(),
+        env.delta.clone(),
+        env.topology,
         cfg.keep_versions,
-        env.topology.world_size(),
     ));
     Ok(stack)
 }
@@ -171,6 +183,7 @@ mod tests {
             registry: VersionRegistry::new(),
             scheduler_gate: None,
             aggregator: None,
+            delta: None,
         })
     }
 

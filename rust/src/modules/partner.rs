@@ -87,13 +87,20 @@ impl Module for PartnerModule {
         // My copy lives on my partner's node.
         let partner = self.env.topology.partner_of(ctx.rank);
         let pnode = self.env.topology.node_of(partner);
-        let key = format!("partner.{}.r{}.v{}", ctx.name, ctx.rank, version);
-        for tier in self.env.fabric.local_tiers(pnode) {
-            if let Some((data, _)) = tier.get(&key) {
-                return Ok(Some(Checkpoint::decode(&data)?));
-            }
-        }
-        Ok(None)
+        let tiers = self.env.fabric.local_tiers(pnode);
+        let fetch_at = |v: u64| -> Option<Vec<u8>> {
+            let key = crate::pipeline::storage_key("partner", &ctx.name, ctx.rank, v);
+            tiers.iter().find_map(|t| t.get(&key).map(|(d, _)| d))
+        };
+        let Some(data) = fetch_at(version) else {
+            return Ok(None);
+        };
+        // Delta chains walk the partner copies of older versions on the
+        // same node; the partner node's chunk store is consulted first
+        // (fingerprint-verified, so cross-rank hits are safe and misses
+        // just fall through to the chain).
+        let store = self.env.delta.as_ref().map(|d| d.store(pnode).as_ref());
+        Ok(Some(crate::delta::materialize(data, store, &fetch_at)?))
     }
 
     fn switch(&self) -> &ModuleSwitch {

@@ -56,9 +56,12 @@ impl TransferModule {
     }
 }
 
-/// Sniff the payload encoding: raw VCKP vs zlib (compression module).
+/// Sniff the payload encoding: raw VCKP / VDLT delta containers pass
+/// through, anything else is treated as zlib (compression module).
 pub fn maybe_decompress(data: Vec<u8>) -> Result<Vec<u8>> {
-    if data.starts_with(crate::util::bytes::MAGIC) {
+    if data.starts_with(crate::util::bytes::MAGIC)
+        || data.starts_with(crate::delta::VDLT_MAGIC)
+    {
         return Ok(data);
     }
     // zlib stream (RFC 1950): 0x78 CMF for 32K window deflate.
@@ -133,20 +136,35 @@ impl Module for TransferModule {
         let Some(version) = ctx.version else {
             return Ok(None);
         };
-        let key = format!("pfs.{}.r{}.v{}", ctx.name, ctx.rank, version);
-        if let Some((data, _)) = self.env.fabric.pfs().get(&key) {
-            let raw = maybe_decompress(data)?;
-            return Ok(Some(Checkpoint::decode(&raw)?));
-        }
-        // No file-per-rank object: try the aggregated containers (index
-        // lookup, with persisted-index and header-rebuild fallbacks).
-        if let Some(agg) = &self.env.aggregator {
-            if let Some(data) = agg.restore(&ctx.name, version, ctx.rank)? {
-                let raw = maybe_decompress(data)?;
-                return Ok(Some(Checkpoint::decode(&raw)?));
+        // Primary lookup: the file-per-rank object first, then the
+        // aggregated containers (index lookup with persisted-index and
+        // header-rebuild fallbacks). Aggregator errors propagate here —
+        // a corrupt level-4 copy must surface, not read as "no copy".
+        let key = crate::pipeline::storage_key("pfs", &ctx.name, ctx.rank, version);
+        let primary = match self.env.fabric.pfs().get(&key) {
+            Some((data, _)) => Some(data),
+            None => match &self.env.aggregator {
+                Some(agg) => agg.restore(&ctx.name, version, ctx.rank)?,
+                None => None,
+            },
+        };
+        let Some(data) = primary else {
+            return Ok(None);
+        };
+        // Chain-ancestor fetches use miss semantics (a miss legitimately
+        // means "chain broken"; materialize reports it).
+        let fetch_at = |v: u64| -> Option<Vec<u8>> {
+            let akey = crate::pipeline::storage_key("pfs", &ctx.name, ctx.rank, v);
+            if let Some((d, _)) = self.env.fabric.pfs().get(&akey) {
+                return Some(d);
             }
-        }
-        Ok(None)
+            self.env
+                .aggregator
+                .as_ref()
+                .and_then(|agg| agg.restore(&ctx.name, v, ctx.rank).ok().flatten())
+        };
+        let store = self.env.delta.as_ref().map(|d| d.store(ctx.node).as_ref());
+        Ok(Some(crate::delta::materialize(data, store, &fetch_at)?))
     }
 
     fn switch(&self) -> &ModuleSwitch {
@@ -175,6 +193,7 @@ mod tests {
             registry: VersionRegistry::new(),
             scheduler_gate: None,
             aggregator: None,
+            delta: None,
         })
     }
 

@@ -254,6 +254,12 @@ pub struct VersionModule {
     fabric: Arc<crate::storage::StorageFabric>,
     /// When aggregation is on, GC also reclaims orphaned containers.
     aggregator: Option<Arc<crate::aggregation::Aggregator>>,
+    /// When delta is on, GC pins chain ancestors of retained versions and
+    /// releases chunk refcounts of the versions it collects.
+    delta: Option<Arc<crate::delta::DeltaState>>,
+    /// Cluster shape: partner copies live on the partner's node, so GC
+    /// must reach across to reclaim them.
+    topology: crate::cluster::Topology,
     /// Keep this many newest versions per name (per rank).
     keep: usize,
     /// World size: GC only touches versions every rank has finished
@@ -269,34 +275,82 @@ impl VersionModule {
         registry: Arc<VersionRegistry>,
         fabric: Arc<crate::storage::StorageFabric>,
         aggregator: Option<Arc<crate::aggregation::Aggregator>>,
+        delta: Option<Arc<crate::delta::DeltaState>>,
+        topology: crate::cluster::Topology,
         keep: usize,
-        world: usize,
     ) -> Arc<Self> {
         Arc::new(VersionModule {
             registry,
             fabric,
             aggregator,
+            delta,
+            topology,
             keep: keep.max(1),
-            world: world.max(1),
+            world: topology.world_size().max(1),
             switch: ModuleSwitch::new(true),
         })
     }
 
     /// GC candidates: strictly older than the `keep` newest versions AND
     /// fully recorded by all ranks (pipeline tails complete everywhere).
+    /// Under delta, additionally spare any version a retained version's
+    /// manifest chain still references — deleting a chain link would break
+    /// bit-for-bit reassembly of checkpoints we promised to keep.
     fn safe_gc_candidates(&self, name: &str) -> Vec<u64> {
-        self.registry
+        let mut candidates: Vec<u64> = self
+            .registry
             .gc_candidates(name, self.keep)
             .into_iter()
             .filter(|&v| self.registry.complete(name, v, self.world))
-            .collect()
+            .collect();
+        if let Some(delta) = &self.delta {
+            let doomed: std::collections::BTreeSet<u64> =
+                candidates.iter().copied().collect();
+            let mut pinned = std::collections::BTreeSet::new();
+            for kept in self
+                .registry
+                .versions(name)
+                .into_iter()
+                .filter(|v| !doomed.contains(v))
+            {
+                let ancestors = delta.chain_ancestors(name, kept);
+                if ancestors.is_empty() && !delta.has_manifest(name, kept) {
+                    // No in-memory manifest at all for a retained version:
+                    // the chain knowledge died with a node or process. If
+                    // the registry says it was delta-encoded, its chain is
+                    // unknowable — skip GC for this name entirely until
+                    // the version ages out (the next forced full restarts
+                    // normal collection).
+                    let delta_encoded = (0..self.world).any(|r| {
+                        self.registry
+                            .info(name, kept, r)
+                            .map_or(false, |i| i.encoding == "delta")
+                    });
+                    if delta_encoded {
+                        return Vec::new();
+                    }
+                }
+                pinned.extend(ancestors);
+            }
+            candidates.retain(|v| !pinned.contains(v));
+        }
+        candidates
     }
 
     fn delete_version_keys(&self, name: &str, rank: usize, node: usize, version: u64) {
         let suffix = format!("{name}.r{rank}.v{version}");
         for tier in self.fabric.local_tiers(node) {
-            for prefix in ["local", "partner", "erasure"] {
+            for prefix in ["local", "erasure"] {
                 tier.delete(&format!("{prefix}.{suffix}"));
+            }
+        }
+        // My partner copy lives on my *partner's* node (keyed by source
+        // rank); deleting `partner.{suffix}` on my own node would hit a
+        // key that never exists there and leak the replica forever.
+        if self.topology.nodes >= 2 {
+            let pnode = self.topology.node_of(self.topology.partner_of(rank));
+            for tier in self.fabric.local_tiers(pnode) {
+                tier.delete(&format!("partner.{suffix}"));
             }
         }
         self.fabric.pfs().delete(&format!("pfs.{suffix}"));
@@ -307,6 +361,12 @@ impl VersionModule {
         // delete containers it orphaned (idempotent across ranks).
         if let Some(agg) = &self.aggregator {
             let _ = agg.gc_version(name, version);
+        }
+        // Delta bookkeeping: forget this rank's manifest and drop its
+        // chunk references (reclaiming payloads whose count hits zero,
+        // under the store's crash-replayable intent ledger).
+        if let Some(delta) = &self.delta {
+            let _ = delta.retire(name, version, rank, node);
         }
     }
 }

@@ -11,6 +11,14 @@ pub const LEVEL_ERASURE: u8 = 3;
 pub const LEVEL_PFS: u8 = 4;
 pub const LEVEL_KV: u8 = 5;
 
+/// Canonical storage key for one rank's copy of one version at a level
+/// prefix. Shared by the pipeline ([`CkptContext::key`]), every restore
+/// fetcher and the delta base-durability probe, so the formats can never
+/// drift apart.
+pub fn storage_key(prefix: &str, name: &str, rank: usize, version: u64) -> String {
+    format!("{prefix}.{name}.r{rank}.v{version}")
+}
+
 pub fn level_name(level: u8) -> &'static str {
     match level {
         LEVEL_LOCAL => "local",
@@ -83,7 +91,7 @@ impl CkptContext {
 
     /// Storage key for this rank's copy at a given level prefix.
     pub fn key(&self, prefix: &str) -> String {
-        format!("{prefix}.{}.r{}.v{}", self.name, self.rank, self.version)
+        storage_key(prefix, &self.name, self.rank, self.version)
     }
 
     pub fn record(&mut self, module: &str, level: u8, duration: Duration, bytes: u64) {

@@ -6,7 +6,7 @@ pub mod engine;
 pub mod module;
 
 pub use context::{
-    level_name, CkptContext, LevelResult, Outcome, RestoreContext,
+    level_name, storage_key, CkptContext, LevelResult, Outcome, RestoreContext,
     LEVEL_ERASURE, LEVEL_KV, LEVEL_LOCAL, LEVEL_PARTNER, LEVEL_PFS,
 };
 pub use engine::{BoundaryHook, CkptStatus, Engine, EngineMode};

@@ -13,7 +13,7 @@ pub trait Module: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Pipeline position: lower runs earlier. The default stack is
-    /// checksum(5) < local(10) < partner(20) < erasure(30) <
+    /// checksum(5) < delta(8) < local(10) < partner(20) < erasure(30) <
     /// compression(35) < transfer(40) < kv(41) < version(50).
     fn priority(&self) -> i32;
 

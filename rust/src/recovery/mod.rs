@@ -13,7 +13,6 @@
 //! that path directly for tooling and tests.
 
 use crate::modules::checksum::{digest, ChecksumBackend};
-use crate::modules::transfer::maybe_decompress;
 use crate::modules::{Env, VersionRegistry};
 use crate::pipeline::context::LEVEL_PFS;
 use crate::pipeline::{Engine, RestoreContext};
@@ -102,7 +101,11 @@ impl Recovery {
         let Some(data) = agg.restore(name, version, rank)? else {
             return Ok(None);
         };
-        let ckpt = Checkpoint::decode(&maybe_decompress(data)?)?;
+        // Delta containers reassemble through the aggregated copies of
+        // their chain ancestors; raw/zlib containers pass straight through.
+        let fetch_at =
+            |v: u64| -> Option<Vec<u8>> { agg.restore(name, v, rank).ok().flatten() };
+        let ckpt = crate::delta::materialize(data, None, &fetch_at)?;
         if !self.validate(name, version, rank, &ckpt) {
             return Ok(None);
         }

@@ -7,8 +7,10 @@
 //! land a [`cluster::FailureScope`](crate::cluster::FailureScope) at an
 //! arbitrary *injection point* (between pipeline modules, mid-transfer
 //! chunk through a fault-injecting flush gate, mid-aggregation-drain, in
-//! the pre-index crash window, or mid-restart) → restart survivors →
-//! restore → verify restored bytes bit-for-bit against shadow copies.
+//! the pre-index crash window, mid-restart, a torn mid-chain delta flush,
+//! or a delta-GC writer crash in the post-intent window) → restart
+//! survivors → restore → verify restored bytes bit-for-bit against shadow
+//! copies.
 //!
 //! - [`scenario`] — specs: seed + cluster shape + stack permutation +
 //!   scope + injection point, one line of JSON each, plus the standard
@@ -32,6 +34,6 @@ pub use runner::{
 };
 pub use scenario::{
     base_spec, standard_matrix, ContractMode, InjectionPoint, ScenarioSpec, ScopeKind,
-    ScopeSpec,
+    ScopeSpec, DELTA_MAX_CHAIN,
 };
 pub use trace::Trace;

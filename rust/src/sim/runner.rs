@@ -192,6 +192,32 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
     }
     let rt = VelocRuntime::new_with_hooks(spec.to_config(), hooks)?;
 
+    // Delta GC crash window: armed just before the last wave; fires on
+    // every release a victim rank attempts while armed (a dead writer
+    // stays dead), killing the victims at the first one.
+    let gc_arm = if matches!(spec.inject, InjectionPoint::DeltaGcCrash) {
+        let delta = rt
+            .delta()
+            .ok_or_else(|| anyhow!("delta-gc-crash requires delta"))?;
+        let armed = Arc::new(AtomicBool::new(false));
+        let armed2 = Arc::clone(&armed);
+        let st = Arc::clone(&state);
+        let victims2 = victims.clone();
+        delta.set_fault_hook(Some(Arc::new(move |point: &str, rank: usize| {
+            if point != crate::delta::FAULT_GC_INTENT
+                || !armed2.load(Ordering::SeqCst)
+                || !victims2.contains(&rank)
+            {
+                return false;
+            }
+            st.kill_all(&victims2);
+            true
+        })));
+        Some(armed)
+    } else {
+        None
+    };
+
     // Pre-index crash window: armed just before the last wave; fires once
     // on the first drain that crosses it and kills the victims.
     let pre_index_arm = if matches!(spec.inject, InjectionPoint::MidDrainPreIndex) {
@@ -270,7 +296,14 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
                         armed.store(true, Ordering::SeqCst);
                     }
                 }
-                InjectionPoint::AfterCheckpoint | InjectionPoint::MidRestart(_) => {}
+                InjectionPoint::DeltaGcCrash => {
+                    if let Some(armed) = &gc_arm {
+                        armed.store(true, Ordering::SeqCst);
+                    }
+                }
+                InjectionPoint::AfterCheckpoint
+                | InjectionPoint::MidRestart(_)
+                | InjectionPoint::DeltaChainBreak(_) => {}
             }
         }
         shadows.insert(version, pairs.iter().map(|(_, a)| a.snapshot()).collect());
@@ -341,6 +374,29 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
     }
     let last_version = spec.waves * spec.steps_per_wave;
 
+    // Torn mid-chain flush: strip the chunk payloads out of one earlier
+    // version's PFS objects (manifest stays durable and CRC-valid), so
+    // every newer delta's chain crosses a version whose chunks are gone.
+    let mut broken: BTreeSet<u64> = BTreeSet::new();
+    if let InjectionPoint::DeltaChainBreak(back) = &spec.inject {
+        let target = last_version - (*back as u64) * spec.steps_per_wave;
+        let pfs = rt.env().fabric.pfs();
+        for rank in 0..world {
+            let key = crate::pipeline::storage_key("pfs", SCENARIO_APP, rank, target);
+            let Some((bytes, _)) = pfs.get(&key) else {
+                bail!("chain-break target {key} missing on the PFS");
+            };
+            let stripped = crate::delta::strip_payloads(&bytes)?;
+            pfs.put(&key, &stripped)?;
+        }
+        broken.insert(target);
+        trace.push(
+            Json::obj()
+                .set("ev", "chain-break")
+                .set("version", target),
+        );
+    }
+
     // The failure lands: kill the ranks, wipe the affected failure
     // domains (idempotent for the mid-* points whose victims already
     // died), then flush surviving stragglers.
@@ -356,7 +412,7 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
 
     // Contract: predict the restorable frontier from what durably
     // completed before the failure, then compare with reality.
-    let expected = expected_frontier(spec, &topo, &scope, &rt, &state, world);
+    let expected = expected_frontier(spec, &topo, &scope, &rt, &state, world, &broken);
     rt.revive_all();
     let frontier = rt
         .recovery()
@@ -445,6 +501,40 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
         );
     }
 
+    // GC-crash scenarios: the interrupted collection must have been
+    // finished by the refcount-ledger replay, the previous retained
+    // version must still restore bit-for-bit, and no live manifest may
+    // reference a chunk the replayed GC freed.
+    if matches!(spec.inject, InjectionPoint::DeltaGcCrash) {
+        let replays = rt.metrics().counter("delta.gc.replays");
+        ensure!(
+            replays >= 1,
+            "gc crash left no ledger replay (counter {replays})"
+        );
+        let prev = last_version - spec.steps_per_wave;
+        if let Some(snaps) = shadows.get(&prev) {
+            for rank in 0..world {
+                restore_and_verify(&rt, spec, rank, prev, snaps, trace)?;
+                verified_ranks += 1;
+            }
+        }
+        let delta = rt.delta().ok_or_else(|| anyhow!("delta state missing"))?;
+        for rank in 0..world {
+            let node = topo.node_of(rank);
+            for m in delta.manifests_of(SCENARIO_APP, rank) {
+                for fp in m.fp_set() {
+                    ensure!(
+                        delta.store(node).contains(&fp),
+                        "rank {rank} v{} references chunk {} missing from \
+                         the node {node} store after the GC replay",
+                        m.version,
+                        fp.hex()
+                    );
+                }
+            }
+        }
+    }
+
     let index_rebuilds = rt.metrics().counter("agg.index.rebuilds");
     if matches!(spec.inject, InjectionPoint::MidDrainPreIndex) && frontier == Some(last_version)
     {
@@ -519,6 +609,10 @@ fn restore_and_verify(
 /// Predict the newest version every rank can still restore, given the
 /// failure's blast radius and what each rank durably completed before it
 /// died (registry records, or the death ledger for pipelines cut short).
+/// Under delta, remote levels serve a version only if the *whole manifest
+/// chain* is durable at that level (and, for the PFS, not torn by a
+/// chain break); node-local restores need only the target's thin
+/// container because the surviving chunk store covers the ancestors.
 fn expected_frontier(
     spec: &ScenarioSpec,
     topo: &crate::cluster::Topology,
@@ -526,6 +620,7 @@ fn expected_frontier(
     rt: &Arc<VelocRuntime>,
     state: &Arc<FaultState>,
     world: usize,
+    broken: &BTreeSet<u64>,
 ) -> Option<u64> {
     let injector = FailureInjector::new(*topo, 1.0);
     let wiped: BTreeSet<usize> = injector.affected_nodes(scope).into_iter().collect();
@@ -544,14 +639,22 @@ fn expected_frontier(
             .unwrap_or_default()
     };
     'versions: for version in registry.versions(SCENARIO_APP) {
+        let chain: Vec<u64> = if spec.delta {
+            spec.delta_chain_versions(version)
+        } else {
+            vec![version]
+        };
         for rank in 0..world {
             let levels = levels_of(rank, version);
             // Level 1: the rank's own node-local copy.
             let mut ok = levels.contains(&1) && node_ok(topo.node_of(rank));
-            // Level 2: my copy on my partner's node.
-            if !ok && spec.with_partner && levels.contains(&2) {
+            // Level 2: my copy on my partner's node (delta: the chain of
+            // partner copies lives on the same node).
+            if !ok && spec.with_partner {
                 let pnode = topo.node_of(topo.partner_of(rank));
-                ok = pnode != topo.node_of(rank) && node_ok(pnode);
+                ok = pnode != topo.node_of(rank)
+                    && node_ok(pnode)
+                    && chain.iter().all(|&w| levels_of(rank, w).contains(&2));
             }
             // Level 3: rebuilt from every *other* group member's local
             // copy + parity (the rank's own parity is not needed).
@@ -562,9 +665,13 @@ fn expected_frontier(
                     node_ok(topo.node_of(m)) && lm.contains(&1) && lm.contains(&3)
                 });
             }
-            // Level 4: the PFS survives everything the matrix throws.
+            // Level 4: the PFS survives everything the matrix throws —
+            // but a delta restore needs the whole chain flushed and
+            // untorn.
             if !ok {
-                ok = levels.contains(&4);
+                ok = chain.iter().all(|&w| {
+                    levels_of(rank, w).contains(&4) && !broken.contains(&w)
+                });
             }
             if !ok {
                 continue 'versions;

@@ -100,6 +100,11 @@ impl ScopeSpec {
     }
 }
 
+/// Checkpoints per delta chain in delta scenarios (a full every 3rd):
+/// shared between `ScenarioSpec::to_config` and the runner's chain-aware
+/// contract model, so prediction and behaviour derive from one constant.
+pub const DELTA_MAX_CHAIN: u64 = 3;
+
 /// Where in the checkpoint/restart lifetime the failure lands.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum InjectionPoint {
@@ -119,6 +124,18 @@ pub enum InjectionPoint {
     /// The failure repeats mid-restart: after N ranks restored, the same
     /// scope fires again and the restart must complete idempotently.
     MidRestart(usize),
+    /// Delta: a mid-chain flush is torn — the PFS object `back`
+    /// checkpoints before the last keeps its manifest but loses its chunk
+    /// payloads, then the node failure wipes the victims' local copies.
+    /// Recovery must refuse every version whose chain crosses the break
+    /// and fall back to the newest version with an intact chain (at worst
+    /// the last forced full).
+    DeltaChainBreak(usize),
+    /// Delta: a victim rank dies inside version GC after persisting the
+    /// chunk store's decref intent but before applying it — the refcount
+    /// ledger replay must finish the GC exactly once and leave every
+    /// retained version restorable.
+    DeltaGcCrash,
 }
 
 impl InjectionPoint {
@@ -129,6 +146,8 @@ impl InjectionPoint {
             InjectionPoint::MidFlushChunk(c) => format!("mid-flush-chunk:{c}"),
             InjectionPoint::MidDrainPreIndex => "mid-drain-pre-index".to_string(),
             InjectionPoint::MidRestart(k) => format!("mid-restart:{k}"),
+            InjectionPoint::DeltaChainBreak(b) => format!("delta-chain-break:{b}"),
+            InjectionPoint::DeltaGcCrash => "delta-gc-crash".to_string(),
         }
     }
 
@@ -147,6 +166,10 @@ impl InjectionPoint {
             InjectionPoint::MidRestart(k) => Json::obj()
                 .set("point", "mid-restart")
                 .set("after_ranks", *k),
+            InjectionPoint::DeltaChainBreak(b) => Json::obj()
+                .set("point", "delta-chain-break")
+                .set("back", *b),
+            InjectionPoint::DeltaGcCrash => Json::obj().set("point", "delta-gc-crash"),
         }
     }
 
@@ -162,6 +185,8 @@ impl InjectionPoint {
             "mid-flush-chunk" => Ok(InjectionPoint::MidFlushChunk(j.usize_or("chunk", 1))),
             "mid-drain-pre-index" => Ok(InjectionPoint::MidDrainPreIndex),
             "mid-restart" => Ok(InjectionPoint::MidRestart(j.usize_or("after_ranks", 1))),
+            "delta-chain-break" => Ok(InjectionPoint::DeltaChainBreak(j.usize_or("back", 1))),
+            "delta-gc-crash" => Ok(InjectionPoint::DeltaGcCrash),
             other => bail!("unknown injection point {other}"),
         }
     }
@@ -192,6 +217,9 @@ pub struct ScenarioSpec {
     pub erasure_group: usize,
     /// Route level-4 flushes through the write-combining aggregator.
     pub aggregation: bool,
+    /// Incremental deduplicated checkpointing (content-defined chunking,
+    /// delta manifests, chains of [`DELTA_MAX_CHAIN`]).
+    pub delta: bool,
     /// Checkpoint waves taken before the failure.
     pub waves: u64,
     /// Application steps between checkpoints (version = step count).
@@ -210,8 +238,28 @@ impl ScenarioSpec {
     pub fn contract(&self) -> ContractMode {
         match self.inject {
             InjectionPoint::MidDrainPreIndex => ContractMode::AtLeast,
+            // The break can only strand chunks that later deltas still
+            // reference; a mutation landing exactly on the broken
+            // version's novel chunks would leave newer versions
+            // self-sufficient, so the chain model is a guaranteed lower
+            // bound rather than an exact prediction.
+            InjectionPoint::DeltaChainBreak(_) => ContractMode::AtLeast,
             _ => ContractMode::Strict,
         }
+    }
+
+    /// The checkpointed versions a delta restore of `version` may touch:
+    /// the nearest forced full at or below it, up through `version`
+    /// itself. Mirrors `DeltaState`'s chain policy (first checkpoint
+    /// full, a forced full every [`DELTA_MAX_CHAIN`] checkpoints).
+    pub fn delta_chain_versions(&self, version: u64) -> Vec<u64> {
+        let spw = self.steps_per_wave.max(1);
+        let idx = version / spw; // 1-based checkpoint index
+        if idx == 0 {
+            return vec![version];
+        }
+        let full_idx = ((idx - 1) / DELTA_MAX_CHAIN) * DELTA_MAX_CHAIN + 1;
+        (full_idx..=idx).map(|i| i * spw).collect()
     }
 
     /// The runtime configuration this scenario runs under. Deterministic
@@ -237,6 +285,20 @@ impl ScenarioSpec {
         cfg.aggregation.enabled = self.aggregation;
         cfg.aggregation.drain_chunk = 4096;
         cfg.aggregation.max_delay = Duration::from_secs(120);
+        if self.delta {
+            cfg.delta.enabled = true;
+            // Region sizes are a few KiB: chunk small so one region spans
+            // many chunks and single-slice mutations stay O(1) chunks.
+            cfg.delta.min_chunk = 64;
+            cfg.delta.avg_chunk = 256;
+            cfg.delta.max_chunk = 1024;
+            cfg.delta.max_chain = DELTA_MAX_CHAIN;
+        }
+        if matches!(self.inject, InjectionPoint::DeltaGcCrash) {
+            // The GC-crash window only opens when version GC actually
+            // fires: retain little, checkpoint often.
+            cfg.stack.keep_versions = 2;
+        }
         cfg
     }
 
@@ -270,6 +332,7 @@ impl ScenarioSpec {
             .set("partner", self.with_partner)
             .set("erasure_group", self.erasure_group)
             .set("aggregation", self.aggregation)
+            .set("delta", self.delta)
             .set("waves", self.waves)
             .set("steps_per_wave", self.steps_per_wave)
             .set("regions", self.regions)
@@ -305,6 +368,7 @@ impl ScenarioSpec {
             with_partner: j.bool_or("partner", true),
             erasure_group: j.usize_or("erasure_group", 0),
             aggregation: j.bool_or("aggregation", false),
+            delta: j.bool_or("delta", false),
             waves: j.get("waves").and_then(Json::as_u64).unwrap_or(3),
             steps_per_wave: j.get("steps_per_wave").and_then(Json::as_u64).unwrap_or(2),
             regions: j.usize_or("regions", 2),
@@ -349,6 +413,13 @@ impl ScenarioSpec {
         }
         if self.scope.kind == ScopeKind::MultiNode && self.nodes < 3 {
             bail!("multi-node scope needs >= 3 nodes (else it is a system outage)");
+        }
+        if self.delta && self.erasure_group >= 2 {
+            bail!(
+                "delta scenarios exclude erasure: the contract model does not \
+                 cover chain restores through group rebuilds (the module path \
+                 itself is covered by integration tests)"
+            );
         }
         match &self.inject {
             InjectionPoint::AfterCheckpoint => {}
@@ -402,6 +473,56 @@ impl ScenarioSpec {
                     );
                 }
             }
+            InjectionPoint::DeltaChainBreak(back) => {
+                if !self.delta {
+                    bail!("delta-chain-break requires delta");
+                }
+                if self.with_partner || self.aggregation {
+                    bail!(
+                        "delta-chain-break isolates the PFS chain: disable \
+                         partner and aggregation"
+                    );
+                }
+                if self.scope.kind != ScopeKind::Node {
+                    bail!(
+                        "delta-chain-break needs a node scope (the victims' \
+                         local copies and chunk store must die)"
+                    );
+                }
+                if *back == 0 || (*back as u64) >= self.waves {
+                    bail!(
+                        "delta-chain-break back ({back}) must be in 1..waves \
+                         ({}) so a broken version exists below the last",
+                        self.waves
+                    );
+                }
+            }
+            InjectionPoint::DeltaGcCrash => {
+                if !self.delta {
+                    bail!("delta-gc-crash requires delta");
+                }
+                if self.with_partner || self.aggregation {
+                    bail!("delta-gc-crash isolates the GC path: disable partner and aggregation");
+                }
+                if self.scope.kind != ScopeKind::Rank || self.scope.target.is_none() {
+                    bail!(
+                        "delta-gc-crash needs a pinned rank scope (storage \
+                         must survive; only the GC writer dies)"
+                    );
+                }
+                if self.ranks_per_node < 2 {
+                    bail!(
+                        "delta-gc-crash needs >= 2 ranks per node so a \
+                         surviving writer on the node replays the ledger"
+                    );
+                }
+                if self.waves < 5 {
+                    bail!(
+                        "delta-gc-crash needs >= 5 waves: earlier GC passes \
+                         are fully pinned by chain ancestors"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -419,6 +540,7 @@ pub fn base_spec(seed: u64) -> ScenarioSpec {
         with_partner: true,
         erasure_group: 4,
         aggregation: false,
+        delta: false,
         waves: 3,
         steps_per_wave: 2,
         regions: 2,
@@ -432,9 +554,9 @@ pub fn base_spec(seed: u64) -> ScenarioSpec {
 }
 
 /// The standard sweep: module-stack permutations (sync/async engine, XOR
-/// partner vs erasure group sizes, aggregation on/off, tier policies)
-/// crossed with every injection-point family. 28 scenarios; each is an
-/// independent one-line repro.
+/// partner vs erasure group sizes, aggregation on/off, delta on/off, tier
+/// policies) crossed with every injection-point family. 35 scenarios;
+/// each is an independent one-line repro.
 pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
     let s = |i: u64| base_seed.wrapping_add(i.wrapping_mul(7919));
     let scope = |kind: ScopeKind| ScopeSpec { kind, target: None };
@@ -511,6 +633,43 @@ pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
     specs.push(ScenarioSpec { seed: s(27), scope: node0, inject: InjectionPoint::MidDrainPreIndex, ..s6.clone() });
     specs.push(ScenarioSpec { seed: s(28), scope: scope(ScopeKind::Node), inject: before("transfer"), ..s6.clone() });
 
+    // Stack 7: incremental dedup (delta) — local + PFS chain only.
+    let s7 = ScenarioSpec {
+        with_partner: false,
+        erasure_group: 0,
+        delta: true,
+        ..base_spec(0)
+    };
+    specs.push(ScenarioSpec { seed: s(29), scope: scope(ScopeKind::Node), ..s7.clone() });
+    specs.push(ScenarioSpec { seed: s(30), scope: scope(ScopeKind::System), ..s7.clone() });
+    specs.push(ScenarioSpec { seed: s(31), scope: scope(ScopeKind::Node), inject: InjectionPoint::MidFlushChunk(2), ..s7.clone() });
+    // Torn mid-chain flush: manifest durable, chunks gone — recovery must
+    // fall back past the break (here to the last forced full).
+    specs.push(ScenarioSpec {
+        seed: s(32),
+        waves: 6,
+        steps_per_wave: 1,
+        scope: scope(ScopeKind::Node),
+        inject: InjectionPoint::DeltaChainBreak(1),
+        ..s7.clone()
+    });
+    // GC writer dies post-intent: the refcount ledger replay finishes the
+    // collection and every retained version stays restorable.
+    specs.push(ScenarioSpec {
+        seed: s(33),
+        waves: 5,
+        steps_per_wave: 1,
+        scope: ScopeSpec { kind: ScopeKind::Rank, target: Some(0) },
+        inject: InjectionPoint::DeltaGcCrash,
+        ..s7.clone()
+    });
+    // Delta + partner replication: victims reassemble through the chain
+    // of partner copies on the surviving node.
+    specs.push(ScenarioSpec { seed: s(34), with_partner: true, scope: scope(ScopeKind::Node), ..s7.clone() });
+    // Delta + aggregation: manifests and novel chunks ride in VAGG
+    // containers; chain restores read back through the segment index.
+    specs.push(ScenarioSpec { seed: s(35), aggregation: true, scope: scope(ScopeKind::Node), ..s7.clone() });
+
     specs
 }
 
@@ -553,7 +712,7 @@ mod tests {
     #[test]
     fn matrix_is_large_and_valid() {
         let specs = standard_matrix(1);
-        assert!(specs.len() >= 24, "{} scenarios", specs.len());
+        assert!(specs.len() >= 30, "{} scenarios", specs.len());
         for spec in &specs {
             spec.validate().unwrap();
         }
@@ -561,15 +720,16 @@ mod tests {
         let mut combos = std::collections::BTreeSet::new();
         for spec in &specs {
             combos.insert(format!(
-                "{:?}/{}/{}/{}/{}",
+                "{:?}/{}/{}/{}/{}/{}",
                 spec.engine_mode,
                 spec.with_partner,
                 spec.erasure_group,
                 spec.aggregation,
+                spec.delta,
                 spec.inject.name()
             ));
         }
-        assert!(combos.len() >= 24, "{} distinct combos", combos.len());
+        assert!(combos.len() >= 28, "{} distinct combos", combos.len());
     }
 
     #[test]
@@ -582,6 +742,53 @@ mod tests {
             pinned.resolve(&topo, 1),
             FailureScope::MultiNode(vec![3, 0])
         );
+    }
+
+    #[test]
+    fn delta_chain_versions_follow_forced_fulls() {
+        let mut spec = base_spec(1);
+        spec.delta = true;
+        spec.erasure_group = 0;
+        spec.waves = 6;
+        spec.steps_per_wave = 1;
+        assert_eq!(spec.delta_chain_versions(1), vec![1]);
+        assert_eq!(spec.delta_chain_versions(3), vec![1, 2, 3]);
+        assert_eq!(spec.delta_chain_versions(4), vec![4], "4th checkpoint is a forced full");
+        assert_eq!(spec.delta_chain_versions(6), vec![4, 5, 6]);
+        spec.steps_per_wave = 2;
+        assert_eq!(spec.delta_chain_versions(8), vec![8]);
+        assert_eq!(spec.delta_chain_versions(6), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn delta_specs_validated() {
+        let delta_base = ScenarioSpec {
+            delta: true,
+            erasure_group: 0,
+            with_partner: false,
+            ..base_spec(1)
+        };
+        delta_base.validate().unwrap();
+        // Delta + erasure is outside the contract model.
+        let mut bad = delta_base.clone();
+        bad.erasure_group = 4;
+        assert!(bad.validate().is_err());
+        // Chain break must leave a version below the last.
+        let mut bad = delta_base.clone();
+        bad.scope = ScopeSpec { kind: ScopeKind::Node, target: None };
+        bad.inject = InjectionPoint::DeltaChainBreak(bad.waves as usize);
+        assert!(bad.validate().is_err());
+        // GC crash needs a pinned rank scope and enough waves.
+        let mut bad = delta_base.clone();
+        bad.inject = InjectionPoint::DeltaGcCrash;
+        bad.waves = 5;
+        bad.scope = ScopeSpec { kind: ScopeKind::Node, target: Some(0) };
+        assert!(bad.validate().is_err());
+        let mut ok = delta_base;
+        ok.inject = InjectionPoint::DeltaGcCrash;
+        ok.waves = 5;
+        ok.scope = ScopeSpec { kind: ScopeKind::Rank, target: Some(0) };
+        ok.validate().unwrap();
     }
 
     #[test]

@@ -266,3 +266,141 @@ fn prop_failure_schedules_valid() {
         }
     }
 }
+
+/// Content-defined chunking: chunk → reassemble is the identity for
+/// arbitrary buffers (including empty, sub-minimum and multi-max sizes),
+/// and every non-final chunk respects the size bounds.
+#[test]
+fn prop_cdc_chunk_reassemble_identity() {
+    use veloc::delta::Chunker;
+    let mut rng = Rng::new(0xCDC1);
+    let c = Chunker::new(64, 256, 1024).unwrap();
+    for trial in 0..120 {
+        let len = match trial % 4 {
+            0 => rng.range_usize(0, 64),
+            1 => rng.range_usize(64, 2048),
+            _ => rng.range_usize(2048, 100_000),
+        };
+        let mut data = vec![0u8; len];
+        rng.fill_bytes(&mut data);
+        let chunks = c.split(&data);
+        let rebuilt: Vec<u8> = chunks.concat();
+        assert_eq!(rebuilt, data, "trial {trial} len {len}");
+        for (i, ch) in chunks.iter().enumerate() {
+            assert!(ch.len() <= 1024, "trial {trial}: chunk {i} too big");
+            if i + 1 < chunks.len() {
+                assert!(ch.len() > 64, "trial {trial}: non-final chunk {i} too small");
+            }
+        }
+    }
+}
+
+/// Boundary stability: an in-place single-byte edit invalidates only O(1)
+/// chunks — the fingerprint streams re-synchronize shortly after the edit
+/// instead of cascading to the end of the buffer.
+#[test]
+fn prop_cdc_single_byte_edit_invalidates_o1_chunks() {
+    use std::collections::BTreeMap;
+    use veloc::delta::{Chunker, Fingerprint};
+    let mut rng = Rng::new(0xED17);
+    let c = Chunker::new(256, 1024, 4096).unwrap();
+    let fp_counts = |chunks: &[&[u8]]| -> BTreeMap<u128, usize> {
+        let mut m = BTreeMap::new();
+        for ch in chunks {
+            *m.entry(Fingerprint::of(ch).0).or_insert(0) += 1;
+        }
+        m
+    };
+    for trial in 0..50 {
+        let mut data = vec![0u8; 64 << 10];
+        rng.fill_bytes(&mut data);
+        let before = fp_counts(&c.split(&data));
+        let pos = rng.range_usize(0, data.len());
+        data[pos] ^= 1 << rng.below(8);
+        let after = fp_counts(&c.split(&data));
+        // Multiset difference: chunks present in `after` but not covered
+        // by `before` (and vice versa).
+        let diff = |a: &BTreeMap<u128, usize>, b: &BTreeMap<u128, usize>| -> usize {
+            a.iter()
+                .map(|(fp, n)| n.saturating_sub(*b.get(fp).unwrap_or(&0)))
+                .sum()
+        };
+        let invalidated = diff(&after, &before).max(diff(&before, &after));
+        let total = after.values().sum::<usize>();
+        assert!(
+            invalidated <= 12,
+            "trial {trial}: edit at {pos} invalidated {invalidated} of {total} chunks"
+        );
+        assert!(total > 40, "trial {trial}: expected ~64 chunks, got {total}");
+    }
+}
+
+/// End-to-end delta identity: a chain of incrementally mutated checkpoints
+/// encoded through `DeltaState` reassembles the final version bit-for-bit,
+/// both through the manifest chain and through the chunk store alone.
+#[test]
+fn prop_delta_chain_roundtrip_is_identity() {
+    use std::collections::BTreeMap;
+    use veloc::delta::{materialize, DeltaConfig, DeltaState};
+    use veloc::storage::{FabricConfig, StorageFabric};
+
+    let mut rng = Rng::new(0xD17A);
+    for trial in 0..10 {
+        let fabric = StorageFabric::build(&FabricConfig {
+            nodes: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let cfg = DeltaConfig {
+            enabled: true,
+            min_chunk: 64,
+            avg_chunk: 256,
+            max_chunk: 1024,
+            max_chain: rng.range_usize(1, 5) as u64,
+        };
+        let state = DeltaState::new(cfg, &fabric, None).unwrap();
+        let regions = rng.range_usize(1, 4);
+        let mut datas: Vec<Vec<u8>> = (0..regions)
+            .map(|_| {
+                let mut d = vec![0u8; rng.range_usize(256, 16_384)];
+                rng.fill_bytes(&mut d);
+                d
+            })
+            .collect();
+        let mut containers: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+        let mut expected = None;
+        let versions = rng.range_usize(2, 8) as u64;
+        for v in 1..=versions {
+            // Mutate a random slice of a random region.
+            let r = rng.range_usize(0, regions);
+            let len = datas[r].len();
+            let off = rng.range_usize(0, len.saturating_sub(16).max(1));
+            let end = (off + 16).min(len);
+            for b in &mut datas[r][off..end] {
+                *b = b.wrapping_add(1);
+            }
+            let mut ckpt = Checkpoint::new("prop", 0, v);
+            for (id, d) in datas.iter().enumerate() {
+                ckpt.push_region(id as u32, d.clone());
+            }
+            containers.insert(v, state.encode_checkpoint(&ckpt, v, 0, &|_| true).unwrap());
+            expected = Some(ckpt);
+        }
+        let expected = expected.unwrap();
+        let fetch = |v: u64| containers.get(&v).cloned();
+        let via_chain = materialize(containers[&versions].clone(), None, &fetch).unwrap();
+        assert_eq!(via_chain, expected, "trial {trial}: chain reassembly");
+        assert_eq!(
+            via_chain.encode(),
+            expected.encode(),
+            "trial {trial}: re-encode must be byte-identical"
+        );
+        let via_store = materialize(
+            containers[&versions].clone(),
+            Some(state.store(0).as_ref()),
+            &|_| None,
+        )
+        .unwrap();
+        assert_eq!(via_store, expected, "trial {trial}: store reassembly");
+    }
+}

@@ -158,3 +158,53 @@ fn unflushed_system_outage_is_unrecoverable_and_predicted() {
     assert_eq!(report.frontier, None);
     assert_eq!(report.verified_ranks, 0);
 }
+
+/// Satellite: a torn mid-chain delta flush (manifest durable, chunks
+/// stripped) forces recovery past the break — at worst to the last forced
+/// full — and the fallback still verifies bit-for-bit.
+#[test]
+fn delta_chain_break_falls_back_past_the_break() {
+    let spec = standard_matrix(0xDE17A)
+        .into_iter()
+        .find(|s| matches!(s.inject, InjectionPoint::DeltaChainBreak(_)))
+        .expect("matrix carries a delta chain-break scenario");
+    let report = run_scenario(&spec).unwrap_or_else(|e| panic!("{e:#}"));
+    let spw = spec.steps_per_wave;
+    // waves = 6, chain of 3: fulls at checkpoints 1 and 4; the break at
+    // the 5th strands checkpoints 5 and 6, so the guaranteed frontier is
+    // the last full.
+    assert_eq!(
+        report.expected_frontier,
+        Some(4 * spw),
+        "guaranteed fallback is the last forced full"
+    );
+    let frontier = report.frontier.expect("a restorable version must remain");
+    assert!(frontier >= 4 * spw, "served {frontier}");
+    assert_eq!(
+        report.verified_ranks,
+        spec.nodes * spec.ranks_per_node,
+        "every rank must verify bit-for-bit at the fallback"
+    );
+}
+
+/// Satellite: a GC writer dying after persisting its decref intent is
+/// recovered by the refcount-ledger replay; the scenario runner asserts
+/// the replay count, re-verifies the previous retained version and audits
+/// every live manifest against the chunk stores.
+#[test]
+fn delta_gc_crash_recovers_via_ledger_replay() {
+    let spec = standard_matrix(0x6C6C)
+        .into_iter()
+        .find(|s| matches!(s.inject, InjectionPoint::DeltaGcCrash))
+        .expect("matrix carries a delta gc-crash scenario");
+    let report = run_scenario(&spec).unwrap_or_else(|e| panic!("{e:#}"));
+    assert_eq!(
+        report.frontier,
+        Some(spec.waves * spec.steps_per_wave),
+        "a rank-scoped GC crash must not cost the latest version"
+    );
+    assert!(
+        report.verified_ranks > spec.nodes * spec.ranks_per_node,
+        "the runner re-verifies the previous retained version too"
+    );
+}
