@@ -15,7 +15,11 @@
 #[path = "harness.rs"]
 mod harness;
 
-use veloc::storage::{presets, StorageTier, TierKind, TimeMode};
+use std::sync::Arc;
+use veloc::storage::{
+    presets, PlacementConfig, PlacementEngine, PlacementPolicy, StorageTier, TierKind,
+    TimeMode,
+};
 
 /// Modeled capture service time for one checkpoint under `readers`
 /// concurrent flush-readbacks on the NVMe tier.
@@ -88,5 +92,133 @@ fn main() {
         "\npaper [4] shape: past ~4 concurrent flush readers the nominally\n\
          4x-slower SSD beats the contended NVMe for the blocking capture,\n\
          so fastest-first is suboptimal — ConcurrencyAware picks SSD."
+    );
+
+    placement_mode();
+}
+
+/// Fresh shared-tier pool: a 5 GB/s PFS (the static primary) and a
+/// 20 GB/s burst buffer (the tier adaptive placement should discover).
+fn placement_pool() -> Vec<Arc<StorageTier>> {
+    vec![
+        StorageTier::memory(presets::pfs(u64::MAX / 2, 5.0e9), TimeMode::Model),
+        StorageTier::memory(presets::burst_buffer(u64::MAX / 2, 20.0e9), TimeMode::Model),
+    ]
+}
+
+fn placement_engine(policy: PlacementPolicy) -> Arc<PlacementEngine> {
+    PlacementEngine::new(
+        placement_pool(),
+        PlacementConfig {
+            enabled: true,
+            policy,
+            ..Default::default()
+        },
+        None,
+    )
+    .expect("non-empty pool")
+}
+
+/// Modeled seconds to flush `flushes` objects of `bytes` through an
+/// engine (sequential flush tail, model time mode).
+fn modeled_flush_secs(engine: &PlacementEngine, bytes: usize, flushes: usize) -> f64 {
+    let payload = Arc::new(vec![0u8; bytes]);
+    (0..flushes)
+        .map(|i| {
+            let (_, stat) = engine
+                .put(&format!("ckpt.v{i}"), &payload)
+                .expect("flush must not fail");
+            stat.modeled.as_secs_f64()
+        })
+        .sum()
+}
+
+/// E5c — adaptive placement vs static worst-tier routing, plus the
+/// mid-run outage demonstration (ISSUE 4 acceptance: fastest-eligible
+/// >= 1.5x over static routing pinned to the slow tier; an outage
+/// degrades throughput instead of failing the checkpoint).
+fn placement_mode() {
+    harness::section("E5c: placement — fastest-eligible vs static worst-tier routing");
+    let flushes = 8;
+    println!(
+        "{:>10} | {:>12} {:>12} | {:>6}",
+        "size", "static", "fastest", "gain"
+    );
+    let mut gain_at_64m = 0.0;
+    for mb in [1usize, 16, 64, 256] {
+        let bytes = mb << 20;
+        // Static routing with the slow tier configured primary — exactly
+        // the hard-wired destination the paper argues against.
+        let static_secs =
+            modeled_flush_secs(&placement_engine(PlacementPolicy::Static), bytes, flushes);
+        let fastest_secs = modeled_flush_secs(
+            &placement_engine(PlacementPolicy::FastestEligible),
+            bytes,
+            flushes,
+        );
+        let gain = static_secs / fastest_secs;
+        if mb == 64 {
+            gain_at_64m = gain;
+        }
+        println!(
+            "{:>7} MiB | {:>12} {:>12} | {:>5.2}x",
+            mb,
+            harness::fmt_secs(static_secs),
+            harness::fmt_secs(fastest_secs),
+            gain
+        );
+    }
+    assert!(
+        gain_at_64m >= 1.5,
+        "fastest-eligible placement must beat static worst-tier routing \
+         by >= 1.5x at 64 MiB (measured {gain_at_64m:.2}x)"
+    );
+    println!("asserted: fastest-eligible >= 1.5x over static worst-tier routing");
+
+    harness::section("E5d: placement — mid-run tier outage degrades instead of failing");
+    let engine = placement_engine(PlacementPolicy::FastestEligible);
+    let bytes = 64 << 20;
+    let payload = Arc::new(vec![0u8; bytes]);
+    let mut before = 0.0f64;
+    let mut after = 0.0f64;
+    println!("{:>6} {:>14} {:>14}", "flush", "tier", "modeled");
+    for i in 0..8 {
+        if i == 4 {
+            // The burst buffer drops off mid-run.
+            engine
+                .tier("burst-buffer")
+                .expect("pool has a burst buffer")
+                .set_down(true);
+            println!("  -- burst-buffer outage --");
+        }
+        let (dest, stat) = engine
+            .put(&format!("out.v{i}"), &payload)
+            .expect("outage must fail over, not fail the checkpoint");
+        if i < 4 {
+            before += stat.modeled.as_secs_f64();
+        } else {
+            after += stat.modeled.as_secs_f64();
+        }
+        println!(
+            "{:>6} {:>14} {:>14}",
+            i,
+            dest,
+            harness::fmt_secs(stat.modeled.as_secs_f64())
+        );
+    }
+    assert!(
+        after > before,
+        "post-outage flushes should be slower (PFS), not absent: \
+         {before:.4}s -> {after:.4}s"
+    );
+    assert!(
+        engine.failover_count() >= 1,
+        "the outage must be served by failover"
+    );
+    println!(
+        "outage absorbed: throughput degraded {:.2}x, zero failed checkpoints \
+         ({} failovers)",
+        after / before.max(1e-9),
+        engine.failover_count()
     );
 }

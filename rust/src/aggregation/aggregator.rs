@@ -19,7 +19,7 @@ use crate::metrics::Metrics;
 use crate::modules::version::VersionRegistry;
 use crate::modules::FlushGate;
 use crate::pipeline::context::LEVEL_PFS;
-use crate::storage::{StorageFabric, StorageTier};
+use crate::storage::{PlacementEngine, StorageFabric, StorageTier};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -80,6 +80,7 @@ pub struct SubmitStat {
 pub struct DrainStat {
     /// Containers written (0 when the buffer was empty).
     pub containers: u64,
+    /// Per-rank segments drained.
     pub segments: u64,
     /// Container bytes written to the target tier.
     pub written_bytes: u64,
@@ -100,7 +101,9 @@ impl DrainStat {
 /// measured by: container count, mean write size, write amplification).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AggregationReport {
+    /// Containers written since construction.
     pub containers: u64,
+    /// Per-rank segments drained since construction.
     pub segments: u64,
     /// Checkpoint payload bytes absorbed.
     pub payload_bytes: u64,
@@ -109,6 +112,7 @@ pub struct AggregationReport {
 }
 
 impl AggregationReport {
+    /// Mean container size written to the shared tier.
     pub fn mean_write_bytes(&self) -> f64 {
         if self.containers == 0 {
             return 0.0;
@@ -125,6 +129,7 @@ impl AggregationReport {
         self.written_bytes as f64 / self.payload_bytes as f64
     }
 
+    /// Mean per-rank segments coalesced per container.
     pub fn segments_per_container(&self) -> f64 {
         if self.containers == 0 {
             return 0.0;
@@ -133,6 +138,7 @@ impl AggregationReport {
     }
 }
 
+/// The write-combining aggregator (see the [module docs](self)).
 pub struct Aggregator {
     topology: Topology,
     fabric: Arc<StorageFabric>,
@@ -141,6 +147,11 @@ pub struct Aggregator {
     /// lever the direct flush path uses).
     gate: Option<Arc<dyn FlushGate>>,
     metrics: Option<Arc<Metrics>>,
+    /// Adaptive tier placement: when set, container drains route to the
+    /// best eligible shared tier (with failover) instead of the fixed
+    /// [`AggTarget`], and the segment index records where each container
+    /// landed.
+    placement: Option<Arc<PlacementEngine>>,
     /// When set, level-4 durability is recorded here at *drain* time —
     /// a buffered segment is still volatile node memory and must not
     /// count as flushed.
@@ -168,6 +179,7 @@ pub struct Aggregator {
 }
 
 impl Aggregator {
+    /// Minimal constructor: no metrics, no registry, fixed target tier.
     pub fn new(
         topology: Topology,
         fabric: Arc<StorageFabric>,
@@ -178,6 +190,8 @@ impl Aggregator {
         Self::with_registry(topology, fabric, cfg, gate, metrics, None)
     }
 
+    /// Constructor recording level-4 durability into a version registry
+    /// at drain time; fixed target tier.
     pub fn with_registry(
         topology: Topology,
         fabric: Arc<StorageFabric>,
@@ -186,15 +200,30 @@ impl Aggregator {
         metrics: Option<Arc<Metrics>>,
         registry: Option<Arc<VersionRegistry>>,
     ) -> Arc<Self> {
+        Self::with_placement(topology, fabric, cfg, gate, metrics, registry, None)
+    }
+
+    /// Full constructor: registry recording plus adaptive tier placement
+    /// for the container drains (the runtime's entry point).
+    pub fn with_placement(
+        topology: Topology,
+        fabric: Arc<StorageFabric>,
+        cfg: AggregationConfig,
+        gate: Option<Arc<dyn FlushGate>>,
+        metrics: Option<Arc<Metrics>>,
+        registry: Option<Arc<VersionRegistry>>,
+        placement: Option<Arc<PlacementEngine>>,
+    ) -> Arc<Self> {
         let n = Self::group_count(&topology, &cfg);
         let groups = (0..n).map(|_| Mutex::new(GroupBuffer::default())).collect();
-        let seq0 = Self::seed_seq(&fabric, &cfg);
+        let seq0 = Self::seed_seq(&fabric, &cfg, placement.as_deref());
         Arc::new(Aggregator {
             topology,
             fabric,
             cfg,
             gate,
             metrics,
+            placement,
             registry,
             groups,
             index: Mutex::new(SegmentIndex::new()),
@@ -208,6 +237,7 @@ impl Aggregator {
         })
     }
 
+    /// The aggregation knobs this instance runs under.
     pub fn config(&self) -> &AggregationConfig {
         &self.cfg
     }
@@ -224,19 +254,28 @@ impl Aggregator {
     }
 
     /// First free container sequence number: one past the highest
-    /// `agg.g*.c<seq>` already on the target tier, so that a restarted
+    /// `agg.g*.c<seq>` already on any candidate tier, so that a restarted
     /// runtime over a persistent backing never overwrites durable
-    /// containers from a previous run.
-    fn seed_seq(fabric: &StorageFabric, cfg: &AggregationConfig) -> u64 {
-        let tier = match cfg.target {
-            AggTarget::Pfs => fabric.pfs(),
-            AggTarget::BurstBuffer => match fabric.burst_buffer() {
-                Some(t) => t,
-                None => return 0,
+    /// containers from a previous run (placement may have scattered them
+    /// across the pool).
+    fn seed_seq(
+        fabric: &StorageFabric,
+        cfg: &AggregationConfig,
+        placement: Option<&PlacementEngine>,
+    ) -> u64 {
+        let tiers: Vec<Arc<StorageTier>> = match placement {
+            Some(p) => p.tiers().to_vec(),
+            None => match cfg.target {
+                AggTarget::Pfs => vec![Arc::clone(fabric.pfs())],
+                AggTarget::BurstBuffer => match fabric.burst_buffer() {
+                    Some(t) => vec![Arc::clone(t)],
+                    None => return 0,
+                },
             },
         };
-        tier.list("agg.g")
+        tiers
             .iter()
+            .flat_map(|t| t.list("agg.g"))
             .filter_map(|k| {
                 k.rsplit_once(".c").and_then(|(_, s)| s.parse::<u64>().ok())
             })
@@ -285,6 +324,24 @@ impl Aggregator {
         }
     }
 
+    /// Candidate tiers a container (or the persisted index) may live on:
+    /// the placement pool, or just the fixed target.
+    fn pool_tiers(&self) -> Result<Vec<Arc<StorageTier>>> {
+        match &self.placement {
+            Some(p) => Ok(p.tiers().to_vec()),
+            None => Ok(vec![Arc::clone(self.target_tier()?)]),
+        }
+    }
+
+    /// Home of shared aggregation metadata (the persisted index): the
+    /// placement primary, or the fixed target.
+    fn index_tier(&self) -> Result<Arc<StorageTier>> {
+        match &self.placement {
+            Some(p) => Ok(Arc::clone(p.primary())),
+            None => Ok(Arc::clone(self.target_tier()?)),
+        }
+    }
+
     /// Buffered-but-undrained payload bytes across all groups.
     pub fn pending_bytes(&self) -> u64 {
         self.groups
@@ -304,6 +361,7 @@ impl Aggregator {
         })
     }
 
+    /// Cumulative accounting snapshot.
     pub fn report(&self) -> AggregationReport {
         AggregationReport {
             containers: self.containers.load(Ordering::Relaxed),
@@ -448,9 +506,19 @@ impl Aggregator {
                 )
             })
             .collect();
-        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
-        let id = format!("g{group}.c{seq}");
-        let key = format!("agg.{id}");
+        // Claim a container key no *reachable* tier already holds:
+        // seed_seq cannot see containers behind a tier that was down at
+        // construction, so a blind sequence restart could otherwise
+        // overwrite a durable container once that tier recovers. The
+        // probe re-checks at drain time, when the tier may be back.
+        let (id, key) = loop {
+            let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+            let id = format!("g{group}.c{seq}");
+            let key = format!("agg.{id}");
+            if self.pool_tiers()?.iter().all(|t| !t.exists(&key)) {
+                break (id, key);
+            }
+        };
         let encoded = Arc::new(container::encode(&id, group, &metas));
         drop(metas);
         // The drain writer is colocated with the group's buffers; use the
@@ -476,8 +544,16 @@ impl Aggregator {
                 off += self.cfg.drain_chunk;
             }
         }
-        let tier = self.target_tier()?;
-        let stat = tier.put_shared(&key, &encoded)?;
+        // Adaptive placement routes the container to the best eligible
+        // shared tier (failing over past down/read-only/full ones) and
+        // reports where it landed; the fixed target is the legacy path.
+        let (dest, stat) = match &self.placement {
+            Some(p) => p.put(&key, &encoded)?,
+            None => {
+                let tier = self.target_tier()?;
+                (tier.id().to_string(), tier.put_shared(&key, &encoded)?)
+            }
+        };
         let n = buf.pending.len() as u64;
         // Crash window: container durable, index not yet updated. A failure
         // landing here kills the writer after the publish — the buffered
@@ -495,9 +571,10 @@ impl Aggregator {
                 modeled: stat.modeled,
             });
         }
-        // Index the freshly-published segments and persist the index next
-        // to the containers. The put happens under the index lock so that
-        // concurrent group drains cannot persist a stale snapshot last.
+        // Index the freshly-published segments (recording the tier the
+        // container landed on) and persist the index on the metadata
+        // tier. The put happens under the index lock so that concurrent
+        // group drains cannot persist a stale snapshot last.
         let header = container::decode_header(&encoded)?;
         {
             let mut idx = self.index.lock().unwrap();
@@ -512,10 +589,13 @@ impl Aggregator {
                         len: m.len,
                         encoding: m.encoding.clone(),
                         crc: m.crc,
+                        tier: dest.clone(),
                     },
                 );
             }
-            let _ = tier.put(INDEX_KEY, idx.to_json().to_string().as_bytes());
+            if let Ok(t) = self.index_tier() {
+                let _ = t.put(INDEX_KEY, idx.to_json().to_string().as_bytes());
+            }
         }
         // The segments just became durable on the shared tier: only now do
         // they count as level-4 complete (a buffered segment is volatile
@@ -549,10 +629,19 @@ impl Aggregator {
     }
 
     /// Fetch a segment payload via an index entry; None when the container
-    /// is missing, truncated or fails the segment CRC.
+    /// is missing, truncated or fails the segment CRC. The recorded tier
+    /// is tried first; a miss (failover re-drain, stale tier id, tier
+    /// down) falls back to probing the whole pool.
     fn fetch(&self, loc: &SegmentLoc) -> Option<Vec<u8>> {
-        let tier = self.target_tier().ok()?;
-        let (buf, _) = tier.get(&loc.container)?;
+        let pool = self.pool_tiers().ok()?;
+        let recorded = pool.iter().find(|t| t.id() == loc.tier);
+        let (buf, _) = match recorded.and_then(|t| t.get(&loc.container)) {
+            Some(hit) => hit,
+            None => pool
+                .iter()
+                .filter(|t| Some(t.id()) != recorded.map(|r| r.id()))
+                .find_map(|t| t.get(&loc.container))?,
+        };
         // Checked bounds: a corrupt index entry must degrade to a miss
         // (then the header rebuild), never a slice panic. The last 4
         // container bytes are the trailing CRC, never payload.
@@ -608,7 +697,19 @@ impl Aggregator {
                         resolved = self.fetch(&loc).is_some();
                     }
                 }
-                if !resolved {
+                // Even when the persisted index resolved this segment it
+                // can be *stale*: index persists are best-effort, so a
+                // drain that failed over while the metadata tier was
+                // unwritable left containers no index entry points at.
+                // Detect that from tier listings (metadata-only — no
+                // container bodies are read) instead of assuming it.
+                let stale = resolved && {
+                    let known = self.index.lock().unwrap().container_keys();
+                    self.pool_tiers()?
+                        .iter()
+                        .any(|t| t.list("agg.g").into_iter().any(|k| !known.contains(&k)))
+                };
+                if !resolved || stale {
                     // Persisted index lost, corrupt or stale: rebuild.
                     self.rebuild_index()?;
                 }
@@ -621,53 +722,71 @@ impl Aggregator {
         Ok(None)
     }
 
-    /// Merge the index object persisted on the target tier.
+    /// Merge the persisted index object: the metadata tier first, then —
+    /// placement only — any pool tier holding one (the metadata tier may
+    /// have been down when the last drain persisted).
     fn load_persisted_index(&self) -> Result<()> {
-        let tier = self.target_tier()?;
-        let (bytes, _) = tier
-            .get(INDEX_KEY)
+        let mut candidates = vec![self.index_tier()?];
+        for t in self.pool_tiers()? {
+            if candidates.iter().all(|c| c.id() != t.id()) {
+                candidates.push(t);
+            }
+        }
+        let (bytes, _) = candidates
+            .iter()
+            .find_map(|t| t.get(INDEX_KEY))
             .ok_or_else(|| anyhow!("no persisted aggregation index"))?;
         let j = Json::parse(std::str::from_utf8(&bytes)?)
             .map_err(|e| anyhow!("aggregation index: {e}"))?;
         self.index.lock().unwrap().load_json(&j)
     }
 
-    /// Rebuild the segment index by scanning container headers on the
-    /// target tier (the containers are self-describing, so a lost index is
-    /// never fatal). Re-persists the rebuilt index.
+    /// Rebuild the segment index by scanning container headers on every
+    /// candidate tier (the containers are self-describing, so a lost index
+    /// is never fatal — and placement may have scattered them across the
+    /// pool). Scan results *merge over* the in-memory index rather than
+    /// replacing it: entries whose tier is currently down are unreachable
+    /// to the scan but still legitimate (fetchers validate CRCs, so a
+    /// genuinely stale survivor degrades to a miss, never to bad data).
+    /// Re-persists the merged index on the metadata tier. Returns how
+    /// many segments the scan found.
     pub fn rebuild_index(&self) -> Result<usize> {
-        let tier = self.target_tier()?;
         let mut rebuilt = SegmentIndex::new();
-        for key in tier.list("agg.") {
-            if key == INDEX_KEY {
-                continue;
-            }
-            let Some((bytes, _)) = tier.get(&key) else {
-                continue;
-            };
-            let Ok(header) = container::decode_header(&bytes) else {
-                continue; // unreadable container: skip, salvage the rest
-            };
-            for (i, m) in header.segments.iter().enumerate() {
-                rebuilt.insert(
-                    &m.name,
-                    m.version,
-                    m.rank,
-                    SegmentLoc {
-                        container: key.clone(),
-                        offset: header.segment_offset(i),
-                        len: m.len,
-                        encoding: m.encoding.clone(),
-                        crc: m.crc,
-                    },
-                );
+        for tier in self.pool_tiers()? {
+            for key in tier.list("agg.") {
+                if key == INDEX_KEY {
+                    continue;
+                }
+                let Some((bytes, _)) = tier.get(&key) else {
+                    continue;
+                };
+                let Ok(header) = container::decode_header(&bytes) else {
+                    continue; // unreadable container: skip, salvage the rest
+                };
+                for (i, m) in header.segments.iter().enumerate() {
+                    rebuilt.insert(
+                        &m.name,
+                        m.version,
+                        m.rank,
+                        SegmentLoc {
+                            container: key.clone(),
+                            offset: header.segment_offset(i),
+                            len: m.len,
+                            encoding: m.encoding.clone(),
+                            crc: m.crc,
+                            tier: tier.id().to_string(),
+                        },
+                    );
+                }
             }
         }
         let count = rebuilt.len();
         {
             let mut idx = self.index.lock().unwrap();
-            *idx = rebuilt;
-            let _ = tier.put(INDEX_KEY, idx.to_json().to_string().as_bytes());
+            idx.merge_from(rebuilt);
+            if let Ok(t) = self.index_tier() {
+                let _ = t.put(INDEX_KEY, idx.to_json().to_string().as_bytes());
+            }
         }
         if let Some(m) = &self.metrics {
             m.incr("agg.index.rebuilds", 1);
@@ -697,7 +816,7 @@ impl Aggregator {
         if self.has_pending(name) {
             return Ok(());
         }
-        let tier = self.target_tier()?;
+        let pool = self.pool_tiers()?;
         let orphans = {
             let mut idx = self.index.lock().unwrap();
             let candidates = idx.containers_of_version(name, version);
@@ -705,15 +824,32 @@ impl Aggregator {
                 return Ok(());
             }
             idx.remove_version(name, version);
-            let orphans: Vec<String> = candidates
+            let orphans: Vec<(String, String)> = candidates
                 .into_iter()
-                .filter(|k| !idx.references_container(k))
+                .filter(|(k, tier)| !idx.references_container(k, tier))
                 .collect();
-            let _ = tier.put(INDEX_KEY, idx.to_json().to_string().as_bytes());
+            if let Ok(t) = self.index_tier() {
+                let _ = t.put(INDEX_KEY, idx.to_json().to_string().as_bytes());
+            }
             orphans
         };
-        for key in &orphans {
-            tier.delete(key);
+        // Delete each orphan only where the index says it lives: a
+        // container sequence restarted behind a down tier can produce the
+        // same key on two tiers, and a pool-wide sweep would destroy the
+        // other tier's still-live container. Entries without a recorded
+        // tier (pre-placement indexes) fall back to the whole pool —
+        // those indexes were written when only one target tier existed.
+        for (key, tier_id) in &orphans {
+            match pool.iter().find(|t| t.id() == tier_id.as_str()) {
+                Some(tier) => {
+                    tier.delete(key);
+                }
+                None => {
+                    for tier in &pool {
+                        tier.delete(key);
+                    }
+                }
+            }
         }
         if let Some(m) = &self.metrics {
             m.incr("agg.containers.gc", orphans.len() as u64);
@@ -884,6 +1020,69 @@ mod tests {
         assert_eq!(b.restore("app", 1, 0).unwrap().unwrap(), *payload(0, 1));
         // The rebuild re-persisted the index.
         assert!(f.pfs().exists(INDEX_KEY));
+    }
+
+    /// Placement-routed drains: a down primary fails the container over
+    /// to the burst buffer, the index records the destination, and both
+    /// warm and cold restores (header rebuild across the pool) serve it.
+    #[test]
+    fn placement_failover_drains_and_restores_across_pool() {
+        use crate::storage::{FabricConfig, PlacementConfig, PlacementEngine};
+        let f = Arc::new(
+            StorageFabric::build(&FabricConfig {
+                nodes: 2,
+                with_burst_buffer: true,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let topo = Topology::new(2, 1);
+        let placement = || {
+            PlacementEngine::new(
+                f.shared_tiers(),
+                PlacementConfig {
+                    enabled: true,
+                    ..Default::default()
+                },
+                None,
+            )
+            .unwrap()
+        };
+        let a = Aggregator::with_placement(
+            topo,
+            Arc::clone(&f),
+            AggregationConfig::default(),
+            None,
+            None,
+            None,
+            Some(placement()),
+        );
+        f.pfs().set_down(true);
+        // rpn=1 => barrier quorum 1: the submit drains immediately and
+        // must land on the burst buffer.
+        a.submit("app", 1, 0, "raw", payload(0, 1)).unwrap();
+        assert_eq!(f.pfs().list("agg.g").len(), 0);
+        assert_eq!(f.burst_buffer().unwrap().list("agg.g").len(), 1);
+        assert_eq!(a.restore("app", 1, 0).unwrap().unwrap(), *payload(0, 1));
+        // Cold aggregator with the primary still down: no persisted
+        // index reachable, so the rebuild must scan the whole pool.
+        let b = Aggregator::with_placement(
+            topo,
+            Arc::clone(&f),
+            AggregationConfig::default(),
+            None,
+            None,
+            None,
+            Some(placement()),
+        );
+        assert_eq!(b.restore("app", 1, 0).unwrap().unwrap(), *payload(0, 1));
+        // Primary back up: a later drain goes to the pfs again and both
+        // containers stay restorable.
+        f.pfs().set_down(false);
+        a.submit("app", 2, 0, "raw", payload(0, 2)).unwrap();
+        assert_eq!(f.pfs().list("agg.g").len(), 1);
+        assert_eq!(a.restore("app", 2, 0).unwrap().unwrap(), *payload(0, 2));
+        assert_eq!(a.restore("app", 1, 0).unwrap().unwrap(), *payload(0, 1));
     }
 
     #[test]

@@ -23,15 +23,21 @@
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
+/// Container magic bytes.
 pub const AGG_MAGIC: &[u8; 4] = b"VAGG";
+/// Container format version.
 pub const AGG_VERSION: u32 = 1;
 
 /// Metadata of one packed segment (one rank's checkpoint payload).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SegmentMeta {
+    /// Checkpoint name.
     pub name: String,
+    /// Checkpoint version.
     pub version: u64,
+    /// Originating rank.
     pub rank: usize,
+    /// Payload length in bytes.
     pub len: usize,
     /// Payload encoding tag ("raw" VCKP or "zlib").
     pub encoding: String,
@@ -46,6 +52,7 @@ pub struct ContainerHeader {
     pub id: String,
     /// Aggregation group that produced it.
     pub group: usize,
+    /// Packed segments, in body order.
     pub segments: Vec<SegmentMeta>,
     /// Byte offset of the body (first segment payload) in the container.
     pub body_offset: usize,

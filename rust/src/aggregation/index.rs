@@ -22,11 +22,16 @@ pub struct SegmentLoc {
     pub container: String,
     /// Byte offset of the payload within the container.
     pub offset: usize,
+    /// Payload length in bytes.
     pub len: usize,
     /// Payload encoding tag ("raw" or "zlib").
     pub encoding: String,
     /// CRC32 of the payload bytes.
     pub crc: u32,
+    /// Id of the shared tier the container landed on. Empty in indexes
+    /// written before adaptive placement (or rebuilt from an unknown
+    /// tier); fetchers then probe the whole pool.
+    pub tier: String,
 }
 
 /// In-memory index (callers serialize access; the aggregator wraps it in a
@@ -37,52 +42,81 @@ pub struct SegmentIndex {
 }
 
 impl SegmentIndex {
+    /// Empty index.
     pub fn new() -> Self {
         SegmentIndex::default()
     }
 
+    /// Number of indexed segments.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Is the index empty?
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// Insert (or replace) a segment location.
     pub fn insert(&mut self, name: &str, version: u64, rank: usize, loc: SegmentLoc) {
         self.entries
             .insert((name.to_string(), version, rank), loc);
     }
 
+    /// Look up one rank's segment location.
     pub fn get(&self, name: &str, version: u64, rank: usize) -> Option<&SegmentLoc> {
         self.entries.get(&(name.to_string(), version, rank))
     }
 
+    /// Drop every segment of one (name, version).
     pub fn remove_version(&mut self, name: &str, version: u64) {
         self.entries
             .retain(|(n, v, _), _| !(n == name && *v == version));
     }
 
-    /// Container keys holding at least one segment of (name, version).
-    pub fn containers_of_version(&self, name: &str, version: u64) -> Vec<String> {
-        let mut v: Vec<String> = self
+    /// `(container key, recorded tier id)` pairs holding at least one
+    /// segment of (name, version). The tier id is empty for entries from
+    /// pre-placement indexes.
+    pub fn containers_of_version(&self, name: &str, version: u64) -> Vec<(String, String)> {
+        let mut v: Vec<(String, String)> = self
             .entries
             .iter()
             .filter(|((n, ver, _), _)| n == name && *ver == version)
-            .map(|(_, loc)| loc.container.clone())
+            .map(|(_, loc)| (loc.container.clone(), loc.tier.clone()))
             .collect();
         v.sort();
         v.dedup();
         v
     }
 
-    /// Does any live segment still point into this container?
-    pub fn references_container(&self, key: &str) -> bool {
-        self.entries.values().any(|loc| loc.container == key)
+    /// Does any live segment still point into this container *on this
+    /// tier*? A restarted sequence behind a down tier can produce the
+    /// same container key on two tiers, so liveness is per (key, tier);
+    /// empty tier ids (pre-placement indexes) match by key alone.
+    pub fn references_container(&self, key: &str, tier: &str) -> bool {
+        self.entries.values().any(|loc| {
+            loc.container == key
+                && (tier.is_empty() || loc.tier.is_empty() || loc.tier == tier)
+        })
     }
 
+    /// Drop everything.
     pub fn clear(&mut self) {
         self.entries.clear();
+    }
+
+    /// Merge another index's entries over this one (the other's entries
+    /// win on conflicts — used by header rebuilds, whose scan of live
+    /// containers is authoritative for everything it can reach).
+    pub fn merge_from(&mut self, other: SegmentIndex) {
+        self.entries.extend(other.entries);
+    }
+
+    /// Keys of every container the index references (staleness probes:
+    /// a tier listing a container key the index does not know about
+    /// means the index missed a drain).
+    pub fn container_keys(&self) -> std::collections::BTreeSet<String> {
+        self.entries.values().map(|l| l.container.clone()).collect()
     }
 
     /// Serialize for persistence alongside the containers.
@@ -103,6 +137,7 @@ impl SegmentIndex {
                     .set("len", loc.len as u64)
                     .set("encoding", loc.encoding.as_str())
                     .set("crc", loc.crc as u64)
+                    .set("tier", loc.tier.as_str())
             })
             .collect();
         Json::obj().set("segments", Json::Arr(segments))
@@ -144,6 +179,7 @@ impl SegmentIndex {
                     .ok_or_else(|| anyhow!("index entry missing len"))?,
                 encoding: s.str_or("encoding", "raw").to_string(),
                 crc: s.get("crc").and_then(Json::as_u64).unwrap_or(0) as u32,
+                tier: s.str_or("tier", "").to_string(),
             };
             self.insert(name, version, rank, loc);
         }
@@ -162,6 +198,7 @@ mod tests {
             len: 64,
             encoding: "raw".to_string(),
             crc: 0xABCD,
+            tier: "pfs".to_string(),
         }
     }
 

@@ -17,6 +17,26 @@
 //! `modules::transfer` routes through the aggregator when
 //! `VelocConfig::aggregation.enabled` is set; restore falls back to the
 //! aggregated containers transparently.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use veloc::aggregation::{AggregationConfig, Aggregator};
+//! use veloc::cluster::Topology;
+//! use veloc::storage::{FabricConfig, StorageFabric};
+//!
+//! let fabric = Arc::new(StorageFabric::build(&FabricConfig::default()).unwrap());
+//! // One rank per node: the version-complete barrier drains immediately.
+//! let agg = Aggregator::new(
+//!     Topology::new(2, 1),
+//!     fabric,
+//!     AggregationConfig::default(),
+//!     None,
+//!     None,
+//! );
+//! agg.submit("app", 1, 0, "raw", Arc::new(vec![7u8; 4096])).unwrap();
+//! let restored = agg.restore("app", 1, 0).unwrap().unwrap();
+//! assert_eq!(restored, vec![7u8; 4096]);
+//! ```
 
 pub mod aggregator;
 pub mod container;
@@ -40,6 +60,7 @@ pub enum AggTarget {
 }
 
 impl AggTarget {
+    /// Stable config/CLI spelling.
     pub fn name(&self) -> &'static str {
         match self {
             AggTarget::Pfs => "pfs",
@@ -77,6 +98,7 @@ pub struct AggregationConfig {
     pub version_barrier: bool,
     /// Chunk size for scheduler-gated drain pacing (>= 4 KiB).
     pub drain_chunk: usize,
+    /// Shared tier the containers drain to (placement may override).
     pub target: AggTarget,
 }
 

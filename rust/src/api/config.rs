@@ -5,10 +5,10 @@ use crate::delta::DeltaConfig;
 use crate::modules::{StackConfig, TierPolicy};
 use crate::pipeline::EngineMode;
 use crate::scheduler::SchedulerPolicy;
-use crate::storage::{FabricConfig, TimeMode};
+use crate::storage::{FabricConfig, PlacementConfig, PlacementPolicy, TierDef, TierKind, TimeMode};
 use crate::util::json::Json;
 use anyhow::{bail, Result};
-use std::path::PathBuf;
+use std::path::{Component, Path, PathBuf};
 use std::time::Duration;
 
 /// Smallest chunk the flush pacing paths accept. `TransferModule` used to
@@ -18,17 +18,25 @@ pub const MIN_FLUSH_CHUNK: usize = 4096;
 /// Full runtime configuration.
 #[derive(Clone)]
 pub struct VelocConfig {
+    /// Simulated node count (kept consistent with `fabric.nodes`).
     pub nodes: usize,
+    /// Application ranks per node.
     pub ranks_per_node: usize,
+    /// Sync (linked-in) or async (active backend) pipeline engine.
     pub engine_mode: EngineMode,
+    /// Background-flush scheduling policy.
     pub scheduler: SchedulerPolicy,
     /// Run the interference calibration micro-benchmark at start-up.
     pub calibrate_interference: bool,
     /// Execute erasure/checksum through the Pallas kernels via PJRT.
     pub use_kernels: bool,
+    /// Active-backend thread count.
     pub backend_threads: usize,
+    /// `checkpoint_wait` timeout.
     pub wait_timeout: Duration,
+    /// Module-stack composition and knobs.
     pub stack: StackConfig,
+    /// Storage fabric shape (tiers, bandwidths, capacities).
     pub fabric: FabricConfig,
     /// Aggregated asynchronous flush (write-combining per-rank checkpoints
     /// into shared containers).
@@ -36,6 +44,9 @@ pub struct VelocConfig {
     /// Incremental deduplicated checkpointing (content-defined chunking +
     /// delta manifests; only novel chunks move through the levels).
     pub delta: DeltaConfig,
+    /// Adaptive heterogeneous-tier placement of shared-tier flushes
+    /// (policy, health EWMA, circuit breaker — `crate::storage::placement`).
+    pub placement: PlacementConfig,
     /// Override for the artifacts directory.
     pub artifacts: Option<PathBuf>,
 }
@@ -56,12 +67,14 @@ impl Default for VelocConfig {
             fabric,
             aggregation: AggregationConfig::default(),
             delta: DeltaConfig::default(),
+            placement: PlacementConfig::default(),
             artifacts: None,
         }
     }
 }
 
 impl VelocConfig {
+    /// Directory holding the AOT-lowered kernel artifacts.
     pub fn artifacts_dir(&self) -> PathBuf {
         self.artifacts
             .clone()
@@ -128,9 +141,56 @@ impl VelocConfig {
             cfg.fabric.with_burst_buffer =
                 f.bool_or("burst_buffer", cfg.fabric.with_burst_buffer);
             cfg.fabric.pfs_bw = f.f64_or("pfs_bw", cfg.fabric.pfs_bw);
+            cfg.fabric.bb_bw = f.f64_or("bb_bw", cfg.fabric.bb_bw);
+            cfg.fabric.kv_bw = f.f64_or("kv_bw", cfg.fabric.kv_bw);
             if let Some(scale) = f.get("emulate_scale").and_then(Json::as_f64) {
                 cfg.fabric.time_mode = TimeMode::Emulate { scale };
             }
+            if let Some(tiers) = f.get("tiers").and_then(Json::as_arr) {
+                for t in tiers {
+                    let id = t
+                        .get("id")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("every fabric.tiers entry needs an \"id\"")
+                        })?
+                        .to_string();
+                    let kind = TierKind::parse(t.str_or("kind", "burst-buffer"))?;
+                    let write_bw = t.f64_or("bw", 1.0e9);
+                    let capacity = if let Some(gb) = t.get("capacity_gb").and_then(Json::as_f64)
+                    {
+                        (gb * (1u64 << 30) as f64) as u64
+                    } else {
+                        t.usize_or("capacity", (256u64 << 30) as usize) as u64
+                    };
+                    let mount = t
+                        .get("mount")
+                        .and_then(Json::as_str)
+                        .map(PathBuf::from);
+                    cfg.fabric.tiers.push(TierDef {
+                        id,
+                        kind,
+                        write_bw,
+                        capacity,
+                        mount,
+                    });
+                }
+            }
+        }
+        if let Some(p) = j.get("placement") {
+            cfg.placement.enabled = p.bool_or("enabled", cfg.placement.enabled);
+            cfg.placement.policy =
+                PlacementPolicy::parse(p.str_or("policy", cfg.placement.policy.name()))?;
+            cfg.placement.ewma_alpha = p.f64_or("ewma_alpha", cfg.placement.ewma_alpha);
+            cfg.placement.breaker_threshold =
+                p.usize_or("breaker_threshold", cfg.placement.breaker_threshold as usize)
+                    as u32;
+            cfg.placement.breaker_probe_after = p.usize_or(
+                "breaker_probe_after",
+                cfg.placement.breaker_probe_after as usize,
+            ) as u32;
+            cfg.placement.full_watermark =
+                p.f64_or("full_watermark", cfg.placement.full_watermark);
         }
         if let Some(a) = j.get("aggregation") {
             cfg.aggregation.enabled = a.bool_or("enabled", cfg.aggregation.enabled);
@@ -200,13 +260,105 @@ impl VelocConfig {
         {
             bail!("aggregation targets the burst buffer but fabric.with_burst_buffer is off");
         }
+        // Tier identity: duplicate ids or overlapping mounts would let
+        // the last definition silently win (two "tiers" backed by the
+        // same directory shadow each other's objects). Reject instead.
+        const RESERVED: [&str; 6] =
+            ["dram", "nvme", "ssd", "burst-buffer", "pfs", "kv-store"];
+        let mut seen_ids: Vec<&str> = Vec::new();
+        let mut mounts: Vec<(&str, &Path)> = Vec::new();
+        if let Some(dir) = &self.fabric.pfs_dir {
+            mounts.push(("pfs", dir.as_path()));
+        }
+        for def in &self.fabric.tiers {
+            if def.id.is_empty() {
+                bail!("fabric.tiers: empty tier id");
+            }
+            if RESERVED.contains(&def.id.as_str()) {
+                bail!(
+                    "fabric.tiers: id {:?} collides with a built-in tier \
+                     (reserved: {RESERVED:?})",
+                    def.id
+                );
+            }
+            if seen_ids.contains(&def.id.as_str()) {
+                bail!(
+                    "fabric.tiers: duplicate tier id {:?} — the last \
+                     definition would silently win",
+                    def.id
+                );
+            }
+            seen_ids.push(def.id.as_str());
+            def.spec()?; // shared-kind check
+            if def.write_bw <= 0.0 {
+                bail!("fabric.tiers {:?}: bw must be > 0", def.id);
+            }
+            if def.capacity == 0 {
+                bail!("fabric.tiers {:?}: capacity must be > 0", def.id);
+            }
+            if let Some(m) = &def.mount {
+                if m.as_os_str().is_empty() {
+                    bail!("fabric.tiers {:?}: empty mount path", def.id);
+                }
+                for (other_id, other) in &mounts {
+                    if paths_overlap(m, other) {
+                        bail!(
+                            "fabric.tiers {:?}: mount {} overlaps tier {:?} \
+                             mount {} — two tiers over one directory shadow \
+                             each other's objects",
+                            def.id,
+                            m.display(),
+                            other_id,
+                            other.display()
+                        );
+                    }
+                }
+                mounts.push((def.id.as_str(), m.as_path()));
+            }
+        }
+        self.placement.validate()?;
         self.delta.validate()?;
         Ok(())
     }
 
+    /// Parse a configuration file (see [`Self::from_json`]).
     pub fn from_file(path: &std::path::Path) -> Result<Self> {
         Self::from_json(&crate::util::json::load(path)?)
     }
+}
+
+/// Do two mount paths overlap — equal, or one a component-wise prefix of
+/// the other? (`/mnt/bb` vs `/mnt/bb/sub` overlap; `/mnt/bb` vs
+/// `/mnt/bb2` do not.) Paths are normalized lexically: `.` is dropped
+/// and `..` pops the previous component, so `/mnt/bb/../other` compares
+/// as `/mnt/other`.
+fn paths_overlap(a: &Path, b: &Path) -> bool {
+    let comps = |p: &Path| -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for c in p.components() {
+            match c {
+                Component::Normal(s) => out.push(s.to_string_lossy().into_owned()),
+                Component::RootDir => out.push("/".to_string()),
+                Component::ParentDir => match out.last().map(String::as_str) {
+                    // ".." never climbs above the root.
+                    Some("/") => {}
+                    // Nothing to pop (or only unresolved ".."s): keep the
+                    // ".." as a component — lexical normalization cannot
+                    // resolve it, but it must still distinguish "../data"
+                    // from "data".
+                    Some("..") | None => out.push("..".to_string()),
+                    Some(_) => {
+                        out.pop();
+                    }
+                },
+                Component::CurDir | Component::Prefix(_) => {}
+            }
+        }
+        out
+    };
+    let (ca, cb) = (comps(a), comps(b));
+    let n = ca.len().min(cb.len());
+    ca[..n] == cb[..n]
 }
 
 #[cfg(test)]
@@ -343,6 +495,118 @@ mod tests {
         // Disabled section with odd values still parses (not validated).
         let j = Json::parse(r#"{"delta": {"avg_chunk": 5000}}"#).unwrap();
         assert!(VelocConfig::from_json(&j).is_ok());
+    }
+
+    #[test]
+    fn placement_section_parsed() {
+        let j = Json::parse(
+            r#"{
+                "placement": {"enabled": true, "policy": "fastest-eligible",
+                              "ewma_alpha": 0.5, "breaker_threshold": 2,
+                              "breaker_probe_after": 4, "full_watermark": 0.8}
+            }"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert!(c.placement.enabled);
+        assert_eq!(c.placement.policy, PlacementPolicy::FastestEligible);
+        assert_eq!(c.placement.ewma_alpha, 0.5);
+        assert_eq!(c.placement.breaker_threshold, 2);
+        assert_eq!(c.placement.breaker_probe_after, 4);
+        assert_eq!(c.placement.full_watermark, 0.8);
+        // Bad policy / knob ranges rejected.
+        let j = Json::parse(r#"{"placement": {"policy": "psychic"}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"placement": {"ewma_alpha": 1.5}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"placement": {"full_watermark": 0.0}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn fabric_tiers_parsed() {
+        let j = Json::parse(
+            r#"{
+                "fabric": {"tiers": [
+                    {"id": "bb-a", "kind": "burst-buffer", "bw": 2e10,
+                     "capacity_gb": 0.5},
+                    {"id": "scratch", "kind": "pfs", "bw": 3e9,
+                     "capacity": 1073741824, "mount": "/tmp/veloc-scratch"}
+                ]}
+            }"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert_eq!(c.fabric.tiers.len(), 2);
+        assert_eq!(c.fabric.tiers[0].id, "bb-a");
+        assert_eq!(c.fabric.tiers[0].capacity, 1 << 29);
+        assert_eq!(c.fabric.tiers[1].kind, TierKind::Pfs);
+        assert_eq!(
+            c.fabric.tiers[1].mount.as_deref(),
+            Some(std::path::Path::new("/tmp/veloc-scratch"))
+        );
+        // Entries without an id are rejected.
+        let j = Json::parse(r#"{"fabric": {"tiers": [{"kind": "pfs"}]}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn duplicate_tier_ids_rejected() {
+        let def = |id: &str| TierDef {
+            id: id.to_string(),
+            kind: TierKind::BurstBuffer,
+            write_bw: 1e9,
+            capacity: 1 << 30,
+            mount: None,
+        };
+        let mut c = VelocConfig::default();
+        c.fabric.tiers = vec![def("bb-a"), def("bb-a")];
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("duplicate tier id"), "{err}");
+        // A custom id shadowing a built-in tier is just as silent a trap.
+        c.fabric.tiers = vec![def("pfs")];
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("built-in"), "{err}");
+        c.fabric.tiers = vec![def("bb-a"), def("bb-b")];
+        assert!(c.validate().is_ok());
+        // Node-local kinds cannot be declared as shared tiers.
+        let mut bad = def("local-ish");
+        bad.kind = TierKind::Ssd;
+        c.fabric.tiers = vec![bad];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn overlapping_tier_mounts_rejected() {
+        let def = |id: &str, mount: &str| TierDef {
+            id: id.to_string(),
+            kind: TierKind::BurstBuffer,
+            write_bw: 1e9,
+            capacity: 1 << 30,
+            mount: Some(PathBuf::from(mount)),
+        };
+        let mut c = VelocConfig::default();
+        // Identical mounts.
+        c.fabric.tiers = vec![def("a", "/mnt/bb"), def("b", "/mnt/bb")];
+        assert!(c.validate().is_err());
+        // Nested mounts.
+        c.fabric.tiers = vec![def("a", "/mnt/bb"), def("b", "/mnt/bb/sub")];
+        assert!(c.validate().is_err());
+        // Sibling mounts with a shared name prefix are fine (component
+        // comparison, not string prefix).
+        c.fabric.tiers = vec![def("a", "/mnt/bb"), def("b", "/mnt/bb2")];
+        assert!(c.validate().is_ok());
+        // A custom mount nested under the PFS directory is rejected too.
+        c.fabric.tiers = vec![def("a", "/scratch/pfs/inner")];
+        c.fabric.pfs_dir = Some(PathBuf::from("/scratch/pfs"));
+        assert!(c.validate().is_err());
+        // `..` components normalize before comparison: /mnt/bb/../other
+        // is /mnt/other — distinct from /mnt/bb, identical to /mnt/other.
+        c.fabric.pfs_dir = None;
+        c.fabric.tiers = vec![def("a", "/mnt/bb"), def("b", "/mnt/bb/../other")];
+        assert!(c.validate().is_ok());
+        c.fabric.tiers = vec![def("a", "/mnt/other"), def("b", "/mnt/bb/../other")];
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -72,6 +72,7 @@ pub struct VelocRuntime {
 }
 
 impl VelocRuntime {
+    /// Build a production runtime (no fault-injection instrumentation).
     pub fn new(config: VelocConfig) -> Result<Arc<Self>> {
         Self::new_with_hooks(config, SimHooks::default())
     }
@@ -123,6 +124,48 @@ impl VelocRuntime {
         };
 
         let metrics = Metrics::new();
+        // Adaptive tier placement: the candidate pool is every shared
+        // tier, ordered primary-first (the level-4 flush target leads, so
+        // the static policy reproduces the legacy routing). The KV tier
+        // joins the pool only when the KV *module* does not own it as its
+        // own resilience level.
+        let placement = if config.placement.enabled {
+            let primary: Arc<crate::storage::StorageTier> =
+                if config.aggregation.enabled
+                    && config.aggregation.target == crate::aggregation::AggTarget::BurstBuffer
+                {
+                    Arc::clone(fabric.burst_buffer().ok_or_else(|| {
+                        anyhow!("placement: aggregation targets the burst buffer but the fabric has none")
+                    })?)
+                } else {
+                    Arc::clone(fabric.pfs())
+                };
+            let mut pool = vec![Arc::clone(&primary)];
+            let kv_module_tier = if config.stack.with_kv {
+                fabric.kv().map(|t| t.id().to_string())
+            } else {
+                None
+            };
+            for t in fabric.shared_tiers() {
+                if t.id() == primary.id() {
+                    continue;
+                }
+                // Only the tier the KV *module* owns as its level-5
+                // repository is excluded; extra KV-kind tiers declared in
+                // fabric.tiers remain level-4 placement destinations.
+                if kv_module_tier.as_deref() == Some(t.id()) {
+                    continue;
+                }
+                pool.push(t);
+            }
+            Some(crate::storage::PlacementEngine::new(
+                pool,
+                config.placement.clone(),
+                Some(Arc::clone(&metrics)),
+            )?)
+        } else {
+            None
+        };
         // Incremental dedup state: chunker + per-node refcounted chunk
         // stores + manifest history (the delta pipeline stage and the
         // restore paths both reach it through the env).
@@ -136,13 +179,14 @@ impl VelocRuntime {
             None
         };
         let aggregator = if config.aggregation.enabled {
-            let agg = Aggregator::with_registry(
+            let agg = Aggregator::with_placement(
                 topology,
                 Arc::clone(&fabric),
                 config.aggregation.clone(),
                 Some(Arc::clone(&gate)),
                 Some(Arc::clone(&metrics)),
                 Some(Arc::clone(&registry)),
+                placement.clone(),
             );
             // Age-policy driver: a detached ticker drains groups whose
             // oldest segment exceeded max_delay even when no further
@@ -171,6 +215,7 @@ impl VelocRuntime {
             scheduler_gate: Some(gate),
             aggregator,
             delta,
+            placement,
         });
 
         // Mitigated policies run the active backend at low OS priority
@@ -216,30 +261,37 @@ impl VelocRuntime {
         }))
     }
 
+    /// The configuration the runtime was built from.
     pub fn config(&self) -> &VelocConfig {
         &self.config
     }
 
+    /// Cluster shape (nodes x ranks-per-node).
     pub fn topology(&self) -> Topology {
         self.topology
     }
 
+    /// The shared module environment (fabric, registry, hooks).
     pub fn env(&self) -> &Arc<Env> {
         &self.env
     }
 
+    /// Runtime-wide metrics registry.
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
     }
 
+    /// Application-utilization monitor feeding the predictive scheduler.
     pub fn monitor(&self) -> &Arc<UtilizationMonitor> {
         &self.monitor
     }
 
+    /// The active backend pool running async pipeline tails.
     pub fn backend(&self) -> &Arc<ThreadPool> {
         &self.backend
     }
 
+    /// Restart orchestration (level probing, validation, frontiers).
     pub fn recovery(&self) -> &Recovery {
         &self.recovery
     }
@@ -254,14 +306,22 @@ impl VelocRuntime {
         self.env.delta.as_ref()
     }
 
+    /// The adaptive tier-placement engine, when placement is enabled.
+    pub fn placement(&self) -> Option<&Arc<crate::storage::PlacementEngine>> {
+        self.env.placement.as_ref()
+    }
+
+    /// One rank's pipeline engine.
     pub fn engine(&self, rank: usize) -> &Arc<Engine> {
         &self.engines[rank]
     }
 
+    /// Every rank's engine, indexed by rank.
     pub fn engines(&self) -> &[Arc<Engine>] {
         &self.engines
     }
 
+    /// Per-rank liveness switch (failure injection kills, revive_all revives).
     pub fn kill_switch(&self) -> &KillSwitch {
         &self.kill
     }
@@ -338,24 +398,46 @@ impl VelocRuntime {
         }
     }
 
-    /// Cold restart: reload the persisted lineage of `name` from the PFS
-    /// into the (empty) in-process registry, so `restart()` can find the
-    /// PFS copies a previous process wrote. Returns false if no lineage
-    /// object exists. Requires a persistent PFS backing (`fabric.pfs_dir`)
-    /// to be meaningful across processes.
+    /// Cold restart: reload the persisted lineage of `name` into the
+    /// (empty) in-process registry, so `restart()` can find the shared
+    /// copies a previous process wrote. Every shared tier is probed and
+    /// every parseable copy merged — the lineage fails over to other
+    /// tiers when the PFS is unwritable, and records accumulate, so
+    /// merging a stale copy next to a fresh one is harmless. Returns
+    /// false if no lineage object exists anywhere. Requires a persistent
+    /// backing (e.g. `fabric.pfs_dir`) to be meaningful across processes.
     pub fn reload_lineage(&self, name: &str) -> Result<bool> {
-        let Some((data, _)) = self
-            .env
-            .fabric
-            .pfs()
-            .get(&format!("lineage.{name}.json"))
-        else {
-            return Ok(false);
-        };
-        let j = crate::util::json::Json::parse(std::str::from_utf8(&data)?)
-            .map_err(|e| anyhow!("lineage.{name}.json: {e}"))?;
-        self.env.registry.load_json(&j)?;
-        Ok(true)
+        let key = format!("lineage.{name}.json");
+        let mut loaded = false;
+        let mut first_err: Option<anyhow::Error> = None;
+        for tier in self.env.fabric.shared_tiers() {
+            let Some((data, _)) = tier.get(&key) else {
+                continue;
+            };
+            // A torn or corrupt copy on one tier (e.g. a writer that died
+            // mid-failover) must not abort the reload while another tier
+            // holds an intact one — but if *no* copy loads, the error must
+            // surface: "corrupt lineage" and "never checkpointed" are very
+            // different operator situations.
+            let parsed = std::str::from_utf8(&data)
+                .map_err(anyhow::Error::from)
+                .and_then(|text| {
+                    crate::util::json::Json::parse(text).map_err(|e| anyhow!("{e}"))
+                })
+                .and_then(|j| self.env.registry.load_json(&j));
+            match parsed {
+                Ok(()) => loaded = true,
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("{key} on {}: {e}", tier.id()));
+                    }
+                }
+            }
+        }
+        match (loaded, first_err) {
+            (false, Some(e)) => Err(e),
+            (l, _) => Ok(l),
+        }
     }
 }
 
@@ -368,6 +450,7 @@ pub struct VelocClient {
 }
 
 impl VelocClient {
+    /// The rank this client acts for.
     pub fn rank(&self) -> usize {
         self.rank
     }
@@ -389,6 +472,7 @@ impl VelocClient {
         self.regions.lock().unwrap().remove(&id);
     }
 
+    /// Total bytes currently under protection.
     pub fn protected_bytes(&self) -> u64 {
         self.regions
             .lock()
@@ -485,7 +569,10 @@ impl VelocClient {
 /// Outcome of a successful restart.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RestartInfo {
+    /// Restored checkpoint version.
     pub version: u64,
+    /// Resilience level that served the restore.
     pub level: u8,
+    /// Application iteration recorded in the checkpoint.
     pub iteration: u64,
 }

@@ -22,9 +22,13 @@ use anyhow::{anyhow, Result};
 /// for two distinct chunks to alias — negligible at checkpoint scale, and
 /// cheap enough to verify on every reassembly.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct Fingerprint(pub u128);
+pub struct Fingerprint(
+    /// Packed digest bits: crc32 (high 32) | payload length | FNV-1a64.
+    pub u128,
+);
 
 impl Fingerprint {
+    /// Fingerprint a chunk payload.
     pub fn of(data: &[u8]) -> Fingerprint {
         let crc = crc32fast::hash(data) as u128;
         let len = (data.len() as u32) as u128;
@@ -46,6 +50,7 @@ impl Fingerprint {
         format!("{:032x}", self.0)
     }
 
+    /// Parse the canonical hex spelling produced by [`Fingerprint::hex`].
     pub fn parse(s: &str) -> Result<Fingerprint> {
         u128::from_str_radix(s, 16)
             .map(Fingerprint)
@@ -105,6 +110,7 @@ impl Chunker {
         })
     }
 
+    /// The configured (min, avg, max) size triplet.
     pub fn sizes(&self) -> (usize, usize, usize) {
         (self.min, self.avg, self.max)
     }

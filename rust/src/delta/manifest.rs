@@ -27,27 +27,35 @@ use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeSet, HashMap};
 
+/// Delta container magic bytes.
 pub const VDLT_MAGIC: &[u8; 4] = b"VDLT";
+/// Delta container format version.
 pub const VDLT_VERSION: u32 = 1;
 
 /// One chunk reference inside a region recipe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkRef {
+    /// Chunk fingerprint (dedup-store key).
     pub fp: Fingerprint,
+    /// Chunk payload length in bytes.
     pub len: usize,
 }
 
 /// Chunk recipe of one protected region, in payload order.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RegionChunks {
+    /// Protected-region id.
     pub id: u32,
+    /// Ordered chunk references reconstructing the region.
     pub chunks: Vec<ChunkRef>,
 }
 
 /// The per-(name, rank, version) delta manifest.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct DeltaManifest {
+    /// Checkpoint name.
     pub name: String,
+    /// Originating rank.
     pub rank: usize,
     /// Pipeline version (storage-key component, drives the chain walk).
     pub version: u64,
@@ -81,10 +89,12 @@ impl DeltaManifest {
             .sum()
     }
 
+    /// Is this a full checkpoint (no base link)?
     pub fn is_full(&self) -> bool {
         self.base.is_none()
     }
 
+    /// Serialize for embedding into a VDLT container.
     pub fn to_json(&self) -> Json {
         let regions: Vec<Json> = self
             .regions
@@ -118,6 +128,7 @@ impl DeltaManifest {
         }
     }
 
+    /// Parse a manifest out of a VDLT container header.
     pub fn from_json(j: &Json) -> Result<DeltaManifest> {
         let mut regions = Vec::new();
         for r in j

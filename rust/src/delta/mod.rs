@@ -25,6 +25,19 @@
 //! capture swaps the context's encoded payload for the VDLT container, so
 //! every downstream level (local, partner, erasure, PFS flush — aggregated
 //! or direct — and the version registry) moves only novel bytes.
+//!
+//! ```
+//! use veloc::delta::{Chunker, Fingerprint};
+//!
+//! // Content-defined boundaries re-synchronize after an edit...
+//! let chunker = Chunker::new(64, 256, 1024).unwrap();
+//! let data = vec![42u8; 8 << 10];
+//! let chunks = chunker.split(&data);
+//! assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), data.len());
+//! // ...and fingerprints round-trip through their canonical spelling.
+//! let fp = Fingerprint::of(chunks[0]);
+//! assert_eq!(Fingerprint::parse(&fp.hex()).unwrap(), fp);
+//! ```
 
 pub mod chunker;
 pub mod manifest;

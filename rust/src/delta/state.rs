@@ -26,6 +26,9 @@ use std::sync::{Arc, Mutex};
 /// One (name, rank)'s manifest history: version -> manifest.
 type ManifestHistory = BTreeMap<u64, Arc<DeltaManifest>>;
 
+/// Runtime-wide incremental-dedup state: the chunker, one refcounted
+/// chunk store per node, and the manifest histories chain diffs and GC
+/// walk (see the [module docs](crate::delta)).
 pub struct DeltaState {
     cfg: DeltaConfig,
     chunker: Chunker,
@@ -37,6 +40,8 @@ pub struct DeltaState {
 }
 
 impl DeltaState {
+    /// Build the delta state over a fabric: validates the config and
+    /// places one chunk store on each node's largest local tier.
     pub fn new(
         cfg: DeltaConfig,
         fabric: &StorageFabric,
@@ -61,10 +66,12 @@ impl DeltaState {
         }))
     }
 
+    /// The delta knobs this state runs under.
     pub fn config(&self) -> &DeltaConfig {
         &self.cfg
     }
 
+    /// One node's chunk store.
     pub fn store(&self, node: usize) -> &Arc<ChunkStore> {
         &self.stores[node]
     }

@@ -66,9 +66,12 @@ struct StoreInner {
 pub struct PublishStat {
     /// Chunks whose payload was actually written (not already stored).
     pub novel_chunks: u64,
+    /// Bytes those novel chunks moved to the backing tier.
     pub novel_bytes: u64,
 }
 
+/// One node's refcounted, fingerprint-keyed chunk store (payloads live
+/// on a local tier; GC runs under a crash-replayable intent ledger).
 pub struct ChunkStore {
     tier: Arc<StorageTier>,
     node: usize,
@@ -78,6 +81,8 @@ pub struct ChunkStore {
 }
 
 impl ChunkStore {
+    /// Build a store over a backing tier, resuming any durable ledger
+    /// state (and replaying a pending GC intent) found there.
     pub fn new(
         tier: Arc<StorageTier>,
         node: usize,
@@ -104,10 +109,13 @@ impl ChunkStore {
         store
     }
 
+    /// The node this store belongs to.
     pub fn node(&self) -> usize {
         self.node
     }
 
+    /// Install (or clear) the fault hook — scenario-engine
+    /// instrumentation, never set in production.
     pub fn set_fault_hook(&self, hook: Option<DeltaFaultHook>) {
         *self.fault_hook.lock().unwrap() = hook;
     }
@@ -186,6 +194,7 @@ impl ChunkStore {
         inner.applied_seq = 0;
     }
 
+    /// Current reference count of a fingerprint (0 = absent).
     pub fn refcount(&self, fp: &Fingerprint) -> u64 {
         self.inner
             .lock()

@@ -22,19 +22,39 @@
 //!
 //! Python runs only at build time (`make artifacts`); the request path is
 //! pure Rust + PJRT.
+//!
+//! Architecture walkthroughs (layer map, checkpoint/restore data flow,
+//! the fault-injection catalog, per-level storage destinations) live in
+//! `docs/ARCHITECTURE.md`.
+
+// The public surfaces of `api`, `pipeline`, `aggregation`, `delta` and
+// `storage` are fully documented and doc-linted; the remaining modules
+// are tracked for later passes and opt out explicitly so `cargo doc`
+// stays clean under `-D warnings`.
+#![warn(missing_docs)]
 
 pub mod aggregation;
 pub mod api;
+#[allow(missing_docs)]
 pub mod app;
+#[allow(missing_docs)]
 pub mod cluster;
 pub mod delta;
+#[allow(missing_docs)]
 pub mod interval;
+#[allow(missing_docs)]
 pub mod metrics;
+#[allow(missing_docs)]
 pub mod modules;
 pub mod pipeline;
+#[allow(missing_docs)]
 pub mod recovery;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod scheduler;
+#[allow(missing_docs)]
 pub mod sim;
 pub mod storage;
+#[allow(missing_docs)]
 pub mod util;

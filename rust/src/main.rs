@@ -38,6 +38,11 @@ fn main() {
     .opt("agg-group-ranks", "0", "aggregation group size (0 = per node)")
     .opt("agg-flush-mb", "32", "aggregation size-threshold drain (MiB)")
     .opt("agg-target", "pfs", "aggregation drain tier: pfs | burst-buffer")
+    .opt(
+        "placement",
+        "",
+        "adaptive tier placement: static | fastest-eligible | capacity-aware",
+    )
     .flag("delta", "incremental dedup: move only novel chunks per checkpoint")
     .opt("delta-chunk-kb", "8", "delta: average chunk size (KiB, power of two)")
     .opt("delta-max-chain", "8", "delta: checkpoints between forced fulls")
@@ -86,6 +91,14 @@ fn config_from(cli: &Cli) -> Result<VelocConfig> {
             cfg.fabric.with_burst_buffer = true;
         }
     }
+    let placement = cli.get("placement");
+    if !placement.is_empty() {
+        cfg.placement.enabled = true;
+        cfg.placement.policy = veloc::storage::PlacementPolicy::parse(&placement)?;
+        // A one-tier pool routes trivially; provision the burst buffer so
+        // adaptive policies and failover have somewhere to go.
+        cfg.fabric.with_burst_buffer = true;
+    }
     if cli.get_bool("delta") {
         cfg.delta.enabled = true;
         let avg = cli.get_usize("delta-chunk-kb").max(1) << 10;
@@ -117,11 +130,35 @@ fn cmd_info(cli: &Cli) -> Result<()> {
             format_bytes(s.capacity)
         );
     }
-    let pfs = rt.env().fabric.pfs().spec();
-    println!(
-        "shared pfs: write {} (aggregate)",
-        format_throughput(pfs.write_bw as u64, std::time::Duration::from_secs(1))
-    );
+    println!("shared tiers:");
+    for t in rt.env().fabric.shared_tiers() {
+        let s = t.spec();
+        println!(
+            "  {:<14} write {:>12} (aggregate)  capacity {}",
+            s.id,
+            format_throughput(s.write_bw as u64, std::time::Duration::from_secs(1)),
+            format_bytes(s.capacity)
+        );
+    }
+    if let Some(p) = rt.placement() {
+        println!(
+            "placement: policy {} (alpha {}, breaker {} errors / probe {})",
+            p.config().policy.name(),
+            p.config().ewma_alpha,
+            p.config().breaker_threshold,
+            p.config().breaker_probe_after
+        );
+        for h in p.health_all() {
+            println!(
+                "  {:<14} mult {:.2}  breaker {}  routed {} puts / {}",
+                h.id,
+                h.multiplier,
+                if h.breaker_open { "open" } else { "closed" },
+                h.routed_puts,
+                format_bytes(h.routed_bytes)
+            );
+        }
+    }
     println!();
     print!("{}", rt.engine(0).describe());
     match &rt.env().pjrt {
@@ -212,6 +249,20 @@ fn cmd_run(cli: &Cli) -> Result<()> {
             r.segments_per_container(),
             format_bytes(r.mean_write_bytes() as u64),
             r.write_amplification()
+        );
+    }
+    if let Some(p) = rt.placement() {
+        let routed: Vec<String> = p
+            .health_all()
+            .iter()
+            .map(|h| format!("{} {}", h.id, format_bytes(h.routed_bytes)))
+            .collect();
+        println!(
+            "placement ({}): {} failovers, {} breaker trips, routed: {}",
+            p.config().policy.name(),
+            p.failover_count(),
+            p.breaker_trip_count(),
+            routed.join(", ")
         );
     }
     let m = rt.metrics();

@@ -110,6 +110,7 @@ mod tests {
             scheduler_gate: None,
             aggregator: None,
             delta: state,
+            placement: None,
         })
     }
 

@@ -149,6 +149,7 @@ mod tests {
             scheduler_gate: None,
             aggregator: None,
             delta: None,
+            placement: None,
         })
     }
 

@@ -64,6 +64,11 @@ pub struct Env {
     /// and every level moves thin delta containers; restore paths
     /// reassemble through the manifest chain (`crate::delta`).
     pub delta: Option<Arc<crate::delta::DeltaState>>,
+    /// When set, shared-tier flushes (direct level-4 transfers and
+    /// aggregated container drains) route through the adaptive placement
+    /// engine instead of writing straight to their configured tier
+    /// (`crate::storage::placement`).
+    pub placement: Option<Arc<crate::storage::PlacementEngine>>,
 }
 
 /// Configuration of the default module stack.
@@ -184,6 +189,7 @@ mod tests {
             scheduler_gate: None,
             aggregator: None,
             delta: None,
+            placement: None,
         })
     }
 

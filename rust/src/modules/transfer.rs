@@ -54,6 +54,30 @@ impl TransferModule {
         }
         (Arc::clone(&ctx.encoded), false)
     }
+
+    /// Find one version's level-4 object: the recorded placement
+    /// destination first, then a probe of the whole shared pool (the
+    /// object may have failed over anywhere), the legacy direct-PFS
+    /// location, and finally the aggregated containers.
+    fn fetch_level4(&self, name: &str, rank: usize, version: u64) -> Result<Option<Vec<u8>>> {
+        let key = crate::pipeline::storage_key("pfs", name, rank, version);
+        if let Some(p) = &self.env.placement {
+            let dest = self
+                .env
+                .registry
+                .info(name, version, rank)
+                .and_then(|i| i.dest);
+            if let Some((data, _, _)) = p.get_recorded(dest.as_deref(), &key) {
+                return Ok(Some(data));
+            }
+        } else if let Some((data, _)) = self.env.fabric.pfs().get(&key) {
+            return Ok(Some(data));
+        }
+        match &self.env.aggregator {
+            Some(agg) => agg.restore(name, version, rank),
+            None => Ok(None),
+        }
+    }
 }
 
 /// Sniff the payload encoding: raw VCKP / VDLT delta containers pass
@@ -107,7 +131,6 @@ impl Module for TransferModule {
             }
             return Ok(Outcome::Done);
         }
-        let pfs = self.env.fabric.pfs();
         let key = ctx.key("pfs");
         // Pace the flush chunk by chunk under the scheduler gate (priority
         // throttling / predicted-idle pausing), then publish the object in
@@ -127,7 +150,20 @@ impl Module for TransferModule {
                 off += self.chunk;
             }
         }
-        let stat = pfs.put_shared(&key, &data)?;
+        // Adaptive placement: route to the best eligible shared tier
+        // (failing over past down/read-only/full ones) and record where
+        // the object actually landed so restores can find it. Without
+        // placement the object goes straight to the PFS, as ever.
+        let stat = match &self.env.placement {
+            Some(p) => {
+                let (dest, stat) = p.put(&key, &data)?;
+                self.env
+                    .registry
+                    .set_destination(&ctx.name, ctx.version, ctx.rank, &dest);
+                stat
+            }
+            None => self.env.fabric.pfs().put_shared(&key, &data)?,
+        };
         ctx.record(self.name(), LEVEL_PFS, t0.elapsed().max(stat.modeled), stat.bytes);
         Ok(Outcome::Done)
     }
@@ -136,32 +172,18 @@ impl Module for TransferModule {
         let Some(version) = ctx.version else {
             return Ok(None);
         };
-        // Primary lookup: the file-per-rank object first, then the
-        // aggregated containers (index lookup with persisted-index and
-        // header-rebuild fallbacks). Aggregator errors propagate here —
-        // a corrupt level-4 copy must surface, not read as "no copy".
-        let key = crate::pipeline::storage_key("pfs", &ctx.name, ctx.rank, version);
-        let primary = match self.env.fabric.pfs().get(&key) {
-            Some((data, _)) => Some(data),
-            None => match &self.env.aggregator {
-                Some(agg) => agg.restore(&ctx.name, version, ctx.rank)?,
-                None => None,
-            },
-        };
-        let Some(data) = primary else {
+        // Primary lookup: the file-per-rank object first (wherever
+        // placement landed it), then the aggregated containers (index
+        // lookup with persisted-index and header-rebuild fallbacks).
+        // Aggregator errors propagate here — a corrupt level-4 copy must
+        // surface, not read as "no copy".
+        let Some(data) = self.fetch_level4(&ctx.name, ctx.rank, version)? else {
             return Ok(None);
         };
         // Chain-ancestor fetches use miss semantics (a miss legitimately
         // means "chain broken"; materialize reports it).
         let fetch_at = |v: u64| -> Option<Vec<u8>> {
-            let akey = crate::pipeline::storage_key("pfs", &ctx.name, ctx.rank, v);
-            if let Some((d, _)) = self.env.fabric.pfs().get(&akey) {
-                return Some(d);
-            }
-            self.env
-                .aggregator
-                .as_ref()
-                .and_then(|agg| agg.restore(&ctx.name, v, ctx.rank).ok().flatten())
+            self.fetch_level4(&ctx.name, ctx.rank, v).ok().flatten()
         };
         let store = self.env.delta.as_ref().map(|d| d.store(ctx.node).as_ref());
         Ok(Some(crate::delta::materialize(data, store, &fetch_at)?))
@@ -194,6 +216,7 @@ mod tests {
             scheduler_gate: None,
             aggregator: None,
             delta: None,
+            placement: None,
         })
     }
 
@@ -225,6 +248,59 @@ mod tests {
             );
         }
         // And the flushed object restores.
+        let rc = RestoreContext {
+            name: "t".to_string(),
+            rank: 0,
+            node: 0,
+            version: Some(1),
+        };
+        let restored = t.restore(&rc).unwrap().unwrap();
+        assert_eq!(restored.region(0).unwrap().data, vec![9u8; 8 << 10]);
+    }
+
+    /// Placement path: a read-only primary makes the flush fail over to
+    /// the burst buffer, the destination is recorded in the registry, and
+    /// the restore finds the object although the PFS never stored it.
+    #[test]
+    fn placement_failover_records_destination_and_restores() {
+        use crate::storage::{PlacementConfig, PlacementEngine};
+        let fabric = Arc::new(
+            StorageFabric::build(&FabricConfig {
+                nodes: 2,
+                with_burst_buffer: true,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let placement = PlacementEngine::new(
+            fabric.shared_tiers(),
+            PlacementConfig {
+                enabled: true,
+                ..Default::default()
+            },
+            None,
+        )
+        .unwrap();
+        let env = Arc::new(Env {
+            topology: Topology::new(2, 1),
+            fabric: Arc::clone(&fabric),
+            pjrt: None,
+            registry: VersionRegistry::new(),
+            scheduler_gate: None,
+            aggregator: None,
+            delta: None,
+            placement: Some(placement),
+        });
+        fabric.pfs().set_read_only(true);
+        let t = TransferModule::new(Arc::clone(&env), 4096);
+        let mut c = ctx();
+        t.process(&mut c).unwrap();
+        assert_eq!(
+            env.registry.info("t", 1, 0).unwrap().dest.as_deref(),
+            Some("burst-buffer")
+        );
+        assert!(!fabric.pfs().exists("pfs.t.r0.v1"));
+        assert!(fabric.burst_buffer().unwrap().exists("pfs.t.r0.v1"));
         let rc = RestoreContext {
             name: "t".to_string(),
             rank: 0,

@@ -23,6 +23,10 @@ pub struct VersionInfo {
     pub encoding: String,
     /// Integrity checksum of the encoded container (crc32 or kernel).
     pub checksum: Option<u32>,
+    /// Shared tier that actually stored the level-4 copy when adaptive
+    /// placement routed it (None = the static default target). Restores
+    /// probe this tier first, then fall back to the whole shared pool.
+    pub dest: Option<String>,
 }
 
 #[derive(Default)]
@@ -96,6 +100,21 @@ impl VersionRegistry {
         if info.encoding.is_empty() {
             info.encoding = encoding.to_string();
         }
+    }
+
+    /// Record which shared tier a level-4 flush actually landed on (the
+    /// placement engine's failover/adaptive choice). Restores consult it
+    /// via [`VersionInfo::dest`].
+    pub fn set_destination(&self, name: &str, version: u64, rank: usize, tier_id: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.entries
+            .entry(name.to_string())
+            .or_default()
+            .entry(version)
+            .or_default()
+            .entry(rank)
+            .or_default()
+            .dest = Some(tier_id.to_string());
     }
 
     pub fn set_checksum(&self, name: &str, version: u64, rank: usize, crc: u32) {
@@ -204,6 +223,9 @@ impl VersionRegistry {
                 if let Some(c) = r.get("checksum").and_then(Json::as_u64) {
                     self.set_checksum(name, version, rank, c as u32);
                 }
+                if let Some(d) = r.get("dest").and_then(Json::as_str) {
+                    self.set_destination(name, version, rank, d);
+                }
             }
         }
         Ok(())
@@ -231,6 +253,9 @@ impl VersionRegistry {
                         .set("encoding", info.encoding.as_str());
                     if let Some(c) = info.checksum {
                         entry = entry.set("checksum", c as u64);
+                    }
+                    if let Some(d) = &info.dest {
+                        entry = entry.set("dest", d.as_str());
                     }
                     rank_arr.push(entry);
                 }
@@ -353,7 +378,12 @@ impl VersionModule {
                 tier.delete(&format!("partner.{suffix}"));
             }
         }
-        self.fabric.pfs().delete(&format!("pfs.{suffix}"));
+        // Level-4 objects keep their "pfs." key prefix wherever placement
+        // landed them, so GC sweeps the whole shared pool (deletes are
+        // bookkeeping and work even on down/read-only tiers).
+        for tier in self.fabric.shared_tiers() {
+            tier.delete(&format!("pfs.{suffix}"));
+        }
         if let Some(kv) = self.fabric.kv() {
             kv.delete(&format!("kv.{suffix}"));
         }
@@ -398,15 +428,40 @@ impl Module for VersionModule {
         for v in self.safe_gc_candidates(&ctx.name) {
             self.delete_version_keys(&ctx.name, ctx.rank, ctx.node, v);
         }
-        // Persist the lineage to the PFS (DataStates, paper [2]): small
-        // JSON, last-writer-wins; every rank's view converges as the
-        // pipeline tails complete. A cold restart reloads it via
+        // Persist the lineage (DataStates, paper [2]): small JSON,
+        // last-writer-wins; every rank's view converges as the pipeline
+        // tails complete. A cold restart reloads it via
         // `VersionRegistry::load_json` / `VelocRuntime::reload_lineage`.
+        // The PFS is the home, but the lineage now carries placement
+        // destinations — during a PFS outage it must fail over to another
+        // shared tier like the data it describes, or a cold restart could
+        // not find the failed-over checkpoints (reload_lineage probes and
+        // merges every shared tier's copy).
         let lineage = self.registry.to_json(&ctx.name).to_string();
-        let _ = self
-            .fabric
-            .pfs()
-            .put(&format!("lineage.{}.json", ctx.name), lineage.as_bytes());
+        let key = format!("lineage.{}.json", ctx.name);
+        let tiers = self.fabric.shared_tiers();
+        let mut wrote: Option<String> = None;
+        for tier in &tiers {
+            if tier.put(&key, lineage.as_bytes()).is_ok() {
+                wrote = Some(tier.id().to_string());
+                break;
+            }
+        }
+        // Scrub stale failover copies (best effort) — but only after a
+        // successful *primary* write, and never the primary copy itself.
+        // Ranks write concurrently: if a failed-over rank could delete
+        // the primary copy (or a primary-writing rank delete a
+        // failed-over one racing it), an unlucky interleaving would leave
+        // zero lineage copies anywhere. With this rule the primary copy
+        // is never deleted, so at least the latest successful primary
+        // write always survives; failover copies linger only until the
+        // primary is writable again (and merging a stale copy is benign —
+        // records accumulate).
+        if wrote.as_deref() == tiers.first().map(|t| t.id()) {
+            for tier in tiers.iter().skip(1) {
+                tier.delete(&key);
+            }
+        }
         Ok(Outcome::Done)
     }
 
@@ -469,5 +524,24 @@ mod tests {
         assert_eq!(j.str_or("name", ""), "a");
         let v = j.get("versions").unwrap().idx(0).unwrap();
         assert_eq!(v.usize_or("version", 0), 7);
+    }
+
+    #[test]
+    fn destination_recorded_and_survives_lineage_roundtrip() {
+        let r = VersionRegistry::new();
+        r.record_level("a", 1, 0, 4, 10, "raw");
+        r.set_destination("a", 1, 0, "burst-buffer");
+        assert_eq!(
+            r.info("a", 1, 0).unwrap().dest.as_deref(),
+            Some("burst-buffer")
+        );
+        // Cold restart: a fresh registry rehydrated from the lineage JSON
+        // must still know where the flush landed.
+        let fresh = VersionRegistry::new();
+        fresh.load_json(&r.to_json("a")).unwrap();
+        assert_eq!(
+            fresh.info("a", 1, 0).unwrap().dest.as_deref(),
+            Some("burst-buffer")
+        );
     }
 }

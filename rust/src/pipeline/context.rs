@@ -4,11 +4,15 @@ use crate::util::bytes::Checkpoint;
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Resilience level identifiers (paper §2's multi-level hierarchy).
+/// Level 1: node-local capture (paper §2's multi-level hierarchy).
 pub const LEVEL_LOCAL: u8 = 1;
+/// Level 2: partner replica on another node.
 pub const LEVEL_PARTNER: u8 = 2;
+/// Level 3: XOR erasure parity across a group.
 pub const LEVEL_ERASURE: u8 = 3;
+/// Level 4: shared-tier flush (PFS, or wherever placement routed it).
 pub const LEVEL_PFS: u8 = 4;
+/// Level 5: key-value repository copy.
 pub const LEVEL_KV: u8 = 5;
 
 /// Canonical storage key for one rank's copy of one version at a level
@@ -19,6 +23,7 @@ pub fn storage_key(prefix: &str, name: &str, rank: usize, version: u64) -> Strin
     format!("{prefix}.{name}.r{rank}.v{version}")
 }
 
+/// Human-readable name of a resilience level.
 pub fn level_name(level: u8) -> &'static str {
     match level {
         LEVEL_LOCAL => "local",
@@ -43,9 +48,13 @@ pub enum Outcome {
 /// Record of one completed pipeline stage.
 #[derive(Clone, Debug)]
 pub struct LevelResult {
+    /// Module that ran.
     pub module: String,
+    /// Resilience level it completed (0 = none).
     pub level: u8,
+    /// Wall/modeled duration charged to the stage.
     pub duration: Duration,
+    /// Bytes the stage moved.
     pub bytes: u64,
 }
 
@@ -53,7 +62,9 @@ pub struct LevelResult {
 pub struct CkptContext {
     /// Application-chosen checkpoint name.
     pub name: String,
+    /// Originating rank.
     pub rank: usize,
+    /// Node hosting that rank.
     pub node: usize,
     /// Monotonic version.
     pub version: u64,
@@ -69,6 +80,7 @@ pub struct CkptContext {
 }
 
 impl CkptContext {
+    /// Wrap a freshly captured checkpoint into a pipeline command.
     pub fn new(
         name: &str,
         rank: usize,
@@ -94,6 +106,7 @@ impl CkptContext {
         storage_key(prefix, &self.name, self.rank, self.version)
     }
 
+    /// Record one completed stage.
     pub fn record(&mut self, module: &str, level: u8, duration: Duration, bytes: u64) {
         self.results.push(LevelResult {
             module: module.to_string(),
@@ -111,8 +124,11 @@ impl CkptContext {
 
 /// A restart command: probe levels for the freshest recoverable version.
 pub struct RestoreContext {
+    /// Checkpoint name to restore.
     pub name: String,
+    /// Requesting rank.
     pub rank: usize,
+    /// Node hosting that rank.
     pub node: usize,
     /// Specific version to restore, or None = latest available.
     pub version: Option<u64>,

@@ -35,9 +35,11 @@ pub trait BoundaryHook: Send + Sync {
 /// Completion state of one (rank, name, version) checkpoint command.
 #[derive(Clone, Debug, PartialEq)]
 pub enum CkptStatus {
+    /// Still travelling the pipeline (async tail not settled).
     InFlight,
     /// Highest resilience level achieved.
     Done(u8),
+    /// The pipeline failed (or its rank died) with this message.
     Failed(String),
 }
 
@@ -97,6 +99,8 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine over a module stack (sorted by priority). Async
+    /// mode requires the shared active-backend pool.
     pub fn new(
         mut modules: Vec<Arc<dyn Module>>,
         mode: EngineMode,
@@ -116,6 +120,7 @@ impl Engine {
         })
     }
 
+    /// Set the backend priority async tails run at.
     pub fn with_background_priority(mut self, p: Priority) -> Self {
         self.background_priority = p;
         self
@@ -127,14 +132,17 @@ impl Engine {
         self
     }
 
+    /// Sync or async execution.
     pub fn mode(&self) -> EngineMode {
         self.mode
     }
 
+    /// The stack, in pipeline order.
     pub fn modules(&self) -> &[Arc<dyn Module>] {
         &self.modules
     }
 
+    /// Find a module by its stable name.
     pub fn module_named(&self, name: &str) -> Option<&Arc<dyn Module>> {
         self.modules.iter().find(|m| m.name() == name)
     }

@@ -42,6 +42,7 @@ pub trait Module: Send + Sync {
     /// needed using a simple switch").
     fn switch(&self) -> &ModuleSwitch;
 
+    /// Convenience: is the module's switch on?
     fn is_enabled(&self) -> bool {
         self.switch().enabled()
     }
@@ -54,16 +55,19 @@ pub struct ModuleSwitch {
 }
 
 impl ModuleSwitch {
+    /// A switch in the given initial state.
     pub fn new(enabled: bool) -> Self {
         ModuleSwitch {
             disabled: AtomicBool::new(!enabled),
         }
     }
 
+    /// Is the module currently enabled?
     pub fn enabled(&self) -> bool {
         !self.disabled.load(Ordering::SeqCst)
     }
 
+    /// Enable or disable the module at runtime.
     pub fn set(&self, enabled: bool) {
         self.disabled.store(!enabled, Ordering::SeqCst);
     }

@@ -280,6 +280,25 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
             }
         }
         let version = pairs[0].1.iteration;
+        // Tier degradation arms before the *penultimate* wave: adaptive
+        // placement needs one wave of flushes to observe the slowdown
+        // before the final wave can route away from it.
+        if wave + 1 == spec.waves {
+            if let InjectionPoint::TierDegraded(tier, factor) = &spec.inject {
+                let t = rt
+                    .env()
+                    .fabric
+                    .shared_tier(tier)
+                    .ok_or_else(|| anyhow!("tier-degraded: unknown tier {tier}"))?;
+                t.set_degraded(*factor as f64);
+                trace.push(
+                    Json::obj()
+                        .set("ev", "tier-degraded")
+                        .set("tier", tier.as_str())
+                        .set("factor", *factor as u64),
+                );
+            }
+        }
         if wave == spec.waves {
             // Arm the injection for the final wave.
             match &spec.inject {
@@ -301,9 +320,25 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
                         armed.store(true, Ordering::SeqCst);
                     }
                 }
+                InjectionPoint::TierOutage(tier) => {
+                    // The shared tier drops off right before the final
+                    // wave's flushes: placement must fail them over.
+                    let t = rt
+                        .env()
+                        .fabric
+                        .shared_tier(tier)
+                        .ok_or_else(|| anyhow!("tier-outage: unknown tier {tier}"))?;
+                    t.set_down(true);
+                    trace.push(
+                        Json::obj()
+                            .set("ev", "tier-outage")
+                            .set("tier", tier.as_str()),
+                    );
+                }
                 InjectionPoint::AfterCheckpoint
                 | InjectionPoint::MidRestart(_)
-                | InjectionPoint::DeltaChainBreak(_) => {}
+                | InjectionPoint::DeltaChainBreak(_)
+                | InjectionPoint::TierDegraded(_, _) => {}
             }
         }
         shadows.insert(version, pairs.iter().map(|(_, a)| a.snapshot()).collect());
@@ -533,6 +568,44 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
                 }
             }
         }
+    }
+
+    // Tier-injection scenarios additionally assert the placement engine
+    // did what the checkpoint outcome depends on: outages produce real
+    // failovers, degradations produce real re-routing. (Both scenarios
+    // already proved bit-for-bit restores above — these checks pin the
+    // mechanism, not just the outcome.)
+    match &spec.inject {
+        InjectionPoint::TierOutage(tier) => {
+            let failovers = rt.metrics().counter("placement.failovers");
+            ensure!(
+                failovers >= 1,
+                "tier {tier} outage produced no placement failover"
+            );
+            let routed_down = rt
+                .metrics()
+                .counter(&format!("placement.routed.puts.{tier}"));
+            let total: u64 = rt
+                .placement()
+                .map(|p| p.health_all().iter().map(|h| h.routed_puts).sum::<u64>())
+                .unwrap_or(0);
+            ensure!(
+                total > routed_down,
+                "every flush still claims the down tier {tier}"
+            );
+        }
+        InjectionPoint::TierDegraded(tier, _) => {
+            let fallback = if tier == "pfs" { "burst-buffer" } else { "pfs" };
+            let routed = rt
+                .metrics()
+                .counter(&format!("placement.routed.puts.{fallback}"));
+            ensure!(
+                routed >= world as u64,
+                "adaptive placement never routed the final wave off the \
+                 degraded tier {tier} (fallback {fallback} served {routed} puts)"
+            );
+        }
+        _ => {}
     }
 
     let index_rebuilds = rt.metrics().counter("agg.index.rebuilds");

@@ -136,6 +136,16 @@ pub enum InjectionPoint {
     /// ledger replay must finish the GC exactly once and leave every
     /// retained version restorable.
     DeltaGcCrash,
+    /// The named shared tier goes offline right before the final
+    /// checkpoint wave: placement must fail the level-4 flushes over to
+    /// the next-best tier, and — after the node failure lands — restores
+    /// must locate the checkpoints wherever they landed. The tier stays
+    /// down through the restore (an outage is not fixed by restarting).
+    TierOutage(String),
+    /// The named shared tier degrades (modeled service times multiplied)
+    /// right before the *penultimate* wave: adaptive placement observes
+    /// the slowdown and routes the final wave's flushes elsewhere.
+    TierDegraded(String, u32),
 }
 
 impl InjectionPoint {
@@ -148,6 +158,8 @@ impl InjectionPoint {
             InjectionPoint::MidRestart(k) => format!("mid-restart:{k}"),
             InjectionPoint::DeltaChainBreak(b) => format!("delta-chain-break:{b}"),
             InjectionPoint::DeltaGcCrash => "delta-gc-crash".to_string(),
+            InjectionPoint::TierOutage(t) => format!("tier-outage:{t}"),
+            InjectionPoint::TierDegraded(t, f) => format!("tier-degraded:{t}x{f}"),
         }
     }
 
@@ -170,6 +182,13 @@ impl InjectionPoint {
                 .set("point", "delta-chain-break")
                 .set("back", *b),
             InjectionPoint::DeltaGcCrash => Json::obj().set("point", "delta-gc-crash"),
+            InjectionPoint::TierOutage(t) => Json::obj()
+                .set("point", "tier-outage")
+                .set("tier", t.as_str()),
+            InjectionPoint::TierDegraded(t, f) => Json::obj()
+                .set("point", "tier-degraded")
+                .set("tier", t.as_str())
+                .set("factor", *f as u64),
         }
     }
 
@@ -187,6 +206,19 @@ impl InjectionPoint {
             "mid-restart" => Ok(InjectionPoint::MidRestart(j.usize_or("after_ranks", 1))),
             "delta-chain-break" => Ok(InjectionPoint::DeltaChainBreak(j.usize_or("back", 1))),
             "delta-gc-crash" => Ok(InjectionPoint::DeltaGcCrash),
+            "tier-outage" => Ok(InjectionPoint::TierOutage(
+                j.get("tier")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("tier-outage needs a \"tier\""))?
+                    .to_string(),
+            )),
+            "tier-degraded" => Ok(InjectionPoint::TierDegraded(
+                j.get("tier")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("tier-degraded needs a \"tier\""))?
+                    .to_string(),
+                j.usize_or("factor", 16) as u32,
+            )),
             other => bail!("unknown injection point {other}"),
         }
     }
@@ -220,6 +252,11 @@ pub struct ScenarioSpec {
     /// Incremental deduplicated checkpointing (content-defined chunking,
     /// delta manifests, chains of [`DELTA_MAX_CHAIN`]).
     pub delta: bool,
+    /// Adaptive tier placement policy (`static` / `fastest-eligible` /
+    /// `capacity-aware`); None runs the legacy fixed-target routing.
+    /// Placement scenarios provision the burst buffer so failover and
+    /// adaptive routing have somewhere to go.
+    pub placement: Option<String>,
     /// Checkpoint waves taken before the failure.
     pub waves: u64,
     /// Application steps between checkpoints (version = step count).
@@ -285,6 +322,12 @@ impl ScenarioSpec {
         cfg.aggregation.enabled = self.aggregation;
         cfg.aggregation.drain_chunk = 4096;
         cfg.aggregation.max_delay = Duration::from_secs(120);
+        if let Some(policy) = &self.placement {
+            cfg.placement.enabled = true;
+            cfg.placement.policy = crate::storage::PlacementPolicy::parse(policy)
+                .expect("validate() checked the policy spelling");
+            cfg.fabric.with_burst_buffer = true;
+        }
         if self.delta {
             cfg.delta.enabled = true;
             // Region sizes are a few KiB: chunk small so one region spans
@@ -311,7 +354,7 @@ impl ScenarioSpec {
         // The seed serializes as a string: Json numbers are f64-backed and
         // would silently round seeds above 2^53, breaking the exact-repro
         // guarantee.
-        Json::obj()
+        let j = Json::obj()
             .set("seed", self.seed.to_string())
             .set("nodes", self.nodes)
             .set("ranks_per_node", self.ranks_per_node)
@@ -332,13 +375,23 @@ impl ScenarioSpec {
             .set("partner", self.with_partner)
             .set("erasure_group", self.erasure_group)
             .set("aggregation", self.aggregation)
-            .set("delta", self.delta)
-            .set("waves", self.waves)
+            .set("delta", self.delta);
+        let j = match &self.placement {
+            Some(p) => j.set("placement", p.as_str()),
+            None => j,
+        };
+        j.set("waves", self.waves)
             .set("steps_per_wave", self.steps_per_wave)
             .set("regions", self.regions)
             .set("region_bytes", self.region_bytes)
             .set("scope", self.scope.to_json())
             .set("inject", self.inject.to_json())
+    }
+
+    fn placement_from_json(j: &Json) -> Option<String> {
+        j.get("placement")
+            .and_then(Json::as_str)
+            .map(str::to_string)
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -369,6 +422,7 @@ impl ScenarioSpec {
             erasure_group: j.usize_or("erasure_group", 0),
             aggregation: j.bool_or("aggregation", false),
             delta: j.bool_or("delta", false),
+            placement: Self::placement_from_json(j),
             waves: j.get("waves").and_then(Json::as_u64).unwrap_or(3),
             steps_per_wave: j.get("steps_per_wave").and_then(Json::as_u64).unwrap_or(2),
             regions: j.usize_or("regions", 2),
@@ -420,6 +474,16 @@ impl ScenarioSpec {
                  cover chain restores through group rebuilds (the module path \
                  itself is covered by integration tests)"
             );
+        }
+        if let Some(policy) = &self.placement {
+            crate::storage::PlacementPolicy::parse(policy)?;
+            if self.delta {
+                bail!(
+                    "placement scenarios exclude delta: the chain model is \
+                     kept to the tested envelope (the placement restore path \
+                     itself is tier-agnostic and covered by module tests)"
+                );
+            }
         }
         match &self.inject {
             InjectionPoint::AfterCheckpoint => {}
@@ -497,6 +561,48 @@ impl ScenarioSpec {
                     );
                 }
             }
+            InjectionPoint::TierOutage(tier) => {
+                if self.placement.is_none() {
+                    bail!("tier-outage requires a placement policy");
+                }
+                if !["pfs", "burst-buffer"].contains(&tier.as_str()) {
+                    bail!(
+                        "tier-outage tier must be pfs|burst-buffer (the tiers \
+                         placement scenarios provision), got {tier}"
+                    );
+                }
+                if self.scope.kind == ScopeKind::System {
+                    bail!(
+                        "tier-outage under a system failure proves nothing: \
+                         the burst-buffer fallback is wiped with the system"
+                    );
+                }
+            }
+            InjectionPoint::TierDegraded(tier, factor) => {
+                match self.placement.as_deref() {
+                    None => bail!("tier-degraded requires a placement policy"),
+                    Some("static") => bail!(
+                        "tier-degraded needs an adaptive policy \
+                         (fastest-eligible or capacity-aware): static \
+                         routing never reacts to observed slowdowns"
+                    ),
+                    Some(_) => {}
+                }
+                if !["pfs", "burst-buffer"].contains(&tier.as_str()) {
+                    bail!(
+                        "tier-degraded tier must be pfs|burst-buffer, got {tier}"
+                    );
+                }
+                if *factor < 2 {
+                    bail!("tier-degraded factor must be >= 2, got {factor}");
+                }
+                if self.waves < 3 {
+                    bail!(
+                        "tier-degraded needs >= 3 waves: one clean wave, one \
+                         wave observing the slowdown, one wave routed away"
+                    );
+                }
+            }
             InjectionPoint::DeltaGcCrash => {
                 if !self.delta {
                     bail!("delta-gc-crash requires delta");
@@ -541,6 +647,7 @@ pub fn base_spec(seed: u64) -> ScenarioSpec {
         erasure_group: 4,
         aggregation: false,
         delta: false,
+        placement: None,
         waves: 3,
         steps_per_wave: 2,
         regions: 2,
@@ -555,8 +662,8 @@ pub fn base_spec(seed: u64) -> ScenarioSpec {
 
 /// The standard sweep: module-stack permutations (sync/async engine, XOR
 /// partner vs erasure group sizes, aggregation on/off, delta on/off, tier
-/// policies) crossed with every injection-point family. 35 scenarios;
-/// each is an independent one-line repro.
+/// policies, placement policies) crossed with every injection-point
+/// family. 39 scenarios; each is an independent one-line repro.
 pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
     let s = |i: u64| base_seed.wrapping_add(i.wrapping_mul(7919));
     let scope = |kind: ScopeKind| ScopeSpec { kind, target: None };
@@ -669,6 +776,51 @@ pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
     // Delta + aggregation: manifests and novel chunks ride in VAGG
     // containers; chain restores read back through the segment index.
     specs.push(ScenarioSpec { seed: s(35), aggregation: true, scope: scope(ScopeKind::Node), ..s7.clone() });
+
+    // Stack 8: adaptive tier placement over pfs + burst buffer (no
+    // partner/erasure, so victims must restore from wherever the level-4
+    // flush landed).
+    let s8 = ScenarioSpec {
+        with_partner: false,
+        erasure_group: 0,
+        placement: Some("static".to_string()),
+        ..base_spec(0)
+    };
+    // Primary outage mid-run: the final wave's direct flushes fail over
+    // to the burst buffer; restores find them there (the pfs stays down).
+    specs.push(ScenarioSpec {
+        seed: s(36),
+        scope: scope(ScopeKind::Node),
+        inject: InjectionPoint::TierOutage("pfs".to_string()),
+        ..s8.clone()
+    });
+    // Same outage under aggregation: whole containers fail over and the
+    // segment index records the destination tier.
+    specs.push(ScenarioSpec {
+        seed: s(37),
+        aggregation: true,
+        scope: scope(ScopeKind::Node),
+        inject: InjectionPoint::TierOutage("pfs".to_string()),
+        ..s8.clone()
+    });
+    // Degraded-tier adaptation: fastest-eligible starts on the burst
+    // buffer, observes the slowdown, and routes the final wave to the pfs.
+    specs.push(ScenarioSpec {
+        seed: s(38),
+        placement: Some("fastest-eligible".to_string()),
+        waves: 4,
+        scope: scope(ScopeKind::Node),
+        inject: InjectionPoint::TierDegraded("burst-buffer".to_string(), 32),
+        ..s8.clone()
+    });
+    // Capacity-aware placement under a plain node failure: routing spread
+    // across the pool must not cost any recoverability.
+    specs.push(ScenarioSpec {
+        seed: s(39),
+        placement: Some("capacity-aware".to_string()),
+        scope: scope(ScopeKind::Node),
+        ..s8.clone()
+    });
 
     specs
 }
@@ -789,6 +941,48 @@ mod tests {
         ok.waves = 5;
         ok.scope = ScopeSpec { kind: ScopeKind::Rank, target: Some(0) };
         ok.validate().unwrap();
+    }
+
+    #[test]
+    fn tier_injection_specs_validated() {
+        let placement_base = ScenarioSpec {
+            with_partner: false,
+            erasure_group: 0,
+            placement: Some("static".to_string()),
+            ..base_spec(1)
+        };
+        placement_base.validate().unwrap();
+        // Tier injections require placement.
+        let mut bad = base_spec(1);
+        bad.inject = InjectionPoint::TierOutage("pfs".to_string());
+        assert!(bad.validate().is_err());
+        // Unknown tier id.
+        let mut bad = placement_base.clone();
+        bad.inject = InjectionPoint::TierOutage("floppy".to_string());
+        assert!(bad.validate().is_err());
+        // System scope wipes the fallback: rejected.
+        let mut bad = placement_base.clone();
+        bad.scope = ScopeSpec { kind: ScopeKind::System, target: None };
+        bad.inject = InjectionPoint::TierOutage("pfs".to_string());
+        assert!(bad.validate().is_err());
+        // Degradation needs an adaptive policy and enough waves.
+        let mut bad = placement_base.clone();
+        bad.inject = InjectionPoint::TierDegraded("burst-buffer".to_string(), 32);
+        bad.waves = 4;
+        assert!(bad.validate().is_err(), "static policy cannot adapt");
+        let mut ok = bad.clone();
+        ok.placement = Some("fastest-eligible".to_string());
+        ok.validate().unwrap();
+        ok.waves = 2;
+        assert!(ok.validate().is_err(), "needs >= 3 waves");
+        // Bogus policy spelling.
+        let mut bad = placement_base.clone();
+        bad.placement = Some("psychic".to_string());
+        assert!(bad.validate().is_err());
+        // Placement + delta outside the contract envelope.
+        let mut bad = placement_base;
+        bad.delta = true;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
+/// Fair-shared bandwidth pool of one tier (write and read lanes).
 #[derive(Debug)]
 pub struct BandwidthPool {
     write_bw: f64,
@@ -23,6 +24,7 @@ pub struct BandwidthPool {
 }
 
 impl BandwidthPool {
+    /// Pool with the given aggregate bandwidths (bytes/s).
     pub fn new(write_bw: f64, read_bw: f64) -> Self {
         assert!(write_bw > 0.0 && read_bw > 0.0);
         BandwidthPool {
@@ -32,6 +34,7 @@ impl BandwidthPool {
         }
     }
 
+    /// Concurrent transfers currently charged to the pool.
     pub fn active(&self) -> usize {
         self.active.load(Ordering::SeqCst)
     }
@@ -49,6 +52,7 @@ impl BandwidthPool {
         self.charge(bytes, latency, self.write_bw, shared)
     }
 
+    /// Model a read; returns the charged duration.
     pub fn read(&self, bytes: u64, latency: Duration, shared: bool) -> Duration {
         self.charge(bytes, latency, self.read_bw, shared)
     }
@@ -62,6 +66,7 @@ impl BandwidthPool {
     }
 }
 
+/// RAII guard returned by [`BandwidthPool::hold`].
 pub struct ActiveGuard<'a> {
     pool: &'a BandwidthPool,
 }

@@ -1,36 +1,93 @@
-//! Heterogeneous storage substrate: tier models, contention, presets and
-//! the per-cluster [`StorageFabric`].
+//! Heterogeneous storage substrate: tier models, contention, presets,
+//! adaptive [`placement`] and the per-cluster [`StorageFabric`].
 
 pub mod contention;
+pub mod placement;
 pub mod presets;
 pub mod tier;
 
+pub use placement::{PlacementConfig, PlacementEngine, PlacementPolicy, TierHealth};
 pub use tier::{FailureDomain, StorageTier, TierKind, TierSpec, TimeMode, TransferStat};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
+
+/// One configured extra shared tier (the JSON `fabric.tiers` array): a
+/// second burst buffer, a scratch PFS, a KV pool... The spec's latency
+/// shape derives from the kind's preset; id, bandwidth, capacity and the
+/// optional directory backing come from the definition.
+#[derive(Clone, Debug)]
+pub struct TierDef {
+    /// Unique tier id (`VelocConfig::validate` rejects duplicates and
+    /// ids colliding with the built-in tiers).
+    pub id: String,
+    /// Shared tier kind: `burst-buffer`, `pfs` or `kv-store` (node-local
+    /// kinds are per-node and cannot be declared here).
+    pub kind: TierKind,
+    /// Aggregate write bandwidth in bytes/s.
+    pub write_bw: f64,
+    /// Usable capacity in bytes.
+    pub capacity: u64,
+    /// Directory backing (real files, e.g. a tmpfs or scratch mount);
+    /// in-memory when absent. Overlapping mounts are rejected by
+    /// `VelocConfig::validate`.
+    pub mount: Option<PathBuf>,
+}
+
+impl TierDef {
+    /// The full [`TierSpec`] this definition materializes: the kind's
+    /// preset (latency, read/write ratio, failure domain) resized to the
+    /// declared bandwidth/capacity, carrying the declared id.
+    pub fn spec(&self) -> Result<TierSpec> {
+        let spec = match self.kind {
+            TierKind::BurstBuffer => presets::burst_buffer(self.capacity, self.write_bw),
+            TierKind::Pfs => presets::pfs(self.capacity, self.write_bw),
+            TierKind::KvStore => presets::kv_store(self.capacity, self.write_bw),
+            other => bail!(
+                "fabric.tiers entry {:?}: kind {} is node-local; only shared \
+                 kinds (burst-buffer, pfs, kv-store) can be declared",
+                self.id,
+                other.name()
+            ),
+        };
+        Ok(spec.with_id(&self.id))
+    }
+}
 
 /// Configuration for building a fabric; all bandwidths in bytes/s.
 #[derive(Clone, Debug)]
 pub struct FabricConfig {
+    /// Simulated node count.
     pub nodes: usize,
     /// Per-node DRAM staging capacity.
     pub dram_capacity: u64,
+    /// Per-node NVMe capacity.
     pub nvme_capacity: u64,
+    /// Per-node SATA-SSD capacity.
     pub ssd_capacity: u64,
-    /// Whether nodes have the NVMe / SSD levels at all (heterogeneity knob).
+    /// Whether nodes have the NVMe level at all (heterogeneity knob).
     pub with_nvme: bool,
+    /// Whether nodes have the SSD level at all.
     pub with_ssd: bool,
+    /// Provision the shared burst buffer.
     pub with_burst_buffer: bool,
+    /// Provision the shared KV object store.
     pub with_kv: bool,
+    /// Aggregate PFS write bandwidth.
     pub pfs_bw: f64,
+    /// Aggregate burst-buffer write bandwidth.
     pub bb_bw: f64,
+    /// Aggregate KV-store write bandwidth.
     pub kv_bw: f64,
+    /// How modeled durations translate to wall-clock time.
     pub time_mode: TimeMode,
     /// When set, the PFS tier is backed by a real directory (tmpfs) so that
     /// checkpoints genuinely survive the process; otherwise in-memory.
     pub pfs_dir: Option<PathBuf>,
+    /// Extra shared tiers beyond the built-in PFS/burst-buffer/KV trio
+    /// (the placement engine routes across all of them).
+    pub tiers: Vec<TierDef>,
 }
 
 impl Default for FabricConfig {
@@ -49,6 +106,7 @@ impl Default for FabricConfig {
             kv_bw: 10.0e9,
             time_mode: TimeMode::Model,
             pfs_dir: None,
+            tiers: Vec::new(),
         }
     }
 }
@@ -61,9 +119,12 @@ pub struct StorageFabric {
     burst_buffer: Option<Arc<StorageTier>>,
     pfs: Arc<StorageTier>,
     kv: Option<Arc<StorageTier>>,
+    /// Configured extra shared tiers, in declaration order.
+    extras: Vec<Arc<StorageTier>>,
 }
 
 impl StorageFabric {
+    /// Materialize the fabric a configuration describes.
     pub fn build(cfg: &FabricConfig) -> Result<Self> {
         let mut local = Vec::with_capacity(cfg.nodes);
         for _ in 0..cfg.nodes {
@@ -106,14 +167,25 @@ impl StorageFabric {
         } else {
             None
         };
+        let mut extras = Vec::with_capacity(cfg.tiers.len());
+        for def in &cfg.tiers {
+            let spec = def.spec()?;
+            let tier = match &def.mount {
+                Some(dir) => StorageTier::dir(spec, dir.clone(), cfg.time_mode)?,
+                None => StorageTier::memory(spec, cfg.time_mode),
+            };
+            extras.push(tier);
+        }
         Ok(StorageFabric {
             local,
             burst_buffer,
             pfs,
             kv,
+            extras,
         })
     }
 
+    /// Simulated node count.
     pub fn nodes(&self) -> usize {
         self.local.len()
     }
@@ -123,16 +195,45 @@ impl StorageFabric {
         &self.local[node]
     }
 
+    /// The parallel file system (always present).
     pub fn pfs(&self) -> &Arc<StorageTier> {
         &self.pfs
     }
 
+    /// The shared burst buffer, when provisioned.
     pub fn burst_buffer(&self) -> Option<&Arc<StorageTier>> {
         self.burst_buffer.as_ref()
     }
 
+    /// The shared KV object store, when provisioned.
     pub fn kv(&self) -> Option<&Arc<StorageTier>> {
         self.kv.as_ref()
+    }
+
+    /// Configured extra shared tiers, in declaration order.
+    pub fn extras(&self) -> &[Arc<StorageTier>] {
+        &self.extras
+    }
+
+    /// Every cluster-visible shared tier: the PFS, then the burst buffer,
+    /// the KV store and the configured extras, in that order. This is the
+    /// candidate pool the placement engine routes over and the probe set
+    /// for tier-agnostic restores.
+    pub fn shared_tiers(&self) -> Vec<Arc<StorageTier>> {
+        let mut v = vec![Arc::clone(&self.pfs)];
+        if let Some(bb) = &self.burst_buffer {
+            v.push(Arc::clone(bb));
+        }
+        if let Some(kv) = &self.kv {
+            v.push(Arc::clone(kv));
+        }
+        v.extend(self.extras.iter().cloned());
+        v
+    }
+
+    /// Find a shared tier by its spec id.
+    pub fn shared_tier(&self, id: &str) -> Option<Arc<StorageTier>> {
+        self.shared_tiers().into_iter().find(|t| t.id() == id)
     }
 
     /// Apply a node failure: wipe every tier whose failure domain is the
@@ -159,6 +260,11 @@ impl StorageFabric {
                 bb.wipe();
             }
         }
+        for t in &self.extras {
+            if t.spec().failure_domain != FailureDomain::Persistent {
+                t.wipe();
+            }
+        }
     }
 
     /// Total bytes held across all tiers (diagnostics).
@@ -176,6 +282,7 @@ impl StorageFabric {
         if let Some(kv) = &self.kv {
             sum += kv.used_bytes();
         }
+        sum += self.extras.iter().map(|t| t.used_bytes()).sum::<u64>();
         sum
     }
 }
@@ -236,5 +343,55 @@ mod tests {
         f.local_tiers(0)[0].put("x", &vec![0u8; 10]).unwrap();
         f.pfs().put("z", &vec![0u8; 5]).unwrap();
         assert_eq!(f.total_used(), 15);
+    }
+
+    #[test]
+    fn shared_tiers_ordered_and_findable_by_id() {
+        let f = fabric();
+        let ids: Vec<String> = f
+            .shared_tiers()
+            .iter()
+            .map(|t| t.id().to_string())
+            .collect();
+        assert_eq!(ids, vec!["pfs", "burst-buffer", "kv-store"]);
+        assert_eq!(f.shared_tier("burst-buffer").unwrap().kind(), TierKind::BurstBuffer);
+        assert!(f.shared_tier("nope").is_none());
+    }
+
+    #[test]
+    fn extra_tiers_built_from_defs() {
+        let f = StorageFabric::build(&FabricConfig {
+            nodes: 2,
+            tiers: vec![TierDef {
+                id: "bb-scratch".to_string(),
+                kind: TierKind::BurstBuffer,
+                write_bw: 9.0e9,
+                capacity: 1 << 30,
+                mount: None,
+            }],
+            ..Default::default()
+        })
+        .unwrap();
+        let t = f.shared_tier("bb-scratch").unwrap();
+        assert_eq!(t.kind(), TierKind::BurstBuffer);
+        assert_eq!(t.spec().write_bw, 9.0e9);
+        t.put("x", &vec![1u8; 8]).unwrap();
+        assert_eq!(f.total_used(), 8);
+        // A burst-buffer-class extra dies with the system, like the
+        // built-in one.
+        f.fail_system();
+        assert!(!t.exists("x"));
+    }
+
+    #[test]
+    fn node_local_tier_defs_rejected() {
+        let def = TierDef {
+            id: "bad".to_string(),
+            kind: TierKind::Nvme,
+            write_bw: 1e9,
+            capacity: 1 << 30,
+            mount: None,
+        };
+        assert!(def.spec().is_err());
     }
 }

@@ -11,6 +11,7 @@ use std::time::Duration;
 /// 224 TB/s Summit headline: ~10 GB/s memcpy-class bandwidth per rank).
 pub fn dram(capacity: u64) -> TierSpec {
     TierSpec {
+        id: "dram".to_string(),
         kind: TierKind::Dram,
         write_bw: 10.0e9,
         read_bw: 12.0e9,
@@ -25,6 +26,7 @@ pub fn dram(capacity: u64) -> TierSpec {
 /// Shared among the ranks of one node.
 pub fn nvme(capacity: u64) -> TierSpec {
     TierSpec {
+        id: "nvme".to_string(),
         kind: TierKind::Nvme,
         write_bw: 2.1e9,
         read_bw: 5.5e9,
@@ -39,6 +41,7 @@ pub fn nvme(capacity: u64) -> TierSpec {
 /// that makes tier selection non-obvious under concurrency, paper [4]).
 pub fn ssd(capacity: u64) -> TierSpec {
     TierSpec {
+        id: "ssd".to_string(),
         kind: TierKind::Ssd,
         write_bw: 0.5e9,
         read_bw: 1.0e9,
@@ -52,6 +55,7 @@ pub fn ssd(capacity: u64) -> TierSpec {
 /// Shared burst buffer (aggregate bandwidth across the whole allocation).
 pub fn burst_buffer(capacity: u64, aggregate_bw: f64) -> TierSpec {
     TierSpec {
+        id: "burst-buffer".to_string(),
         kind: TierKind::BurstBuffer,
         write_bw: aggregate_bw,
         read_bw: aggregate_bw * 1.2,
@@ -66,6 +70,7 @@ pub fn burst_buffer(capacity: u64, aggregate_bw: f64) -> TierSpec {
 /// shared by every rank, high per-op latency.
 pub fn pfs(capacity: u64, aggregate_bw: f64) -> TierSpec {
     TierSpec {
+        id: "pfs".to_string(),
         kind: TierKind::Pfs,
         write_bw: aggregate_bw,
         read_bw: aggregate_bw * 1.5,
@@ -80,6 +85,7 @@ pub fn pfs(capacity: u64, aggregate_bw: f64) -> TierSpec {
 /// but with much lower per-op latency and better small-object behaviour.
 pub fn kv_store(capacity: u64, aggregate_bw: f64) -> TierSpec {
     TierSpec {
+        id: "kv-store".to_string(),
         kind: TierKind::KvStore,
         write_bw: aggregate_bw,
         read_bw: aggregate_bw * 1.3,

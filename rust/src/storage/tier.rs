@@ -19,7 +19,7 @@ use crate::storage::contention::BandwidthPool;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -41,6 +41,8 @@ pub enum TierKind {
 }
 
 impl TierKind {
+    /// Stable lowercase name (used as the default tier id, in config
+    /// parsing and in reports).
     pub fn name(&self) -> &'static str {
         match self {
             TierKind::Dram => "dram",
@@ -49,6 +51,21 @@ impl TierKind {
             TierKind::BurstBuffer => "burst-buffer",
             TierKind::Pfs => "pfs",
             TierKind::KvStore => "kv-store",
+        }
+    }
+
+    /// Parse the config spelling produced by [`TierKind::name`].
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dram" => Ok(TierKind::Dram),
+            "nvme" => Ok(TierKind::Nvme),
+            "ssd" => Ok(TierKind::Ssd),
+            "burst-buffer" | "bb" => Ok(TierKind::BurstBuffer),
+            "pfs" => Ok(TierKind::Pfs),
+            "kv-store" | "kv" => Ok(TierKind::KvStore),
+            other => bail!(
+                "tier kind must be dram|nvme|ssd|burst-buffer|pfs|kv-store, got {other}"
+            ),
         }
     }
 }
@@ -67,6 +84,13 @@ pub enum FailureDomain {
 /// Performance/persistency description of one tier.
 #[derive(Clone, Debug)]
 pub struct TierSpec {
+    /// Stable tier identity. Built-in tiers use their kind name
+    /// (`"pfs"`, `"burst-buffer"`, ...); configured extra tiers carry the
+    /// id from their `fabric.tiers` entry. The placement engine records
+    /// this id as the flush destination, so it must be unique among the
+    /// shared tiers of one fabric (`VelocConfig::validate` enforces it).
+    pub id: String,
+    /// Where this tier sits in the hierarchy.
     pub kind: TierKind,
     /// Sustained write bandwidth in bytes/s (per writer for local tiers,
     /// aggregate for shared tiers).
@@ -79,7 +103,17 @@ pub struct TierSpec {
     pub capacity: u64,
     /// Shared across ranks (bandwidth fair-shared) or per-rank dedicated.
     pub shared: bool,
+    /// What failure wipes the tier's contents.
     pub failure_domain: FailureDomain,
+}
+
+impl TierSpec {
+    /// Replace the tier id (builder-style; used for configured extra
+    /// tiers that derive their spec from a preset).
+    pub fn with_id(mut self, id: &str) -> Self {
+        self.id = id.to_string();
+        self
+    }
 }
 
 /// How modeled durations translate to wall-clock time.
@@ -106,12 +140,14 @@ impl TimeMode {
 /// Result of one put/get.
 #[derive(Clone, Copy, Debug)]
 pub struct TransferStat {
+    /// Payload bytes moved.
     pub bytes: u64,
     /// Duration predicted by the tier model (fair-share aware).
     pub modeled: Duration,
 }
 
 impl TransferStat {
+    /// Modeled throughput in bytes/s.
     pub fn throughput_bps(&self) -> f64 {
         self.bytes as f64 / self.modeled.as_secs_f64().max(1e-12)
     }
@@ -123,6 +159,12 @@ enum Backing {
 }
 
 /// One storage level: performance model + backing store.
+///
+/// Besides the static [`TierSpec`], a tier carries mutable *health* state
+/// the placement engine (and the sim's `tier-outage` / `tier-degraded`
+/// injection points) drive at runtime: an offline flag, a read-only flag
+/// and a service-time degradation factor. Production code never sets
+/// these; operators (or fault injection) do.
 pub struct StorageTier {
     spec: TierSpec,
     backing: Backing,
@@ -131,6 +173,15 @@ pub struct StorageTier {
     used: AtomicU64,
     puts: AtomicU64,
     gets: AtomicU64,
+    /// Tier unreachable: puts fail, gets miss (models a dead mount or a
+    /// partitioned burst-buffer appliance).
+    down: AtomicBool,
+    /// Tier rejects writes but still serves reads (models a file system
+    /// remounted read-only after an error, or a draining burst buffer).
+    read_only: AtomicBool,
+    /// Modeled-duration multiplier (f64 bits, >= 1.0). A degraded tier
+    /// still works, just slower — the signal adaptive placement reacts to.
+    degrade: AtomicU64,
 }
 
 fn sanitize_key(key: &str) -> String {
@@ -151,6 +202,9 @@ impl StorageTier {
             used: AtomicU64::new(0),
             puts: AtomicU64::new(0),
             gets: AtomicU64::new(0),
+            down: AtomicBool::new(false),
+            read_only: AtomicBool::new(false),
+            degrade: AtomicU64::new(1.0f64.to_bits()),
         })
     }
 
@@ -166,27 +220,108 @@ impl StorageTier {
             used: AtomicU64::new(0),
             puts: AtomicU64::new(0),
             gets: AtomicU64::new(0),
+            down: AtomicBool::new(false),
+            read_only: AtomicBool::new(false),
+            degrade: AtomicU64::new(1.0f64.to_bits()),
         }))
     }
 
+    /// The tier's static performance/persistency description.
     pub fn spec(&self) -> &TierSpec {
         &self.spec
     }
 
+    /// Stable tier identity (see [`TierSpec::id`]).
+    pub fn id(&self) -> &str {
+        &self.spec.id
+    }
+
+    /// Where this tier sits in the hierarchy.
     pub fn kind(&self) -> TierKind {
         self.spec.kind
     }
 
+    /// Bytes currently stored.
     pub fn used_bytes(&self) -> u64 {
         self.used.load(Ordering::Relaxed)
     }
 
+    /// Remaining capacity in bytes.
+    pub fn headroom(&self) -> u64 {
+        self.spec.capacity.saturating_sub(self.used_bytes())
+    }
+
+    /// Fraction of capacity in use, in `[0, 1]`.
+    pub fn fill_fraction(&self) -> f64 {
+        if self.spec.capacity == 0 {
+            return 1.0;
+        }
+        (self.used_bytes() as f64 / self.spec.capacity as f64).min(1.0)
+    }
+
+    /// Completed puts since construction.
     pub fn put_count(&self) -> u64 {
         self.puts.load(Ordering::Relaxed)
     }
 
+    /// Completed gets since construction.
     pub fn get_count(&self) -> u64 {
         self.gets.load(Ordering::Relaxed)
+    }
+
+    /// Mark the tier unreachable (or reachable again): puts fail with
+    /// `TierDown`, gets miss. Contents are *not* lost — an outage is a
+    /// connectivity event, not a failure-domain wipe ([`Self::wipe`]).
+    pub fn set_down(&self, down: bool) {
+        self.down.store(down, Ordering::SeqCst);
+    }
+
+    /// Is the tier currently unreachable?
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::SeqCst)
+    }
+
+    /// Mark the tier read-only (or writable again): puts fail with
+    /// `TierReadOnly`, reads still work.
+    pub fn set_read_only(&self, ro: bool) {
+        self.read_only.store(ro, Ordering::SeqCst);
+    }
+
+    /// Does the tier currently reject writes?
+    pub fn is_read_only(&self) -> bool {
+        self.read_only.load(Ordering::SeqCst)
+    }
+
+    /// Degrade (or restore) the tier's service time: every modeled
+    /// transfer duration is multiplied by `factor` (clamped to >= 1.0).
+    /// Adaptive placement observes the slowdown through the returned
+    /// [`TransferStat`]s and routes away.
+    pub fn set_degraded(&self, factor: f64) {
+        self.degrade.store(factor.max(1.0).to_bits(), Ordering::SeqCst);
+    }
+
+    /// Current service-time degradation factor (1.0 = healthy).
+    pub fn degrade_factor(&self) -> f64 {
+        f64::from_bits(self.degrade.load(Ordering::SeqCst))
+    }
+
+    fn degraded(&self, modeled: Duration) -> Duration {
+        let f = self.degrade_factor();
+        if f > 1.0 {
+            modeled.mul_f64(f)
+        } else {
+            modeled
+        }
+    }
+
+    fn check_writable(&self) -> Result<()> {
+        if self.is_down() {
+            bail!("TierDown: {} is offline", self.spec.id);
+        }
+        if self.is_read_only() {
+            bail!("TierReadOnly: {} rejects writes", self.spec.id);
+        }
+        Ok(())
     }
 
     /// Currently active transfers (writers+readers) — the signal the
@@ -207,6 +342,7 @@ impl StorageTier {
     /// is immutable once encoded, so sharing is safe). Directory backings
     /// still write the bytes out.
     pub fn put_shared(&self, key: &str, data: &Arc<Vec<u8>>) -> Result<TransferStat> {
+        self.check_writable()?;
         let len = data.len() as u64;
         let prev = self.used.fetch_add(len, Ordering::SeqCst);
         if prev + len > self.spec.capacity {
@@ -219,7 +355,7 @@ impl StorageTier {
                 self.spec.capacity
             );
         }
-        let modeled = self.pool.write(len, self.spec.latency, self.spec.shared);
+        let modeled = self.degraded(self.pool.write(len, self.spec.latency, self.spec.shared));
         match &self.backing {
             Backing::Memory(m) => {
                 let old = m
@@ -250,6 +386,7 @@ impl StorageTier {
 
     /// Store an object. Fails with `TierFull` if capacity would be exceeded.
     pub fn put(&self, key: &str, data: &[u8]) -> Result<TransferStat> {
+        self.check_writable()?;
         let len = data.len() as u64;
         // Reserve capacity first (subtract on failure).
         let prev = self.used.fetch_add(len, Ordering::SeqCst);
@@ -263,7 +400,7 @@ impl StorageTier {
                 self.spec.capacity
             );
         }
-        let modeled = self.pool.write(len, self.spec.latency, self.spec.shared);
+        let modeled = self.degraded(self.pool.write(len, self.spec.latency, self.spec.shared));
         match &self.backing {
             Backing::Memory(m) => {
                 let old = m
@@ -292,8 +429,11 @@ impl StorageTier {
         })
     }
 
-    /// Fetch an object (None if missing).
+    /// Fetch an object (None if missing or the tier is down).
     pub fn get(&self, key: &str) -> Option<(Vec<u8>, TransferStat)> {
+        if self.is_down() {
+            return None;
+        }
         let data: Vec<u8> = match &self.backing {
             Backing::Memory(m) => {
                 let map = m.lock().unwrap();
@@ -303,9 +443,8 @@ impl StorageTier {
                 std::fs::read(root.join(sanitize_key(key))).ok()?
             }
         };
-        let modeled =
-            self.pool
-                .read(data.len() as u64, self.spec.latency, self.spec.shared);
+        let modeled = self
+            .degraded(self.pool.read(data.len() as u64, self.spec.latency, self.spec.shared));
         self.gets.fetch_add(1, Ordering::Relaxed);
         self.time_mode.apply(modeled);
         let stat = TransferStat {
@@ -315,13 +454,20 @@ impl StorageTier {
         Some((data, stat))
     }
 
+    /// Is an object stored under `key` (false while the tier is down)?
     pub fn exists(&self, key: &str) -> bool {
+        if self.is_down() {
+            return false;
+        }
         match &self.backing {
             Backing::Memory(m) => m.lock().unwrap().contains_key(key),
             Backing::Dir(root) => root.join(sanitize_key(key)).exists(),
         }
     }
 
+    /// Remove an object; returns whether one was stored. Deletes keep
+    /// working on down/read-only tiers — they are our own bookkeeping
+    /// (GC), not remote I/O.
     pub fn delete(&self, key: &str) -> bool {
         match &self.backing {
             Backing::Memory(m) => {
@@ -349,6 +495,9 @@ impl StorageTier {
     /// keys; dir backing returns sanitized names, which match for the
     /// key alphabet VeloC uses).
     pub fn list(&self, prefix: &str) -> Vec<String> {
+        if self.is_down() {
+            return Vec::new();
+        }
         match &self.backing {
             Backing::Memory(m) => {
                 let mut v: Vec<String> = m
@@ -400,6 +549,7 @@ mod tests {
 
     fn spec(capacity: u64, shared: bool) -> TierSpec {
         TierSpec {
+            id: "dram".to_string(),
             kind: TierKind::Dram,
             write_bw: 1e9,
             read_bw: 2e9,
@@ -473,6 +623,45 @@ mod tests {
         assert!(!t.exists("a"));
         assert_eq!(t.used_bytes(), 0);
         assert!(t.list("").is_empty());
+    }
+
+    #[test]
+    fn down_tier_fails_puts_and_misses_gets() {
+        let t = StorageTier::memory(spec(1 << 20, false), TimeMode::Model);
+        t.put("a", b"1").unwrap();
+        t.set_down(true);
+        assert!(t.is_down());
+        let err = t.put("b", b"2").unwrap_err().to_string();
+        assert!(err.contains("TierDown"), "{err}");
+        assert!(t.get("a").is_none());
+        assert!(!t.exists("a"));
+        assert!(t.list("").is_empty());
+        t.set_down(false);
+        assert_eq!(t.get("a").unwrap().0, b"1", "contents survive an outage");
+    }
+
+    #[test]
+    fn read_only_tier_serves_reads_rejects_writes() {
+        let t = StorageTier::memory(spec(1 << 20, false), TimeMode::Model);
+        t.put("a", b"1").unwrap();
+        t.set_read_only(true);
+        let err = t.put("b", b"2").unwrap_err().to_string();
+        assert!(err.contains("TierReadOnly"), "{err}");
+        assert_eq!(t.get("a").unwrap().0, b"1");
+        t.set_read_only(false);
+        t.put("b", b"2").unwrap();
+    }
+
+    #[test]
+    fn degradation_scales_modeled_durations() {
+        let t = StorageTier::memory(spec(1 << 30, false), TimeMode::Model);
+        let base = t.put("x", &vec![0u8; 1_000_000]).unwrap().modeled;
+        t.set_degraded(4.0);
+        let slow = t.put("y", &vec![0u8; 1_000_000]).unwrap().modeled;
+        let ratio = slow.as_secs_f64() / base.as_secs_f64();
+        assert!((ratio - 4.0).abs() < 0.01, "ratio {ratio}");
+        t.set_degraded(1.0);
+        assert_eq!(t.degrade_factor(), 1.0);
     }
 
     #[test]

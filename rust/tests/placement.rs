@@ -1,0 +1,158 @@
+//! Adaptive tier-placement regressions through the full runtime: flushes
+//! fail over when the primary tier degrades administratively (read-only,
+//! offline), the actual destination is recorded, and restores locate and
+//! verify checkpoints wherever they landed.
+
+use std::sync::Arc;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::cluster::FailureScope;
+use veloc::storage::PlacementPolicy;
+
+/// Runtime with placement over [pfs, burst-buffer] and no lateral levels
+/// (partner/erasure off), so a node-failure restore must come from the
+/// level-4 copy — wherever placement put it.
+fn placement_runtime(policy: PlacementPolicy, aggregation: bool) -> Arc<VelocRuntime> {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.placement.enabled = true;
+    cfg.placement.policy = policy;
+    cfg.fabric.with_burst_buffer = true;
+    cfg.stack.with_partner = false;
+    cfg.stack.erasure_group = 0;
+    cfg.stack.keep_versions = 8;
+    cfg.aggregation.enabled = aggregation;
+    VelocRuntime::new(cfg).expect("runtime")
+}
+
+/// Satellite regression: the primary tier flips read-only between two
+/// checkpoints; the second flush lands on the fallback tier, the
+/// destination is recorded in the registry, and after a node failure the
+/// restore locates and verifies the checkpoint from that destination.
+#[test]
+fn read_only_primary_fails_over_and_restore_verifies() {
+    let rt = placement_runtime(PlacementPolicy::Static, false);
+    let client = rt.client(0);
+    let region = client.mem_protect(0, vec![1u8; 64 << 10]);
+
+    client.checkpoint("app", 1).unwrap();
+    client.checkpoint_wait("app", 1).unwrap();
+    rt.drain();
+    assert_eq!(
+        rt.env().registry.info("app", 1, 0).unwrap().dest.as_deref(),
+        Some("pfs"),
+        "healthy static placement keeps the legacy destination"
+    );
+
+    // The PFS remounts read-only mid-run (a real Lustre failure mode).
+    rt.env().fabric.pfs().set_read_only(true);
+    let v2_bytes: Vec<u8> = {
+        let mut g = region.lock().unwrap();
+        g.iter_mut().for_each(|b| *b = 7);
+        g.clone()
+    };
+    client.checkpoint("app", 2).unwrap();
+    client.checkpoint_wait("app", 2).unwrap();
+    rt.drain();
+    assert_eq!(
+        rt.env().registry.info("app", 2, 0).unwrap().dest.as_deref(),
+        Some("burst-buffer"),
+        "read-only primary must fail the flush over"
+    );
+    assert!(rt.placement().unwrap().failover_count() >= 1);
+    assert!(
+        !rt.env().fabric.pfs().exists("pfs.app.r0.v2"),
+        "nothing may be written to a read-only tier"
+    );
+
+    // Node 0 dies: the local copy is gone, so the restore must come from
+    // the recorded level-4 destination.
+    rt.inject_failure(&FailureScope::Node(0));
+    rt.revive_all();
+    let info = client
+        .restart_version("app", 2)
+        .unwrap()
+        .expect("v2 must be restorable from the fallback tier");
+    assert_eq!(info.version, 2);
+    assert_eq!(info.level, 4, "served by the level-4 copy");
+    assert_eq!(
+        *region.lock().unwrap(),
+        v2_bytes,
+        "restored bytes must match the checkpointed state bit-for-bit"
+    );
+}
+
+/// A full outage of the primary during aggregated drains: containers land
+/// on the burst buffer, and a rank restores out of them while the primary
+/// is still down.
+#[test]
+fn aggregated_drains_fail_over_during_primary_outage() {
+    let rt = placement_runtime(PlacementPolicy::Static, true);
+    let client = rt.client(0);
+    let region = client.mem_protect(0, vec![3u8; 32 << 10]);
+    let expected: Vec<u8> = region.lock().unwrap().clone();
+
+    rt.env().fabric.pfs().set_down(true);
+    client.checkpoint("app", 1).unwrap();
+    client.checkpoint_wait("app", 1).unwrap();
+    rt.drain();
+    assert!(
+        !rt.env()
+            .fabric
+            .burst_buffer()
+            .unwrap()
+            .list("agg.g")
+            .is_empty(),
+        "the container must have drained to the fallback tier"
+    );
+
+    rt.inject_failure(&FailureScope::Node(0));
+    rt.revive_all();
+    let info = client
+        .restart_version("app", 1)
+        .unwrap()
+        .expect("restorable from the failed-over container");
+    assert_eq!(info.version, 1);
+    assert_eq!(*region.lock().unwrap(), expected);
+}
+
+/// The README cookbook's example configs stay runnable: every JSON under
+/// `examples/configs/` must parse and validate.
+#[test]
+fn example_configs_parse_and_validate() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/configs");
+    let mut n = 0;
+    for entry in std::fs::read_dir(&dir).expect("examples/configs exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            VelocConfig::from_file(&path)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            n += 1;
+        }
+    }
+    assert!(n >= 4, "expected the cookbook configs, found {n}");
+}
+
+/// Adaptive policy end-to-end: fastest-eligible prefers the burst buffer
+/// outright (it wins on bandwidth and latency), and checkpoints restore
+/// from there without any failure at all.
+#[test]
+fn fastest_eligible_routes_to_burst_buffer_and_restores() {
+    let rt = placement_runtime(PlacementPolicy::FastestEligible, false);
+    let client = rt.client(0);
+    let region = client.mem_protect(0, vec![9u8; 16 << 10]);
+    let expected: Vec<u8> = region.lock().unwrap().clone();
+
+    client.checkpoint("app", 1).unwrap();
+    client.checkpoint_wait("app", 1).unwrap();
+    rt.drain();
+    assert_eq!(
+        rt.env().registry.info("app", 1, 0).unwrap().dest.as_deref(),
+        Some("burst-buffer"),
+        "fastest-eligible must pick the faster tier"
+    );
+
+    rt.inject_failure(&FailureScope::Node(0));
+    rt.revive_all();
+    let info = client.restart("app").unwrap().expect("restorable");
+    assert_eq!(info.version, 1);
+    assert_eq!(*region.lock().unwrap(), expected);
+}

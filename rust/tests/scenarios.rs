@@ -130,6 +130,50 @@ fn aggregation_drain_index_race_rebuilds_from_headers() {
     }
 }
 
+/// Satellite: adaptive-placement scenarios — a mid-run shared-tier outage
+/// fails the final wave's flushes over to the burst buffer (direct and
+/// aggregated paths), a degraded tier is routed around by the adaptive
+/// policy, and every restore still verifies bit-for-bit against the
+/// shadow copies (the runner additionally asserts the failover /
+/// re-routing metrics inside each scenario).
+#[test]
+fn placement_tier_outage_and_degradation_scenarios_pass() {
+    let specs: Vec<_> = standard_matrix(0x71E6)
+        .into_iter()
+        .filter(|s| {
+            matches!(
+                s.inject,
+                InjectionPoint::TierOutage(_) | InjectionPoint::TierDegraded(_, _)
+            )
+        })
+        .collect();
+    assert!(
+        specs.len() >= 3,
+        "matrix must carry tier-outage and tier-degraded scenarios: {}",
+        specs.len()
+    );
+    assert!(
+        specs.iter().any(|s| s.aggregation),
+        "an aggregated tier-outage scenario must be covered"
+    );
+    for spec in &specs {
+        let report = run_scenario(spec).unwrap_or_else(|e| panic!("{e:#}"));
+        assert_eq!(
+            report.frontier,
+            Some(spec.waves * spec.steps_per_wave),
+            "{}: a tier fault with a healthy fallback must not cost the \
+             latest version",
+            spec.inject.name()
+        );
+        assert_eq!(
+            report.verified_ranks,
+            spec.nodes * spec.ranks_per_node,
+            "{}: every rank must verify bit-for-bit",
+            spec.inject.name()
+        );
+    }
+}
+
 /// A failing exploration shrinks to `seed + spec`: the error message
 /// carries both the seed and the exact CLI repro line.
 #[test]
