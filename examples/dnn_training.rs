@@ -70,7 +70,7 @@ fn main() -> Result<()> {
         losses.push((trainer.step, loss));
         if trainer.step % every == 0 {
             let v = trainer.checkpoint(&client)?;
-            client.checkpoint_wait("dnn", v)?;
+            client.checkpoint_wait_done("dnn", v)?;
             let (eval_loss, acc) = trainer.evaluate()?;
             println!(
                 "{:>6} {:>10.4} {:>8.3}  checkpoint v{v}",

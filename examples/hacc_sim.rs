@@ -17,7 +17,6 @@ use veloc::aggregation::AggTarget;
 use veloc::api::{VelocConfig, VelocRuntime};
 use veloc::app::IterativeApp;
 use veloc::cluster::FailureScope;
-use veloc::pipeline::CkptStatus;
 use veloc::util::cli::Cli;
 use veloc::util::stats::{format_bytes, Samples};
 
@@ -43,8 +42,7 @@ fn run_world(nodes: usize, rpn: usize, mb: usize, ckpts: u64) -> Result<(f64, f6
                     let t0 = Instant::now();
                     let v = app.checkpoint(&client)?;
                     blocking.push_duration(t0.elapsed());
-                    let st = client.checkpoint_wait("hacc", v)?;
-                    if let CkptStatus::Done(_) = st {}
+                    client.checkpoint_wait_done("hacc", v)?;
                     modeled_l1 += bytes_per_rank as f64 / 10.0e9; // dram model
                 }
                 Ok((blocking, modeled_l1 / ckpts as f64))
@@ -149,7 +147,7 @@ fn aggregated_burst_buffer_drain(mb: usize) -> Result<()> {
         for (r, c) in clients.iter().enumerate() {
             handles[r].lock().unwrap()[0] = v as u8;
             c.checkpoint("hacc-bb", v)?;
-            c.checkpoint_wait("hacc-bb", v)?;
+            c.checkpoint_wait_done("hacc-bb", v)?;
         }
     }
     rt.drain();

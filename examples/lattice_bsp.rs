@@ -52,7 +52,7 @@ fn main() -> Result<()> {
                     app.superstep()?;
                     if app.superstep % every == 0 {
                         let v = app.collective_checkpoint(&client)?;
-                        client.checkpoint_wait("lattice", v)?;
+                        client.checkpoint_wait_done("lattice", v)?;
                         if rank == 0 {
                             println!(
                                 "  superstep {:>4}: collective checkpoint v{v}, field sum {:.3}",

@@ -34,7 +34,7 @@ fn main() -> Result<()> {
             client.checkpoint("quickstart", 1)?;
             // Returns when all levels settled (local copy already safe
             // when checkpoint() itself returned).
-            client.checkpoint_wait("quickstart", 1)?;
+            client.checkpoint_wait_done("quickstart", 1)?;
             Ok(())
         }));
     }

@@ -116,7 +116,7 @@ fn main() {
             v += 1;
             let (_, d) = veloc::util::stats::time_it(|| {
                 client.checkpoint("t", v).unwrap();
-                client.checkpoint_wait("t", v).unwrap();
+                client.checkpoint_wait_done("t", v).unwrap();
             });
             s.push_duration(d);
         }

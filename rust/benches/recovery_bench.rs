@@ -32,7 +32,7 @@ fn checkpoint_world(rt: &Arc<VelocRuntime>, v: u64, bytes: usize) {
                 let client = rt.client(rank);
                 client.mem_protect(0, vec![(rank as u8).wrapping_add(v as u8); bytes]);
                 client.checkpoint("e3", v).unwrap();
-                client.checkpoint_wait("e3", v).unwrap();
+                client.checkpoint_wait_done("e3", v).unwrap();
             })
         })
         .collect();

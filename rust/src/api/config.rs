@@ -1,6 +1,7 @@
 //! Runtime configuration, loadable from JSON (`veloc --config file.json`).
 
 use crate::aggregation::{AggTarget, AggregationConfig};
+use crate::backend::BackendConfig;
 use crate::delta::DeltaConfig;
 use crate::modules::{StackConfig, TierPolicy};
 use crate::pipeline::EngineMode;
@@ -47,6 +48,10 @@ pub struct VelocConfig {
     /// Adaptive heterogeneous-tier placement of shared-tier flushes
     /// (policy, health EWMA, circuit breaker — `crate::storage::placement`).
     pub placement: PlacementConfig,
+    /// Active-backend daemon settings (`veloc daemon` + the socket
+    /// clients — `crate::backend`): home directory, socket, admission
+    /// depth, payload handoff and journal durability knobs.
+    pub backend: BackendConfig,
     /// Override for the artifacts directory.
     pub artifacts: Option<PathBuf>,
 }
@@ -68,6 +73,7 @@ impl Default for VelocConfig {
             aggregation: AggregationConfig::default(),
             delta: DeltaConfig::default(),
             placement: PlacementConfig::default(),
+            backend: BackendConfig::default(),
             artifacts: None,
         }
     }
@@ -215,6 +221,22 @@ impl VelocConfig {
             cfg.aggregation.target =
                 AggTarget::parse(a.str_or("target", cfg.aggregation.target.name()))?;
         }
+        if let Some(b) = j.get("backend") {
+            if let Some(dir) = b.get("dir").and_then(Json::as_str) {
+                cfg.backend.dir = PathBuf::from(dir);
+            }
+            if let Some(sock) = b.get("socket").and_then(Json::as_str) {
+                cfg.backend.socket = Some(PathBuf::from(sock));
+            }
+            cfg.backend.queue_depth = b.usize_or("queue_depth", cfg.backend.queue_depth);
+            if let Some(kb) = b.get("inline_max_kb").and_then(Json::as_f64) {
+                if !(kb >= 0.0) {
+                    bail!("backend.inline_max_kb must be >= 0, got {kb}");
+                }
+                cfg.backend.inline_max = (kb * 1024.0) as usize;
+            }
+            cfg.backend.fsync = b.bool_or("fsync", cfg.backend.fsync);
+        }
         if let Some(d) = j.get("delta") {
             cfg.delta.enabled = d.bool_or("enabled", cfg.delta.enabled);
             cfg.delta.min_chunk = d.usize_or("min_chunk", cfg.delta.min_chunk);
@@ -318,6 +340,7 @@ impl VelocConfig {
         }
         self.placement.validate()?;
         self.delta.validate()?;
+        self.backend.validate()?;
         Ok(())
     }
 
@@ -607,6 +630,33 @@ mod tests {
         assert!(c.validate().is_ok());
         c.fabric.tiers = vec![def("a", "/mnt/other"), def("b", "/mnt/bb/../other")];
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_section_parsed_and_validated() {
+        let j = Json::parse(
+            r#"{
+                "backend": {"dir": "/tmp/veloc-bd", "socket": "/tmp/veloc-bd/s.sock",
+                            "queue_depth": 16, "inline_max_kb": 128,
+                            "fsync": false}
+            }"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert_eq!(c.backend.dir, PathBuf::from("/tmp/veloc-bd"));
+        assert_eq!(
+            c.backend.socket_path(),
+            PathBuf::from("/tmp/veloc-bd/s.sock")
+        );
+        assert_eq!(c.backend.queue_depth, 16);
+        assert_eq!(c.backend.inline_max, 128 << 10);
+        assert!(!c.backend.fsync);
+        // Defaults derive the socket from the home dir.
+        let c = VelocConfig::default();
+        assert_eq!(c.backend.socket_path(), c.backend.dir.join("veloc.sock"));
+        // Zero queue depth rejected.
+        let j = Json::parse(r#"{"backend": {"queue_depth": 0}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -19,8 +19,10 @@
 //! ```
 
 pub mod config;
+pub mod transport;
 
 pub use config::VelocConfig;
+pub use transport::Transport;
 
 use crate::aggregation::Aggregator;
 use crate::cluster::{KillSwitch, Topology};
@@ -38,7 +40,7 @@ use crate::util::bytes::Checkpoint;
 use crate::util::pool::{Priority, ThreadPool};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Handle to a protected memory region: the application mutates the
@@ -56,6 +58,72 @@ pub struct SimHooks {
     pub wrap_gate: Option<Box<dyn FnOnce(Arc<dyn FlushGate>) -> Arc<dyn FlushGate> + Send>>,
     /// Module-boundary hook installed into every rank engine.
     pub boundary: Option<Arc<dyn BoundaryHook>>,
+    /// Pre-built storage fabric to adopt instead of building a fresh one
+    /// from the config. The backend-crash scenarios use it to model
+    /// storage that survives a daemon death: two runtime incarnations
+    /// (before and after the "crash") share one fabric, exactly as two
+    /// daemon processes share the node's tiers and the PFS.
+    pub fabric: Option<Arc<StorageFabric>>,
+}
+
+/// Shutdown-aware driver of the aggregation age policy: a ticker thread
+/// drains groups whose oldest segment exceeded `max_delay` even when no
+/// further submits arrive. Dropping the guard (with the runtime) stops
+/// the thread *immediately* through a flag + condvar — the previous
+/// design slept on a `Weak` upgrade and could outlive the runtime by up
+/// to one tick period.
+struct AgeTicker {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AgeTicker {
+    fn spawn(agg: &Arc<Aggregator>, period: std::time::Duration) -> Self {
+        let stop: Arc<(Mutex<bool>, Condvar)> = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = Arc::clone(&stop);
+        let weak = Arc::downgrade(agg);
+        let handle = std::thread::Builder::new()
+            .name("veloc-age-ticker".to_string())
+            .spawn(move || {
+                let (lock, cv) = &*stop2;
+                let mut stopped = lock.lock().unwrap();
+                loop {
+                    if *stopped {
+                        return;
+                    }
+                    let (guard, timeout) = cv.wait_timeout(stopped, period).unwrap();
+                    stopped = guard;
+                    if *stopped {
+                        return;
+                    }
+                    if timeout.timed_out() {
+                        // Tick outside the lock so a concurrent drop is
+                        // never blocked behind a drain.
+                        let Some(agg) = weak.upgrade() else { return };
+                        drop(stopped);
+                        let _ = agg.flush_aged();
+                        drop(agg);
+                        stopped = lock.lock().unwrap();
+                    }
+                }
+            })
+            .expect("spawn age ticker");
+        AgeTicker {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for AgeTicker {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Cluster-wide runtime.
@@ -69,6 +137,9 @@ pub struct VelocRuntime {
     kill: KillSwitch,
     monitor: Arc<UtilizationMonitor>,
     metrics: Arc<Metrics>,
+    /// Keeps the aggregation age ticker alive for the runtime's lifetime;
+    /// dropping the runtime stops the ticker thread immediately.
+    _age_ticker: Option<AgeTicker>,
 }
 
 impl VelocRuntime {
@@ -83,7 +154,12 @@ impl VelocRuntime {
     pub fn new_with_hooks(config: VelocConfig, hooks: SimHooks) -> Result<Arc<Self>> {
         config.validate()?;
         let topology = Topology::new(config.nodes, config.ranks_per_node);
-        let fabric = Arc::new(StorageFabric::build(&config.fabric)?);
+        // Scenario instrumentation: adopt a pre-built fabric (storage that
+        // survives a backend-daemon restart) instead of building fresh.
+        let fabric = match hooks.fabric {
+            Some(f) => f,
+            None => Arc::new(StorageFabric::build(&config.fabric)?),
+        };
         let registry = VersionRegistry::new();
         let pjrt = if config.use_kernels || config.scheduler == SchedulerPolicy::Predictive {
             match PjrtEngine::load(&config.artifacts_dir()) {
@@ -178,6 +254,7 @@ impl VelocRuntime {
         } else {
             None
         };
+        let mut age_ticker = None;
         let aggregator = if config.aggregation.enabled {
             let agg = Aggregator::with_placement(
                 topology,
@@ -188,20 +265,11 @@ impl VelocRuntime {
                 Some(Arc::clone(&registry)),
                 placement.clone(),
             );
-            // Age-policy driver: a detached ticker drains groups whose
-            // oldest segment exceeded max_delay even when no further
-            // submits arrive. Holds only a Weak ref, so it dies with the
-            // runtime.
-            let weak = Arc::downgrade(&agg);
+            // Age-policy driver; the guard stops the thread the moment the
+            // runtime drops (see [`AgeTicker`]).
             let period = (config.aggregation.max_delay / 2)
                 .max(std::time::Duration::from_millis(10));
-            std::thread::spawn(move || {
-                while let Some(a) = weak.upgrade() {
-                    let _ = a.flush_aged();
-                    drop(a);
-                    std::thread::sleep(period);
-                }
-            });
+            age_ticker = Some(AgeTicker::spawn(&agg, period));
             Some(agg)
         } else {
             None
@@ -258,6 +326,7 @@ impl VelocRuntime {
             recovery,
             monitor,
             metrics,
+            _age_ticker: age_ticker,
         }))
     }
 
@@ -326,15 +395,17 @@ impl VelocRuntime {
         &self.kill
     }
 
-    /// Per-rank client handle.
+    /// Per-rank client handle over the in-process transport (the
+    /// out-of-process equivalent is
+    /// [`BackendClient::client`](crate::backend::BackendClient::client)).
     pub fn client(self: &Arc<Self>, rank: usize) -> VelocClient {
         assert!(rank < self.topology.world_size());
-        VelocClient {
-            runtime: Arc::clone(self),
+        VelocClient::with_transport(
+            Arc::new(LocalTransport {
+                runtime: Arc::clone(self),
+            }),
             rank,
-            node: self.topology.node_of(rank),
-            regions: Mutex::new(BTreeMap::new()),
-        }
+        )
     }
 
     /// Inject a failure: kill the affected ranks and wipe the storage of
@@ -441,15 +512,105 @@ impl VelocRuntime {
     }
 }
 
-/// Per-rank client: the paper's user-facing API.
-pub struct VelocClient {
+/// The in-process [`Transport`]: client and runtime share one process,
+/// submissions go straight into the rank's pipeline engine. This is the
+/// path `VelocRuntime::client` wires up; `veloc daemon` clients use
+/// [`SocketTransport`](crate::backend::SocketTransport) instead.
+pub struct LocalTransport {
     runtime: Arc<VelocRuntime>,
+}
+
+impl LocalTransport {
+    /// Wrap a runtime (equivalent to what [`VelocRuntime::client`] builds).
+    pub fn new(runtime: Arc<VelocRuntime>) -> Self {
+        LocalTransport { runtime }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn ready(&self, rank: usize) -> Result<()> {
+        if self.runtime.kill.is_killed(rank) {
+            return Err(anyhow!("rank {rank} is failed"));
+        }
+        Ok(())
+    }
+
+    fn submit(
+        &self,
+        rank: usize,
+        name: &str,
+        version: u64,
+        ckpt: Checkpoint,
+        started: Instant,
+    ) -> Result<()> {
+        if self.runtime.kill.is_killed(rank) {
+            return Err(anyhow!("rank {rank} is failed"));
+        }
+        let bytes = ckpt.payload_bytes();
+        let node = self.runtime.topology.node_of(rank);
+        let ctx = CkptContext::new(name, rank, node, version, ckpt);
+        self.runtime.engine(rank).submit(ctx)?;
+        let m = &self.runtime.metrics;
+        m.incr("ckpt.requests", 1);
+        m.incr("ckpt.bytes", bytes);
+        // Measured from capture start: the region snapshot is part of
+        // what the application blocks on.
+        m.observe_duration("ckpt.blocking", started.elapsed());
+        Ok(())
+    }
+
+    fn wait(&self, rank: usize, name: &str, version: u64) -> Result<CkptStatus> {
+        self.runtime
+            .engine(rank)
+            .wait(rank, name, version, self.runtime.config.wait_timeout)
+    }
+
+    fn restore(
+        &self,
+        rank: usize,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<Option<Restored>> {
+        let engine = self.runtime.engine(rank);
+        let restored = match version {
+            Some(v) => self.runtime.recovery.restore_version(engine, name, rank, v)?,
+            None => self.runtime.recovery.restore_latest(engine, name, rank)?,
+        };
+        if let Some(r) = &restored {
+            self.runtime.metrics.incr("restart.success", 1);
+            self.runtime
+                .metrics
+                .incr(&format!("restart.level{}", r.level), 1);
+        }
+        Ok(restored)
+    }
+
+    fn report_utilization(&self, util: f32) {
+        self.runtime.monitor.record(util);
+    }
+}
+
+/// Per-rank client: the paper's user-facing API. Region bookkeeping lives
+/// client-side; execution goes through the configured [`Transport`] — the
+/// same type serves both the linked-in runtime and the `veloc daemon`
+/// socket path.
+pub struct VelocClient {
+    transport: Arc<dyn Transport>,
     rank: usize,
-    node: usize,
     regions: Mutex<BTreeMap<u32, RegionHandle>>,
 }
 
 impl VelocClient {
+    /// Build a client over an explicit transport (used by
+    /// [`VelocRuntime::client`] and the backend daemon's client paths).
+    pub fn with_transport(transport: Arc<dyn Transport>, rank: usize) -> VelocClient {
+        VelocClient {
+            transport,
+            rank,
+            regions: Mutex::new(BTreeMap::new()),
+        }
+    }
+
     /// The rank this client acts for.
     pub fn rank(&self) -> usize {
         self.rank
@@ -483,12 +644,13 @@ impl VelocClient {
     }
 
     /// Take a checkpoint of all protected regions. Returns once the
-    /// blocking prefix completed (async mode) or the whole pipeline ran
-    /// (sync mode). The (name, version) pair must be collectively unique.
+    /// transport accepted the submission: after the blocking prefix in
+    /// sync/async in-process mode, after the durable staged handoff in
+    /// daemon mode. The (name, version) pair must be collectively unique.
     pub fn checkpoint(&self, name: &str, version: u64) -> Result<()> {
-        if self.runtime.kill.is_killed(self.rank) {
-            return Err(anyhow!("rank {} is failed", self.rank));
-        }
+        // Fail fast before paying the capture memcpy (a killed rank must
+        // not copy its regions just to be rejected).
+        self.transport.ready(self.rank)?;
         let t0 = Instant::now();
         let mut ckpt = Checkpoint::new(name, self.rank, version);
         {
@@ -497,45 +659,40 @@ impl VelocClient {
                 ckpt.push_region(id, handle.lock().unwrap().clone());
             }
         }
-        let bytes = ckpt.payload_bytes();
-        let ctx = CkptContext::new(name, self.rank, self.node, version, ckpt);
-        self.runtime.engine(self.rank).submit(ctx)?;
-        let m = &self.runtime.metrics;
-        m.incr("ckpt.requests", 1);
-        m.incr("ckpt.bytes", bytes);
-        m.observe_duration("ckpt.blocking", t0.elapsed());
-        Ok(())
+        self.transport.submit(self.rank, name, version, ckpt, t0)
     }
 
-    /// Wait for an earlier checkpoint to settle across all levels.
+    /// Wait for an earlier checkpoint to settle across all levels;
+    /// [`CkptStatus::TimedOut`] reports an expired wait budget.
     pub fn checkpoint_wait(&self, name: &str, version: u64) -> Result<CkptStatus> {
-        self.runtime.engine(self.rank).wait(
-            self.rank,
-            name,
-            version,
-            self.runtime.config.wait_timeout,
-        )
+        self.transport.wait(self.rank, name, version)
+    }
+
+    /// Strict wait: anything but `Done` — a pipeline failure *or* the
+    /// typed timeout — is an error. For callers that would otherwise
+    /// discard the returned status (harnesses, examples), so a stalled
+    /// engine fails loudly at the wait instead of passing silently.
+    /// Returns the highest settled resilience level.
+    pub fn checkpoint_wait_done(&self, name: &str, version: u64) -> Result<u8> {
+        match self.checkpoint_wait(name, version)? {
+            CkptStatus::Done(level) => Ok(level),
+            other => Err(anyhow!(
+                "checkpoint {name} v{version} rank {} did not settle: {other:?}",
+                self.rank
+            )),
+        }
     }
 
     /// Restore the freshest recoverable version and load region contents
     /// back into the protected handles. Returns what was restored.
     pub fn restart(&self, name: &str) -> Result<Option<RestartInfo>> {
-        let restored = self.runtime.recovery.restore_latest(
-            self.runtime.engine(self.rank),
-            name,
-            self.rank,
-        )?;
+        let restored = self.transport.restore(self.rank, name, None)?;
         self.apply(restored)
     }
 
     /// Restore a specific version.
     pub fn restart_version(&self, name: &str, version: u64) -> Result<Option<RestartInfo>> {
-        let restored = self.runtime.recovery.restore_version(
-            self.runtime.engine(self.rank),
-            name,
-            self.rank,
-            version,
-        )?;
+        let restored = self.transport.restore(self.rank, name, Some(version))?;
         self.apply(restored)
     }
 
@@ -549,10 +706,6 @@ impl VelocClient {
                 *handle.lock().unwrap() = region.data.clone();
             }
         }
-        self.runtime.metrics.incr("restart.success", 1);
-        self.runtime
-            .metrics
-            .incr(&format!("restart.level{}", r.level), 1);
         Ok(Some(RestartInfo {
             version: r.version,
             level: r.level,
@@ -560,9 +713,10 @@ impl VelocClient {
         }))
     }
 
-    /// Report application utilization (feeds the predictive scheduler).
+    /// Report application utilization (feeds the predictive scheduler;
+    /// advisory over transports without a feedback channel).
     pub fn report_utilization(&self, util: f32) {
-        self.runtime.monitor.record(util);
+        self.transport.report_utilization(util);
     }
 }
 

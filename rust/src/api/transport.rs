@@ -1,0 +1,66 @@
+//! Client transport abstraction: the seam between the user-facing
+//! [`VelocClient`](crate::api::VelocClient) and whatever executes the
+//! checkpoint pipeline.
+//!
+//! Two implementations exist:
+//!
+//! - [`LocalTransport`](crate::api::LocalTransport) — the historical
+//!   in-process path: the client and the
+//!   [`VelocRuntime`](crate::api::VelocRuntime) live in one process,
+//!   submits go straight into the rank's pipeline engine.
+//! - [`SocketTransport`](crate::backend::SocketTransport) — the
+//!   out-of-process path: the runtime lives inside the `veloc daemon`
+//!   backend and the client speaks the length-prefixed wire protocol over
+//!   a Unix domain socket (`crate::backend`).
+//!
+//! Both sit behind the same [`VelocClient`](crate::api::VelocClient)
+//! API, so an application links once and chooses the process model at
+//! configuration time — the paper's active-backend split (checkpoint
+//! post-processing survives independently of the application process)
+//! without an API fork.
+
+use crate::pipeline::CkptStatus;
+use crate::recovery::Restored;
+use crate::util::bytes::Checkpoint;
+use anyhow::Result;
+use std::time::Instant;
+
+/// What a [`VelocClient`](crate::api::VelocClient) needs from its
+/// execution side. Implementations are shared (`Arc<dyn Transport>`) and
+/// must be safe to call from many application threads.
+pub trait Transport: Send + Sync {
+    /// Cheap pre-capture check: is a submit for `rank` even possible?
+    /// Called before the client pays the region snapshot, so e.g. a
+    /// killed rank does not copy gigabytes just to be rejected.
+    fn ready(&self, _rank: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Submit a captured checkpoint for `(rank, name, version)`. Returns
+    /// once the submission is *accepted*: for the in-process path that is
+    /// after the blocking pipeline prefix ran; for the daemon path after
+    /// the payload handoff was journaled durably (fsync-before-ack).
+    /// `started` is when the client began capturing — implementations
+    /// that record client-blocking metrics measure from there, so the
+    /// region snapshot cost stays included.
+    fn submit(
+        &self,
+        rank: usize,
+        name: &str,
+        version: u64,
+        ckpt: Checkpoint,
+        started: Instant,
+    ) -> Result<()>;
+
+    /// Block until the command settles or the transport's wait budget
+    /// expires; [`CkptStatus::TimedOut`] reports the expiry.
+    fn wait(&self, rank: usize, name: &str, version: u64) -> Result<CkptStatus>;
+
+    /// Restore `version` (or the freshest restorable version when `None`)
+    /// for `rank`; `Ok(None)` means no level could serve it.
+    fn restore(&self, rank: usize, name: &str, version: Option<u64>) -> Result<Option<Restored>>;
+
+    /// Report application utilization (feeds the predictive scheduler).
+    /// Advisory; transports without a feedback channel drop it.
+    fn report_utilization(&self, _util: f32) {}
+}

@@ -172,7 +172,7 @@ mod tests {
                         app.superstep().unwrap();
                         if ckpt_every > 0 && app.superstep % ckpt_every == 0 {
                             let v = app.collective_checkpoint(&client).unwrap();
-                            client.checkpoint_wait("bsp", v).unwrap();
+                            client.checkpoint_wait_done("bsp", v).unwrap();
                         }
                     }
                     (app.field_sum(), app.field())

@@ -190,7 +190,7 @@ mod tests {
         }
         let digest = app.state_digest();
         let v = app.checkpoint(&client).unwrap();
-        client.checkpoint_wait("hacc", v).unwrap();
+        client.checkpoint_wait_done("hacc", v).unwrap();
         // Trash the live state, then restart.
         for _ in 0..3 {
             app.step();

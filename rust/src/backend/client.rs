@@ -1,0 +1,291 @@
+//! Client side of the daemon socket: [`BackendClient`] (connection
+//! factory + admin one-shots) and [`SocketTransport`] (the
+//! [`Transport`](crate::api::Transport) implementation that makes daemon
+//! clients ordinary [`VelocClient`](crate::api::VelocClient)s).
+//!
+//! Payload handoff: containers at most `inline_max` bytes (announced by
+//! the daemon at registration) travel inside the submit frame; larger
+//! ones are written — and fsynced — as files in the daemon's staging
+//! directory on the local tier, and the frame carries only the file name.
+//! The daemon adopts the staged file by rename, so large checkpoints
+//! cross the process boundary without a second copy.
+
+#![cfg(unix)]
+
+use crate::api::{Transport, VelocClient};
+use crate::backend::{wire, Backpressure};
+use crate::pipeline::CkptStatus;
+use crate::recovery::Restored;
+use crate::util::bytes::Checkpoint;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Entry point for applications talking to a `veloc daemon`: remembers
+/// the socket path and builds per-rank clients (each with its own
+/// connection).
+pub struct BackendClient {
+    socket: PathBuf,
+    wait_timeout: Duration,
+}
+
+impl BackendClient {
+    /// Point at a daemon socket (no connection is made yet).
+    pub fn connect(socket: impl Into<PathBuf>) -> BackendClient {
+        BackendClient {
+            socket: socket.into(),
+            wait_timeout: Duration::from_secs(60),
+        }
+    }
+
+    /// Override the `checkpoint_wait` budget (default 60 s).
+    pub fn with_wait_timeout(mut self, d: Duration) -> BackendClient {
+        self.wait_timeout = d;
+        self
+    }
+
+    /// Open a connection, register `(job, rank)` and wrap the transport
+    /// in a [`VelocClient`] — the same API the in-process path serves.
+    pub fn client(&self, job: &str, rank: usize) -> Result<VelocClient> {
+        let transport =
+            SocketTransport::open(&self.socket, job, rank, self.wait_timeout)?;
+        Ok(VelocClient::with_transport(Arc::new(transport), rank))
+    }
+
+    fn one_shot(&self, header: &Json) -> Result<Json> {
+        let mut stream = UnixStream::connect(&self.socket)
+            .with_context(|| format!("connect {}", self.socket.display()))?;
+        wire::write_frame(&mut stream, header, &[])?;
+        let (resp, _body) = wire::read_frame(&mut stream)?;
+        check_ok(&resp)?;
+        Ok(resp)
+    }
+
+    /// Fetch the daemon's metrics dump (the `backend.*` gauges live here).
+    pub fn stats(&self) -> Result<Json> {
+        let resp = self.one_shot(&Json::obj().set("op", "stats"))?;
+        resp.get("metrics")
+            .cloned()
+            .ok_or_else(|| anyhow!("stats response missing metrics"))
+    }
+
+    /// Ask the daemon to drain and exit its serve loop.
+    pub fn shutdown(&self) -> Result<()> {
+        self.one_shot(&Json::obj().set("op", "shutdown"))?;
+        Ok(())
+    }
+}
+
+fn check_ok(resp: &Json) -> Result<()> {
+    if resp.bool_or("ok", false) {
+        return Ok(());
+    }
+    bail!("daemon error: {}", resp.str_or("err", "unknown"));
+}
+
+/// The socket [`Transport`]: one registered connection per client,
+/// requests serialized under a lock (the application may share a client
+/// handle across threads).
+pub struct SocketTransport {
+    stream: Mutex<UnixStream>,
+    job: String,
+    /// Daemon staging directory for large-payload handoff.
+    staging: PathBuf,
+    /// Largest payload the daemon accepts inline.
+    inline_max: usize,
+    wait_timeout: Duration,
+}
+
+/// Process-global uniquifier for staged file names: combined with the
+/// process id, no two submissions — across transports, reconnects and
+/// processes — can ever name the same staged file, so a resubmit can
+/// never truncate a file the daemon is still adopting.
+static STAGE_NONCE: AtomicU64 = AtomicU64::new(0);
+
+impl SocketTransport {
+    /// Connect and register; the daemon answers with the staging
+    /// directory and the inline-payload bound.
+    pub fn open(
+        socket: &std::path::Path,
+        job: &str,
+        rank: usize,
+        wait_timeout: Duration,
+    ) -> Result<SocketTransport> {
+        let mut stream = UnixStream::connect(socket)
+            .with_context(|| format!("connect {}", socket.display()))?;
+        wire::write_frame(
+            &mut stream,
+            &Json::obj()
+                .set("op", "register")
+                .set("job", job)
+                .set("rank", rank),
+            &[],
+        )?;
+        let (resp, _body) = wire::read_frame(&mut stream)?;
+        check_ok(&resp)?;
+        let staging = PathBuf::from(
+            resp.get("staging")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("register response missing staging dir"))?,
+        );
+        let inline_max = resp.usize_or("inline_max", 64 << 10);
+        Ok(SocketTransport {
+            stream: Mutex::new(stream),
+            job: job.to_string(),
+            staging,
+            inline_max,
+            wait_timeout,
+        })
+    }
+
+    fn request(&self, header: &Json, body: &[u8]) -> Result<(Json, Vec<u8>)> {
+        let mut stream = self.stream.lock().unwrap();
+        wire::write_frame(&mut *stream, header, body)?;
+        let frame = wire::read_frame(&mut *stream)?;
+        check_ok(&frame.0)?;
+        Ok(frame)
+    }
+
+    /// Stage a large payload as a durable file the daemon can adopt.
+    fn stage(&self, rank: usize, version: u64, payload: &[u8]) -> Result<String> {
+        let name = format!(
+            "{}.{rank}.{version}.{}-{}.vckp",
+            self.job,
+            std::process::id(),
+            STAGE_NONCE.fetch_add(1, Ordering::SeqCst)
+        );
+        let path = self.staging.join(&name);
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("stage payload {}", path.display()))?;
+        f.write_all(payload)?;
+        // The handoff contract: bytes are durable before the daemon acks
+        // a journal record that points at them.
+        f.sync_data()?;
+        Ok(name)
+    }
+}
+
+impl Transport for SocketTransport {
+    fn submit(
+        &self,
+        rank: usize,
+        name: &str,
+        version: u64,
+        ckpt: Checkpoint,
+        _started: std::time::Instant,
+    ) -> Result<()> {
+        let bytes = ckpt.encode();
+        let header = Json::obj()
+            .set("op", "submit")
+            .set("job", self.job.as_str())
+            .set("rank", rank)
+            .set("name", name)
+            .set("version", version);
+        let (resp, _body) = if bytes.len() <= self.inline_max {
+            self.request(&header, &bytes)?
+        } else {
+            // Probe admission before paying the staging write: under
+            // sustained backpressure every rejected retry would otherwise
+            // write (and fsync) the full payload just for the daemon to
+            // delete it. The probe is advisory — a slot filling between
+            // probe and submit degrades to an ordinary rejection.
+            let (probe, _b) = self.request(&header.clone().set("probe", true), &[])?;
+            if probe.bool_or("busy", false) {
+                return Err(anyhow::Error::new(Backpressure {
+                    job: self.job.clone(),
+                    depth: probe.usize_or("depth", 0),
+                }));
+            }
+            let staged = self.stage(rank, version, &bytes)?;
+            self.request(&header.set("staged", staged.as_str()), &[])?
+        };
+        if resp.bool_or("busy", false) {
+            return Err(anyhow::Error::new(Backpressure {
+                job: self.job.clone(),
+                depth: resp.usize_or("depth", 0),
+            }));
+        }
+        if !resp.bool_or("acked", false) {
+            bail!("daemon did not ack submit of {name} v{version}");
+        }
+        Ok(())
+    }
+
+    fn wait(&self, rank: usize, name: &str, version: u64) -> Result<CkptStatus> {
+        // Chunked waits, for two reasons: the daemon caps each wait
+        // request (a client must not pin a handler thread forever), and
+        // each slice releases this transport's stream mutex so other
+        // threads sharing the client can interleave submits/restores
+        // instead of stalling behind a long wait.
+        const SLICE: Duration = Duration::from_millis(500);
+        let deadline = std::time::Instant::now() + self.wait_timeout;
+        loop {
+            let now = std::time::Instant::now();
+            let remaining = deadline.saturating_duration_since(now);
+            let slice = remaining.min(SLICE).max(Duration::from_millis(1));
+            let (resp, _body) = self.request(
+                &Json::obj()
+                    .set("op", "wait")
+                    .set("job", self.job.as_str())
+                    .set("rank", rank)
+                    .set("name", name)
+                    .set("version", version)
+                    .set("timeout_ms", slice.as_millis() as u64),
+                &[],
+            )?;
+            let st = wire::status_from_json(&resp)?;
+            if st != CkptStatus::TimedOut || remaining <= slice {
+                return Ok(st);
+            }
+        }
+    }
+
+    fn restore(
+        &self,
+        rank: usize,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<Option<Restored>> {
+        let mut header = Json::obj()
+            .set("op", "restart")
+            .set("job", self.job.as_str())
+            .set("rank", rank)
+            .set("name", name);
+        if let Some(v) = version {
+            header = header.set("version", v);
+        }
+        let (resp, body) = self.request(&header, &[])?;
+        if !resp.bool_or("found", false) {
+            return Ok(None);
+        }
+        // Oversized containers come back as staged files (mirror of the
+        // submit-side handoff); this side owns the cleanup.
+        let bytes = match resp.get("staged").and_then(Json::as_str) {
+            Some(file) => {
+                let path = self.staging.join(file);
+                let b = std::fs::read(&path)
+                    .with_context(|| format!("staged restore {}", path.display()))?;
+                let _ = std::fs::remove_file(&path);
+                b
+            }
+            None => body,
+        };
+        let ckpt = Checkpoint::decode(&bytes)?;
+        Ok(Some(Restored {
+            version: resp
+                .get("version")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("restart response missing version"))?,
+            level: resp
+                .get("level")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("restart response missing level"))? as u8,
+            ckpt,
+        }))
+    }
+}

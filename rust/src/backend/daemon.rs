@@ -1,0 +1,1178 @@
+//! The backend daemon: hosts a [`VelocRuntime`] out of the application
+//! process and serves many jobs through admission-controlled, journaled,
+//! fair-scheduled submission queues.
+//!
+//! ## Lifecycle of one submit
+//!
+//! 1. **Admit** — the job's unsettled count is checked against
+//!    `backend.queue_depth`; beyond it the submit is rejected with
+//!    [`Backpressure`] (typed, client-visible) instead of buffering.
+//! 2. **Journal** — the payload is made durable in the journal's payload
+//!    store (staged handoffs are renamed in without a copy) and the
+//!    `begin` record fsynced. Only then is the submit **acked**: from
+//!    this point a daemon crash cannot lose the checkpoint.
+//! 3. **Dispatch** — the fair queue feeds the dispatcher round-robin
+//!    across jobs; the dispatcher decodes the payload and submits it to
+//!    the rank's pipeline engine (blocking prefix on the dispatcher
+//!    thread, async tail on the runtime's backend pool, gated by the
+//!    existing scheduler).
+//! 4. **Settle** — a single settle-poller thread multiplexes every
+//!    outstanding submission: when a command reaches its terminal status
+//!    it appends the journal `end` record and releases the admission
+//!    slot (no per-submission thread, so slow flushes cannot head-of-line
+//!    block settlement bookkeeping).
+//!
+//! ## Crash and replay
+//!
+//! [`BackendDaemon::crash`] models a daemon death (used by the
+//! `backend-crash` scenarios): queued work is dropped, in-flight tails are
+//! killed, nothing settles. A fresh daemon over the same journal
+//! directory replays every acked-but-unsettled entry from the durable
+//! payload copies and resubmits it — the paper's claim that a backend
+//! failure never loses an acked checkpoint.
+
+use crate::api::{SimHooks, Transport, VelocClient, VelocConfig, VelocRuntime};
+use crate::backend::journal::Journal;
+use crate::backend::queue::{FairQueue, Submission};
+use crate::backend::{scoped_name, valid_job_id, Backpressure, BackendConfig};
+use crate::pipeline::{CkptContext, CkptStatus};
+use crate::recovery::Restored;
+use crate::util::bytes::Checkpoint;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One dispatched-but-unsettled submission the settle poller tracks. The
+/// list doubles as the in-flight dedup set: a same-(rank, name, version)
+/// resubmission is held back until the earlier one settles, because the
+/// engine tracker keys commands by that triple and two concurrent
+/// submissions would make the terminal status ambiguous (the first tail's
+/// `Done` must never settle the second's journal entry).
+#[derive(Clone)]
+struct Watch {
+    id: u64,
+    job: String,
+    rank: usize,
+    name: String,
+    version: u64,
+}
+
+/// Outcome of an accepted-or-rejected submit.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitAck {
+    /// Journaled durably; the daemon now owns the checkpoint.
+    Acked,
+    /// Admission control pushed back: the job has `unsettled` checkpoints
+    /// outstanding, at or beyond the configured depth.
+    Busy {
+        /// The job's unsettled count at rejection time.
+        unsettled: usize,
+    },
+}
+
+/// How a submit's payload arrives.
+pub enum Payload {
+    /// The encoded container travels in the request itself. Owned (and
+    /// shared): the daemon keeps the same allocation for the dispatcher's
+    /// decode, so the hot inline path never copies or re-reads it.
+    Inline(Arc<Vec<u8>>),
+    /// The client staged the (already fsynced) container as a file in the
+    /// daemon's staging directory — the local-tier handoff; the daemon
+    /// adopts the file by rename.
+    Staged(PathBuf),
+}
+
+/// The out-of-process checkpoint engine.
+pub struct BackendDaemon {
+    cfg: BackendConfig,
+    runtime: Arc<VelocRuntime>,
+    journal: Arc<Journal>,
+    queue: Arc<FairQueue>,
+    /// Dispatched-but-unsettled submissions, multiplexed by the single
+    /// settle-poller thread (no per-submission thread is ever pinned, so
+    /// a slow flush cannot head-of-line block settlement bookkeeping).
+    watches: Arc<Mutex<Vec<Watch>>>,
+    stop: Arc<AtomicBool>,
+    serve_stop: AtomicBool,
+    dispatch_paused: Arc<AtomicBool>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    settler: Mutex<Option<std::thread::JoinHandle<()>>>,
+    jobs: Mutex<BTreeSet<String>>,
+    staging: PathBuf,
+    /// Uniquifies staged *restore* handoff files (containers too large
+    /// for one response frame travel back through the staging dir).
+    restore_seq: std::sync::atomic::AtomicU64,
+    /// Exclusive flock on `<dir>/daemon.lock` for this daemon's lifetime
+    /// (unix): a second daemon on the same home dir would rewrite the
+    /// live WAL and sweep the first one's payloads — refused instead.
+    _dir_lock: Option<std::fs::File>,
+}
+
+/// Take the daemon-home flock, retrying briefly: a crashed predecessor's
+/// lock is held only by lingering connection handlers and releases within
+/// moments of their sockets closing.
+#[cfg(unix)]
+fn lock_daemon_dir(dir: &Path) -> Result<Option<std::fs::File>> {
+    use std::os::unix::io::AsRawFd;
+    let path = dir.join("daemon.lock");
+    let f = std::fs::File::create(&path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    loop {
+        let rc = unsafe { libc::flock(f.as_raw_fd(), libc::LOCK_EX | libc::LOCK_NB) };
+        if rc == 0 {
+            return Ok(Some(f));
+        }
+        if std::time::Instant::now() >= deadline {
+            bail!(
+                "daemon home {} is owned by a live daemon (flock on {} busy); \
+                 running two daemons over one journal would corrupt it",
+                dir.display(),
+                path.display()
+            );
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[cfg(not(unix))]
+fn lock_daemon_dir(_dir: &Path) -> Result<Option<std::fs::File>> {
+    Ok(None)
+}
+
+/// Owner-only permissions on a daemon-owned directory (best effort; the
+/// wire protocol is unauthenticated, so filesystem permissions *are* the
+/// access control for both the socket and the payload bytes).
+fn harden_dir(dir: &Path) {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::PermissionsExt;
+        let _ = std::fs::set_permissions(dir, std::fs::Permissions::from_mode(0o700));
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+}
+
+impl BackendDaemon {
+    /// Build and start a daemon from a full runtime configuration (its
+    /// `backend` section configures the daemon itself). Replays the
+    /// journal before accepting new work.
+    pub fn start(config: VelocConfig) -> Result<Arc<BackendDaemon>> {
+        Self::start_with_hooks(config, SimHooks::default())
+    }
+
+    /// [`BackendDaemon::start`] with fault-injection instrumentation (the
+    /// backend-crash scenarios pass a shared fabric through
+    /// [`SimHooks::fabric`] so storage survives the simulated crash).
+    pub fn start_with_hooks(
+        config: VelocConfig,
+        hooks: SimHooks,
+    ) -> Result<Arc<BackendDaemon>> {
+        let cfg = config.backend.clone();
+        cfg.validate()?;
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("create daemon dir {}", cfg.dir.display()))?;
+        // The home dir holds checkpoint payloads and the socket: owner-
+        // only, so other local users can neither read jobs' bytes nor
+        // reach the (unauthenticated) wire protocol.
+        harden_dir(&cfg.dir);
+        // Single-instance guard before any journal/staging mutation.
+        let dir_lock = lock_daemon_dir(&cfg.dir)?;
+        let staging = cfg.dir.join("staging");
+        std::fs::create_dir_all(&staging)?;
+        harden_dir(&staging);
+        // Clients resolve staged file names against this path, possibly
+        // from another working directory: hand out the canonical form.
+        let staging = std::fs::canonicalize(&staging)?;
+        // No client is connected yet, so anything still in staging/ is an
+        // orphan from a died-mid-handoff client or a rejected submit of a
+        // previous incarnation: sweep it.
+        if let Ok(entries) = std::fs::read_dir(&staging) {
+            for e in entries.flatten() {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+
+        let runtime = VelocRuntime::new_with_hooks(config, hooks)?;
+        let metrics = Arc::clone(runtime.metrics());
+        let (journal, pending) = Journal::open(&cfg.dir.join("journal"), cfg.fsync)?;
+        let journal = Arc::new(journal);
+        let queue = FairQueue::new(cfg.queue_depth, Some(Arc::clone(&metrics)));
+
+        // Cold start with pending work: merge whatever lineage the previous
+        // incarnation persisted *before* re-running the pipeline, so the
+        // replay's own lineage writes extend the history instead of
+        // replacing it with only the replayed versions.
+        let mut seen_names: BTreeSet<&str> = BTreeSet::new();
+        for e in &pending {
+            if seen_names.insert(e.name.as_str()) {
+                let _ = runtime.reload_lineage(&e.name);
+            }
+        }
+        // Journal replay: everything acked before the crash re-enters the
+        // queue (bypassing admission — those acks already happened) and
+        // resumes its flush from the durable payload copy.
+        for e in &pending {
+            queue.admit_replay(&e.job);
+            queue.push(Submission {
+                id: e.id,
+                job: e.job.clone(),
+                rank: e.rank,
+                name: e.name.clone(),
+                version: e.version,
+                payload: e.payload.clone(),
+                bytes: None,
+            });
+            metrics.incr("backend.journal.replayed", 1);
+        }
+
+        let daemon = Arc::new(BackendDaemon {
+            cfg,
+            runtime,
+            journal,
+            queue,
+            watches: Arc::new(Mutex::new(Vec::new())),
+            stop: Arc::new(AtomicBool::new(false)),
+            serve_stop: AtomicBool::new(false),
+            dispatch_paused: Arc::new(AtomicBool::new(false)),
+            dispatcher: Mutex::new(None),
+            settler: Mutex::new(None),
+            jobs: Mutex::new(BTreeSet::new()),
+            staging,
+            restore_seq: std::sync::atomic::AtomicU64::new(0),
+            _dir_lock: dir_lock,
+        });
+        daemon.spawn_dispatcher();
+        daemon.spawn_settler();
+        Ok(daemon)
+    }
+
+    fn spawn_dispatcher(self: &Arc<Self>) {
+        let runtime = Arc::clone(&self.runtime);
+        let journal = Arc::clone(&self.journal);
+        let queue = Arc::clone(&self.queue);
+        let watches = Arc::clone(&self.watches);
+        let stop = Arc::clone(&self.stop);
+        let paused = Arc::clone(&self.dispatch_paused);
+        let handle = std::thread::Builder::new()
+            .name("veloc-dispatch".to_string())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    if paused.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(5));
+                        continue;
+                    }
+                    let Some(sub) = queue.pop(Duration::from_millis(25)) else {
+                        continue;
+                    };
+                    dispatch_one(&runtime, &journal, &queue, &watches, sub);
+                }
+            })
+            .expect("spawn dispatcher");
+        *self.dispatcher.lock().unwrap() = Some(handle);
+    }
+
+    /// One poller multiplexes settlement for every outstanding
+    /// submission: peek the engine tracker, append the journal `end`
+    /// record on a terminal status, release the admission slot.
+    fn spawn_settler(self: &Arc<Self>) {
+        let runtime = Arc::clone(&self.runtime);
+        let journal = Arc::clone(&self.journal);
+        let queue = Arc::clone(&self.queue);
+        let watches = Arc::clone(&self.watches);
+        let stop = Arc::clone(&self.stop);
+        let handle = std::thread::Builder::new()
+            .name("veloc-settle".to_string())
+            .spawn(move || {
+                let metrics = Arc::clone(runtime.metrics());
+                while !stop.load(Ordering::SeqCst) {
+                    let mut settled: Vec<(Watch, Option<String>)> = Vec::new();
+                    {
+                        let mut w = watches.lock().unwrap();
+                        w.retain(|x| {
+                            match runtime.engine(x.rank).status(x.rank, &x.name, x.version)
+                            {
+                                Some(CkptStatus::Done(_)) => {
+                                    settled.push((x.clone(), None));
+                                    false
+                                }
+                                Some(CkptStatus::Failed(msg)) => {
+                                    settled.push((x.clone(), Some(msg)));
+                                    false
+                                }
+                                _ => true,
+                            }
+                        });
+                    }
+                    for (x, failure) in settled {
+                        match failure {
+                            None => {
+                                let _ = journal.settle(x.id, true);
+                                metrics.incr("backend.settled", 1);
+                                metrics.incr(&format!("backend.settled.{}", x.job), 1);
+                            }
+                            Some(msg) => {
+                                eprintln!(
+                                    "veloc backend: {} v{} rank {} failed: {msg}",
+                                    x.name, x.version, x.rank
+                                );
+                                let _ = journal.settle(x.id, false);
+                                metrics.incr("backend.failed", 1);
+                            }
+                        }
+                        queue.settled(&x.job);
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            })
+            .expect("spawn settler");
+        *self.settler.lock().unwrap() = Some(handle);
+    }
+
+    /// The backend daemon's configuration.
+    pub fn backend_config(&self) -> &BackendConfig {
+        &self.cfg
+    }
+
+    /// The hosted runtime (metrics, recovery, fabric).
+    pub fn runtime(&self) -> &Arc<VelocRuntime> {
+        &self.runtime
+    }
+
+    /// Where clients stage large payloads for handoff (canonicalized).
+    pub fn staging_dir(&self) -> &Path {
+        &self.staging
+    }
+
+    /// Register a job/rank pair. Returns the rank's node id. Idempotent;
+    /// submits require a prior registration of their job.
+    pub fn register(&self, job: &str, rank: usize) -> Result<usize> {
+        if !valid_job_id(job) {
+            bail!("invalid job id {job:?} (use [A-Za-z0-9._-], no '@')");
+        }
+        let world = self.runtime.topology().world_size();
+        if rank >= world {
+            bail!("rank {rank} out of range (world size {world})");
+        }
+        self.jobs.lock().unwrap().insert(job.to_string());
+        // Opportunistic hygiene on a rare op: reclaim staged files whose
+        // client died mid-handoff (a live handoff spans seconds; anything
+        // this old is garbage), so a long-running daemon does not fill
+        // the fast tier between restarts.
+        self.sweep_stale_staging(Duration::from_secs(600));
+        Ok(self.runtime.topology().node_of(rank))
+    }
+
+    fn sweep_stale_staging(&self, max_age: Duration) {
+        let Ok(entries) = std::fs::read_dir(&self.staging) else {
+            return;
+        };
+        for e in entries.flatten() {
+            let stale = e
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .map(|age| age > max_age)
+                .unwrap_or(false);
+            if stale {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+
+    /// Admission probe: would a submit for `job` be admitted right now?
+    /// No slot is reserved — large-payload clients ask before paying the
+    /// staging write, and the race (the window filling between probe and
+    /// submit) degrades to an ordinary rejected submit.
+    pub fn admission_room(&self, job: &str) -> Result<bool> {
+        if !self.jobs.lock().unwrap().contains(job) {
+            bail!("job {job:?} is not registered");
+        }
+        Ok(self.queue.unsettled_of(job) < self.cfg.queue_depth)
+    }
+
+    /// Submit one encoded checkpoint container for `(job, rank, name,
+    /// version)`. On `Acked` the checkpoint is durably journaled; `Busy`
+    /// is the admission-control rejection.
+    pub fn submit(
+        &self,
+        job: &str,
+        rank: usize,
+        name: &str,
+        version: u64,
+        payload: Payload,
+    ) -> Result<SubmitAck> {
+        // The daemon owns a staged handoff the moment the frame arrives:
+        // rejected submits must not leak the file in staging/.
+        let discard_staged = |payload: &Payload| {
+            if let Payload::Staged(path) = payload {
+                let _ = std::fs::remove_file(path);
+            }
+        };
+        if !self.jobs.lock().unwrap().contains(job) {
+            discard_staged(&payload);
+            bail!("job {job:?} is not registered");
+        }
+        let world = self.runtime.topology().world_size();
+        if rank >= world {
+            discard_staged(&payload);
+            bail!("rank {rank} out of range (world size {world})");
+        }
+        if self.stop.load(Ordering::SeqCst) {
+            discard_staged(&payload);
+            bail!("backend daemon is shutting down");
+        }
+        if let Err(depth) = self.queue.try_admit(job) {
+            discard_staged(&payload);
+            // The depth try_admit observed at rejection time — not a
+            // racy re-read that a concurrent settle could undercut below
+            // the documented bound.
+            return Ok(SubmitAck::Busy { unsettled: depth });
+        }
+        let scoped = scoped_name(job, name);
+        // Inline submits keep the bytes for the dispatcher, so the hot
+        // path decodes from memory instead of re-reading what the journal
+        // just wrote; replay and staged handoffs use the durable file.
+        let mut kept: Option<Arc<Vec<u8>>> = None;
+        let journaled = match payload {
+            Payload::Inline(bytes) => {
+                let r = self.journal.begin(job, rank, &scoped, version, &bytes);
+                kept = Some(bytes);
+                r
+            }
+            Payload::Staged(path) => {
+                self.journal.begin_staged(job, rank, &scoped, version, &path)
+            }
+        };
+        let entry = match journaled {
+            Ok(e) => e,
+            Err(e) => {
+                // Nothing was acked: release the admission slot.
+                self.queue.settled(job);
+                return Err(e);
+            }
+        };
+        self.queue.push(Submission {
+            id: entry.id,
+            job: job.to_string(),
+            rank,
+            name: scoped,
+            version,
+            payload: entry.payload,
+            bytes: kept,
+        });
+        self.runtime.metrics().incr("backend.submits", 1);
+        Ok(SubmitAck::Acked)
+    }
+
+    /// Wait (or poll, with a zero timeout) for a submitted checkpoint's
+    /// status. A command that is journaled but not yet dispatched reports
+    /// [`CkptStatus::InFlight`] on polls.
+    pub fn wait(
+        &self,
+        job: &str,
+        rank: usize,
+        name: &str,
+        version: u64,
+        timeout: Duration,
+    ) -> Result<CkptStatus> {
+        let world = self.runtime.topology().world_size();
+        if rank >= world {
+            bail!("rank {rank} out of range (world size {world})");
+        }
+        let scoped = scoped_name(job, name);
+        if timeout.is_zero() {
+            return Ok(self
+                .runtime
+                .engine(rank)
+                .status(rank, &scoped, version)
+                .unwrap_or(CkptStatus::InFlight));
+        }
+        self.runtime
+            .engine(rank)
+            .wait(rank, &scoped, version, timeout)
+    }
+
+    /// Restart query: restore `version` (or the freshest restorable
+    /// version) of one job's checkpoint for `rank`. Cold daemons reload
+    /// the persisted lineage before probing, so restores work across
+    /// daemon restarts even for checkpoints the journal already settled.
+    pub fn restore(
+        &self,
+        job: &str,
+        rank: usize,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<Option<Restored>> {
+        let world = self.runtime.topology().world_size();
+        if rank >= world {
+            bail!("rank {rank} out of range (world size {world})");
+        }
+        let scoped = scoped_name(job, name);
+        if self.runtime.env().registry.versions(&scoped).is_empty() {
+            // Cold start: merge whatever lineage a previous incarnation
+            // persisted on the shared tiers. Absence is not an error —
+            // the job may simply never have checkpointed.
+            let _ = self.runtime.reload_lineage(&scoped);
+        }
+        let engine = self.runtime.engine(rank);
+        let restored = match version {
+            Some(v) => self
+                .runtime
+                .recovery()
+                .restore_version(engine, &scoped, rank, v)?,
+            None => self.runtime.recovery().restore_latest(engine, &scoped, rank)?,
+        };
+        if restored.is_some() {
+            self.runtime.metrics().incr("backend.restores", 1);
+        }
+        Ok(restored)
+    }
+
+    /// Pause/resume dispatching (maintenance lever: submits keep being
+    /// acked and journaled, nothing enters the pipeline until resumed).
+    pub fn pause_dispatch(&self, paused: bool) {
+        self.dispatch_paused.store(paused, Ordering::SeqCst);
+    }
+
+    /// Wait until every queued submission was handed to the pipeline
+    /// (dispatched — not necessarily settled). The backend-crash
+    /// scenarios use it to land the crash deterministically *after* the
+    /// blocking prefixes and acks, mid-drain.
+    pub fn wait_dispatched(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while self.queue.queued_total() > 0 {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+
+    /// Wait until every accepted submission settled (bounded by
+    /// `timeout`), then drain the runtime's own buffers. Returns whether
+    /// full settlement was reached.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let idle = self.queue.wait_idle(timeout);
+        self.runtime.drain();
+        idle
+    }
+
+    fn join_workers(&self) {
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.settler.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful stop: drain, then stop the dispatcher and the settle
+    /// poller. Returns whether the drain settled everything within
+    /// `timeout`.
+    pub fn shutdown(&self, timeout: Duration) -> bool {
+        let idle = self.drain(timeout);
+        self.stop.store(true, Ordering::SeqCst);
+        self.join_workers();
+        idle
+    }
+
+    /// Simulated daemon death (the `backend-crash` injection point):
+    /// queued submissions are dropped, in-flight async tails are killed
+    /// mid-drain, nothing further settles and the journal keeps every
+    /// acked-but-unsettled record. The only thing that survives is what
+    /// the contract requires: durable storage and the journal.
+    pub fn crash(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.clear_queued();
+        // The settle poller exits on `stop` without settling anything
+        // further; outstanding watches are abandoned with their journal
+        // entries pending — exactly what the replay needs.
+        self.join_workers();
+        // In-flight and queued pipeline tails die mid-drain.
+        self.runtime.backend().kill();
+    }
+
+    /// Build an ordinary [`VelocClient`] wired straight into this daemon
+    /// (no socket): the deterministic path the scenario engine and the
+    /// benchmarks use. `wait_timeout` bounds `checkpoint_wait`.
+    pub fn client(
+        self: &Arc<Self>,
+        job: &str,
+        rank: usize,
+        wait_timeout: Duration,
+    ) -> Result<VelocClient> {
+        self.register(job, rank)?;
+        Ok(VelocClient::with_transport(
+            Arc::new(DaemonTransport {
+                daemon: Arc::clone(self),
+                job: job.to_string(),
+                wait_timeout,
+            }),
+            rank,
+        ))
+    }
+}
+
+impl Drop for BackendDaemon {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.join_workers();
+    }
+}
+
+/// Decode, submit and register one queued submission for settlement
+/// watching. Runs on the dispatcher thread; the settle poller does the
+/// bookkeeping.
+fn dispatch_one(
+    runtime: &Arc<VelocRuntime>,
+    journal: &Arc<Journal>,
+    queue: &Arc<FairQueue>,
+    watches: &Arc<Mutex<Vec<Watch>>>,
+    sub: Submission,
+) {
+    // Same-command dedup: the engine tracker keys by (rank, name,
+    // version), so a resubmission of a still-settling command must wait —
+    // otherwise the first tail's terminal status would settle the second
+    // entry's journal record while its flushes are still running.
+    {
+        let held = watches.lock().unwrap().iter().any(|x| {
+            x.rank == sub.rank && x.version == sub.version && x.name == sub.name
+        });
+        if held {
+            queue.push(sub);
+            // The requeued item is immediately poppable again: breathe so
+            // this does not busy-spin while the first settles.
+            std::thread::sleep(Duration::from_millis(2));
+            return;
+        }
+    }
+    let metrics = Arc::clone(runtime.metrics());
+    let world = runtime.topology().world_size();
+    if sub.rank >= world {
+        // No engine exists for this rank, so the tracker cannot carry the
+        // failure; the journal settle + stderr line are all there is.
+        metrics.incr("backend.failed", 1);
+        eprintln!(
+            "veloc backend: {} v{} rank {}: rank out of range (world size {world})",
+            sub.name, sub.version, sub.rank
+        );
+        let _ = journal.settle(sub.id, false);
+        queue.settled(&sub.job);
+        return;
+    }
+    let fail = |why: &str| {
+        metrics.incr("backend.failed", 1);
+        eprintln!(
+            "veloc backend: {} v{} rank {}: {why}",
+            sub.name, sub.version, sub.rank
+        );
+        // Surface the terminal failure to waiters (otherwise a client
+        // blocks its whole budget into a TimedOut for a checkpoint the
+        // daemon just discarded).
+        runtime.engine(sub.rank).reject(
+            sub.rank,
+            &sub.name,
+            sub.version,
+            format!("backend dispatch failed: {why}"),
+        );
+        let _ = journal.settle(sub.id, false);
+        queue.settled(&sub.job);
+    };
+    let read: std::io::Result<std::borrow::Cow<'_, [u8]>> = match &sub.bytes {
+        Some(b) => Ok(std::borrow::Cow::Borrowed(b.as_slice())),
+        None => std::fs::read(&sub.payload).map(std::borrow::Cow::Owned),
+    };
+    let bytes = match read {
+        Ok(b) => b,
+        Err(e) => {
+            // A read error on an *acked* payload may be transient (flaky
+            // mount, ENOSPC recovery). Deleting the only durable copy
+            // would turn it permanent: leave the journal entry pending —
+            // the next daemon start replays it — and only release the
+            // admission slot.
+            metrics.incr("backend.dispatch.deferred", 1);
+            eprintln!(
+                "veloc backend: {} v{} rank {}: payload unreadable, left \
+                 journaled for replay: {e}",
+                sub.name, sub.version, sub.rank
+            );
+            queue.settled(&sub.job);
+            return;
+        }
+    };
+    let ckpt = match Checkpoint::decode(&bytes) {
+        Ok(c) => c,
+        // A CRC/decode failure is permanent — no replay can fix it.
+        Err(e) => {
+            fail(&format!("payload corrupt: {e:#}"));
+            return;
+        }
+    };
+    let node = runtime.topology().node_of(sub.rank);
+    let ctx = CkptContext::new(&sub.name, sub.rank, node, sub.version, ckpt);
+    if let Err(e) = runtime.engine(sub.rank).submit(ctx) {
+        fail(&format!("pipeline rejected: {e:#}"));
+        return;
+    }
+    metrics.incr(&format!("backend.dispatched.{}", sub.job), 1);
+    watches.lock().unwrap().push(Watch {
+        id: sub.id,
+        job: sub.job,
+        rank: sub.rank,
+        name: sub.name,
+        version: sub.version,
+    });
+}
+
+/// The in-process [`Transport`] over a daemon instance: identical
+/// semantics to the socket path minus the socket (fsync-before-ack,
+/// admission control, fair dispatch). Used by the scenario engine and
+/// `ipc_bench`; applications normally use
+/// [`SocketTransport`](crate::backend::SocketTransport).
+pub struct DaemonTransport {
+    daemon: Arc<BackendDaemon>,
+    job: String,
+    wait_timeout: Duration,
+}
+
+impl Transport for DaemonTransport {
+    fn submit(
+        &self,
+        rank: usize,
+        name: &str,
+        version: u64,
+        ckpt: Checkpoint,
+        _started: std::time::Instant,
+    ) -> Result<()> {
+        let bytes = Arc::new(ckpt.encode());
+        match self
+            .daemon
+            .submit(&self.job, rank, name, version, Payload::Inline(bytes))?
+        {
+            SubmitAck::Acked => Ok(()),
+            SubmitAck::Busy { unsettled } => Err(anyhow::Error::new(Backpressure {
+                job: self.job.clone(),
+                depth: unsettled,
+            })),
+        }
+    }
+
+    fn wait(&self, rank: usize, name: &str, version: u64) -> Result<CkptStatus> {
+        self.daemon
+            .wait(&self.job, rank, name, version, self.wait_timeout)
+    }
+
+    fn restore(
+        &self,
+        rank: usize,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<Option<Restored>> {
+        self.daemon.restore(&self.job, rank, name, version)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket front-end (Unix domain sockets).
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+impl BackendDaemon {
+    /// Bind the configured Unix socket and serve clients until a
+    /// `shutdown` request arrives; then drain gracefully. Each connection
+    /// gets a handler thread; a stale socket file is replaced.
+    pub fn serve(self: &Arc<Self>) -> Result<()> {
+        use std::os::unix::net::UnixListener;
+        let path = self.cfg.socket_path();
+        if path.exists() {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("remove stale socket {}", path.display()))?;
+        }
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("bind {}", path.display()))?;
+        listener.set_nonblocking(true)?;
+        while !self.serve_stop.load(Ordering::SeqCst) && !self.stop.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    if let Err(e) = stream.set_nonblocking(false) {
+                        eprintln!("veloc daemon: accepted connection unusable: {e}");
+                        continue;
+                    }
+                    let daemon = Arc::clone(self);
+                    // Handlers detach: they exit when their peer hangs up
+                    // (read_frame errors) or after answering post-shutdown.
+                    std::thread::spawn(move || daemon.handle_conn(stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => {
+                    // Transient accept errors (EMFILE under load, a peer
+                    // resetting mid-handshake) must not take the backend
+                    // away from every connected job: log and keep serving.
+                    eprintln!("veloc daemon: accept on {}: {e}", path.display());
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        // Graceful exits drain; a crashed daemon (stop already set) must
+        // not wait on work that can no longer settle.
+        if !self.stop.load(Ordering::SeqCst) {
+            self.shutdown(Duration::from_secs(60));
+        }
+        let _ = std::fs::remove_file(&path);
+        Ok(())
+    }
+
+    fn handle_conn(self: Arc<Self>, mut stream: std::os::unix::net::UnixStream) {
+        use crate::backend::wire;
+        use crate::util::json::Json;
+        loop {
+            let (hdr, body) = match wire::read_frame(&mut stream) {
+                Ok(f) => f,
+                Err(_) => return, // peer disconnected
+            };
+            let (resp, rbody) = match self.handle_op(&hdr, body) {
+                Ok(r) => r,
+                Err(e) => (
+                    Json::obj().set("ok", false).set("err", format!("{e:#}")),
+                    Vec::new(),
+                ),
+            };
+            if wire::write_frame(&mut stream, &resp, &rbody).is_err() {
+                return;
+            }
+            if self.serve_stop.load(Ordering::SeqCst) {
+                return;
+            }
+        }
+    }
+
+    fn handle_op(
+        &self,
+        hdr: &crate::util::json::Json,
+        body: Vec<u8>,
+    ) -> Result<(crate::util::json::Json, Vec<u8>)> {
+        use crate::backend::wire;
+        use crate::util::json::Json;
+        // Required fields bail instead of defaulting: a malformed frame
+        // must never silently act on rank 0 / version 0 / job "".
+        let job = || -> Result<&str> {
+            match hdr.get("job").and_then(Json::as_str) {
+                Some(j) if !j.is_empty() => Ok(j),
+                _ => Err(anyhow!("frame missing \"job\"")),
+            }
+        };
+        let rank = || {
+            hdr.get("rank")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("frame missing numeric \"rank\""))
+        };
+        let version = || {
+            hdr.get("version")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("frame missing numeric \"version\""))
+        };
+        let name = || {
+            match hdr.get("name").and_then(Json::as_str) {
+                Some(n) if !n.is_empty() => Ok(n),
+                _ => Err(anyhow!("frame missing \"name\"")),
+            }
+        };
+        match hdr.str_or("op", "") {
+            "register" => {
+                let node = self.register(job()?, rank()?)?;
+                Ok((
+                    Json::obj()
+                        .set("ok", true)
+                        .set("node", node)
+                        .set("staging", self.staging.to_string_lossy().as_ref())
+                        .set("inline_max", self.cfg.inline_max),
+                    Vec::new(),
+                ))
+            }
+            "submit" => {
+                // Admission probe: no payload, no reservation — answers
+                // "would a submit be admitted right now?" so clients can
+                // skip staging a large payload that would be rejected.
+                if hdr.bool_or("probe", false) {
+                    return Ok(if self.admission_room(job()?)? {
+                        (Json::obj().set("ok", true).set("admit", true), Vec::new())
+                    } else {
+                        (
+                            Json::obj()
+                                .set("ok", true)
+                                .set("busy", true)
+                                .set("depth", self.queue.unsettled_of(job()?)),
+                            Vec::new(),
+                        )
+                    });
+                }
+                // Resolve the staged handoff first: the daemon owns that
+                // file from the moment the frame names it, so *every*
+                // early exit below must discard it (submit itself
+                // discards on its own rejections).
+                let staged: Option<PathBuf> = match hdr.get("staged").and_then(Json::as_str)
+                {
+                    Some(file) => {
+                        // A bare file name inside the staging dir — never
+                        // a path. With separators rejected, only the
+                        // exact dot components could still escape (a name
+                        // merely *containing* ".." is legal: job ids may
+                        // contain dots).
+                        if file.is_empty()
+                            || file.contains('/')
+                            || file.contains('\\')
+                            || file == "."
+                            || file == ".."
+                        {
+                            bail!("invalid staged file name {file:?}");
+                        }
+                        Some(self.staging.join(file))
+                    }
+                    None => None,
+                };
+                let fields = job()
+                    .and_then(|j| rank().map(|r| (j, r)))
+                    .and_then(|(j, r)| name().map(|n| (j, r, n)))
+                    .and_then(|(j, r, n)| version().map(|v| (j, r, n, v)));
+                let (job, rank, name, version) = match fields {
+                    Ok(f) => f,
+                    Err(e) => {
+                        if let Some(p) = &staged {
+                            let _ = std::fs::remove_file(p);
+                        }
+                        return Err(e);
+                    }
+                };
+                let payload = match &staged {
+                    Some(p) => Payload::Staged(p.clone()),
+                    // The handler owns the frame body: hand the existing
+                    // allocation straight through, no copy.
+                    None => Payload::Inline(Arc::new(body)),
+                };
+                match self.submit(job, rank, name, version, payload)? {
+                    SubmitAck::Acked => {
+                        Ok((Json::obj().set("ok", true).set("acked", true), Vec::new()))
+                    }
+                    SubmitAck::Busy { unsettled } => Ok((
+                        Json::obj()
+                            .set("ok", true)
+                            .set("busy", true)
+                            .set("depth", unsettled),
+                        Vec::new(),
+                    )),
+                }
+            }
+            "wait" => {
+                let ms = hdr.get("timeout_ms").and_then(Json::as_u64).unwrap_or(0);
+                // Cap per-request waits so a client cannot pin a handler
+                // thread forever; `SocketTransport::wait` re-issues
+                // chunked waits to spend a longer budget.
+                let timeout = Duration::from_millis(ms.min(600_000));
+                let st = self.wait(job()?, rank()?, name()?, version()?, timeout)?;
+                Ok((wire::status_to_json(&st).set("ok", true), Vec::new()))
+            }
+            "restart" => {
+                // The version is genuinely optional here: absent means
+                // "freshest restorable".
+                let version = hdr.get("version").and_then(Json::as_u64);
+                match self.restore(job()?, rank()?, name()?, version)? {
+                    Some(r) => {
+                        let header = Json::obj()
+                            .set("ok", true)
+                            .set("found", true)
+                            .set("version", r.version)
+                            .set("level", r.level as u64);
+                        let bytes = r.ckpt.encode();
+                        // Containers too large for one response frame
+                        // travel back through the staging dir (mirror of
+                        // the submit-side handoff); the client reads and
+                        // deletes the file.
+                        if bytes.len() > wire::MAX_BODY {
+                            let file = format!(
+                                "restore.{}.vckp",
+                                self.restore_seq
+                                    .fetch_add(1, Ordering::SeqCst)
+                            );
+                            std::fs::write(self.staging.join(&file), &bytes)?;
+                            Ok((header.set("staged", file.as_str()), Vec::new()))
+                        } else {
+                            Ok((header, bytes))
+                        }
+                    }
+                    None => Ok((
+                        Json::obj().set("ok", true).set("found", false),
+                        Vec::new(),
+                    )),
+                }
+            }
+            "stats" => Ok((
+                Json::obj()
+                    .set("ok", true)
+                    .set("metrics", self.runtime.metrics().to_json()),
+                Vec::new(),
+            )),
+            "shutdown" => {
+                self.serve_stop.store(true, Ordering::SeqCst);
+                Ok((Json::obj().set("ok", true), Vec::new()))
+            }
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    static DIRS: AtomicU64 = AtomicU64::new(0);
+
+    fn daemon_config(tag: &str) -> VelocConfig {
+        let mut cfg = VelocConfig::default().with_nodes(2, 1);
+        cfg.stack.erasure_group = 0;
+        cfg.backend.dir = std::env::temp_dir().join(format!(
+            "veloc-daemon-test-{tag}-{}-{}",
+            std::process::id(),
+            DIRS.fetch_add(1, Ordering::SeqCst)
+        ));
+        cfg.backend.queue_depth = 8;
+        cfg
+    }
+
+    fn cleanup(cfg: &VelocConfig) {
+        let _ = std::fs::remove_dir_all(&cfg.backend.dir);
+    }
+
+    #[test]
+    fn daemon_roundtrip_checkpoint_and_restore() {
+        let cfg = daemon_config("rt");
+        let daemon = BackendDaemon::start(cfg.clone()).unwrap();
+        let client = daemon.client("jobA", 0, Duration::from_secs(30)).unwrap();
+        let h = client.mem_protect(0, vec![42u8; 8 << 10]);
+        client.checkpoint("app", 1).unwrap();
+        let st = client.checkpoint_wait("app", 1).unwrap();
+        assert!(matches!(st, CkptStatus::Done(_)), "{st:?}");
+        *h.lock().unwrap() = vec![0u8; 8 << 10];
+        let info = client.restart("app").unwrap().expect("restore");
+        assert_eq!(info.version, 1);
+        assert_eq!(*h.lock().unwrap(), vec![42u8; 8 << 10]);
+        assert!(daemon.drain(Duration::from_secs(10)));
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn unregistered_job_rejected() {
+        let cfg = daemon_config("reg");
+        let daemon = BackendDaemon::start(cfg.clone()).unwrap();
+        let err = daemon
+            .submit("ghost", 0, "app", 1, Payload::Inline(Arc::new(b"VCKP".to_vec())))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not registered"), "{err}");
+        assert!(daemon.register("bad job", 0).is_err());
+        assert!(daemon.register("ok-job", 99).is_err());
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn two_jobs_never_collide_on_versions() {
+        let cfg = daemon_config("collide");
+        let daemon = BackendDaemon::start(cfg.clone()).unwrap();
+        let a = daemon.client("jobA", 0, Duration::from_secs(30)).unwrap();
+        let b = daemon.client("jobB", 0, Duration::from_secs(30)).unwrap();
+        let ha = a.mem_protect(0, vec![0xAA; 4 << 10]);
+        let hb = b.mem_protect(0, vec![0xBB; 4 << 10]);
+        // Same rank, same name, same version — different jobs.
+        a.checkpoint("app", 1).unwrap();
+        b.checkpoint("app", 1).unwrap();
+        assert!(matches!(a.checkpoint_wait("app", 1).unwrap(), CkptStatus::Done(_)));
+        assert!(matches!(b.checkpoint_wait("app", 1).unwrap(), CkptStatus::Done(_)));
+        *ha.lock().unwrap() = Vec::new();
+        *hb.lock().unwrap() = Vec::new();
+        a.restart_version("app", 1).unwrap().expect("job A restore");
+        b.restart_version("app", 1).unwrap().expect("job B restore");
+        assert_eq!(*ha.lock().unwrap(), vec![0xAA; 4 << 10]);
+        assert_eq!(*hb.lock().unwrap(), vec![0xBB; 4 << 10]);
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn backpressure_is_typed_and_releases_on_settle() {
+        let mut cfg = daemon_config("bp");
+        cfg.backend.queue_depth = 2;
+        let daemon = BackendDaemon::start(cfg.clone()).unwrap();
+        let client = daemon.client("jobA", 0, Duration::from_secs(30)).unwrap();
+        client.mem_protect(0, vec![1u8; 4 << 10]);
+        // Stall the drain so nothing settles while we fill the window.
+        daemon.runtime().backend().pause_background(true);
+        client.checkpoint("app", 1).unwrap();
+        client.checkpoint("app", 2).unwrap();
+        let err = client.checkpoint("app", 3).unwrap_err();
+        let bp = err
+            .downcast_ref::<Backpressure>()
+            .expect("typed backpressure");
+        assert_eq!(bp.job, "jobA");
+        assert!(daemon.runtime().metrics().counter("backend.rejected") >= 1);
+        daemon.runtime().backend().pause_background(false);
+        assert!(daemon.drain(Duration::from_secs(30)), "window drains");
+        client.checkpoint("app", 3).unwrap();
+        assert!(matches!(
+            client.checkpoint_wait("app", 3).unwrap(),
+            CkptStatus::Done(_)
+        ));
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn crash_and_replay_settles_acked_checkpoints() {
+        let cfg = daemon_config("crash");
+        let fabric = Arc::new(
+            crate::storage::StorageFabric::build(&cfg.fabric).unwrap(),
+        );
+        {
+            let hooks = SimHooks {
+                fabric: Some(Arc::clone(&fabric)),
+                ..SimHooks::default()
+            };
+            let daemon = BackendDaemon::start_with_hooks(cfg.clone(), hooks).unwrap();
+            let client = daemon.client("jobA", 0, Duration::from_secs(30)).unwrap();
+            client.mem_protect(0, vec![7u8; 8 << 10]);
+            // Hold the async tails: the submit is acked + journaled but
+            // never settles before the crash.
+            daemon.runtime().backend().pause_background(true);
+            client.checkpoint("app", 1).unwrap();
+            // Let the dispatcher pick it up (deterministic enough: poll).
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            while daemon.queue.queued_total() > 0 && std::time::Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            daemon.crash();
+        }
+        // A fresh daemon over the same journal + storage replays and
+        // settles the acked checkpoint.
+        let hooks = SimHooks {
+            fabric: Some(fabric),
+            ..SimHooks::default()
+        };
+        let daemon = BackendDaemon::start_with_hooks(cfg.clone(), hooks).unwrap();
+        assert!(
+            daemon.runtime().metrics().counter("backend.journal.replayed") >= 1,
+            "the acked checkpoint must replay"
+        );
+        assert!(daemon.drain(Duration::from_secs(30)));
+        let client = daemon.client("jobA", 0, Duration::from_secs(30)).unwrap();
+        let h = client.mem_protect(0, Vec::new());
+        let info = client.restart_version("app", 1).unwrap().expect("restore");
+        assert_eq!(info.version, 1);
+        assert_eq!(*h.lock().unwrap(), vec![7u8; 8 << 10]);
+        cleanup(&cfg);
+    }
+}

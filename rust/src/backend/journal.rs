@@ -1,0 +1,431 @@
+//! Crash-safe pending-job journal: a write-ahead log of every accepted
+//! checkpoint, fsynced *before* the submit is acknowledged.
+//!
+//! The durability contract of the active backend is that an acked
+//! checkpoint survives a backend crash. The journal realizes it with two
+//! artifacts under `<dir>`:
+//!
+//! - `payloads/<id>.vckp` — the full submitted container, durable before
+//!   its `begin` record is written (staged handoffs are renamed in, so the
+//!   bytes the client fsynced become the journal copy without a rewrite);
+//! - `wal.log` — framed records `[u32 len][json][u32 crc]`:
+//!   `{"t":"begin", id, job, rank, name, version, payload}` appended (and
+//!   fsynced) before the ack, `{"t":"end", id, ok}` appended when the
+//!   pipeline settles (its loss is harmless: replaying a settled
+//!   checkpoint re-runs an idempotent pipeline).
+//!
+//! [`Journal::open`] replays the log — tolerating a torn tail — returns
+//! every acked-but-unsettled entry for resubmission, and compacts the log
+//! down to exactly those entries.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One acked-but-unsettled checkpoint recovered from the WAL.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PendingEntry {
+    /// Journal id (monotonic per journal lifetime).
+    pub id: u64,
+    /// Owning job.
+    pub job: String,
+    /// Submitting rank.
+    pub rank: usize,
+    /// Daemon-scoped checkpoint name (`job@name`).
+    pub name: String,
+    /// Checkpoint version.
+    pub version: u64,
+    /// Durable payload container.
+    pub payload: PathBuf,
+}
+
+/// The write-ahead journal. All appends are serialized; `begin` returns
+/// only after the payload and the record are durable (when `fsync` is on).
+pub struct Journal {
+    wal: Mutex<File>,
+    payloads: PathBuf,
+    fsync: bool,
+    next_id: AtomicU64,
+}
+
+fn encode_record(j: &Json) -> Vec<u8> {
+    let body = j.to_string().into_bytes();
+    let mut out = Vec::with_capacity(body.len() + 8);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc32fast::hash(&body).to_le_bytes());
+    out
+}
+
+/// Parse one record at `buf[at..]`; `None` = torn/corrupt tail (stop).
+fn decode_record(buf: &[u8], at: usize) -> Option<(Json, usize)> {
+    if at + 4 > buf.len() {
+        return None;
+    }
+    let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+    let body_start = at + 4;
+    let crc_start = body_start.checked_add(len)?;
+    if crc_start + 4 > buf.len() {
+        return None;
+    }
+    let body = &buf[body_start..crc_start];
+    let stored = u32::from_le_bytes(buf[crc_start..crc_start + 4].try_into().unwrap());
+    if crc32fast::hash(body) != stored {
+        return None;
+    }
+    let text = std::str::from_utf8(body).ok()?;
+    let j = Json::parse(text).ok()?;
+    Some((j, crc_start + 4))
+}
+
+impl Journal {
+    /// Open (or create) the journal under `dir`; returns the journal and
+    /// every acked-but-unsettled entry, in ack order. The log is
+    /// compacted to exactly those entries.
+    pub fn open(dir: &Path, fsync: bool) -> Result<(Journal, Vec<PendingEntry>)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create journal dir {}", dir.display()))?;
+        let payloads = dir.join("payloads");
+        std::fs::create_dir_all(&payloads)?;
+        let wal_path = dir.join("wal.log");
+
+        // Replay: begins without a matching end, whose payload survives.
+        let mut begins: Vec<PendingEntry> = Vec::new();
+        let mut ended: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+        let mut max_id = 0u64;
+        if wal_path.exists() {
+            let mut buf = Vec::new();
+            File::open(&wal_path)?.read_to_end(&mut buf)?;
+            let mut at = 0usize;
+            while let Some((j, next)) = decode_record(&buf, at) {
+                at = next;
+                let id = j.get("id").and_then(Json::as_u64).unwrap_or(0);
+                max_id = max_id.max(id);
+                match j.str_or("t", "") {
+                    "begin" => begins.push(PendingEntry {
+                        id,
+                        job: j.str_or("job", "").to_string(),
+                        rank: j.usize_or("rank", 0),
+                        name: j.str_or("name", "").to_string(),
+                        version: j.get("version").and_then(Json::as_u64).unwrap_or(0),
+                        payload: payloads.join(j.str_or("payload", "")),
+                    }),
+                    "end" => {
+                        ended.insert(id);
+                    }
+                    _ => {} // unknown record kind: skip (forward compat)
+                }
+            }
+        }
+        let mut pending: Vec<PendingEntry> = Vec::new();
+        for e in begins {
+            if ended.contains(&e.id) {
+                continue;
+            }
+            if e.payload.exists() {
+                pending.push(e);
+            } else {
+                // Most likely the end record was lost after the payload
+                // delete (settled, benign) — but it is indistinguishable
+                // from a lost payload, so say it out loud instead of
+                // silently dropping an acked checkpoint.
+                eprintln!(
+                    "veloc journal: begin #{} ({} v{} rank {}) has no payload \
+                     file; treating as settled (end record lost) — if this \
+                     checkpoint never completed, it is gone",
+                    e.id, e.name, e.version, e.rank
+                );
+            }
+        }
+
+        // Compact: rewrite the log with only the pending begins, so the
+        // WAL stays bounded by the admission depth, not by history.
+        let tmp = dir.join("wal.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            for e in &pending {
+                f.write_all(&encode_record(&begin_json(e)))?;
+            }
+            if fsync {
+                f.sync_data()?;
+            }
+        }
+        std::fs::rename(&tmp, &wal_path)?;
+        if fsync {
+            // Make the rename durable (best effort — not all filesystems
+            // support directory fsync).
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+
+        // Sweep payloads no begin record references (a crash landed
+        // between payload create and WAL append): nothing can ever replay
+        // them, so they must not accumulate on the fast tier.
+        let referenced: std::collections::BTreeSet<std::ffi::OsString> = pending
+            .iter()
+            .filter_map(|e| e.payload.file_name().map(|f| f.to_os_string()))
+            .collect();
+        if let Ok(entries) = std::fs::read_dir(&payloads) {
+            for entry in entries.flatten() {
+                if !referenced.contains(&entry.file_name()) {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+
+        let wal = OpenOptions::new().append(true).open(&wal_path)?;
+        Ok((
+            Journal {
+                wal: Mutex::new(wal),
+                payloads,
+                fsync,
+                next_id: AtomicU64::new(max_id + 1),
+            },
+            pending,
+        ))
+    }
+
+    fn payload_file(id: u64) -> String {
+        format!("{id}.vckp")
+    }
+
+    /// Journal an inline submission: persist the payload, then the begin
+    /// record; both durable before this returns (fsync mode). The returned
+    /// entry is what the dispatcher queues.
+    pub fn begin(
+        &self,
+        job: &str,
+        rank: usize,
+        name: &str,
+        version: u64,
+        payload: &[u8],
+    ) -> Result<PendingEntry> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let path = self.payloads.join(Self::payload_file(id));
+        {
+            let mut f = File::create(&path)
+                .with_context(|| format!("journal payload {}", path.display()))?;
+            f.write_all(payload)?;
+            if self.fsync {
+                f.sync_data()?;
+            }
+        }
+        self.sync_payload_dir();
+        self.append_begin(id, job, rank, name, version, &path)
+            .map_err(|e| {
+                // No begin record means no replay will ever reference this
+                // payload: reclaim it instead of leaking it (ENOSPC on the
+                // WAL would otherwise strand payloads on the fast tier).
+                let _ = std::fs::remove_file(&path);
+                e
+            })
+    }
+
+    /// Make the payload's directory entry durable before the begin record
+    /// is — a power loss must never leave a fsynced `begin` pointing at a
+    /// file whose directory entry evaporated (replay would misread that
+    /// as "settled"). Best effort: not every filesystem supports
+    /// directory fsync.
+    fn sync_payload_dir(&self) {
+        if !self.fsync {
+            return;
+        }
+        if let Ok(d) = File::open(&self.payloads) {
+            let _ = d.sync_all();
+        }
+    }
+
+    /// Journal a staged submission: adopt the client's already-durable
+    /// staged file by renaming it into the payload store (no byte copy),
+    /// then append the begin record.
+    pub fn begin_staged(
+        &self,
+        job: &str,
+        rank: usize,
+        name: &str,
+        version: u64,
+        staged: &Path,
+    ) -> Result<PendingEntry> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let path = self.payloads.join(Self::payload_file(id));
+        std::fs::rename(staged, &path).with_context(|| {
+            format!("adopt staged payload {} -> {}", staged.display(), path.display())
+        })?;
+        self.sync_payload_dir();
+        self.append_begin(id, job, rank, name, version, &path)
+            .map_err(|e| {
+                // The submit errors back to the client (never acked), so
+                // the adopted payload must not linger unreferenced.
+                let _ = std::fs::remove_file(&path);
+                e
+            })
+    }
+
+    fn append_begin(
+        &self,
+        id: u64,
+        job: &str,
+        rank: usize,
+        name: &str,
+        version: u64,
+        path: &Path,
+    ) -> Result<PendingEntry> {
+        let entry = PendingEntry {
+            id,
+            job: job.to_string(),
+            rank,
+            name: name.to_string(),
+            version,
+            payload: path.to_path_buf(),
+        };
+        let rec = encode_record(&begin_json(&entry));
+        let mut wal = self.wal.lock().unwrap();
+        wal.write_all(&rec)?;
+        if self.fsync {
+            wal.sync_data()?;
+        }
+        Ok(entry)
+    }
+
+    /// Settle an entry: append the end record and drop the payload. Never
+    /// fsynced — losing an end record merely replays an idempotent,
+    /// already-settled checkpoint.
+    pub fn settle(&self, id: u64, ok: bool) -> Result<()> {
+        let rec = encode_record(
+            &Json::obj()
+                .set("t", "end")
+                .set("id", id)
+                .set("ok", ok),
+        );
+        {
+            let mut wal = self.wal.lock().unwrap();
+            wal.write_all(&rec)?;
+        }
+        let _ = std::fs::remove_file(self.payloads.join(Self::payload_file(id)));
+        Ok(())
+    }
+}
+
+fn begin_json(e: &PendingEntry) -> Json {
+    Json::obj()
+        .set("t", "begin")
+        .set("id", e.id)
+        .set("job", e.job.as_str())
+        .set("rank", e.rank)
+        .set("name", e.name.as_str())
+        .set("version", e.version)
+        .set(
+            "payload",
+            e.payload
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as Counter;
+
+    static DIRS: Counter = Counter::new(0);
+
+    fn tmp() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "veloc-journal-test-{}-{}",
+            std::process::id(),
+            DIRS.fetch_add(1, Ordering::SeqCst)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn unsettled_entries_replay_settled_ones_do_not() {
+        let dir = tmp();
+        {
+            let (j, pending) = Journal::open(&dir, true).unwrap();
+            assert!(pending.is_empty());
+            let a = j.begin("jobA", 0, "jobA@app", 1, b"VCKPaaaa").unwrap();
+            let _b = j.begin("jobB", 1, "jobB@app", 1, b"VCKPbbbb").unwrap();
+            j.settle(a.id, true).unwrap();
+            // Journal dropped with B unsettled — the "crash".
+        }
+        let (_j2, pending) = Journal::open(&dir, true).unwrap();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].job, "jobB");
+        assert_eq!(pending[0].name, "jobB@app");
+        assert_eq!(std::fs::read(&pending[0].payload).unwrap(), b"VCKPbbbb");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_ignored() {
+        let dir = tmp();
+        {
+            let (j, _) = Journal::open(&dir, true).unwrap();
+            j.begin("j", 0, "j@a", 1, b"payload-1").unwrap();
+        }
+        // Tear the log: append garbage that is not a whole record.
+        {
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(dir.join("wal.log"))
+                .unwrap();
+            f.write_all(&[0xFF, 0x13, 0x37]).unwrap();
+        }
+        let (_j, pending) = Journal::open(&dir, true).unwrap();
+        assert_eq!(pending.len(), 1, "intact prefix survives the torn tail");
+        assert_eq!(pending[0].version, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_bounds_the_log() {
+        let dir = tmp();
+        {
+            let (j, _) = Journal::open(&dir, true).unwrap();
+            for v in 1..=20u64 {
+                let e = j.begin("j", 0, "j@a", v, b"x").unwrap();
+                j.settle(e.id, true).unwrap();
+            }
+        }
+        let before = std::fs::metadata(dir.join("wal.log")).unwrap().len();
+        // Re-open compacts away all settled history.
+        let (_j, pending) = Journal::open(&dir, true).unwrap();
+        assert!(pending.is_empty());
+        let after = std::fs::metadata(dir.join("wal.log")).unwrap().len();
+        assert_eq!(after, 0, "fully settled journal compacts to empty ({before} before)");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn staged_adoption_renames_without_copy() {
+        let dir = tmp();
+        let (j, _) = Journal::open(&dir, true).unwrap();
+        let staged = dir.join("incoming.vckp");
+        std::fs::write(&staged, b"staged-bytes").unwrap();
+        let e = j.begin_staged("j", 2, "j@a", 3, &staged).unwrap();
+        assert!(!staged.exists(), "staged file was adopted");
+        assert_eq!(std::fs::read(&e.payload).unwrap(), b"staged-bytes");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ids_resume_past_history() {
+        let dir = tmp();
+        let first = {
+            let (j, _) = Journal::open(&dir, true).unwrap();
+            j.begin("j", 0, "j@a", 1, b"x").unwrap().id
+        };
+        let (j2, _) = Journal::open(&dir, true).unwrap();
+        let second = j2.begin("j", 0, "j@a", 2, b"y").unwrap().id;
+        assert!(second > first, "{second} must not collide with {first}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

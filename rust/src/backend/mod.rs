@@ -1,0 +1,228 @@
+//! The *active backend* as a real subsystem: an out-of-process checkpoint
+//! engine (`veloc daemon`) with an IPC client, a crash-safe job journal
+//! and multi-client fair scheduling.
+//!
+//! VeloC's defining design split (paper §3) is a thin client library in
+//! front of an active backend that runs the multi-level resilience
+//! pipeline *outside* the application process: post-processing survives
+//! independently of the app, costs it almost nothing, and one backend can
+//! serve many jobs. This module realizes that split on top of the
+//! existing in-process [`VelocRuntime`](crate::api::VelocRuntime):
+//!
+//! - [`daemon`] — [`BackendDaemon`]: hosts the runtime, admits and
+//!   fair-schedules submissions from many jobs, journals every accepted
+//!   checkpoint before acknowledging it, and replays the journal after a
+//!   crash so *a backend failure never loses an acked checkpoint*.
+//! - [`wire`] — the length-prefixed Unix-domain-socket frame protocol
+//!   (register job/rank, submit via staged payload handoff, poll/wait
+//!   status, restart query, stats, shutdown).
+//! - [`journal`] — the write-ahead pending-job journal: payload staged
+//!   durably + `begin` record fsynced *before* the ack; `end` records
+//!   settle entries; open-time replay returns what was acked but never
+//!   settled.
+//! - [`queue`] — per-job bounded FIFO queues with round-robin dispatch:
+//!   concurrent jobs share drain bandwidth predictably, and a job that
+//!   outruns its queue depth is pushed back with a typed
+//!   [`Backpressure`] rejection instead of unbounded buffering.
+//! - [`client`] — [`BackendClient`]/[`SocketTransport`]: the socket
+//!   implementation of [`Transport`](crate::api::Transport), so daemon
+//!   clients are ordinary [`VelocClient`](crate::api::VelocClient)s.
+//!
+//! In-process and out-of-process paths sit behind the same public API:
+//!
+//! ```no_run
+//! use veloc::backend::BackendClient;
+//! let backend = BackendClient::connect("/tmp/veloc-daemon/veloc.sock");
+//! let client = backend.client("train-a", 0).unwrap();
+//! client.mem_protect(0, vec![0u8; 1 << 20]);
+//! client.checkpoint("model", 1).unwrap();
+//! client.checkpoint_wait("model", 1).unwrap();
+//! ```
+
+pub mod client;
+pub mod daemon;
+pub mod journal;
+pub mod queue;
+pub mod wire;
+
+#[cfg(unix)]
+pub use client::{BackendClient, SocketTransport};
+pub use daemon::{BackendDaemon, DaemonTransport, Payload, SubmitAck};
+pub use journal::{Journal, PendingEntry};
+pub use queue::{FairQueue, Submission};
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Configuration of the backend daemon (the `backend` JSON section and
+/// the `veloc daemon` CLI flags).
+#[derive(Clone, Debug)]
+pub struct BackendConfig {
+    /// Daemon home directory: holds `journal/` (WAL + pending payloads),
+    /// `staging/` (client payload handoff on the local tier) and, unless
+    /// overridden, the listening socket.
+    pub dir: PathBuf,
+    /// Unix-domain-socket path; `None` derives `<dir>/veloc.sock`.
+    pub socket: Option<PathBuf>,
+    /// Admission bound per job: acked-but-unsettled checkpoints beyond
+    /// this are rejected with [`Backpressure`].
+    pub queue_depth: usize,
+    /// Payloads at most this large travel inline in the submit frame;
+    /// larger ones are staged as files and handed off by name.
+    pub inline_max: usize,
+    /// Fsync the staged payload and the WAL record before acknowledging a
+    /// submit (the durability contract; disable only for benchmarks).
+    pub fsync: bool,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig {
+            dir: PathBuf::from("veloc-daemon"),
+            socket: None,
+            queue_depth: 64,
+            inline_max: 64 << 10,
+            fsync: true,
+        }
+    }
+}
+
+impl BackendConfig {
+    /// The socket the daemon listens on (explicit or derived from `dir`).
+    pub fn socket_path(&self) -> PathBuf {
+        self.socket
+            .clone()
+            .unwrap_or_else(|| self.dir.join("veloc.sock"))
+    }
+
+    /// Reject configurations the daemon would have to patch up silently.
+    pub fn validate(&self) -> Result<()> {
+        if self.queue_depth == 0 {
+            bail!("backend.queue_depth must be >= 1 (0 would reject every submit)");
+        }
+        if self.queue_depth > crate::pipeline::TRACKER_KEEP {
+            bail!(
+                "backend.queue_depth ({}) exceeds the engine's status-retention \
+                 window ({}): a burst that deep could outlive its own completion \
+                 records",
+                self.queue_depth,
+                crate::pipeline::TRACKER_KEEP
+            );
+        }
+        if self.inline_max > wire::MAX_BODY {
+            bail!(
+                "backend.inline_max ({}) exceeds the wire frame limit ({})",
+                self.inline_max,
+                wire::MAX_BODY
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Typed admission-control rejection: the job's acked-but-unsettled
+/// checkpoint count reached the configured queue depth. Callers back off
+/// and resubmit (or raise `backend.queue_depth`); recover it with
+/// `err.downcast_ref::<Backpressure>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Backpressure {
+    /// The job that hit its bound.
+    pub job: String,
+    /// The job's unsettled checkpoint count at rejection time — at least
+    /// the configured `queue_depth` bound, and possibly above it (journal
+    /// replay re-admits acked work unconditionally).
+    pub depth: usize,
+}
+
+impl std::fmt::Display for Backpressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "backend backpressure: job {:?} has {} unsettled checkpoints queued",
+            self.job, self.depth
+        )
+    }
+}
+
+impl std::error::Error for Backpressure {}
+
+/// Internal checkpoint namespace of one job: two jobs both checkpointing
+/// `"app"` must never collide in the version registry or on storage keys,
+/// so every daemon-side name is scoped as `<len>.job@name`. The length
+/// prefix keeps the job boundary unambiguous even on dir-backed tiers,
+/// whose key sanitization maps both `@` and a job id's legal `_` to `_`
+/// (without it, job `train` + name `a_x` and job `train_a` + name `x`
+/// would share one file name).
+pub fn scoped_name(job: &str, name: &str) -> String {
+    format!("{}.{job}@{name}", job.len())
+}
+
+/// Is `job` a legal job id? Job ids travel into storage keys and staged
+/// file names, so they are restricted to `[A-Za-z0-9._-]` and must be
+/// non-empty and free of the `@` scoping separator.
+pub fn valid_job_id(job: &str) -> bool {
+    !job.is_empty()
+        && job
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_id_validation() {
+        assert!(valid_job_id("train-a"));
+        assert!(valid_job_id("hacc_2.run"));
+        assert!(!valid_job_id(""));
+        assert!(!valid_job_id("a@b"));
+        assert!(!valid_job_id("a/b"));
+        assert!(!valid_job_id("a b"));
+    }
+
+    #[test]
+    fn scoped_names_are_disjoint_across_jobs() {
+        assert_ne!(scoped_name("a", "app"), scoped_name("b", "app"));
+        assert_eq!(scoped_name("a", "app"), "1.a@app");
+        // Disjoint even after dir-tier sanitization ('@' and '_' both
+        // map to '_'): the length prefix pins the job boundary.
+        let sanitize = |s: &str| -> String {
+            s.chars()
+                .map(|c| {
+                    if c.is_ascii_alphanumeric() || c == '.' || c == '-' {
+                        c
+                    } else {
+                        '_'
+                    }
+                })
+                .collect()
+        };
+        assert_ne!(
+            sanitize(&scoped_name("train", "a_x")),
+            sanitize(&scoped_name("train_a", "x"))
+        );
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut c = BackendConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.socket_path(), c.dir.join("veloc.sock"));
+        c.queue_depth = 0;
+        assert!(c.validate().is_err());
+        c.queue_depth = crate::pipeline::TRACKER_KEEP + 1;
+        assert!(c.validate().is_err(), "depth beyond status retention");
+    }
+
+    #[test]
+    fn backpressure_downcasts() {
+        let err = anyhow::Error::new(Backpressure {
+            job: "j".to_string(),
+            depth: 4,
+        });
+        let bp = err.downcast_ref::<Backpressure>().unwrap();
+        assert_eq!(bp.depth, 4);
+        assert!(err.to_string().contains("backpressure"));
+    }
+}

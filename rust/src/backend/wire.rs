@@ -1,0 +1,158 @@
+//! Length-prefixed frame protocol spoken over the daemon's Unix domain
+//! socket.
+//!
+//! Every message — request or response — is one frame:
+//!
+//! ```text
+//! hlen   u32 LE    header JSON length
+//! blen   u64 LE    binary body length
+//! header JSON      {"op": ..., ...} / {"ok": ..., ...}
+//! body   bytes     payload (submit) or restored container (restart)
+//! ```
+//!
+//! The header carries the operation and its small fields; checkpoint
+//! payloads ride in the body (inline submits, restart responses) or are
+//! handed off out of band as staged files on the daemon's local tier
+//! (large submits — the header then names the staged file instead of
+//! carrying bytes).
+//!
+//! Operations: `register` (job + rank), `submit`, `wait` (a `timeout_ms`
+//! of 0 is a poll), `restart`, `stats`, `shutdown`. Responses always
+//! carry `"ok"`; failures carry `"err"`.
+
+use crate::pipeline::CkptStatus;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Largest accepted header (requests are small; this bounds a corrupt or
+/// hostile peer).
+pub const MAX_HEADER: usize = 1 << 20;
+/// Largest accepted body — one checkpoint payload.
+pub const MAX_BODY: usize = 1 << 30;
+
+/// Write one frame (header JSON + binary body).
+pub fn write_frame<W: Write>(w: &mut W, header: &Json, body: &[u8]) -> Result<()> {
+    let h = header.to_string().into_bytes();
+    if h.len() > MAX_HEADER {
+        bail!("frame header too large ({} bytes)", h.len());
+    }
+    if body.len() > MAX_BODY {
+        bail!("frame body too large ({} bytes)", body.len());
+    }
+    w.write_all(&(h.len() as u32).to_le_bytes())?;
+    w.write_all(&(body.len() as u64).to_le_bytes())?;
+    w.write_all(&h)?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. An immediate clean EOF (peer closed between frames)
+/// surfaces as an error carrying "closed".
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(Json, Vec<u8>)> {
+    let mut lens = [0u8; 12];
+    r.read_exact(&mut lens)
+        .map_err(|e| anyhow!("connection closed: {e}"))?;
+    let hlen = u32::from_le_bytes(lens[0..4].try_into().unwrap()) as usize;
+    // Bound-check the body length as u64 *before* narrowing: on 32-bit
+    // targets an oversized length would wrap through `as usize` and pass.
+    let blen64 = u64::from_le_bytes(lens[4..12].try_into().unwrap());
+    if hlen > MAX_HEADER {
+        bail!("frame header too large ({hlen} bytes)");
+    }
+    if blen64 > MAX_BODY as u64 {
+        bail!("frame body too large ({blen64} bytes)");
+    }
+    let blen = blen64 as usize;
+    let mut h = vec![0u8; hlen];
+    r.read_exact(&mut h)?;
+    let header = std::str::from_utf8(&h).map_err(|_| anyhow!("frame header not utf-8"))?;
+    let header = Json::parse(header).map_err(|e| anyhow!("frame header: {e}"))?;
+    let mut body = vec![0u8; blen];
+    r.read_exact(&mut body)?;
+    Ok((header, body))
+}
+
+/// Serialize a checkpoint status into response-header fields.
+pub fn status_to_json(st: &CkptStatus) -> Json {
+    match st {
+        CkptStatus::Done(level) => Json::obj()
+            .set("status", "done")
+            .set("level", *level as u64),
+        CkptStatus::Failed(msg) => Json::obj()
+            .set("status", "failed")
+            .set("msg", msg.as_str()),
+        CkptStatus::InFlight => Json::obj().set("status", "in-flight"),
+        CkptStatus::TimedOut => Json::obj().set("status", "timeout"),
+    }
+}
+
+/// Parse a checkpoint status out of a response header.
+pub fn status_from_json(j: &Json) -> Result<CkptStatus> {
+    match j.str_or("status", "") {
+        "done" => Ok(CkptStatus::Done(
+            j.get("level")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("done status missing level"))? as u8,
+        )),
+        "failed" => Ok(CkptStatus::Failed(
+            j.str_or("msg", "unknown failure").to_string(),
+        )),
+        "in-flight" => Ok(CkptStatus::InFlight),
+        "timeout" => Ok(CkptStatus::TimedOut),
+        other => bail!("unknown status {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let header = Json::obj().set("op", "submit").set("version", 7u64);
+        let body = vec![1u8, 2, 3, 4, 5];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &header, &body).unwrap();
+        // A second frame with an empty body directly behind it.
+        write_frame(&mut buf, &Json::obj().set("op", "stats"), &[]).unwrap();
+
+        let mut r = std::io::Cursor::new(buf);
+        let (h1, b1) = read_frame(&mut r).unwrap();
+        assert_eq!(h1.str_or("op", ""), "submit");
+        assert_eq!(h1.get("version").and_then(Json::as_u64), Some(7));
+        assert_eq!(b1, body);
+        let (h2, b2) = read_frame(&mut r).unwrap();
+        assert_eq!(h2.str_or("op", ""), "stats");
+        assert!(b2.is_empty());
+        // Stream exhausted: the next read reports the close.
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn oversized_lengths_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(8u32).to_le_bytes());
+        buf.extend_from_slice(&((MAX_BODY as u64) + 1).to_le_bytes());
+        buf.extend_from_slice(b"{\"a\":1}x");
+        let err = read_frame(&mut std::io::Cursor::new(buf))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn statuses_roundtrip() {
+        for st in [
+            CkptStatus::Done(4),
+            CkptStatus::Failed("boom".to_string()),
+            CkptStatus::InFlight,
+            CkptStatus::TimedOut,
+        ] {
+            assert_eq!(status_from_json(&status_to_json(&st)).unwrap(), st);
+        }
+        assert!(status_from_json(&Json::obj().set("status", "??")).is_err());
+    }
+}

@@ -4,7 +4,10 @@
 //! the Age of Exascale* (Nicolae et al., SuperCheck'21):
 //!
 //! - **L3 (this crate)** — the VeloC runtime: client API
-//!   ([`api::VelocClient`]), module pipeline ([`pipeline`]), multi-level
+//!   ([`api::VelocClient`] over an in-process or socket
+//!   [`api::Transport`]), the out-of-process active backend
+//!   ([`backend`]: `veloc daemon`, crash-safe job journal, multi-client
+//!   fair scheduling), module pipeline ([`pipeline`]), multi-level
 //!   resilience modules ([`modules`]), heterogeneous storage tiers
 //!   ([`storage`]), aggregated asynchronous flush ([`aggregation`]:
 //!   write-combining per-rank checkpoints into large shared-tier
@@ -37,6 +40,7 @@ pub mod aggregation;
 pub mod api;
 #[allow(missing_docs)]
 pub mod app;
+pub mod backend;
 #[allow(missing_docs)]
 pub mod cluster;
 pub mod delta;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   info       print platform, artifact and pipeline information
 //!   run        run the HACC-like iterative workload under checkpointing
+//!   daemon     host the runtime as an out-of-process active backend
+//!              serving clients over a Unix domain socket
 //!   interval   Young/Daly vs DES interval recommendations
 //!   sim        deterministic crash–recover–verify scenarios (one spec,
 //!              a saved-trace replay, or the standard sweep matrix)
@@ -24,7 +26,7 @@ fn main() {
         "veloc",
         "VEry Low Overhead Checkpointing — paper reproduction runtime",
     )
-    .opt("cmd", "info", "info | run | interval | sim")
+    .opt("cmd", "info", "info | run | daemon | interval | sim")
     .opt("config", "", "JSON config file (empty = defaults)")
     .opt("nodes", "4", "simulated nodes")
     .opt("ranks-per-node", "2", "ranks per node")
@@ -46,10 +48,14 @@ fn main() {
     .flag("delta", "incremental dedup: move only novel chunks per checkpoint")
     .opt("delta-chunk-kb", "8", "delta: average chunk size (KiB, power of two)")
     .opt("delta-max-chain", "8", "delta: checkpoints between forced fulls")
+    .opt("socket", "", "daemon: unix socket path (default <daemon-dir>/veloc.sock)")
+    .opt("daemon-dir", "", "daemon: home directory (journal + staging)")
+    .opt("queue-depth", "0", "daemon: per-job admission bound (0 = config default)")
     .opt("json", "", "sim: inline scenario spec (one-line JSON)")
     .opt("file", "", "sim: scenario spec file")
     .opt("replay", "", "sim: re-run a saved trace and require an exact match")
     .flag("matrix", "sim: run the standard scenario sweep")
+    .opt("filter", "", "sim: only run matrix rows whose injection point contains this")
     .opt("seed", "1", "sim: base seed for the matrix / default spec")
     .opt("trace-out", "", "sim: write the run's event trace to this file")
     .opt("trace-dir", "", "sim: write failing scenario traces into this dir")
@@ -59,10 +65,11 @@ fn main() {
     let result = match cmd.as_str() {
         "info" => cmd_info(&cli),
         "run" => cmd_run(&cli),
+        "daemon" => cmd_daemon(&cli),
         "interval" => cmd_interval(&cli),
         "sim" => cmd_sim(&cli),
         other => {
-            eprintln!("unknown command '{other}' (try info | run | interval | sim)");
+            eprintln!("unknown command '{other}' (try info | run | daemon | interval | sim)");
             std::process::exit(2);
         }
     };
@@ -199,7 +206,9 @@ fn cmd_run(cli: &Cli) -> Result<()> {
                     client.report_utilization(0.9);
                     if app.iteration % every == 0 {
                         let v = app.checkpoint(&client)?;
-                        client.checkpoint_wait("hacc", v)?;
+                        // Strict: a timed-out or failed pipeline aborts the
+                        // run instead of counting as a checkpoint.
+                        client.checkpoint_wait_done("hacc", v)?;
                         ckpts += 1;
                     }
                 }
@@ -285,6 +294,51 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Host the runtime as the out-of-process active backend: bind the Unix
+/// socket, replay the journal, serve register/submit/wait/restart until a
+/// client sends `shutdown`.
+fn cmd_daemon(cli: &Cli) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use veloc::backend::BackendDaemon;
+        let mut cfg = config_from(cli)?;
+        let dir = cli.get("daemon-dir");
+        if !dir.is_empty() {
+            cfg.backend.dir = std::path::PathBuf::from(dir);
+        }
+        let socket = cli.get("socket");
+        if !socket.is_empty() {
+            cfg.backend.socket = Some(std::path::PathBuf::from(socket));
+        }
+        let depth = cli.get_usize("queue-depth");
+        if depth > 0 {
+            cfg.backend.queue_depth = depth;
+        }
+        let daemon = BackendDaemon::start(cfg)?;
+        let replayed = daemon
+            .runtime()
+            .metrics()
+            .counter("backend.journal.replayed");
+        if replayed > 0 {
+            println!("journal replay: {replayed} acked checkpoint(s) resumed");
+        }
+        println!(
+            "veloc daemon: serving on {} (dir {}, queue depth {})",
+            daemon.backend_config().socket_path().display(),
+            daemon.backend_config().dir.display(),
+            daemon.backend_config().queue_depth
+        );
+        daemon.serve()?;
+        println!("veloc daemon: shut down cleanly");
+        Ok(())
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = cli;
+        anyhow::bail!("veloc daemon requires Unix domain sockets (unix only)");
+    }
+}
+
 fn cmd_sim(cli: &Cli) -> Result<()> {
     use veloc::sim::{base_spec, replay_file, run_scenario_traced, standard_matrix, ScenarioSpec};
 
@@ -301,7 +355,14 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
 
     if cli.get_bool("matrix") {
         let seed = cli.get_u64("seed");
-        let specs = standard_matrix(seed);
+        let mut specs = standard_matrix(seed);
+        let filter = cli.get("filter");
+        if !filter.is_empty() {
+            specs.retain(|s| s.inject.name().contains(&filter));
+            if specs.is_empty() {
+                anyhow::bail!("--filter {filter:?} matches no matrix row");
+            }
+        }
         println!("sim matrix: {} scenarios (base seed {seed})", specs.len());
         let mut failed = 0usize;
         for (i, spec) in specs.iter().enumerate() {

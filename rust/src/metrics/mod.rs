@@ -35,6 +35,13 @@ impl Metrics {
         self.counter_handle(name).load(Ordering::Relaxed)
     }
 
+    /// Gauge semantics over the counter store: overwrite the value instead
+    /// of accumulating (queue depths, replay cursors). Read back with
+    /// [`Metrics::counter`]; reported next to the counters in `to_json`.
+    pub fn set(&self, name: &str, value: u64) {
+        self.counter_handle(name).store(value, Ordering::Relaxed);
+    }
+
     pub fn observe(&self, name: &str, value: f64) {
         self.samples
             .lock()
@@ -96,6 +103,16 @@ mod tests {
         let s = m.samples("lat").unwrap();
         assert_eq!(s.len(), 10);
         assert!((s.mean() - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        m.set("backend.queue_depth.a", 7);
+        m.set("backend.queue_depth.a", 3);
+        assert_eq!(m.counter("backend.queue_depth.a"), 3);
+        m.incr("backend.queue_depth.a", 1); // counters and gauges share the store
+        assert_eq!(m.counter("backend.queue_depth.a"), 4);
     }
 
     #[test]

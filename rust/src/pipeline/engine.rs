@@ -8,7 +8,7 @@ use crate::pipeline::module::Module;
 use crate::util::bytes::Checkpoint;
 use crate::util::pool::{Priority, ThreadPool};
 use anyhow::{anyhow, bail, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -41,21 +41,87 @@ pub enum CkptStatus {
     Done(u8),
     /// The pipeline failed (or its rank died) with this message.
     Failed(String),
+    /// `wait` gave up before the command settled: the typed timeout
+    /// outcome (callers used to have to string-match an error). The
+    /// command itself may still settle later — only the wait expired.
+    TimedOut,
 }
 
+/// Settled statuses retained per (rank, name) series: waiters only ever
+/// ask about recent versions, and a long-lived daemon would otherwise
+/// grow one tracker entry per submitted checkpoint forever. Callers that
+/// bound their in-flight window (the backend daemon's admission control)
+/// must keep it at or below this, so a watched command's terminal status
+/// can never be pruned before its watcher reads it.
+pub const TRACKER_KEEP: usize = 4096;
+
+/// Status series retained across distinct (rank, name) keys: bounds the
+/// tracker for a daemon churning through many short-lived job-scoped
+/// names. Only fully settled series are ever evicted.
+const SERIES_MAX: usize = 4096;
+
+/// Status store nested by (rank, name) → version, so the bounded-
+/// retention prune touches only the affected series, never the full map.
 #[derive(Default)]
 struct Tracker {
-    states: Mutex<HashMap<(usize, String, u64), CkptStatus>>,
+    states: Mutex<HashMap<(usize, String), BTreeMap<u64, CkptStatus>>>,
     cv: Condvar,
 }
 
 impl Tracker {
     fn set(&self, rank: usize, name: &str, version: u64, st: CkptStatus) {
+        let key = (rank, name.to_string());
+        let mut states = self.states.lock().unwrap();
+        let series = states.entry(key.clone()).or_default();
+        series.insert(version, st);
+        // Bounded retention of *terminal* statuses only, oldest first.
+        // In-flight entries are bounded by the caller's admission control
+        // and must never be evicted: pruning one would make its eventual
+        // completion unobservable (the terminal set() would re-prune it
+        // as the oldest key, wedging any watcher forever). The scan only
+        // runs once the series actually exceeds the window.
+        if series.len() > TRACKER_KEEP {
+            let terminal: Vec<u64> = series
+                .iter()
+                .filter(|(_, s)| !matches!(s, CkptStatus::InFlight))
+                .map(|(&v, _)| v)
+                .collect();
+            if terminal.len() > TRACKER_KEEP {
+                for v in &terminal[..terminal.len() - TRACKER_KEEP] {
+                    series.remove(v);
+                }
+            }
+        }
+        // Series-count bound: job-scoped names make one series per job a
+        // daemon ever served; fully settled series of retired jobs are
+        // evicted once the map grows past the cap (active series — any
+        // in-flight entry — are never touched).
+        if states.len() > SERIES_MAX {
+            let excess = states.len() - SERIES_MAX;
+            let victims: Vec<(usize, String)> = states
+                .iter()
+                .filter(|(k, s)| {
+                    **k != key
+                        && s.values().all(|st| !matches!(st, CkptStatus::InFlight))
+                })
+                .map(|(k, _)| k.clone())
+                .take(excess)
+                .collect();
+            for k in victims {
+                states.remove(&k);
+            }
+        }
+        drop(states);
+        self.cv.notify_all();
+    }
+
+    fn get(&self, rank: usize, name: &str, version: u64) -> Option<CkptStatus> {
         self.states
             .lock()
             .unwrap()
-            .insert((rank, name.to_string(), version), st);
-        self.cv.notify_all();
+            .get(&(rank, name.to_string()))
+            .and_then(|series| series.get(&version))
+            .cloned()
     }
 
     fn wait(
@@ -65,17 +131,20 @@ impl Tracker {
         version: u64,
         timeout: Duration,
     ) -> Result<CkptStatus> {
-        let key = (rank, name.to_string(), version);
+        let key = (rank, name.to_string());
         let deadline = Instant::now() + timeout;
         let mut states = self.states.lock().unwrap();
         loop {
-            match states.get(&key) {
+            match states.get(&key).and_then(|series| series.get(&version)) {
                 Some(CkptStatus::InFlight) | None => {}
                 Some(done) => return Ok(done.clone()),
             }
             let now = Instant::now();
             if now >= deadline {
-                bail!("checkpoint_wait timeout: {name} v{version} rank {rank}");
+                // Typed, not an error: an expired wait is an expected
+                // outcome the caller decides how to handle (poll again,
+                // surface backpressure, fail the run).
+                return Ok(CkptStatus::TimedOut);
             }
             let (g, _t) = self.cv.wait_timeout(states, deadline - now).unwrap();
             states = g;
@@ -260,7 +329,8 @@ impl Engine {
         Ok(())
     }
 
-    /// Wait for an async checkpoint to settle; returns its final status.
+    /// Wait for an async checkpoint to settle; returns its final status,
+    /// or [`CkptStatus::TimedOut`] when it does not settle in time.
     pub fn wait(
         &self,
         rank: usize,
@@ -269,6 +339,22 @@ impl Engine {
         timeout: Duration,
     ) -> Result<CkptStatus> {
         self.tracker.wait(rank, name, version, timeout)
+    }
+
+    /// Non-blocking status peek: the command's current tracker state, or
+    /// `None` when this engine never saw the command (e.g. it is still
+    /// queued ahead of the engine — the daemon's poll path maps that to
+    /// in-flight).
+    pub fn status(&self, rank: usize, name: &str, version: u64) -> Option<CkptStatus> {
+        self.tracker.get(rank, name, version)
+    }
+
+    /// Record a terminal failure for a command this engine never ran.
+    /// The backend daemon uses it when a journaled payload turns out to
+    /// be undecodable at dispatch: waiters then observe `Failed` instead
+    /// of burning their whole budget into a timeout.
+    pub fn reject(&self, rank: usize, name: &str, version: u64, msg: String) {
+        self.tracker.set(rank, name, version, CkptStatus::Failed(msg));
     }
 
     /// Probe modules in priority order (fastest level first) for a copy of
@@ -483,6 +569,56 @@ mod tests {
             }
             other => panic!("expected Failed, got {other:?}"),
         }
+    }
+
+    /// Satellite regression: an engine that never settles must produce the
+    /// typed timeout status within the timeout — not hang, not a stringly
+    /// error. The tail is held behind the backend's background pause, so
+    /// the command stays in-flight for the whole wait.
+    #[test]
+    fn wait_on_unsettled_command_returns_typed_timeout() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let pool = Arc::new(ThreadPool::new(1));
+        pool.pause_background(true);
+        let eng = Engine::new(
+            vec![
+                TestModule::new("fast", 10, true, false, ran.clone()),
+                TestModule::new("slow", 20, false, false, ran.clone()),
+            ],
+            EngineMode::Async,
+            Some(Arc::clone(&pool)),
+        )
+        .unwrap()
+        .with_background_priority(Priority::Background);
+        eng.submit(ctx()).unwrap();
+        let t0 = Instant::now();
+        let st = eng.wait(0, "t", 1, Duration::from_millis(100)).unwrap();
+        assert_eq!(st, CkptStatus::TimedOut);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "timeout must not hang: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(eng.status(0, "t", 1), Some(CkptStatus::InFlight));
+        // The command itself was only delayed: releasing the backend
+        // settles it and a fresh wait observes the terminal status.
+        pool.pause_background(false);
+        let st = eng.wait(0, "t", 1, Duration::from_secs(5)).unwrap();
+        assert!(matches!(st, CkptStatus::Done(_)), "{st:?}");
+    }
+
+    #[test]
+    fn status_peek_is_none_for_unknown_commands() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let eng = Engine::new(
+            vec![TestModule::new("m", 10, true, false, ran)],
+            EngineMode::Sync,
+            None,
+        )
+        .unwrap();
+        assert_eq!(eng.status(0, "nope", 1), None);
+        let st = eng.wait(0, "nope", 1, Duration::from_millis(20)).unwrap();
+        assert_eq!(st, CkptStatus::TimedOut);
     }
 
     #[test]

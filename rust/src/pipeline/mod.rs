@@ -9,5 +9,5 @@ pub use context::{
     level_name, storage_key, CkptContext, LevelResult, Outcome, RestoreContext,
     LEVEL_ERASURE, LEVEL_KV, LEVEL_LOCAL, LEVEL_PARTNER, LEVEL_PFS,
 };
-pub use engine::{BoundaryHook, CkptStatus, Engine, EngineMode};
+pub use engine::{BoundaryHook, CkptStatus, Engine, EngineMode, TRACKER_KEEP};
 pub use module::{Module, ModuleSwitch};

@@ -8,9 +8,10 @@
 //! arbitrary *injection point* (between pipeline modules, mid-transfer
 //! chunk through a fault-injecting flush gate, mid-aggregation-drain, in
 //! the pre-index crash window, mid-restart, a torn mid-chain delta flush,
-//! or a delta-GC writer crash in the post-intent window) → restart
-//! survivors → restore → verify restored bytes bit-for-bit against shadow
-//! copies.
+//! a delta-GC writer crash in the post-intent window, or a death of the
+//! active-backend daemon itself mid-drain with the final wave acked) →
+//! restart survivors → restore → verify restored bytes bit-for-bit
+//! against shadow copies.
 //!
 //! - [`scenario`] — specs: seed + cluster shape + stack permutation +
 //!   scope + injection point, one line of JSON each, plus the standard

@@ -43,8 +43,9 @@ use crate::util::json::Json;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Checkpoint name every scenario uses.
 pub const SCENARIO_APP: &str = "sim";
@@ -167,6 +168,12 @@ fn opt_version_json(v: Option<u64>) -> Json {
 
 fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
     spec.validate()?;
+    // The backend-crash family kills the *daemon*, not ranks: it runs a
+    // dedicated two-incarnation lifetime instead of the failure-scope
+    // machinery below.
+    if matches!(spec.inject, InjectionPoint::BackendCrash) {
+        return run_backend_crash(spec, trace);
+    }
     let topo = spec.topology();
     let world = topo.world_size();
     let scope = spec.scope.resolve(&topo, spec.seed);
@@ -181,6 +188,7 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
     let mut hooks = SimHooks {
         wrap_gate: None,
         boundary: Some(boundary),
+        fabric: None,
     };
     if matches!(spec.inject, InjectionPoint::MidFlushChunk(_)) {
         let g = Arc::clone(&gate);
@@ -375,10 +383,16 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
             rt.backend().pause_background(false);
             submitted?;
         }
-        // Settle every rank's pipeline.
+        // Settle every rank's pipeline. A timeout here is a scenario bug
+        // (the deterministic engine must always settle), so it fails the
+        // run instead of being recorded as an ordinary status.
         let mut statuses = Vec::with_capacity(world);
         for (c, _) in &pairs {
-            statuses.push(c.checkpoint_wait(SCENARIO_APP, version)?);
+            let st = c.checkpoint_wait(SCENARIO_APP, version)?;
+            if st == CkptStatus::TimedOut {
+                bail!("wave v{version}: rank {} never settled", c.rank());
+            }
+            statuses.push(st);
         }
         // Record the wave from settled state (registry + statuses).
         let registry = &rt.env().registry;
@@ -392,6 +406,7 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
                 CkptStatus::Done(l) => format!("done:{l}"),
                 CkptStatus::Failed(_) => "failed".to_string(),
                 CkptStatus::InFlight => "in-flight".to_string(),
+                CkptStatus::TimedOut => "timeout".to_string(),
             };
             ranks.push(
                 Json::obj()
@@ -625,6 +640,267 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
             .set("ok", true)
             .set("verified", verified_ranks),
     );
+    Ok(RunOutcome {
+        scope,
+        expected_frontier: expected,
+        frontier,
+        restored,
+        verified_ranks,
+        index_rebuilds,
+    })
+}
+
+/// Job id the backend-crash scenarios register with the daemon.
+const SCENARIO_JOB: &str = "sim";
+
+/// Uniquifies the per-run daemon home directories (matrix runs many
+/// backend scenarios inside one process).
+static BACKEND_DIRS: AtomicU64 = AtomicU64::new(0);
+
+/// The backend-crash lifetime: one daemon incarnation serves every wave
+/// and dies mid-drain *after acking* the final wave (payloads journaled
+/// and fsynced, async flushes parked); a second incarnation over the same
+/// storage replays the WAL. The contract is the paper's durability claim:
+/// every acked version settles after the restart and restores
+/// bit-for-bit — including the wave whose flushes the crash swallowed.
+fn run_backend_crash(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
+    use crate::backend::{scoped_name, BackendDaemon};
+
+    let topo = spec.topology();
+    let world = topo.world_size();
+    let scope = spec.scope.resolve(&topo, spec.seed); // pinned rank 0; unused
+    let wait_t = Duration::from_secs(30);
+
+    let mut cfg = spec.to_config();
+    let dir = std::env::temp_dir().join(format!(
+        "veloc-sim-backend-{}-{}-{}",
+        spec.seed,
+        std::process::id(),
+        BACKEND_DIRS.fetch_add(1, Ordering::SeqCst)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    cfg.backend.dir = dir.clone();
+    // The scenario exercises the journal, not admission control: size the
+    // window so no wave is pushed back.
+    cfg.backend.queue_depth = world * (spec.waves as usize) + 8;
+    // Storage outlives the daemon (node-local tiers and the PFS are not
+    // the daemon's memory): both incarnations share one fabric.
+    let fabric = Arc::new(crate::storage::StorageFabric::build(&cfg.fabric)?);
+
+    trace.push(
+        Json::obj()
+            .set("ev", "start")
+            .set("seed", spec.seed.to_string())
+            .set("world", world)
+            .set("scope", scope_str(&scope))
+            .set("inject", spec.inject.name()),
+    );
+
+    // Incarnation 1: serve every wave; hold the final wave's drains.
+    let daemon = BackendDaemon::start_with_hooks(
+        cfg.clone(),
+        SimHooks {
+            wrap_gate: None,
+            boundary: None,
+            fabric: Some(Arc::clone(&fabric)),
+        },
+    )?;
+    let mut pairs: Vec<(VelocClient, IterativeApp)> = Vec::with_capacity(world);
+    for rank in 0..world {
+        let client = daemon.client(SCENARIO_JOB, rank, wait_t)?;
+        let app = IterativeApp::new(
+            &client,
+            SCENARIO_APP,
+            spec.regions,
+            spec.region_bytes,
+            0.0,
+            spec.seed,
+        );
+        pairs.push((client, app));
+    }
+    let mut shadows: BTreeMap<u64, Vec<Vec<Vec<u8>>>> = BTreeMap::new();
+    for wave in 1..=spec.waves {
+        for (_c, app) in pairs.iter_mut() {
+            for _ in 0..spec.steps_per_wave {
+                app.step();
+            }
+        }
+        let version = pairs[0].1.iteration;
+        shadows.insert(version, pairs.iter().map(|(_, a)| a.snapshot()).collect());
+        if wave == spec.waves {
+            // Quiesce first (all earlier journal entries settled) so the
+            // pending set at crash time is exactly the final wave — the
+            // replay count in the trace stays deterministic. Then park
+            // the async tails: the final wave is acked and journaled but
+            // never settles inside this incarnation.
+            ensure!(
+                daemon.drain(Duration::from_secs(30)),
+                "waves before the crash never settled"
+            );
+            daemon.runtime().backend().pause_background(true);
+        }
+        for (c, _) in &pairs {
+            c.checkpoint(SCENARIO_APP, version)?;
+        }
+        if wave < spec.waves {
+            let mut ranks = Vec::with_capacity(world);
+            for (c, _) in &pairs {
+                let st = c.checkpoint_wait(SCENARIO_APP, version)?;
+                let s = match st {
+                    CkptStatus::Done(l) => format!("done:{l}"),
+                    other => bail!(
+                        "wave v{version}: rank {} did not settle: {other:?}",
+                        c.rank()
+                    ),
+                };
+                ranks.push(Json::obj().set("rank", c.rank()).set("status", s));
+            }
+            trace.push(
+                Json::obj()
+                    .set("ev", "wave")
+                    .set("version", version)
+                    .set("ranks", Json::Arr(ranks)),
+            );
+        } else {
+            // Every ack implies a durable journal record; wait until the
+            // dispatcher has also run the blocking prefixes so the crash
+            // lands mid-drain, not mid-queue.
+            ensure!(
+                daemon.wait_dispatched(Duration::from_secs(30)),
+                "final wave was never dispatched"
+            );
+            trace.push(
+                Json::obj()
+                    .set("ev", "wave")
+                    .set("version", version)
+                    .set("acked", world),
+            );
+        }
+    }
+    let last_version = spec.waves * spec.steps_per_wave;
+
+    // The daemon dies mid-drain: queued work is dropped, in-flight tails
+    // are killed, nothing settles. Storage and the journal survive.
+    daemon.crash();
+    trace.push(
+        Json::obj()
+            .set("ev", "inject")
+            .set("point", spec.inject.name())
+            .set("scope", scope_str(&scope))
+            .set("version", last_version),
+    );
+    drop(pairs);
+    drop(daemon);
+
+    // Incarnation 2: replay the journal over the surviving storage.
+    let daemon2 = BackendDaemon::start_with_hooks(
+        cfg,
+        SimHooks {
+            wrap_gate: None,
+            boundary: None,
+            fabric: Some(Arc::clone(&fabric)),
+        },
+    )?;
+    let replayed = daemon2
+        .runtime()
+        .metrics()
+        .counter("backend.journal.replayed");
+    ensure!(
+        replayed == world as u64,
+        "journal replay resumed {replayed} checkpoints, expected exactly {world} \
+         (one acked-but-unsettled per rank)"
+    );
+    ensure!(
+        daemon2.drain(Duration::from_secs(60)),
+        "replayed checkpoints never settled"
+    );
+    trace.push(
+        Json::obj()
+            .set("ev", "backend-replay")
+            .set("replayed", replayed),
+    );
+
+    // Every acked command of the swallowed wave must now be settled.
+    for rank in 0..world {
+        let client = daemon2.client(SCENARIO_JOB, rank, wait_t)?;
+        let st = client.checkpoint_wait(SCENARIO_APP, last_version)?;
+        ensure!(
+            matches!(st, CkptStatus::Done(_)),
+            "rank {rank}: replayed v{last_version} settled as {st:?}"
+        );
+    }
+
+    // The restorable frontier must reach the acked final wave exactly.
+    let scoped = scoped_name(SCENARIO_JOB, SCENARIO_APP);
+    let expected = Some(last_version);
+    let frontier = daemon2
+        .runtime()
+        .recovery()
+        .restorable_frontier(daemon2.runtime().engines(), &scoped)?;
+    trace.push(
+        Json::obj()
+            .set("ev", "frontier")
+            .set("expected", opt_version_json(expected))
+            .set("actual", opt_version_json(frontier))
+            .set("mode", "strict"),
+    );
+    ensure!(
+        frontier == expected,
+        "min_level contract violated: expected restorable frontier {expected:?}, \
+         recovery served {frontier:?}"
+    );
+
+    // And *every* acked version — settled before or replayed after the
+    // crash — restores bit-for-bit against its shadow copy.
+    let mut restored: Vec<(usize, u8)> = Vec::new();
+    let mut verified_ranks = 0usize;
+    for (&version, snaps) in shadows.iter() {
+        for rank in 0..world {
+            let client = daemon2.client(SCENARIO_JOB, rank, wait_t)?;
+            let app = IterativeApp::new(
+                &client,
+                SCENARIO_APP,
+                spec.regions,
+                spec.region_bytes,
+                0.0,
+                spec.seed,
+            );
+            let info = client.restart_version(SCENARIO_APP, version)?.ok_or_else(|| {
+                anyhow!("rank {rank}: restore of acked v{version} failed after the daemon restart")
+            })?;
+            ensure!(
+                info.version == version,
+                "rank {rank}: asked for v{version}, restored v{}",
+                info.version
+            );
+            let diff = app.diff_snapshot(&snaps[rank]);
+            ensure!(
+                diff.is_empty(),
+                "rank {rank}: restored v{version} differs from the shadow copy in regions {diff:?}"
+            );
+            trace.push(
+                Json::obj()
+                    .set("ev", "restore")
+                    .set("rank", rank)
+                    .set("version", version)
+                    .set("level", info.level as u64)
+                    .set("crc", app.state_digest() as u64),
+            );
+            if version == last_version {
+                restored.push((rank, info.level));
+            }
+            verified_ranks += 1;
+        }
+    }
+    let index_rebuilds = daemon2.runtime().metrics().counter("agg.index.rebuilds");
+    trace.push(
+        Json::obj()
+            .set("ev", "end")
+            .set("ok", true)
+            .set("verified", verified_ranks),
+    );
+    drop(daemon2);
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(RunOutcome {
         scope,
         expected_frontier: expected,

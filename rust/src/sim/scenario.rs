@@ -146,6 +146,14 @@ pub enum InjectionPoint {
     /// right before the *penultimate* wave: adaptive placement observes
     /// the slowdown and routes the final wave's flushes elsewhere.
     TierDegraded(String, u32),
+    /// The active-backend daemon hosting the runtime dies after *acking*
+    /// the final wave (payloads journaled, fsynced) but before its async
+    /// flushes drain, then restarts over the surviving storage. The WAL
+    /// replay must settle every acked version and every wave must restore
+    /// bit-for-bit — the paper's "a backend failure never loses an acked
+    /// checkpoint". The failure scope is unused (the daemon dies, the
+    /// application ranks survive) and must be pinned to rank 0.
+    BackendCrash,
 }
 
 impl InjectionPoint {
@@ -160,6 +168,7 @@ impl InjectionPoint {
             InjectionPoint::DeltaGcCrash => "delta-gc-crash".to_string(),
             InjectionPoint::TierOutage(t) => format!("tier-outage:{t}"),
             InjectionPoint::TierDegraded(t, f) => format!("tier-degraded:{t}x{f}"),
+            InjectionPoint::BackendCrash => "backend-crash".to_string(),
         }
     }
 
@@ -189,6 +198,7 @@ impl InjectionPoint {
                 .set("point", "tier-degraded")
                 .set("tier", t.as_str())
                 .set("factor", *f as u64),
+            InjectionPoint::BackendCrash => Json::obj().set("point", "backend-crash"),
         }
     }
 
@@ -219,6 +229,7 @@ impl InjectionPoint {
                     .to_string(),
                 j.usize_or("factor", 16) as u32,
             )),
+            "backend-crash" => Ok(InjectionPoint::BackendCrash),
             other => bail!("unknown injection point {other}"),
         }
     }
@@ -603,6 +614,37 @@ impl ScenarioSpec {
                     );
                 }
             }
+            InjectionPoint::BackendCrash => {
+                if self.engine_mode == EngineMode::Sync {
+                    bail!(
+                        "backend-crash requires the async engine: a sync submit \
+                         settles before the ack, leaving nothing for the journal \
+                         replay to resume"
+                    );
+                }
+                if self.erasure_group >= 2 {
+                    bail!(
+                        "backend-crash excludes erasure: the daemon dispatches \
+                         sequentially, so erasure group members cannot \
+                         rendezvous deterministically"
+                    );
+                }
+                if self.delta {
+                    bail!(
+                        "backend-crash excludes delta: chunk-store state is \
+                         daemon-local and outside this scenario's contract model"
+                    );
+                }
+                if self.placement.is_some() {
+                    bail!("backend-crash excludes placement: one injection per scenario");
+                }
+                if self.scope.kind != ScopeKind::Rank || self.scope.target != Some(0) {
+                    bail!(
+                        "backend-crash kills the daemon, not ranks — pin the \
+                         (unused) scope to rank 0"
+                    );
+                }
+            }
             InjectionPoint::DeltaGcCrash => {
                 if !self.delta {
                     bail!("delta-gc-crash requires delta");
@@ -662,8 +704,9 @@ pub fn base_spec(seed: u64) -> ScenarioSpec {
 
 /// The standard sweep: module-stack permutations (sync/async engine, XOR
 /// partner vs erasure group sizes, aggregation on/off, delta on/off, tier
-/// policies, placement policies) crossed with every injection-point
-/// family. 39 scenarios; each is an independent one-line repro.
+/// policies, placement policies, the out-of-process backend daemon)
+/// crossed with every injection-point family. 42 scenarios; each is an
+/// independent one-line repro.
 pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
     let s = |i: u64| base_seed.wrapping_add(i.wrapping_mul(7919));
     let scope = |kind: ScopeKind| ScopeSpec { kind, target: None };
@@ -820,6 +863,33 @@ pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
         placement: Some("capacity-aware".to_string()),
         scope: scope(ScopeKind::Node),
         ..s8.clone()
+    });
+
+    // Stack 9: the active backend itself is the failure domain. The
+    // daemon acks the final wave (journal fsynced) with its flushes still
+    // pending, dies, restarts over the surviving storage: the WAL replay
+    // must settle every acked version and every wave must restore
+    // bit-for-bit. The rank-0 scope is pinned but unused (ranks survive).
+    let rank0 = ScopeSpec {
+        kind: ScopeKind::Rank,
+        target: Some(0),
+    };
+    let s9 = ScenarioSpec {
+        erasure_group: 0,
+        scope: rank0,
+        inject: InjectionPoint::BackendCrash,
+        ..base_spec(0)
+    };
+    // Partner replication alongside the daemon's journal.
+    specs.push(ScenarioSpec { seed: s(40), ..s9.clone() });
+    // Local + PFS only: the replayed flush is the sole remote copy.
+    specs.push(ScenarioSpec { seed: s(41), with_partner: false, ..s9.clone() });
+    // Aggregated drains resume from the journal through fresh containers.
+    specs.push(ScenarioSpec {
+        seed: s(42),
+        with_partner: false,
+        aggregation: true,
+        ..s9.clone()
     });
 
     specs
@@ -982,6 +1052,40 @@ mod tests {
         // Placement + delta outside the contract envelope.
         let mut bad = placement_base;
         bad.delta = true;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn backend_crash_specs_validated() {
+        let ok = ScenarioSpec {
+            erasure_group: 0,
+            scope: ScopeSpec { kind: ScopeKind::Rank, target: Some(0) },
+            inject: InjectionPoint::BackendCrash,
+            ..base_spec(1)
+        };
+        ok.validate().unwrap();
+        // Sync engine settles at submit: nothing pending to replay.
+        let mut bad = ok.clone();
+        bad.engine_mode = EngineMode::Sync;
+        assert!(bad.validate().is_err());
+        // Erasure needs concurrent group members; the daemon dispatches
+        // sequentially.
+        let mut bad = ok.clone();
+        bad.erasure_group = 4;
+        assert!(bad.validate().is_err());
+        // The scope is unused and must be pinned.
+        let mut bad = ok.clone();
+        bad.scope = ScopeSpec { kind: ScopeKind::Node, target: Some(0) };
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.scope = ScopeSpec { kind: ScopeKind::Rank, target: None };
+        assert!(bad.validate().is_err());
+        // Delta / placement are outside the modeled envelope.
+        let mut bad = ok.clone();
+        bad.delta = true;
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.placement = Some("static".to_string());
         assert!(bad.validate().is_err());
     }
 

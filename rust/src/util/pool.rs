@@ -199,6 +199,22 @@ impl ThreadPool {
     pub fn background_paused(&self) -> bool {
         self.paused.load(Ordering::SeqCst)
     }
+
+    /// Kill the pool: stop the workers and *drop* every queued job without
+    /// running it. Jobs already executing finish; everything still in the
+    /// queue is discarded. This models a process crash (the backend
+    /// daemon's fault-injection path) — a graceful drop runs the queue dry
+    /// instead. Idempotent; `submit` after `kill` panics like submit after
+    /// shutdown.
+    pub fn kill(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            st.queue.clear();
+        }
+        self.shared.cv.notify_all();
+        self.shared.idle_cv.notify_all();
+    }
 }
 
 /// Lower the calling thread's scheduling priority (Linux: per-thread nice
@@ -386,6 +402,40 @@ mod tests {
             h.wait();
         }
         assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn kill_drops_queued_jobs() {
+        let pool = ThreadPool::new(1);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        let blocker = pool.submit(Priority::Foreground, move || {
+            let (l, cv) = &*g2;
+            let mut open = l.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        let queued: Vec<_> = (0..8)
+            .map(|_| {
+                let r = Arc::clone(&ran);
+                pool.submit(Priority::Normal, move || {
+                    r.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        pool.kill();
+        // Unblock the in-flight job; it finishes, the queued ones do not.
+        {
+            let (l, cv) = &*gate;
+            *l.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        blocker.wait();
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "killed jobs must not run");
+        assert!(queued.iter().all(|h| !h.is_done()));
     }
 
     #[test]

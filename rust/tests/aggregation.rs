@@ -38,7 +38,7 @@ fn aggregated_restore_round_trip_survives_local_tier_loss() {
         let client = rt.client(rank);
         client.mem_protect(0, payload(rank, 64 << 10));
         client.checkpoint("agg", 1).unwrap();
-        client.checkpoint_wait("agg", 1).unwrap();
+        client.checkpoint_wait_done("agg", 1).unwrap();
     }
     rt.drain();
 
@@ -74,7 +74,7 @@ fn aggregated_restore_direct_recovery_path() {
         let client = rt.client(rank);
         client.mem_protect(0, payload(rank, 8 << 10));
         client.checkpoint("direct", 1).unwrap();
-        client.checkpoint_wait("direct", 1).unwrap();
+        client.checkpoint_wait_done("direct", 1).unwrap();
     }
     rt.drain();
     let restored = rt
@@ -94,7 +94,7 @@ fn fewer_larger_pfs_writes_than_file_per_rank() {
         let client = rt.client(rank);
         client.mem_protect(0, payload(rank, 16 << 10));
         client.checkpoint("w", 1).unwrap();
-        client.checkpoint_wait("w", 1).unwrap();
+        client.checkpoint_wait_done("w", 1).unwrap();
     }
     rt.drain();
     let report = rt.aggregator().unwrap().report();
@@ -210,10 +210,10 @@ fn duplicate_version_resubmission_keeps_last_writer() {
     let client = rt.client(0);
     let h = client.mem_protect(0, payload(0, 4 << 10));
     client.checkpoint("dup", 1).unwrap();
-    client.checkpoint_wait("dup", 1).unwrap();
+    client.checkpoint_wait_done("dup", 1).unwrap();
     *h.lock().unwrap() = payload(7, 4 << 10);
     client.checkpoint("dup", 1).unwrap();
-    client.checkpoint_wait("dup", 1).unwrap();
+    client.checkpoint_wait_done("dup", 1).unwrap();
     rt.drain();
     for node in 0..2 {
         rt.env().fabric.fail_node(node);

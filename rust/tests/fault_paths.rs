@@ -15,7 +15,7 @@ fn ckpt_all(rt: &Arc<VelocRuntime>, name: &str, v: u64, bytes: usize) {
         let client = rt.client(rank);
         client.mem_protect(0, vec![(rank as u8) ^ (v as u8); bytes]);
         client.checkpoint(name, v).unwrap();
-        client.checkpoint_wait(name, v).unwrap();
+        client.checkpoint_wait_done(name, v).unwrap();
     }
     rt.drain();
 }
@@ -68,7 +68,7 @@ fn dram_exhaustion_falls_back_to_next_local_tier() {
     let client = rt.client(0);
     client.mem_protect(0, vec![7u8; 64 << 10]); // > DRAM capacity
     client.checkpoint("big", 1).unwrap();
-    client.checkpoint_wait("big", 1).unwrap();
+    client.checkpoint_wait_done("big", 1).unwrap();
     rt.drain();
     // Landed on NVMe, not DRAM.
     let tiers = rt.env().fabric.local_tiers(0);
@@ -102,8 +102,41 @@ fn wait_times_out_for_unknown_checkpoint() {
     cfg.wait_timeout = Duration::from_millis(50);
     let rt = VelocRuntime::new(cfg).unwrap();
     let client = rt.client(0);
-    let err = client.checkpoint_wait("never", 1).unwrap_err().to_string();
-    assert!(err.contains("timeout"), "{err}");
+    let st = client.checkpoint_wait("never", 1).unwrap();
+    assert_eq!(st, veloc::pipeline::CkptStatus::TimedOut);
+}
+
+/// Satellite regression: a checkpoint whose engine never settles (async
+/// tail held behind the paused backend) must resolve `checkpoint_wait`
+/// into the *typed* timeout status within the configured timeout — the
+/// old behaviour was a stringly error, the failure mode a hang.
+#[test]
+fn wait_on_stalled_engine_times_out_typed_not_hanging() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    cfg.wait_timeout = Duration::from_millis(200);
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let client = rt.client(0);
+    client.mem_protect(0, vec![7u8; 4 << 10]);
+    // Hold the async tail so the command stays unsettled for the wait.
+    rt.backend().pause_background(true);
+    client.checkpoint("stall", 1).unwrap();
+    let t0 = std::time::Instant::now();
+    let st = client.checkpoint_wait("stall", 1).unwrap();
+    assert_eq!(st, veloc::pipeline::CkptStatus::TimedOut);
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "typed timeout, not a hang: {:?}",
+        t0.elapsed()
+    );
+    // Releasing the backend settles the same command.
+    rt.backend().pause_background(false);
+    let st = client.checkpoint_wait("stall", 1).unwrap();
+    assert!(
+        matches!(st, veloc::pipeline::CkptStatus::Done(_)),
+        "{st:?}"
+    );
+    rt.drain();
 }
 
 #[test]
@@ -114,10 +147,10 @@ fn duplicate_version_overwrites_cleanly() {
     let client = rt.client(0);
     let h = client.mem_protect(0, vec![1u8; 4 << 10]);
     client.checkpoint("dup", 1).unwrap();
-    client.checkpoint_wait("dup", 1).unwrap();
+    client.checkpoint_wait_done("dup", 1).unwrap();
     *h.lock().unwrap() = vec![2u8; 4 << 10];
     client.checkpoint("dup", 1).unwrap(); // same version again
-    client.checkpoint_wait("dup", 1).unwrap();
+    client.checkpoint_wait_done("dup", 1).unwrap();
     rt.drain();
     let h2 = client.mem_protect(0, Vec::new());
     client.restart("dup").unwrap().unwrap();
@@ -133,7 +166,7 @@ fn unprotected_region_ids_ignored_on_restore() {
     client.mem_protect(0, vec![1u8; 128]);
     client.mem_protect(7, vec![2u8; 128]);
     client.checkpoint("r", 1).unwrap();
-    client.checkpoint_wait("r", 1).unwrap();
+    client.checkpoint_wait_done("r", 1).unwrap();
     rt.drain();
     // New client protects only region 7: restore fills it, skips 0.
     let c2 = rt.client(0);
@@ -239,7 +272,7 @@ fn mem_unprotect_removes_region_from_next_checkpoint() {
     client.mem_unprotect(1);
     assert_eq!(client.protected_bytes(), 64);
     client.checkpoint("u", 1).unwrap();
-    client.checkpoint_wait("u", 1).unwrap();
+    client.checkpoint_wait_done("u", 1).unwrap();
     rt.drain();
     assert_eq!(
         rt.env().registry.info("u", 1, 0).unwrap().bytes,

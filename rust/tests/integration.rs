@@ -205,7 +205,7 @@ fn compression_roundtrips_through_pfs() {
         let client = rt.client(rank);
         client.mem_protect(0, vec![42u8; 256 << 10]); // compressible
         client.checkpoint("c", 1).unwrap();
-        client.checkpoint_wait("c", 1).unwrap();
+        client.checkpoint_wait_done("c", 1).unwrap();
     }
     rt.drain();
     // PFS copy must be much smaller than the raw payload.

@@ -1,0 +1,262 @@
+//! Daemon round-trip tests over the real Unix-domain-socket wire
+//! protocol: register → submit (inline and staged handoff) → wait →
+//! restart query, concurrent multi-client fairness, typed backpressure
+//! and wait timeouts, and a crash/replay cycle across two daemon
+//! incarnations sharing one socket path.
+#![cfg(unix)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use veloc::api::{SimHooks, VelocConfig};
+use veloc::backend::{BackendClient, BackendDaemon, Backpressure};
+use veloc::pipeline::CkptStatus;
+use veloc::storage::StorageFabric;
+
+static DIRS: AtomicU64 = AtomicU64::new(0);
+
+/// A daemon config with a unique home directory and a short socket path.
+fn daemon_config(tag: &str) -> VelocConfig {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    cfg.backend.dir = std::env::temp_dir().join(format!(
+        "veloc-ipc-{tag}-{}-{}",
+        std::process::id(),
+        DIRS.fetch_add(1, Ordering::SeqCst)
+    ));
+    cfg
+}
+
+/// Serve `daemon` on a background thread and wait for the socket to bind.
+fn serve(daemon: &Arc<BackendDaemon>) -> std::thread::JoinHandle<anyhow::Result<()>> {
+    let d = Arc::clone(daemon);
+    let handle = std::thread::spawn(move || d.serve());
+    let socket = daemon.backend_config().socket_path();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !socket.exists() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "daemon never bound {}",
+            socket.display()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    handle
+}
+
+fn cleanup(cfg: &VelocConfig) {
+    let _ = std::fs::remove_dir_all(&cfg.backend.dir);
+}
+
+#[test]
+fn socket_round_trip_inline_and_staged() {
+    let cfg = daemon_config("rt");
+    let inline_max = cfg.backend.inline_max;
+    let daemon = BackendDaemon::start(cfg.clone()).unwrap();
+    let server = serve(&daemon);
+
+    let backend = BackendClient::connect(cfg.backend.socket_path());
+    let client = backend.client("jobA", 0).unwrap();
+    // Small region: travels inline in the submit frame.
+    let small = client.mem_protect(0, vec![0x11; 4 << 10]);
+    // Large region: pushes the container over inline_max → staged handoff.
+    let large = client.mem_protect(1, vec![0x22; inline_max + (64 << 10)]);
+    for v in [1u64, 2] {
+        client.checkpoint("app", v).unwrap();
+        let st = client.checkpoint_wait("app", v).unwrap();
+        assert!(matches!(st, CkptStatus::Done(_)), "v{v}: {st:?}");
+    }
+    // The staging directory holds no leftovers: staged files are adopted
+    // by rename into the journal and deleted when the entry settles.
+    assert!(daemon.drain(Duration::from_secs(30)));
+    let staged_leftovers = std::fs::read_dir(daemon.staging_dir()).unwrap().count();
+    assert_eq!(staged_leftovers, 0, "staged files must be adopted");
+
+    // Restart query returns the exact bytes.
+    *small.lock().unwrap() = Vec::new();
+    *large.lock().unwrap() = Vec::new();
+    let info = client.restart("app").unwrap().expect("restore");
+    assert_eq!(info.version, 2);
+    assert_eq!(*small.lock().unwrap(), vec![0x11; 4 << 10]);
+    assert_eq!(*large.lock().unwrap(), vec![0x22; inline_max + (64 << 10)]);
+
+    // Stats round-trip exposes the backend metrics.
+    let stats = backend.stats().unwrap();
+    let submits = stats
+        .at(&["counters", "backend.submits"])
+        .and_then(veloc::util::json::Json::as_u64)
+        .unwrap_or(0);
+    assert_eq!(submits, 2);
+
+    drop(client);
+    backend.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    cleanup(&cfg);
+}
+
+/// Satellite: two jobs share one daemon concurrently. Both jobs' full
+/// wave sets settle (fair-share drain metrics: per-job dispatched and
+/// settled counters match their submissions, round-robin picks observed
+/// while both queues were busy) and same (name, version) pairs never
+/// collide across jobs.
+#[test]
+fn concurrent_jobs_fair_share_without_collisions() {
+    let cfg = daemon_config("fair");
+    let daemon = BackendDaemon::start(cfg.clone()).unwrap();
+    let server = serve(&daemon);
+    let socket = cfg.backend.socket_path();
+    const WAVES: u64 = 6;
+
+    // Build both queues while dispatch is paused, so the fair scheduler
+    // demonstrably alternates between two busy jobs on resume.
+    daemon.pause_dispatch(true);
+    let submit = |job: &'static str, fill: u8| {
+        let socket = socket.clone();
+        std::thread::spawn(move || -> anyhow::Result<()> {
+            let backend = BackendClient::connect(socket);
+            let client = backend.client(job, 0)?;
+            client.mem_protect(0, vec![fill; 16 << 10]);
+            for v in 1..=WAVES {
+                client.checkpoint("app", v)?;
+            }
+            for v in 1..=WAVES {
+                let st = client.checkpoint_wait("app", v)?;
+                anyhow::ensure!(matches!(st, CkptStatus::Done(_)), "{job} v{v}: {st:?}");
+            }
+            Ok(())
+        })
+    };
+    let ha = submit("jobA", 0xAA);
+    let hb = submit("jobB", 0xBB);
+    // Wait until both jobs acked everything, then release the dispatcher.
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let m = daemon.runtime().metrics();
+    while m.counter("backend.submits") < 2 * WAVES {
+        assert!(std::time::Instant::now() < deadline, "submits never acked");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    daemon.pause_dispatch(false);
+    ha.join().unwrap().unwrap();
+    hb.join().unwrap().unwrap();
+    assert!(daemon.drain(Duration::from_secs(30)));
+
+    // Fair-share drain metrics.
+    assert_eq!(m.counter("backend.dispatched.jobA"), WAVES);
+    assert_eq!(m.counter("backend.dispatched.jobB"), WAVES);
+    assert_eq!(m.counter("backend.settled.jobA"), WAVES);
+    assert_eq!(m.counter("backend.settled.jobB"), WAVES);
+    assert!(
+        m.counter("backend.fair.rr_picks") >= WAVES,
+        "round-robin must alternate between two busy jobs: {} picks",
+        m.counter("backend.fair.rr_picks")
+    );
+    assert_eq!(m.counter("backend.queue_depth.jobA"), 0);
+    assert_eq!(m.counter("backend.queue_depth.jobB"), 0);
+
+    // No cross-job version collisions: same (name, version), different
+    // payloads, each restores its own.
+    let backend = BackendClient::connect(&socket);
+    for (job, fill) in [("jobA", 0xAAu8), ("jobB", 0xBB)] {
+        let client = backend.client(job, 0).unwrap();
+        let h = client.mem_protect(0, Vec::new());
+        let info = client.restart_version("app", WAVES).unwrap().expect("restore");
+        assert_eq!(info.version, WAVES);
+        assert_eq!(*h.lock().unwrap(), vec![fill; 16 << 10], "{job} payload");
+    }
+
+    backend.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    cleanup(&cfg);
+}
+
+#[test]
+fn backpressure_and_wait_timeout_are_typed_over_the_socket() {
+    let mut cfg = daemon_config("bp");
+    cfg.backend.queue_depth = 2;
+    let daemon = BackendDaemon::start(cfg.clone()).unwrap();
+    let server = serve(&daemon);
+
+    let backend = BackendClient::connect(cfg.backend.socket_path())
+        .with_wait_timeout(Duration::from_millis(300));
+    let client = backend.client("jobA", 0).unwrap();
+    client.mem_protect(0, vec![1u8; 8 << 10]);
+
+    // Stall the drain: acks keep landing, nothing settles.
+    daemon.runtime().backend().pause_background(true);
+    client.checkpoint("app", 1).unwrap();
+    client.checkpoint("app", 2).unwrap();
+    // The wait budget expires as a typed status, not an error or a hang.
+    let st = client.checkpoint_wait("app", 1).unwrap();
+    assert_eq!(st, CkptStatus::TimedOut);
+    // The admission window is full: typed backpressure.
+    let err = client.checkpoint("app", 3).unwrap_err();
+    let bp = err.downcast_ref::<Backpressure>().expect("typed backpressure");
+    assert_eq!(bp.job, "jobA");
+
+    daemon.runtime().backend().pause_background(false);
+    assert!(daemon.drain(Duration::from_secs(30)));
+    client.checkpoint("app", 3).unwrap();
+    let st = client.checkpoint_wait("app", 3).unwrap();
+    assert!(matches!(st, CkptStatus::Done(_)), "{st:?}");
+
+    drop(client);
+    backend.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    cleanup(&cfg);
+}
+
+/// The durability headline over the socket: a daemon killed mid-drain
+/// after acking loses nothing — a second incarnation on the same home
+/// directory replays the journal and serves the bytes back.
+#[test]
+fn daemon_crash_replay_serves_acked_checkpoint_over_socket() {
+    let cfg = daemon_config("crash");
+    let fabric = Arc::new(StorageFabric::build(&cfg.fabric).unwrap());
+    let payload = vec![0x5A; 96 << 10]; // above inline_max: staged handoff
+
+    {
+        let hooks = SimHooks {
+            fabric: Some(Arc::clone(&fabric)),
+            ..SimHooks::default()
+        };
+        let daemon = BackendDaemon::start_with_hooks(cfg.clone(), hooks).unwrap();
+        let server = serve(&daemon);
+        let backend = BackendClient::connect(cfg.backend.socket_path());
+        let client = backend.client("jobA", 0).unwrap();
+        client.mem_protect(0, payload.clone());
+        // Park the flushes, ack the checkpoint, let it dispatch, then die.
+        daemon.runtime().backend().pause_background(true);
+        client.checkpoint("app", 1).unwrap();
+        assert!(daemon.wait_dispatched(Duration::from_secs(10)));
+        daemon.crash();
+        drop(client);
+        // The serve loop exits on the crashed stop flag.
+        server.join().unwrap().unwrap();
+    }
+
+    let hooks = SimHooks {
+        fabric: Some(fabric),
+        ..SimHooks::default()
+    };
+    let daemon = BackendDaemon::start_with_hooks(cfg.clone(), hooks).unwrap();
+    assert_eq!(
+        daemon.runtime().metrics().counter("backend.journal.replayed"),
+        1
+    );
+    let server = serve(&daemon);
+    assert!(daemon.drain(Duration::from_secs(30)));
+
+    let backend = BackendClient::connect(cfg.backend.socket_path());
+    let client = backend.client("jobA", 0).unwrap();
+    let st = client.checkpoint_wait("app", 1).unwrap();
+    assert!(matches!(st, CkptStatus::Done(_)), "replayed ack: {st:?}");
+    let h = client.mem_protect(0, Vec::new());
+    let info = client.restart_version("app", 1).unwrap().expect("restore");
+    assert_eq!(info.version, 1);
+    assert_eq!(*h.lock().unwrap(), payload);
+
+    drop(client);
+    backend.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    cleanup(&cfg);
+}

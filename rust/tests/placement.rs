@@ -34,7 +34,7 @@ fn read_only_primary_fails_over_and_restore_verifies() {
     let region = client.mem_protect(0, vec![1u8; 64 << 10]);
 
     client.checkpoint("app", 1).unwrap();
-    client.checkpoint_wait("app", 1).unwrap();
+    client.checkpoint_wait_done("app", 1).unwrap();
     rt.drain();
     assert_eq!(
         rt.env().registry.info("app", 1, 0).unwrap().dest.as_deref(),
@@ -50,7 +50,7 @@ fn read_only_primary_fails_over_and_restore_verifies() {
         g.clone()
     };
     client.checkpoint("app", 2).unwrap();
-    client.checkpoint_wait("app", 2).unwrap();
+    client.checkpoint_wait_done("app", 2).unwrap();
     rt.drain();
     assert_eq!(
         rt.env().registry.info("app", 2, 0).unwrap().dest.as_deref(),
@@ -92,7 +92,7 @@ fn aggregated_drains_fail_over_during_primary_outage() {
 
     rt.env().fabric.pfs().set_down(true);
     client.checkpoint("app", 1).unwrap();
-    client.checkpoint_wait("app", 1).unwrap();
+    client.checkpoint_wait_done("app", 1).unwrap();
     rt.drain();
     assert!(
         !rt.env()
@@ -142,7 +142,7 @@ fn fastest_eligible_routes_to_burst_buffer_and_restores() {
     let expected: Vec<u8> = region.lock().unwrap().clone();
 
     client.checkpoint("app", 1).unwrap();
-    client.checkpoint_wait("app", 1).unwrap();
+    client.checkpoint_wait_done("app", 1).unwrap();
     rt.drain();
     assert_eq!(
         rt.env().registry.info("app", 1, 0).unwrap().dest.as_deref(),

@@ -90,7 +90,7 @@ fn kernel_checksum_validates_and_rejects() {
     let client = rt.client(0);
     client.mem_protect(0, vec![9u8; 32 << 10]);
     client.checkpoint("kc", 1).unwrap();
-    client.checkpoint_wait("kc", 1).unwrap();
+    client.checkpoint_wait_done("kc", 1).unwrap();
     rt.drain();
     // Registry carries a kernel digest.
     let info = rt.env().registry.info("kc", 1, 0).unwrap();
@@ -129,7 +129,7 @@ fn dnn_trainer_learns_and_survives_failure() {
         at_ckpt = loss;
     }
     let v = trainer.checkpoint(&client).unwrap();
-    client.checkpoint_wait("dnn", v).unwrap();
+    client.checkpoint_wait_done("dnn", v).unwrap();
     rt.drain();
     assert!(at_ckpt < first, "training must learn: {first} -> {at_ckpt}");
 
@@ -179,7 +179,7 @@ fn monolithic_capture_equivalent_contents() {
         trainer.train_step().unwrap();
     }
     let v = trainer.checkpoint(&client).unwrap();
-    client.checkpoint_wait("mono", v).unwrap();
+    client.checkpoint_wait_done("mono", v).unwrap();
     rt.drain();
     let info = rt.env().registry.info("mono", v, 0).unwrap();
     assert!(info.bytes > 2_000_000, "all tensors captured: {}", info.bytes);
