@@ -113,6 +113,68 @@ pub fn scaled(n: usize) -> usize {
     }
 }
 
+/// Machine-readable bench output: collects results and named scalars,
+/// and — when `VELOC_BENCH_JSON_DIR` is set (the CI bench job) — writes
+/// them as `BENCH_<name>.json` into that directory so per-PR runs can be
+/// diffed. Without the env var, `write` is a no-op beyond the tables the
+/// bench already printed.
+pub struct Report {
+    name: String,
+    results: Vec<veloc::util::json::Json>,
+    scalars: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Self {
+        Report {
+            name: name.to_string(),
+            results: Vec::new(),
+            scalars: Vec::new(),
+        }
+    }
+
+    /// Record one timed case (label, mean/p50/p95 seconds, bytes moved).
+    pub fn add(&mut self, r: &BenchResult) {
+        self.results.push(
+            veloc::util::json::Json::obj()
+                .set("label", r.label.as_str())
+                .set("mean_s", r.mean())
+                .set("p50_s", r.samples.p50())
+                .set("p95_s", r.samples.p95())
+                .set("bytes_per_iter", r.bytes_per_iter),
+        );
+    }
+
+    /// Record one derived headline number (a speedup, a ratio, a count).
+    pub fn scalar(&mut self, key: &str, value: f64) {
+        self.scalars.push((key.to_string(), value));
+    }
+
+    /// Write `BENCH_<name>.json` into `$VELOC_BENCH_JSON_DIR` (if set).
+    pub fn write(&self) {
+        let Ok(dir) = std::env::var("VELOC_BENCH_JSON_DIR") else {
+            return;
+        };
+        if dir.is_empty() {
+            return;
+        }
+        let mut scalars = veloc::util::json::Json::obj();
+        for (k, v) in &self.scalars {
+            scalars = scalars.set(k, *v);
+        }
+        let j = veloc::util::json::Json::obj()
+            .set("bench", self.name.as_str())
+            .set("results", veloc::util::json::Json::Arr(self.results.clone()))
+            .set("scalars", scalars);
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.name));
+        let _ = std::fs::create_dir_all(&dir);
+        match std::fs::write(&path, j.to_pretty()) {
+            Ok(()) => println!("bench report: {}", path.display()),
+            Err(e) => eprintln!("bench report {} not written: {e}", path.display()),
+        }
+    }
+}
+
 /// Best-effort total time limiter for sweep loops.
 pub struct Budget {
     deadline: Instant,

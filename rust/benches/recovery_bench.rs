@@ -45,6 +45,7 @@ fn checkpoint_world(rt: &Arc<VelocRuntime>, v: u64, bytes: usize) {
 fn main() {
     let bytes = 64 << 10;
     let trials = harness::scaled(60);
+    let mut report = harness::Report::new("recovery");
 
     harness::section("E3: recovery under the default severity mix");
     let rt = runtime();
@@ -100,6 +101,8 @@ fn main() {
         total + failed,
         100.0 * total as f64 / (total + failed).max(1) as f64
     );
+    report.scalar("recovered_ranks", total as f64);
+    report.scalar("unrecovered_ranks", failed as f64);
 
     harness::section("E9: restart latency per level (forced)");
     println!("{:>10} {:>14} {:>14}", "level", "mean", "p95");
@@ -130,5 +133,11 @@ fn main() {
             harness::fmt_secs(s.mean()),
             harness::fmt_secs(s.p95())
         );
+        report.add(&harness::BenchResult {
+            label: format!("restart-{label}"),
+            samples: s,
+            bytes_per_iter: bytes as u64,
+        });
     }
+    report.write();
 }

@@ -5,6 +5,7 @@ use crate::backend::BackendConfig;
 use crate::delta::DeltaConfig;
 use crate::modules::{StackConfig, TierPolicy};
 use crate::pipeline::EngineMode;
+use crate::restore::RestoreConfig;
 use crate::scheduler::SchedulerPolicy;
 use crate::storage::{FabricConfig, PlacementConfig, PlacementPolicy, TierDef, TierKind, TimeMode};
 use crate::util::json::Json;
@@ -48,6 +49,9 @@ pub struct VelocConfig {
     /// Adaptive heterogeneous-tier placement of shared-tier flushes
     /// (policy, health EWMA, circuit breaker — `crate::storage::placement`).
     pub placement: PlacementConfig,
+    /// Restore-side serving plane (read-through cache, single-flight
+    /// dedup, parallel chain prefetch — `crate::restore`).
+    pub restore: RestoreConfig,
     /// Active-backend daemon settings (`veloc daemon` + the socket
     /// clients — `crate::backend`): home directory, socket, admission
     /// depth, payload handoff and journal durability knobs.
@@ -73,6 +77,7 @@ impl Default for VelocConfig {
             aggregation: AggregationConfig::default(),
             delta: DeltaConfig::default(),
             placement: PlacementConfig::default(),
+            restore: RestoreConfig::default(),
             backend: BackendConfig::default(),
             artifacts: None,
         }
@@ -246,6 +251,29 @@ impl VelocConfig {
                 cfg.delta.max_chain = c;
             }
         }
+        if let Some(r) = j.get("restore") {
+            cfg.restore.enabled = r.bool_or("enabled", cfg.restore.enabled);
+            if let Some(mb) = r.get("l1_mb").and_then(Json::as_f64) {
+                if !(mb >= 0.0) {
+                    bail!("restore.l1_mb must be >= 0, got {mb}");
+                }
+                cfg.restore.l1_bytes = (mb * (1u64 << 20) as f64) as u64;
+            }
+            if let Some(mb) = r.get("l2_mb").and_then(Json::as_f64) {
+                if !(mb >= 0.0) {
+                    bail!("restore.l2_mb must be >= 0, got {mb}");
+                }
+                cfg.restore.l2_bytes = (mb * (1u64 << 20) as f64) as u64;
+            }
+            if let Some(kb) = r.get("max_entry_kb").and_then(Json::as_f64) {
+                if !(kb >= 0.0) {
+                    bail!("restore.max_entry_kb must be >= 0, got {kb}");
+                }
+                cfg.restore.max_entry_bytes = (kb * 1024.0) as u64;
+            }
+            cfg.restore.prefetch_depth =
+                r.usize_or("prefetch_depth", cfg.restore.prefetch_depth);
+        }
         // KV module needs the KV tier; a burst-buffer drain target needs
         // the burst-buffer tier.
         if cfg.stack.with_kv {
@@ -340,6 +368,7 @@ impl VelocConfig {
         }
         self.placement.validate()?;
         self.delta.validate()?;
+        self.restore.validate()?;
         self.backend.validate()?;
         Ok(())
     }
@@ -517,6 +546,33 @@ mod tests {
         assert!(VelocConfig::from_json(&j).is_err());
         // Disabled section with odd values still parses (not validated).
         let j = Json::parse(r#"{"delta": {"avg_chunk": 5000}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_ok());
+    }
+
+    #[test]
+    fn restore_section_parsed_and_validated() {
+        let j = Json::parse(
+            r#"{
+                "restore": {"enabled": true, "l1_mb": 32, "l2_mb": 64,
+                            "max_entry_kb": 512, "prefetch_depth": 8}
+            }"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert!(c.restore.enabled);
+        assert_eq!(c.restore.l1_bytes, 32 << 20);
+        assert_eq!(c.restore.l2_bytes, 64 << 20);
+        assert_eq!(c.restore.max_entry_bytes, 512 << 10);
+        assert_eq!(c.restore.prefetch_depth, 8);
+        // A cache too small to hold a single segment is rejected.
+        let j = Json::parse(r#"{"restore": {"enabled": true, "l1_mb": 0}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        // Zero prefetch depth rejected (1 = no pipelining, still legal).
+        let j =
+            Json::parse(r#"{"restore": {"enabled": true, "prefetch_depth": 0}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        // Disabled section with odd values still parses (not validated).
+        let j = Json::parse(r#"{"restore": {"l1_mb": 0, "prefetch_depth": 0}}"#).unwrap();
         assert!(VelocConfig::from_json(&j).is_ok());
     }
 

@@ -275,6 +275,19 @@ impl VelocRuntime {
             None
         };
 
+        // Restore-side serving plane: one engine for the whole runtime,
+        // so every rank's restores (and a storm of daemon clients) meet
+        // in the same cache and single-flight table.
+        let restore = if config.restore.enabled {
+            Some(crate::restore::RestoreEngine::new(
+                config.restore.clone(),
+                Arc::clone(&fabric),
+                Some(Arc::clone(&metrics)),
+            ))
+        } else {
+            None
+        };
+
         let env = Arc::new(Env {
             topology,
             fabric,
@@ -284,6 +297,7 @@ impl VelocRuntime {
             aggregator,
             delta,
             placement,
+            restore,
         });
 
         // Mitigated policies run the active backend at low OS priority
@@ -380,6 +394,12 @@ impl VelocRuntime {
         self.env.placement.as_ref()
     }
 
+    /// The restore-side serving engine (read-through cache, single-flight
+    /// dedup, chain prefetch), when `restore.enabled`.
+    pub fn restore_engine(&self) -> Option<&Arc<crate::restore::RestoreEngine>> {
+        self.env.restore.as_ref()
+    }
+
     /// One rank's pipeline engine.
     pub fn engine(&self, rank: usize) -> &Arc<Engine> {
         &self.engines[rank]
@@ -411,6 +431,12 @@ impl VelocRuntime {
     /// Inject a failure: kill the affected ranks and wipe the storage of
     /// the affected failure domains.
     pub fn inject_failure(&self, scope: &crate::cluster::FailureScope) {
+        // The restore cache is serving-layer node memory mirroring tier
+        // bytes; a failure that wipes tiers must wipe the mirror too, or
+        // restores could serve data the failure destroyed.
+        if let Some(r) = &self.env.restore {
+            r.invalidate_all();
+        }
         let inj = crate::cluster::FailureInjector::new(self.topology, 1.0);
         for r in inj.affected_ranks(scope) {
             self.kill.kill(r);
@@ -572,6 +598,7 @@ impl Transport for LocalTransport {
         version: Option<u64>,
     ) -> Result<Option<Restored>> {
         let engine = self.runtime.engine(rank);
+        let t0 = Instant::now();
         let restored = match version {
             Some(v) => self.runtime.recovery.restore_version(engine, name, rank, v)?,
             None => self.runtime.recovery.restore_latest(engine, name, rank)?,
@@ -581,6 +608,9 @@ impl Transport for LocalTransport {
             self.runtime
                 .metrics
                 .incr(&format!("restart.level{}", r.level), 1);
+            self.runtime
+                .metrics
+                .observe_duration("restore.latency", t0.elapsed());
         }
         Ok(restored)
     }

@@ -47,7 +47,9 @@ pub mod store;
 
 pub use chunker::{Chunker, Fingerprint};
 pub use manifest::{is_delta, strip_payloads, ChunkRef, DeltaManifest, RegionChunks, VDLT_MAGIC};
-pub use reassemble::materialize;
+pub use reassemble::{
+    materialize, materialize_planned, predicted_hops, ChainPlan, RestoreError,
+};
 pub use state::DeltaState;
 pub use store::{ChunkStore, DeltaFaultHook, PublishStat, FAULT_GC_INTENT};
 

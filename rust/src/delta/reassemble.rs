@@ -7,22 +7,168 @@
 //! ancestor containers through the caller-provided `fetch` closure — each
 //! resilience level supplies its own fetcher (local tiers, partner tiers,
 //! PFS objects, aggregated containers, erasure rebuilds). A broken chain
-//! (ancestor container or chunk unavailable) is an error; the engine's
-//! restore loop treats it like any other corrupt copy and falls back to
-//! the next level — and recovery's version descent falls back to an older
-//! version whose chain is intact, bounded by the periodic forced fulls.
+//! (ancestor container or chunk unavailable) is a typed [`RestoreError`];
+//! the engine's restore loop treats it like any other corrupt copy and
+//! falls back to the next level — and recovery's version descent falls
+//! back to an older version whose chain is intact, bounded by the
+//! periodic forced fulls.
+//!
+//! The walk also records which ancestor versions it actually consulted as
+//! a [`ChainPlan`] — the canonical hop list that the restore subsystem's
+//! prefetcher and cache share as one identity (see [`crate::restore`]).
 
 use crate::delta::chunker::Fingerprint;
 use crate::delta::manifest;
+use crate::delta::manifest::DeltaManifest;
 use crate::delta::store::ChunkStore;
 use crate::modules::transfer::maybe_decompress;
 use crate::util::bytes::Checkpoint;
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{ensure, Result};
 use std::collections::HashMap;
 
 /// Hard safety bound on chain walks (configuration bounds real chains far
 /// lower via forced fulls).
 const MAX_CHAIN_HOPS: usize = 1024;
+
+/// Typed failure modes of delta-chain reassembly. Callers match on the
+/// variant (via `anyhow::Error::downcast_ref`) instead of grepping the
+/// rendered message; the [`std::fmt::Display`] text stays close to the
+/// historical strings for log continuity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RestoreError {
+    /// An ancestor container the chain depends on could not be fetched.
+    ChainBroken {
+        /// Checkpoint name of the restore target.
+        name: String,
+        /// Version being restored.
+        version: u64,
+        /// Rank being restored.
+        rank: usize,
+        /// The ancestor version that was unavailable.
+        missing: u64,
+    },
+    /// The chain ended (reached a full container) with chunks still
+    /// unresolved — the target references data no ancestor carries.
+    ChainExhausted {
+        /// Checkpoint name of the restore target.
+        name: String,
+        /// Version being restored.
+        version: u64,
+        /// Rank being restored.
+        rank: usize,
+        /// How many chunks were still missing when the chain ran out.
+        missing_chunks: usize,
+    },
+    /// The walk exceeded the hard hop bound — a cycle or corrupt base
+    /// pointers, never a legitimate chain (forced fulls bound real ones).
+    ChainTooLong {
+        /// Checkpoint name of the restore target.
+        name: String,
+        /// Version being restored.
+        version: u64,
+        /// The hop bound that was exceeded.
+        limit: usize,
+    },
+    /// An ancestor fetched mid-chain was not a delta container.
+    NotDelta {
+        /// Checkpoint name of the restore target.
+        name: String,
+        /// The chain version that had the wrong container type.
+        version: u64,
+    },
+}
+
+impl std::fmt::Display for RestoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RestoreError::ChainBroken {
+                name,
+                version,
+                rank,
+                missing,
+            } => write!(
+                f,
+                "delta restore of {name} v{version} rank {rank}: chain broken — \
+                 version {missing} unavailable"
+            ),
+            RestoreError::ChainExhausted {
+                name,
+                version,
+                rank,
+                missing_chunks,
+            } => write!(
+                f,
+                "delta restore of {name} v{version} rank {rank}: {missing_chunks} \
+                 chunk(s) missing and the manifest chain is exhausted"
+            ),
+            RestoreError::ChainTooLong {
+                name,
+                version,
+                limit,
+            } => write!(f, "manifest chain of {name} v{version} exceeds {limit} links"),
+            RestoreError::NotDelta { name, version } => {
+                write!(f, "chain version {version} of {name} is not a delta container")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RestoreError {}
+
+/// The resolved identity of one chain walk: which container was the
+/// target and which ancestor versions the walk actually consulted, in
+/// walk order. Prefetchers and caches key off this one canonical plan
+/// instead of re-deriving hop lists per fetch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainPlan {
+    /// Checkpoint name of the restore target.
+    pub name: String,
+    /// Rank of the restore target.
+    pub rank: usize,
+    /// Version of the restore target.
+    pub version: u64,
+    /// Ancestor versions fetched during the walk, nearest first. Empty
+    /// for non-delta containers and for deltas fully resolved from
+    /// carried payloads or the node chunk store.
+    pub hops: Vec<u64>,
+}
+
+impl ChainPlan {
+    /// A plan with no hops (passthrough / store-resolved restores).
+    fn direct(name: &str, rank: usize, version: u64) -> Self {
+        ChainPlan {
+            name: name.to_string(),
+            rank,
+            version,
+            hops: Vec::new(),
+        }
+    }
+}
+
+/// Predict the ancestor versions a delta container's chain will visit,
+/// from manifest metadata alone: the walk starts at `base` and takes
+/// `chain_len` hops total, and writers advance versions by a fixed
+/// stride, so extrapolating `version - base` backwards from `base`
+/// reconstructs the likely hop list without fetching anything. This is
+/// speculation for prefetch — a mispredicted hop costs one wasted fetch,
+/// never a wrong restore (the authoritative walk follows real `base`
+/// pointers).
+pub fn predicted_hops(m: &DeltaManifest) -> Vec<u64> {
+    let Some(base) = m.base else {
+        return Vec::new();
+    };
+    let stride = m.version.saturating_sub(base).max(1);
+    let mut hops = Vec::with_capacity(m.chain_len as usize);
+    let mut v = base;
+    for _ in 0..m.chain_len.min(MAX_CHAIN_HOPS as u64) {
+        hops.push(v);
+        if v <= stride {
+            break;
+        }
+        v -= stride;
+    }
+    hops
+}
 
 /// Reassemble a checkpoint from container bytes. `store` is the optional
 /// node-local chunk store fast path; `fetch` returns the (possibly
@@ -34,9 +180,21 @@ pub fn materialize(
     store: Option<&ChunkStore>,
     fetch: &dyn Fn(u64) -> Option<Vec<u8>>,
 ) -> Result<Checkpoint> {
+    materialize_planned(data, store, fetch).map(|(ckpt, _)| ckpt)
+}
+
+/// [`materialize`] that also returns the [`ChainPlan`] the walk resolved
+/// — the hop list restore-side caching and prefetch key off.
+pub fn materialize_planned(
+    data: Vec<u8>,
+    store: Option<&ChunkStore>,
+    fetch: &dyn Fn(u64) -> Option<Vec<u8>>,
+) -> Result<(Checkpoint, ChainPlan)> {
     let raw = maybe_decompress(data)?;
     if !manifest::is_delta(&raw) {
-        return Checkpoint::decode(&raw);
+        let ckpt = Checkpoint::decode(&raw)?;
+        let plan = ChainPlan::direct(&ckpt.meta.name, ckpt.meta.rank, ckpt.meta.iteration);
+        return Ok((ckpt, plan));
     }
     let (target, mut have) = manifest::decode(&raw)?;
     let needed = target.fp_set();
@@ -60,38 +218,43 @@ pub fn materialize(
     }
 
     // Walk the manifest chain for whatever is still unresolved.
+    let mut plan = ChainPlan::direct(&target.name, target.rank, target.version);
     let mut base = target.base;
-    let mut hops = 0;
     while !missing(&have).is_empty() {
         let Some(v) = base else {
-            bail!(
-                "delta restore of {} v{} rank {}: {} chunk(s) missing and the \
-                 manifest chain is exhausted",
-                target.name,
-                target.version,
-                target.rank,
-                missing(&have).len()
-            );
+            return Err(RestoreError::ChainExhausted {
+                name: target.name.clone(),
+                version: target.version,
+                rank: target.rank,
+                missing_chunks: missing(&have).len(),
+            }
+            .into());
         };
-        hops += 1;
-        if hops > MAX_CHAIN_HOPS {
-            bail!(
-                "manifest chain of {} v{} exceeds {MAX_CHAIN_HOPS} links",
-                target.name,
-                target.version
-            );
+        if plan.hops.len() >= MAX_CHAIN_HOPS {
+            return Err(RestoreError::ChainTooLong {
+                name: target.name.clone(),
+                version: target.version,
+                limit: MAX_CHAIN_HOPS,
+            }
+            .into());
         }
-        let bytes = fetch(v).ok_or_else(|| {
-            anyhow!(
-                "delta restore of {} v{} rank {}: chain broken — version {v} unavailable",
-                target.name,
-                target.version,
-                target.rank
-            )
-        })?;
+        let Some(bytes) = fetch(v) else {
+            return Err(RestoreError::ChainBroken {
+                name: target.name.clone(),
+                version: target.version,
+                rank: target.rank,
+                missing: v,
+            }
+            .into());
+        };
+        plan.hops.push(v);
         let braw = maybe_decompress(bytes)?;
         if !manifest::is_delta(&braw) {
-            bail!("chain version {v} of {} is not a delta container", target.name);
+            return Err(RestoreError::NotDelta {
+                name: target.name.clone(),
+                version: v,
+            }
+            .into());
         }
         let (ancestor, carried) = manifest::decode(&braw)?;
         for (fp, d) in carried {
@@ -124,7 +287,7 @@ pub fn materialize(
         }
         ckpt.push_region(r.id, data);
     }
-    Ok(ckpt)
+    Ok((ckpt, plan))
 }
 
 #[cfg(test)]
@@ -186,19 +349,45 @@ mod tests {
             expected = Some(c);
         }
         let last = expected.unwrap();
-        // Through the chain only (no store).
+        // Through the chain only (no store): the plan records the hops.
         let fetch = |v: u64| containers.get(&v).cloned();
-        let out = materialize(containers[&3].clone(), None, &fetch).unwrap();
+        let (out, plan) = materialize_planned(containers[&3].clone(), None, &fetch).unwrap();
         assert_eq!(out, last);
         assert_eq!(out.encode(), last.encode(), "re-encode must be identical");
-        // Through the store only (no chain fetch).
-        let out = materialize(
+        assert_eq!(plan.name, "app");
+        assert_eq!(plan.version, 3);
+        assert!(!plan.hops.is_empty(), "chain walk must record its hops");
+        assert!(plan.hops.starts_with(&[2]), "nearest ancestor first: {:?}", plan.hops);
+        // Through the store only (no chain fetch): no hops needed.
+        let (out, plan) = materialize_planned(
             containers[&3].clone(),
             Some(state.store(0).as_ref()),
             &|_| None,
         )
         .unwrap();
         assert_eq!(out, last);
+        assert!(plan.hops.is_empty(), "store fast path takes no hops");
+    }
+
+    #[test]
+    fn predicted_hops_match_real_walk_for_unit_stride() {
+        let (_f, state) = state();
+        let mut data = noise(12_288);
+        let mut containers: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+        for v in 1..=3u64 {
+            data[(v as usize) * 700] ^= 0xA5;
+            containers.insert(
+                v,
+                state.encode_checkpoint(&ckpt(v, &data), v, 0, &|_| true).unwrap(),
+            );
+        }
+        let raw = maybe_decompress(containers[&3].clone()).unwrap();
+        let (m, _) = manifest::decode(&raw).unwrap();
+        assert_eq!(predicted_hops(&m), vec![2, 1]);
+        // A full container predicts no hops.
+        let raw1 = maybe_decompress(containers[&1].clone()).unwrap();
+        let (m1, _) = manifest::decode(&raw1).unwrap();
+        assert!(predicted_hops(&m1).is_empty());
     }
 
     #[test]
@@ -213,7 +402,8 @@ mod tests {
             );
             data[(v as usize) * 900] ^= 0x3C;
         }
-        // Lose the middle link and hide the store: v3 must fail loudly.
+        // Lose the middle link and hide the store: v3 must fail loudly,
+        // with a typed error naming the missing ancestor.
         let fetch = |v: u64| {
             if v == 2 {
                 None
@@ -221,10 +411,15 @@ mod tests {
                 containers.get(&v).cloned()
             }
         };
-        let err = materialize(containers[&3].clone(), None, &fetch)
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("chain broken"), "{err}");
+        let err = materialize(containers[&3].clone(), None, &fetch).unwrap_err();
+        match err.downcast_ref::<RestoreError>() {
+            Some(RestoreError::ChainBroken { version, missing, .. }) => {
+                assert_eq!(*version, 3);
+                assert_eq!(*missing, 2);
+            }
+            other => panic!("expected typed ChainBroken, got {other:?} ({err})"),
+        }
+        assert!(err.to_string().contains("chain broken"), "{err}");
         // The full base still materializes.
         let out = materialize(containers[&1].clone(), None, &|_| None).unwrap();
         assert_eq!(out.meta.iteration, 1);

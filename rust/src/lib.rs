@@ -16,7 +16,9 @@
 //!   manifests with chain recovery), cluster + failure simulation
 //!   ([`cluster`]), the
 //!   deterministic crash–recover–verify scenario engine ([`sim`]), recovery
-//!   ([`recovery`]), background-flush scheduling ([`scheduler`]),
+//!   ([`recovery`]), the restore-side serving plane ([`restore`]:
+//!   read-through cache, single-flight dedup, parallel chain prefetch
+//!   for restart storms), background-flush scheduling ([`scheduler`]),
 //!   checkpoint-interval optimization ([`interval`]) and workloads ([`app`]).
 //! - **L2** — JAX compute graphs (interval MLP, seq2seq predictor, the
 //!   checkpointed application DNN), AOT-lowered to `artifacts/*.hlo.txt`.
@@ -53,6 +55,7 @@ pub mod modules;
 pub mod pipeline;
 #[allow(missing_docs)]
 pub mod recovery;
+pub mod restore;
 #[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]

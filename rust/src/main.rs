@@ -48,6 +48,12 @@ fn main() {
     .flag("delta", "incremental dedup: move only novel chunks per checkpoint")
     .opt("delta-chunk-kb", "8", "delta: average chunk size (KiB, power of two)")
     .opt("delta-max-chain", "8", "delta: checkpoints between forced fulls")
+    .opt(
+        "restore-cache-mb",
+        "",
+        "restore: L1 read-through cache size (MiB, 0 = disable the plane)",
+    )
+    .opt("restore-prefetch-depth", "0", "restore: chain prefetch window (0 = default)")
     .opt("socket", "", "daemon: unix socket path (default <daemon-dir>/veloc.sock)")
     .opt("daemon-dir", "", "daemon: home directory (journal + staging)")
     .opt("queue-depth", "0", "daemon: per-job admission bound (0 = config default)")
@@ -113,6 +119,22 @@ fn config_from(cli: &Cli) -> Result<VelocConfig> {
         cfg.delta.min_chunk = (avg / 4).max(64);
         cfg.delta.max_chunk = avg * 8;
         cfg.delta.max_chain = cli.get_u64("delta-max-chain").max(1);
+    }
+    let cache_mb = cli.get("restore-cache-mb");
+    if !cache_mb.is_empty() {
+        let mb = cli.get_u64("restore-cache-mb");
+        if mb == 0 {
+            cfg.restore.enabled = false;
+        } else {
+            cfg.restore.enabled = true;
+            cfg.restore.l1_bytes = mb << 20;
+            cfg.restore.l2_bytes = (mb << 20) * 2;
+            cfg.restore.max_entry_bytes = cfg.restore.max_entry_bytes.min(mb << 20);
+        }
+    }
+    let depth = cli.get_usize("restore-prefetch-depth");
+    if depth > 0 {
+        cfg.restore.prefetch_depth = depth;
     }
     Ok(cfg)
 }

@@ -111,6 +111,7 @@ mod tests {
             aggregator: None,
             delta: state,
             placement: None,
+            restore: None,
         })
     }
 

@@ -313,9 +313,6 @@ impl Module for ErasureModule {
         let Some(version) = ctx.version else {
             return Ok(None);
         };
-        let Some(bytes) = self.rebuild_bytes(&ctx.name, ctx.rank, version)? else {
-            return Ok(None);
-        };
         // Delta chains prefer the rank's own surviving local copy of an
         // ancestor and fall back to rebuilding the ancestor from the
         // group, exactly like the primary version.
@@ -324,6 +321,22 @@ impl Module for ErasureModule {
                 .or_else(|| self.rebuild_bytes(&ctx.name, ctx.rank, v).unwrap_or(None))
         };
         let store = self.env.delta.as_ref().map(|d| d.store(ctx.node).as_ref());
+        // Restore plane: rebuilt group parities are the most expensive
+        // bytes in the system to re-derive, so cache them preferentially.
+        if let Some(eng) = &self.env.restore {
+            let fetch = |v: u64| -> Result<Option<Vec<u8>>> {
+                if let Some(d) = self.read_local_copy(ctx.rank, &ctx.name, v) {
+                    return Ok(Some(d));
+                }
+                self.rebuild_bytes(&ctx.name, ctx.rank, v)
+            };
+            return eng.materialize(
+                "erasure", &ctx.name, ctx.rank, ctx.node, version, store, &fetch,
+            );
+        }
+        let Some(bytes) = self.rebuild_bytes(&ctx.name, ctx.rank, version)? else {
+            return Ok(None);
+        };
         Ok(Some(crate::delta::materialize(bytes, store, &fetch_at)?))
     }
 

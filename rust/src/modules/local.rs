@@ -112,13 +112,20 @@ impl Module for LocalModule {
             let key = crate::pipeline::storage_key("local", &ctx.name, ctx.rank, v);
             tiers.iter().find_map(|t| t.get(&key).map(|(d, _)| d))
         };
-        let Some(data) = fetch_at(version) else {
-            return Ok(None);
-        };
         // Delta containers reassemble through the node chunk store and,
         // for anything the store lost, the local manifest chain; raw VCKP
         // passes straight through.
         let store = self.env.delta.as_ref().map(|d| d.store(ctx.node).as_ref());
+        // Restore plane: cache + single-flight + chain prefetch.
+        if let Some(eng) = &self.env.restore {
+            let fetch = |v: u64| -> Result<Option<Vec<u8>>> { Ok(fetch_at(v)) };
+            return eng.materialize(
+                "local", &ctx.name, ctx.rank, ctx.node, version, store, &fetch,
+            );
+        }
+        let Some(data) = fetch_at(version) else {
+            return Ok(None);
+        };
         Ok(Some(crate::delta::materialize(data, store, &fetch_at)?))
     }
 
@@ -150,6 +157,7 @@ mod tests {
             aggregator: None,
             delta: None,
             placement: None,
+            restore: None,
         })
     }
 

@@ -69,6 +69,10 @@ pub struct Env {
     /// engine instead of writing straight to their configured tier
     /// (`crate::storage::placement`).
     pub placement: Option<Arc<crate::storage::PlacementEngine>>,
+    /// When set, every module `restore()` path serves container bytes
+    /// through the restore-side plane — read-through cache, single-flight
+    /// dedup and parallel chain prefetch (`crate::restore`).
+    pub restore: Option<Arc<crate::restore::RestoreEngine>>,
 }
 
 /// Configuration of the default module stack.
@@ -190,6 +194,7 @@ mod tests {
             aggregator: None,
             delta: None,
             placement: None,
+            restore: None,
         })
     }
 

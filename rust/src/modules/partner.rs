@@ -92,14 +92,22 @@ impl Module for PartnerModule {
             let key = crate::pipeline::storage_key("partner", &ctx.name, ctx.rank, v);
             tiers.iter().find_map(|t| t.get(&key).map(|(d, _)| d))
         };
-        let Some(data) = fetch_at(version) else {
-            return Ok(None);
-        };
         // Delta chains walk the partner copies of older versions on the
         // same node; the partner node's chunk store is consulted first
         // (fingerprint-verified, so cross-rank hits are safe and misses
         // just fall through to the chain).
         let store = self.env.delta.as_ref().map(|d| d.store(pnode).as_ref());
+        // Restore plane: cached entries live on the partner node (its
+        // tiers hold the real copies the cache mirrors).
+        if let Some(eng) = &self.env.restore {
+            let fetch = |v: u64| -> Result<Option<Vec<u8>>> { Ok(fetch_at(v)) };
+            return eng.materialize(
+                "partner", &ctx.name, ctx.rank, pnode, version, store, &fetch,
+            );
+        }
+        let Some(data) = fetch_at(version) else {
+            return Ok(None);
+        };
         Ok(Some(crate::delta::materialize(data, store, &fetch_at)?))
     }
 

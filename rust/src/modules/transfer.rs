@@ -172,6 +172,18 @@ impl Module for TransferModule {
         let Some(version) = ctx.version else {
             return Ok(None);
         };
+        let store = self.env.delta.as_ref().map(|d| d.store(ctx.node).as_ref());
+        // Restore plane: the level-4 read is the restart-storm hot spot —
+        // N clients cold-restoring one container set must not multiply
+        // PFS reads, so this path leans hardest on the cache and the
+        // single-flight table.
+        if let Some(eng) = &self.env.restore {
+            let fetch =
+                |v: u64| -> Result<Option<Vec<u8>>> { self.fetch_level4(&ctx.name, ctx.rank, v) };
+            return eng.materialize(
+                "pfs", &ctx.name, ctx.rank, ctx.node, version, store, &fetch,
+            );
+        }
         // Primary lookup: the file-per-rank object first (wherever
         // placement landed it), then the aggregated containers (index
         // lookup with persisted-index and header-rebuild fallbacks).
@@ -185,7 +197,6 @@ impl Module for TransferModule {
         let fetch_at = |v: u64| -> Option<Vec<u8>> {
             self.fetch_level4(&ctx.name, ctx.rank, v).ok().flatten()
         };
-        let store = self.env.delta.as_ref().map(|d| d.store(ctx.node).as_ref());
         Ok(Some(crate::delta::materialize(data, store, &fetch_at)?))
     }
 
@@ -217,6 +228,7 @@ mod tests {
             aggregator: None,
             delta: None,
             placement: None,
+            restore: None,
         })
     }
 
@@ -290,6 +302,7 @@ mod tests {
             aggregator: None,
             delta: None,
             placement: Some(placement),
+            restore: None,
         });
         fabric.pfs().set_read_only(true);
         let t = TransferModule::new(Arc::clone(&env), 4096);

@@ -98,14 +98,27 @@ impl Recovery {
         let Some(agg) = &self.env.aggregator else {
             return Ok(None);
         };
-        let Some(data) = agg.restore(name, version, rank)? else {
-            return Ok(None);
-        };
         // Delta containers reassemble through the aggregated copies of
         // their chain ancestors; raw/zlib containers pass straight through.
-        let fetch_at =
-            |v: u64| -> Option<Vec<u8>> { agg.restore(name, v, rank).ok().flatten() };
-        let ckpt = crate::delta::materialize(data, None, &fetch_at)?;
+        // With the restore plane enabled, container extraction (a segment
+        // index lookup plus a shared-tier read per call) goes through the
+        // read-through cache and single-flight table under the "agg"
+        // source identity.
+        let ckpt = if let Some(eng) = &self.env.restore {
+            let node = self.env.topology.node_of(rank);
+            let fetch = |v: u64| -> Result<Option<Vec<u8>>> { agg.restore(name, v, rank) };
+            match eng.materialize("agg", name, rank, node, version, None, &fetch)? {
+                Some(c) => c,
+                None => return Ok(None),
+            }
+        } else {
+            let Some(data) = agg.restore(name, version, rank)? else {
+                return Ok(None);
+            };
+            let fetch_at =
+                |v: u64| -> Option<Vec<u8>> { agg.restore(name, v, rank).ok().flatten() };
+            crate::delta::materialize(data, None, &fetch_at)?
+        };
         if !self.validate(name, version, rank, &ckpt) {
             return Ok(None);
         }

@@ -1,0 +1,388 @@
+//! Two-level read-through container cache.
+//!
+//! - **L1** is an in-memory segment cache: canonical container key →
+//!   `Arc`'d bytes, size-bounded, with admission capped per entry so one
+//!   huge container cannot wipe the working set.
+//! - **L2** is a node-local-tier spill: L1 victims are written to the
+//!   node's largest local tier as `rcache.<key>` objects (charging that
+//!   tier's write, exactly like any other local copy) and promoted back
+//!   to L1 on hit.
+//!
+//! Eviction is cost-aware LRU: victims are picked cheapest-to-refetch
+//! first (local re-reads before partner hops before PFS/aggregated reads
+//! before erasure rebuilds), least-recently-used within a cost class.
+//!
+//! Every entry carries a CRC32 fingerprint computed at admission and
+//! re-verified on *every* hit (L1 in memory, L2 as a 4-byte object
+//! trailer). A corrupted — "poisoned" — entry is never served: it is
+//! counted (`restore.cache.poisoned`), dropped, and the read falls
+//! through to a real refetch.
+
+use crate::metrics::Metrics;
+use crate::storage::StorageFabric;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+struct L1Entry {
+    data: Arc<Vec<u8>>,
+    crc: u32,
+    node: usize,
+    cost: u8,
+    last_use: u64,
+}
+
+struct L2Entry {
+    node: usize,
+    len: u64,
+    cost: u8,
+    last_use: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    tick: u64,
+    l1: HashMap<String, L1Entry>,
+    l1_bytes: u64,
+    l2: HashMap<String, L2Entry>,
+    l2_bytes: u64,
+}
+
+pub(crate) struct ReadCache {
+    l1_cap: u64,
+    l2_cap: u64,
+    max_entry: u64,
+    fabric: Arc<StorageFabric>,
+    metrics: Arc<Metrics>,
+    state: Mutex<CacheState>,
+}
+
+/// Storage key of a spilled L1 victim on the node-local tier.
+fn l2_key(key: &str) -> String {
+    format!("rcache.{key}")
+}
+
+impl ReadCache {
+    pub fn new(
+        l1_cap: u64,
+        l2_cap: u64,
+        max_entry: u64,
+        fabric: Arc<StorageFabric>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        ReadCache {
+            l1_cap,
+            l2_cap,
+            max_entry,
+            fabric,
+            metrics,
+            state: Mutex::new(CacheState::default()),
+        }
+    }
+
+    /// Look `key` up in L1, then L2. Hits re-verify the stored CRC; a
+    /// mismatch is counted as poisoned, dropped, and reported as a miss
+    /// so the caller refetches from the real source.
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let l2_probe = {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(e) = st.l1.get_mut(key) {
+                if crc32fast::hash(&e.data) == e.crc {
+                    e.last_use = tick;
+                    self.metrics.incr("restore.cache.hits", 1);
+                    return Some(Arc::clone(&e.data));
+                }
+                // Poisoned in memory: drop it, fall through to L2 (whose
+                // copy carries its own trailer CRC) and then the source.
+                self.metrics.incr("restore.cache.poisoned", 1);
+                let e = st.l1.remove(key).unwrap();
+                st.l1_bytes -= e.data.len() as u64;
+            }
+            st.l2.get_mut(key).map(|e| {
+                e.last_use = tick;
+                e.node
+            })
+        };
+        let node = l2_probe?;
+        // Read the spilled object outside the cache lock (tier reads may
+        // sleep under emulated time).
+        for tier in self.fabric.local_tiers(node) {
+            let Some((raw, _)) = tier.get(&l2_key(key)) else {
+                continue;
+            };
+            if raw.len() >= 4 {
+                let (data, trailer) = raw.split_at(raw.len() - 4);
+                let crc = u32::from_le_bytes(trailer.try_into().unwrap());
+                if crc32fast::hash(data) == crc {
+                    self.metrics.incr("restore.cache.hits", 1);
+                    self.metrics.incr("restore.cache.l2.hits", 1);
+                    // Promote: hot again, so it belongs back in memory.
+                    return Some(self.insert_raw(key, node, data.to_vec(), crc));
+                }
+            }
+            // Poisoned on the spill tier: delete, forget, miss.
+            self.metrics.incr("restore.cache.poisoned", 1);
+            tier.delete(&l2_key(key));
+            let mut st = self.state.lock().unwrap();
+            if let Some(e) = st.l2.remove(key) {
+                st.l2_bytes -= e.len;
+            }
+            return None;
+        }
+        // Index said L2 but no tier holds the object (tier wiped by a
+        // failure): forget the stale index entry.
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st.l2.remove(key) {
+            st.l2_bytes -= e.len;
+        }
+        None
+    }
+
+    /// Admit freshly fetched bytes under `key`. Oversized entries bypass
+    /// admission (returned to the caller untouched); undersized caches
+    /// evict cost-aware-LRU victims into L2 to make room.
+    pub fn insert(&self, key: &str, node: usize, cost: u8, data: Vec<u8>) -> Arc<Vec<u8>> {
+        if self.l1_cap == 0 || data.len() as u64 > self.max_entry {
+            self.metrics.incr("restore.cache.rejected", 1);
+            return Arc::new(data);
+        }
+        let crc = crc32fast::hash(&data);
+        self.insert_with_cost(key, node, cost, data, crc)
+    }
+
+    fn insert_raw(&self, key: &str, node: usize, data: Vec<u8>, crc: u32) -> Arc<Vec<u8>> {
+        let cost = self
+            .state
+            .lock()
+            .unwrap()
+            .l2
+            .get(key)
+            .map(|e| e.cost)
+            .unwrap_or(0);
+        self.insert_with_cost(key, node, cost, data, crc)
+    }
+
+    fn insert_with_cost(
+        &self,
+        key: &str,
+        node: usize,
+        cost: u8,
+        data: Vec<u8>,
+        crc: u32,
+    ) -> Arc<Vec<u8>> {
+        let arc = Arc::new(data);
+        let victims = {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(old) = st.l1.insert(
+                key.to_string(),
+                L1Entry {
+                    data: Arc::clone(&arc),
+                    crc,
+                    node,
+                    cost,
+                    last_use: tick,
+                },
+            ) {
+                st.l1_bytes -= old.data.len() as u64;
+            }
+            st.l1_bytes += arc.len() as u64;
+            let mut victims = Vec::new();
+            while st.l1_bytes > self.l1_cap {
+                // Cheapest-to-refetch first, LRU within a cost class.
+                let victim = st
+                    .l1
+                    .iter()
+                    .min_by_key(|(_, e)| (e.cost, e.last_use))
+                    .map(|(k, _)| k.clone())
+                    .expect("l1_bytes > 0 implies at least one entry");
+                let e = st.l1.remove(&victim).unwrap();
+                st.l1_bytes -= e.data.len() as u64;
+                self.metrics.incr("restore.cache.evictions", 1);
+                victims.push((victim, e));
+            }
+            victims
+        };
+        for (k, e) in victims {
+            self.spill(&k, &e);
+        }
+        arc
+    }
+
+    /// Write an L1 victim to its node's largest local tier with a CRC
+    /// trailer. Spilling is best-effort: no capacity, no L2.
+    fn spill(&self, key: &str, e: &L1Entry) {
+        if self.l2_cap == 0 || e.data.len() as u64 > self.max_entry {
+            return;
+        }
+        let mut payload = Vec::with_capacity(e.data.len() + 4);
+        payload.extend_from_slice(&e.data);
+        payload.extend_from_slice(&e.crc.to_le_bytes());
+        let bytes = payload.len() as u64;
+        let Some(tier) = self
+            .fabric
+            .local_tiers(e.node)
+            .iter()
+            .rev() // slowest/biggest first: never crowd out level-1 copies
+            .find(|t| t.used_bytes() + bytes <= t.spec().capacity)
+        else {
+            return;
+        };
+        if tier.put(&l2_key(key), &payload).is_err() {
+            return;
+        }
+        self.metrics.incr("restore.cache.l2.spills", 1);
+        let doomed = {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(old) = st.l2.insert(
+                key.to_string(),
+                L2Entry {
+                    node: e.node,
+                    len: bytes,
+                    cost: e.cost,
+                    last_use: tick,
+                },
+            ) {
+                st.l2_bytes -= old.len;
+            }
+            st.l2_bytes += bytes;
+            let mut doomed = Vec::new();
+            while st.l2_bytes > self.l2_cap {
+                let victim = st
+                    .l2
+                    .iter()
+                    .min_by_key(|(_, e)| (e.cost, e.last_use))
+                    .map(|(k, _)| k.clone())
+                    .expect("l2_bytes > 0 implies at least one entry");
+                let e = st.l2.remove(&victim).unwrap();
+                st.l2_bytes -= e.len;
+                self.metrics.incr("restore.cache.l2.evictions", 1);
+                doomed.push((victim, e.node));
+            }
+            doomed
+        };
+        for (k, node) in doomed {
+            for tier in self.fabric.local_tiers(node) {
+                if tier.delete(&l2_key(&k)) {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Fault injection: corrupt the cached L1 bytes of `key` *without*
+    /// updating the stored CRC, so the next hit trips the fingerprint
+    /// check. Returns false when the key is not resident in L1.
+    pub fn poison(&self, key: &str) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let Some(e) = st.l1.get_mut(key) else {
+            return false;
+        };
+        let mut corrupt = (*e.data).clone();
+        let Some(b) = corrupt.first_mut() else {
+            return false;
+        };
+        *b ^= 0xFF;
+        e.data = Arc::new(corrupt);
+        true
+    }
+
+    /// Drop everything — in-memory entries and spilled objects. Called
+    /// when a failure is injected: the cache is node memory serving tier
+    /// bytes, and must not outlive the state it mirrors.
+    pub fn invalidate_all(&self) {
+        let l2 = {
+            let mut st = self.state.lock().unwrap();
+            st.l1.clear();
+            st.l1_bytes = 0;
+            st.l2_bytes = 0;
+            std::mem::take(&mut st.l2)
+        };
+        for (k, e) in l2 {
+            for tier in self.fabric.local_tiers(e.node) {
+                if tier.delete(&l2_key(&k)) {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Resident L1 bytes (tests / introspection).
+    pub fn l1_bytes(&self) -> u64 {
+        self.state.lock().unwrap().l1_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::FabricConfig;
+
+    fn cache(l1: u64, l2: u64) -> ReadCache {
+        let fabric = Arc::new(
+            StorageFabric::build(&FabricConfig {
+                nodes: 1,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        ReadCache::new(l1, l2, 1 << 20, fabric, Metrics::new())
+    }
+
+    #[test]
+    fn hit_after_insert_and_poison_detection() {
+        let c = cache(1 << 20, 0);
+        c.insert("pfs:app:r0:v1", 0, 2, vec![9u8; 4096]);
+        assert_eq!(*c.get("pfs:app:r0:v1").unwrap(), vec![9u8; 4096]);
+        assert_eq!(c.metrics.counter("restore.cache.hits"), 1);
+        // Poison: the corrupted bytes are never served.
+        assert!(c.poison("pfs:app:r0:v1"));
+        assert!(c.get("pfs:app:r0:v1").is_none());
+        assert_eq!(c.metrics.counter("restore.cache.poisoned"), 1);
+        // And the entry is gone, so a refetch re-admits clean bytes.
+        c.insert("pfs:app:r0:v1", 0, 2, vec![9u8; 4096]);
+        assert_eq!(*c.get("pfs:app:r0:v1").unwrap(), vec![9u8; 4096]);
+    }
+
+    #[test]
+    fn cost_aware_eviction_spills_to_l2_and_promotes_back() {
+        // L1 fits two 4 KiB entries; the third insert evicts the cheap one.
+        let c = cache(8 << 10, 1 << 20);
+        c.insert("local:app:r0:v1", 0, 0, vec![1u8; 4096]);
+        c.insert("erasure:app:r0:v1", 0, 3, vec![3u8; 4096]);
+        c.insert("pfs:app:r0:v1", 0, 2, vec![2u8; 4096]);
+        assert_eq!(c.metrics.counter("restore.cache.evictions"), 1);
+        assert_eq!(c.metrics.counter("restore.cache.l2.spills"), 1);
+        // The expensive erasure rebuild survived in L1.
+        assert!(c.state.lock().unwrap().l1.contains_key("erasure:app:r0:v1"));
+        // The evicted local entry still hits — from the L2 spill — and
+        // promotes back into L1.
+        assert_eq!(*c.get("local:app:r0:v1").unwrap(), vec![1u8; 4096]);
+        assert_eq!(c.metrics.counter("restore.cache.l2.hits"), 1);
+        assert!(c.state.lock().unwrap().l1.contains_key("local:app:r0:v1"));
+    }
+
+    #[test]
+    fn oversized_entries_bypass_admission() {
+        let c = cache(8 << 20, 0);
+        c.insert("pfs:app:r0:v1", 0, 2, vec![0u8; 2 << 20]); // > max_entry
+        assert!(c.get("pfs:app:r0:v1").is_none());
+        assert_eq!(c.metrics.counter("restore.cache.rejected"), 1);
+        assert_eq!(c.l1_bytes(), 0);
+    }
+
+    #[test]
+    fn invalidate_all_clears_both_levels() {
+        let c = cache(4 << 10, 1 << 20);
+        c.insert("a", 0, 0, vec![1u8; 4096]);
+        c.insert("b", 0, 0, vec![2u8; 4096]); // evicts "a" into L2
+        c.invalidate_all();
+        assert!(c.get("a").is_none());
+        assert!(c.get("b").is_none());
+        assert_eq!(c.l1_bytes(), 0);
+    }
+}

@@ -1,0 +1,423 @@
+//! Restore-side serving subsystem: the read path's data plane.
+//!
+//! Every write-path subsystem (aggregation, delta, placement, the active
+//! backend) optimizes checkpoint *production*; the expensive production
+//! event is the *restart storm*, where thousands of clients cold-restore
+//! the same checkpoints at once and a parallel file system collapses
+//! under redundant reads. This module sits between the restore entry
+//! points ([`crate::recovery`], the per-level module `restore()` paths,
+//! the daemon's restart query) and the storage fabric, and serves
+//! container bytes through three cooperating mechanisms:
+//!
+//! - **Read-through cache** ([`cache`]) — L1 in-memory segment cache with
+//!   an L2 node-local-tier spill; size-bounded admission, cost-aware LRU
+//!   eviction, CRC-fingerprint verification on every hit (a poisoned
+//!   entry is dropped and refetched, never served).
+//! - **Single-flight dedup** ([`singleflight`]) — N concurrent restores
+//!   of one container issue exactly one tier read; later arrivals block
+//!   on the in-flight fetch and share the leader's bytes.
+//! - **Parallel chain prefetch** — for delta containers the manifest
+//!   chain's hop list is predicted up front
+//!   ([`crate::delta::predicted_hops`]) and fetched in waves of
+//!   `prefetch_depth` concurrent reads, so chain-restore latency scales
+//!   with the configured depth instead of the chain length; the
+//!   authoritative serial walk ([`crate::delta::materialize_planned`])
+//!   then resolves against the warmed cache and returns the canonical
+//!   [`ChainPlan`](crate::delta::ChainPlan) it actually took.
+//!
+//! Containers are keyed by one canonical identity,
+//! `<source>:<name>:r<rank>:v<version>` (see [`RestoreEngine::key`]),
+//! shared by the cache, the single-flight table and the prefetcher. The
+//! `source` prefix keeps resilience levels from cross-contaminating:
+//! `local`, `partner`, `erasure` (rebuilt bytes — the most expensive to
+//! refetch), `pfs` (direct or placed level-4 objects) and `agg`
+//! (aggregated-container extraction).
+//!
+//! The subsystem is observable through the `restore.*` metrics:
+//! `restore.cache.{hits,misses,evictions,poisoned}`,
+//! `restore.cache.l2.{hits,spills,evictions}`,
+//! `restore.singleflight.coalesced`, `restore.prefetch.{depth,issued}`
+//! and `restore.plan.hops`.
+
+mod cache;
+mod singleflight;
+
+use crate::delta::store::ChunkStore;
+use crate::delta::{manifest, materialize_planned, predicted_hops};
+use crate::metrics::Metrics;
+use crate::modules::transfer::maybe_decompress;
+use crate::storage::StorageFabric;
+use crate::util::bytes::Checkpoint;
+use anyhow::{bail, Result};
+use cache::ReadCache;
+use singleflight::{FlightOutcome, SingleFlight};
+use std::sync::Arc;
+
+/// Knobs for the restore-side serving plane (JSON `"restore"` section,
+/// `--restore-*` CLI flags).
+#[derive(Clone, Debug)]
+pub struct RestoreConfig {
+    /// Route restore reads through the cache + single-flight + prefetch
+    /// plane (disabled = the historical direct serial path).
+    pub enabled: bool,
+    /// L1 in-memory cache capacity in bytes.
+    pub l1_bytes: u64,
+    /// L2 node-local-tier spill capacity in bytes (0 disables the spill).
+    pub l2_bytes: u64,
+    /// Largest single container admitted to the cache; bigger ones are
+    /// served but never cached (one huge container must not wipe the
+    /// working set).
+    pub max_entry_bytes: u64,
+    /// Concurrent fetches per prefetch wave when walking a delta chain.
+    pub prefetch_depth: usize,
+}
+
+impl Default for RestoreConfig {
+    fn default() -> Self {
+        RestoreConfig {
+            enabled: true,
+            l1_bytes: 64 << 20,
+            l2_bytes: 128 << 20,
+            max_entry_bytes: 16 << 20,
+            prefetch_depth: 4,
+        }
+    }
+}
+
+impl RestoreConfig {
+    /// Reject combinations the engine would otherwise have to patch up
+    /// silently. Called by `VelocConfig::validate`.
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.l1_bytes < 1 << 20 {
+            bail!(
+                "restore.l1_bytes = {} is below the 1 MiB minimum (set \
+                 restore.enabled = false to disable the cache entirely)",
+                self.l1_bytes
+            );
+        }
+        if self.max_entry_bytes < 4096 || self.max_entry_bytes > self.l1_bytes {
+            bail!(
+                "restore.max_entry_bytes = {} must lie in [4096, l1_bytes = {}]",
+                self.max_entry_bytes,
+                self.l1_bytes
+            );
+        }
+        if self.prefetch_depth == 0 || self.prefetch_depth > 64 {
+            bail!(
+                "restore.prefetch_depth = {} must lie in [1, 64]",
+                self.prefetch_depth
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Relative refetch cost of a byte source — the cache's eviction
+/// preference (evict cheap-to-refetch entries first).
+fn source_cost(source: &str) -> u8 {
+    match source {
+        "local" => 0,
+        "partner" => 1,
+        "erasure" => 3,
+        // "pfs", "agg" and anything unknown: shared-tier read.
+        _ => 2,
+    }
+}
+
+/// The runtime-wide restore serving engine. One instance serves every
+/// rank's restore paths (that sharing is the whole point: a storm of
+/// clients restoring one container must meet in one cache and one
+/// single-flight table).
+pub struct RestoreEngine {
+    cfg: RestoreConfig,
+    cache: ReadCache,
+    flight: SingleFlight,
+    metrics: Arc<Metrics>,
+}
+
+impl RestoreEngine {
+    /// Build an engine over the runtime's fabric. `metrics` defaults to a
+    /// private registry when the caller has none.
+    pub fn new(
+        cfg: RestoreConfig,
+        fabric: Arc<StorageFabric>,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Arc<Self> {
+        let metrics = metrics.unwrap_or_else(Metrics::new);
+        let cache = ReadCache::new(
+            cfg.l1_bytes,
+            cfg.l2_bytes,
+            cfg.max_entry_bytes,
+            fabric,
+            Arc::clone(&metrics),
+        );
+        Arc::new(RestoreEngine {
+            cfg,
+            cache,
+            flight: SingleFlight::default(),
+            metrics,
+        })
+    }
+
+    /// The configuration the engine was built from.
+    pub fn config(&self) -> &RestoreConfig {
+        &self.cfg
+    }
+
+    /// The canonical container identity — the one key the cache, the
+    /// single-flight table and the prefetcher all share.
+    pub fn key(source: &str, name: &str, rank: usize, version: u64) -> String {
+        format!("{source}:{name}:r{rank}:v{version}")
+    }
+
+    /// Fetch one container through the cache and single-flight planes.
+    /// `fetch` is the source-of-truth read (tier/aggregator/rebuild);
+    /// it runs at most once per key across all concurrent callers.
+    pub fn fetch_container(
+        &self,
+        source: &str,
+        name: &str,
+        rank: usize,
+        node: usize,
+        version: u64,
+        fetch: &(dyn Fn(u64) -> Result<Option<Vec<u8>>> + Sync),
+    ) -> Result<Option<Arc<Vec<u8>>>> {
+        if !self.cfg.enabled {
+            return fetch(version).map(|o| o.map(Arc::new));
+        }
+        let key = Self::key(source, name, rank, version);
+        if let Some(data) = self.cache.get(&key) {
+            return Ok(Some(data));
+        }
+        match self.flight.run(&key, || {
+            self.metrics.incr("restore.cache.misses", 1);
+            Ok(fetch(version)?
+                .map(|data| self.cache.insert(&key, node, source_cost(source), data)))
+        }) {
+            FlightOutcome::Led(res) => res,
+            FlightOutcome::Joined(shared) => {
+                self.metrics.incr("restore.singleflight.coalesced", 1);
+                // A leader miss/failure joins as a miss; re-issuing the
+                // fetch here would defeat the coalescing under storms.
+                Ok(shared)
+            }
+        }
+    }
+
+    /// Serve a full restore: fetch the primary container through the
+    /// cache, prefetch its predicted chain hops in bounded-depth waves,
+    /// then reassemble through [`materialize_planned`] against the
+    /// warmed cache. `fetch` is the level's raw container read, keyed by
+    /// version; `store` is the optional node chunk-store fast path.
+    pub fn materialize(
+        &self,
+        source: &str,
+        name: &str,
+        rank: usize,
+        node: usize,
+        version: u64,
+        store: Option<&ChunkStore>,
+        fetch: &(dyn Fn(u64) -> Result<Option<Vec<u8>>> + Sync),
+    ) -> Result<Option<Checkpoint>> {
+        let Some(primary) = self.fetch_container(source, name, rank, node, version, fetch)?
+        else {
+            return Ok(None);
+        };
+        if self.cfg.enabled {
+            self.prefetch_chain(source, name, rank, node, &primary, fetch);
+        }
+        // The authoritative walk consults the warmed cache first and
+        // falls back to the raw fetch, so a chain misprediction costs a
+        // wasted prefetch, never a wrong (or failed) restore.
+        let cached_fetch = |v: u64| -> Option<Vec<u8>> {
+            self.fetch_container(source, name, rank, node, v, fetch)
+                .ok()
+                .flatten()
+                .map(|a| (*a).clone())
+        };
+        let (ckpt, plan) = materialize_planned((*primary).clone(), store, &cached_fetch)?;
+        self.metrics.incr("restore.plan.hops", plan.hops.len() as u64);
+        Ok(Some(ckpt))
+    }
+
+    /// Speculatively fetch the predicted chain ancestors of a delta
+    /// container in waves of `prefetch_depth` concurrent reads. Purely a
+    /// cache warmer: failures and mispredictions are ignored.
+    fn prefetch_chain(
+        &self,
+        source: &str,
+        name: &str,
+        rank: usize,
+        node: usize,
+        primary: &Arc<Vec<u8>>,
+        fetch: &(dyn Fn(u64) -> Result<Option<Vec<u8>>> + Sync),
+    ) {
+        let Ok(raw) = maybe_decompress((**primary).clone()) else {
+            return;
+        };
+        if !manifest::is_delta(&raw) {
+            return;
+        }
+        let Ok((m, _)) = manifest::decode(&raw) else {
+            return;
+        };
+        let hops = predicted_hops(&m);
+        if hops.is_empty() {
+            return;
+        }
+        let depth = self.cfg.prefetch_depth.max(1);
+        self.metrics.set("restore.prefetch.depth", depth as u64);
+        self.metrics.incr("restore.prefetch.issued", hops.len() as u64);
+        for wave in hops.chunks(depth) {
+            std::thread::scope(|s| {
+                for &v in wave {
+                    s.spawn(move || {
+                        let _ = self.fetch_container(source, name, rank, node, v, fetch);
+                    });
+                }
+            });
+        }
+    }
+
+    /// Fault injection (sim / tests): corrupt the cached bytes of one
+    /// container without touching its stored CRC, so the next hit trips
+    /// the fingerprint check. Returns false if the key is not resident.
+    pub fn poison(&self, source: &str, name: &str, rank: usize, version: u64) -> bool {
+        self.cache.poison(&Self::key(source, name, rank, version))
+    }
+
+    /// Drop every cached entry (both levels). Called on injected
+    /// failures: the cache is serving-layer node memory and must not
+    /// outlive the tier state it mirrors.
+    pub fn invalidate_all(&self) {
+        self.cache.invalidate_all();
+    }
+
+    /// Resident L1 bytes (introspection / tests).
+    pub fn cached_bytes(&self) -> u64 {
+        self.cache.l1_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::FabricConfig;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn engine(cfg: RestoreConfig) -> Arc<RestoreEngine> {
+        let fabric = Arc::new(
+            StorageFabric::build(&FabricConfig {
+                nodes: 1,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        RestoreEngine::new(cfg, fabric, None)
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(RestoreConfig::default().validate().is_ok());
+        let mut c = RestoreConfig::default();
+        c.l1_bytes = 1024;
+        assert!(c.validate().is_err());
+        let mut c = RestoreConfig::default();
+        c.max_entry_bytes = c.l1_bytes * 2;
+        assert!(c.validate().is_err());
+        let mut c = RestoreConfig::default();
+        c.prefetch_depth = 0;
+        assert!(c.validate().is_err());
+        // Disabled configs skip validation entirely.
+        let mut c = RestoreConfig::default();
+        c.enabled = false;
+        c.l1_bytes = 0;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn read_through_fetches_once_then_serves_from_cache() {
+        let eng = engine(RestoreConfig::default());
+        let fetches = AtomicU64::new(0);
+        let fetch = |_v: u64| -> Result<Option<Vec<u8>>> {
+            fetches.fetch_add(1, Ordering::SeqCst);
+            Ok(Some(vec![7u8; 2048]))
+        };
+        for _ in 0..5 {
+            let got = eng
+                .fetch_container("pfs", "app", 0, 0, 3, &fetch)
+                .unwrap()
+                .unwrap();
+            assert_eq!(*got, vec![7u8; 2048]);
+        }
+        assert_eq!(fetches.load(Ordering::SeqCst), 1);
+        assert_eq!(eng.metrics.counter("restore.cache.hits"), 4);
+        assert_eq!(eng.metrics.counter("restore.cache.misses"), 1);
+    }
+
+    #[test]
+    fn disabled_engine_is_a_transparent_passthrough() {
+        let mut cfg = RestoreConfig::default();
+        cfg.enabled = false;
+        let eng = engine(cfg);
+        let fetches = AtomicU64::new(0);
+        let fetch = |_v: u64| -> Result<Option<Vec<u8>>> {
+            fetches.fetch_add(1, Ordering::SeqCst);
+            Ok(Some(vec![1u8; 64]))
+        };
+        eng.fetch_container("pfs", "app", 0, 0, 1, &fetch).unwrap();
+        eng.fetch_container("pfs", "app", 0, 0, 1, &fetch).unwrap();
+        assert_eq!(fetches.load(Ordering::SeqCst), 2, "no caching when disabled");
+        assert_eq!(eng.cached_bytes(), 0);
+    }
+
+    #[test]
+    fn materialize_passthrough_and_poison_refetch() {
+        let eng = engine(RestoreConfig::default());
+        let mut ckpt = Checkpoint::new("app", 0, 1);
+        ckpt.push_region(0, vec![5u8; 4096]);
+        let encoded = ckpt.encode();
+        let fetches = AtomicU64::new(0);
+        let fetch = |_v: u64| -> Result<Option<Vec<u8>>> {
+            fetches.fetch_add(1, Ordering::SeqCst);
+            Ok(Some(encoded.clone()))
+        };
+        let out = eng
+            .materialize("pfs", "app", 0, 0, 1, None, &fetch)
+            .unwrap()
+            .unwrap();
+        assert_eq!(out, ckpt);
+        // Poison the cached container: the corrupt bytes are never
+        // served — the engine refetches and restores correctly.
+        assert!(eng.poison("pfs", "app", 0, 1));
+        let out = eng
+            .materialize("pfs", "app", 0, 0, 1, None, &fetch)
+            .unwrap()
+            .unwrap();
+        assert_eq!(out, ckpt);
+        assert_eq!(fetches.load(Ordering::SeqCst), 2, "poison forces a refetch");
+        assert!(eng.metrics.counter("restore.cache.poisoned") >= 1);
+    }
+
+    #[test]
+    fn missing_container_is_a_clean_none() {
+        let eng = engine(RestoreConfig::default());
+        let fetch = |_v: u64| -> Result<Option<Vec<u8>>> { Ok(None) };
+        assert!(eng
+            .materialize("pfs", "app", 0, 0, 9, None, &fetch)
+            .unwrap()
+            .is_none());
+        // Misses are not negatively cached: a later fetch succeeds.
+        let mut ckpt = Checkpoint::new("app", 0, 9);
+        ckpt.push_region(0, vec![1u8; 128]);
+        let encoded = ckpt.encode();
+        let fetch = move |_v: u64| -> Result<Option<Vec<u8>>> { Ok(Some(encoded.clone())) };
+        assert!(eng
+            .materialize("pfs", "app", 0, 0, 9, None, &fetch)
+            .unwrap()
+            .is_some());
+    }
+}

@@ -1,0 +1,151 @@
+//! Single-flight deduplication of concurrent container fetches.
+//!
+//! During a restart storm N clients cold-restore the same checkpoint at
+//! once; without coalescing, every one of them issues the same tier read
+//! and the shared tier serves N identical transfers. Single-flight keys
+//! each in-flight fetch by its canonical container identity: the first
+//! caller becomes the *leader* and performs the real fetch, every caller
+//! that arrives while the flight is open *joins* it, blocks on the
+//! leader's condvar and shares the leader's `Arc`'d bytes — exactly one
+//! tier read per container, no matter how wide the storm.
+//!
+//! A leader that fails (error or panic) publishes a miss to its waiters:
+//! they see `None` and treat it like any other unavailable copy (fall to
+//! the next resilience level) rather than re-issuing the fetch — an
+//! erroring source would otherwise be hammered N times over.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One in-flight fetch: the slot is `None` while the leader runs and
+/// `Some(result)` once published; waiters block on the condvar.
+struct Flight {
+    slot: Mutex<Option<Option<Arc<Vec<u8>>>>>,
+    cv: Condvar,
+}
+
+/// The per-engine single-flight table.
+#[derive(Default)]
+pub(crate) struct SingleFlight {
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
+}
+
+/// How one `run` call resolved: this caller led the fetch (and owns its
+/// full `Result`, errors included) or joined another caller's flight
+/// (and shares the published bytes, `None` on leader miss/failure).
+pub(crate) enum FlightOutcome {
+    Led(anyhow::Result<Option<Arc<Vec<u8>>>>),
+    Joined(Option<Arc<Vec<u8>>>),
+}
+
+/// Publishes the leader's result on drop — even on unwind — so waiters
+/// can never deadlock behind a leader that panicked mid-fetch.
+struct Lead<'a> {
+    sf: &'a SingleFlight,
+    key: &'a str,
+    flight: Arc<Flight>,
+    value: Option<Arc<Vec<u8>>>,
+}
+
+impl Drop for Lead<'_> {
+    fn drop(&mut self) {
+        *self.flight.slot.lock().unwrap() = Some(self.value.take());
+        self.flight.cv.notify_all();
+        self.sf.inflight.lock().unwrap().remove(self.key);
+    }
+}
+
+impl SingleFlight {
+    /// Run `fetch` under single-flight semantics for `key`.
+    pub fn run(
+        &self,
+        key: &str,
+        fetch: impl FnOnce() -> anyhow::Result<Option<Arc<Vec<u8>>>>,
+    ) -> FlightOutcome {
+        let (flight, leader) = {
+            let mut map = self.inflight.lock().unwrap();
+            match map.get(key) {
+                Some(f) => (Arc::clone(f), false),
+                None => {
+                    let f = Arc::new(Flight {
+                        slot: Mutex::new(None),
+                        cv: Condvar::new(),
+                    });
+                    map.insert(key.to_string(), Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+        if leader {
+            let mut lead = Lead {
+                sf: self,
+                key,
+                flight,
+                value: None,
+            };
+            let res = fetch();
+            if let Ok(v) = &res {
+                lead.value.clone_from(v);
+            }
+            drop(lead); // publish + deregister
+            FlightOutcome::Led(res)
+        } else {
+            let mut slot = flight.slot.lock().unwrap();
+            while slot.is_none() {
+                slot = flight.cv.wait(slot).unwrap();
+            }
+            FlightOutcome::Joined(slot.as_ref().unwrap().clone())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn waiters_share_one_fetch() {
+        let sf = Arc::new(SingleFlight::default());
+        let fetches = Arc::new(AtomicU64::new(0));
+        let gate = Arc::new(Barrier::new(9));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (sf, fetches, gate) = (Arc::clone(&sf), Arc::clone(&fetches), Arc::clone(&gate));
+            handles.push(std::thread::spawn(move || {
+                match sf.run("k", || {
+                    // Hold the flight open until all 8 callers arrived, so
+                    // everyone but the leader demonstrably joins.
+                    gate.wait();
+                    fetches.fetch_add(1, Ordering::SeqCst);
+                    Ok(Some(Arc::new(vec![7u8; 64])))
+                }) {
+                    FlightOutcome::Led(r) => r.unwrap().unwrap(),
+                    FlightOutcome::Joined(v) => v.unwrap(),
+                }
+            }));
+        }
+        // Release the leader only after every thread is running (the main
+        // thread is the 9th barrier participant).
+        gate.wait();
+        for h in handles {
+            assert_eq!(*h.join().unwrap(), vec![7u8; 64]);
+        }
+        assert_eq!(fetches.load(Ordering::SeqCst), 1, "exactly one real fetch");
+    }
+
+    #[test]
+    fn leader_error_publishes_miss_to_waiters() {
+        let sf = SingleFlight::default();
+        match sf.run("k", || anyhow::bail!("tier exploded")) {
+            FlightOutcome::Led(r) => assert!(r.is_err()),
+            FlightOutcome::Joined(_) => panic!("sole caller must lead"),
+        }
+        // The flight was deregistered: a later caller leads afresh.
+        match sf.run("k", || Ok(Some(Arc::new(vec![1u8])))) {
+            FlightOutcome::Led(r) => assert!(r.unwrap().is_some()),
+            FlightOutcome::Joined(_) => panic!("flight must be gone after the error"),
+        }
+    }
+}

@@ -174,6 +174,9 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
     if matches!(spec.inject, InjectionPoint::BackendCrash) {
         return run_backend_crash(spec, trace);
     }
+    if matches!(spec.inject, InjectionPoint::RestartStorm(_)) {
+        return run_restart_storm(spec, trace);
+    }
     let topo = spec.topology();
     let world = topo.world_size();
     let scope = spec.scope.resolve(&topo, spec.seed);
@@ -892,6 +895,260 @@ fn run_backend_crash(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcom
             verified_ranks += 1;
         }
     }
+    let index_rebuilds = daemon2.runtime().metrics().counter("agg.index.rebuilds");
+    trace.push(
+        Json::obj()
+            .set("ev", "end")
+            .set("ok", true)
+            .set("verified", verified_ranks),
+    );
+    drop(daemon2);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(RunOutcome {
+        scope,
+        expected_frontier: expected,
+        frontier,
+        restored,
+        verified_ranks,
+        index_rebuilds,
+    })
+}
+
+/// The restart-storm lifetime: after every checkpoint wave settles, N
+/// restart clients cold-restore the final wave through the daemon —
+/// hammering a small set of ranks so the restore plane's read-through
+/// cache and single-flight table carry the load. Mid-storm the daemon is
+/// killed and restarted over the surviving storage; the remaining clients
+/// finish against the fresh incarnation (whose cache starts cold). Every
+/// client must restore bit-for-bit, and a deliberately poisoned cache
+/// entry must trip the fingerprint check and be refetched, never served.
+fn run_restart_storm(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
+    use crate::backend::{scoped_name, BackendDaemon};
+
+    let InjectionPoint::RestartStorm(clients) = &spec.inject else {
+        bail!("run_restart_storm dispatched on {:?}", spec.inject);
+    };
+    let clients = *clients;
+    let topo = spec.topology();
+    let world = topo.world_size();
+    let scope = spec.scope.resolve(&topo, spec.seed); // pinned rank 0; unused
+    let wait_t = Duration::from_secs(30);
+
+    let mut cfg = spec.to_config();
+    cfg.restore.enabled = true; // the storm exercises the serving plane
+    let dir = std::env::temp_dir().join(format!(
+        "veloc-sim-storm-{}-{}-{}",
+        spec.seed,
+        std::process::id(),
+        BACKEND_DIRS.fetch_add(1, Ordering::SeqCst)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    cfg.backend.dir = dir.clone();
+    cfg.backend.queue_depth = world * (spec.waves as usize) + 8;
+    // Storage outlives the daemon: both incarnations share one fabric.
+    let fabric = Arc::new(crate::storage::StorageFabric::build(&cfg.fabric)?);
+
+    trace.push(
+        Json::obj()
+            .set("ev", "start")
+            .set("seed", spec.seed.to_string())
+            .set("world", world)
+            .set("scope", scope_str(&scope))
+            .set("inject", spec.inject.name()),
+    );
+
+    // Incarnation 1: serve every wave to full settlement.
+    let daemon = BackendDaemon::start_with_hooks(
+        cfg.clone(),
+        SimHooks {
+            wrap_gate: None,
+            boundary: None,
+            fabric: Some(Arc::clone(&fabric)),
+        },
+    )?;
+    let mut pairs: Vec<(VelocClient, IterativeApp)> = Vec::with_capacity(world);
+    for rank in 0..world {
+        let client = daemon.client(SCENARIO_JOB, rank, wait_t)?;
+        let app = IterativeApp::new(
+            &client,
+            SCENARIO_APP,
+            spec.regions,
+            spec.region_bytes,
+            0.0,
+            spec.seed,
+        );
+        pairs.push((client, app));
+    }
+    let mut snaps: Vec<Vec<Vec<u8>>> = Vec::new();
+    for _wave in 1..=spec.waves {
+        for (_c, app) in pairs.iter_mut() {
+            for _ in 0..spec.steps_per_wave {
+                app.step();
+            }
+        }
+        let version = pairs[0].1.iteration;
+        snaps = pairs.iter().map(|(_, a)| a.snapshot()).collect();
+        for (c, _) in &pairs {
+            c.checkpoint(SCENARIO_APP, version)?;
+        }
+        for (c, _) in &pairs {
+            let st = c.checkpoint_wait(SCENARIO_APP, version)?;
+            ensure!(
+                matches!(st, CkptStatus::Done(_)),
+                "wave v{version}: rank {} did not settle: {st:?}",
+                c.rank()
+            );
+        }
+        trace.push(Json::obj().set("ev", "wave").set("version", version));
+    }
+    let last_version = spec.waves * spec.steps_per_wave;
+    ensure!(
+        daemon.drain(Duration::from_secs(30)),
+        "checkpoint waves never settled before the storm"
+    );
+    drop(pairs);
+
+    // The storm hammers two ranks (client i -> rank i % 2): past the
+    // first touch of each rank, every restore must be a cache hit.
+    let storm_rank = |i: usize| i % 2;
+    let mut restored: Vec<(usize, u8)> = Vec::new();
+    let mut verified_ranks = 0usize;
+    let storm_one = |daemon: &BackendDaemon, i: usize| -> Result<u8> {
+        let rank = storm_rank(i);
+        let client = daemon.client(SCENARIO_JOB, rank, wait_t)?;
+        let app = IterativeApp::new(
+            &client,
+            SCENARIO_APP,
+            spec.regions,
+            spec.region_bytes,
+            0.0,
+            spec.seed,
+        );
+        let info = client
+            .restart_version(SCENARIO_APP, last_version)?
+            .ok_or_else(|| anyhow!("storm client {i}: restore of v{last_version} failed"))?;
+        ensure!(
+            info.version == last_version,
+            "storm client {i}: asked for v{last_version}, restored v{}",
+            info.version
+        );
+        let diff = app.diff_snapshot(&snaps[rank]);
+        ensure!(
+            diff.is_empty(),
+            "storm client {i}: restored v{last_version} differs from the shadow \
+             copy of rank {rank} in regions {diff:?}"
+        );
+        Ok(info.level)
+    };
+
+    // First half of the storm against incarnation 1.
+    let half = clients / 2;
+    for i in 0..half {
+        let level = storm_one(&daemon, i)?;
+        restored.push((storm_rank(i), level));
+        verified_ranks += 1;
+        trace.push(
+            Json::obj()
+                .set("ev", "storm-restore")
+                .set("client", i)
+                .set("rank", storm_rank(i))
+                .set("level", level as u64),
+        );
+    }
+    // Sequential restores over two ranks: everything past the two first
+    // touches must have been served out of the read-through cache.
+    let hits1 = daemon.runtime().metrics().counter("restore.cache.hits");
+    ensure!(
+        hits1 >= half.saturating_sub(2) as u64,
+        "first storm half: {hits1} cache hits over {half} restores of 2 ranks"
+    );
+
+    // The daemon dies mid-storm; storage survives.
+    daemon.crash();
+    trace.push(
+        Json::obj()
+            .set("ev", "inject")
+            .set("point", spec.inject.name())
+            .set("scope", scope_str(&scope))
+            .set("version", last_version),
+    );
+    drop(daemon);
+
+    // Incarnation 2: a fresh daemon (cold cache) over the same storage
+    // serves the rest of the storm.
+    let daemon2 = BackendDaemon::start_with_hooks(
+        cfg,
+        SimHooks {
+            wrap_gate: None,
+            boundary: None,
+            fabric: Some(Arc::clone(&fabric)),
+        },
+    )?;
+    for i in half..clients {
+        let level = storm_one(&daemon2, i)?;
+        restored.push((storm_rank(i), level));
+        verified_ranks += 1;
+        trace.push(
+            Json::obj()
+                .set("ev", "storm-restore")
+                .set("client", i)
+                .set("rank", storm_rank(i))
+                .set("level", level as u64),
+        );
+    }
+
+    // Poison the cached container the last storm client just pulled in:
+    // the fingerprint check must catch it and the refetch must still
+    // serve correct bytes — corrupt cache memory is never trusted.
+    let eng = daemon2
+        .runtime()
+        .restore_engine()
+        .ok_or_else(|| anyhow!("restore plane disabled under a restart-storm scenario"))?
+        .clone();
+    let scoped = scoped_name(SCENARIO_JOB, SCENARIO_APP);
+    let poison_rank = storm_rank(clients - 1);
+    ensure!(
+        eng.poison("local", &scoped, poison_rank, last_version),
+        "rank {poison_rank} v{last_version} was not resident in the cache"
+    );
+    let level = storm_one(&daemon2, poison_rank)?;
+    verified_ranks += 1;
+    let poisoned = daemon2
+        .runtime()
+        .metrics()
+        .counter("restore.cache.poisoned");
+    ensure!(
+        poisoned >= 1,
+        "poisoned cache entry served without tripping the fingerprint check"
+    );
+    trace.push(
+        Json::obj()
+            .set("ev", "poison-refetch")
+            .set("rank", poison_rank)
+            .set("level", level as u64)
+            .set("poisoned", poisoned),
+    );
+
+    // The frontier contract holds across the mid-storm restart.
+    let scoped_app = scoped;
+    let expected = Some(last_version);
+    let frontier = daemon2
+        .runtime()
+        .recovery()
+        .restorable_frontier(daemon2.runtime().engines(), &scoped_app)?;
+    trace.push(
+        Json::obj()
+            .set("ev", "frontier")
+            .set("expected", opt_version_json(expected))
+            .set("actual", opt_version_json(frontier))
+            .set("mode", "strict"),
+    );
+    ensure!(
+        frontier == expected,
+        "min_level contract violated: expected restorable frontier {expected:?}, \
+         recovery served {frontier:?}"
+    );
+
     let index_rebuilds = daemon2.runtime().metrics().counter("agg.index.rebuilds");
     trace.push(
         Json::obj()

@@ -154,6 +154,16 @@ pub enum InjectionPoint {
     /// checkpoint". The failure scope is unused (the daemon dies, the
     /// application ranks survive) and must be pinned to rank 0.
     BackendCrash,
+    /// Restart storm: after the checkpoint waves settle, N restart clients
+    /// cold-restore the same job through one daemon. Mid-storm the daemon
+    /// is killed and restarted over the surviving storage; the remaining
+    /// clients finish against the fresh incarnation. Every client must get
+    /// bit-for-bit bytes, the restore plane's read-through cache and
+    /// single-flight table must collapse the redundant tier reads, and a
+    /// deliberately poisoned cache entry must be detected by its
+    /// fingerprint and refetched — never served. Like `BackendCrash`, the
+    /// failure scope is unused and pinned to rank 0.
+    RestartStorm(usize),
 }
 
 impl InjectionPoint {
@@ -169,6 +179,7 @@ impl InjectionPoint {
             InjectionPoint::TierOutage(t) => format!("tier-outage:{t}"),
             InjectionPoint::TierDegraded(t, f) => format!("tier-degraded:{t}x{f}"),
             InjectionPoint::BackendCrash => "backend-crash".to_string(),
+            InjectionPoint::RestartStorm(n) => format!("restart-storm:{n}"),
         }
     }
 
@@ -199,6 +210,9 @@ impl InjectionPoint {
                 .set("tier", t.as_str())
                 .set("factor", *f as u64),
             InjectionPoint::BackendCrash => Json::obj().set("point", "backend-crash"),
+            InjectionPoint::RestartStorm(n) => Json::obj()
+                .set("point", "restart-storm")
+                .set("clients", *n),
         }
     }
 
@@ -230,6 +244,7 @@ impl InjectionPoint {
                 j.usize_or("factor", 16) as u32,
             )),
             "backend-crash" => Ok(InjectionPoint::BackendCrash),
+            "restart-storm" => Ok(InjectionPoint::RestartStorm(j.usize_or("clients", 8))),
             other => bail!("unknown injection point {other}"),
         }
     }
@@ -645,6 +660,42 @@ impl ScenarioSpec {
                     );
                 }
             }
+            InjectionPoint::RestartStorm(clients) => {
+                if *clients < 2 {
+                    bail!(
+                        "restart-storm needs >= 2 clients (one client is a \
+                         plain restart, not a storm), got {clients}"
+                    );
+                }
+                if self.engine_mode == EngineMode::Sync {
+                    bail!(
+                        "restart-storm requires the async engine: the storm \
+                         serves through the active-backend daemon"
+                    );
+                }
+                if self.erasure_group >= 2 {
+                    bail!(
+                        "restart-storm excludes erasure: the daemon dispatches \
+                         sequentially, so erasure group members cannot \
+                         rendezvous deterministically"
+                    );
+                }
+                if self.delta {
+                    bail!(
+                        "restart-storm excludes delta: chunk-store state is \
+                         daemon-local and outside this scenario's contract model"
+                    );
+                }
+                if self.placement.is_some() {
+                    bail!("restart-storm excludes placement: one injection per scenario");
+                }
+                if self.scope.kind != ScopeKind::Rank || self.scope.target != Some(0) {
+                    bail!(
+                        "restart-storm kills the daemon, not ranks — pin the \
+                         (unused) scope to rank 0"
+                    );
+                }
+            }
             InjectionPoint::DeltaGcCrash => {
                 if !self.delta {
                     bail!("delta-gc-crash requires delta");
@@ -705,7 +756,7 @@ pub fn base_spec(seed: u64) -> ScenarioSpec {
 /// The standard sweep: module-stack permutations (sync/async engine, XOR
 /// partner vs erasure group sizes, aggregation on/off, delta on/off, tier
 /// policies, placement policies, the out-of-process backend daemon)
-/// crossed with every injection-point family. 42 scenarios; each is an
+/// crossed with every injection-point family. 44 scenarios; each is an
 /// independent one-line repro.
 pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
     let s = |i: u64| base_seed.wrapping_add(i.wrapping_mul(7919));
@@ -890,6 +941,24 @@ pub fn standard_matrix(base_seed: u64) -> Vec<ScenarioSpec> {
         with_partner: false,
         aggregation: true,
         ..s9.clone()
+    });
+
+    // Stack 10: restart storm — many clients cold-restore the same wave
+    // through one daemon, which dies and restarts mid-storm. The restore
+    // plane must collapse the redundant reads (cache + single-flight) and
+    // still hand every client bit-for-bit bytes.
+    let s10 = ScenarioSpec {
+        inject: InjectionPoint::RestartStorm(8),
+        ..s9.clone()
+    };
+    specs.push(ScenarioSpec { seed: s(43), ..s10.clone() });
+    // The storm served out of aggregated containers: every extraction goes
+    // through the segment index and the same shared cache.
+    specs.push(ScenarioSpec {
+        seed: s(44),
+        with_partner: false,
+        aggregation: true,
+        ..s10
     });
 
     specs
@@ -1081,6 +1150,39 @@ mod tests {
         bad.scope = ScopeSpec { kind: ScopeKind::Rank, target: None };
         assert!(bad.validate().is_err());
         // Delta / placement are outside the modeled envelope.
+        let mut bad = ok.clone();
+        bad.delta = true;
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.placement = Some("static".to_string());
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn restart_storm_specs_validated() {
+        let ok = ScenarioSpec {
+            erasure_group: 0,
+            scope: ScopeSpec { kind: ScopeKind::Rank, target: Some(0) },
+            inject: InjectionPoint::RestartStorm(8),
+            ..base_spec(1)
+        };
+        ok.validate().unwrap();
+        // One client is a plain restart, not a storm.
+        let mut bad = ok.clone();
+        bad.inject = InjectionPoint::RestartStorm(1);
+        assert!(bad.validate().is_err());
+        // The storm serves through the daemon: async only.
+        let mut bad = ok.clone();
+        bad.engine_mode = EngineMode::Sync;
+        assert!(bad.validate().is_err());
+        // The scope is unused and must be pinned to rank 0.
+        let mut bad = ok.clone();
+        bad.scope = ScopeSpec { kind: ScopeKind::Node, target: Some(0) };
+        assert!(bad.validate().is_err());
+        // Erasure / delta / placement are outside the modeled envelope.
+        let mut bad = ok.clone();
+        bad.erasure_group = 4;
+        assert!(bad.validate().is_err());
         let mut bad = ok.clone();
         bad.delta = true;
         assert!(bad.validate().is_err());

@@ -205,6 +205,84 @@ fn backpressure_and_wait_timeout_are_typed_over_the_socket() {
     cleanup(&cfg);
 }
 
+/// Restart storm over the socket: eight clients cold-restore the same
+/// job/version through one daemon. The restore plane's read-through cache
+/// and single-flight table must collapse the redundant fetches — the
+/// node-local tier serves (about) one read for the whole storm, and every
+/// client still gets the exact bytes.
+#[test]
+fn restart_storm_collapses_tier_reads_to_one_fetch() {
+    const STORM: usize = 8;
+    let cfg = daemon_config("storm");
+    let fabric = Arc::new(StorageFabric::build(&cfg.fabric).unwrap());
+    let hooks = SimHooks {
+        fabric: Some(Arc::clone(&fabric)),
+        ..SimHooks::default()
+    };
+    let daemon = BackendDaemon::start_with_hooks(cfg.clone(), hooks).unwrap();
+    let server = serve(&daemon);
+    let socket = cfg.backend.socket_path();
+    let payload = vec![0x3C; 32 << 10];
+
+    // One checkpoint, fully settled, then a quiet fabric baseline.
+    let backend = BackendClient::connect(&socket);
+    let writer = backend.client("jobA", 0).unwrap();
+    writer.mem_protect(0, payload.clone());
+    writer.checkpoint("app", 1).unwrap();
+    let st = writer.checkpoint_wait("app", 1).unwrap();
+    assert!(matches!(st, CkptStatus::Done(_)), "{st:?}");
+    assert!(daemon.drain(Duration::from_secs(30)));
+    drop(writer);
+    let local_reads = |fabric: &StorageFabric| -> u64 {
+        fabric.local_tiers(0).iter().map(|t| t.get_count()).sum()
+    };
+    let reads_before = local_reads(&fabric);
+
+    // The storm: STORM clients restore the same (job, rank, version) at
+    // once, each over its own connection.
+    let handles: Vec<_> = (0..STORM)
+        .map(|_| {
+            let socket = socket.clone();
+            let expect = payload.clone();
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let backend = BackendClient::connect(socket);
+                let client = backend.client("jobA", 0)?;
+                let h = client.mem_protect(0, Vec::new());
+                let info = client
+                    .restart_version("app", 1)?
+                    .ok_or_else(|| anyhow::anyhow!("storm restore failed"))?;
+                anyhow::ensure!(info.version == 1, "restored v{}", info.version);
+                anyhow::ensure!(*h.lock().unwrap() == expect, "payload mismatch");
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    // The tier-read counter is the proof: one fetch (two, allowing one
+    // benign race) served all eight clients.
+    let storm_reads = local_reads(&fabric) - reads_before;
+    assert!(
+        storm_reads <= 2,
+        "storm of {STORM} clients cost {storm_reads} tier reads — the cache \
+         and single-flight table failed to collapse them"
+    );
+    let m = daemon.runtime().metrics();
+    assert!(
+        m.counter("restore.cache.hits") + m.counter("restore.singleflight.coalesced")
+            >= (STORM - 1) as u64,
+        "{} hits + {} coalesced over {STORM} restores",
+        m.counter("restore.cache.hits"),
+        m.counter("restore.singleflight.coalesced")
+    );
+
+    backend.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    cleanup(&cfg);
+}
+
 /// The durability headline over the socket: a daemon killed mid-drain
 /// after acking loses nothing — a second incarnation on the same home
 /// directory replays the journal and serves the bytes back.

@@ -1,0 +1,135 @@
+//! Integration tests for the restore-side serving plane: the `restore.*`
+//! metrics move during a restart storm, and concurrent restores of one
+//! container coalesce into a single source fetch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::app::IterativeApp;
+
+fn runtime() -> Arc<VelocRuntime> {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    // Delta chains give the prefetcher something to pipeline.
+    cfg.delta.enabled = true;
+    cfg.delta.min_chunk = 64;
+    cfg.delta.avg_chunk = 256;
+    cfg.delta.max_chunk = 1024;
+    cfg.delta.max_chain = 8;
+    VelocRuntime::new(cfg).unwrap()
+}
+
+/// Satellite regression: a cold restore moves the miss and prefetch
+/// counters, a warm restore of the same version moves the hit counter and
+/// adds no misses — and both serve bit-for-bit bytes.
+#[test]
+fn storm_moves_cache_and_prefetch_metrics() {
+    let rt = runtime();
+    let client = rt.client(0);
+    let mut app = IterativeApp::new(&client, "app", 2, 8 << 10, 0.0, 7);
+    let mut last = 0;
+    for _ in 0..4 {
+        app.step();
+        last = app.checkpoint(&client).unwrap();
+        client.checkpoint_wait_done("app", last).unwrap();
+    }
+    rt.drain();
+    let shadow = app.snapshot();
+    let m = rt.metrics().clone();
+    assert_eq!(m.counter("restore.cache.hits"), 0, "writes must not touch the cache");
+
+    // Cold restore: misses populate the cache, the chain prefetcher runs
+    // on the delta container's predicted hop list.
+    let fresh = rt.client(0);
+    let app2 = IterativeApp::new(&fresh, "app", 2, 8 << 10, 0.0, 7);
+    let info = fresh
+        .restart_version("app", last)
+        .unwrap()
+        .expect("cold restore");
+    assert_eq!(info.version, last);
+    assert!(app2.diff_snapshot(&shadow).is_empty());
+    let cold_misses = m.counter("restore.cache.misses");
+    assert!(cold_misses >= 1, "cold restore must miss");
+    assert!(
+        m.counter("restore.prefetch.issued") >= 1,
+        "a mid-chain delta restore must issue chain prefetches"
+    );
+    assert!(m.counter("restore.prefetch.depth") >= 1, "depth gauge never set");
+
+    // Warm restore: served out of the cache, not the tiers.
+    let fresh = rt.client(0);
+    let app3 = IterativeApp::new(&fresh, "app", 2, 8 << 10, 0.0, 7);
+    fresh
+        .restart_version("app", last)
+        .unwrap()
+        .expect("warm restore");
+    assert!(app3.diff_snapshot(&shadow).is_empty());
+    assert!(m.counter("restore.cache.hits") >= 1, "warm restore must hit");
+    assert_eq!(
+        m.counter("restore.cache.misses"),
+        cold_misses,
+        "a warm restore must not refetch"
+    );
+}
+
+/// Concurrent restores of one container issue exactly one source read:
+/// the leader's fetch is held open until every storm thread has had time
+/// to arrive, so late arrivals join the in-flight fetch (coalesced) or
+/// hit the cache — never refetch.
+#[test]
+fn concurrent_fetches_coalesce_into_one_source_read() {
+    const STORM: usize = 6;
+    let rt = runtime();
+    let eng = rt.restore_engine().expect("restore plane on").clone();
+    let m = rt.metrics().clone();
+    let fetches = Arc::new(AtomicU64::new(0));
+    let (tx, rx) = mpsc::channel::<()>();
+    let rx = Arc::new(Mutex::new(rx));
+
+    let handles: Vec<_> = (0..STORM)
+        .map(|_| {
+            let eng = Arc::clone(&eng);
+            let fetches = Arc::clone(&fetches);
+            let rx = Arc::clone(&rx);
+            std::thread::spawn(move || {
+                let fetch = |_v: u64| -> anyhow::Result<Option<Vec<u8>>> {
+                    fetches.fetch_add(1, Ordering::SeqCst);
+                    // Hold the flight open until the main thread releases
+                    // it, so the other storm threads arrive in-flight.
+                    let _ = rx.lock().unwrap().recv_timeout(Duration::from_secs(10));
+                    Ok(Some(vec![9u8; 4096]))
+                };
+                eng.fetch_container("pfs", "storm", 0, 0, 1, &fetch)
+                    .unwrap()
+                    .unwrap()
+            })
+        })
+        .collect();
+
+    // Wait for the leader to enter its fetch, give the rest time to join
+    // the flight, then release.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while fetches.load(Ordering::SeqCst) == 0 {
+        assert!(std::time::Instant::now() < deadline, "no leader fetch");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    tx.send(()).unwrap();
+    for h in handles {
+        let data = h.join().unwrap();
+        assert_eq!(*data, vec![9u8; 4096]);
+    }
+
+    assert_eq!(
+        fetches.load(Ordering::SeqCst),
+        1,
+        "one source read must serve the whole storm"
+    );
+    assert_eq!(m.counter("restore.cache.misses"), 1);
+    assert_eq!(
+        m.counter("restore.cache.hits") + m.counter("restore.singleflight.coalesced"),
+        (STORM - 1) as u64,
+        "every non-leader is a hit or a coalesced join"
+    );
+}
