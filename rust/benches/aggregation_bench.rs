@@ -43,7 +43,7 @@ fn file_per_rank_secs(ranks: usize, bytes: usize) -> f64 {
 /// Modeled time for the same wave through the aggregator; also returns
 /// (containers, mean write bytes, write amplification).
 fn aggregated_secs(ranks: usize, bytes: usize, group: usize) -> (f64, u64, f64, f64) {
-    let data = Arc::new(vec![0xABu8; bytes]);
+    let data = veloc::util::bufpool::Bytes::from(vec![0xABu8; bytes]);
     let agg = Aggregator::new(
         Topology::new(ranks, 1),
         fabric(),
@@ -57,7 +57,7 @@ fn aggregated_secs(ranks: usize, bytes: usize, group: usize) -> (f64, u64, f64, 
     );
     let mut total = Duration::ZERO;
     for r in 0..ranks {
-        let stat = agg.submit("app", 1, r, "raw", Arc::clone(&data)).unwrap();
+        let stat = agg.submit("app", 1, r, "raw", data.clone()).unwrap();
         total += stat.modeled;
     }
     total += agg.flush_all().unwrap().modeled;

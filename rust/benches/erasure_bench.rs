@@ -10,13 +10,15 @@
 #[path = "harness.rs"]
 mod harness;
 
-use veloc::modules::{xor_fold, XorBackend};
+use veloc::modules::{xor_fold, xor_into, xor_into_scalar, XorBackend};
 use veloc::runtime::{default_artifacts_dir, PjrtEngine};
+use veloc::util::gf::{gf_mul_slice_scalar, gf_mul_slice_wide};
 use veloc::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(10);
     let k = 4usize;
+    let mut report = harness::Report::new("erasure");
 
     let kernel = PjrtEngine::load(&default_artifacts_dir()).ok();
     if kernel.is_none() {
@@ -50,6 +52,7 @@ fn main() {
             },
         );
         harness::row(&r);
+        report.add(&r);
         let r = harness::bench_bytes(
             &format!("{mb} MiB/shard wide(u64)"),
             total,
@@ -62,6 +65,7 @@ fn main() {
             },
         );
         harness::row(&r);
+        report.add(&r);
         if let Some(engine) = &kernel {
             let be = XorBackend::Kernel(engine.clone());
             let r = harness::bench_bytes(
@@ -74,8 +78,72 @@ fn main() {
                 },
             );
             harness::row(&r);
+            report.add(&r);
         }
     }
+
+    harness::section("E10c: xor_into accumulate — u64-wide vs byte-serial");
+    harness::table_header();
+    let acc_len = 8usize << 20;
+    let mut src = vec![0u8; acc_len];
+    rng.fill_bytes(&mut src);
+    {
+        let mut a = vec![0u8; acc_len];
+        let mut b = vec![0u8; acc_len];
+        xor_into(&mut a, &src);
+        xor_into_scalar(&mut b, &src);
+        assert_eq!(a, b, "xor kernels must agree");
+    }
+    let reps = harness::scaled(16);
+    let mut acc = vec![0u8; acc_len];
+    let r_scalar = harness::bench_bytes("xor_into scalar", acc_len as u64, 1, reps, || {
+        xor_into_scalar(std::hint::black_box(&mut acc), std::hint::black_box(&src));
+    });
+    harness::row(&r_scalar);
+    let r_wide = harness::bench_bytes("xor_into wide (u64)", acc_len as u64, 1, reps, || {
+        xor_into(std::hint::black_box(&mut acc), std::hint::black_box(&src));
+    });
+    harness::row(&r_wide);
+    let xor_speedup = r_scalar.samples.p50() / r_wide.samples.p50().max(1e-12);
+    println!("xor_into kernel speedup: {xor_speedup:.1}x (gate: >= 3x)");
+    report.add(&r_scalar);
+    report.add(&r_wide);
+    report.scalar("xor_into_speedup", xor_speedup);
+    assert!(
+        xor_speedup >= 3.0,
+        "acceptance: xor_into must be >= 3x the byte-serial baseline, got {xor_speedup:.2}x"
+    );
+
+    harness::section("E10d: GF(2^8) multiply-accumulate — 8-lane vs byte-serial");
+    harness::table_header();
+    let c = 0x1D; // mid-popcount coefficient: neither the c==1 nor c==0 shortcut
+    {
+        let mut a = vec![0u8; acc_len];
+        let mut b = vec![0u8; acc_len];
+        gf_mul_slice_wide(&mut a, &src, c);
+        gf_mul_slice_scalar(&mut b, &src, c);
+        assert_eq!(a, b, "gf kernels must agree");
+    }
+    let r_scalar = harness::bench_bytes("gf_mul_slice scalar", acc_len as u64, 1, reps, || {
+        gf_mul_slice_scalar(std::hint::black_box(&mut acc), std::hint::black_box(&src), c);
+    });
+    harness::row(&r_scalar);
+    let r_wide = harness::bench_bytes("gf_mul_slice wide (u64)", acc_len as u64, 1, reps, || {
+        gf_mul_slice_wide(std::hint::black_box(&mut acc), std::hint::black_box(&src), c);
+    });
+    harness::row(&r_wide);
+    let gf_speedup = r_scalar.samples.p50() / r_wide.samples.p50().max(1e-12);
+    // Reported with a loose floor: the wide path's win depends on the
+    // coefficient's popcount (shift-and-add steps), so 3x is not a stable
+    // cross-machine gate the way the pure-XOR fold is.
+    println!("gf_mul_slice kernel speedup: {gf_speedup:.1}x (floor: >= 1.2x)");
+    report.add(&r_scalar);
+    report.add(&r_wide);
+    report.scalar("gf_mul_speedup", gf_speedup);
+    assert!(
+        gf_speedup >= 1.2,
+        "gf_mul_slice_wide regressed below the scalar baseline: {gf_speedup:.2}x"
+    );
 
     harness::section("E10b: kernel TPU model (DESIGN.md §Hardware-Adaptation)");
     if let Some(engine) = &kernel {
@@ -101,4 +169,5 @@ fn main() {
              path uses the native wide fold, the kernel is the TPU artifact."
         );
     }
+    report.write();
 }

@@ -4,15 +4,20 @@
 //! Shape to reproduce: L1 scales linearly with ranks (dedicated DRAM
 //! staging), while direct-PFS throughput saturates at the shared aggregate
 //! bandwidth — the gap that motivates multi-level checkpointing.
+//!
+//! E1c gates the CRC32 kernel: slice-by-16 [`crc32_wide`] must beat the
+//! byte-serial table baseline by >= 3x, and the run emits
+//! `BENCH_throughput.json` when `VELOC_BENCH_JSON_DIR` is set.
 
 #[path = "harness.rs"]
 mod harness;
 
 use std::sync::Arc;
+use std::time::Duration;
 use veloc::api::{VelocConfig, VelocRuntime};
 use veloc::pipeline::CkptStatus;
 use veloc::storage::contention::fair_share_secs;
-use std::time::Duration;
+use veloc::util::kernels::{crc32_scalar, crc32_wide};
 
 fn world_checkpoint(rt: &Arc<VelocRuntime>, version: u64, bytes: usize) -> f64 {
     let world = rt.topology().world_size();
@@ -42,6 +47,7 @@ fn world_checkpoint(rt: &Arc<VelocRuntime>, version: u64, bytes: usize) -> f64 {
 fn main() {
     let mb = 4usize;
     let bytes = mb << 20;
+    let mut report = harness::Report::new("throughput");
 
     harness::section("E1a: live runtime — blocking L1 capture vs ranks");
     println!(
@@ -61,6 +67,7 @@ fn main() {
             blocks.push(world_checkpoint(&rt, v, bytes));
         }
         let agg_gbps = (world * bytes) as f64 / blocks.mean() / 1e9;
+        report.scalar(&format!("l1_agg_gbps_{world}"), agg_gbps);
         println!(
             "{:>6} {:>11.2} ms {:>17.2} GB/s",
             world,
@@ -94,4 +101,31 @@ fn main() {
          sits inside this band; PFS saturates at its aggregate bandwidth\n\
          regardless of rank count (motivating multi-level checkpointing)."
     );
+
+    harness::section("E1c: CRC32 kernel — slice-by-16 vs byte-serial table");
+    harness::table_header();
+    let crc_len = 16usize << 20;
+    let buf: Vec<u8> = (0..crc_len)
+        .map(|i| ((i as u32).wrapping_mul(2_654_435_761) >> 13) as u8)
+        .collect();
+    assert_eq!(crc32_wide(&buf), crc32_scalar(&buf), "kernels must agree");
+    let reps = harness::scaled(16);
+    let r_scalar = harness::bench_bytes("crc32 scalar (byte table)", crc_len as u64, 1, reps, || {
+        std::hint::black_box(crc32_scalar(std::hint::black_box(&buf)));
+    });
+    harness::row(&r_scalar);
+    let r_wide = harness::bench_bytes("crc32 wide (slice-by-16)", crc_len as u64, 1, reps, || {
+        std::hint::black_box(crc32_wide(std::hint::black_box(&buf)));
+    });
+    harness::row(&r_wide);
+    let speedup = r_scalar.samples.p50() / r_wide.samples.p50().max(1e-12);
+    println!("crc32 kernel speedup: {speedup:.1}x (gate: >= 3x)");
+    report.add(&r_scalar);
+    report.add(&r_wide);
+    report.scalar("crc32_speedup", speedup);
+    assert!(
+        speedup >= 3.0,
+        "acceptance: crc32_wide must be >= 3x the scalar baseline, got {speedup:.2}x"
+    );
+    report.write();
 }

@@ -20,6 +20,7 @@ use crate::modules::version::VersionRegistry;
 use crate::modules::FlushGate;
 use crate::pipeline::context::LEVEL_PFS;
 use crate::storage::{PlacementEngine, StorageFabric, StorageTier};
+use crate::util::bufpool::Bytes;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,13 +38,15 @@ pub const FAULT_PRE_INDEX: &str = "drain.pre_index";
 /// point: the drain stops there, exactly as a crashed writer would.
 pub type AggFaultHook = Arc<dyn Fn(&str) -> bool + Send + Sync>;
 
-/// One rank's checkpoint payload waiting in a group buffer.
+/// One rank's checkpoint payload waiting in a group buffer — a shared
+/// view of the capture allocation (or the level-1 read-back), never a
+/// private copy.
 struct PendingSegment {
     name: String,
     version: u64,
     rank: usize,
     encoding: String,
-    data: Arc<Vec<u8>>,
+    data: Bytes,
 }
 
 #[derive(Default)]
@@ -381,7 +384,7 @@ impl Aggregator {
         version: u64,
         rank: usize,
         encoding: &str,
-        data: Arc<Vec<u8>>,
+        data: Bytes,
     ) -> Result<SubmitStat> {
         let g = self.group_of(rank);
         let bytes = data.len() as u64;
@@ -489,21 +492,16 @@ impl Aggregator {
         if buf.pending.is_empty() {
             return Ok(DrainStat::default());
         }
-        let metas: Vec<(SegmentMeta, &[u8])> = buf
+        let metas: Vec<SegmentMeta> = buf
             .pending
             .iter()
-            .map(|p| {
-                (
-                    SegmentMeta {
-                        name: p.name.clone(),
-                        version: p.version,
-                        rank: p.rank,
-                        len: p.data.len(),
-                        encoding: p.encoding.clone(),
-                        crc: crc32fast::hash(&p.data),
-                    },
-                    p.data.as_slice(),
-                )
+            .map(|p| SegmentMeta {
+                name: p.name.clone(),
+                version: p.version,
+                rank: p.rank,
+                len: p.data.len(),
+                encoding: p.encoding.clone(),
+                crc: crc32fast::hash(&p.data),
             })
             .collect();
         // Claim a container key no *reachable* tier already holds:
@@ -519,8 +517,21 @@ impl Aggregator {
                 break (id, key);
             }
         };
-        let encoded = Arc::new(container::encode(&id, group, &metas));
-        drop(metas);
+        // Scatter-gather encode: serialize only the container prefix
+        // (magic + header) and the trailing CRC, then hand the vectored
+        // parts [prefix, seg0, seg1, ..., crc] straight to the tier — the
+        // buffered segment payloads are never concatenated into a staging
+        // container. The streaming hasher reproduces exactly the CRC
+        // `container::encode` would have appended.
+        let prefix = container::encode_prefix(&id, group, &metas);
+        let mut hasher = crc32fast::Hasher::new();
+        hasher.update(&prefix);
+        for p in &buf.pending {
+            hasher.update(&p.data);
+        }
+        let crc_le = hasher.finalize().to_le_bytes();
+        let body_len: usize = metas.iter().map(|m| m.len).sum();
+        let total_len = prefix.len() + body_len + 4;
         // The drain writer is colocated with the group's buffers; use the
         // first buffered segment's rank to ask the gate whether a failure
         // landed on that node mid-drain.
@@ -531,8 +542,8 @@ impl Aggregator {
         // segments stay buffered (and die with the node when it is wiped).
         if let Some(gate) = &self.gate {
             let mut off = 0;
-            while off < encoded.len() {
-                gate.before_chunk(self.cfg.drain_chunk.min(encoded.len() - off));
+            while off < total_len {
+                gate.before_chunk(self.cfg.drain_chunk.min(total_len - off));
                 if let Some(r) = writer_rank {
                     if gate.aborted_for(r) {
                         bail!(
@@ -544,16 +555,23 @@ impl Aggregator {
                 off += self.cfg.drain_chunk;
             }
         }
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(buf.pending.len() + 2);
+        parts.push(&prefix);
+        for p in &buf.pending {
+            parts.push(&p.data);
+        }
+        parts.push(&crc_le);
         // Adaptive placement routes the container to the best eligible
         // shared tier (failing over past down/read-only/full ones) and
         // reports where it landed; the fixed target is the legacy path.
         let (dest, stat) = match &self.placement {
-            Some(p) => p.put(&key, &encoded)?,
+            Some(p) => p.put_gather(&key, &parts)?,
             None => {
                 let tier = self.target_tier()?;
-                (tier.id().to_string(), tier.put_shared(&key, &encoded)?)
+                (tier.id().to_string(), tier.put_gather(&key, &parts)?)
             }
         };
+        drop(parts);
         let n = buf.pending.len() as u64;
         // Crash window: container durable, index not yet updated. A failure
         // landing here kills the writer after the publish — the buffered
@@ -573,25 +591,29 @@ impl Aggregator {
         }
         // Index the freshly-published segments (recording the tier the
         // container landed on) and persist the index on the metadata
-        // tier. The put happens under the index lock so that concurrent
-        // group drains cannot persist a stale snapshot last.
-        let header = container::decode_header(&encoded)?;
+        // tier. Offsets are the cumulative meta lengths past the prefix —
+        // the same arithmetic `ContainerHeader::segment_offset` performs —
+        // so no header decode round-trip is needed. The put happens under
+        // the index lock so that concurrent group drains cannot persist a
+        // stale snapshot last.
         {
             let mut idx = self.index.lock().unwrap();
-            for (i, m) in header.segments.iter().enumerate() {
+            let mut off = prefix.len();
+            for m in &metas {
                 idx.insert(
                     &m.name,
                     m.version,
                     m.rank,
                     SegmentLoc {
                         container: key.clone(),
-                        offset: header.segment_offset(i),
+                        offset: off,
                         len: m.len,
                         encoding: m.encoding.clone(),
                         crc: m.crc,
                         tier: dest.clone(),
                     },
                 );
+                off += m.len;
             }
             if let Ok(t) = self.index_tier() {
                 let _ = t.put(INDEX_KEY, idx.to_json().to_string().as_bytes());
@@ -601,7 +623,7 @@ impl Aggregator {
         // they count as level-4 complete (a buffered segment is volatile
         // node memory and must not unlock GC of older versions).
         if let Some(reg) = &self.registry {
-            for m in &header.segments {
+            for m in &metas {
                 reg.record_level_only(&m.name, m.version, m.rank, LEVEL_PFS, &m.encoding);
             }
         }
@@ -670,7 +692,7 @@ impl Aggregator {
                 .iter()
                 .find(|p| p.rank == rank && p.version == version && p.name == name)
             {
-                return Ok(Some(p.data.as_ref().clone()));
+                return Ok(Some(p.data.to_vec()));
             }
         }
         let lookup = |this: &Self| -> Option<SegmentLoc> {
@@ -903,8 +925,8 @@ mod tests {
         Aggregator::new(Topology::new(nodes, rpn), fabric(nodes), cfg, None, None)
     }
 
-    fn payload(rank: usize, version: u64) -> Arc<Vec<u8>> {
-        Arc::new(vec![(rank as u8) ^ (version as u8); 4096])
+    fn payload(rank: usize, version: u64) -> Bytes {
+        Bytes::from(vec![(rank as u8) ^ (version as u8); 4096])
     }
 
     #[test]
@@ -990,8 +1012,8 @@ mod tests {
             ..Default::default()
         };
         let a = agg(1, 2, cfg);
-        a.submit("app", 1, 0, "raw", Arc::new(vec![1u8; 100])).unwrap();
-        a.submit("app", 1, 0, "raw", Arc::new(vec![2u8; 200])).unwrap();
+        a.submit("app", 1, 0, "raw", Bytes::from(vec![1u8; 100])).unwrap();
+        a.submit("app", 1, 0, "raw", Bytes::from(vec![2u8; 200])).unwrap();
         assert_eq!(a.pending_bytes(), 200);
         a.flush_all().unwrap();
         assert_eq!(a.restore("app", 1, 0).unwrap().unwrap(), vec![2u8; 200]);

@@ -73,11 +73,15 @@ impl ContainerHeader {
     }
 }
 
-/// Serialize segments into one VAGG container.
-pub fn encode(id: &str, group: usize, segments: &[(SegmentMeta, &[u8])]) -> Vec<u8> {
+/// Serialize just the container prefix — magic, format version, header —
+/// for the given segment metadata. The scatter-gather drain path emits
+/// `[prefix, seg0, seg1, ..., crc_le]` as a vectored write without ever
+/// concatenating the segment payloads; the trailing CRC32 covers prefix +
+/// payloads in that order (identical to what [`encode`] produces).
+pub fn encode_prefix(id: &str, group: usize, segments: &[SegmentMeta]) -> Vec<u8> {
     let seg_json: Vec<Json> = segments
         .iter()
-        .map(|(m, _)| {
+        .map(|m| {
             Json::obj()
                 .set("name", m.name.as_str())
                 .set("version", m.version)
@@ -93,12 +97,20 @@ pub fn encode(id: &str, group: usize, segments: &[(SegmentMeta, &[u8])]) -> Vec<
         .set("segments", Json::Arr(seg_json))
         .to_string();
     let hbytes = header.as_bytes();
-    let body_len: usize = segments.iter().map(|(m, _)| m.len).sum();
-    let mut out = Vec::with_capacity(4 + 4 + 4 + hbytes.len() + body_len + 4);
+    let mut out = Vec::with_capacity(4 + 4 + 4 + hbytes.len());
     out.extend_from_slice(AGG_MAGIC);
     out.extend_from_slice(&AGG_VERSION.to_le_bytes());
     out.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
     out.extend_from_slice(hbytes);
+    out
+}
+
+/// Serialize segments into one VAGG container.
+pub fn encode(id: &str, group: usize, segments: &[(SegmentMeta, &[u8])]) -> Vec<u8> {
+    let metas: Vec<SegmentMeta> = segments.iter().map(|(m, _)| m.clone()).collect();
+    let mut out = encode_prefix(id, group, &metas);
+    let body_len: usize = segments.iter().map(|(m, _)| m.len).sum();
+    out.reserve(body_len + 4);
     for (_, data) in segments {
         out.extend_from_slice(data);
     }
@@ -254,6 +266,25 @@ mod tests {
         for (i, p) in payloads.iter().enumerate() {
             assert_eq!(&extract(&buf, &h, i).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn prefix_plus_parts_plus_crc_equals_encode() {
+        // The scatter-gather drain path must produce a byte-identical
+        // container: prefix, payloads in header order, trailing CRC.
+        let (buf, payloads) = sample();
+        let metas: Vec<SegmentMeta> = payloads
+            .iter()
+            .enumerate()
+            .map(|(r, p)| seg("app", 3, r, p))
+            .collect();
+        let mut out = encode_prefix("g0.c1", 0, &metas);
+        for p in &payloads {
+            out.extend_from_slice(p);
+        }
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        assert_eq!(out, buf);
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //!     None,
 //!     None,
 //! );
-//! agg.submit("app", 1, 0, "raw", Arc::new(vec![7u8; 4096])).unwrap();
+//! agg.submit("app", 1, 0, "raw", veloc::util::bufpool::Bytes::from(vec![7u8; 4096])).unwrap();
 //! let restored = agg.restore("app", 1, 0).unwrap().unwrap();
 //! assert_eq!(restored, vec![7u8; 4096]);
 //! ```

@@ -684,9 +684,13 @@ fn dispatch_one(
         let _ = journal.settle(sub.id, false);
         queue.settled(&sub.job);
     };
-    let read: std::io::Result<std::borrow::Cow<'_, [u8]>> = match &sub.bytes {
-        Some(b) => Ok(std::borrow::Cow::Borrowed(b.as_slice())),
-        None => std::fs::read(&sub.payload).map(std::borrow::Cow::Owned),
+    // Inline payloads wrap the submit's allocation; staged payloads read
+    // the journal file once. Either way `bytes` is the same shared slice
+    // the pipeline context below captures — the IPC boundary re-clone is
+    // gone.
+    let read: std::io::Result<crate::util::bufpool::Bytes> = match &sub.bytes {
+        Some(b) => Ok(crate::util::bufpool::Bytes::from_arc(Arc::clone(b))),
+        None => std::fs::read(&sub.payload).map(crate::util::bufpool::Bytes::from),
     };
     let bytes = match read {
         Ok(b) => b,
@@ -715,7 +719,8 @@ fn dispatch_one(
         }
     };
     let node = runtime.topology().node_of(sub.rank);
-    let ctx = CkptContext::new(&sub.name, sub.rank, node, sub.version, ckpt);
+    let ctx =
+        CkptContext::from_encoded(&sub.name, sub.rank, node, sub.version, ckpt, bytes);
     if let Err(e) = runtime.engine(sub.rank).submit(ctx) {
         fail(&format!("pipeline rejected: {e:#}"));
         return;

@@ -17,26 +17,29 @@
 
 use anyhow::{anyhow, Result};
 
-/// Content fingerprint of one chunk: crc32 + length + FNV-1a64, packed
-/// into 128 bits. Three independent digests must collide simultaneously
-/// for two distinct chunks to alias — negligible at checkpoint scale, and
-/// cheap enough to verify on every reassembly.
+/// Content fingerprint of one chunk: crc32 + length + a 64-bit content
+/// hash, packed into 128 bits. Three independent digests must collide
+/// simultaneously for two distinct chunks to alias — negligible at
+/// checkpoint scale, and cheap enough to verify on every reassembly.
+///
+/// Both digests go through the word-parallel kernels
+/// ([`crate::util::kernels`]): slice-by-16 CRC32 and the 4-lane
+/// fingerprint hash. Fingerprints only key the dedup store and manifests
+/// written by the same build, so they need self-consistency, not a wire
+/// format — the kernel property tests pin each against its scalar
+/// baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Fingerprint(
-    /// Packed digest bits: crc32 (high 32) | payload length | FNV-1a64.
+    /// Packed digest bits: crc32 (high 32) | payload length | hash64.
     pub u128,
 );
 
 impl Fingerprint {
     /// Fingerprint a chunk payload.
     pub fn of(data: &[u8]) -> Fingerprint {
-        let crc = crc32fast::hash(data) as u128;
+        let crc = crate::util::kernels::crc32_wide(data) as u128;
         let len = (data.len() as u32) as u128;
-        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
-        for &b in data {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        }
+        let h = crate::util::kernels::fp_hash64(data);
         Fingerprint((crc << 96) | (len << 64) | h as u128)
     }
 
@@ -116,7 +119,82 @@ impl Chunker {
     }
 
     /// Length of the first chunk of `data` (never 0 for non-empty input).
-    fn cut(&self, data: &[u8]) -> usize {
+    ///
+    /// The gear recurrence `h = (h << 1) + g[b]` is serial, but unrolling
+    /// four positions per iteration removes most of the per-byte loop and
+    /// mask-select overhead and lets the four table loads issue in
+    /// parallel. Boundaries are bit-identical to [`Self::cut_scalar`]
+    /// (property-tested), so chunk streams stay stable across the change.
+    pub fn cut(&self, data: &[u8]) -> usize {
+        let n = data.len();
+        if n <= self.min {
+            return n;
+        }
+        let end = self.max.min(n);
+        let norm = self.avg.min(end);
+        let mut h: u64 = 0;
+        let mut i = self.min;
+        // Strict region [min, norm): four candidate boundaries per trip.
+        while i + 4 <= norm {
+            let h1 = (h << 1).wrapping_add(self.table[data[i] as usize]);
+            if h1 & self.mask_strict == 0 {
+                return i + 1;
+            }
+            let h2 = (h1 << 1).wrapping_add(self.table[data[i + 1] as usize]);
+            if h2 & self.mask_strict == 0 {
+                return i + 2;
+            }
+            let h3 = (h2 << 1).wrapping_add(self.table[data[i + 2] as usize]);
+            if h3 & self.mask_strict == 0 {
+                return i + 3;
+            }
+            h = (h3 << 1).wrapping_add(self.table[data[i + 3] as usize]);
+            if h & self.mask_strict == 0 {
+                return i + 4;
+            }
+            i += 4;
+        }
+        while i < norm {
+            h = (h << 1).wrapping_add(self.table[data[i] as usize]);
+            if h & self.mask_strict == 0 {
+                return i + 1;
+            }
+            i += 1;
+        }
+        // Loose region [norm, end): likelier cuts, same unrolling.
+        while i + 4 <= end {
+            let h1 = (h << 1).wrapping_add(self.table[data[i] as usize]);
+            if h1 & self.mask_loose == 0 {
+                return i + 1;
+            }
+            let h2 = (h1 << 1).wrapping_add(self.table[data[i + 1] as usize]);
+            if h2 & self.mask_loose == 0 {
+                return i + 2;
+            }
+            let h3 = (h2 << 1).wrapping_add(self.table[data[i + 2] as usize]);
+            if h3 & self.mask_loose == 0 {
+                return i + 3;
+            }
+            h = (h3 << 1).wrapping_add(self.table[data[i + 3] as usize]);
+            if h & self.mask_loose == 0 {
+                return i + 4;
+            }
+            i += 4;
+        }
+        while i < end {
+            h = (h << 1).wrapping_add(self.table[data[i] as usize]);
+            if h & self.mask_loose == 0 {
+                return i + 1;
+            }
+            i += 1;
+        }
+        end
+    }
+
+    /// Byte-serial reference implementation of [`Self::cut`] — the
+    /// baseline the unrolled version is property-tested and benched
+    /// against.
+    pub fn cut_scalar(&self, data: &[u8]) -> usize {
         let n = data.len();
         if n <= self.min {
             return n;

@@ -1,10 +1,27 @@
-//! Integrity module: checksums the encoded container before any copy is
-//! made, so recovery can validate whichever level it restores from
-//! (paper §2 lists "integrity checks based on checksumming" as a custom
-//! pipeline module).
+//! Integrity module: checksums the *captured* container — the canonical
+//! pre-transform bytes — so recovery can validate whichever level it
+//! restores from (paper §2 lists "integrity checks based on checksumming"
+//! as a custom pipeline module).
 //!
-//! Two backends: crc32 (native) or the L1 Pallas `checksum` kernel through
-//! PJRT, which reduces the container in fixed (rows x block) i32 tiles and
+//! ## What the digest covers
+//!
+//! The digest is taken at priority 5, before any payload transform runs.
+//! Later stages may *swap* the bytes levels actually store: compression
+//! (priority 35) re-encodes the remote copies as zlib, delta (priority 8)
+//! as a VDLT container. The recorded digest therefore covers the
+//! canonical decoded form, **not** necessarily the stored bytes — and
+//! restore-side verification is explicitly digest-after-decompress:
+//! `recovery::Recovery::validate` first undoes the storage encoding
+//! (zlib inflate / delta reassembly), decodes the VCKP container, then
+//! re-encodes it (the VCKP encode is deterministic) and digests *that*
+//! against the registry record. Corruption of a compressed or delta copy
+//! is caught twice: the container CRC fails the decode, and any decode
+//! that slips through fails the canonical digest.
+//!
+//! Two backends: crc32 (native, slice-by-16 word-parallel —
+//! [`crate::util::kernels::crc32_wide`], bit-identical to
+//! `crc32fast::hash`) or the L1 Pallas `checksum` kernel through PJRT,
+//! which reduces the container in fixed (rows x block) i32 tiles and
 //! mixes the per-row sums into one 32-bit digest.
 
 use crate::modules::Env;
@@ -46,7 +63,10 @@ pub fn kernel_digest(engine: &Arc<PjrtEngine>, data: &[u8]) -> Result<u32> {
 
 pub fn digest(backend: &ChecksumBackend, data: &[u8]) -> Result<u32> {
     match backend {
-        ChecksumBackend::Crc32 => Ok(crc32fast::hash(data)),
+        // Same IEEE polynomial as crc32fast::hash (property-tested equal);
+        // the slice-by-16 kernel keeps the digest off the capture path's
+        // critical byte-serial loop.
+        ChecksumBackend::Crc32 => Ok(crate::util::kernels::crc32_wide(data)),
         ChecksumBackend::Kernel(e) => kernel_digest(e, data),
     }
 }
@@ -81,7 +101,12 @@ impl Module for ChecksumModule {
     }
 
     fn blocking(&self) -> bool {
-        true // the digest must cover the bytes every level stores
+        // The digest must be recorded before any level stores a copy (and
+        // before delta/compression swap the payload): it covers the
+        // canonical captured container, which restore-side validation
+        // reproduces by decode + deterministic re-encode — see the module
+        // docs for the digest-after-decompress contract.
+        true
     }
 
     fn process(&self, ctx: &mut CkptContext) -> Result<Outcome> {

@@ -11,6 +11,7 @@
 
 use crate::pipeline::context::{CkptContext, Outcome};
 use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::util::bufpool::Bytes;
 use anyhow::Result;
 use flate2::write::ZlibEncoder;
 use flate2::Compression;
@@ -53,7 +54,9 @@ impl Module for CompressionModule {
         // Only swap if it actually helps (incompressible data would
         // inflate the remote copies).
         if compressed.len() < ctx.encoded.len() {
-            ctx.encoded = Arc::new(compressed);
+            // Derived data, not a payload copy: the zlib output is a new
+            // byte sequence wrapped without further copying.
+            ctx.encoded = Bytes::from(compressed);
             ctx.encoding = "zlib";
         }
         Ok(Outcome::Done)
@@ -85,7 +88,7 @@ mod tests {
         assert_eq!(ctx.encoding, "zlib");
         assert!(ctx.encoded.len() < before / 10);
         // Round-trip through the restore-path sniffing.
-        let raw = maybe_decompress(ctx.encoded.as_ref().clone()).unwrap();
+        let raw = maybe_decompress(ctx.encoded.to_vec()).unwrap();
         let d = Checkpoint::decode(&raw).unwrap();
         assert_eq!(d.region(0).unwrap().data.len(), 100_000);
     }
@@ -104,7 +107,7 @@ mod tests {
     #[test]
     fn raw_passthrough_decompress() {
         let c = ctx_with(vec![1, 2, 3]);
-        let raw = maybe_decompress(c.encoded.as_ref().clone()).unwrap();
-        assert_eq!(&raw, c.encoded.as_ref());
+        let raw = maybe_decompress(c.encoded.to_vec()).unwrap();
+        assert_eq!(raw, c.encoded.to_vec());
     }
 }

@@ -18,6 +18,7 @@
 use crate::modules::Env;
 use crate::pipeline::context::{CkptContext, Outcome};
 use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::util::bufpool::Bytes;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -63,7 +64,9 @@ impl Module for DeltaModule {
         };
         let container =
             delta.encode_checkpoint(&ctx.ckpt, ctx.version, ctx.node, &base_ok)?;
-        ctx.encoded = Arc::new(container);
+        // Derived data, not a payload copy: the thin VDLT container is a
+        // new byte sequence wrapped without further copying.
+        ctx.encoded = Bytes::from(container);
         ctx.encoding = "delta";
         Ok(Outcome::Done)
     }
@@ -151,7 +154,7 @@ mod tests {
         // The container materializes bit-for-bit through the node store.
         let state = e.delta.as_ref().unwrap();
         let out = delta::materialize(
-            c2.encoded.as_ref().clone(),
+            c2.encoded.to_vec(),
             Some(state.store(0).as_ref()),
             &|_| None,
         )

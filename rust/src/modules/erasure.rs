@@ -30,10 +30,11 @@
 //! directly from the fabric (standing in for the group reduce-scatter);
 //! read costs are charged by the source tiers.
 
-use crate::modules::xor::{xor_fold, XorBackend};
+use crate::modules::xor::{xor_fold, xor_into, xor_into_scalar, XorBackend};
 use crate::modules::Env;
 use crate::pipeline::context::{CkptContext, Outcome, RestoreContext, LEVEL_ERASURE};
 use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::util::bufpool::Bytes;
 use crate::util::bytes::Checkpoint;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
@@ -123,6 +124,15 @@ fn chunk_bytes(data: &[u8], c: usize, h: usize) -> Vec<u8> {
     out
 }
 
+/// The raw (unpadded, possibly empty) sub-slice of chunk c under stripe
+/// height h. XOR-accumulating this into a zeroed h-byte row is equivalent
+/// to XORing [`chunk_bytes`]'s padded copy — without materializing it.
+fn chunk_slice(data: &[u8], c: usize, h: usize) -> &[u8] {
+    let start = (c * h).min(data.len());
+    let end = (c * h + h).min(data.len());
+    &data[start..end]
+}
+
 impl ErasureModule {
     pub fn new(
         env: Arc<Env>,
@@ -155,19 +165,37 @@ impl ErasureModule {
         None
     }
 
+    /// Zero-copy variant for the capture path: borrows the member's
+    /// level-1 copy out of a memory tier instead of cloning it.
+    fn read_local_copy_shared(
+        &self,
+        member: usize,
+        name: &str,
+        version: u64,
+    ) -> Option<Bytes> {
+        let node = self.env.topology.node_of(member);
+        let key = crate::pipeline::storage_key("local", name, member, version);
+        for tier in self.env.fabric.local_tiers(node) {
+            if let Some((data, _)) = tier.get_shared(&key) {
+                return Some(data);
+            }
+        }
+        None
+    }
+
     fn wait_for_members(
         &self,
         group: &[usize],
         name: &str,
         version: u64,
-    ) -> Result<Vec<Vec<u8>>> {
+    ) -> Result<Vec<Bytes>> {
         let deadline = Instant::now() + self.member_timeout;
-        let mut copies: Vec<Option<Vec<u8>>> = vec![None; group.len()];
+        let mut copies: Vec<Option<Bytes>> = vec![None; group.len()];
         loop {
             let mut missing = 0;
             for (i, &m) in group.iter().enumerate() {
                 if copies[i].is_none() {
-                    copies[i] = self.read_local_copy(m, name, version);
+                    copies[i] = self.read_local_copy_shared(m, name, version);
                     if copies[i].is_none() {
                         missing += 1;
                     }
@@ -289,22 +317,45 @@ impl Module for ErasureModule {
         let max_len = *lens.iter().max().unwrap() as usize;
         let h = stripe_h(max_len, k);
         // P_me = XOR over members j != me of their chunk (me - j - 1) mod k.
-        let chunks: Vec<Vec<u8>> = group
-            .iter()
-            .enumerate()
-            .filter(|(j, _)| *j != me)
-            .map(|(j, _)| chunk_bytes(&copies[j], chunk_of(j, me, k), h))
-            .collect();
-        let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
-        let parity = xor_fold(&refs, &self.backend)?;
+        let parity = match &self.backend {
+            // Native paths accumulate each member's raw chunk sub-slice
+            // into one zeroed stripe row: `xor_into` zero-extends short
+            // slices, so no padded staging copies are materialized.
+            XorBackend::NativeScalar | XorBackend::NativeWide => {
+                let wide = matches!(self.backend, XorBackend::NativeWide);
+                let mut acc = vec![0u8; h];
+                for (j, _) in group.iter().enumerate().filter(|(j, _)| *j != me) {
+                    let src = chunk_slice(&copies[j], chunk_of(j, me, k), h);
+                    if wide {
+                        xor_into(&mut acc, src);
+                    } else {
+                        xor_into_scalar(&mut acc, src);
+                    }
+                }
+                acc
+            }
+            // The PJRT kernel consumes fixed-shape tiles; it keeps the
+            // padded staging copies.
+            backend @ XorBackend::Kernel(_) => {
+                let chunks: Vec<Vec<u8>> = group
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != me)
+                    .map(|(j, _)| chunk_bytes(&copies[j], chunk_of(j, me, k), h))
+                    .collect();
+                let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+                xor_fold(&refs, backend)?
+            }
+        };
         let blob = encode_parity(k, me, &lens, h, &parity);
-        // Store on my node (fastest tier with capacity).
+        // Store on my node (fastest tier with capacity). The parity
+        // container is derived data handed over without a further copy.
         let tiers = self.env.fabric.local_tiers(ctx.node);
         let tier = tiers
             .iter()
             .find(|t| t.used_bytes() + blob.len() as u64 <= t.spec().capacity)
             .ok_or_else(|| anyhow!("no local capacity for parity"))?;
-        let stat = tier.put(&ctx.key("erasure"), &blob)?;
+        let stat = tier.put_bytes(&ctx.key("erasure"), &Bytes::from(blob))?;
         ctx.record(self.name(), LEVEL_ERASURE, t0.elapsed().max(stat.modeled), stat.bytes);
         Ok(Outcome::Done)
     }
@@ -390,6 +441,18 @@ mod tests {
         let d = vec![1u8, 2, 3];
         assert_eq!(chunk_bytes(&d, 0, 8), vec![1, 2, 3, 0, 0, 0, 0, 0]);
         assert_eq!(chunk_bytes(&d, 1, 8), vec![0u8; 8]);
+    }
+
+    #[test]
+    fn chunk_slice_accumulates_like_padded_chunk() {
+        // XORing the raw sub-slice into a zeroed row must equal the padded
+        // chunk copy, including the partial-tail and past-the-end cases.
+        let d: Vec<u8> = (0..23u8).collect();
+        for c in 0..4 {
+            let mut acc = vec![0u8; 8];
+            xor_into(&mut acc, chunk_slice(&d, c, 8));
+            assert_eq!(acc, chunk_bytes(&d, c, 8), "chunk {c}");
+        }
     }
 
     #[test]

@@ -98,7 +98,7 @@ impl Module for LocalModule {
         let Some(tier) = self.select_tier(tiers, bytes) else {
             bail!("no local tier has {bytes} bytes of capacity");
         };
-        let stat = tier.put_shared(&ctx.key("local"), &ctx.encoded)?;
+        let stat = tier.put_bytes(&ctx.key("local"), &ctx.encoded)?;
         ctx.record(self.name(), LEVEL_LOCAL, stat.modeled, stat.bytes);
         Ok(Outcome::Done)
     }

@@ -21,7 +21,7 @@ pub use local::{LocalModule, TierPolicy};
 pub use partner::PartnerModule;
 pub use transfer::TransferModule;
 pub use version::{VersionModule, VersionRegistry};
-pub use xor::{xor_fold, XorBackend};
+pub use xor::{xor_fold, xor_into, xor_into_scalar, XorBackend, XorError};
 
 use crate::cluster::Topology;
 use crate::pipeline::module::Module;

@@ -72,7 +72,7 @@ impl Module for PartnerModule {
         };
         // Keyed by the *source* rank so recovery of rank r knows where to
         // look regardless of which rank stored it.
-        let stat = tier.put_shared(&ctx.key("partner"), &ctx.encoded)?;
+        let stat = tier.put_bytes(&ctx.key("partner"), &ctx.encoded)?;
         ctx.record(self.name(), LEVEL_PARTNER, stat.modeled, stat.bytes);
         Ok(Outcome::Done)
     }

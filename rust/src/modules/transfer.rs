@@ -12,6 +12,7 @@
 use crate::modules::Env;
 use crate::pipeline::context::{CkptContext, Outcome, RestoreContext, LEVEL_PFS};
 use crate::pipeline::module::{Module, ModuleSwitch};
+use crate::util::bufpool::Bytes;
 use crate::util::bytes::Checkpoint;
 use anyhow::Result;
 use std::io::Read;
@@ -44,15 +45,16 @@ impl TransferModule {
 
     /// Read back the level-1 copy (preferred: charges the local tier's
     /// read cost, modeling the real producer-consumer pattern); fall back
-    /// to the in-context bytes if the local copy is gone.
-    fn read_back(&self, ctx: &CkptContext) -> (Arc<Vec<u8>>, bool) {
+    /// to the in-context bytes if the local copy is gone. Either way the
+    /// result is a shared view — no payload copy on this path.
+    fn read_back(&self, ctx: &CkptContext) -> (Bytes, bool) {
         let key = ctx.key("local");
         for tier in self.env.fabric.local_tiers(ctx.node) {
-            if let Some((data, _)) = tier.get(&key) {
-                return (Arc::new(data), true);
+            if let Some((data, _)) = tier.get_shared(&key) {
+                return (data, true);
             }
         }
-        (Arc::clone(&ctx.encoded), false)
+        (ctx.encoded.clone(), false)
     }
 
     /// Find one version's level-4 object: the recorded placement
@@ -114,7 +116,7 @@ impl Module for TransferModule {
         let (data, _from_tier) = if ctx.encoding == "raw" {
             self.read_back(ctx)
         } else {
-            (Arc::clone(&ctx.encoded), false)
+            (ctx.encoded.clone(), false)
         };
         // Aggregated path: hand the payload to the write-combining
         // aggregator (it paces its own container drains under the gate)
@@ -156,13 +158,13 @@ impl Module for TransferModule {
         // placement the object goes straight to the PFS, as ever.
         let stat = match &self.env.placement {
             Some(p) => {
-                let (dest, stat) = p.put(&key, &data)?;
+                let (dest, stat) = p.put_bytes(&key, &data)?;
                 self.env
                     .registry
                     .set_destination(&ctx.name, ctx.version, ctx.rank, &dest);
                 stat
             }
-            None => self.env.fabric.pfs().put_shared(&key, &data)?,
+            None => self.env.fabric.pfs().put_bytes(&key, &data)?,
         };
         ctx.record(self.name(), LEVEL_PFS, t0.elapsed().max(stat.modeled), stat.bytes);
         Ok(Outcome::Done)
@@ -332,7 +334,7 @@ mod tests {
         let t = TransferModule::new(Arc::clone(&env), 4096);
         let mut c = ctx();
         let tier = &env.fabric.local_tiers(0)[0];
-        tier.put_shared(&c.key("local"), &c.encoded).unwrap();
+        tier.put_bytes(&c.key("local"), &c.encoded).unwrap();
         t.process(&mut c).unwrap();
         assert_eq!(tier.get_count(), 1, "local read-back must be charged");
     }

@@ -437,12 +437,14 @@ impl Module for VersionModule {
         // shared tier like the data it describes, or a cold restart could
         // not find the failed-over checkpoints (reload_lineage probes and
         // merges every shared tier's copy).
-        let lineage = self.registry.to_json(&ctx.name).to_string();
+        let lineage = crate::util::bufpool::Bytes::from(
+            self.registry.to_json(&ctx.name).to_string().into_bytes(),
+        );
         let key = format!("lineage.{}.json", ctx.name);
         let tiers = self.fabric.shared_tiers();
         let mut wrote: Option<String> = None;
         for tier in &tiers {
-            if tier.put(&key, lineage.as_bytes()).is_ok() {
+            if tier.put_bytes(&key, &lineage).is_ok() {
                 wrote = Some(tier.id().to_string());
                 break;
             }

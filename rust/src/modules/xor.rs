@@ -13,6 +13,38 @@ use crate::runtime::{PjrtEngine, Tensor};
 use anyhow::Result;
 use std::sync::Arc;
 
+/// Typed failure for the XOR fold API. A library misuse (empty input,
+/// ragged buffer lengths) must surface as an error the caller can handle
+/// — not an `assert!` that aborts the whole daemon process.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum XorError {
+    /// No input buffers were supplied.
+    Empty,
+    /// One buffer's length disagreed with buffer 0's.
+    UnequalLengths {
+        /// Index of the offending buffer.
+        index: usize,
+        /// Required length (buffer 0's).
+        expect: usize,
+        /// Actual length of the offending buffer.
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for XorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            XorError::Empty => write!(f, "xor_fold: no input buffers"),
+            XorError::UnequalLengths { index, expect, got } => write!(
+                f,
+                "xor_fold: buffer {index} is {got} bytes, expected {expect}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for XorError {}
+
 #[derive(Clone)]
 pub enum XorBackend {
     NativeScalar,
@@ -30,14 +62,23 @@ impl std::fmt::Debug for XorBackend {
     }
 }
 
-/// XOR all buffers into a fresh output. All buffers must share a length.
+/// XOR all buffers into a fresh output. All buffers must share a length;
+/// violations return a typed [`XorError`] instead of panicking.
 pub fn xor_fold(bufs: &[&[u8]], backend: &XorBackend) -> Result<Vec<u8>> {
-    assert!(!bufs.is_empty());
+    if bufs.is_empty() {
+        return Err(XorError::Empty.into());
+    }
     let len = bufs[0].len();
-    assert!(
-        bufs.iter().all(|b| b.len() == len),
-        "xor_fold requires equal-length buffers"
-    );
+    for (index, b) in bufs.iter().enumerate() {
+        if b.len() != len {
+            return Err(XorError::UnequalLengths {
+                index,
+                expect: len,
+                got: b.len(),
+            }
+            .into());
+        }
+    }
     match backend {
         XorBackend::NativeScalar => {
             let mut out = bufs[0].to_vec();
@@ -64,25 +105,45 @@ pub fn xor_fold(bufs: &[&[u8]], backend: &XorBackend) -> Result<Vec<u8>> {
 fn xor_fold_wide(bufs: &[&[u8]]) -> Vec<u8> {
     let mut out = bufs[0].to_vec();
     for b in &bufs[1..] {
-        // SAFETY: u64 has no invalid bit patterns; align_to yields only
-        // correctly-aligned, in-bounds subslices.
-        let (head, body, tail) = unsafe { out.align_to_mut::<u64>() };
-        let split0 = head.len();
-        let split1 = split0 + body.len() * 8;
-        for (o, x) in head.iter_mut().zip(&b[..split0]) {
-            *o ^= x;
-        }
-        // The matching source body may be unaligned; read via chunks.
-        // from_ne_bytes matches the native reinterpretation of `out`, so
-        // byte lanes pair correctly on any endianness.
-        for (o, x) in body.iter_mut().zip(b[split0..split1].chunks_exact(8)) {
-            *o ^= u64::from_ne_bytes(x.try_into().unwrap());
-        }
-        for (o, x) in tail.iter_mut().zip(&b[split1..]) {
-            *o ^= x;
-        }
+        xor_into(&mut out, b);
     }
     out
+}
+
+/// XOR `src` into the front of `acc` (u64-word body, byte head/tail).
+/// A `src` shorter than `acc` is implicitly zero-extended — XOR with zero
+/// is a no-op — which is what lets the erasure module accumulate raw
+/// unpadded member sub-slices into one stripe-height accumulator without
+/// materializing padded copies.
+pub fn xor_into(acc: &mut [u8], src: &[u8]) {
+    let n = acc.len().min(src.len());
+    let acc = &mut acc[..n];
+    let src = &src[..n];
+    // SAFETY: u64 has no invalid bit patterns; align_to yields only
+    // correctly-aligned, in-bounds subslices.
+    let (head, body, tail) = unsafe { acc.align_to_mut::<u64>() };
+    let split0 = head.len();
+    let split1 = split0 + body.len() * 8;
+    for (o, x) in head.iter_mut().zip(&src[..split0]) {
+        *o ^= x;
+    }
+    // The matching source body may be unaligned; read via chunks.
+    // from_ne_bytes matches the native reinterpretation of `acc`, so
+    // byte lanes pair correctly on any endianness.
+    for (o, x) in body.iter_mut().zip(src[split0..split1].chunks_exact(8)) {
+        *o ^= u64::from_ne_bytes(x.try_into().unwrap());
+    }
+    for (o, x) in tail.iter_mut().zip(&src[split1..]) {
+        *o ^= x;
+    }
+}
+
+/// Byte-serial variant of [`xor_into`] — the scalar baseline benches and
+/// property tests compare against.
+pub fn xor_into_scalar(acc: &mut [u8], src: &[u8]) {
+    for (o, x) in acc.iter_mut().zip(src.iter()) {
+        *o ^= x;
+    }
 }
 
 /// PJRT path: tile the fold into the AOT-compiled (k_rows x chunk) blocks.
@@ -121,14 +182,12 @@ fn xor_fold_kernel(bufs: &[&[u8]], engine: &Arc<PjrtEngine>) -> Result<Vec<u8>> 
             acc = Some(res.into_iter().next().unwrap().into_i32()?);
         }
         let acc = acc.unwrap();
-        let n_bytes = (window * 4).min(len - byte_off);
         for (j, lane) in acc.iter().take(window).enumerate() {
             let b = lane.to_le_bytes();
             let dst = byte_off + j * 4;
             let take = (len - dst).min(4);
             out[dst..dst + take].copy_from_slice(&b[..take]);
         }
-        let _ = n_bytes;
         lane_off += window;
     }
     Ok(out)
@@ -197,6 +256,54 @@ mod tests {
         let bs = bufs(1, 100, 3);
         let out = xor_fold(&[&bs[0]], &XorBackend::NativeScalar).unwrap();
         assert_eq!(out, bs[0]);
+    }
+
+    #[test]
+    fn empty_input_is_a_typed_error_not_a_panic() {
+        let err = xor_fold(&[], &XorBackend::NativeWide).unwrap_err();
+        assert_eq!(err.downcast_ref::<XorError>(), Some(&XorError::Empty));
+    }
+
+    #[test]
+    fn unequal_lengths_are_a_typed_error_not_a_panic() {
+        let a = vec![1u8; 10];
+        let b = vec![2u8; 9];
+        let err = xor_fold(&[&a, &b], &XorBackend::NativeScalar).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<XorError>(),
+            Some(&XorError::UnequalLengths {
+                index: 1,
+                expect: 10,
+                got: 9
+            })
+        );
+    }
+
+    #[test]
+    fn xor_into_zero_extends_short_sources() {
+        let mut rng = Rng::new(42);
+        for (acc_len, src_len) in [(100usize, 100usize), (100, 37), (64, 0), (9, 9), (8, 3)] {
+            let mut acc = vec![0u8; acc_len];
+            rng.fill_bytes(&mut acc);
+            let mut src = vec![0u8; src_len];
+            rng.fill_bytes(&mut src);
+            // Reference: pad src to acc_len with zeros, XOR byte-wise.
+            let mut expect = acc.clone();
+            let mut wide = acc.clone();
+            let mut padded = src.clone();
+            padded.resize(acc_len, 0);
+            xor_into_scalar(&mut expect, &padded);
+            xor_into(&mut wide, &src);
+            assert_eq!(wide, expect, "acc {acc_len} src {src_len}");
+            // Misaligned accumulator view.
+            if acc_len > 3 && src_len > 3 {
+                let mut w2 = acc.clone();
+                let mut s2 = acc.clone();
+                xor_into(&mut w2[3..], &src[3..]);
+                xor_into_scalar(&mut s2[3..], &src[3..]);
+                assert_eq!(w2, s2);
+            }
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Command contexts flowing through the module pipeline.
 
+use crate::util::bufpool::{self, Bytes};
 use crate::util::bytes::Checkpoint;
 use std::sync::Arc;
 use std::time::Duration;
@@ -70,9 +71,11 @@ pub struct CkptContext {
     pub version: u64,
     /// Decoded checkpoint (regions + meta).
     pub ckpt: Arc<Checkpoint>,
-    /// VCKP-encoded container (what modules move around). Modules that
-    /// transform the payload (compression) swap this and set `encoding`.
-    pub encoded: Arc<Vec<u8>>,
+    /// VCKP-encoded container (what modules move around): a refcounted
+    /// slice captured once into a pooled buffer, shared zero-copy by every
+    /// level. Modules that transform the payload (compression, delta)
+    /// swap this and set `encoding`.
+    pub encoded: Bytes,
     /// Payload encoding tag stored in the version registry ("raw"/"zlib").
     pub encoding: &'static str,
     /// Completed stages, in pipeline order.
@@ -80,7 +83,9 @@ pub struct CkptContext {
 }
 
 impl CkptContext {
-    /// Wrap a freshly captured checkpoint into a pipeline command.
+    /// Wrap a freshly captured checkpoint into a pipeline command. The
+    /// VCKP container is encoded directly into a pooled buffer — this is
+    /// the single capture copy; everything downstream shares it.
     pub fn new(
         name: &str,
         rank: usize,
@@ -88,7 +93,33 @@ impl CkptContext {
         version: u64,
         ckpt: Checkpoint,
     ) -> Self {
-        let encoded = Arc::new(ckpt.encode());
+        let mut buf = bufpool::global().take(ckpt.encoded_size_hint());
+        ckpt.encode_into(&mut buf);
+        let encoded = buf.freeze();
+        CkptContext {
+            name: name.to_string(),
+            rank,
+            node,
+            version,
+            ckpt: Arc::new(ckpt),
+            encoded,
+            encoding: "raw",
+            results: Vec::new(),
+        }
+    }
+
+    /// Wrap an already-encoded container without re-encoding it — the
+    /// daemon IPC boundary hands over the exact bytes the client encoded
+    /// (CRC-validated by the `Checkpoint::decode` that produced `ckpt`,
+    /// and VCKP encoding is deterministic, so the two always agree).
+    pub fn from_encoded(
+        name: &str,
+        rank: usize,
+        node: usize,
+        version: u64,
+        ckpt: Checkpoint,
+        encoded: Bytes,
+    ) -> Self {
         CkptContext {
             name: name.to_string(),
             rank,

@@ -42,9 +42,16 @@ impl Recovery {
         &self.env.registry
     }
 
-    /// Validate a candidate against the recorded checksum (if any). The
-    /// VCKP encode is deterministic, so re-encoding the decoded checkpoint
-    /// reproduces the exact container bytes the checksum module digested.
+    /// Validate a candidate against the recorded checksum (if any).
+    ///
+    /// This is explicitly digest-**after**-decompress: the recorded digest
+    /// covers the canonical captured container (checksum runs at priority
+    /// 5, before compression/delta swap what the remote levels store), so
+    /// the candidate reaching here has already been zlib-inflated or
+    /// delta-reassembled and CRC-decoded. The VCKP encode is deterministic,
+    /// so re-encoding the decoded checkpoint reproduces the exact container
+    /// bytes the checksum module digested — corruption of a *compressed*
+    /// stored copy either fails the decode or fails this digest.
     fn validate(&self, name: &str, version: u64, rank: usize, ckpt: &Checkpoint) -> bool {
         let Some(info) = self.env.registry.info(name, version, rank) else {
             return true; // no record: nothing to compare against

@@ -83,6 +83,7 @@
 
 use crate::metrics::Metrics;
 use crate::storage::{StorageTier, TransferStat};
+use crate::util::bufpool::Bytes;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -443,18 +444,20 @@ impl PlacementEngine {
         }
     }
 
-    /// Route one flush: try tiers in policy order, failing over past
-    /// down/read-only/full/broken ones, and record the observed
-    /// [`TransferStat`] into the health state. Returns the id of the tier
-    /// that actually stored the object.
+    /// The routing walk shared by every put flavor: try tiers in policy
+    /// order, failing over past down/read-only/full/broken ones, and
+    /// record each observed [`TransferStat`] into the health state.
+    /// Returns the id of the tier that actually stored the object.
     ///
     /// A strict pass respects the circuit breaker and the capacity
     /// watermark; if nothing serves, a relaxed pass retries every
     /// reachable, writable tier with room — placement bookkeeping alone
     /// never fails a checkpoint. The error returned when *that* fails
     /// carries every attempted tier's failure.
-    pub fn put(&self, key: &str, data: &Arc<Vec<u8>>) -> Result<(String, TransferStat)> {
-        let bytes = data.len() as u64;
+    fn route<F>(&self, bytes: u64, store: F) -> Result<(String, TransferStat)>
+    where
+        F: Fn(&StorageTier) -> Result<TransferStat>,
+    {
         let order = self.ranked(bytes);
         let first_choice = order[0];
         let mut attempted = vec![false; self.tiers.len()];
@@ -468,7 +471,7 @@ impl PlacementEngine {
                     continue;
                 }
                 attempted[i] = true;
-                match self.tiers[i].put_shared(key, data) {
+                match store(&self.tiers[i]) {
                     Ok(stat) => {
                         self.observe_success(i, &stat);
                         if i != first_choice {
@@ -494,6 +497,27 @@ impl PlacementEngine {
             );
         }
         bail!("placement: every eligible tier failed: {}", errors.join("; "));
+    }
+
+    /// Route one shared-vector flush (see [`Self::route`] semantics).
+    pub fn put(&self, key: &str, data: &Arc<Vec<u8>>) -> Result<(String, TransferStat)> {
+        self.put_bytes(key, &Bytes::from_arc(Arc::clone(data)))
+    }
+
+    /// Route one zero-copy flush: the serving tier shares the refcounted
+    /// slice instead of copying it (memory backings) or streams it out
+    /// (directory backings).
+    pub fn put_bytes(&self, key: &str, data: &Bytes) -> Result<(String, TransferStat)> {
+        self.route(data.len() as u64, |t| t.put_bytes(key, data))
+    }
+
+    /// Route one scatter-gather flush: `parts` land as a single object on
+    /// the chosen tier without being concatenated first (the aggregation
+    /// drain path — header, segments and trailing CRC are written as the
+    /// pieces they already are).
+    pub fn put_gather(&self, key: &str, parts: &[&[u8]]) -> Result<(String, TransferStat)> {
+        let bytes: u64 = parts.iter().map(|p| p.len() as u64).sum();
+        self.route(bytes, |t| t.put_gather(key, parts))
     }
 
     /// Tier-agnostic lookup: probe the pool in configured order (down

@@ -16,9 +16,11 @@
 //! tests use pure modeling).
 
 use crate::storage::contention::BandwidthPool;
+use crate::util::bufpool::Bytes;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -154,8 +156,50 @@ impl TransferStat {
 }
 
 enum Backing {
-    Memory(Mutex<HashMap<String, Arc<Vec<u8>>>>),
+    Memory(Mutex<HashMap<String, Bytes>>),
     Dir(PathBuf),
+}
+
+/// Write `parts` to `path` as one file using vectored writes — the
+/// scatter-gather drain path: aggregation containers and multi-part
+/// objects land on disk without being concatenated in memory first.
+fn write_gather(path: &Path, parts: &[&[u8]]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let mut part_idx = 0usize;
+    let mut offset = 0usize;
+    while part_idx < parts.len() {
+        if offset >= parts[part_idx].len() {
+            part_idx += 1;
+            offset = 0;
+            continue;
+        }
+        let mut slices = Vec::with_capacity(parts.len() - part_idx);
+        slices.push(std::io::IoSlice::new(&parts[part_idx][offset..]));
+        for p in &parts[part_idx + 1..] {
+            slices.push(std::io::IoSlice::new(p));
+        }
+        let n = f.write_vectored(&slices)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "vectored write made no progress",
+            ));
+        }
+        // Advance (part_idx, offset) past the n bytes just written.
+        let mut adv = n;
+        while adv > 0 {
+            let rem = parts[part_idx].len() - offset;
+            if adv >= rem {
+                adv -= rem;
+                part_idx += 1;
+                offset = 0;
+            } else {
+                offset += adv;
+                adv = 0;
+            }
+        }
+    }
+    f.flush()
 }
 
 /// One storage level: performance model + backing store.
@@ -336,14 +380,8 @@ impl StorageTier {
         self.pool.hold()
     }
 
-    /// Store an object without copying when the backing is in-memory: the
-    /// tier keeps a reference to the shared buffer (§Perf: saves one full
-    /// memcpy per resilience level on the capture path; the VCKP container
-    /// is immutable once encoded, so sharing is safe). Directory backings
-    /// still write the bytes out.
-    pub fn put_shared(&self, key: &str, data: &Arc<Vec<u8>>) -> Result<TransferStat> {
-        self.check_writable()?;
-        let len = data.len() as u64;
+    /// Reserve `len` bytes of capacity (subtract on failure).
+    fn reserve(&self, len: u64) -> Result<()> {
         let prev = self.used.fetch_add(len, Ordering::SeqCst);
         if prev + len > self.spec.capacity {
             self.used.fetch_sub(len, Ordering::SeqCst);
@@ -355,69 +393,38 @@ impl StorageTier {
                 self.spec.capacity
             );
         }
-        let modeled = self.degraded(self.pool.write(len, self.spec.latency, self.spec.shared));
-        match &self.backing {
-            Backing::Memory(m) => {
-                let old = m
-                    .lock()
-                    .unwrap()
-                    .insert(key.to_string(), Arc::clone(data));
-                if let Some(old) = old {
-                    self.used.fetch_sub(old.len() as u64, Ordering::SeqCst);
-                }
-            }
-            Backing::Dir(root) => {
-                let path = root.join(sanitize_key(key));
-                if let Ok(meta) = std::fs::metadata(&path) {
-                    self.used.fetch_sub(meta.len(), Ordering::SeqCst);
-                }
-                let tmp = root.join(format!(".{}.tmp", sanitize_key(key)));
-                std::fs::write(&tmp, data.as_slice())?;
-                std::fs::rename(&tmp, &path)?;
-            }
-        }
-        self.puts.fetch_add(1, Ordering::Relaxed);
-        self.time_mode.apply(modeled);
-        Ok(TransferStat {
-            bytes: len,
-            modeled,
-        })
+        Ok(())
     }
 
-    /// Store an object. Fails with `TierFull` if capacity would be exceeded.
-    pub fn put(&self, key: &str, data: &[u8]) -> Result<TransferStat> {
+    /// Release a previously reserved/charged `len` bytes.
+    fn release(&self, len: u64) {
+        self.used.fetch_sub(len, Ordering::SeqCst);
+    }
+
+    /// Store a refcounted slice without copying it: the in-memory backing
+    /// keeps a reference to the shared buffer (§Perf: saves one full
+    /// memcpy per resilience level on the capture path; the container is
+    /// immutable once encoded, so sharing is safe). Directory backings
+    /// write the bytes out — a device transfer, not a payload copy.
+    pub fn put_bytes(&self, key: &str, data: &Bytes) -> Result<TransferStat> {
         self.check_writable()?;
         let len = data.len() as u64;
-        // Reserve capacity first (subtract on failure).
-        let prev = self.used.fetch_add(len, Ordering::SeqCst);
-        if prev + len > self.spec.capacity {
-            self.used.fetch_sub(len, Ordering::SeqCst);
-            bail!(
-                "TierFull: {} over capacity ({} + {} > {})",
-                self.spec.kind.name(),
-                prev,
-                len,
-                self.spec.capacity
-            );
-        }
+        self.reserve(len)?;
         let modeled = self.degraded(self.pool.write(len, self.spec.latency, self.spec.shared));
         match &self.backing {
             Backing::Memory(m) => {
-                let old = m
-                    .lock()
-                    .unwrap()
-                    .insert(key.to_string(), Arc::new(data.to_vec()));
+                let old = m.lock().unwrap().insert(key.to_string(), data.clone());
                 if let Some(old) = old {
-                    self.used.fetch_sub(old.len() as u64, Ordering::SeqCst);
+                    self.release(old.len() as u64);
                 }
             }
             Backing::Dir(root) => {
                 let path = root.join(sanitize_key(key));
                 if let Ok(meta) = std::fs::metadata(&path) {
-                    self.used.fetch_sub(meta.len(), Ordering::SeqCst);
+                    self.release(meta.len());
                 }
                 let tmp = root.join(format!(".{}.tmp", sanitize_key(key)));
-                std::fs::write(&tmp, data)?;
+                std::fs::write(&tmp, data.as_ref())?;
                 std::fs::rename(&tmp, &path)?; // atomic publish
             }
         }
@@ -429,22 +436,100 @@ impl StorageTier {
         })
     }
 
-    /// Fetch an object (None if missing or the tier is down).
+    /// Store an already-shared vector without copying (wrapped into a
+    /// [`Bytes`] view of the same allocation).
+    pub fn put_shared(&self, key: &str, data: &Arc<Vec<u8>>) -> Result<TransferStat> {
+        self.put_bytes(key, &Bytes::from_arc(Arc::clone(data)))
+    }
+
+    /// Store a borrowed slice. In-memory backings must copy it into the
+    /// map (a counted payload copy — callers holding a [`Bytes`] should
+    /// use [`Self::put_bytes`]); directory backings write it directly.
+    pub fn put(&self, key: &str, data: &[u8]) -> Result<TransferStat> {
+        match &self.backing {
+            Backing::Memory(_) => self.put_bytes(key, &Bytes::copy_from_slice(data)),
+            Backing::Dir(_) => self.put_gather(key, &[data]),
+        }
+    }
+
+    /// Scatter-gather store: persist `parts` as one object without
+    /// concatenating them first. Directory backings issue vectored writes
+    /// into the tmp file; in-memory backings gather once into the stored
+    /// block — that gather *is* the tier write (the analogue of a device
+    /// DMA gather), so it is not a payload copy.
+    pub fn put_gather(&self, key: &str, parts: &[&[u8]]) -> Result<TransferStat> {
+        self.check_writable()?;
+        let len: u64 = parts.iter().map(|p| p.len() as u64).sum();
+        self.reserve(len)?;
+        let modeled = self.degraded(self.pool.write(len, self.spec.latency, self.spec.shared));
+        match &self.backing {
+            Backing::Memory(m) => {
+                let mut buf = Vec::with_capacity(len as usize);
+                for p in parts {
+                    buf.extend_from_slice(p);
+                }
+                let old = m.lock().unwrap().insert(key.to_string(), Bytes::from(buf));
+                if let Some(old) = old {
+                    self.release(old.len() as u64);
+                }
+            }
+            Backing::Dir(root) => {
+                let path = root.join(sanitize_key(key));
+                if let Ok(meta) = std::fs::metadata(&path) {
+                    self.release(meta.len());
+                }
+                let tmp = root.join(format!(".{}.tmp", sanitize_key(key)));
+                write_gather(&tmp, parts)?;
+                std::fs::rename(&tmp, &path)?; // atomic publish
+            }
+        }
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.time_mode.apply(modeled);
+        Ok(TransferStat {
+            bytes: len,
+            modeled,
+        })
+    }
+
+    /// Fetch an object as a shared slice (None if missing or the tier is
+    /// down). In-memory backings hand back a reference to the stored
+    /// buffer — no copy; directory backings read the file once.
+    pub fn get_shared(&self, key: &str) -> Option<(Bytes, TransferStat)> {
+        if self.is_down() {
+            return None;
+        }
+        let data: Bytes = match &self.backing {
+            Backing::Memory(m) => m.lock().unwrap().get(key).cloned()?,
+            Backing::Dir(root) => Bytes::from(std::fs::read(root.join(sanitize_key(key))).ok()?),
+        };
+        let modeled =
+            self.degraded(self.pool.read(data.len() as u64, self.spec.latency, self.spec.shared));
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.time_mode.apply(modeled);
+        let stat = TransferStat {
+            bytes: data.len() as u64,
+            modeled,
+        };
+        Some((data, stat))
+    }
+
+    /// Fetch an object as an owned vector (None if missing or the tier is
+    /// down). Cloning out of the in-memory map is a counted payload copy —
+    /// restore paths that can work from the shared view should use
+    /// [`Self::get_shared`].
     pub fn get(&self, key: &str) -> Option<(Vec<u8>, TransferStat)> {
         if self.is_down() {
             return None;
         }
         let data: Vec<u8> = match &self.backing {
             Backing::Memory(m) => {
-                let map = m.lock().unwrap();
-                map.get(key).map(|a| a.as_ref().clone())?
+                let b = { m.lock().unwrap().get(key).cloned() }?;
+                b.to_vec() // counted: clone-out of the shared map
             }
-            Backing::Dir(root) => {
-                std::fs::read(root.join(sanitize_key(key))).ok()?
-            }
+            Backing::Dir(root) => std::fs::read(root.join(sanitize_key(key))).ok()?,
         };
-        let modeled = self
-            .degraded(self.pool.read(data.len() as u64, self.spec.latency, self.spec.shared));
+        let modeled =
+            self.degraded(self.pool.read(data.len() as u64, self.spec.latency, self.spec.shared));
         self.gets.fetch_add(1, Ordering::Relaxed);
         self.time_mode.apply(modeled);
         let stat = TransferStat {
@@ -662,6 +747,56 @@ mod tests {
         assert!((ratio - 4.0).abs() < 0.01, "ratio {ratio}");
         t.set_degraded(1.0);
         assert_eq!(t.degrade_factor(), 1.0);
+    }
+
+    #[test]
+    fn put_gather_matches_concatenation_dir() {
+        let dir = std::env::temp_dir().join(format!("veloc-gather-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = StorageTier::dir(spec(1 << 20, false), dir.clone(), TimeMode::Model).unwrap();
+        let a = vec![1u8; 7];
+        let b: Vec<u8> = Vec::new();
+        let c = vec![3u8; 4097];
+        let d = vec![4u8; 1];
+        let stat = t
+            .put_gather("obj", &[&a, &b, &c, &d])
+            .unwrap();
+        assert_eq!(stat.bytes, 7 + 4097 + 1);
+        let (read, _) = t.get("obj").unwrap();
+        let mut expect = a.clone();
+        expect.extend_from_slice(&c);
+        expect.extend_from_slice(&d);
+        assert_eq!(read, expect);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn put_gather_matches_concatenation_memory() {
+        let t = StorageTier::memory(spec(1 << 20, false), TimeMode::Model);
+        t.put_gather("obj", &[b"ab", b"", b"cde"]).unwrap();
+        let (read, _) = t.get("obj").unwrap();
+        assert_eq!(read, b"abcde");
+        assert_eq!(t.used_bytes(), 5);
+    }
+
+    #[test]
+    fn put_bytes_shares_and_get_shared_reads_back() {
+        use crate::util::bufpool;
+        let t = StorageTier::memory(spec(1 << 20, false), TimeMode::Model);
+        let payload = Bytes::from(vec![9u8; 1024]);
+        let before = bufpool::thread_payload_copies();
+        t.put_bytes("k", &payload).unwrap();
+        let (back, _) = t.get_shared("k").unwrap();
+        assert_eq!(back, payload);
+        assert_eq!(
+            bufpool::thread_payload_copies(),
+            before,
+            "put_bytes + get_shared must not copy the payload"
+        );
+        // The owned paths do copy — and are counted.
+        let _ = t.get("k").unwrap();
+        t.put("k2", &payload).unwrap();
+        assert_eq!(bufpool::thread_payload_copies(), before + 2);
     }
 
     #[test]

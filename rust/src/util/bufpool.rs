@@ -1,0 +1,474 @@
+//! Shared refcounted buffer pool — the zero-copy data plane substrate.
+//!
+//! Two pieces:
+//!
+//! - [`Bytes`]: an immutable, refcounted byte slice (backing allocation +
+//!   offset + length). Cloning and sub-slicing are O(1) pointer bumps, so
+//!   the pipeline, the erasure sharding, the aggregation segments and the
+//!   daemon IPC boundary can all reference one capture allocation instead
+//!   of `to_vec()`ing it per stage. A `Bytes` can wrap a plain `Vec`, an
+//!   existing `Arc<Vec<u8>>` (no copy), or a pooled block that returns to
+//!   its [`BufPool`] when the last reference drops.
+//! - [`BufPool`]: a size-classed free list of capture buffers. The capture
+//!   path encodes every checkpoint into a pooled block, so steady-state
+//!   checkpointing stops allocating fresh multi-megabyte buffers per
+//!   version (§Perf: the allocator round-trip and page-fault warmup were
+//!   visible next to the kernels once the memcpys were gone).
+//!
+//! ## Copy accounting
+//!
+//! The module also hosts the *payload copy counter*: a process-global
+//! count of payload memcpys performed at instrumented sites (Bytes owned
+//! extraction, memory-tier `put`/`get` copy paths). The zero-copy test
+//! asserts the counter stays flat across a full capture → level-1..4
+//! pipeline. Derived-data construction (parity, delta containers, zlib
+//! output) and real file I/O are *not* counted — they are new bytes or
+//! device transfers, not redundant copies of an existing payload.
+
+use std::collections::HashMap;
+use std::ops::{Bound, Deref, RangeBounds};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+static PAYLOAD_COPIES: AtomicU64 = AtomicU64::new(0);
+static PAYLOAD_COPY_BYTES: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TL_PAYLOAD_COPIES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of payload memcpys observed at instrumented sites so far,
+/// process-wide. The zero-copy gate test (single test in its own binary,
+/// so nothing else pumps the counter) asserts this stays flat across a
+/// full capture → level-1..4 pipeline run.
+pub fn payload_copies() -> u64 {
+    PAYLOAD_COPIES.load(Ordering::SeqCst)
+}
+
+/// Total bytes moved by those copies, process-wide.
+pub fn payload_copy_bytes() -> u64 {
+    PAYLOAD_COPY_BYTES.load(Ordering::SeqCst)
+}
+
+/// Payload memcpys performed *by the calling thread*. Unit tests assert
+/// on this one — it cannot be polluted by concurrently running tests.
+pub fn thread_payload_copies() -> u64 {
+    TL_PAYLOAD_COPIES.with(|c| c.get())
+}
+
+/// Record one payload memcpy of `bytes` bytes (instrumentation sites only).
+pub fn count_payload_copy(bytes: usize) {
+    PAYLOAD_COPIES.fetch_add(1, Ordering::SeqCst);
+    PAYLOAD_COPY_BYTES.fetch_add(bytes as u64, Ordering::SeqCst);
+    TL_PAYLOAD_COPIES.with(|c| c.set(c.get() + 1));
+}
+
+/// One backing allocation a [`Bytes`] can reference.
+enum Backing {
+    /// A plain owned vector (or a pooled block, when `pool` is set: the
+    /// block returns to its free list when the last `Bytes` drops).
+    Block {
+        buf: Vec<u8>,
+        pool: Option<Arc<PoolShared>>,
+    },
+    /// An existing shared vector, wrapped without copying.
+    Shared(Arc<Vec<u8>>),
+}
+
+impl Backing {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            Backing::Block { buf, .. } => buf.as_slice(),
+            Backing::Shared(a) => a.as_slice(),
+        }
+    }
+}
+
+impl Drop for Backing {
+    fn drop(&mut self) {
+        if let Backing::Block { buf, pool: Some(p) } = self {
+            p.recycle(std::mem::take(buf));
+        }
+    }
+}
+
+/// Immutable refcounted byte slice: backing + offset + length. Clone and
+/// [`Bytes::slice`] are O(1); the bytes themselves are never copied unless
+/// an owned extraction ([`Bytes::to_vec`] / [`Bytes::to_arc_vec`]) asks
+/// for one — and those are copy-counted.
+#[derive(Clone)]
+pub struct Bytes {
+    backing: Arc<Backing>,
+    off: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// The empty slice (no allocation).
+    pub fn new() -> Bytes {
+        Bytes::from(Vec::new())
+    }
+
+    /// Wrap an existing shared vector without copying it.
+    pub fn from_arc(data: Arc<Vec<u8>>) -> Bytes {
+        let len = data.len();
+        Bytes {
+            backing: Arc::new(Backing::Shared(data)),
+            off: 0,
+            len,
+        }
+    }
+
+    /// Owned copy of a borrowed slice. This is a real payload memcpy and
+    /// counts as one — callers that can avoid it should hold a `Bytes`.
+    pub fn copy_from_slice(data: &[u8]) -> Bytes {
+        count_payload_copy(data.len());
+        Bytes::from(data.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// O(1) sub-slice sharing the same backing allocation (keeps the whole
+    /// backing alive, like any refcounted slice). Panics when the range
+    /// exceeds the slice, matching `&data[range]`.
+    pub fn slice(&self, range: impl RangeBounds<usize>) -> Bytes {
+        let start = match range.start_bound() {
+            Bound::Included(&s) => s,
+            Bound::Excluded(&s) => s + 1,
+            Bound::Unbounded => 0,
+        };
+        let end = match range.end_bound() {
+            Bound::Included(&e) => e + 1,
+            Bound::Excluded(&e) => e,
+            Bound::Unbounded => self.len,
+        };
+        assert!(
+            start <= end && end <= self.len,
+            "Bytes::slice range {start}..{end} out of bounds (len {})",
+            self.len
+        );
+        Bytes {
+            backing: Arc::clone(&self.backing),
+            off: self.off + start,
+            len: end - start,
+        }
+    }
+
+    /// Owned `Vec` copy of the slice (copy-counted).
+    pub fn to_vec(&self) -> Vec<u8> {
+        count_payload_copy(self.len);
+        self.as_slice().to_vec()
+    }
+
+    /// Shared-vector view: free when the backing *is* a whole shared
+    /// vector already, otherwise an owned (copy-counted) extraction.
+    pub fn to_arc_vec(&self) -> Arc<Vec<u8>> {
+        if let Backing::Shared(a) = &*self.backing {
+            if self.off == 0 && self.len == a.len() {
+                return Arc::clone(a);
+            }
+        }
+        count_payload_copy(self.len);
+        Arc::new(self.as_slice().to_vec())
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        &self.backing.as_slice()[self.off..self.off + self.len]
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Self {
+        Bytes::new()
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    /// Take ownership of a vector without copying it.
+    fn from(buf: Vec<u8>) -> Bytes {
+        let len = buf.len();
+        Bytes {
+            backing: Arc::new(Backing::Block { buf, pool: None }),
+            off: 0,
+            len,
+        }
+    }
+}
+
+impl From<Arc<Vec<u8>>> for Bytes {
+    fn from(data: Arc<Vec<u8>>) -> Bytes {
+        Bytes::from_arc(data)
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({} bytes @ off {})", self.len, self.off)
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+/// Per-class free-list cap: unbounded retention would pin one peak's worth
+/// of buffers forever; a small cap keeps the steady-state hit rate without
+/// the memory tail.
+const MAX_PER_CLASS: usize = 8;
+/// Blocks above this capacity are dropped instead of pooled.
+const MAX_POOLED: usize = 256 << 20;
+
+struct PoolShared {
+    /// capacity-class (power of two) -> recycled blocks.
+    classes: Mutex<HashMap<usize, Vec<Vec<u8>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl PoolShared {
+    fn recycle(&self, mut buf: Vec<u8>) {
+        let class = buf.capacity().next_power_of_two();
+        if buf.capacity() == 0 || class > MAX_POOLED {
+            return;
+        }
+        buf.clear();
+        let mut classes = self.classes.lock().unwrap();
+        let list = classes.entry(class).or_default();
+        if list.len() < MAX_PER_CLASS {
+            list.push(buf);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Counters exposed for tests and diagnostics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// `take` calls served from a free list.
+    pub hits: u64,
+    /// `take` calls that had to allocate.
+    pub misses: u64,
+    /// Blocks returned to a free list so far.
+    pub recycled: u64,
+}
+
+/// Size-classed buffer pool (see the [module docs](self)).
+pub struct BufPool {
+    shared: Arc<PoolShared>,
+}
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        BufPool {
+            shared: Arc::new(PoolShared {
+                classes: Mutex::new(HashMap::new()),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Check out a writable block with at least `capacity_hint` capacity.
+    /// Freeze it into a [`Bytes`] when done; the block returns to this
+    /// pool when the last reference drops.
+    pub fn take(&self, capacity_hint: usize) -> PooledBuf {
+        let class = capacity_hint.max(1).next_power_of_two();
+        let reuse = {
+            let mut classes = self.shared.classes.lock().unwrap();
+            // Exact class first, then the next one up (a slightly larger
+            // block serves a smaller request fine).
+            let mut hit = classes.get_mut(&class).and_then(|l| l.pop());
+            if hit.is_none() {
+                hit = classes.get_mut(&(class * 2)).and_then(|l| l.pop());
+            }
+            hit
+        };
+        let buf = match reuse {
+            Some(b) => {
+                self.shared.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.shared.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(class)
+            }
+        };
+        PooledBuf {
+            buf,
+            pool: Arc::clone(&self.shared),
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.shared.hits.load(Ordering::Relaxed),
+            misses: self.shared.misses.load(Ordering::Relaxed),
+            recycled: self.shared.recycled.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        BufPool::new()
+    }
+}
+
+/// Process-wide pool used by the capture path.
+pub fn global() -> &'static BufPool {
+    static POOL: OnceLock<BufPool> = OnceLock::new();
+    POOL.get_or_init(BufPool::new)
+}
+
+/// A checked-out writable block. Deref to `Vec<u8>` for encoding into,
+/// then [`PooledBuf::freeze`] to publish it as immutable shared bytes.
+pub struct PooledBuf {
+    buf: Vec<u8>,
+    pool: Arc<PoolShared>,
+}
+
+impl PooledBuf {
+    /// Publish the written bytes as an immutable [`Bytes`]; the block
+    /// returns to the pool when the last reference drops.
+    pub fn freeze(self) -> Bytes {
+        let len = self.buf.len();
+        Bytes {
+            backing: Arc::new(Backing::Block {
+                buf: self.buf,
+                pool: Some(self.pool),
+            }),
+            off: 0,
+            len,
+        }
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = Vec<u8>;
+
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_and_slice_share_backing_without_copies() {
+        let before = thread_payload_copies();
+        let b = Bytes::from(vec![1u8, 2, 3, 4, 5, 6, 7, 8]);
+        let c = b.clone();
+        let s = b.slice(2..6);
+        assert_eq!(&*s, &[3, 4, 5, 6]);
+        assert_eq!(&*c, &*b);
+        let ss = s.slice(1..=2);
+        assert_eq!(&*ss, &[4, 5]);
+        assert_eq!(thread_payload_copies(), before, "no copy on clone/slice");
+    }
+
+    #[test]
+    fn arc_wrap_and_unwrap_are_free() {
+        let a = Arc::new(vec![9u8; 64]);
+        let before = thread_payload_copies();
+        let b = Bytes::from_arc(Arc::clone(&a));
+        assert_eq!(b.len(), 64);
+        let back = b.to_arc_vec();
+        assert!(Arc::ptr_eq(&a, &back), "whole-slice Shared view is free");
+        assert_eq!(thread_payload_copies(), before);
+        // A sub-slice extraction must copy (and count).
+        let sub = b.slice(1..3).to_arc_vec();
+        assert_eq!(*sub, vec![9u8, 9]);
+        assert_eq!(thread_payload_copies(), before + 1);
+    }
+
+    #[test]
+    fn owned_extractions_are_counted() {
+        let b = Bytes::from(vec![7u8; 100]);
+        let c0 = thread_payload_copies();
+        let v = b.to_vec();
+        assert_eq!(v.len(), 100);
+        assert_eq!(thread_payload_copies(), c0 + 1);
+        let _ = Bytes::copy_from_slice(&v);
+        assert_eq!(thread_payload_copies(), c0 + 2);
+    }
+
+    #[test]
+    fn pool_recycles_frozen_blocks() {
+        let pool = BufPool::new();
+        let mut b = pool.take(1000);
+        b.extend_from_slice(&[1u8; 1000]);
+        let ptr = b.as_ptr() as usize;
+        let frozen = b.freeze();
+        assert_eq!(frozen.len(), 1000);
+        drop(frozen); // last ref: block returns to the pool
+        assert_eq!(pool.stats().recycled, 1);
+        let b2 = pool.take(900);
+        assert_eq!(pool.stats().hits, 1, "same class served from free list");
+        assert_eq!(b2.as_ptr() as usize, ptr, "allocation actually reused");
+        assert!(b2.is_empty(), "recycled block comes back cleared");
+    }
+
+    #[test]
+    fn pool_survives_outstanding_refs() {
+        let pool = BufPool::new();
+        let mut b = pool.take(64);
+        b.extend_from_slice(b"hello world");
+        let frozen = b.freeze();
+        let s = frozen.slice(6..);
+        drop(frozen);
+        // The sub-slice still holds the backing: not recycled yet.
+        assert_eq!(pool.stats().recycled, 0);
+        assert_eq!(&*s, b"world");
+        drop(s);
+        assert_eq!(pool.stats().recycled, 1);
+    }
+
+    #[test]
+    fn empty_and_default() {
+        let b = Bytes::new();
+        assert!(b.is_empty());
+        assert_eq!(b.slice(..).len(), 0);
+        assert_eq!(Bytes::default(), b);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_out_of_bounds_panics() {
+        let b = Bytes::from(vec![1u8, 2, 3]);
+        let _ = b.slice(1..5);
+    }
+}

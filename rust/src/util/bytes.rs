@@ -70,8 +70,26 @@ impl Checkpoint {
         self.regions.iter().map(|r| r.data.len() as u64).sum()
     }
 
+    /// Container size `encode` will produce (for pool capacity hints).
+    pub fn encoded_size_hint(&self) -> usize {
+        let body_len: usize = self.regions.iter().map(|r| r.data.len()).sum();
+        // Magic + version + hlen + header estimate + body + CRC; the header
+        // estimate only has to be close — the pool rounds up to a class.
+        12 + 96 + self.regions.len() * 32 + self.meta.name.len() + body_len + 4
+    }
+
     /// Serialize into the VCKP container.
     pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_size_hint());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize into a caller-provided buffer (appends). This is how the
+    /// capture path encodes directly into a pooled block instead of a
+    /// fresh allocation per version.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let start = out.len();
         let regions: Vec<Json> = self
             .regions
             .iter()
@@ -88,9 +106,6 @@ impl Checkpoint {
             .set("regions", Json::Arr(regions))
             .to_string();
         let hbytes = header.as_bytes();
-        let body_len: usize = self.regions.iter().map(|r| r.data.len()).sum();
-        let mut out =
-            Vec::with_capacity(4 + 4 + 4 + hbytes.len() + body_len + 4);
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
         out.extend_from_slice(&(hbytes.len() as u32).to_le_bytes());
@@ -98,9 +113,8 @@ impl Checkpoint {
         for r in &self.regions {
             out.extend_from_slice(&r.data);
         }
-        let crc = crc32fast::hash(&out);
+        let crc = crc32fast::hash(&out[start..]);
         out.extend_from_slice(&crc.to_le_bytes());
-        out
     }
 
     /// Parse and CRC-validate a VCKP container.

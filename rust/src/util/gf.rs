@@ -1,0 +1,332 @@
+//! GF(2^8) arithmetic and Reed-Solomon coding (poly 0x11d), with a
+//! word-parallel slice-multiply generalizing the `xor_fold_wide`
+//! `align_to::<u64>` trick to Galois multiplication.
+//!
+//! The pipeline's level-3 module ships single-parity XOR (RAID-5); this
+//! module supplies the general m-parity math the roadmap's multi-failure
+//! erasure needs, and its wide kernel is one of the gated bench baselines.
+//!
+//! The wide multiply works on eight field elements packed in a `u64`:
+//! doubling all eight lanes at once is
+//! `hi = t & 0x8080..; ((t ^ hi) << 1) ^ ((hi >> 7) * 0x1d)` — the
+//! carry-conditional reduction done branch-free per lane — and multiplying
+//! by an arbitrary constant iterates the set bits of the constant over a
+//! running doubled value (at most 8 doublings per 8 bytes).
+
+use std::sync::OnceLock;
+
+/// The field polynomial: x^8 + x^4 + x^3 + x^2 + 1.
+pub const GF_POLY: u16 = 0x11d;
+
+struct Tables {
+    log: [u8; 256],
+    exp: [u8; 512],
+}
+
+fn tables() -> &'static Tables {
+    static T: OnceLock<Tables> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = Tables {
+            log: [0; 256],
+            exp: [0; 512],
+        };
+        let mut x = 1u16;
+        for i in 0..255 {
+            t.exp[i] = x as u8;
+            t.exp[i + 255] = x as u8; // duplicated so mul skips the % 255
+            t.log[x as usize] = i as u8;
+            x <<= 1;
+            if x & 0x100 != 0 {
+                x ^= GF_POLY;
+            }
+        }
+        t.exp[510] = t.exp[255];
+        t.exp[511] = t.exp[256];
+        t
+    })
+}
+
+/// Multiply two field elements (log/exp tables).
+#[inline]
+pub fn gf_mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[t.log[a as usize] as usize + t.log[b as usize] as usize]
+}
+
+/// Multiplicative inverse; panics on zero (no inverse exists).
+pub fn gf_inv(a: u8) -> u8 {
+    assert!(a != 0, "gf_inv(0)");
+    let t = tables();
+    t.exp[255 - t.log[a as usize] as usize]
+}
+
+/// `x^p` for generator x = 2.
+pub fn gf_exp(p: usize) -> u8 {
+    tables().exp[p % 255]
+}
+
+/// `acc[i] ^= c * src[i]` — byte-at-a-time baseline the bench gates against.
+pub fn gf_mul_slice_scalar(acc: &mut [u8], src: &[u8], c: u8) {
+    assert_eq!(acc.len(), src.len());
+    if c == 0 {
+        return;
+    }
+    if c == 1 {
+        for (a, &s) in acc.iter_mut().zip(src) {
+            *a ^= s;
+        }
+        return;
+    }
+    let t = tables();
+    let lc = t.log[c as usize] as usize;
+    for (a, &s) in acc.iter_mut().zip(src) {
+        if s != 0 {
+            *a ^= t.exp[lc + t.log[s as usize] as usize];
+        }
+    }
+}
+
+/// Double all eight packed lanes: per-byte `t*2` in GF(2^8).
+#[inline]
+fn gf2_wide(t: u64) -> u64 {
+    let hi = t & 0x8080_8080_8080_8080;
+    ((t ^ hi) << 1) ^ ((hi >> 7).wrapping_mul(0x1d))
+}
+
+/// Multiply eight packed lanes by constant `c` (iterate c's set bits over
+/// a running doubled value — shift-and-add in the field).
+#[inline]
+fn gf_mul_wide_word(mut t: u64, mut c: u8) -> u64 {
+    let mut out = 0u64;
+    while c != 0 {
+        if c & 1 != 0 {
+            out ^= t;
+        }
+        c >>= 1;
+        if c != 0 {
+            t = gf2_wide(t);
+        }
+    }
+    out
+}
+
+/// `acc[i] ^= c * src[i]`, eight lanes per step. Bit-identical to
+/// [`gf_mul_slice_scalar`] (property-tested); handles unaligned heads and
+/// tails byte-wise like `xor_fold_wide`.
+pub fn gf_mul_slice_wide(acc: &mut [u8], src: &[u8], c: u8) {
+    assert_eq!(acc.len(), src.len());
+    if c == 0 {
+        return;
+    }
+    // SAFETY: u64 has no invalid bit patterns and align_to yields
+    // correctly aligned, in-bounds subslices; head/tail are handled
+    // byte-wise below.
+    let (head, body, tail) = unsafe { acc.align_to_mut::<u64>() };
+    let h = head.len();
+    gf_mul_slice_scalar(head, &src[..h], c);
+    let body_bytes = body.len() * 8;
+    for (i, w) in body.iter_mut().enumerate() {
+        let s = u64::from_ne_bytes(src[h + i * 8..h + i * 8 + 8].try_into().unwrap());
+        *w ^= gf_mul_wide_word(s, c);
+    }
+    gf_mul_slice_scalar(tail, &src[h + body_bytes..], c);
+}
+
+/// Encode `m` parity shards over `k` data shards (all `shard_len` long)
+/// with the Vandermonde matrix `coef[p][d] = (d+1)^p`: parity row 0 is the
+/// plain XOR the level-3 module ships, higher rows weight each data shard
+/// by a distinct power so any `m` erasures stay solvable.
+pub fn rs_encode(data: &[&[u8]], m: usize) -> Vec<Vec<u8>> {
+    assert!(!data.is_empty(), "rs_encode: no data shards");
+    let len = data[0].len();
+    assert!(
+        data.iter().all(|d| d.len() == len),
+        "rs_encode: unequal shard lengths"
+    );
+    let mut parities = vec![vec![0u8; len]; m];
+    for (p, parity) in parities.iter_mut().enumerate() {
+        for (d, shard) in data.iter().enumerate() {
+            let c = coef(p, d);
+            gf_mul_slice_wide(parity, shard, c);
+        }
+    }
+    parities
+}
+
+/// `coef(p, d) = (d+1)^p` — data shard d's weight in parity row p.
+fn coef(p: usize, d: usize) -> u8 {
+    let mut c = 1u8;
+    for _ in 0..p {
+        c = gf_mul(c, (d + 1) as u8);
+    }
+    c
+}
+
+/// Reconstruct the missing data shards in place. `shards[d]` is `Some`
+/// for survivors; `parities[p]` likewise. Returns `None` when more shards
+/// are missing than parities survive, or when the surviving equation
+/// system is singular (Vandermonde parities are MDS for m <= 2, which is
+/// all the pipeline configures; beyond that solvability is checked, not
+/// assumed).
+pub fn rs_reconstruct(
+    shards: &mut [Option<Vec<u8>>],
+    parities: &[Option<Vec<u8>>],
+    shard_len: usize,
+) -> Option<()> {
+    let missing: Vec<usize> = (0..shards.len()).filter(|&i| shards[i].is_none()).collect();
+    if missing.is_empty() {
+        return Some(());
+    }
+    let avail: Vec<usize> = (0..parities.len())
+        .filter(|&p| parities[p].is_some())
+        .collect();
+    if missing.len() > avail.len() {
+        return None;
+    }
+    let n = missing.len();
+    // Rows: one surviving parity equation each, knowns folded into rhs:
+    //   sum_j coef(p, missing[j]) * x_j = parity_p ^ sum_{known d} coef(p,d)*shard_d
+    let mut mat = vec![vec![0u8; n]; n];
+    let mut rhs: Vec<Vec<u8>> = Vec::with_capacity(n);
+    for (row, &p) in avail.iter().take(n).enumerate() {
+        for (col, &d) in missing.iter().enumerate() {
+            mat[row][col] = coef(p, d);
+        }
+        let mut r = parities[p].clone().unwrap();
+        r.resize(shard_len, 0);
+        for (d, s) in shards.iter().enumerate() {
+            if let Some(s) = s {
+                // Reconstruction is cold: clone-and-pad survivors rather
+                // than juggling borrowed padded views.
+                let mut src = s.clone();
+                src.resize(shard_len, 0);
+                gf_mul_slice_wide(&mut r, &src, coef(p, d));
+            }
+        }
+        rhs.push(r);
+    }
+    // Gaussian elimination over GF(2^8).
+    for col in 0..n {
+        let pivot = (col..n).find(|&r| mat[r][col] != 0)?;
+        mat.swap(col, pivot);
+        rhs.swap(col, pivot);
+        let inv = gf_inv(mat[col][col]);
+        for x in mat[col][col..].iter_mut() {
+            *x = gf_mul(*x, inv);
+        }
+        let (pr, prhs) = (mat[col].clone(), rhs[col].clone());
+        for r in 0..n {
+            if r != col && mat[r][col] != 0 {
+                let f = mat[r][col];
+                for (x, &pc) in mat[r][col..].iter_mut().zip(&pr[col..]) {
+                    *x ^= gf_mul(f, pc);
+                }
+                let row = &mut rhs[r];
+                gf_mul_slice_wide(row, &prhs, f);
+            }
+        }
+    }
+    for (j, &d) in missing.iter().enumerate() {
+        shards[d] = Some(std::mem::take(&mut rhs[j]));
+    }
+    Some(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(n: usize, seed: u64) -> Vec<u8> {
+        let mut s = seed.wrapping_add(0x1234_5678_9ABC_DEF0) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                (s.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 56) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn field_axioms() {
+        assert_eq!(gf_mul(0, 7), 0);
+        assert_eq!(gf_mul(1, 7), 7);
+        for a in 1..=255u8 {
+            assert_eq!(gf_mul(a, gf_inv(a)), 1, "a={a}");
+            for b in 1..=10u8 {
+                assert_eq!(gf_mul(a, b), gf_mul(b, a));
+            }
+        }
+        // 0x1d reduction sanity: 0x80 * 2 = 0x1d.
+        assert_eq!(gf_mul(0x80, 2), 0x1d);
+    }
+
+    #[test]
+    fn wide_mul_matches_scalar() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 63, 64, 65, 1000] {
+            for c in [0u8, 1, 2, 3, 0x1d, 0x80, 0xff] {
+                let src = fill(n, n as u64 + c as u64);
+                let mut a1 = fill(n, 999);
+                let mut a2 = a1.clone();
+                gf_mul_slice_scalar(&mut a1, &src, c);
+                gf_mul_slice_wide(&mut a2, &src, c);
+                assert_eq!(a1, a2, "n={n} c={c}");
+                // Misaligned destination view.
+                if n > 3 {
+                    let mut b1 = fill(n, 7);
+                    let mut b2 = b1.clone();
+                    gf_mul_slice_scalar(&mut b1[3..], &src[3..], c);
+                    gf_mul_slice_wide(&mut b2[3..], &src[3..], c);
+                    assert_eq!(b1, b2, "misaligned n={n} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rs_roundtrip_all_two_erasure_patterns() {
+        let k = 5;
+        let m = 2;
+        let len = 1031; // odd on purpose
+        let shards: Vec<Vec<u8>> = (0..k).map(|i| fill(len, i as u64)).collect();
+        let refs: Vec<&[u8]> = shards.iter().map(|s| s.as_slice()).collect();
+        let parities = rs_encode(&refs, m);
+        for lose_a in 0..k {
+            for lose_b in lose_a + 1..k {
+                let mut have: Vec<Option<Vec<u8>>> =
+                    shards.iter().cloned().map(Some).collect();
+                have[lose_a] = None;
+                have[lose_b] = None;
+                let pav: Vec<Option<Vec<u8>>> = parities.iter().cloned().map(Some).collect();
+                rs_reconstruct(&mut have, &pav, len).expect("solvable");
+                assert_eq!(have[lose_a].as_ref().unwrap(), &shards[lose_a]);
+                assert_eq!(have[lose_b].as_ref().unwrap(), &shards[lose_b]);
+            }
+        }
+    }
+
+    #[test]
+    fn rs_parity_row_zero_is_plain_xor() {
+        let a = fill(100, 1);
+        let b = fill(100, 2);
+        let parities = rs_encode(&[&a, &b], 1);
+        let xor: Vec<u8> = a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+        assert_eq!(parities[0], xor);
+    }
+
+    #[test]
+    fn rs_too_many_erasures_unsolvable() {
+        let shards: Vec<Vec<u8>> = (0..4).map(|i| fill(64, i as u64)).collect();
+        let refs: Vec<&[u8]> = shards.iter().map(|s| s.as_slice()).collect();
+        let parities = rs_encode(&refs, 1);
+        let mut have: Vec<Option<Vec<u8>>> = shards.iter().cloned().map(Some).collect();
+        have[0] = None;
+        have[2] = None;
+        let pav: Vec<Option<Vec<u8>>> = parities.into_iter().map(Some).collect();
+        assert!(rs_reconstruct(&mut have, &pav, 64).is_none());
+    }
+}

@@ -1,0 +1,245 @@
+//! Word-parallel data-plane kernels: CRC32 (slice-by-16) and the
+//! lane-structured 64-bit payload hash behind delta fingerprints.
+//!
+//! Every fast kernel here has a bit-identical scalar reference next to it
+//! (`*_scalar`), property-tested across odd lengths, misaligned offsets
+//! and empty/1-byte inputs. The fast paths use no intrinsics — just table
+//! slicing and independent dependency chains the compiler turns into wide
+//! loads and ILP — so they are portable and Miri-clean.
+
+/// CRC-32 (IEEE, reflected, poly 0xEDB88320) — the same polynomial as
+/// `crc32fast::hash`, verified by property test.
+pub const CRC32_POLY: u32 = 0xEDB8_8320;
+
+/// How many bytes each slice-by-16 step consumes.
+const CRC_STRIDE: usize = 16;
+
+fn crc_tables() -> &'static [[u32; 256]; CRC_STRIDE] {
+    use std::sync::OnceLock;
+    static TABLES: OnceLock<Box<[[u32; 256]; CRC_STRIDE]>> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut t = Box::new([[0u32; 256]; CRC_STRIDE]);
+        for i in 0..256u32 {
+            let mut c = i;
+            for _ in 0..8 {
+                c = if c & 1 != 0 {
+                    (c >> 1) ^ CRC32_POLY
+                } else {
+                    c >> 1
+                };
+            }
+            t[0][i as usize] = c;
+        }
+        for i in 0..256 {
+            let mut c = t[0][i];
+            for k in 1..CRC_STRIDE {
+                c = t[0][(c & 0xff) as usize] ^ (c >> 8);
+                t[k][i] = c;
+            }
+        }
+        t
+    })
+}
+
+/// Byte-serial table CRC32 — the scalar baseline the benches gate against.
+pub fn crc32_scalar(data: &[u8]) -> u32 {
+    let t = &crc_tables()[0];
+    let mut c = !0u32;
+    for &b in data {
+        c = t[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Slice-by-16 CRC32: one table lookup per byte but sixteen independent
+/// lookups per step feeding two 64-bit loads, so the serial dependency is
+/// one XOR-fold per 16 bytes instead of per byte.
+pub fn crc32_wide(data: &[u8]) -> u32 {
+    let t = crc_tables();
+    let mut c = !0u32;
+    let mut chunks = data.chunks_exact(CRC_STRIDE);
+    for chunk in &mut chunks {
+        let lo = u64::from_le_bytes(chunk[0..8].try_into().unwrap()) ^ c as u64;
+        let hi = u64::from_le_bytes(chunk[8..16].try_into().unwrap());
+        c = t[15][(lo & 0xff) as usize]
+            ^ t[14][((lo >> 8) & 0xff) as usize]
+            ^ t[13][((lo >> 16) & 0xff) as usize]
+            ^ t[12][((lo >> 24) & 0xff) as usize]
+            ^ t[11][((lo >> 32) & 0xff) as usize]
+            ^ t[10][((lo >> 40) & 0xff) as usize]
+            ^ t[9][((lo >> 48) & 0xff) as usize]
+            ^ t[8][((lo >> 56) & 0xff) as usize]
+            ^ t[7][(hi & 0xff) as usize]
+            ^ t[6][((hi >> 8) & 0xff) as usize]
+            ^ t[5][((hi >> 16) & 0xff) as usize]
+            ^ t[4][((hi >> 24) & 0xff) as usize]
+            ^ t[3][((hi >> 32) & 0xff) as usize]
+            ^ t[2][((hi >> 40) & 0xff) as usize]
+            ^ t[1][((hi >> 48) & 0xff) as usize]
+            ^ t[0][((hi >> 56) & 0xff) as usize];
+    }
+    let t0 = &t[0];
+    for &b in chunks.remainder() {
+        c = t0[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Lane seeds for [`fp_hash64`]: four distinct odd 64-bit constants
+/// (splitmix64 outputs of 1..=4) so the lanes never collapse together.
+const FP_LANE_SEEDS: [u64; 4] = [
+    0x910A_2DEC_8902_5CC1,
+    0xBEEB_D1A8_9EA5_3222,
+    0xF7FB_1E68_E991_BBD5,
+    0x7055_E409_3D4F_70F0,
+];
+const FP_MUL: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[inline]
+fn fp_mix(mut x: u64) -> u64 {
+    // splitmix64 finalizer — full avalanche.
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[inline]
+fn fp_lane_step(lane: u64, word: u64) -> u64 {
+    (lane ^ word).wrapping_mul(FP_MUL).rotate_left(29)
+}
+
+/// Scalar reference for the payload fingerprint hash: four logical lanes
+/// fed 8-byte little-endian words round-robin, tail bytes zero-padded into
+/// a final word tagged with the tail length, lanes cross-mixed at the end.
+/// The definition is lane-structured on purpose — see [`fp_hash64`].
+pub fn fp_hash64_scalar(data: &[u8]) -> u64 {
+    let mut lanes = FP_LANE_SEEDS;
+    let mut word_idx = 0usize;
+    let mut chunks = data.chunks_exact(8);
+    for chunk in &mut chunks {
+        let w = u64::from_le_bytes(chunk.try_into().unwrap());
+        lanes[word_idx & 3] = fp_lane_step(lanes[word_idx & 3], w);
+        word_idx += 1;
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..rem.len()].copy_from_slice(rem);
+        let w = u64::from_le_bytes(tail) ^ ((rem.len() as u64) << 56);
+        lanes[word_idx & 3] = fp_lane_step(lanes[word_idx & 3], w);
+    }
+    let mut h = data.len() as u64;
+    for (i, l) in lanes.iter().enumerate() {
+        h = h.wrapping_mul(FP_MUL) ^ fp_mix(l.rotate_left(i as u32 * 7));
+    }
+    fp_mix(h)
+}
+
+/// Fast payload fingerprint hash, bit-identical to [`fp_hash64_scalar`].
+/// Processes 32 bytes per step as four independent multiply chains — the
+/// ILP the byte-serial FNV loop it replaced could never expose (FNV's
+/// next-state depends on every prior byte; four lanes only depend on
+/// every fourth word).
+pub fn fp_hash64(data: &[u8]) -> u64 {
+    let mut lanes = FP_LANE_SEEDS;
+    let mut chunks32 = data.chunks_exact(32);
+    for c in &mut chunks32 {
+        lanes[0] = fp_lane_step(lanes[0], u64::from_le_bytes(c[0..8].try_into().unwrap()));
+        lanes[1] = fp_lane_step(lanes[1], u64::from_le_bytes(c[8..16].try_into().unwrap()));
+        lanes[2] = fp_lane_step(lanes[2], u64::from_le_bytes(c[16..24].try_into().unwrap()));
+        lanes[3] = fp_lane_step(lanes[3], u64::from_le_bytes(c[24..32].try_into().unwrap()));
+    }
+    let rem = chunks32.remainder();
+    let mut word_idx = (data.len() / 32) * 4;
+    let mut tail_words = rem.chunks_exact(8);
+    for chunk in &mut tail_words {
+        let w = u64::from_le_bytes(chunk.try_into().unwrap());
+        lanes[word_idx & 3] = fp_lane_step(lanes[word_idx & 3], w);
+        word_idx += 1;
+    }
+    let last = tail_words.remainder();
+    if !last.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..last.len()].copy_from_slice(last);
+        let w = u64::from_le_bytes(tail) ^ ((last.len() as u64) << 56);
+        lanes[word_idx & 3] = fp_lane_step(lanes[word_idx & 3], w);
+    }
+    let mut h = data.len() as u64;
+    for (i, l) in lanes.iter().enumerate() {
+        h = h.wrapping_mul(FP_MUL) ^ fp_mix(l.rotate_left(i as u32 * 7));
+    }
+    fp_mix(h)
+}
+
+/// Byte-serial FNV-1a64 — the *legacy* fingerprint hash, kept only as the
+/// scalar baseline the delta bench gates `fp_hash64` against (and for
+/// decoding nothing: fingerprints are self-consistent per repo version).
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lens() -> Vec<usize> {
+        vec![0, 1, 2, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 100, 1000, 4097]
+    }
+
+    fn fill(n: usize, seed: u64) -> Vec<u8> {
+        let mut s = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                (s.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 56) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn crc_wide_matches_scalar_and_crc32fast() {
+        for (i, n) in lens().into_iter().enumerate() {
+            let data = fill(n, i as u64);
+            let s = crc32_scalar(&data);
+            let w = crc32_wide(&data);
+            assert_eq!(s, w, "len {n}");
+            assert_eq!(w, crc32fast::hash(&data), "len {n} vs crc32fast");
+            // Misaligned view of the same data.
+            if n > 3 {
+                assert_eq!(crc32_scalar(&data[3..]), crc32_wide(&data[3..]));
+            }
+        }
+    }
+
+    #[test]
+    fn fp_hash_matches_scalar_reference() {
+        for (i, n) in lens().into_iter().enumerate() {
+            let data = fill(n, 100 + i as u64);
+            assert_eq!(fp_hash64(&data), fp_hash64_scalar(&data), "len {n}");
+            if n > 5 {
+                assert_eq!(
+                    fp_hash64(&data[5..]),
+                    fp_hash64_scalar(&data[5..]),
+                    "misaligned len {n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp_hash_separates_lengths_and_contents() {
+        // Zero-padded tails must not collide with actual zero bytes.
+        assert_ne!(fp_hash64(b"abc"), fp_hash64(b"abc\0"));
+        assert_ne!(fp_hash64(b""), fp_hash64(b"\0"));
+        assert_ne!(fp_hash64(b"abcdefgh"), fp_hash64(b"abcdefgi"));
+    }
+}

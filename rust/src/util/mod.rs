@@ -5,9 +5,12 @@
 //! criterion — and because determinism and priority semantics are part of
 //! the system's contract (see DESIGN.md §System inventory).
 
+pub mod bufpool;
 pub mod bytes;
 pub mod cli;
+pub mod gf;
 pub mod json;
+pub mod kernels;
 pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -159,7 +159,9 @@ fn model_speedup_at_64_ranks_1mib_is_at_least_2x() {
     );
     let mut aggregated = Duration::ZERO;
     for r in 0..ranks {
-        let stat = agg.submit("app", 1, r, "raw", Arc::clone(&data)).unwrap();
+        let stat = agg
+        .submit("app", 1, r, "raw", veloc::util::bufpool::Bytes::from_arc(Arc::clone(&data)))
+        .unwrap();
         aggregated += stat.modeled;
     }
     aggregated += agg.flush_all().unwrap().modeled;
@@ -195,7 +197,7 @@ fn age_threshold_drains_stale_group() {
         None,
     );
     // Half a group: below the size threshold, no barrier.
-    agg.submit("app", 1, 0, "raw", Arc::new(vec![1u8; 1024]))
+    agg.submit("app", 1, 0, "raw", veloc::util::bufpool::Bytes::from(vec![1u8; 1024]))
         .unwrap();
     assert_eq!(agg.report().containers, 0);
     std::thread::sleep(Duration::from_millis(30));

@@ -280,3 +280,51 @@ fn mem_unprotect_removes_region_from_next_checkpoint() {
         "dropped region must not be captured"
     );
 }
+
+#[test]
+fn corrupted_compressed_pfs_copy_is_rejected() {
+    // Digest-after-decompress regression: the recorded digest covers the
+    // canonical captured container, so damage to the *compressed* PFS
+    // object must surface as a failed decode or a failed digest — never as
+    // silently-served wrong bytes.
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    cfg.stack.with_partner = false;
+    cfg.stack.with_compression = true;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let client = rt.client(0);
+    client.mem_protect(0, vec![42u8; 64 << 10]); // highly compressible
+    client.checkpoint("comp", 1).unwrap();
+    client.checkpoint_wait_done("comp", 1).unwrap();
+    rt.drain();
+
+    let key = "pfs.comp.r0.v1";
+    let (mut obj, _) = rt.env().fabric.pfs().get(key).expect("PFS copy");
+    assert!(
+        obj.len() < 64 << 10,
+        "PFS copy must be the compressed container ({} bytes)",
+        obj.len()
+    );
+    let mid = obj.len() / 2;
+    for b in &mut obj[mid..mid + 8] {
+        *b ^= 0xFF;
+    }
+    rt.env().fabric.pfs().put(key, &obj).unwrap();
+
+    // Kill the local tiers: the damaged PFS object is the only copy left.
+    for node in 0..2 {
+        rt.env().fabric.fail_node(node);
+    }
+    let h = client.mem_protect(0, Vec::new());
+    match client.restart("comp") {
+        Ok(Some(info)) => panic!(
+            "corrupted compressed copy served as v{} from level {}",
+            info.version, info.level
+        ),
+        Ok(None) | Err(_) => {}
+    }
+    assert!(
+        h.lock().unwrap().is_empty(),
+        "no bytes may be installed from a corrupted copy"
+    );
+}

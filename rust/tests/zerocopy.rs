@@ -1,0 +1,78 @@
+//! The zero-copy gate: one full capture → level-1..4 pipeline wave must
+//! perform ZERO payload memcpys at the instrumented sites (`Bytes`
+//! clone-outs, borrowed-slice tier puts, owned tier gets).
+//!
+//! This is deliberately a single `#[test]` in its own test binary: the
+//! copy counter is process-global, and libtest runs tests in one process —
+//! a sibling test exercising the counted paths concurrently would make
+//! the zero assertion meaningless.
+
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::util::bufpool::{payload_copies, Bytes};
+
+#[test]
+fn full_pipeline_wave_performs_zero_payload_copies() {
+    // Default stack: checksum < local < partner < erasure < transfer <
+    // version — every resilience level the data plane serves (compression
+    // and delta produce *derived* containers, which are new data, not
+    // copies; they are covered by their own tests).
+    let nodes = 4usize;
+    let cfg = VelocConfig::default().with_nodes(nodes, 1);
+    assert_eq!(cfg.stack.erasure_group, 4, "erasure must be in the stack");
+    assert!(cfg.stack.with_partner && cfg.stack.with_transfer);
+    let rt = VelocRuntime::new(cfg).unwrap();
+
+    let clients: Vec<_> = (0..nodes).map(|r| rt.client(r)).collect();
+    for (r, c) in clients.iter().enumerate() {
+        c.mem_protect(0, vec![r as u8 ^ 0x5A; 256 << 10]);
+    }
+
+    let before = payload_copies();
+    // Submit the whole wave first: erasure waits for the group members'
+    // level-1 copies, so the four pipelines must be in flight together.
+    for c in &clients {
+        c.checkpoint("zc", 1).unwrap();
+    }
+    for c in &clients {
+        c.checkpoint_wait_done("zc", 1).unwrap();
+    }
+    rt.drain();
+    let copies = payload_copies() - before;
+
+    // The wave really ran end to end: every rank's PFS flush landed and
+    // every node holds its local copy.
+    for r in 0..nodes {
+        assert!(
+            rt.env().fabric.pfs().exists(&format!("pfs.zc.r{r}.v1")),
+            "rank {r} PFS copy missing"
+        );
+        assert!(
+            rt.env()
+                .fabric
+                .local_tiers(r)
+                .iter()
+                .any(|t| t.exists(&format!("local.zc.r{r}.v1"))),
+            "rank {r} local copy missing"
+        );
+    }
+    assert_eq!(
+        copies, 0,
+        "capture → local/partner/erasure/PFS must not memcpy the payload \
+         ({copies} counted copies)"
+    );
+
+    // Prove the gate can fail: the counter must be live through both the
+    // Bytes layer and the memory-tier borrowed-slice/owned-get paths.
+    let before = payload_copies();
+    let b = Bytes::copy_from_slice(&[7u8; 1024]); // counted copy-in
+    let v = b.to_vec(); // counted clone-out
+    assert_eq!(v.len(), 1024);
+    rt.env().fabric.pfs().put("probe", &v).unwrap(); // counted (memory tier)
+    let (back, _) = rt.env().fabric.pfs().get("probe").unwrap(); // counted
+    assert_eq!(back, v);
+    assert_eq!(
+        payload_copies() - before,
+        4,
+        "copy counter must observe all four instrumented copies"
+    );
+}
