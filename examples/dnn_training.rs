@@ -97,7 +97,9 @@ fn main() -> Result<()> {
             // Which level served it?
             let m = rt.metrics();
             let lvl = (1..=5)
-                .find(|l| m.counter(&format!("restart.level{l}")) > 0)
+                .find(|&l| {
+                    m.counter_with("restart.by_level", &[("level", level_name(l as u8))]) > 0
+                })
                 .unwrap_or(0);
             println!(
                 "   restarted from v{restored} (level {lvl} = {}), resuming at step {}",

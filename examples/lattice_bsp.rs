@@ -92,7 +92,7 @@ fn main() -> Result<()> {
     println!("all ranks restored to superstep {}", restored[0]);
     assert!(restored.iter().all(|&s| s == restored[0]), "consistent cut");
     for l in 1..=5u8 {
-        let c = m.counter(&format!("restart.level{l}"));
+        let c = m.counter_with("restart.by_level", &[("level", level_name(l))]);
         if c > 0 {
             println!("  {:>8} restores from level {} ({})", c, l, level_name(l));
         }

@@ -6,7 +6,9 @@
 //! bandwidth — the gap that motivates multi-level checkpointing.
 //!
 //! E1c gates the CRC32 kernel: slice-by-16 [`crc32_wide`] must beat the
-//! byte-serial table baseline by >= 3x, and the run emits
+//! byte-serial table baseline by >= 3x. E1d gates the observability
+//! plane: the same collective wave with span tracing enabled must cost
+//! <= 5% over the untraced baseline. The run emits
 //! `BENCH_throughput.json` when `VELOC_BENCH_JSON_DIR` is set.
 
 #[path = "harness.rs"]
@@ -126,6 +128,56 @@ fn main() {
     assert!(
         speedup >= 3.0,
         "acceptance: crc32_wide must be >= 3x the scalar baseline, got {speedup:.2}x"
+    );
+
+    harness::section("E1d: span tracing overhead — traced vs untraced wave");
+    let wave_bytes = 1usize << 20;
+    let mut wave_secs = [
+        veloc::util::stats::Samples::new(), // [0] tracing off
+        veloc::util::stats::Samples::new(), // [1] tracing on
+    ];
+    // Interleave the two modes across reps so machine drift cancels out
+    // of the comparison instead of landing on one side.
+    for _rep in 0..harness::scaled(6).max(2) {
+        for (slot, trace) in [(0usize, false), (1, true)] {
+            let mut cfg = VelocConfig::default().with_nodes(2, 2);
+            cfg.stack.erasure_group = 0;
+            cfg.obs.trace = trace;
+            cfg.fabric.dram_capacity = (wave_bytes as u64) * 8;
+            let rt = VelocRuntime::new(cfg).unwrap();
+            world_checkpoint(&rt, 1, wave_bytes); // warmup
+            let t0 = std::time::Instant::now();
+            for v in 2..5u64 {
+                world_checkpoint(&rt, v, wave_bytes);
+            }
+            wave_secs[slot].push(t0.elapsed().as_secs_f64());
+            if trace {
+                rt.tracer()
+                    .validate()
+                    .expect("traced bench waves must yield a well-formed timeline");
+            }
+        }
+    }
+    let (off_p50, on_p50) = (wave_secs[0].p50(), wave_secs[1].p50());
+    let ratio = on_p50 / off_p50.max(1e-12);
+    println!(
+        "untraced p50 {:.2} ms | traced p50 {:.2} ms | overhead {:+.2}% (gate: <= 5%)",
+        off_p50 * 1e3,
+        on_p50 * 1e3,
+        (ratio - 1.0) * 100.0
+    );
+    report.scalar("wave_untraced_p50_ms", off_p50 * 1e3);
+    report.scalar("wave_traced_p50_ms", on_p50 * 1e3);
+    report.scalar("trace_overhead_ratio", ratio);
+    // Sub-millisecond absolute slack absorbs timer jitter on waves this
+    // short; anything past it must stay inside the 5% budget.
+    assert!(
+        ratio <= 1.05 || on_p50 - off_p50 <= 1e-3,
+        "acceptance: span tracing must cost <= 5% of the wave, got {:+.2}% \
+         ({:.2} ms -> {:.2} ms)",
+        (ratio - 1.0) * 100.0,
+        off_p50 * 1e3,
+        on_p50 * 1e3
     );
     report.write();
 }

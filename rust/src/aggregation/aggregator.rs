@@ -150,6 +150,9 @@ pub struct Aggregator {
     /// lever the direct flush path uses).
     gate: Option<Arc<dyn FlushGate>>,
     metrics: Option<Arc<Metrics>>,
+    /// Optional span recorder: container drains show up in `veloc trace`
+    /// exports as `agg.drain` spans.
+    tracer: Mutex<Option<Arc<crate::obs::TraceRecorder>>>,
     /// Adaptive tier placement: when set, container drains route to the
     /// best eligible shared tier (with failover) instead of the fixed
     /// [`AggTarget`], and the segment index records where each container
@@ -226,6 +229,7 @@ impl Aggregator {
             cfg,
             gate,
             metrics,
+            tracer: Mutex::new(None),
             placement,
             registry,
             groups,
@@ -444,13 +448,39 @@ impl Aggregator {
     ) -> Result<DrainStat> {
         let mut total = DrainStat::default();
         let mut first_err = None;
+        let tracer = self.live_tracer();
         for g in 0..self.groups.len() {
             let mut buf = self.groups[g].lock().unwrap();
             if !should_drain(&*buf) {
                 continue;
             }
-            match self.drain_locked(g, &mut buf) {
-                Ok(stat) => total.absorb(stat),
+            let span = match (&tracer, buf.pending.is_empty()) {
+                (Some(t), false) => {
+                    let gs = g.to_string();
+                    let ss = buf.pending.len().to_string();
+                    t.open(
+                        "agg.drain",
+                        crate::obs::SpanId::NONE,
+                        &[("group", gs.as_str()), ("segments", ss.as_str())],
+                        g as u64,
+                    )
+                }
+                _ => crate::obs::SpanId::NONE,
+            };
+            let t0 = Instant::now();
+            let res = self.drain_locked(g, &mut buf);
+            if let Some(t) = &tracer {
+                t.close(span);
+            }
+            match res {
+                Ok(stat) => {
+                    if stat.containers > 0 {
+                        if let Some(m) = &self.metrics {
+                            m.observe_hist_duration("agg.drain", &[], t0.elapsed());
+                        }
+                    }
+                    total.absorb(stat);
+                }
                 Err(e) => {
                     if first_err.is_none() {
                         first_err = Some(e);
@@ -461,6 +491,20 @@ impl Aggregator {
         match first_err {
             Some(e) => Err(e),
             None => Ok(total),
+        }
+    }
+
+    /// Attach the runtime's span recorder after construction.
+    pub fn set_tracer(&self, tracer: Arc<crate::obs::TraceRecorder>) {
+        *self.tracer.lock().unwrap() = Some(tracer);
+    }
+
+    /// The recorder, only when attached and enabled.
+    fn live_tracer(&self) -> Option<Arc<crate::obs::TraceRecorder>> {
+        let g = self.tracer.lock().unwrap();
+        match &*g {
+            Some(t) if t.is_enabled() => Some(Arc::clone(t)),
+            _ => None,
         }
     }
 

@@ -4,6 +4,7 @@ use crate::aggregation::{AggTarget, AggregationConfig};
 use crate::backend::BackendConfig;
 use crate::delta::DeltaConfig;
 use crate::modules::{StackConfig, TierPolicy};
+use crate::obs::ObsConfig;
 use crate::pipeline::EngineMode;
 use crate::restore::RestoreConfig;
 use crate::scheduler::SchedulerPolicy;
@@ -56,6 +57,9 @@ pub struct VelocConfig {
     /// clients — `crate::backend`): home directory, socket, admission
     /// depth, payload handoff and journal durability knobs.
     pub backend: BackendConfig,
+    /// Observability plane: span tracing + the daemon's Prometheus
+    /// `/metrics` + health endpoint (`crate::obs`).
+    pub obs: ObsConfig,
     /// Override for the artifacts directory.
     pub artifacts: Option<PathBuf>,
 }
@@ -79,6 +83,7 @@ impl Default for VelocConfig {
             placement: PlacementConfig::default(),
             restore: RestoreConfig::default(),
             backend: BackendConfig::default(),
+            obs: ObsConfig::default(),
             artifacts: None,
         }
     }
@@ -274,6 +279,13 @@ impl VelocConfig {
             cfg.restore.prefetch_depth =
                 r.usize_or("prefetch_depth", cfg.restore.prefetch_depth);
         }
+        if let Some(o) = j.get("obs") {
+            cfg.obs.trace = o.bool_or("trace", cfg.obs.trace);
+            if let Some(h) = o.get("http").and_then(Json::as_str) {
+                cfg.obs.http = Some(h.to_string());
+            }
+            cfg.obs.span_capacity = o.usize_or("span_capacity", cfg.obs.span_capacity);
+        }
         // KV module needs the KV tier; a burst-buffer drain target needs
         // the burst-buffer tier.
         if cfg.stack.with_kv {
@@ -370,6 +382,7 @@ impl VelocConfig {
         self.delta.validate()?;
         self.restore.validate()?;
         self.backend.validate()?;
+        self.obs.validate()?;
         Ok(())
     }
 
@@ -712,6 +725,27 @@ mod tests {
         assert_eq!(c.backend.socket_path(), c.backend.dir.join("veloc.sock"));
         // Zero queue depth rejected.
         let j = Json::parse(r#"{"backend": {"queue_depth": 0}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn obs_section_parsed_and_validated() {
+        let j = Json::parse(
+            r#"{"obs": {"trace": true, "http": "127.0.0.1:0", "span_capacity": 1024}}"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert!(c.obs.trace);
+        assert_eq!(c.obs.http.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(c.obs.span_capacity, 1024);
+        // Defaults: tracing off, no endpoint.
+        let c = VelocConfig::default();
+        assert!(!c.obs.trace);
+        assert!(c.obs.http.is_none());
+        // Bad values rejected.
+        let j = Json::parse(r#"{"obs": {"span_capacity": 0}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"obs": {"http": ""}}"#).unwrap();
         assert!(VelocConfig::from_json(&j).is_err());
     }
 

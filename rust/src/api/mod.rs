@@ -28,6 +28,7 @@ use crate::aggregation::Aggregator;
 use crate::cluster::{KillSwitch, Topology};
 use crate::metrics::Metrics;
 use crate::modules::{build_stack, ChecksumBackend, Env, FlushGate, VersionRegistry};
+use crate::obs::{ObsHandle, SpanId, TraceRecorder};
 use crate::pipeline::{BoundaryHook, CkptContext, CkptStatus, Engine};
 use crate::recovery::{Recovery, Restored};
 use crate::runtime::PjrtEngine;
@@ -64,6 +65,10 @@ pub struct SimHooks {
     /// (before and after the "crash") share one fabric, exactly as two
     /// daemon processes share the node's tiers and the PFS.
     pub fabric: Option<Arc<StorageFabric>>,
+    /// Span recorder to adopt instead of building one from `config.obs` —
+    /// the scenario engine uses it to collect a span timeline from a
+    /// failing run as a debugging artifact.
+    pub tracer: Option<Arc<TraceRecorder>>,
 }
 
 /// Shutdown-aware driver of the aggregation age policy: a ticker thread
@@ -137,6 +142,7 @@ pub struct VelocRuntime {
     kill: KillSwitch,
     monitor: Arc<UtilizationMonitor>,
     metrics: Arc<Metrics>,
+    tracer: Arc<TraceRecorder>,
     /// Keeps the aggregation age ticker alive for the runtime's lifetime;
     /// dropping the runtime stops the ticker thread immediately.
     _age_ticker: Option<AgeTicker>,
@@ -200,6 +206,12 @@ impl VelocRuntime {
         };
 
         let metrics = Metrics::new();
+        // Span recorder: sim scenarios hand in their own; otherwise the
+        // `obs` config decides whether recording starts enabled.
+        let tracer = match hooks.tracer {
+            Some(t) => t,
+            None => TraceRecorder::with_capacity(config.obs.trace, config.obs.span_capacity),
+        };
         // Adaptive tier placement: the candidate pool is every shared
         // tier, ordered primary-first (the level-4 flush target leads, so
         // the static policy reproduces the legacy routing). The KV tier
@@ -270,6 +282,7 @@ impl VelocRuntime {
             let period = (config.aggregation.max_delay / 2)
                 .max(std::time::Duration::from_millis(10));
             age_ticker = Some(AgeTicker::spawn(&agg, period));
+            agg.set_tracer(Arc::clone(&tracer));
             Some(agg)
         } else {
             None
@@ -279,11 +292,13 @@ impl VelocRuntime {
         // so every rank's restores (and a storm of daemon clients) meet
         // in the same cache and single-flight table.
         let restore = if config.restore.enabled {
-            Some(crate::restore::RestoreEngine::new(
+            let eng = crate::restore::RestoreEngine::new(
                 config.restore.clone(),
                 Arc::clone(&fabric),
                 Some(Arc::clone(&metrics)),
-            ))
+            );
+            eng.set_tracer(Arc::clone(&tracer));
+            Some(eng)
         } else {
             None
         };
@@ -340,6 +355,7 @@ impl VelocRuntime {
             recovery,
             monitor,
             metrics,
+            tracer,
             _age_ticker: age_ticker,
         }))
     }
@@ -362,6 +378,12 @@ impl VelocRuntime {
     /// Runtime-wide metrics registry.
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// Runtime-wide span recorder (inert unless `obs.trace` — or an
+    /// adopted sim tracer — enabled it).
+    pub fn tracer(&self) -> &Arc<TraceRecorder> {
+        &self.tracer
     }
 
     /// Application-utilization monitor feeding the predictive scheduler.
@@ -493,6 +515,9 @@ impl VelocRuntime {
                 eprintln!("veloc: aggregated drain failed: {e:#}");
             }
         }
+        // Every command of the drained waves has settled: close their
+        // root spans so the timeline validates/exports cleanly.
+        self.tracer.close_open_waves();
     }
 
     /// Cold restart: reload the persisted lineage of `name` into the
@@ -574,9 +599,33 @@ impl Transport for LocalTransport {
         }
         let bytes = ckpt.payload_bytes();
         let node = self.runtime.topology.node_of(rank);
-        let ctx = CkptContext::new(name, rank, node, version, ckpt);
-        self.runtime.engine(rank).submit(ctx)?;
+        let mut ctx = CkptContext::new(name, rank, node, version, ckpt);
         let m = &self.runtime.metrics;
+        let tracer = self.runtime.tracer();
+        if tracer.is_enabled() {
+            // One shared root per wave (version); the command span starts
+            // at capture time, so the wave root is back-dated to cover it.
+            let wave = tracer.wave_root_at(version, started);
+            let vs = version.to_string();
+            let rs = rank.to_string();
+            let cmd = tracer.open_at(
+                "ckpt",
+                wave,
+                &[("rank", rs.as_str()), ("name", name), ("version", vs.as_str())],
+                rank as u64,
+                started,
+            );
+            let cap = tracer.open_at("capture", cmd, &[], rank as u64, started);
+            tracer.close(cap);
+            ctx.obs = ObsHandle {
+                tracer: Some(Arc::clone(tracer)),
+                metrics: Some(Arc::clone(m)),
+                parent: cmd,
+            };
+        } else {
+            ctx.obs.metrics = Some(Arc::clone(m));
+        }
+        self.runtime.engine(rank).submit(ctx)?;
         m.incr("ckpt.requests", 1);
         m.incr("ckpt.bytes", bytes);
         // Measured from capture start: the region snapshot is part of
@@ -599,15 +648,31 @@ impl Transport for LocalTransport {
     ) -> Result<Option<Restored>> {
         let engine = self.runtime.engine(rank);
         let t0 = Instant::now();
-        let restored = match version {
-            Some(v) => self.runtime.recovery.restore_version(engine, name, rank, v)?,
-            None => self.runtime.recovery.restore_latest(engine, name, rank)?,
+        let tracer = self.runtime.tracer();
+        let span = if tracer.is_enabled() {
+            let rs = rank.to_string();
+            tracer.open(
+                "restart",
+                SpanId::NONE,
+                &[("rank", rs.as_str()), ("name", name)],
+                rank as u64,
+            )
+        } else {
+            SpanId::NONE
         };
+        let restored = match version {
+            Some(v) => self.runtime.recovery.restore_version(engine, name, rank, v),
+            None => self.runtime.recovery.restore_latest(engine, name, rank),
+        };
+        tracer.close(span);
+        let restored = restored?;
         if let Some(r) = &restored {
             self.runtime.metrics.incr("restart.success", 1);
-            self.runtime
-                .metrics
-                .incr(&format!("restart.level{}", r.level), 1);
+            self.runtime.metrics.incr_with(
+                "restart.by_level",
+                &[("level", crate::pipeline::context::level_name(r.level))],
+                1,
+            );
             self.runtime
                 .metrics
                 .observe_duration("restore.latency", t0.elapsed());

@@ -35,6 +35,7 @@ use crate::api::{SimHooks, Transport, VelocClient, VelocConfig, VelocRuntime};
 use crate::backend::journal::Journal;
 use crate::backend::queue::{FairQueue, Submission};
 use crate::backend::{scoped_name, valid_job_id, Backpressure, BackendConfig};
+use crate::obs::{ObsHandle, ObsServer, ObsState, SpanId};
 use crate::pipeline::{CkptContext, CkptStatus};
 use crate::recovery::Restored;
 use crate::util::bytes::Checkpoint;
@@ -58,6 +59,9 @@ struct Watch {
     rank: usize,
     name: String,
     version: u64,
+    /// Open "settle" span (NONE when tracing is off), closed by the
+    /// settle poller at the terminal status.
+    span: SpanId,
 }
 
 /// Outcome of an accepted-or-rejected submit.
@@ -109,6 +113,11 @@ pub struct BackendDaemon {
     /// (unix): a second daemon on the same home dir would rewrite the
     /// live WAL and sweep the first one's payloads — refused instead.
     _dir_lock: Option<std::fs::File>,
+    /// `/readyz` truth: journal replayed and the queues accepting. Flips
+    /// false again on shutdown/crash.
+    ready: Arc<AtomicBool>,
+    /// The `/metrics` + health HTTP endpoint, when `obs.http` configured.
+    obs_server: Mutex<Option<ObsServer>>,
 }
 
 /// Take the daemon-home flock, retrying briefly: a crashed predecessor's
@@ -196,6 +205,7 @@ impl BackendDaemon {
             }
         }
 
+        let obs_http = config.obs.http.clone();
         let runtime = VelocRuntime::new_with_hooks(config, hooks)?;
         let metrics = Arc::clone(runtime.metrics());
         let (journal, pending) = Journal::open(&cfg.dir.join("journal"), cfg.fsync)?;
@@ -225,6 +235,7 @@ impl BackendDaemon {
                 version: e.version,
                 payload: e.payload.clone(),
                 bytes: None,
+                queued_at: std::time::Instant::now(),
             });
             metrics.incr("backend.journal.replayed", 1);
         }
@@ -244,9 +255,20 @@ impl BackendDaemon {
             staging,
             restore_seq: std::sync::atomic::AtomicU64::new(0),
             _dir_lock: dir_lock,
+            ready: Arc::new(AtomicBool::new(false)),
+            obs_server: Mutex::new(None),
         });
+        if let Some(bind) = obs_http {
+            let state = ObsState {
+                metrics: Arc::clone(daemon.runtime.metrics()),
+                ready: Arc::clone(&daemon.ready),
+            };
+            *daemon.obs_server.lock().unwrap() = Some(ObsServer::start(&bind, state)?);
+        }
         daemon.spawn_dispatcher();
         daemon.spawn_settler();
+        // Journal replayed, queues accepting, workers live: ready.
+        daemon.ready.store(true, Ordering::SeqCst);
         Ok(daemon)
     }
 
@@ -308,11 +330,16 @@ impl BackendDaemon {
                         });
                     }
                     for (x, failure) in settled {
+                        runtime.tracer().close(x.span);
                         match failure {
                             None => {
                                 let _ = journal.settle(x.id, true);
                                 metrics.incr("backend.settled", 1);
-                                metrics.incr(&format!("backend.settled.{}", x.job), 1);
+                                metrics.incr_with(
+                                    "backend.settled",
+                                    &[("job", x.job.as_str())],
+                                    1,
+                                );
                             }
                             Some(msg) => {
                                 eprintln!(
@@ -345,6 +372,12 @@ impl BackendDaemon {
     /// Where clients stage large payloads for handoff (canonicalized).
     pub fn staging_dir(&self) -> &Path {
         &self.staging
+    }
+
+    /// Bound address of the observability HTTP endpoint, when enabled
+    /// (resolves `:0` binds to the actual port for tests and the CLI).
+    pub fn obs_addr(&self) -> Option<std::net::SocketAddr> {
+        self.obs_server.lock().unwrap().as_ref().map(|s| s.addr())
     }
 
     /// Register a job/rank pair. Returns the rank's node id. Idempotent;
@@ -464,6 +497,7 @@ impl BackendDaemon {
             version,
             payload: entry.payload,
             bytes: kept,
+            queued_at: std::time::Instant::now(),
         });
         self.runtime.metrics().incr("backend.submits", 1);
         Ok(SubmitAck::Acked)
@@ -576,9 +610,13 @@ impl BackendDaemon {
     /// poller. Returns whether the drain settled everything within
     /// `timeout`.
     pub fn shutdown(&self, timeout: Duration) -> bool {
+        self.ready.store(false, Ordering::SeqCst);
         let idle = self.drain(timeout);
         self.stop.store(true, Ordering::SeqCst);
         self.join_workers();
+        if let Some(mut s) = self.obs_server.lock().unwrap().take() {
+            s.stop();
+        }
         idle
     }
 
@@ -588,6 +626,7 @@ impl BackendDaemon {
     /// acked-but-unsettled record. The only thing that survives is what
     /// the contract requires: durable storage and the journal.
     pub fn crash(&self) {
+        self.ready.store(false, Ordering::SeqCst);
         self.stop.store(true, Ordering::SeqCst);
         self.queue.clear_queued();
         // The settle poller exits on `stop` without settling anything
@@ -719,19 +758,50 @@ fn dispatch_one(
         }
     };
     let node = runtime.topology().node_of(sub.rank);
-    let ctx =
+    let mut ctx =
         CkptContext::from_encoded(&sub.name, sub.rank, node, sub.version, ckpt, bytes);
+    let tracer = runtime.tracer();
+    let mut settle_span = SpanId::NONE;
+    if tracer.is_enabled() {
+        let wave = tracer.wave_root(sub.version);
+        let vs = sub.version.to_string();
+        let rs = sub.rank.to_string();
+        let cmd = tracer.open(
+            "dispatch",
+            wave,
+            &[
+                ("job", sub.job.as_str()),
+                ("rank", rs.as_str()),
+                ("name", sub.name.as_str()),
+                ("version", vs.as_str()),
+            ],
+            sub.rank as u64,
+        );
+        // The settle span outlives the pipeline command: parent it on the
+        // wave root, which only closes once the daemon drains.
+        settle_span =
+            tracer.open("settle", wave, &[("job", sub.job.as_str())], sub.rank as u64);
+        ctx.obs = ObsHandle {
+            tracer: Some(Arc::clone(tracer)),
+            metrics: Some(Arc::clone(&metrics)),
+            parent: cmd,
+        };
+    } else {
+        ctx.obs.metrics = Some(Arc::clone(&metrics));
+    }
     if let Err(e) = runtime.engine(sub.rank).submit(ctx) {
+        tracer.close(settle_span);
         fail(&format!("pipeline rejected: {e:#}"));
         return;
     }
-    metrics.incr(&format!("backend.dispatched.{}", sub.job), 1);
+    metrics.incr_with("backend.dispatched", &[("job", sub.job.as_str())], 1);
     watches.lock().unwrap().push(Watch {
         id: sub.id,
         job: sub.job,
         rank: sub.rank,
         name: sub.name,
         version: sub.version,
+        span: settle_span,
     });
 }
 

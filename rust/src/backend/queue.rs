@@ -9,10 +9,11 @@
 //! is rejected with [`Backpressure`](crate::backend::Backpressure)
 //! instead of buffering without bound.
 //!
-//! Metrics (`backend.*`): `queue_depth.<job>` gauge (unsettled count),
+//! Metrics (`backend.*`): `queue_depth{job=..}` gauge (unsettled count),
 //! `rejected` counter, `fair.rr_picks` counter (dispatches made while at
 //! least one *other* job also had work queued — the observable fair-share
-//! signal).
+//! signal), and the `backend.queue_wait` histogram (push-to-pop latency
+//! per job — the drain-pacing distribution).
 
 use crate::metrics::Metrics;
 use std::collections::{BTreeMap, VecDeque};
@@ -40,6 +41,8 @@ pub struct Submission {
     /// that were just written. Journal replay and staged handoffs carry
     /// `None` and read the durable file.
     pub bytes: Option<Arc<Vec<u8>>>,
+    /// When the submission entered the queue (queue-wait histogram).
+    pub queued_at: Instant,
 }
 
 #[derive(Default)]
@@ -81,7 +84,7 @@ impl FairQueue {
 
     fn gauge(&self, job: &str, unsettled: usize) {
         if let Some(m) = &self.metrics {
-            m.set(&format!("backend.queue_depth.{job}"), unsettled as u64);
+            m.set_with("backend.queue_depth", &[("job", job)], unsettled as u64);
         }
     }
 
@@ -166,10 +169,15 @@ impl FairQueue {
                     if let Some(sub) = popped {
                         st.next = (idx + 1) % len;
                         drop(st);
-                        if busy >= 2 {
-                            if let Some(m) = &self.metrics {
+                        if let Some(m) = &self.metrics {
+                            if busy >= 2 {
                                 m.incr("backend.fair.rr_picks", 1);
                             }
+                            m.observe_hist_duration(
+                                "backend.queue_wait",
+                                &[("job", &sub.job)],
+                                sub.queued_at.elapsed(),
+                            );
                         }
                         return Some(sub);
                     }
@@ -281,6 +289,7 @@ mod tests {
             version,
             payload: PathBuf::from("/nonexistent"),
             bytes: None,
+            queued_at: Instant::now(),
         }
     }
 
@@ -320,7 +329,10 @@ mod tests {
         // ...settlement does.
         q.settled("j");
         q.try_admit("j").unwrap();
-        assert_eq!(m.counter("backend.queue_depth.j"), 2);
+        assert_eq!(m.gauge_with("backend.queue_depth", &[("job", "j")]), 2);
+        // The drain-pacing histogram saw the pop above.
+        let h = m.histogram("backend.queue_wait", &[("job", "j")]).unwrap();
+        assert_eq!(h.count(), 1);
     }
 
     #[test]

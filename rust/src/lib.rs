@@ -52,6 +52,7 @@ pub mod interval;
 pub mod metrics;
 #[allow(missing_docs)]
 pub mod modules;
+pub mod obs;
 pub mod pipeline;
 #[allow(missing_docs)]
 pub mod recovery;

@@ -8,12 +8,17 @@
 //!   interval   Young/Daly vs DES interval recommendations
 //!   sim        deterministic crash–recover–verify scenarios (one spec,
 //!              a saved-trace replay, or the standard sweep matrix)
+//!   trace      run a traced multi-rank checkpoint wave and export the
+//!              span timeline as Chrome trace-event JSON
+//!   report     same run, summarized: per-stage latency percentiles
+//!   scrape     fetch and validate a daemon's /metrics exposition
 //!
 //! Examples live in `examples/` (quickstart, hacc_sim, dnn_training,
 //! interval_tuning); this binary is the thin operational front-end.
 
-use anyhow::Result;
-use std::time::Instant;
+use anyhow::{anyhow, ensure, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 use veloc::api::{VelocConfig, VelocRuntime};
 use veloc::app::IterativeApp;
 use veloc::cluster::FailureScope;
@@ -26,7 +31,7 @@ fn main() {
         "veloc",
         "VEry Low Overhead Checkpointing — paper reproduction runtime",
     )
-    .opt("cmd", "info", "info | run | daemon | interval | sim")
+    .opt("cmd", "info", "info | run | daemon | interval | sim | trace | report | scrape")
     .opt("config", "", "JSON config file (empty = defaults)")
     .opt("nodes", "4", "simulated nodes")
     .opt("ranks-per-node", "2", "ranks per node")
@@ -65,6 +70,12 @@ fn main() {
     .opt("seed", "1", "sim: base seed for the matrix / default spec")
     .opt("trace-out", "", "sim: write the run's event trace to this file")
     .opt("trace-dir", "", "sim: write failing scenario traces into this dir")
+    .flag("trace", "record pipeline spans (run/daemon; export via trace-out)")
+    .opt("obs-http", "", "daemon: bind /metrics + health endpoint (host:port)")
+    .opt("waves", "2", "trace/report: checkpoint waves to run")
+    .opt("out", "veloc-trace.json", "trace: Chrome trace-event output file")
+    .opt("addr", "", "scrape: observability endpoint (host:port)")
+    .flag("wait-ready", "scrape: poll /readyz until ready before scraping")
     .parse();
 
     let cmd = cli.positional().first().cloned().unwrap_or(cli.get("cmd"));
@@ -74,8 +85,14 @@ fn main() {
         "daemon" => cmd_daemon(&cli),
         "interval" => cmd_interval(&cli),
         "sim" => cmd_sim(&cli),
+        "trace" => cmd_trace(&cli),
+        "report" => cmd_report(&cli),
+        "scrape" => cmd_scrape(&cli),
         other => {
-            eprintln!("unknown command '{other}' (try info | run | daemon | interval | sim)");
+            eprintln!(
+                "unknown command '{other}' (try info | run | daemon | interval | \
+                 sim | trace | report | scrape)"
+            );
             std::process::exit(2);
         }
     };
@@ -135,6 +152,13 @@ fn config_from(cli: &Cli) -> Result<VelocConfig> {
     let depth = cli.get_usize("restore-prefetch-depth");
     if depth > 0 {
         cfg.restore.prefetch_depth = depth;
+    }
+    if cli.get_bool("trace") {
+        cfg.obs.trace = true;
+    }
+    let obs_http = cli.get("obs-http");
+    if !obs_http.is_empty() {
+        cfg.obs.http = Some(obs_http);
     }
     Ok(cfg)
 }
@@ -344,6 +368,11 @@ fn cmd_daemon(cli: &Cli) -> Result<()> {
         if replayed > 0 {
             println!("journal replay: {replayed} acked checkpoint(s) resumed");
         }
+        if let Some(addr) = daemon.obs_addr() {
+            println!(
+                "veloc daemon: observability on http://{addr}/metrics (+ /healthz, /readyz)"
+            );
+        }
         println!(
             "veloc daemon: serving on {} (dir {}, queue depth {})",
             daemon.backend_config().socket_path().display(),
@@ -362,7 +391,10 @@ fn cmd_daemon(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_sim(cli: &Cli) -> Result<()> {
-    use veloc::sim::{base_spec, replay_file, run_scenario_traced, standard_matrix, ScenarioSpec};
+    use veloc::obs::TraceRecorder;
+    use veloc::sim::{
+        base_spec, replay_file, run_scenario_with_tracer, standard_matrix, ScenarioSpec,
+    };
 
     let replay = cli.get("replay");
     if !replay.is_empty() {
@@ -388,7 +420,12 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
         println!("sim matrix: {} scenarios (base seed {seed})", specs.len());
         let mut failed = 0usize;
         for (i, spec) in specs.iter().enumerate() {
-            let (result, trace) = run_scenario_traced(spec);
+            // Span recording rides along so a failure ships a timeline
+            // artifact; span timestamps never enter the event trace, so
+            // replay comparison stays exact.
+            let tracer = TraceRecorder::new(true);
+            let (result, trace) =
+                run_scenario_with_tracer(spec, Some(Arc::clone(&tracer)));
             match result {
                 Ok(report) => println!("  ok   [{i:>2}] {}", report.summary()),
                 Err(e) => {
@@ -399,6 +436,13 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
                             .join(format!("scenario-{i:02}-seed{}.json", spec.seed));
                         if trace.save(spec, &path).is_ok() {
                             eprintln!("         trace: {}", path.display());
+                        }
+                        let spans = std::path::Path::new(&trace_dir)
+                            .join(format!("scenario-{i:02}-seed{}.spans.json", spec.seed));
+                        tracer.close_open_waves();
+                        let doc = tracer.to_chrome_json().to_pretty();
+                        if std::fs::write(&spans, doc).is_ok() {
+                            eprintln!("         spans: {}", spans.display());
                         }
                     }
                 }
@@ -421,7 +465,8 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
     } else {
         base_spec(cli.get_u64("seed"))
     };
-    let (result, trace) = run_scenario_traced(&spec);
+    let tracer = TraceRecorder::new(true);
+    let (result, trace) = run_scenario_with_tracer(&spec, Some(Arc::clone(&tracer)));
     let trace_out = cli.get("trace-out");
     if !trace_out.is_empty() {
         trace.save(&spec, std::path::Path::new(&trace_out))?;
@@ -439,10 +484,110 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
                 if trace.save(&spec, &path).is_ok() {
                     eprintln!("failing trace: {}", path.display());
                 }
+                let spans = std::path::Path::new(&trace_dir)
+                    .join(format!("scenario-seed{}.spans.json", spec.seed));
+                tracer.close_open_waves();
+                if std::fs::write(&spans, tracer.to_chrome_json().to_pretty()).is_ok() {
+                    eprintln!("failing spans: {}", spans.display());
+                }
             }
             Err(e)
         }
     }
+}
+
+/// Run `--waves` checkpoint waves across every rank with span recording
+/// forced on, drain, and hand back the runtime (whose recorder now holds
+/// the full timeline). Shared by `veloc trace` and `veloc report`.
+fn run_traced_waves(cli: &Cli) -> Result<Arc<VelocRuntime>> {
+    let mut cfg = config_from(cli)?;
+    cfg.obs.trace = true;
+    let rt = VelocRuntime::new(cfg)?;
+    let world = rt.topology().world_size();
+    let waves = cli.get_u64("waves").max(1);
+    let bytes = (cli.get_usize("region-mb").max(1)) << 18;
+    let clients: Vec<_> = (0..world).map(|r| rt.client(r)).collect();
+    for c in &clients {
+        c.mem_protect(0, vec![(c.rank() + 1) as u8; bytes]);
+    }
+    for v in 1..=waves {
+        for c in &clients {
+            c.checkpoint("app", v)?;
+        }
+        for c in &clients {
+            c.checkpoint_wait_done("app", v)?;
+        }
+    }
+    rt.drain();
+    rt.tracer()
+        .validate()
+        .map_err(|e| anyhow!("span timeline malformed: {e}"))?;
+    Ok(rt)
+}
+
+/// Record a multi-rank wave and export its span timeline as Chrome
+/// trace-event JSON (load the file in `chrome://tracing` or Perfetto).
+fn cmd_trace(cli: &Cli) -> Result<()> {
+    let rt = run_traced_waves(cli)?;
+    let tracer = rt.tracer();
+    let spans = tracer.snapshot();
+    let out = cli.get("out");
+    std::fs::write(&out, tracer.to_chrome_json().to_pretty())?;
+    println!(
+        "trace: {} spans over {} wave(s), {} dropped at capacity",
+        spans.len(),
+        cli.get_u64("waves").max(1),
+        tracer.dropped()
+    );
+    println!("written to {out}");
+    Ok(())
+}
+
+/// Record a multi-rank wave and print per-stage latency percentiles,
+/// grouped by pipeline stage and resilience level.
+fn cmd_report(cli: &Cli) -> Result<()> {
+    use veloc::obs::stage_summary;
+    let rt = run_traced_waves(cli)?;
+    let spans = rt.tracer().snapshot();
+    let rows = stage_summary(&spans);
+    ensure!(!rows.is_empty(), "no closed spans recorded");
+    println!(
+        "{:<24} {:<10} {:>6} {:>12} {:>12} {:>12}",
+        "stage", "level", "count", "p50", "p95", "p99"
+    );
+    for (stage, level, samples) in &rows {
+        println!(
+            "{:<24} {:<10} {:>6} {:>12} {:>12} {:>12}",
+            stage,
+            level,
+            samples.observed(),
+            format_duration(Duration::from_secs_f64(samples.p50())),
+            format_duration(Duration::from_secs_f64(samples.p95())),
+            format_duration(Duration::from_secs_f64(samples.p99())),
+        );
+    }
+    Ok(())
+}
+
+/// Fetch a daemon's `/metrics` exposition, parse and validate it, and
+/// print the families it serves.
+fn cmd_scrape(cli: &Cli) -> Result<()> {
+    use veloc::obs::prom::parse_exposition;
+    use veloc::obs::{http_get, wait_ready};
+    let addr = cli.get("addr");
+    ensure!(!addr.is_empty(), "--addr host:port required (see daemon --obs-http)");
+    if cli.get_bool("wait-ready") {
+        wait_ready(&addr, Duration::from_secs(10))?;
+    }
+    let (code, body) = http_get(&addr, "/metrics", Duration::from_secs(5))?;
+    ensure!(code == 200, "GET /metrics returned {code}");
+    let families =
+        parse_exposition(&body).map_err(|e| anyhow!("invalid exposition: {e}"))?;
+    println!("scrape ok: {} metric families from {addr}", families.len());
+    for f in &families {
+        println!("  {:<40} {} ({} samples)", f.name, f.typ, f.samples.len());
+    }
+    Ok(())
 }
 
 fn cmd_interval(cli: &Cli) -> Result<()> {

@@ -1,5 +1,13 @@
-//! Lightweight metrics registry: named counters and duration samples,
-//! dumped as JSON for the bench harness and the `veloc report` command.
+//! Metrics registry: named counters, gauges, bounded sample reservoirs
+//! and fixed-bucket histograms, with optional label sets per series.
+//!
+//! Counters and gauges live in *separate* stores (an `incr` can never
+//! silently accumulate onto a value someone `set`), every family supports
+//! `{label="value"}` dimensions (job, level, tier, stage), and hot-path
+//! latency distributions go into fixed log-spaced histograms instead of
+//! unbounded vectors. The whole registry is exportable three ways: the
+//! JSON dump ([`Metrics::to_json`]), the Prometheus text exposition
+//! (`obs::prom`), and direct programmatic reads for tests and benches.
 
 use crate::util::json::Json;
 use crate::util::stats::Samples;
@@ -8,40 +16,233 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+/// A label set: `(key, value)` pairs, canonically sorted by key.
+pub type Labels = Vec<(String, String)>;
+
+/// One series identity: metric name plus its (possibly empty) label set.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SeriesKey {
+    /// Metric family name (dotted namespace, e.g. `backend.queue_depth`).
+    pub name: String,
+    /// Sorted label pairs; empty for unlabeled series.
+    pub labels: Labels,
+}
+
+impl SeriesKey {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        let mut labels: Labels = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        SeriesKey {
+            name: name.to_string(),
+            labels,
+        }
+    }
+
+    /// `name` or `name{k=v,k2=v2}` — the JSON-dump key for this series.
+    pub fn display(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.clone();
+        }
+        let pairs: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        format!("{}{{{}}}", self.name, pairs.join(","))
+    }
+}
+
+/// Upper bounds (seconds) of the fixed duration-histogram ladder:
+/// log-spaced 1-2.5-5 steps from 1µs to 100s. The implicit final bucket
+/// is `+Inf`.
+pub const DURATION_BUCKETS: [f64; 25] = [
+    1e-6, 2.5e-6, 5e-6, 1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2,
+    2.5e-2, 5e-2, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0,
+];
+
+/// Fixed-bucket histogram: O(bounds) memory regardless of observation
+/// count, exact `sum`/`count`, interpolated percentile estimates.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Per-bucket observation counts; `counts[i]` covers
+    /// `(bounds[i-1], bounds[i]]`, the last slot is the `+Inf` overflow.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: vec![0; DURATION_BUCKETS.len() + 1],
+            sum: 0.0,
+            count: 0,
+            max: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one observation (seconds for duration histograms).
+    pub fn observe(&mut self, v: f64) {
+        let idx = DURATION_BUCKETS
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(DURATION_BUCKETS.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+        self.max = self.max.max(v);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum over every observation.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Per-bucket (non-cumulative) counts; last slot is `+Inf`.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Percentile estimate (q in [0, 100]) by linear interpolation inside
+    /// the bucket holding the target rank; the `+Inf` bucket reports the
+    /// tracked maximum.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let prev = cum;
+            cum += c;
+            if cum >= target {
+                if i >= DURATION_BUCKETS.len() {
+                    return self.max;
+                }
+                let lo = if i == 0 { 0.0 } else { DURATION_BUCKETS[i - 1] };
+                let hi = DURATION_BUCKETS[i];
+                let frac = (target - prev) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+        }
+        self.max
+    }
+
+    /// Median estimate.
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th-percentile estimate.
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th-percentile estimate.
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Exact maximum observation.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// A point-in-time copy of every series, for exposition and reports.
+pub struct MetricsSnapshot {
+    /// Monotonic counters.
+    pub counters: Vec<(SeriesKey, u64)>,
+    /// Last-write-wins gauges.
+    pub gauges: Vec<(SeriesKey, u64)>,
+    /// Fixed-bucket histograms.
+    pub histograms: Vec<(SeriesKey, Histogram)>,
+    /// Bounded sample reservoirs (exposed as summaries).
+    pub samples: Vec<(String, Samples)>,
+}
+
+/// The process-wide registry. All methods are cheap and lock-granular;
+/// counter/gauge handles are atomics behind a name-lookup mutex.
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    counters: Mutex<BTreeMap<SeriesKey, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<SeriesKey, Arc<AtomicU64>>>,
     samples: Mutex<BTreeMap<String, Samples>>,
+    histograms: Mutex<BTreeMap<SeriesKey, Histogram>>,
 }
 
 impl Metrics {
+    /// Fresh shared registry.
     pub fn new() -> Arc<Self> {
         Arc::new(Metrics::default())
     }
 
-    fn counter_handle(&self, name: &str) -> Arc<AtomicU64> {
-        let mut g = self.counters.lock().unwrap();
-        Arc::clone(
-            g.entry(name.to_string())
-                .or_insert_with(|| Arc::new(AtomicU64::new(0))),
-        )
+    fn handle(
+        store: &Mutex<BTreeMap<SeriesKey, Arc<AtomicU64>>>,
+        key: SeriesKey,
+    ) -> Arc<AtomicU64> {
+        let mut g = store.lock().unwrap();
+        Arc::clone(g.entry(key).or_insert_with(|| Arc::new(AtomicU64::new(0))))
     }
 
+    /// Add `by` to the unlabeled counter `name`.
     pub fn incr(&self, name: &str, by: u64) {
-        self.counter_handle(name).fetch_add(by, Ordering::Relaxed);
+        self.incr_with(name, &[], by);
     }
 
+    /// Add `by` to the counter `name{labels}`.
+    pub fn incr_with(&self, name: &str, labels: &[(&str, &str)], by: u64) {
+        Self::handle(&self.counters, SeriesKey::new(name, labels))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Read the unlabeled counter `name` (0 if never written).
     pub fn counter(&self, name: &str) -> u64 {
-        self.counter_handle(name).load(Ordering::Relaxed)
+        self.counter_with(name, &[])
     }
 
-    /// Gauge semantics over the counter store: overwrite the value instead
-    /// of accumulating (queue depths, replay cursors). Read back with
-    /// [`Metrics::counter`]; reported next to the counters in `to_json`.
+    /// Read the counter `name{labels}` (0 if never written).
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        Self::handle(&self.counters, SeriesKey::new(name, labels)).load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the unlabeled gauge `name` (queue depths, cursors).
+    /// Gauges live in their own store: a counter `incr` under the same
+    /// name can never accumulate onto a gauge value.
     pub fn set(&self, name: &str, value: u64) {
-        self.counter_handle(name).store(value, Ordering::Relaxed);
+        self.set_with(name, &[], value);
     }
 
+    /// Overwrite the gauge `name{labels}`.
+    pub fn set_with(&self, name: &str, labels: &[(&str, &str)], value: u64) {
+        Self::handle(&self.gauges, SeriesKey::new(name, labels)).store(value, Ordering::Relaxed);
+    }
+
+    /// Read the unlabeled gauge `name` (0 if never set).
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauge_with(name, &[])
+    }
+
+    /// Read the gauge `name{labels}` (0 if never set).
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        Self::handle(&self.gauges, SeriesKey::new(name, labels)).load(Ordering::Relaxed)
+    }
+
+    /// Record one value into the bounded reservoir `name`.
     pub fn observe(&self, name: &str, value: f64) {
         self.samples
             .lock()
@@ -51,25 +252,96 @@ impl Metrics {
             .push(value);
     }
 
+    /// Record one duration into the bounded reservoir `name`.
     pub fn observe_duration(&self, name: &str, d: Duration) {
         self.observe(name, d.as_secs_f64());
     }
 
+    /// Record one value into the fixed-bucket histogram `name{labels}`.
+    pub fn observe_hist(&self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(SeriesKey::new(name, labels))
+            .or_default()
+            .observe(value);
+    }
+
+    /// Record one duration into the histogram `name{labels}`.
+    pub fn observe_hist_duration(&self, name: &str, labels: &[(&str, &str)], d: Duration) {
+        self.observe_hist(name, labels, d.as_secs_f64());
+    }
+
+    /// Copy of the reservoir `name`, if any values were observed.
     pub fn samples(&self, name: &str) -> Option<Samples> {
         self.samples.lock().unwrap().get(name).cloned()
     }
 
+    /// Copy of the histogram `name{labels}`, if anything was observed.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .get(&SeriesKey::new(name, labels))
+            .cloned()
+    }
+
+    /// Point-in-time copy of every series (exposition, reports).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), h.clone()))
+            .collect();
+        let samples = self
+            .samples
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        MetricsSnapshot {
+            counters,
+            gauges,
+            histograms,
+            samples,
+        }
+    }
+
+    /// JSON dump: `counters`, `gauges`, `samples` and `histograms` under
+    /// distinct keys; labeled series appear as `name{k=v}` entries.
     pub fn to_json(&self) -> Json {
+        let snap = self.snapshot();
         let mut counters = Json::obj();
-        for (k, v) in self.counters.lock().unwrap().iter() {
-            counters = counters.set(k, v.load(Ordering::Relaxed));
+        for (k, v) in &snap.counters {
+            counters = counters.set(&k.display(), *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &snap.gauges {
+            gauges = gauges.set(&k.display(), *v);
         }
         let mut samples = Json::obj();
-        for (k, s) in self.samples.lock().unwrap().iter() {
+        for (k, s) in &snap.samples {
             samples = samples.set(
                 k,
                 Json::obj()
-                    .set("count", s.len())
+                    .set("count", s.observed())
                     .set("mean", s.mean())
                     .set("p50", s.p50())
                     .set("p95", s.p95())
@@ -77,7 +349,24 @@ impl Metrics {
                     .set("max", s.max()),
             );
         }
-        Json::obj().set("counters", counters).set("samples", samples)
+        let mut hists = Json::obj();
+        for (k, h) in &snap.histograms {
+            hists = hists.set(
+                &k.display(),
+                Json::obj()
+                    .set("count", h.count())
+                    .set("sum", h.sum())
+                    .set("p50", h.p50())
+                    .set("p95", h.p95())
+                    .set("p99", h.p99())
+                    .set("max", h.max()),
+            );
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("samples", samples)
+            .set("histograms", hists)
     }
 }
 
@@ -108,11 +397,63 @@ mod tests {
     #[test]
     fn gauges_overwrite() {
         let m = Metrics::new();
-        m.set("backend.queue_depth.a", 7);
-        m.set("backend.queue_depth.a", 3);
-        assert_eq!(m.counter("backend.queue_depth.a"), 3);
-        m.incr("backend.queue_depth.a", 1); // counters and gauges share the store
-        assert_eq!(m.counter("backend.queue_depth.a"), 4);
+        m.set("backend.queue_depth", 7);
+        m.set("backend.queue_depth", 3);
+        assert_eq!(m.gauge("backend.queue_depth"), 3);
+    }
+
+    #[test]
+    fn counters_and_gauges_are_separate_stores() {
+        // Regression for the old aliasing bug: incr after set used to
+        // accumulate onto the gauge value through the shared store.
+        let m = Metrics::new();
+        m.set("depth", 7);
+        m.incr("depth", 1);
+        assert_eq!(m.gauge("depth"), 7, "incr must not touch the gauge");
+        assert_eq!(m.counter("depth"), 1, "set must not seed the counter");
+        let j = m.to_json();
+        assert_eq!(j.at(&["gauges", "depth"]).unwrap().as_u64(), Some(7));
+        assert_eq!(j.at(&["counters", "depth"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn labeled_series_are_distinct() {
+        let m = Metrics::new();
+        m.incr_with("backend.settled", &[("job", "a")], 2);
+        m.incr_with("backend.settled", &[("job", "b")], 5);
+        assert_eq!(m.counter_with("backend.settled", &[("job", "a")]), 2);
+        assert_eq!(m.counter_with("backend.settled", &[("job", "b")]), 5);
+        assert_eq!(m.counter("backend.settled"), 0);
+        // Label order never matters: keys canonicalize sorted.
+        m.incr_with("x", &[("b", "2"), ("a", "1")], 1);
+        assert_eq!(m.counter_with("x", &[("a", "1"), ("b", "2")]), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            // 1ms..100ms spread
+            m.observe_hist("lat", &[("level", "1")], i as f64 * 1e-3);
+        }
+        let h = m.histogram("lat", &[("level", "1")]).unwrap();
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 5.050).abs() < 1e-9);
+        // p50 must land near 50ms (inside the (25ms, 50ms] bucket).
+        assert!(h.p50() > 0.025 && h.p50() <= 0.050, "p50 {}", h.p50());
+        assert!(h.p99() > 0.05 && h.p99() <= 0.1, "p99 {}", h.p99());
+        assert_eq!(h.max(), 0.1);
+        // Bucket counts cover all observations.
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let mut h = Histogram::default();
+        h.observe(1e9); // way past the last finite bound
+        assert_eq!(h.count(), 1);
+        assert_eq!(*h.bucket_counts().last().unwrap(), 1);
+        assert_eq!(h.percentile(50.0), 1e9, "+Inf bucket reports the max");
     }
 
     #[test]
@@ -120,10 +461,19 @@ mod tests {
         let m = Metrics::new();
         m.incr("a", 7);
         m.observe("b", 1.0);
+        m.set("g", 4);
+        m.observe_hist("h", &[("tier", "pfs")], 0.5);
         let j = m.to_json();
         assert_eq!(j.at(&["counters", "a"]).unwrap().as_u64(), Some(7));
         assert_eq!(
             j.at(&["samples", "b", "count"]).unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(j.at(&["gauges", "g"]).unwrap().as_u64(), Some(4));
+        assert_eq!(
+            j.at(&["histograms", "h{tier=pfs}", "count"])
+                .unwrap()
+                .as_u64(),
             Some(1)
         );
     }

@@ -1,0 +1,254 @@
+//! Embedded HTTP exposition endpoint: `/metrics` (Prometheus text),
+//! `/healthz` (liveness) and `/readyz` (readiness), served from a
+//! background thread on a plain `std::net::TcpListener` — no HTTP
+//! framework, the daemon only needs GET + fixed routes.
+//!
+//! The listener runs nonblocking with a short accept-poll sleep (the same
+//! pattern as the daemon's IPC socket loop) so shutdown is prompt, and
+//! binds `127.0.0.1:0`-style addresses for tests.
+
+use crate::metrics::Metrics;
+use crate::obs::prom;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Shared state the endpoint serves from.
+#[derive(Clone)]
+pub struct ObsState {
+    /// Registry scraped by `/metrics`.
+    pub metrics: Arc<Metrics>,
+    /// Readiness flag for `/readyz` (daemon sets it after journal
+    /// replay, once queues are accepting).
+    pub ready: Arc<AtomicBool>,
+}
+
+/// Handle to a running observability HTTP server; dropping it stops the
+/// accept loop.
+pub struct ObsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `bind` (e.g. `127.0.0.1:9090`, or port 0 for an ephemeral
+    /// test port) and serve until stopped.
+    pub fn start(bind: &str, state: ObsState) -> Result<ObsServer> {
+        let listener =
+            TcpListener::bind(bind).with_context(|| format!("obs: bind {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("veloc-obs-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = serve_one(stream, &state);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })?;
+        Ok(ObsServer {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves port 0 binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_one(mut stream: TcpStream, state: &ObsState) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    // Read until the end of the request head; GETs have no body.
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.split_whitespace();
+    let method = parts.next().unwrap_or_default();
+    let path = parts.next().unwrap_or_default();
+    let (status, ctype, body) = route(method, path, state);
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+fn route(method: &str, path: &str, state: &ObsState) -> (&'static str, &'static str, String) {
+    if method != "GET" {
+        return ("405 Method Not Allowed", "text/plain", "method not allowed\n".into());
+    }
+    match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            prom::render(&state.metrics.snapshot()),
+        ),
+        "/healthz" => ("200 OK", "text/plain", "ok\n".into()),
+        "/readyz" => {
+            if state.ready.load(Ordering::Relaxed) {
+                ("200 OK", "text/plain", "ready\n".into())
+            } else {
+                ("503 Service Unavailable", "text/plain", "not ready\n".into())
+            }
+        }
+        _ => ("404 Not Found", "text/plain", "not found\n".into()),
+    }
+}
+
+/// Minimal HTTP GET against the observability endpoint; returns
+/// `(status code, body)`. Used by `veloc scrape`, tests and CI.
+pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, String)> {
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("obs: resolve {addr}"))?
+        .next()
+        .context("obs: no address")?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .context("obs: malformed HTTP response")?;
+    let body = match resp.find("\r\n\r\n") {
+        Some(i) => resp[i + 4..].to_string(),
+        None => String::new(),
+    };
+    Ok((status, body))
+}
+
+/// Poll `/healthz` then `/readyz` until both return 200 or the deadline
+/// passes. Returns an error naming the endpoint that never came up.
+pub fn wait_ready(addr: &str, deadline: Duration) -> Result<()> {
+    let t0 = Instant::now();
+    let step = Duration::from_millis(50);
+    for path in ["/healthz", "/readyz"] {
+        loop {
+            match http_get(addr, path, Duration::from_millis(500)) {
+                Ok((200, _)) => break,
+                _ if t0.elapsed() > deadline => {
+                    anyhow::bail!("obs: {path} not 200 within {deadline:?}")
+                }
+                _ => std::thread::sleep(step),
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server() -> (ObsServer, Arc<Metrics>, Arc<AtomicBool>) {
+        let metrics = Metrics::new();
+        let ready = Arc::new(AtomicBool::new(false));
+        let srv = ObsServer::start(
+            "127.0.0.1:0",
+            ObsState {
+                metrics: Arc::clone(&metrics),
+                ready: Arc::clone(&ready),
+            },
+        )
+        .unwrap();
+        (srv, metrics, ready)
+    }
+
+    #[test]
+    fn healthz_is_up_immediately() {
+        let (srv, _m, _r) = server();
+        let (code, body) =
+            http_get(&srv.addr().to_string(), "/healthz", Duration::from_secs(2)).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "ok\n");
+    }
+
+    #[test]
+    fn readyz_tracks_the_flag() {
+        let (srv, _m, ready) = server();
+        let addr = srv.addr().to_string();
+        let (code, _) = http_get(&addr, "/readyz", Duration::from_secs(2)).unwrap();
+        assert_eq!(code, 503);
+        ready.store(true, Ordering::Relaxed);
+        let (code, body) = http_get(&addr, "/readyz", Duration::from_secs(2)).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "ready\n");
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_valid_exposition() {
+        let (srv, m, _r) = server();
+        m.incr("ckpt.requests", 4);
+        m.observe_hist("ckpt.stage", &[("stage", "local"), ("level", "local")], 0.01);
+        let (code, body) =
+            http_get(&srv.addr().to_string(), "/metrics", Duration::from_secs(2)).unwrap();
+        assert_eq!(code, 200);
+        let fams = crate::obs::prom::parse_exposition(&body).unwrap();
+        assert!(fams.iter().any(|f| f.name == "veloc_ckpt_requests"));
+    }
+
+    #[test]
+    fn unknown_path_is_404_and_post_is_405() {
+        let (srv, _m, _r) = server();
+        let addr = srv.addr().to_string();
+        let (code, _) = http_get(&addr, "/nope", Duration::from_secs(2)).unwrap();
+        assert_eq!(code, 404);
+        // Raw POST.
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"POST /metrics HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 405"));
+    }
+}

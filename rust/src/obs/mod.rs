@@ -1,0 +1,56 @@
+//! Observability plane: span tracing ([`span`]), Prometheus text
+//! exposition + validation ([`prom`]) and the embedded HTTP endpoint
+//! serving `/metrics`, `/healthz` and `/readyz` ([`http`]).
+//!
+//! The span recorder threads through the checkpoint pipeline (capture →
+//! checksum → delta → local → partner → erasure → transfer → daemon
+//! settle) and the restore plane (cache hits, single-flight joins,
+//! prefetch waves); whole waves export as Chrome trace-event JSON via
+//! `veloc trace`. The exposition side renders the full `Metrics`
+//! registry — counters, gauges, labeled histograms, reservoir summaries —
+//! in the Prometheus text format, served by the daemon when
+//! `obs.http` is configured.
+
+pub mod http;
+pub mod prom;
+pub mod span;
+
+pub use http::{http_get, wait_ready, ObsServer, ObsState};
+pub use span::{stage_summary, ObsHandle, SpanId, SpanRec, TraceRecorder};
+
+/// Observability configuration (the `obs` section of the config file).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Record pipeline/restore spans (exportable via `veloc trace`).
+    pub trace: bool,
+    /// Bind address for the daemon's `/metrics`, `/healthz` and
+    /// `/readyz` endpoint (e.g. `127.0.0.1:9090`); `None` disables it.
+    pub http: Option<String>,
+    /// Retained-span bound for the recorder.
+    pub span_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace: false,
+            http: None,
+            span_capacity: span::SPAN_CAPACITY_DEFAULT,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Reject inconsistent settings (called from `VelocConfig::validate`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.span_capacity == 0 {
+            anyhow::bail!("obs.span_capacity must be > 0");
+        }
+        if let Some(h) = &self.http {
+            if h.is_empty() {
+                anyhow::bail!("obs.http must be a bind address like 127.0.0.1:9090");
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,722 @@
+//! Prometheus text exposition (format v0.0.4) and a strict hand-rolled
+//! parser for validating it.
+//!
+//! [`render`] turns a [`MetricsSnapshot`] into the text format: every
+//! dotted metric name is sanitized into the `veloc_*` namespace, each
+//! family gets `# HELP` / `# TYPE` lines, label values are escaped,
+//! histograms emit cumulative `_bucket{le=...}` series ending in `+Inf`
+//! plus `_sum`/`_count`, and sample reservoirs export as summaries with
+//! `quantile` labels.
+//!
+//! [`parse_exposition`] is the inverse direction used by tests, `veloc
+//! scrape` and CI: it checks name legality, TYPE-before-samples ordering,
+//! label syntax and escaping, bucket monotonicity and the
+//! `+Inf == _count` invariant — with no regex dependency.
+
+use crate::metrics::{Histogram, MetricsSnapshot, SeriesKey, DURATION_BUCKETS};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Map a dotted metric name into a legal Prometheus name in the
+/// `veloc_` namespace: `backend.queue_depth` → `veloc_backend_queue_depth`.
+pub fn sanitize_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 6);
+    out.push_str("veloc_");
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphanumeric() || c == '_' || c == ':';
+        let ok = ok && !(i == 0 && c.is_ascii_digit());
+        out.push(if ok { c } else { '_' });
+    }
+    out
+}
+
+/// Escape a label value per the exposition format (`\` → `\\`,
+/// `"` → `\"`, newline → `\n`).
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut pairs: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", sanitize_label_key(k), escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+fn sanitize_label_key(k: &str) -> String {
+    k.chars()
+        .enumerate()
+        .map(|(i, c)| {
+            let ok = c.is_ascii_alphanumeric() || c == '_';
+            let ok = ok && !(i == 0 && c.is_ascii_digit());
+            if ok { c } else { '_' }
+        })
+        .collect()
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Claim a unique family name: on collision across kinds (a counter and a
+/// gauge sharing one dotted name) the later kind gets `suffix` appended.
+fn claim(used: &mut BTreeSet<String>, base: String, suffix: &str) -> String {
+    if used.insert(base.clone()) {
+        return base;
+    }
+    let alt = format!("{base}{suffix}");
+    used.insert(alt.clone());
+    alt
+}
+
+fn render_simple(
+    out: &mut String,
+    used: &mut BTreeSet<String>,
+    series: &[(SeriesKey, u64)],
+    typ: &str,
+    suffix: &str,
+) {
+    let mut by_family: BTreeMap<String, Vec<&(SeriesKey, u64)>> = BTreeMap::new();
+    for s in series {
+        by_family.entry(s.0.name.clone()).or_default().push(s);
+    }
+    for (family, rows) in by_family {
+        let name = claim(used, sanitize_name(&family), suffix);
+        out.push_str(&format!(
+            "# HELP {name} veloc {} `{}`\n",
+            typ,
+            escape_help(&family)
+        ));
+        out.push_str(&format!("# TYPE {name} {typ}\n"));
+        for (key, v) in rows {
+            out.push_str(&format!("{name}{} {v}\n", label_block(&key.labels, None)));
+        }
+    }
+}
+
+fn render_histogram(out: &mut String, name: &str, key: &SeriesKey, h: &Histogram) {
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (i, bound) in DURATION_BUCKETS.iter().enumerate() {
+        cum += counts[i];
+        out.push_str(&format!(
+            "{name}_bucket{} {cum}\n",
+            label_block(&key.labels, Some(("le", &fmt_f64(*bound))))
+        ));
+    }
+    out.push_str(&format!(
+        "{name}_bucket{} {}\n",
+        label_block(&key.labels, Some(("le", "+Inf"))),
+        h.count()
+    ));
+    out.push_str(&format!(
+        "{name}_sum{} {}\n",
+        label_block(&key.labels, None),
+        fmt_f64(h.sum())
+    ));
+    out.push_str(&format!(
+        "{name}_count{} {}\n",
+        label_block(&key.labels, None),
+        h.count()
+    ));
+}
+
+/// Render a metrics snapshot as Prometheus text exposition v0.0.4.
+pub fn render(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut used: BTreeSet<String> = BTreeSet::new();
+
+    render_simple(&mut out, &mut used, &snap.counters, "counter", "_total");
+    render_simple(&mut out, &mut used, &snap.gauges, "gauge", "_current");
+
+    let mut hist_families: BTreeMap<String, Vec<&(SeriesKey, Histogram)>> = BTreeMap::new();
+    for s in &snap.histograms {
+        hist_families.entry(s.0.name.clone()).or_default().push(s);
+    }
+    for (family, rows) in hist_families {
+        let name = claim(&mut used, sanitize_name(&family), "_hist");
+        out.push_str(&format!(
+            "# HELP {name} veloc histogram `{}`\n",
+            escape_help(&family)
+        ));
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        for (key, h) in rows {
+            render_histogram(&mut out, &name, key, h);
+        }
+    }
+
+    for (family, s) in &snap.samples {
+        let name = claim(&mut used, sanitize_name(family), "_summary");
+        out.push_str(&format!(
+            "# HELP {name} veloc summary `{}`\n",
+            escape_help(family)
+        ));
+        out.push_str(&format!("# TYPE {name} summary\n"));
+        for (q, v) in [(0.5, s.p50()), (0.95, s.p95()), (0.99, s.p99())] {
+            out.push_str(&format!(
+                "{name}{{quantile=\"{q}\"}} {}\n",
+                fmt_f64(v)
+            ));
+        }
+        out.push_str(&format!(
+            "{name}_sum {}\n",
+            fmt_f64(s.mean() * s.observed() as f64)
+        ));
+        out.push_str(&format!("{name}_count {}\n", s.observed()));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Parsing / validation
+// ---------------------------------------------------------------------------
+
+/// One parsed sample line.
+#[derive(Clone, Debug)]
+pub struct PromSample {
+    /// Full sample name (`veloc_ckpt_stage_bucket`).
+    pub name: String,
+    /// Parsed (unescaped) label pairs, in source order.
+    pub labels: Vec<(String, String)>,
+    /// Sample value (`+Inf`/`-Inf`/`NaN` accepted).
+    pub value: f64,
+}
+
+/// One parsed metric family (a `# TYPE` block and its samples).
+#[derive(Clone, Debug)]
+pub struct PromFamily {
+    /// Family name as declared by `# TYPE`.
+    pub name: String,
+    /// `counter`, `gauge`, `histogram`, `summary` or `untyped`.
+    pub typ: String,
+    /// Whether a `# HELP` line was seen.
+    pub help: bool,
+    /// Samples belonging to the family.
+    pub samples: Vec<PromSample>,
+}
+
+fn legal_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn legal_label_key(k: &str) -> bool {
+    let mut chars = k.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_value(tok: &str) -> Result<f64, String> {
+    match tok {
+        "+Inf" | "Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        _ => tok
+            .parse::<f64>()
+            .map_err(|_| format!("bad sample value `{tok}`")),
+    }
+}
+
+/// Parse one `name{labels} value` line.
+fn parse_sample_line(line: &str) -> Result<PromSample, String> {
+    let bytes: Vec<char> = line.chars().collect();
+    let mut i = 0;
+    while i < bytes.len() && bytes[i] != '{' && !bytes[i].is_whitespace() {
+        i += 1;
+    }
+    let name: String = bytes[..i].iter().collect();
+    if !legal_name(&name) {
+        return Err(format!("illegal metric name `{name}`"));
+    }
+    let mut labels = Vec::new();
+    if i < bytes.len() && bytes[i] == '{' {
+        i += 1;
+        loop {
+            while i < bytes.len() && bytes[i] == ' ' {
+                i += 1;
+            }
+            if i < bytes.len() && bytes[i] == '}' {
+                i += 1;
+                break;
+            }
+            let kstart = i;
+            while i < bytes.len() && bytes[i] != '=' {
+                i += 1;
+            }
+            if i >= bytes.len() {
+                return Err(format!("unterminated label key in `{line}`"));
+            }
+            let key: String = bytes[kstart..i].iter().collect();
+            if !legal_label_key(&key) {
+                return Err(format!("illegal label key `{key}` in `{line}`"));
+            }
+            i += 1; // '='
+            if i >= bytes.len() || bytes[i] != '"' {
+                return Err(format!("label value must be quoted in `{line}`"));
+            }
+            i += 1;
+            let mut val = String::new();
+            loop {
+                if i >= bytes.len() {
+                    return Err(format!("unterminated label value in `{line}`"));
+                }
+                match bytes[i] {
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\\' => {
+                        i += 1;
+                        if i >= bytes.len() {
+                            return Err(format!("dangling escape in `{line}`"));
+                        }
+                        match bytes[i] {
+                            '\\' => val.push('\\'),
+                            '"' => val.push('"'),
+                            'n' => val.push('\n'),
+                            c => return Err(format!("bad escape `\\{c}` in `{line}`")),
+                        }
+                        i += 1;
+                    }
+                    c => {
+                        val.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            labels.push((key, val));
+            if i < bytes.len() && bytes[i] == ',' {
+                i += 1;
+                continue;
+            }
+            if i < bytes.len() && bytes[i] == '}' {
+                i += 1;
+                break;
+            }
+            return Err(format!("expected `,` or `}}` after label in `{line}`"));
+        }
+    }
+    let rest: String = bytes[i..].iter().collect();
+    let mut toks = rest.split_whitespace();
+    let value = parse_value(toks.next().ok_or_else(|| format!("missing value in `{line}`"))?)?;
+    // An optional trailing timestamp is legal; anything further is not.
+    if let Some(ts) = toks.next() {
+        ts.parse::<i64>()
+            .map_err(|_| format!("bad timestamp `{ts}` in `{line}`"))?;
+    }
+    if toks.next().is_some() {
+        return Err(format!("trailing garbage in `{line}`"));
+    }
+    Ok(PromSample { name, labels, value })
+}
+
+/// Which declared family owns a sample named `name`?
+fn owner<'a>(
+    families: &'a mut BTreeMap<String, PromFamily>,
+    order: &[String],
+    name: &str,
+) -> Option<&'a mut PromFamily> {
+    // Exact match wins; otherwise histogram/summary suffix series.
+    let mut pick: Option<&str> = None;
+    for fam in order {
+        let f = &families[fam];
+        let hit = *fam == name
+            || (f.typ == "histogram"
+                && (name == format!("{fam}_bucket")
+                    || name == format!("{fam}_sum")
+                    || name == format!("{fam}_count")))
+            || (f.typ == "summary"
+                && (name == format!("{fam}_sum") || name == format!("{fam}_count")));
+        let better = match pick {
+            None => true,
+            Some(p) => fam.len() > p.len(),
+        };
+        if hit && better {
+            pick = Some(fam);
+        }
+    }
+    let key = pick?.to_string();
+    families.get_mut(&key)
+}
+
+/// Parse and validate a full exposition document. Checks, per family:
+/// name legality, at most one `# TYPE` declared before its samples,
+/// label syntax/escaping, histogram bucket monotonicity, `+Inf` bucket
+/// equal to `_count`, and `_sum`/`_count` presence for histograms and
+/// summaries. Returns the parsed families on success.
+pub fn parse_exposition(text: &str) -> Result<Vec<PromFamily>, String> {
+    let mut families: BTreeMap<String, PromFamily> = BTreeMap::new();
+    let mut order: Vec<String> = Vec::new();
+    let mut help: BTreeSet<String> = BTreeSet::new();
+
+    for raw in text.lines() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or_default().to_string();
+            if !legal_name(&name) {
+                return Err(format!("illegal family name in HELP: `{name}`"));
+            }
+            help.insert(name);
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut toks = rest.split_whitespace();
+            let name = toks.next().unwrap_or_default().to_string();
+            let typ = toks.next().unwrap_or_default().to_string();
+            if !legal_name(&name) {
+                return Err(format!("illegal family name in TYPE: `{name}`"));
+            }
+            if !matches!(
+                typ.as_str(),
+                "counter" | "gauge" | "histogram" | "summary" | "untyped"
+            ) {
+                return Err(format!("unknown family type `{typ}` for `{name}`"));
+            }
+            if families.contains_key(&name) {
+                return Err(format!("duplicate TYPE for `{name}`"));
+            }
+            families.insert(
+                name.clone(),
+                PromFamily {
+                    name: name.clone(),
+                    typ,
+                    help: help.contains(&name),
+                    samples: Vec::new(),
+                },
+            );
+            order.push(name);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+        let sample = parse_sample_line(line)?;
+        match owner(&mut families, &order, &sample.name) {
+            Some(f) => f.samples.push(sample),
+            None => {
+                return Err(format!(
+                    "sample `{}` has no preceding TYPE declaration",
+                    sample.name
+                ))
+            }
+        }
+    }
+
+    for f in families.values() {
+        validate_family(f)?;
+    }
+    Ok(order.into_iter().map(|n| families.remove(&n).unwrap()).collect())
+}
+
+fn labels_without(labels: &[(String, String)], drop: &str) -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> =
+        labels.iter().filter(|(k, _)| k != drop).cloned().collect();
+    out.sort();
+    out
+}
+
+fn validate_family(f: &PromFamily) -> Result<(), String> {
+    if !f.help {
+        return Err(format!("family `{}` is missing a HELP line", f.name));
+    }
+    match f.typ.as_str() {
+        "histogram" => validate_histogram(f),
+        "summary" => validate_summary(f),
+        _ => {
+            if f.samples.is_empty() {
+                return Err(format!("family `{}` declared but has no samples", f.name));
+            }
+            Ok(())
+        }
+    }
+}
+
+fn validate_histogram(f: &PromFamily) -> Result<(), String> {
+    let bucket = format!("{}_bucket", f.name);
+    let sum = format!("{}_sum", f.name);
+    let count = format!("{}_count", f.name);
+    // Group by label set minus `le`.
+    let mut groups: BTreeMap<Vec<(String, String)>, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut sums: BTreeSet<Vec<(String, String)>> = BTreeSet::new();
+    let mut counts: BTreeMap<Vec<(String, String)>, f64> = BTreeMap::new();
+    for s in &f.samples {
+        let key = labels_without(&s.labels, "le");
+        if s.name == bucket {
+            let le = s
+                .labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .ok_or_else(|| format!("`{bucket}` sample without le label"))?;
+            let bound = parse_value(&le.1)?;
+            groups.entry(key).or_default().push((bound, s.value));
+        } else if s.name == sum {
+            sums.insert(key);
+        } else if s.name == count {
+            counts.insert(key, s.value);
+        }
+    }
+    if groups.is_empty() {
+        return Err(format!("histogram `{}` has no buckets", f.name));
+    }
+    for (key, mut rows) in groups {
+        rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in rows.windows(2) {
+            if w[1].1 < w[0].1 {
+                return Err(format!(
+                    "histogram `{}` buckets not monotonic at le={}",
+                    f.name, w[1].0
+                ));
+            }
+        }
+        let last = rows.last().unwrap();
+        if !last.0.is_infinite() {
+            return Err(format!("histogram `{}` is missing the +Inf bucket", f.name));
+        }
+        let c = counts
+            .get(&key)
+            .ok_or_else(|| format!("histogram `{}` is missing `{count}`", f.name))?;
+        if (last.1 - c).abs() > 1e-9 {
+            return Err(format!(
+                "histogram `{}`: +Inf bucket {} != _count {}",
+                f.name, last.1, c
+            ));
+        }
+        if !sums.contains(&key) {
+            return Err(format!("histogram `{}` is missing `{sum}`", f.name));
+        }
+    }
+    Ok(())
+}
+
+fn validate_summary(f: &PromFamily) -> Result<(), String> {
+    let sum = format!("{}_sum", f.name);
+    let count = format!("{}_count", f.name);
+    let mut quantile_keys: BTreeSet<Vec<(String, String)>> = BTreeSet::new();
+    let mut sums: BTreeSet<Vec<(String, String)>> = BTreeSet::new();
+    let mut counts: BTreeSet<Vec<(String, String)>> = BTreeSet::new();
+    for s in &f.samples {
+        let key = labels_without(&s.labels, "quantile");
+        if s.name == f.name {
+            quantile_keys.insert(key);
+        } else if s.name == sum {
+            sums.insert(key);
+        } else if s.name == count {
+            counts.insert(key);
+        }
+    }
+    for key in &quantile_keys {
+        if !sums.contains(key) {
+            return Err(format!("summary `{}` is missing `{sum}`", f.name));
+        }
+        if !counts.contains(key) {
+            return Err(format!("summary `{}` is missing `{count}`", f.name));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+
+    fn populated() -> std::sync::Arc<Metrics> {
+        let m = Metrics::new();
+        m.incr("ckpt.requests", 12);
+        m.incr_with("backend.settled", &[("job", "jobA")], 3);
+        m.set_with("backend.queue_depth", &[("job", "jobA")], 2);
+        m.observe("restore.latency", 0.004);
+        m.observe("restore.latency", 0.009);
+        for i in 1..=50 {
+            m.observe_hist(
+                "ckpt.stage",
+                &[("stage", "local"), ("level", "local")],
+                i as f64 * 1e-4,
+            );
+        }
+        m
+    }
+
+    #[test]
+    fn render_is_valid_exposition() {
+        let text = render(&populated().snapshot());
+        let fams = parse_exposition(&text).expect("render must self-validate");
+        assert!(fams.iter().any(|f| f.name == "veloc_ckpt_requests"));
+        assert!(fams
+            .iter()
+            .any(|f| f.name == "veloc_ckpt_stage" && f.typ == "histogram"));
+        assert!(fams
+            .iter()
+            .any(|f| f.name == "veloc_restore_latency" && f.typ == "summary"));
+    }
+
+    #[test]
+    fn round_trip_values_survive() {
+        let m = populated();
+        let text = render(&m.snapshot());
+        let fams = parse_exposition(&text).unwrap();
+        let settled = fams
+            .iter()
+            .find(|f| f.name == "veloc_backend_settled")
+            .unwrap();
+        assert_eq!(settled.samples.len(), 1);
+        assert_eq!(settled.samples[0].value, 3.0);
+        assert_eq!(
+            settled.samples[0].labels,
+            vec![("job".to_string(), "jobA".to_string())]
+        );
+        let hist = fams.iter().find(|f| f.name == "veloc_ckpt_stage").unwrap();
+        let count = hist
+            .samples
+            .iter()
+            .find(|s| s.name == "veloc_ckpt_stage_count")
+            .unwrap();
+        assert_eq!(count.value, 50.0);
+    }
+
+    #[test]
+    fn names_are_sanitized() {
+        assert_eq!(sanitize_name("backend.queue_depth"), "veloc_backend_queue_depth");
+        assert_eq!(sanitize_name("agg.bytes.payload"), "veloc_agg_bytes_payload");
+        assert!(legal_name(&sanitize_name("weird-name with spaces")));
+        assert!(legal_name(&sanitize_name("9starts.with.digit")));
+    }
+
+    #[test]
+    fn label_escaping_round_trips() {
+        let m = Metrics::new();
+        m.incr_with("c", &[("path", "a\\b\"c\nd")], 1);
+        let text = render(&m.snapshot());
+        let fams = parse_exposition(&text).unwrap();
+        let f = fams.iter().find(|f| f.name == "veloc_c").unwrap();
+        assert_eq!(f.samples[0].labels[0].1, "a\\b\"c\nd");
+    }
+
+    #[test]
+    fn counter_gauge_collision_gets_suffix() {
+        let m = Metrics::new();
+        m.incr("depth", 1);
+        m.set("depth", 9);
+        let text = render(&m.snapshot());
+        let fams = parse_exposition(&text).unwrap();
+        let counter = fams.iter().find(|f| f.name == "veloc_depth").unwrap();
+        assert_eq!(counter.typ, "counter");
+        let gauge = fams.iter().find(|f| f.name == "veloc_depth_current").unwrap();
+        assert_eq!(gauge.typ, "gauge");
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for (doc, why) in [
+            ("veloc_x 1\n", "sample without TYPE"),
+            (
+                "# HELP veloc_x h\n# TYPE veloc_x counter\n# TYPE veloc_x counter\nveloc_x 1\n",
+                "duplicate TYPE",
+            ),
+            (
+                "# HELP 9bad h\n# TYPE 9bad counter\n9bad 1\n",
+                "illegal name",
+            ),
+            (
+                "# HELP veloc_x h\n# TYPE veloc_x counter\nveloc_x{k=unquoted} 1\n",
+                "unquoted label",
+            ),
+            (
+                "# HELP veloc_x h\n# TYPE veloc_x counter\nveloc_x notanumber\n",
+                "bad value",
+            ),
+            (
+                "# TYPE veloc_x counter\nveloc_x 1\n",
+                "missing HELP",
+            ),
+        ] {
+            assert!(parse_exposition(doc).is_err(), "should reject: {why}");
+        }
+    }
+
+    #[test]
+    fn parser_rejects_broken_histograms() {
+        let head = "# HELP veloc_h x\n# TYPE veloc_h histogram\n";
+        // Non-monotonic buckets.
+        let doc = format!(
+            "{head}veloc_h_bucket{{le=\"0.1\"}} 5\nveloc_h_bucket{{le=\"1\"}} 3\n\
+             veloc_h_bucket{{le=\"+Inf\"}} 5\nveloc_h_sum 1\nveloc_h_count 5\n"
+        );
+        assert!(parse_exposition(&doc).unwrap_err().contains("monotonic"));
+        // Missing +Inf.
+        let doc = format!(
+            "{head}veloc_h_bucket{{le=\"0.1\"}} 5\nveloc_h_sum 1\nveloc_h_count 5\n"
+        );
+        assert!(parse_exposition(&doc).unwrap_err().contains("+Inf"));
+        // +Inf != _count.
+        let doc = format!(
+            "{head}veloc_h_bucket{{le=\"+Inf\"}} 4\nveloc_h_sum 1\nveloc_h_count 5\n"
+        );
+        assert!(parse_exposition(&doc).unwrap_err().contains("_count"));
+        // Missing _sum.
+        let doc = format!("{head}veloc_h_bucket{{le=\"+Inf\"}} 5\nveloc_h_count 5\n");
+        assert!(parse_exposition(&doc).unwrap_err().contains("_sum"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let m = Metrics::new();
+        for v in [1e-5, 1e-4, 1e-3, 10.0, 1e4] {
+            m.observe_hist("lat", &[], v);
+        }
+        let text = render(&m.snapshot());
+        let fams = parse_exposition(&text).unwrap();
+        let f = fams.iter().find(|f| f.name == "veloc_lat").unwrap();
+        let buckets: Vec<&PromSample> = f
+            .samples
+            .iter()
+            .filter(|s| s.name == "veloc_lat_bucket")
+            .collect();
+        assert_eq!(buckets.len(), DURATION_BUCKETS.len() + 1);
+        let last = buckets.last().unwrap();
+        assert_eq!(last.labels.iter().find(|(k, _)| k == "le").unwrap().1, "+Inf");
+        assert_eq!(last.value, 5.0, "+Inf bucket counts everything");
+    }
+}

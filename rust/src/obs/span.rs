@@ -1,0 +1,544 @@
+//! Span tracing: a lightweight recorder for the checkpoint/restore
+//! pipeline with monotonic timestamps, span ids and parent links.
+//!
+//! The hot path is free when tracing is off: every entry point loads one
+//! relaxed atomic and returns [`SpanId::NONE`] without allocating. When
+//! on, spans are appended to a capacity-bounded buffer under a mutex —
+//! checkpoint pipelines produce a handful of spans per command, so the
+//! lock is uncontended in practice (the `throughput_bench` overhead gate
+//! holds the enabled path to <= 5% of the traced wave).
+//!
+//! Span timelines export as Chrome trace-event JSON (`chrome://tracing`,
+//! Perfetto) via [`TraceRecorder::to_chrome_json`], and
+//! [`TraceRecorder::validate`] asserts well-formedness (every span
+//! closed, parents resolve, children nest inside their parents).
+
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Identifier of one recorded span. `NONE` (id 0) is returned whenever
+/// tracing is disabled, and is accepted (as a no-op) everywhere a span id
+/// is consumed — callers never need to branch on the enabled state.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanId(pub u64);
+
+impl SpanId {
+    /// The null span: no recording happened.
+    pub const NONE: SpanId = SpanId(0);
+
+    /// Whether this id refers to a recorded span.
+    pub fn is_some(&self) -> bool {
+        self.0 != 0
+    }
+}
+
+/// One recorded span (or instantaneous event, when `end_us == start_us`
+/// and `instant` is set).
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    /// Unique id (> 0).
+    pub id: u64,
+    /// Parent span id, 0 for roots.
+    pub parent: u64,
+    /// Stage name (`capture`, `local`, `erasure`, `settle`, ...).
+    pub name: String,
+    /// Microseconds since the recorder's epoch.
+    pub start_us: u64,
+    /// Close time; `None` while the span is open.
+    pub end_us: Option<u64>,
+    /// Dimensions (`rank`, `level`, `version`, ...).
+    pub labels: Vec<(String, String)>,
+    /// Chrome trace lane (rank id for pipeline spans).
+    pub tid: u64,
+    /// Instantaneous event (cache hit, single-flight join) — rendered as
+    /// a Chrome `i` event instead of a complete `X` span.
+    pub instant: bool,
+}
+
+/// Default bound on retained spans; past it new opens are counted as
+/// dropped instead of growing memory.
+pub const SPAN_CAPACITY_DEFAULT: usize = 65_536;
+
+struct TraceState {
+    spans: Vec<SpanRec>,
+    /// Open wave roots by checkpoint version.
+    waves: BTreeMap<u64, SpanId>,
+    dropped: u64,
+}
+
+/// The span recorder. One per runtime; shared by every rank's pipeline,
+/// the restore plane and the daemon. Cheap to clone via `Arc`.
+pub struct TraceRecorder {
+    enabled: AtomicBool,
+    next: AtomicU64,
+    epoch: Instant,
+    capacity: usize,
+    state: Mutex<TraceState>,
+}
+
+impl TraceRecorder {
+    /// Build a recorder; `enabled = false` makes every call a no-op until
+    /// [`TraceRecorder::set_enabled`] flips it.
+    pub fn new(enabled: bool) -> Arc<Self> {
+        Self::with_capacity(enabled, SPAN_CAPACITY_DEFAULT)
+    }
+
+    /// Build with an explicit retained-span bound.
+    pub fn with_capacity(enabled: bool, capacity: usize) -> Arc<Self> {
+        Arc::new(TraceRecorder {
+            enabled: AtomicBool::new(enabled),
+            next: AtomicU64::new(1),
+            epoch: Instant::now(),
+            capacity: capacity.max(16),
+            state: Mutex::new(TraceState {
+                spans: Vec::new(),
+                waves: BTreeMap::new(),
+                dropped: 0,
+            }),
+        })
+    }
+
+    /// Whether spans are currently recorded (one relaxed load).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on or off at runtime.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a span starting now.
+    pub fn open(
+        &self,
+        name: &str,
+        parent: SpanId,
+        labels: &[(&str, &str)],
+        tid: u64,
+    ) -> SpanId {
+        self.open_at_us(name, parent, labels, tid, None)
+    }
+
+    /// Open a span whose start was measured earlier (the capture span
+    /// opens after the encode it times).
+    pub fn open_at(
+        &self,
+        name: &str,
+        parent: SpanId,
+        labels: &[(&str, &str)],
+        tid: u64,
+        start: Instant,
+    ) -> SpanId {
+        let us = start
+            .saturating_duration_since(self.epoch)
+            .as_micros() as u64;
+        self.open_at_us(name, parent, labels, tid, Some(us))
+    }
+
+    fn open_at_us(
+        &self,
+        name: &str,
+        parent: SpanId,
+        labels: &[(&str, &str)],
+        tid: u64,
+        start_us: Option<u64>,
+    ) -> SpanId {
+        if !self.is_enabled() {
+            return SpanId::NONE;
+        }
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        let rec = SpanRec {
+            id,
+            parent: parent.0,
+            name: name.to_string(),
+            start_us: start_us.unwrap_or_else(|| self.now_us()),
+            end_us: None,
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            tid,
+            instant: false,
+        };
+        let mut st = self.state.lock().unwrap();
+        if st.spans.len() >= self.capacity {
+            st.dropped += 1;
+            return SpanId::NONE;
+        }
+        st.spans.push(rec);
+        SpanId(id)
+    }
+
+    /// Close a span. Closing [`SpanId::NONE`] is a no-op.
+    pub fn close(&self, id: SpanId) {
+        if !id.is_some() {
+            return;
+        }
+        let end = self.now_us();
+        let mut st = self.state.lock().unwrap();
+        if let Some(s) = st.spans.iter_mut().rev().find(|s| s.id == id.0) {
+            if s.end_us.is_none() {
+                s.end_us = Some(end.max(s.start_us));
+            }
+        }
+    }
+
+    /// Record an instantaneous event (cache hit/miss, single-flight join).
+    pub fn event(&self, name: &str, parent: SpanId, labels: &[(&str, &str)], tid: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        let now = self.now_us();
+        let rec = SpanRec {
+            id,
+            parent: parent.0,
+            name: name.to_string(),
+            start_us: now,
+            end_us: Some(now),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            tid,
+            instant: true,
+        };
+        let mut st = self.state.lock().unwrap();
+        if st.spans.len() >= self.capacity {
+            st.dropped += 1;
+            return;
+        }
+        st.spans.push(rec);
+    }
+
+    /// Get (or open) the root span of checkpoint wave `version`. All
+    /// per-rank commands of one collective wave nest under a single
+    /// shared root; the root stays open until
+    /// [`TraceRecorder::close_open_waves`] (the runtime calls it on
+    /// drain).
+    pub fn wave_root(&self, version: u64) -> SpanId {
+        if !self.is_enabled() {
+            return SpanId::NONE;
+        }
+        let now = self.now_us();
+        self.wave_root_at_us(version, now)
+    }
+
+    /// Like [`TraceRecorder::wave_root`], but the root — newly created or
+    /// already open — is back-dated to `start` when that is earlier: a
+    /// rank's capture begins before its submit reaches the recorder, and
+    /// the wave root must still contain every child span.
+    pub fn wave_root_at(&self, version: u64, start: Instant) -> SpanId {
+        if !self.is_enabled() {
+            return SpanId::NONE;
+        }
+        let us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        self.wave_root_at_us(version, us)
+    }
+
+    fn wave_root_at_us(&self, version: u64, start_us: u64) -> SpanId {
+        let mut st = self.state.lock().unwrap();
+        if let Some(&id) = st.waves.get(&version) {
+            if let Some(s) = st.spans.iter_mut().rev().find(|s| s.id == id.0) {
+                if s.start_us > start_us {
+                    s.start_us = start_us;
+                }
+            }
+            return id;
+        }
+        if st.spans.len() >= self.capacity {
+            st.dropped += 1;
+            return SpanId::NONE;
+        }
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        st.spans.push(SpanRec {
+            id,
+            parent: 0,
+            name: format!("wave v{version}"),
+            start_us,
+            end_us: None,
+            labels: vec![("version".to_string(), version.to_string())],
+            tid: 0,
+            instant: false,
+        });
+        let sid = SpanId(id);
+        st.waves.insert(version, sid);
+        sid
+    }
+
+    /// Close every open wave root (the collective wave has drained).
+    pub fn close_open_waves(&self) {
+        let roots: Vec<SpanId> = {
+            let mut st = self.state.lock().unwrap();
+            std::mem::take(&mut st.waves).into_values().collect()
+        };
+        for id in roots {
+            self.close(id);
+        }
+    }
+
+    /// Copy of every recorded span.
+    pub fn snapshot(&self) -> Vec<SpanRec> {
+        self.state.lock().unwrap().spans.clone()
+    }
+
+    /// Spans dropped at the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+
+    /// Discard all recorded spans (a fresh wave window).
+    pub fn clear(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.spans.clear();
+        st.waves.clear();
+        st.dropped = 0;
+    }
+
+    /// Assert timeline well-formedness: every span closed, every parent
+    /// id resolves to a recorded span, and every child's interval nests
+    /// inside its parent's. Returns the first violation found.
+    pub fn validate(&self) -> Result<(), String> {
+        let spans = self.snapshot();
+        let by_id: BTreeMap<u64, &SpanRec> = spans.iter().map(|s| (s.id, s)).collect();
+        for s in &spans {
+            let end = s
+                .end_us
+                .ok_or_else(|| format!("span {} ({}) never closed", s.id, s.name))?;
+            if s.parent != 0 {
+                let p = by_id.get(&s.parent).ok_or_else(|| {
+                    format!("span {} ({}) has unknown parent {}", s.id, s.name, s.parent)
+                })?;
+                let pend = p.end_us.ok_or_else(|| {
+                    format!("parent {} ({}) of {} never closed", p.id, p.name, s.name)
+                })?;
+                if s.start_us < p.start_us || end > pend {
+                    return Err(format!(
+                        "span {} ({}) [{}..{}] escapes parent {} ({}) [{}..{}]",
+                        s.id, s.name, s.start_us, end, p.id, p.name, p.start_us, pend
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Export as Chrome trace-event JSON (the `traceEvents` array format
+    /// understood by `chrome://tracing` and Perfetto). Complete spans are
+    /// `X` events with `ts`/`dur` in microseconds; instantaneous events
+    /// are `i`. Span id and parent travel in `args` so external tools can
+    /// rebuild the tree.
+    pub fn to_chrome_json(&self) -> Json {
+        let spans = self.snapshot();
+        let mut events = Vec::with_capacity(spans.len());
+        for s in &spans {
+            let mut args = Json::obj()
+                .set("id", s.id)
+                .set("parent", s.parent);
+            for (k, v) in &s.labels {
+                args = args.set(k, v.as_str());
+            }
+            let end = s.end_us.unwrap_or(s.start_us);
+            let mut ev = Json::obj()
+                .set("name", s.name.as_str())
+                .set("ph", if s.instant { "i" } else { "X" })
+                .set("ts", s.start_us)
+                .set("pid", 0usize)
+                .set("tid", s.tid)
+                .set("args", args);
+            if s.instant {
+                ev = ev.set("s", "t"); // thread-scoped instant
+            } else {
+                ev = ev.set("dur", end - s.start_us);
+            }
+            events.push(ev);
+        }
+        Json::obj()
+            .set("traceEvents", Json::Arr(events))
+            .set("displayTimeUnit", "ms")
+    }
+}
+
+/// The observability handle a checkpoint command carries down the
+/// pipeline: recorder + metrics + the parent span stage spans nest
+/// under. Default is fully inert (no tracer, no metrics, null parent).
+#[derive(Clone, Default)]
+pub struct ObsHandle {
+    /// Span recorder, when tracing is wired.
+    pub tracer: Option<Arc<TraceRecorder>>,
+    /// Metrics registry for per-stage histograms.
+    pub metrics: Option<Arc<Metrics>>,
+    /// Span the next stage spans nest under (the per-command span).
+    pub parent: SpanId,
+}
+
+impl ObsHandle {
+    /// Open a child span under the handle's parent.
+    pub fn open(&self, name: &str, labels: &[(&str, &str)], tid: u64) -> SpanId {
+        match &self.tracer {
+            Some(t) => t.open(name, self.parent, labels, tid),
+            None => SpanId::NONE,
+        }
+    }
+
+    /// Close a span previously opened through this handle.
+    pub fn close(&self, id: SpanId) {
+        if let Some(t) = &self.tracer {
+            t.close(id);
+        }
+    }
+
+    /// Record one per-stage latency observation into the labeled
+    /// `ckpt.stage` histogram.
+    pub fn stage_latency(&self, stage: &str, level: &str, d: std::time::Duration) {
+        if let Some(m) = &self.metrics {
+            m.observe_hist_duration("ckpt.stage", &[("stage", stage), ("level", level)], d);
+        }
+    }
+}
+
+/// Per-stage latency summary extracted from a span snapshot: for each
+/// (span name, level label) the count and p50/p95/p99 over span
+/// durations, in seconds. This is what `veloc report` prints.
+pub fn stage_summary(spans: &[SpanRec]) -> Vec<(String, String, crate::util::stats::Samples)> {
+    let mut acc: BTreeMap<(String, String), crate::util::stats::Samples> = BTreeMap::new();
+    for s in spans {
+        if s.instant {
+            continue;
+        }
+        let Some(end) = s.end_us else { continue };
+        let level = s
+            .labels
+            .iter()
+            .find(|(k, _)| k == "level")
+            .map(|(_, v)| v.clone())
+            .unwrap_or_else(|| "-".to_string());
+        acc.entry((s.name.clone(), level))
+            .or_default()
+            .push((end - s.start_us) as f64 / 1e6);
+    }
+    acc.into_iter().map(|((n, l), s)| (n, l, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let t = TraceRecorder::new(false);
+        let id = t.open("x", SpanId::NONE, &[("k", "v")], 0);
+        assert_eq!(id, SpanId::NONE);
+        t.close(id);
+        t.event("e", SpanId::NONE, &[], 0);
+        assert_eq!(t.wave_root(1), SpanId::NONE);
+        assert!(t.snapshot().is_empty());
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn spans_nest_and_validate() {
+        let t = TraceRecorder::new(true);
+        let root = t.wave_root(7);
+        let cmd = t.open("ckpt", root, &[("rank", "0")], 0);
+        let stage = t.open("local", cmd, &[("level", "local")], 0);
+        std::thread::sleep(Duration::from_millis(1));
+        t.close(stage);
+        t.close(cmd);
+        t.close_open_waves();
+        assert!(t.validate().is_ok(), "{:?}", t.validate());
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 3);
+        assert!(spans.iter().all(|s| s.end_us.is_some()));
+    }
+
+    #[test]
+    fn unclosed_span_fails_validation() {
+        let t = TraceRecorder::new(true);
+        let _leak = t.open("leak", SpanId::NONE, &[], 0);
+        let err = t.validate().unwrap_err();
+        assert!(err.contains("never closed"), "{err}");
+    }
+
+    #[test]
+    fn escaping_child_fails_validation() {
+        let t = TraceRecorder::new(true);
+        let parent = t.open("p", SpanId::NONE, &[], 0);
+        t.close(parent); // parent closes first...
+        std::thread::sleep(Duration::from_millis(1));
+        let child = t.open("c", parent, &[], 0);
+        t.close(child); // ...child starts after it ended
+        let err = t.validate().unwrap_err();
+        assert!(err.contains("escapes parent"), "{err}");
+    }
+
+    #[test]
+    fn wave_root_is_shared_per_version() {
+        let t = TraceRecorder::new(true);
+        let a = t.wave_root(3);
+        let b = t.wave_root(3);
+        let c = t.wave_root(4);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        t.close_open_waves();
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn capacity_bound_drops_not_grows() {
+        let t = TraceRecorder::with_capacity(true, 16);
+        let mut open = Vec::new();
+        for i in 0..40 {
+            open.push(t.open(&format!("s{i}"), SpanId::NONE, &[], 0));
+        }
+        assert_eq!(t.snapshot().len(), 16);
+        assert_eq!(t.dropped(), 24);
+        for id in open {
+            t.close(id);
+        }
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = TraceRecorder::new(true);
+        let root = t.open("wave v1", SpanId::NONE, &[("version", "1")], 0);
+        let c = t.open("capture", root, &[("rank", "2")], 2);
+        t.close(c);
+        t.event("cache.hit", root, &[("key", "k")], 2);
+        t.close(root);
+        let j = t.to_chrome_json();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        let x = &events[1];
+        assert_eq!(x.str_or("ph", ""), "X");
+        assert_eq!(x.at(&["args", "rank"]).unwrap().as_str(), Some("2"));
+        assert!(x.get("dur").is_some());
+        let i = &events[2];
+        assert_eq!(i.str_or("ph", ""), "i");
+    }
+
+    #[test]
+    fn stage_summary_groups_by_name_and_level() {
+        let t = TraceRecorder::new(true);
+        for _ in 0..3 {
+            let s = t.open("local", SpanId::NONE, &[("level", "local")], 0);
+            t.close(s);
+        }
+        let p = t.open("partner", SpanId::NONE, &[("level", "partner")], 0);
+        t.close(p);
+        let rows = stage_summary(&t.snapshot());
+        assert_eq!(rows.len(), 2);
+        let local = rows.iter().find(|(n, _, _)| n == "local").unwrap();
+        assert_eq!(local.2.len(), 3);
+    }
+}

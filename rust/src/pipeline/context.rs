@@ -1,5 +1,6 @@
 //! Command contexts flowing through the module pipeline.
 
+use crate::obs::ObsHandle;
 use crate::util::bufpool::{self, Bytes};
 use crate::util::bytes::Checkpoint;
 use std::sync::Arc;
@@ -80,6 +81,10 @@ pub struct CkptContext {
     pub encoding: &'static str,
     /// Completed stages, in pipeline order.
     pub results: Vec<LevelResult>,
+    /// Observability handle: span recorder + metrics + the per-command
+    /// parent span every stage span nests under. Defaults to fully inert;
+    /// the transport (or daemon dispatch) arms it.
+    pub obs: ObsHandle,
 }
 
 impl CkptContext {
@@ -105,6 +110,7 @@ impl CkptContext {
             encoded,
             encoding: "raw",
             results: Vec::new(),
+            obs: ObsHandle::default(),
         }
     }
 
@@ -129,6 +135,7 @@ impl CkptContext {
             encoded,
             encoding: "raw",
             results: Vec::new(),
+            obs: ObsHandle::default(),
         }
     }
 

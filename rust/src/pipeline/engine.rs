@@ -3,7 +3,7 @@
 //! asynchronously (engine runs in the *active backend* — here a priority
 //! thread pool, matching VeloC's separate backend process).
 
-use crate::pipeline::context::{CkptContext, Outcome, RestoreContext};
+use crate::pipeline::context::{level_name, CkptContext, Outcome, RestoreContext};
 use crate::pipeline::module::Module;
 use crate::util::bytes::Checkpoint;
 use crate::util::pool::{Priority, ThreadPool};
@@ -256,7 +256,16 @@ impl Engine {
                     return Ok(Some(m.name()));
                 }
             }
-            if let Err(e) = Self::run_stage(m, ctx) {
+            // Per-stage observability: a child span under the command span
+            // plus one labeled latency observation. Both are no-ops (no
+            // allocation, no lock) when the command's obs handle is inert.
+            let level = level_name(m.level());
+            let span = ctx.obs.open(m.name(), &[("level", level)], ctx.rank as u64);
+            let t0 = Instant::now();
+            let res = Self::run_stage(m, ctx);
+            ctx.obs.stage_latency(m.name(), level, t0.elapsed());
+            ctx.obs.close(span);
+            if let Err(e) = res {
                 if first_err.is_none() {
                     first_err = Some(anyhow!("{}: {e}", m.name()));
                 }
@@ -288,6 +297,8 @@ impl Engine {
         // Blocking prefix, inline.
         match Self::run_range(&self.modules[..split], &mut ctx, self.boundary_hook.as_ref()) {
             Err(e) => {
+                // Terminal: the command span ends with the failed prefix.
+                ctx.obs.close(ctx.obs.parent);
                 self.tracker
                     .set(rank, &name, version, CkptStatus::Failed(e.to_string()));
                 return Err(e);
@@ -295,6 +306,7 @@ impl Engine {
             Ok(Some(module)) => {
                 // The rank died mid-pipeline (injected failure): the command
                 // never completes, but the submit itself was accepted.
+                ctx.obs.close(ctx.obs.parent);
                 self.tracker.set(
                     rank,
                     &name,
@@ -306,6 +318,7 @@ impl Engine {
             Ok(None) => {}
         }
         if split == self.modules.len() {
+            ctx.obs.close(ctx.obs.parent);
             self.tracker
                 .set(rank, &name, version, CkptStatus::Done(ctx.max_level()));
             return Ok(());
@@ -324,6 +337,8 @@ impl Engine {
                 )),
                 Err(e) => CkptStatus::Failed(e.to_string()),
             };
+            // Terminal: the async tail settled; the command span ends here.
+            ctx.obs.close(ctx.obs.parent);
             tracker.set(ctx.rank, &ctx.name, ctx.version, st);
         });
         Ok(())

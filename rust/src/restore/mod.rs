@@ -46,6 +46,7 @@ use crate::delta::store::ChunkStore;
 use crate::delta::{manifest, materialize_planned, predicted_hops};
 use crate::metrics::Metrics;
 use crate::modules::transfer::maybe_decompress;
+use crate::obs::{SpanId, TraceRecorder};
 use crate::storage::StorageFabric;
 use crate::util::bytes::Checkpoint;
 use anyhow::{bail, Result};
@@ -136,6 +137,9 @@ pub struct RestoreEngine {
     cache: ReadCache,
     flight: SingleFlight,
     metrics: Arc<Metrics>,
+    /// Optional span recorder: cache hits/misses, single-flight joins and
+    /// prefetch waves become visible in `veloc trace` exports.
+    tracer: std::sync::Mutex<Option<Arc<TraceRecorder>>>,
 }
 
 impl RestoreEngine {
@@ -159,7 +163,23 @@ impl RestoreEngine {
             cache,
             flight: SingleFlight::default(),
             metrics,
+            tracer: std::sync::Mutex::new(None),
         })
+    }
+
+    /// Attach the runtime's span recorder after construction.
+    pub fn set_tracer(&self, tracer: Arc<TraceRecorder>) {
+        *self.tracer.lock().unwrap() = Some(tracer);
+    }
+
+    /// The recorder, only when it is both attached and enabled (so the
+    /// disabled path never pays more than one mutex peek).
+    fn live_tracer(&self) -> Option<Arc<TraceRecorder>> {
+        let g = self.tracer.lock().unwrap();
+        match &*g {
+            Some(t) if t.is_enabled() => Some(Arc::clone(t)),
+            _ => None,
+        }
     }
 
     /// The configuration the engine was built from.
@@ -190,16 +210,40 @@ impl RestoreEngine {
         }
         let key = Self::key(source, name, rank, version);
         if let Some(data) = self.cache.get(&key) {
+            if let Some(t) = self.live_tracer() {
+                t.event(
+                    "restore.cache.hit",
+                    SpanId::NONE,
+                    &[("key", key.as_str())],
+                    rank as u64,
+                );
+            }
             return Ok(Some(data));
         }
         match self.flight.run(&key, || {
             self.metrics.incr("restore.cache.misses", 1);
+            if let Some(t) = self.live_tracer() {
+                t.event(
+                    "restore.cache.miss",
+                    SpanId::NONE,
+                    &[("key", key.as_str())],
+                    rank as u64,
+                );
+            }
             Ok(fetch(version)?
                 .map(|data| self.cache.insert(&key, node, source_cost(source), data)))
         }) {
             FlightOutcome::Led(res) => res,
             FlightOutcome::Joined(shared) => {
                 self.metrics.incr("restore.singleflight.coalesced", 1);
+                if let Some(t) = self.live_tracer() {
+                    t.event(
+                        "restore.singleflight.join",
+                        SpanId::NONE,
+                        &[("key", key.as_str())],
+                        rank as u64,
+                    );
+                }
                 // A leader miss/failure joins as a miss; re-issuing the
                 // fetch here would defeat the coalescing under storms.
                 Ok(shared)
@@ -271,7 +315,21 @@ impl RestoreEngine {
         let depth = self.cfg.prefetch_depth.max(1);
         self.metrics.set("restore.prefetch.depth", depth as u64);
         self.metrics.incr("restore.prefetch.issued", hops.len() as u64);
-        for wave in hops.chunks(depth) {
+        let tracer = self.live_tracer();
+        for (i, wave) in hops.chunks(depth).enumerate() {
+            let span = match &tracer {
+                Some(t) => {
+                    let ws = i.to_string();
+                    let fs = wave.len().to_string();
+                    t.open(
+                        "restore.prefetch.wave",
+                        SpanId::NONE,
+                        &[("wave", ws.as_str()), ("fetches", fs.as_str())],
+                        rank as u64,
+                    )
+                }
+                None => SpanId::NONE,
+            };
             std::thread::scope(|s| {
                 for &v in wave {
                     s.spawn(move || {
@@ -279,6 +337,9 @@ impl RestoreEngine {
                     });
                 }
             });
+            if let Some(t) = &tracer {
+                t.close(span);
+            }
         }
     }
 

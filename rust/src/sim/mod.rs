@@ -31,7 +31,8 @@ pub mod trace;
 
 pub use injection::{BoundaryPlan, FaultGate, FaultState};
 pub use runner::{
-    replay_file, run_scenario, run_scenario_traced, ScenarioReport, SCENARIO_APP,
+    replay_file, run_scenario, run_scenario_traced, run_scenario_with_tracer,
+    ScenarioReport, SCENARIO_APP,
 };
 pub use scenario::{
     base_spec, standard_matrix, ContractMode, InjectionPoint, ScenarioSpec, ScopeKind,

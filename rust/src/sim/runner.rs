@@ -101,8 +101,20 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
 /// failure it covers everything up to the violated invariant, which is
 /// exactly what gets uploaded as a CI artifact.
 pub fn run_scenario_traced(spec: &ScenarioSpec) -> (Result<ScenarioReport>, Trace) {
+    run_scenario_with_tracer(spec, None)
+}
+
+/// Like [`run_scenario_traced`], with an optional span recorder threaded
+/// into the runtime under test. Span timestamps never enter the event
+/// trace (replay comparison stays exact); the recorder is exported
+/// separately — the CLI attaches it to failing scenarios as a span
+/// timeline artifact.
+pub fn run_scenario_with_tracer(
+    spec: &ScenarioSpec,
+    tracer: Option<Arc<crate::obs::TraceRecorder>>,
+) -> (Result<ScenarioReport>, Trace) {
     let mut trace = Trace::new();
-    let result = run_inner(spec, &mut trace)
+    let result = run_inner(spec, &mut trace, tracer)
         .map_err(|e| {
             anyhow!(
                 "scenario failed (seed {}): {e:#}\n  repro: {}",
@@ -166,16 +178,20 @@ fn opt_version_json(v: Option<u64>) -> Json {
     }
 }
 
-fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
+fn run_inner(
+    spec: &ScenarioSpec,
+    trace: &mut Trace,
+    tracer: Option<Arc<crate::obs::TraceRecorder>>,
+) -> Result<RunOutcome> {
     spec.validate()?;
     // The backend-crash family kills the *daemon*, not ranks: it runs a
     // dedicated two-incarnation lifetime instead of the failure-scope
     // machinery below.
     if matches!(spec.inject, InjectionPoint::BackendCrash) {
-        return run_backend_crash(spec, trace);
+        return run_backend_crash(spec, trace, tracer);
     }
     if matches!(spec.inject, InjectionPoint::RestartStorm(_)) {
-        return run_restart_storm(spec, trace);
+        return run_restart_storm(spec, trace, tracer);
     }
     let topo = spec.topology();
     let world = topo.world_size();
@@ -192,6 +208,7 @@ fn run_inner(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
         wrap_gate: None,
         boundary: Some(boundary),
         fabric: None,
+        tracer,
     };
     if matches!(spec.inject, InjectionPoint::MidFlushChunk(_)) {
         let g = Arc::clone(&gate);
@@ -666,7 +683,11 @@ static BACKEND_DIRS: AtomicU64 = AtomicU64::new(0);
 /// storage replays the WAL. The contract is the paper's durability claim:
 /// every acked version settles after the restart and restores
 /// bit-for-bit — including the wave whose flushes the crash swallowed.
-fn run_backend_crash(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
+fn run_backend_crash(
+    spec: &ScenarioSpec,
+    trace: &mut Trace,
+    tracer: Option<Arc<crate::obs::TraceRecorder>>,
+) -> Result<RunOutcome> {
     use crate::backend::{scoped_name, BackendDaemon};
 
     let topo = spec.topology();
@@ -706,6 +727,7 @@ fn run_backend_crash(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcom
             wrap_gate: None,
             boundary: None,
             fabric: Some(Arc::clone(&fabric)),
+            tracer: tracer.clone(),
         },
     )?;
     let mut pairs: Vec<(VelocClient, IterativeApp)> = Vec::with_capacity(world);
@@ -802,6 +824,7 @@ fn run_backend_crash(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcom
             wrap_gate: None,
             boundary: None,
             fabric: Some(Arc::clone(&fabric)),
+            tracer: tracer.clone(),
         },
     )?;
     let replayed = daemon2
@@ -922,7 +945,11 @@ fn run_backend_crash(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcom
 /// finish against the fresh incarnation (whose cache starts cold). Every
 /// client must restore bit-for-bit, and a deliberately poisoned cache
 /// entry must trip the fingerprint check and be refetched, never served.
-fn run_restart_storm(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcome> {
+fn run_restart_storm(
+    spec: &ScenarioSpec,
+    trace: &mut Trace,
+    tracer: Option<Arc<crate::obs::TraceRecorder>>,
+) -> Result<RunOutcome> {
     use crate::backend::{scoped_name, BackendDaemon};
 
     let InjectionPoint::RestartStorm(clients) = &spec.inject else {
@@ -964,6 +991,7 @@ fn run_restart_storm(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcom
             wrap_gate: None,
             boundary: None,
             fabric: Some(Arc::clone(&fabric)),
+            tracer: tracer.clone(),
         },
     )?;
     let mut pairs: Vec<(VelocClient, IterativeApp)> = Vec::with_capacity(world);
@@ -1082,6 +1110,7 @@ fn run_restart_storm(spec: &ScenarioSpec, trace: &mut Trace) -> Result<RunOutcom
             wrap_gate: None,
             boundary: None,
             fabric: Some(Arc::clone(&fabric)),
+            tracer: tracer.clone(),
         },
     )?;
     for i in half..clients {

@@ -1,6 +1,7 @@
 //! Streaming statistics and measurement helpers (criterion is not available
 //! offline; `benches/` builds its harness on top of this module).
 
+use crate::util::rng::Rng;
 use std::time::{Duration, Instant};
 
 /// Welford online mean/variance plus min/max.
@@ -66,27 +67,83 @@ impl OnlineStats {
     }
 }
 
-/// Sample reservoir with exact percentiles (sorts on query).
-#[derive(Clone, Debug, Default)]
+/// Retained observations are bounded at this count by default; past it
+/// the reservoir keeps a uniform random subset (Vitter's algorithm R).
+pub const SAMPLES_DEFAULT_CAP: usize = 4096;
+
+/// Bounded sample reservoir with percentiles (sorts on query).
+///
+/// Below [`SAMPLES_DEFAULT_CAP`] observations every value is retained and
+/// percentiles are exact. Past the cap, algorithm R replaces retained
+/// values so the reservoir stays a uniform sample of the whole stream —
+/// memory is O(cap) no matter how long the run soaks. `mean`, `max` and
+/// the observation count stay exact over the full stream (tracked
+/// streaming, not from the reservoir); only percentiles become estimates.
+/// Replacement uses the repo's deterministic [`Rng`], so a given
+/// observation stream always yields the same reservoir.
+#[derive(Clone, Debug)]
 pub struct Samples {
     xs: Vec<f64>,
+    cap: usize,
+    /// Total observations pushed (exact, >= xs.len()).
+    seen: u64,
+    /// Exact streaming sum/max over every observation.
+    sum: f64,
+    max: f64,
+    rng: Rng,
+}
+
+impl Default for Samples {
+    fn default() -> Self {
+        Samples::new()
+    }
 }
 
 impl Samples {
     pub fn new() -> Self {
-        Samples { xs: Vec::new() }
+        Samples::with_cap(SAMPLES_DEFAULT_CAP)
+    }
+
+    /// Reservoir bounded at `cap` retained values (cap >= 1).
+    pub fn with_cap(cap: usize) -> Self {
+        Samples {
+            xs: Vec::new(),
+            cap: cap.max(1),
+            seen: 0,
+            sum: 0.0,
+            max: 0.0,
+            rng: Rng::new(0x5a3d_7e15_ca11_ab1e),
+        }
     }
 
     pub fn push(&mut self, x: f64) {
-        self.xs.push(x);
+        self.seen += 1;
+        self.sum += x;
+        self.max = self.max.max(x);
+        if self.xs.len() < self.cap {
+            self.xs.push(x);
+        } else {
+            // Algorithm R: the i-th observation replaces a retained slot
+            // with probability cap/i, keeping the reservoir uniform.
+            let j = self.rng.below(self.seen) as usize;
+            if j < self.cap {
+                self.xs[j] = x;
+            }
+        }
     }
 
     pub fn push_duration(&mut self, d: Duration) {
-        self.xs.push(d.as_secs_f64());
+        self.push(d.as_secs_f64());
     }
 
+    /// Retained reservoir size (== observation count below the cap).
     pub fn len(&self) -> usize {
         self.xs.len()
+    }
+
+    /// Total observations pushed over the stream's lifetime.
+    pub fn observed(&self) -> u64 {
+        self.seen
     }
 
     pub fn is_empty(&self) -> bool {
@@ -94,14 +151,15 @@ impl Samples {
     }
 
     pub fn mean(&self) -> f64 {
-        if self.xs.is_empty() {
+        if self.seen == 0 {
             0.0
         } else {
-            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+            self.sum / self.seen as f64
         }
     }
 
-    /// Exact percentile by nearest-rank (q in [0, 100]).
+    /// Percentile by nearest-rank over the reservoir (q in [0, 100]);
+    /// exact while the stream fits the cap, an estimate past it.
     pub fn percentile(&self, q: f64) -> f64 {
         if self.xs.is_empty() {
             return 0.0;
@@ -125,10 +183,16 @@ impl Samples {
         self.percentile(99.0)
     }
 
+    /// Exact maximum over every observation (not just the reservoir).
     pub fn max(&self) -> f64 {
-        self.xs.iter().cloned().fold(0.0, f64::max)
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.max
+        }
     }
 
+    /// The retained reservoir values.
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
@@ -219,6 +283,60 @@ mod tests {
         assert_eq!(s.p99(), 99.0);
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory() {
+        let mut s = Samples::with_cap(512);
+        for i in 0..100_000 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.len(), 512);
+        assert_eq!(s.observed(), 100_000);
+        // Exact streaming stats are unaffected by the bound.
+        assert!((s.mean() - 49_999.5).abs() < 1e-6, "mean {}", s.mean());
+        assert_eq!(s.max(), 99_999.0);
+    }
+
+    #[test]
+    fn reservoir_percentiles_stay_accurate() {
+        // Uniform stream 0..50k through a 4k reservoir: p50/p95/p99 must
+        // land within a few percent of the exact ranks.
+        let mut s = Samples::new();
+        let n = 50_000usize;
+        for i in 0..n {
+            s.push(i as f64);
+        }
+        for (q, exact) in [(50.0, 25_000.0), (95.0, 47_500.0), (99.0, 49_500.0)] {
+            let est = s.percentile(q);
+            let err = (est - exact).abs() / n as f64;
+            assert!(err < 0.03, "p{q}: estimate {est} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn reservoir_exact_below_cap() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.observed(), 100);
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.p95(), 95.0);
+        assert_eq!(s.p99(), 99.0);
+    }
+
+    #[test]
+    fn reservoir_deterministic() {
+        let fill = || {
+            let mut s = Samples::with_cap(64);
+            for i in 0..10_000 {
+                s.push((i * 7 % 997) as f64);
+            }
+            s.values().to_vec()
+        };
+        assert_eq!(fill(), fill());
     }
 
     #[test]

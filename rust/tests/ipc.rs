@@ -141,17 +141,17 @@ fn concurrent_jobs_fair_share_without_collisions() {
     assert!(daemon.drain(Duration::from_secs(30)));
 
     // Fair-share drain metrics.
-    assert_eq!(m.counter("backend.dispatched.jobA"), WAVES);
-    assert_eq!(m.counter("backend.dispatched.jobB"), WAVES);
-    assert_eq!(m.counter("backend.settled.jobA"), WAVES);
-    assert_eq!(m.counter("backend.settled.jobB"), WAVES);
+    assert_eq!(m.counter_with("backend.dispatched", &[("job", "jobA")]), WAVES);
+    assert_eq!(m.counter_with("backend.dispatched", &[("job", "jobB")]), WAVES);
+    assert_eq!(m.counter_with("backend.settled", &[("job", "jobA")]), WAVES);
+    assert_eq!(m.counter_with("backend.settled", &[("job", "jobB")]), WAVES);
     assert!(
         m.counter("backend.fair.rr_picks") >= WAVES,
         "round-robin must alternate between two busy jobs: {} picks",
         m.counter("backend.fair.rr_picks")
     );
-    assert_eq!(m.counter("backend.queue_depth.jobA"), 0);
-    assert_eq!(m.counter("backend.queue_depth.jobB"), 0);
+    assert_eq!(m.gauge_with("backend.queue_depth", &[("job", "jobA")]), 0);
+    assert_eq!(m.gauge_with("backend.queue_depth", &[("job", "jobB")]), 0);
 
     // No cross-job version collisions: same (name, version), different
     // payloads, each restores its own.

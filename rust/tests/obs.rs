@@ -1,0 +1,238 @@
+//! End-to-end observability tests: a traced 4-rank multi-level wave
+//! produces a well-formed span timeline (every span closed, parents
+//! resolve, stages nest under the shared wave root), and the daemon's
+//! embedded HTTP endpoint serves health plus a format-valid Prometheus
+//! exposition covering every metric namespace the workload exercised.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+use veloc::api::{VelocConfig, VelocRuntime};
+use veloc::obs::{http_get, prom, wait_ready};
+
+const SHORT: Duration = Duration::from_secs(2);
+
+static DIRS: AtomicU64 = AtomicU64::new(0);
+
+/// A daemon config with a unique home directory (mirrors the ipc tests).
+#[cfg(unix)]
+fn daemon_config(tag: &str) -> VelocConfig {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    cfg.backend.dir = std::env::temp_dir().join(format!(
+        "veloc-obs-{tag}-{}-{}",
+        std::process::id(),
+        DIRS.fetch_add(1, Ordering::SeqCst)
+    ));
+    cfg
+}
+
+/// The acceptance gate for the span plane: a full 4-rank wave through
+/// every resilience level under tracing yields a validated timeline —
+/// one shared wave root, one command span per rank nested under it, a
+/// capture stage and module stages labeled local/partner/erasure/pfs
+/// nested under each command — and the per-stage latency histogram
+/// fills alongside the spans.
+#[test]
+fn traced_wave_timeline_is_well_formed() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 2);
+    cfg.obs.trace = true;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let clients: Vec<_> = (0..4).map(|r| rt.client(r)).collect();
+    for c in &clients {
+        c.mem_protect(0, vec![(c.rank() + 1) as u8; 64 << 10]);
+    }
+    for c in &clients {
+        c.checkpoint("app", 1).unwrap();
+    }
+    for c in &clients {
+        c.checkpoint_wait_done("app", 1).unwrap();
+    }
+    rt.drain();
+
+    rt.tracer()
+        .validate()
+        .expect("span timeline must be well-formed");
+    assert_eq!(rt.tracer().dropped(), 0);
+    let spans = rt.tracer().snapshot();
+
+    let root = spans
+        .iter()
+        .find(|s| s.name == "wave v1")
+        .expect("collective wave root span");
+    assert_eq!(root.parent, 0, "wave root must be a root span");
+
+    // One command span per rank, all nested under the shared root.
+    let cmds: Vec<_> = spans
+        .iter()
+        .filter(|s| s.name == "ckpt" && s.parent == root.id)
+        .collect();
+    assert_eq!(cmds.len(), 4, "one ckpt span per rank under the wave root");
+
+    for cmd in &cmds {
+        let children: Vec<_> = spans.iter().filter(|s| s.parent == cmd.id).collect();
+        assert!(
+            children.iter().any(|s| s.name == "capture"),
+            "rank command must record its capture stage"
+        );
+        let levels: Vec<&str> = children
+            .iter()
+            .filter_map(|s| {
+                s.labels
+                    .iter()
+                    .find(|(k, _)| k == "level")
+                    .map(|(_, v)| v.as_str())
+            })
+            .collect();
+        for lvl in ["local", "partner", "erasure", "pfs"] {
+            assert!(
+                levels.contains(&lvl),
+                "rank command must cover level {lvl}: got {levels:?}"
+            );
+        }
+    }
+
+    // Per-stage latency histogram filled alongside the spans: one local
+    // write per rank.
+    let hist = rt
+        .metrics()
+        .histogram("ckpt.stage", &[("stage", "local"), ("level", "local")])
+        .expect("ckpt.stage{stage=local,level=local} histogram");
+    assert_eq!(hist.count(), 4);
+
+    // The Chrome export carries every span with its tree metadata.
+    let j = rt.tracer().to_chrome_json();
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), spans.len());
+}
+
+/// Tracing off (the default) records nothing and costs nothing, while
+/// the metrics plane keeps flowing.
+#[test]
+fn tracing_disabled_records_nothing() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 1);
+    cfg.stack.erasure_group = 0;
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let c = rt.client(0);
+    c.mem_protect(0, vec![7u8; 16 << 10]);
+    c.checkpoint("app", 1).unwrap();
+    c.checkpoint_wait_done("app", 1).unwrap();
+    rt.drain();
+
+    assert!(!rt.tracer().is_enabled());
+    assert!(rt.tracer().snapshot().is_empty());
+    assert_eq!(rt.metrics().counter("ckpt.requests"), 1);
+    let hist = rt
+        .metrics()
+        .histogram("ckpt.stage", &[("stage", "local"), ("level", "local")])
+        .expect("stage histogram fills even with tracing off");
+    assert_eq!(hist.count(), 1);
+}
+
+/// The daemon's embedded endpoint end to end: `/healthz` and `/readyz`
+/// come up with the daemon, unknown paths 404, and after a real
+/// workload (two checkpoint waves with aggregation + delta enabled,
+/// then a restore) the `/metrics` scrape parses as Prometheus text and
+/// covers every namespace the workload exercised — including labeled
+/// per-job series and the bucketed stage histogram.
+#[cfg(unix)]
+#[test]
+fn daemon_endpoint_serves_health_and_full_exposition() {
+    use veloc::backend::{BackendClient, BackendDaemon};
+    use veloc::pipeline::CkptStatus;
+
+    let mut cfg = daemon_config("scrape");
+    cfg.obs.http = Some("127.0.0.1:0".to_string());
+    cfg.aggregation.enabled = true;
+    cfg.delta.enabled = true;
+    let daemon = BackendDaemon::start(cfg.clone()).unwrap();
+    let server = {
+        let d = std::sync::Arc::clone(&daemon);
+        let handle = std::thread::spawn(move || d.serve());
+        let socket = cfg.backend.socket_path();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !socket.exists() {
+            assert!(std::time::Instant::now() < deadline, "daemon never bound");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        handle
+    };
+    let addr = daemon
+        .obs_addr()
+        .expect("obs.http configured: endpoint must be up")
+        .to_string();
+    wait_ready(&addr, Duration::from_secs(10)).unwrap();
+
+    let (code, body) = http_get(&addr, "/healthz", SHORT).unwrap();
+    assert_eq!((code, body.as_str()), (200, "ok\n"));
+    let (code, _) = http_get(&addr, "/readyz", SHORT).unwrap();
+    assert_eq!(code, 200, "journal replayed + queues accepting = ready");
+    let (code, _) = http_get(&addr, "/nope", SHORT).unwrap();
+    assert_eq!(code, 404);
+
+    // Drive a workload through the daemon so every namespace has live
+    // series: two waves (delta: one full + one incremental), a full
+    // drain (aggregation containers), then a restore.
+    let backend = BackendClient::connect(cfg.backend.socket_path());
+    let client = backend.client("jobA", 0).unwrap();
+    let h = client.mem_protect(0, vec![0x42; 32 << 10]);
+    for v in [1u64, 2] {
+        client.checkpoint("app", v).unwrap();
+        let st = client.checkpoint_wait("app", v).unwrap();
+        assert!(matches!(st, CkptStatus::Done(_)), "v{v}: {st:?}");
+    }
+    assert!(daemon.drain(Duration::from_secs(30)));
+    *h.lock().unwrap() = Vec::new();
+    let info = client.restart("app").unwrap().expect("restore");
+    assert_eq!(info.version, 2);
+
+    let (code, text) = http_get(&addr, "/metrics", SHORT).unwrap();
+    assert_eq!(code, 200);
+    let fams = prom::parse_exposition(&text).expect("format-valid exposition");
+    let names: Vec<&str> = fams.iter().map(|f| f.name.as_str()).collect();
+    for ns in [
+        "veloc_ckpt",
+        "veloc_backend",
+        "veloc_agg",
+        "veloc_delta",
+        "veloc_restore",
+        "veloc_restart",
+    ] {
+        assert!(
+            names.iter().any(|n| n.starts_with(ns)),
+            "exposition must cover the {ns} namespace: {names:?}"
+        );
+    }
+
+    // Labeled per-job series survive the render/parse round-trip.
+    let settled = fams
+        .iter()
+        .find(|f| f.name == "veloc_backend_settled")
+        .expect("backend.settled family");
+    assert!(
+        settled
+            .samples
+            .iter()
+            .any(|s| s.labels.iter().any(|(k, v)| k == "job" && v == "jobA")),
+        "per-job settled series missing: {:?}",
+        settled.samples
+    );
+
+    // The stage histogram renders as a closed bucket ladder.
+    let hist = fams
+        .iter()
+        .find(|f| f.name == "veloc_ckpt_stage")
+        .expect("ckpt.stage histogram family");
+    assert_eq!(hist.typ, "histogram");
+    assert!(
+        hist.samples.iter().any(|s| s.name == "veloc_ckpt_stage_bucket"
+            && s.labels.iter().any(|(k, v)| k == "le" && v == "+Inf")),
+        "histogram must close with a +Inf bucket"
+    );
+
+    drop(client);
+    backend.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    // The endpoint dies with the daemon.
+    assert!(http_get(&addr, "/healthz", SHORT).is_err());
+    let _ = std::fs::remove_dir_all(&cfg.backend.dir);
+}

@@ -55,7 +55,7 @@ fn storm_moves_cache_and_prefetch_metrics() {
         m.counter("restore.prefetch.issued") >= 1,
         "a mid-chain delta restore must issue chain prefetches"
     );
-    assert!(m.counter("restore.prefetch.depth") >= 1, "depth gauge never set");
+    assert!(m.gauge("restore.prefetch.depth") >= 1, "depth gauge never set");
 
     // Warm restore: served out of the cache, not the tiers.
     let fresh = rt.client(0);
