@@ -1,0 +1,26 @@
+//! Fuzz the VAGG container header decoder and segment extraction
+//! (`aggregation/container.rs`) — the exact code path the segment-index
+//! rebuild walks over every container it finds on a tier.
+//!
+//! Invariant: `decode_header` returns `Ok` or a typed `ContainerError`;
+//! a decoded header's declared lengths can never make `segment_offset`
+//! overflow or `extract` slice out of bounds — hostile lengths degrade to
+//! `SegmentOverrun`/`SegmentCrc`, never a panic.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use veloc::aggregation::container;
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(header) = container::decode_header(data) {
+        for i in 0..header.segments.len() {
+            // Offsets are derived from untrusted declared lengths; the
+            // decode-time overflow check must make this total.
+            let _ = header.segment_offset(i);
+            let _ = container::extract(data, &header, i);
+        }
+        // Out-of-range indices are typed, not panics.
+        assert!(container::extract(data, &header, header.segments.len()).is_err());
+    }
+});

@@ -1,0 +1,26 @@
+//! Fuzz the wire-protocol frame decoder (`backend/wire.rs`).
+//!
+//! Invariant: for arbitrary bytes, `read_frame` returns `Ok` or a typed
+//! [`veloc::backend::wire::WireError`] — it never panics, and an input
+//! that merely *declares* a huge header/body length costs bounded
+//! allocation (the limits are checked before any buffer is reserved and
+//! reads grow incrementally). A frame that decodes must re-encode
+//! canonically: write → read reproduces the identical header and body.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use veloc::backend::wire;
+
+fuzz_target!(|data: &[u8]| {
+    let mut r = std::io::Cursor::new(data);
+    if let Ok((header, body)) = wire::read_frame(&mut r) {
+        let mut again = Vec::new();
+        wire::write_frame(&mut again, &header, &body)
+            .expect("a decoded frame must re-encode");
+        let (h2, b2) = wire::read_frame(&mut std::io::Cursor::new(again))
+            .expect("a re-encoded frame must decode");
+        assert_eq!(h2, header, "header not canonical");
+        assert_eq!(b2, body, "body not canonical");
+    }
+});

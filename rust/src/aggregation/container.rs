@@ -20,13 +20,77 @@
 //! additionally carries its own CRC32 so a single-rank extraction validates
 //! without touching the rest of the body.
 
-use crate::util::json::Json;
-use anyhow::{anyhow, bail, Result};
+use crate::util::json::{Json, ParseError};
+use std::fmt;
 
 /// Container magic bytes.
 pub const AGG_MAGIC: &[u8; 4] = b"VAGG";
 /// Container format version.
 pub const AGG_VERSION: u32 = 1;
+
+/// Typed VAGG parse/extract failures. Index rebuild skips containers
+/// rejected with any of these; a fetch degrades the affected rank to a
+/// miss (resolved from a deeper level). None may panic on hostile bytes.
+#[derive(Debug)]
+pub enum ContainerError {
+    /// Container shorter than the fixed framing.
+    TooShort(usize),
+    /// Missing `"VAGG"` magic.
+    BadMagic,
+    /// Unsupported format version.
+    BadVersion(u32),
+    /// Declared header length overruns the container.
+    HeaderTruncated,
+    /// Header bytes are not UTF-8.
+    HeaderNotUtf8,
+    /// Header text is not valid JSON.
+    HeaderJson(ParseError),
+    /// Header JSON parsed but a field is missing or has the wrong shape.
+    Malformed(String),
+    /// Declared segment lengths sum past what any container could hold.
+    OversizedBody,
+    /// Segment index out of range for this header.
+    NoSuchSegment(usize),
+    /// A segment's declared span falls outside the container bytes.
+    SegmentOverrun(String),
+    /// A segment's payload does not match its stored CRC32.
+    SegmentCrc(String),
+}
+
+impl fmt::Display for ContainerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ContainerError::TooShort(n) => write!(f, "VAGG too short ({n} bytes)"),
+            ContainerError::BadMagic => write!(f, "bad VAGG magic"),
+            ContainerError::BadVersion(v) => write!(f, "unsupported VAGG version {v}"),
+            ContainerError::HeaderTruncated => write!(f, "VAGG header truncated"),
+            ContainerError::HeaderNotUtf8 => write!(f, "VAGG header not utf-8"),
+            ContainerError::HeaderJson(e) => write!(f, "VAGG header: {e}"),
+            ContainerError::Malformed(msg) => write!(f, "VAGG header: {msg}"),
+            ContainerError::OversizedBody => {
+                write!(f, "VAGG header declares oversized body")
+            }
+            ContainerError::NoSuchSegment(i) => {
+                write!(f, "segment index {i} out of range")
+            }
+            ContainerError::SegmentOverrun(which) => {
+                write!(f, "segment {which} overruns container")
+            }
+            ContainerError::SegmentCrc(which) => {
+                write!(f, "segment {which} CRC mismatch")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ContainerError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ContainerError::HeaderJson(e) => Some(e),
+            _ => None,
+        }
+    }
+}
 
 /// Metadata of one packed segment (one rank's checkpoint payload).
 #[derive(Clone, Debug, PartialEq)]
@@ -122,68 +186,71 @@ pub fn encode(id: &str, group: usize, segments: &[(SegmentMeta, &[u8])]) -> Vec<
 /// Parse a container header (without validating the body — extraction
 /// validates per-segment CRCs, so index rebuilds stay cheap even when only
 /// the header region is intact).
-pub fn decode_header(buf: &[u8]) -> Result<ContainerHeader> {
+pub fn decode_header(buf: &[u8]) -> Result<ContainerHeader, ContainerError> {
+    let field = |msg: &str| ContainerError::Malformed(msg.to_string());
     if buf.len() < 12 {
-        bail!("VAGG too short ({} bytes)", buf.len());
+        return Err(ContainerError::TooShort(buf.len()));
     }
     if &buf[0..4] != AGG_MAGIC {
-        bail!("bad VAGG magic");
+        return Err(ContainerError::BadMagic);
     }
     let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
     if version != AGG_VERSION {
-        bail!("unsupported VAGG version {version}");
+        return Err(ContainerError::BadVersion(version));
     }
     let hlen = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
-    let hend = 12 + hlen;
-    if buf.len() < hend {
-        bail!("VAGG header truncated");
-    }
-    let header = std::str::from_utf8(&buf[12..hend])
-        .map_err(|_| anyhow!("VAGG header not utf-8"))?;
-    let j = Json::parse(header).map_err(|e| anyhow!("VAGG header: {e}"))?;
+    let hend = 12usize
+        .checked_add(hlen)
+        .filter(|&hend| hend <= buf.len())
+        .ok_or(ContainerError::HeaderTruncated)?;
+    let header =
+        std::str::from_utf8(&buf[12..hend]).map_err(|_| ContainerError::HeaderNotUtf8)?;
+    let j = Json::parse(header).map_err(ContainerError::HeaderJson)?;
     let id = j
         .get("container")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("header missing container id"))?
+        .ok_or_else(|| field("header missing container id"))?
         .to_string();
     let group = j
         .get("group")
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("header missing group"))?;
+        .ok_or_else(|| field("header missing group"))?;
     let mut segments = Vec::new();
     for s in j
         .get("segments")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("header missing segments"))?
+        .ok_or_else(|| field("header missing segments"))?
     {
         segments.push(SegmentMeta {
             name: s
                 .get("name")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("segment missing name"))?
+                .ok_or_else(|| field("segment missing name"))?
                 .to_string(),
             version: s
                 .get("version")
                 .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("segment missing version"))?,
+                .ok_or_else(|| field("segment missing version"))?,
             rank: s
                 .get("rank")
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("segment missing rank"))?,
+                .ok_or_else(|| field("segment missing rank"))?,
             len: s
                 .get("len")
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("segment missing len"))?,
+                .ok_or_else(|| field("segment missing len"))?,
             encoding: s.str_or("encoding", "raw").to_string(),
             crc: s.get("crc").and_then(Json::as_u64).unwrap_or(0) as u32,
         });
     }
-    // Reject headers whose declared lengths overflow: segment_offset sums
-    // them, and a hostile/corrupt header must not be able to panic it.
+    // Reject headers whose declared lengths overflow: segment_offset adds
+    // `body_offset` to cumulative sums of them, and a hostile/corrupt
+    // header must not be able to panic it. Starting the fold at `hend`
+    // bounds `body_offset + sum`, not just the sum.
     segments
         .iter()
-        .try_fold(0usize, |acc, s| acc.checked_add(s.len))
-        .ok_or_else(|| anyhow!("VAGG header declares oversized body"))?;
+        .try_fold(hend, |acc, s| acc.checked_add(s.len))
+        .ok_or(ContainerError::OversizedBody)?;
     Ok(ContainerHeader {
         id,
         group,
@@ -195,38 +262,29 @@ pub fn decode_header(buf: &[u8]) -> Result<ContainerHeader> {
 /// Extract one segment's payload, validating bounds and the per-segment
 /// CRC (catches truncated or corrupted containers without relying on the
 /// trailing whole-container checksum).
-pub fn extract(buf: &[u8], header: &ContainerHeader, i: usize) -> Result<Vec<u8>> {
+pub fn extract(
+    buf: &[u8],
+    header: &ContainerHeader,
+    i: usize,
+) -> Result<Vec<u8>, ContainerError> {
     let meta = header
         .segments
         .get(i)
-        .ok_or_else(|| anyhow!("segment index {i} out of range"))?;
+        .ok_or(ContainerError::NoSuchSegment(i))?;
+    let which = || format!("{} r{} v{}", meta.name, meta.rank, meta.version);
     let off = header.segment_offset(i);
     // The last 4 container bytes are the trailing CRC, never payload.
     let end = off
         .checked_add(meta.len)
         .and_then(|e| e.checked_add(4))
-        .ok_or_else(|| anyhow!("segment bounds overflow"))?;
+        .ok_or_else(|| ContainerError::SegmentOverrun(which()))?;
     if end > buf.len() {
-        bail!(
-            "segment {} r{} v{} overruns container ({} + {} > {})",
-            meta.name,
-            meta.rank,
-            meta.version,
-            off,
-            meta.len,
-            buf.len().saturating_sub(4)
-        );
+        return Err(ContainerError::SegmentOverrun(which()));
     }
     let data = &buf[off..off + meta.len];
     let actual = crc32fast::hash(data);
     if actual != meta.crc {
-        bail!(
-            "segment {} r{} v{} CRC mismatch: stored {:#010x}, actual {actual:#010x}",
-            meta.name,
-            meta.rank,
-            meta.version,
-            meta.crc
-        );
+        return Err(ContainerError::SegmentCrc(which()));
     }
     Ok(data.to_vec())
 }
@@ -329,5 +387,49 @@ mod tests {
         let (buf, _) = sample();
         assert!(decode_header(&buf[..10]).is_err());
         assert!(decode_header(&buf[..20]).is_err());
+    }
+
+    #[test]
+    fn hostile_declared_lengths_are_typed_errors() {
+        // Segment lengths that together overflow `body_offset + sum` must
+        // be rejected at header-decode time, not panic in segment_offset.
+        let forge = |lens: &[u64]| -> Vec<u8> {
+            let segs: Vec<String> = lens
+                .iter()
+                .map(|l| {
+                    format!(
+                        "{{\"name\":\"a\",\"version\":1,\"rank\":0,\"len\":{l},\
+                         \"encoding\":\"raw\",\"crc\":0}}"
+                    )
+                })
+                .collect();
+            let header = format!(
+                "{{\"container\":\"c\",\"group\":0,\"segments\":[{}]}}",
+                segs.join(",")
+            );
+            let hb = header.as_bytes();
+            let mut out = Vec::new();
+            out.extend_from_slice(AGG_MAGIC);
+            out.extend_from_slice(&AGG_VERSION.to_le_bytes());
+            out.extend_from_slice(&(hb.len() as u32).to_le_bytes());
+            out.extend_from_slice(hb);
+            out
+        };
+        match decode_header(&forge(&[u64::MAX, u64::MAX])) {
+            Err(ContainerError::OversizedBody) => {}
+            other => panic!("expected OversizedBody, got {other:?}"),
+        }
+        // A single in-range but container-overrunning length decodes (the
+        // header is self-consistent) but extraction degrades typed.
+        let buf = forge(&[4 << 30]);
+        let h = decode_header(&buf).unwrap();
+        match extract(&buf, &h, 0) {
+            Err(ContainerError::SegmentOverrun(_)) => {}
+            other => panic!("expected SegmentOverrun, got {other:?}"),
+        }
+        match extract(&buf, &h, 9) {
+            Err(ContainerError::NoSuchSegment(9)) => {}
+            other => panic!("expected NoSuchSegment, got {other:?}"),
+        }
     }
 }

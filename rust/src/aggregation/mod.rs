@@ -45,7 +45,7 @@ pub mod index;
 pub use aggregator::{
     AggFaultHook, AggregationReport, Aggregator, DrainStat, SubmitStat, FAULT_PRE_INDEX,
 };
-pub use container::{ContainerHeader, SegmentMeta};
+pub use container::{ContainerError, ContainerHeader, SegmentMeta};
 pub use index::{SegmentIndex, SegmentLoc, INDEX_KEY};
 
 use std::time::Duration;

@@ -246,6 +246,12 @@ impl VelocConfig {
                 cfg.backend.inline_max = (kb * 1024.0) as usize;
             }
             cfg.backend.fsync = b.bool_or("fsync", cfg.backend.fsync);
+            if let Some(mb) = b.get("max_frame_body_mb").and_then(Json::as_f64) {
+                if !(mb >= 0.0) {
+                    bail!("backend.max_frame_body_mb must be >= 0, got {mb}");
+                }
+                cfg.backend.max_frame_body = (mb * 1048576.0) as usize;
+            }
         }
         if let Some(d) = j.get("delta") {
             cfg.delta.enabled = d.bool_or("enabled", cfg.delta.enabled);
@@ -707,7 +713,7 @@ mod tests {
             r#"{
                 "backend": {"dir": "/tmp/veloc-bd", "socket": "/tmp/veloc-bd/s.sock",
                             "queue_depth": 16, "inline_max_kb": 128,
-                            "fsync": false}
+                            "fsync": false, "max_frame_body_mb": 256}
             }"#,
         )
         .unwrap();
@@ -720,6 +726,13 @@ mod tests {
         assert_eq!(c.backend.queue_depth, 16);
         assert_eq!(c.backend.inline_max, 128 << 10);
         assert!(!c.backend.fsync);
+        assert_eq!(c.backend.max_frame_body, 256 << 20);
+        // A frame cap below inline_max can never admit an inline submit.
+        let j = Json::parse(
+            r#"{"backend": {"inline_max_kb": 128, "max_frame_body_mb": 0.0625}}"#,
+        )
+        .unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
         // Defaults derive the socket from the home dir.
         let c = VelocConfig::default();
         assert_eq!(c.backend.socket_path(), c.backend.dir.join("veloc.sock"));

@@ -908,10 +908,16 @@ impl BackendDaemon {
     fn handle_conn(self: Arc<Self>, mut stream: std::os::unix::net::UnixStream) {
         use crate::backend::wire;
         use crate::util::json::Json;
+        let limits = wire::FrameLimits {
+            max_body: self.cfg.max_frame_body,
+            ..Default::default()
+        };
         loop {
-            let (hdr, body) = match wire::read_frame(&mut stream) {
+            let (hdr, body) = match wire::read_frame_limited(&mut stream, limits) {
                 Ok(f) => f,
-                Err(_) => return, // peer disconnected
+                // Peer disconnected, or sent a frame the limits reject —
+                // either way the connection is unusable; drop it.
+                Err(_) => return,
             };
             let (resp, rbody) = match self.handle_op(&hdr, body) {
                 Ok(r) => r,

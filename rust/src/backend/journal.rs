@@ -62,24 +62,45 @@ fn encode_record(j: &Json) -> Vec<u8> {
 }
 
 /// Parse one record at `buf[at..]`; `None` = torn/corrupt tail (stop).
+/// All arithmetic on the untrusted length prefix is checked — a hostile
+/// length can only end the scan, never overflow or slice out of bounds.
 fn decode_record(buf: &[u8], at: usize) -> Option<(Json, usize)> {
-    if at + 4 > buf.len() {
+    if at.checked_add(4)? > buf.len() {
         return None;
     }
     let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
     let body_start = at + 4;
     let crc_start = body_start.checked_add(len)?;
-    if crc_start + 4 > buf.len() {
+    let end = crc_start.checked_add(4)?;
+    if end > buf.len() {
         return None;
     }
     let body = &buf[body_start..crc_start];
-    let stored = u32::from_le_bytes(buf[crc_start..crc_start + 4].try_into().unwrap());
+    let stored = u32::from_le_bytes(buf[crc_start..end].try_into().unwrap());
     if crc32fast::hash(body) != stored {
         return None;
     }
     let text = std::str::from_utf8(body).ok()?;
     let j = Json::parse(text).ok()?;
-    Some((j, crc_start + 4))
+    Some((j, end))
+}
+
+/// Scan a WAL image into its intact records, in append order, stopping at
+/// the first torn or corrupt frame (everything behind a tear is
+/// unreachable by construction: record boundaries cannot be re-found).
+///
+/// This is the exact parser [`Journal::open`] replays through, exposed so
+/// the corruption suite and the fuzz harness can drive it against hostile
+/// bytes directly: for any input it must return normally — typed absence,
+/// never a panic or an allocation derived from an untrusted length.
+pub fn scan_records(buf: &[u8]) -> Vec<Json> {
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while let Some((j, next)) = decode_record(buf, at) {
+        out.push(j);
+        at = next;
+    }
+    out
 }
 
 impl Journal {
@@ -95,25 +116,33 @@ impl Journal {
 
         // Replay: begins without a matching end, whose payload survives.
         let mut begins: Vec<PendingEntry> = Vec::new();
+        let mut begun: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
         let mut ended: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
         let mut max_id = 0u64;
         if wal_path.exists() {
             let mut buf = Vec::new();
             File::open(&wal_path)?.read_to_end(&mut buf)?;
-            let mut at = 0usize;
-            while let Some((j, next)) = decode_record(&buf, at) {
-                at = next;
+            for j in scan_records(&buf) {
                 let id = j.get("id").and_then(Json::as_u64).unwrap_or(0);
                 max_id = max_id.max(id);
                 match j.str_or("t", "") {
-                    "begin" => begins.push(PendingEntry {
-                        id,
-                        job: j.str_or("job", "").to_string(),
-                        rank: j.usize_or("rank", 0),
-                        name: j.str_or("name", "").to_string(),
-                        version: j.get("version").and_then(Json::as_u64).unwrap_or(0),
-                        payload: payloads.join(j.str_or("payload", "")),
-                    }),
+                    "begin" => {
+                        // Replay is idempotent per id: a duplicated begin
+                        // (compaction rewrite interrupted mid-rename, or a
+                        // replayed-then-recrashed daemon) resubmits once,
+                        // under the first record's fields.
+                        if !begun.insert(id) {
+                            continue;
+                        }
+                        begins.push(PendingEntry {
+                            id,
+                            job: j.str_or("job", "").to_string(),
+                            rank: j.usize_or("rank", 0),
+                            name: j.str_or("name", "").to_string(),
+                            version: j.get("version").and_then(Json::as_u64).unwrap_or(0),
+                            payload: payloads.join(j.str_or("payload", "")),
+                        });
+                    }
                     "end" => {
                         ended.insert(id);
                     }
@@ -383,6 +412,81 @@ mod tests {
         assert_eq!(pending.len(), 1, "intact prefix survives the torn tail");
         assert_eq!(pending[0].version, 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_record_followed_by_valid_record_stops_at_the_tear() {
+        // A tear mid-log makes everything behind it unreachable: record
+        // boundaries cannot be re-found, so a valid-looking record after
+        // the tear must NOT be resurrected (it may be a stale leftover
+        // from before a compaction that the tear destroyed).
+        let dir = tmp();
+        {
+            let (j, _) = Journal::open(&dir, true).unwrap();
+            j.begin("j", 0, "j@a", 1, b"payload-1").unwrap();
+        }
+        {
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(dir.join("wal.log"))
+                .unwrap();
+            // Torn frame: a length prefix promising more than follows of
+            // what would itself be a valid record...
+            let torn = encode_record(
+                &Json::obj().set("t", "begin").set("id", 7u64).set("version", 7u64),
+            );
+            f.write_all(&torn[..torn.len() - 6]).unwrap();
+            // ...directly followed by a bytewise-valid record.
+            f.write_all(&encode_record(
+                &Json::obj().set("t", "begin").set("id", 8u64).set("version", 8u64),
+            ))
+            .unwrap();
+        }
+        let (_j, pending) = Journal::open(&dir, true).unwrap();
+        assert_eq!(pending.len(), 1, "only the intact prefix replays");
+        assert_eq!(pending[0].version, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicated_begin_replays_once() {
+        let dir = tmp();
+        let first = {
+            let (j, _) = Journal::open(&dir, true).unwrap();
+            j.begin("j", 0, "j@a", 1, b"payload-1").unwrap()
+        };
+        // Append a byte-identical duplicate of the begin record (what an
+        // interrupted compaction rewrite can leave behind).
+        {
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(dir.join("wal.log"))
+                .unwrap();
+            f.write_all(&encode_record(&begin_json(&first))).unwrap();
+        }
+        let (_j, pending) = Journal::open(&dir, true).unwrap();
+        assert_eq!(pending.len(), 1, "duplicate begin must not double-submit");
+        assert_eq!(pending[0].id, first.id);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_stops_clean_on_hostile_lengths() {
+        // Length prefix claiming usize-overflow territory: scan must end,
+        // not panic or allocate.
+        let mut buf = encode_record(&Json::obj().set("t", "end").set("id", 1u64));
+        let intact = scan_records(&buf).len();
+        assert_eq!(intact, 1);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(b"xx");
+        assert_eq!(scan_records(&buf).len(), 1);
+        // A record whose CRC does not match ends the scan too.
+        let mut rec = encode_record(&Json::obj().set("t", "end").set("id", 2u64));
+        let n = rec.len();
+        rec[n - 1] ^= 0xFF;
+        let mut buf2 = encode_record(&Json::obj().set("t", "end").set("id", 1u64));
+        buf2.extend_from_slice(&rec);
+        assert_eq!(scan_records(&buf2).len(), 1);
     }
 
     #[test]

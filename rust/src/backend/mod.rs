@@ -48,7 +48,7 @@ pub mod wire;
 #[cfg(unix)]
 pub use client::{BackendClient, SocketTransport};
 pub use daemon::{BackendDaemon, DaemonTransport, Payload, SubmitAck};
-pub use journal::{Journal, PendingEntry};
+pub use journal::{scan_records, Journal, PendingEntry};
 pub use queue::{FairQueue, Submission};
 
 use anyhow::{bail, Result};
@@ -73,6 +73,12 @@ pub struct BackendConfig {
     /// Fsync the staged payload and the WAL record before acknowledging a
     /// submit (the durability contract; disable only for benchmarks).
     pub fsync: bool,
+    /// Largest inline frame body the daemon will read from a client
+    /// socket before rejecting the frame with a typed
+    /// [`WireError::BodyTooLarge`](wire::WireError::BodyTooLarge).
+    /// Defaults to the protocol maximum [`wire::MAX_BODY`]; deployments
+    /// whose clients always stage large payloads can run much tighter.
+    pub max_frame_body: usize,
 }
 
 impl Default for BackendConfig {
@@ -83,6 +89,7 @@ impl Default for BackendConfig {
             queue_depth: 64,
             inline_max: 64 << 10,
             fsync: true,
+            max_frame_body: wire::MAX_BODY,
         }
     }
 }
@@ -114,6 +121,14 @@ impl BackendConfig {
                 "backend.inline_max ({}) exceeds the wire frame limit ({})",
                 self.inline_max,
                 wire::MAX_BODY
+            );
+        }
+        if self.max_frame_body < self.inline_max {
+            bail!(
+                "backend.max_frame_body ({}) is below inline_max ({}): every \
+                 inline submit would be rejected at the socket",
+                self.max_frame_body,
+                self.inline_max
             );
         }
         Ok(())
@@ -213,6 +228,9 @@ mod tests {
         assert!(c.validate().is_err());
         c.queue_depth = crate::pipeline::TRACKER_KEEP + 1;
         assert!(c.validate().is_err(), "depth beyond status retention");
+        c.queue_depth = 4;
+        c.max_frame_body = c.inline_max - 1;
+        assert!(c.validate().is_err(), "frame cap below inline_max");
     }
 
     #[test]

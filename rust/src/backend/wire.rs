@@ -21,8 +21,9 @@
 //! carry `"ok"`; failures carry `"err"`.
 
 use crate::pipeline::CkptStatus;
-use crate::util::json::Json;
+use crate::util::json::{Json, ParseError};
 use anyhow::{anyhow, bail, Result};
+use std::fmt;
 use std::io::{Read, Write};
 
 /// Largest accepted header (requests are small; this bounds a corrupt or
@@ -30,6 +31,88 @@ use std::io::{Read, Write};
 pub const MAX_HEADER: usize = 1 << 20;
 /// Largest accepted body — one checkpoint payload.
 pub const MAX_BODY: usize = 1 << 30;
+
+/// Incremental read granularity: a peer that *declares* a huge body but
+/// never sends it costs at most one step of allocation, not the declared
+/// length.
+const READ_STEP: usize = 256 << 10;
+
+/// Typed failure taxonomy for frame I/O. Every way a hostile or crashed
+/// peer can garble a frame maps to one variant — callers can branch on
+/// shape (the daemon drops the connection on any of them) and tests can
+/// assert the exact rejection instead of matching message substrings.
+#[derive(Debug)]
+pub enum WireError {
+    /// Clean EOF between frames: the peer hung up.
+    Closed(std::io::Error),
+    /// Declared header length exceeds the configured cap.
+    HeaderTooLarge {
+        /// Length the frame declared.
+        len: u64,
+        /// Cap it was checked against.
+        max: usize,
+    },
+    /// Declared body length exceeds the configured cap.
+    BodyTooLarge {
+        /// Length the frame declared.
+        len: u64,
+        /// Cap it was checked against.
+        max: usize,
+    },
+    /// Header bytes are not UTF-8.
+    HeaderNotUtf8,
+    /// Header text is not valid JSON.
+    HeaderJson(ParseError),
+    /// Truncated mid-frame or any other transport failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Closed(e) => write!(f, "connection closed: {e}"),
+            WireError::HeaderTooLarge { len, max } => {
+                write!(f, "frame header too large ({len} bytes, max {max})")
+            }
+            WireError::BodyTooLarge { len, max } => {
+                write!(f, "frame body too large ({len} bytes, max {max})")
+            }
+            WireError::HeaderNotUtf8 => write!(f, "frame header not utf-8"),
+            WireError::HeaderJson(e) => write!(f, "frame header: {e}"),
+            WireError::Io(e) => write!(f, "frame i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Closed(e) | WireError::Io(e) => Some(e),
+            WireError::HeaderJson(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Configurable per-connection frame caps. [`Default`] is the protocol
+/// maximum ([`MAX_HEADER`] / [`MAX_BODY`]); deployments that never submit
+/// inline payloads can run with a far smaller `max_body`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameLimits {
+    /// Largest accepted header JSON, bytes.
+    pub max_header: usize,
+    /// Largest accepted binary body, bytes.
+    pub max_body: usize,
+}
+
+impl Default for FrameLimits {
+    fn default() -> Self {
+        FrameLimits {
+            max_header: MAX_HEADER,
+            max_body: MAX_BODY,
+        }
+    }
+}
 
 /// Write one frame (header JSON + binary body).
 pub fn write_frame<W: Write>(w: &mut W, header: &Json, body: &[u8]) -> Result<()> {
@@ -48,30 +131,56 @@ pub fn write_frame<W: Write>(w: &mut W, header: &Json, body: &[u8]) -> Result<()
     Ok(())
 }
 
-/// Read one frame. An immediate clean EOF (peer closed between frames)
-/// surfaces as an error carrying "closed".
-pub fn read_frame<R: Read>(r: &mut R) -> Result<(Json, Vec<u8>)> {
+/// Read one frame under the default [`FrameLimits`]. An immediate clean
+/// EOF (peer closed between frames) surfaces as [`WireError::Closed`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(Json, Vec<u8>), WireError> {
+    read_frame_limited(r, FrameLimits::default())
+}
+
+/// Read one frame, validating both declared lengths against `limits`
+/// *before* any allocation, then reading incrementally so memory grows
+/// only as bytes actually arrive — a hostile 4 GiB length prefix costs a
+/// typed error, and a truncated 1 GiB claim costs one [`READ_STEP`].
+pub fn read_frame_limited<R: Read>(
+    r: &mut R,
+    limits: FrameLimits,
+) -> Result<(Json, Vec<u8>), WireError> {
     let mut lens = [0u8; 12];
-    r.read_exact(&mut lens)
-        .map_err(|e| anyhow!("connection closed: {e}"))?;
-    let hlen = u32::from_le_bytes(lens[0..4].try_into().unwrap()) as usize;
-    // Bound-check the body length as u64 *before* narrowing: on 32-bit
+    r.read_exact(&mut lens).map_err(WireError::Closed)?;
+    // Bound-check both lengths as u64 *before* narrowing: on 32-bit
     // targets an oversized length would wrap through `as usize` and pass.
+    let hlen64 = u32::from_le_bytes(lens[0..4].try_into().unwrap()) as u64;
     let blen64 = u64::from_le_bytes(lens[4..12].try_into().unwrap());
-    if hlen > MAX_HEADER {
-        bail!("frame header too large ({hlen} bytes)");
+    if hlen64 > limits.max_header as u64 {
+        return Err(WireError::HeaderTooLarge {
+            len: hlen64,
+            max: limits.max_header,
+        });
     }
-    if blen64 > MAX_BODY as u64 {
-        bail!("frame body too large ({blen64} bytes)");
+    if blen64 > limits.max_body as u64 {
+        return Err(WireError::BodyTooLarge {
+            len: blen64,
+            max: limits.max_body,
+        });
     }
-    let blen = blen64 as usize;
-    let mut h = vec![0u8; hlen];
-    r.read_exact(&mut h)?;
-    let header = std::str::from_utf8(&h).map_err(|_| anyhow!("frame header not utf-8"))?;
-    let header = Json::parse(header).map_err(|e| anyhow!("frame header: {e}"))?;
-    let mut body = vec![0u8; blen];
-    r.read_exact(&mut body)?;
+    let h = read_exact_bounded(r, hlen64 as usize)?;
+    let header = std::str::from_utf8(&h).map_err(|_| WireError::HeaderNotUtf8)?;
+    let header = Json::parse(header).map_err(WireError::HeaderJson)?;
+    let body = read_exact_bounded(r, blen64 as usize)?;
     Ok((header, body))
+}
+
+/// Read exactly `len` bytes, growing the buffer in [`READ_STEP`] chunks
+/// so a declared-but-never-sent length cannot reserve memory up front.
+fn read_exact_bounded<R: Read>(r: &mut R, len: usize) -> Result<Vec<u8>, WireError> {
+    let mut buf = Vec::with_capacity(len.min(READ_STEP));
+    while buf.len() < len {
+        let take = (len - buf.len()).min(READ_STEP);
+        let start = buf.len();
+        buf.resize(start + take, 0);
+        r.read_exact(&mut buf[start..]).map_err(WireError::Io)?;
+    }
+    Ok(buf)
 }
 
 /// Serialize a checkpoint status into response-header fields.
@@ -141,6 +250,85 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn hostile_4gib_length_prefix_rejected_before_allocation() {
+        // A frame claiming a 4 GiB body must come back as a typed
+        // rejection without ever allocating the claimed length.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(2u32).to_le_bytes());
+        buf.extend_from_slice(&(4u64 << 30).to_le_bytes());
+        buf.extend_from_slice(b"{}");
+        match read_frame(&mut std::io::Cursor::new(buf)).unwrap_err() {
+            WireError::BodyTooLarge { len, max } => {
+                assert_eq!(len, 4 << 30);
+                assert_eq!(max, MAX_BODY);
+            }
+            other => panic!("expected BodyTooLarge, got {other}"),
+        }
+        // Same for a header length beyond the cap.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        match read_frame(&mut std::io::Cursor::new(buf)).unwrap_err() {
+            WireError::HeaderTooLarge { len, .. } => assert_eq!(len, u32::MAX as u64),
+            other => panic!("expected HeaderTooLarge, got {other}"),
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_a_typed_io_error_with_bounded_allocation() {
+        // Declares a large (in-cap) body but sends only a few bytes: the
+        // incremental reader must fail with Io after at most one step.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(2u32).to_le_bytes());
+        buf.extend_from_slice(&(512u64 << 20).to_le_bytes());
+        buf.extend_from_slice(b"{}");
+        buf.extend_from_slice(&[0u8; 64]);
+        match read_frame(&mut std::io::Cursor::new(buf)).unwrap_err() {
+            WireError::Io(_) => {}
+            other => panic!("expected Io, got {other}"),
+        }
+    }
+
+    #[test]
+    fn limits_are_configurable() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::obj().set("op", "stats"), &[0u8; 128]).unwrap();
+        let tight = FrameLimits {
+            max_header: MAX_HEADER,
+            max_body: 64,
+        };
+        match read_frame_limited(&mut std::io::Cursor::new(&buf), tight).unwrap_err() {
+            WireError::BodyTooLarge { len, max } => {
+                assert_eq!((len, max), (128, 64));
+            }
+            other => panic!("expected BodyTooLarge, got {other}"),
+        }
+        // The same bytes pass under the default limits.
+        read_frame(&mut std::io::Cursor::new(&buf)).unwrap();
+    }
+
+    #[test]
+    fn garbled_headers_are_typed_errors() {
+        let mut non_utf8 = Vec::new();
+        non_utf8.extend_from_slice(&(2u32).to_le_bytes());
+        non_utf8.extend_from_slice(&0u64.to_le_bytes());
+        non_utf8.extend_from_slice(&[0xff, 0xfe]);
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(non_utf8)).unwrap_err(),
+            WireError::HeaderNotUtf8
+        ));
+
+        let mut bad_json = Vec::new();
+        bad_json.extend_from_slice(&(2u32).to_le_bytes());
+        bad_json.extend_from_slice(&0u64.to_le_bytes());
+        bad_json.extend_from_slice(b"{x");
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(bad_json)).unwrap_err(),
+            WireError::HeaderJson(_)
+        ));
     }
 
     #[test]

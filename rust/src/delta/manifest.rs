@@ -23,14 +23,83 @@
 //! from ancestor containers (see [`super::materialize`]).
 
 use crate::delta::chunker::Fingerprint;
-use crate::util::json::Json;
-use anyhow::{anyhow, bail, Result};
+use crate::util::json::{Json, ParseError};
 use std::collections::{BTreeSet, HashMap};
+use std::fmt;
 
 /// Delta container magic bytes.
 pub const VDLT_MAGIC: &[u8; 4] = b"VDLT";
 /// Delta container format version.
 pub const VDLT_VERSION: u32 = 1;
+
+/// Typed VDLT parse failures. Recovery treats any of these as "this
+/// container is unusable, fall back along the chain / to the next level"
+/// — none of them may surface as a panic, however hostile the bytes.
+#[derive(Debug)]
+pub enum ManifestError {
+    /// Container shorter than the fixed framing (magic + version + hlen
+    /// + trailing CRC).
+    TooShort(usize),
+    /// Missing `"VDLT"` magic.
+    BadMagic,
+    /// Whole-container CRC mismatch.
+    CrcMismatch {
+        /// CRC32 stored in the trailer.
+        stored: u32,
+        /// CRC32 of the bytes actually present.
+        actual: u32,
+    },
+    /// Unsupported format version.
+    BadVersion(u32),
+    /// Declared header length overruns the container.
+    HeaderTruncated,
+    /// Header bytes are not UTF-8.
+    HeaderNotUtf8,
+    /// Header text is not valid JSON.
+    HeaderJson(ParseError),
+    /// Header JSON parsed but a field is missing or has the wrong shape.
+    Malformed(String),
+    /// A novel chunk's declared length overruns the container body.
+    ChunkOverrun(String),
+    /// A novel chunk's payload does not hash to its declared fingerprint.
+    ChunkFingerprint(String),
+    /// Body bytes left over after the last declared novel chunk.
+    TrailingBytes,
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::TooShort(n) => write!(f, "VDLT too short ({n} bytes)"),
+            ManifestError::BadMagic => write!(f, "bad VDLT magic"),
+            ManifestError::CrcMismatch { stored, actual } => write!(
+                f,
+                "VDLT CRC mismatch: stored {stored:#010x}, actual {actual:#010x}"
+            ),
+            ManifestError::BadVersion(v) => write!(f, "unsupported VDLT version {v}"),
+            ManifestError::HeaderTruncated => write!(f, "VDLT header truncated"),
+            ManifestError::HeaderNotUtf8 => write!(f, "VDLT header not utf-8"),
+            ManifestError::HeaderJson(e) => write!(f, "VDLT header: {e}"),
+            ManifestError::Malformed(msg) => write!(f, "VDLT manifest: {msg}"),
+            ManifestError::ChunkOverrun(fp) => {
+                write!(f, "novel chunk {fp} overruns container")
+            }
+            ManifestError::ChunkFingerprint(fp) => {
+                write!(f, "novel chunk payload does not match fingerprint {fp}")
+            }
+            ManifestError::TrailingBytes => write!(f, "trailing bytes in VDLT body"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::HeaderJson(e) => Some(e),
+            _ => None,
+        }
+    }
+}
 
 /// One chunk reference inside a region recipe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -129,22 +198,23 @@ impl DeltaManifest {
     }
 
     /// Parse a manifest out of a VDLT container header.
-    pub fn from_json(j: &Json) -> Result<DeltaManifest> {
+    pub fn from_json(j: &Json) -> Result<DeltaManifest, ManifestError> {
+        let field = |msg: &str| ManifestError::Malformed(msg.to_string());
         let mut regions = Vec::new();
         for r in j
             .get("regions")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing regions"))?
+            .ok_or_else(|| field("manifest missing regions"))?
         {
             let id = r
                 .get("id")
                 .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("region missing id"))? as u32;
+                .ok_or_else(|| field("region missing id"))? as u32;
             let mut chunks = Vec::new();
             for c in r
                 .get("chunks")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("region missing chunks"))?
+                .ok_or_else(|| field("region missing chunks"))?
             {
                 chunks.push(chunk_pair(c)?);
             }
@@ -154,20 +224,20 @@ impl DeltaManifest {
             name: j
                 .get("name")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("manifest missing name"))?
+                .ok_or_else(|| field("manifest missing name"))?
                 .to_string(),
             rank: j
                 .get("rank")
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("manifest missing rank"))?,
+                .ok_or_else(|| field("manifest missing rank"))?,
             version: j
                 .get("version")
                 .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("manifest missing version"))?,
+                .ok_or_else(|| field("manifest missing version"))?,
             iteration: j
                 .get("iteration")
                 .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("manifest missing iteration"))?,
+                .ok_or_else(|| field("manifest missing iteration"))?,
             base: j.get("base").and_then(Json::as_u64),
             chain_len: j.get("chain_len").and_then(Json::as_u64).unwrap_or(0),
             regions,
@@ -176,19 +246,18 @@ impl DeltaManifest {
 }
 
 /// Parse one `["fp-hex", len]` pair.
-fn chunk_pair(c: &Json) -> Result<ChunkRef> {
-    let arr = c.as_arr().ok_or_else(|| anyhow!("chunk ref not a pair"))?;
+fn chunk_pair(c: &Json) -> Result<ChunkRef, ManifestError> {
+    let field = |msg: &str| ManifestError::Malformed(msg.to_string());
+    let arr = c.as_arr().ok_or_else(|| field("chunk ref not a pair"))?;
     if arr.len() != 2 {
-        bail!("chunk ref needs [fp, len]");
+        return Err(field("chunk ref needs [fp, len]"));
     }
-    let fp = Fingerprint::parse(
-        arr[0]
-            .as_str()
-            .ok_or_else(|| anyhow!("chunk fp not a string"))?,
-    )?;
+    let hex = arr[0].as_str().ok_or_else(|| field("chunk fp not a string"))?;
+    let fp = Fingerprint::parse(hex)
+        .map_err(|_| ManifestError::Malformed(format!("bad fingerprint {hex:?}")))?;
     let len = arr[1]
         .as_usize()
-        .ok_or_else(|| anyhow!("chunk len not a number"))?;
+        .ok_or_else(|| field("chunk len not a number"))?;
     Ok(ChunkRef { fp, len })
 }
 
@@ -226,54 +295,63 @@ pub fn encode(manifest: &DeltaManifest, novel: &[(Fingerprint, &[u8])]) -> Vec<u
 
 /// Parse and CRC-validate a VDLT container into its manifest and the
 /// chunk payloads it carries.
-pub fn decode(buf: &[u8]) -> Result<(DeltaManifest, HashMap<Fingerprint, Vec<u8>>)> {
+///
+/// Every length in here is attacker-controlled (the CRC only protects
+/// against *accidental* corruption), so all offset arithmetic is checked:
+/// a hostile declared length yields a typed error, never an overflow or
+/// an out-of-bounds slice.
+pub fn decode(buf: &[u8]) -> Result<(DeltaManifest, HashMap<Fingerprint, Vec<u8>>), ManifestError> {
     if buf.len() < 16 {
-        bail!("VDLT too short ({} bytes)", buf.len());
+        return Err(ManifestError::TooShort(buf.len()));
     }
     if !is_delta(buf) {
-        bail!("bad VDLT magic");
+        return Err(ManifestError::BadMagic);
     }
-    let stored_crc = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
-    let actual_crc = crc32fast::hash(&buf[..buf.len() - 4]);
-    if stored_crc != actual_crc {
-        bail!("VDLT CRC mismatch: stored {stored_crc:#010x}, actual {actual_crc:#010x}");
+    let stored = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+    let actual = crc32fast::hash(&buf[..buf.len() - 4]);
+    if stored != actual {
+        return Err(ManifestError::CrcMismatch { stored, actual });
     }
     let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
     if version != VDLT_VERSION {
-        bail!("unsupported VDLT version {version}");
+        return Err(ManifestError::BadVersion(version));
     }
     let hlen = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
-    let hend = 12 + hlen;
-    if buf.len() < hend + 4 {
-        bail!("VDLT header truncated");
+    let hend = 12usize
+        .checked_add(hlen)
+        .ok_or(ManifestError::HeaderTruncated)?;
+    if hend.checked_add(4).map_or(true, |end| buf.len() < end) {
+        return Err(ManifestError::HeaderTruncated);
     }
-    let header = std::str::from_utf8(&buf[12..hend])
-        .map_err(|_| anyhow!("VDLT header not utf-8"))?;
-    let j = Json::parse(header).map_err(|e| anyhow!("VDLT header: {e}"))?;
+    let header =
+        std::str::from_utf8(&buf[12..hend]).map_err(|_| ManifestError::HeaderNotUtf8)?;
+    let j = Json::parse(header).map_err(ManifestError::HeaderJson)?;
     let manifest = DeltaManifest::from_json(
         j.get("manifest")
-            .ok_or_else(|| anyhow!("VDLT header missing manifest"))?,
+            .ok_or_else(|| ManifestError::Malformed("header missing manifest".to_string()))?,
     )?;
+    let body_end = buf.len() - 4;
     let mut chunks = HashMap::new();
     let mut off = hend;
     for entry in j
         .get("novel")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("VDLT header missing novel list"))?
+        .ok_or_else(|| ManifestError::Malformed("header missing novel list".to_string()))?
     {
         let c = chunk_pair(entry)?;
-        if off + c.len > buf.len() - 4 {
-            bail!("novel chunk {} overruns container", c.fp.hex());
-        }
-        let data = buf[off..off + c.len].to_vec();
+        let end = off
+            .checked_add(c.len)
+            .filter(|&end| end <= body_end)
+            .ok_or_else(|| ManifestError::ChunkOverrun(c.fp.hex()))?;
+        let data = buf[off..end].to_vec();
         if Fingerprint::of(&data) != c.fp {
-            bail!("novel chunk payload does not match fingerprint {}", c.fp.hex());
+            return Err(ManifestError::ChunkFingerprint(c.fp.hex()));
         }
         chunks.insert(c.fp, data);
-        off += c.len;
+        off = end;
     }
-    if off != buf.len() - 4 {
-        bail!("trailing bytes in VDLT body");
+    if off != body_end {
+        return Err(ManifestError::TrailingBytes);
     }
     Ok((manifest, chunks))
 }
@@ -281,7 +359,7 @@ pub fn decode(buf: &[u8]) -> Result<(DeltaManifest, HashMap<Fingerprint, Vec<u8>
 /// Re-encode a container with every novel payload stripped (manifest kept
 /// intact) — the sim's model of a torn flush that persisted the manifest
 /// but lost the chunk data.
-pub fn strip_payloads(buf: &[u8]) -> Result<Vec<u8>> {
+pub fn strip_payloads(buf: &[u8]) -> Result<Vec<u8>, ManifestError> {
     let (manifest, _) = decode(buf)?;
     Ok(encode(&manifest, &[]))
 }
@@ -353,6 +431,47 @@ mod tests {
         let err = decode(&buf).unwrap_err().to_string();
         assert!(err.contains("CRC"), "{err}");
         assert!(decode(&buf[..12]).is_err());
+    }
+
+    #[test]
+    fn hostile_lengths_yield_typed_errors_not_panics() {
+        // Build a container whose header declares an absurd novel-chunk
+        // length, with a *valid* CRC — the CRC only guards accidental
+        // corruption, so the length checks must hold on their own.
+        let forge = |novel_len: u64, hlen_override: Option<u32>| -> Vec<u8> {
+            let header = format!(
+                concat!(
+                    "{{\"manifest\":{{\"name\":\"x\",\"rank\":0,\"version\":1,",
+                    "\"iteration\":1,\"chain_len\":0,\"regions\":[]}},",
+                    "\"novel\":[[\"{:032x}\",{}]]}}"
+                ),
+                0u128, novel_len
+            );
+            let hb = header.as_bytes();
+            let mut out = Vec::new();
+            out.extend_from_slice(VDLT_MAGIC);
+            out.extend_from_slice(&VDLT_VERSION.to_le_bytes());
+            out.extend_from_slice(
+                &hlen_override.unwrap_or(hb.len() as u32).to_le_bytes(),
+            );
+            out.extend_from_slice(hb);
+            let crc = crc32fast::hash(&out);
+            out.extend_from_slice(&crc.to_le_bytes());
+            out
+        };
+        // Chunk length far beyond the container, including the value that
+        // would overflow `off + len` if the math were unchecked.
+        for len in [u64::MAX, (usize::MAX as u64) - 8, 4 << 30] {
+            match decode(&forge(len, None)) {
+                Err(ManifestError::ChunkOverrun(_)) => {}
+                other => panic!("expected ChunkOverrun, got {other:?}"),
+            }
+        }
+        // Inflated header length: the declared end wraps or overruns.
+        match decode(&forge(0, Some(u32::MAX))) {
+            Err(ManifestError::HeaderTruncated) => {}
+            other => panic!("expected HeaderTruncated, got {other:?}"),
+        }
     }
 
     #[test]

@@ -46,7 +46,9 @@ pub mod state;
 pub mod store;
 
 pub use chunker::{Chunker, Fingerprint};
-pub use manifest::{is_delta, strip_payloads, ChunkRef, DeltaManifest, RegionChunks, VDLT_MAGIC};
+pub use manifest::{
+    is_delta, strip_payloads, ChunkRef, DeltaManifest, ManifestError, RegionChunks, VDLT_MAGIC,
+};
 pub use reassemble::{
     materialize, materialize_planned, predicted_hops, ChainPlan, RestoreError,
 };

@@ -266,11 +266,20 @@ pub fn materialize_planned(
     }
 
     // Assemble regions in manifest order; lengths double-checked against
-    // the recipe (payloads were fingerprint-verified on the way in).
+    // the recipe (payloads were fingerprint-verified on the way in). The
+    // recipe lengths themselves are untrusted: sum them checked, and only
+    // pre-size the buffer once every piece's real length matched — a
+    // hostile manifest must not drive a giant allocation (or an overflow)
+    // off declared lengths its payloads can't back.
     let mut ckpt = Checkpoint::new(&target.name, target.rank, target.iteration);
     for r in &target.regions {
-        let total: usize = r.chunks.iter().map(|c| c.len).sum();
-        let mut data = Vec::with_capacity(total);
+        let total = r
+            .chunks
+            .iter()
+            .try_fold(0usize, |acc, c| acc.checked_add(c.len))
+            .ok_or_else(|| {
+                anyhow::anyhow!("region {} recipe lengths overflow", r.id)
+            })?;
         for c in &r.chunks {
             let piece = have
                 .get(&c.fp)
@@ -283,7 +292,10 @@ pub fn materialize_planned(
                 piece.len(),
                 c.len
             );
-            data.extend_from_slice(piece);
+        }
+        let mut data = Vec::with_capacity(total);
+        for c in &r.chunks {
+            data.extend_from_slice(&have[&c.fp]);
         }
         ckpt.push_region(r.id, data);
     }

@@ -8,6 +8,9 @@
 //!   interval   Young/Daly vs DES interval recommendations
 //!   sim        deterministic crash–recover–verify scenarios (one spec,
 //!              a saved-trace replay, or the standard sweep matrix)
+//!   soak       budgeted randomized chaos runner: the full injection
+//!              catalog first, then shuffled re-seeded rounds until the
+//!              wall-clock budget is spent; failures print one-line repros
 //!   trace      run a traced multi-rank checkpoint wave and export the
 //!              span timeline as Chrome trace-event JSON
 //!   report     same run, summarized: per-stage latency percentiles
@@ -31,7 +34,11 @@ fn main() {
         "veloc",
         "VEry Low Overhead Checkpointing — paper reproduction runtime",
     )
-    .opt("cmd", "info", "info | run | daemon | interval | sim | trace | report | scrape")
+    .opt(
+        "cmd",
+        "info",
+        "info | run | daemon | interval | sim | soak | trace | report | scrape",
+    )
     .opt("config", "", "JSON config file (empty = defaults)")
     .opt("nodes", "4", "simulated nodes")
     .opt("ranks-per-node", "2", "ranks per node")
@@ -69,7 +76,10 @@ fn main() {
     .opt("filter", "", "sim: only run matrix rows whose injection point contains this")
     .opt("seed", "1", "sim: base seed for the matrix / default spec")
     .opt("trace-out", "", "sim: write the run's event trace to this file")
-    .opt("trace-dir", "", "sim: write failing scenario traces into this dir")
+    .opt("trace-dir", "", "sim/soak: write failing scenario traces into this dir")
+    .opt("budget", "60", "soak: wall-clock budget in seconds")
+    .opt("soak-out", "", "soak: write the summary JSON to this file")
+    .flag("verbose", "soak: print every scenario, not just failures")
     .flag("trace", "record pipeline spans (run/daemon; export via trace-out)")
     .opt("obs-http", "", "daemon: bind /metrics + health endpoint (host:port)")
     .opt("waves", "2", "trace/report: checkpoint waves to run")
@@ -85,13 +95,14 @@ fn main() {
         "daemon" => cmd_daemon(&cli),
         "interval" => cmd_interval(&cli),
         "sim" => cmd_sim(&cli),
+        "soak" => cmd_soak(&cli),
         "trace" => cmd_trace(&cli),
         "report" => cmd_report(&cli),
         "scrape" => cmd_scrape(&cli),
         other => {
             eprintln!(
                 "unknown command '{other}' (try info | run | daemon | interval | \
-                 sim | trace | report | scrape)"
+                 sim | soak | trace | report | scrape)"
             );
             std::process::exit(2);
         }
@@ -494,6 +505,59 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
             Err(e)
         }
     }
+}
+
+/// Budgeted randomized chaos soak: round 0 runs the entire injection
+/// catalog at the base seed (full coverage regardless of budget), then
+/// re-seeded shuffled rounds until `--budget` seconds elapse. Every
+/// failure prints the one-line `veloc sim --json '…'` repro and, with
+/// `--trace-dir`, saves its event trace; `--soak-out` writes the summary
+/// JSON CI uploads as an artifact.
+fn cmd_soak(cli: &Cli) -> Result<()> {
+    use veloc::sim::{run_soak, SoakConfig};
+
+    let budget = Duration::from_secs(cli.get_u64("budget"));
+    let filter = cli.get("filter");
+    let trace_dir = cli.get("trace-dir");
+    let cfg = SoakConfig {
+        budget,
+        base_seed: cli.get_u64("seed"),
+        trace_dir: (!trace_dir.is_empty()).then(|| std::path::PathBuf::from(&trace_dir)),
+        filter: (!filter.is_empty()).then(|| filter.clone()),
+        verbose: cli.get_bool("verbose"),
+    };
+    println!(
+        "soak: budget {}, base seed {} (round 0 = full catalog)",
+        format_duration(budget),
+        cfg.base_seed
+    );
+    let outcome = run_soak(&cfg);
+    println!(
+        "soak done: {} runs over {} round(s) in {}, {} failure(s)",
+        outcome.runs,
+        outcome.rounds,
+        format_duration(outcome.elapsed),
+        outcome.failures.len()
+    );
+    for (fam, n) in &outcome.coverage {
+        println!("  {fam:<24} {n:>6} runs");
+    }
+    let out = cli.get("soak-out");
+    if !out.is_empty() {
+        std::fs::write(&out, outcome.to_json().to_pretty())?;
+        println!("summary written to {out}");
+    }
+    ensure!(
+        outcome.runs > 0,
+        "soak executed no scenarios (filter {filter:?} matches nothing?)"
+    );
+    if !outcome.failures.is_empty() {
+        anyhow::bail!(
+            "{} soak failure(s) — every FAIL line above carries its one-line repro",
+            outcome.failures.len()
+        );
+    }
+    Ok(())
 }
 
 /// Run `--waves` checkpoint waves across every rank with span recording

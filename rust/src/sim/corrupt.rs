@@ -1,0 +1,215 @@
+//! Seeded byte-corruption engine for the hostile-input suite.
+//!
+//! Every serialized artifact the runtime re-reads — wire frames, VAGG
+//! containers, VDLT delta manifests, journal WALs, the segment-index JSON
+//! — must satisfy one invariant under corruption: *parse returns a typed
+//! error or a valid value; it never panics and never allocates off an
+//! untrusted length*. The fuzz harness (`rust/fuzz/`) explores that
+//! invariant with coverage guidance on nightly; this module is its
+//! deterministic, tier-1-runnable twin: the same mutation families,
+//! driven by [`Rng`] so every failure is reproducible from `(data, seed)`
+//! alone.
+//!
+//! The engine is format-agnostic on purpose — it mutates bytes, not
+//! schemas. The one format-aware helper is [`refresh_crc32_trailer`],
+//! which re-seals the whole-buffer CRC32 that VAGG/VDLT carry in their
+//! last four bytes: without it, most mutations die at the checksum gate
+//! and the deeper header/length parsing paths go untested.
+
+use crate::util::rng::Rng;
+
+/// One family of deterministic byte mutations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mutation {
+    /// Flip 1–8 individual bits at random offsets.
+    BitFlip,
+    /// Cut the buffer to a random proper prefix (torn write).
+    Truncate,
+    /// Overwrite a random 4-byte window with an enormous little-endian
+    /// value — the classic hostile length-field inflation.
+    InflateLength,
+    /// Swap two equal-sized non-overlapping windows (record reordering /
+    /// sector remap).
+    Reorder,
+    /// Zero a random run of bytes (hole punched by a failed write).
+    ZeroRun,
+}
+
+impl Mutation {
+    /// Every mutation family, in a stable order (seed decoding and the
+    /// corruption matrices index into this).
+    pub const ALL: [Mutation; 5] = [
+        Mutation::BitFlip,
+        Mutation::Truncate,
+        Mutation::InflateLength,
+        Mutation::Reorder,
+        Mutation::ZeroRun,
+    ];
+
+    /// Stable lowercase name (failure messages, summary JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mutation::BitFlip => "bit-flip",
+            Mutation::Truncate => "truncate",
+            Mutation::InflateLength => "inflate-length",
+            Mutation::Reorder => "reorder",
+            Mutation::ZeroRun => "zero-run",
+        }
+    }
+}
+
+/// Apply the seed-selected mutation family to a copy of `data`. The same
+/// `(data, seed)` pair always yields the same output; the chosen family
+/// is returned so failures can name it.
+pub fn mutate(data: &[u8], seed: u64) -> (Mutation, Vec<u8>) {
+    let mut rng = Rng::new(seed);
+    let m = Mutation::ALL[rng.below(Mutation::ALL.len() as u64) as usize];
+    (m, apply(data, m, &mut rng))
+}
+
+/// Apply one specific mutation family using `rng` for its parameters.
+/// Inputs too small for a family (e.g. reordering a 1-byte buffer) come
+/// back as an unmodified copy — still a legal corruption-suite input, it
+/// just exercises the unmutated path.
+pub fn apply(data: &[u8], m: Mutation, rng: &mut Rng) -> Vec<u8> {
+    let mut out = data.to_vec();
+    match m {
+        Mutation::BitFlip => {
+            if out.is_empty() {
+                return out;
+            }
+            let flips = 1 + rng.below(8) as usize;
+            for _ in 0..flips {
+                let at = rng.below(out.len() as u64) as usize;
+                out[at] ^= 1 << rng.below(8);
+            }
+        }
+        Mutation::Truncate => {
+            if out.is_empty() {
+                return out;
+            }
+            let keep = rng.below(out.len() as u64) as usize;
+            out.truncate(keep);
+        }
+        Mutation::InflateLength => {
+            if out.len() < 4 {
+                return out;
+            }
+            let at = rng.below((out.len() - 3) as u64) as usize;
+            // Bias toward the values that break naive length math:
+            // u32::MAX (wraps 32-bit sums) and huge-but-plausible sizes
+            // (drive unbounded allocation if unchecked).
+            let val: u32 = match rng.below(3) {
+                0 => u32::MAX,
+                1 => u32::MAX - rng.below(64) as u32,
+                _ => (1 << 30) + rng.below(1 << 30) as u32,
+            };
+            out[at..at + 4].copy_from_slice(&val.to_le_bytes());
+        }
+        Mutation::Reorder => {
+            if out.len() < 2 {
+                return out;
+            }
+            let win = 1 + rng.below((out.len() / 2) as u64) as usize;
+            let a = rng.below((out.len() - 2 * win + 1) as u64) as usize;
+            let b = a + win + rng.below((out.len() - a - 2 * win + 1) as u64) as usize;
+            for i in 0..win {
+                out.swap(a + i, b + i);
+            }
+        }
+        Mutation::ZeroRun => {
+            if out.is_empty() {
+                return out;
+            }
+            let start = rng.below(out.len() as u64) as usize;
+            let run = 1 + rng.below((out.len() - start) as u64) as usize;
+            for byte in &mut out[start..start + run] {
+                *byte = 0;
+            }
+        }
+    }
+    out
+}
+
+/// Re-seal the whole-buffer CRC32 trailer that VAGG and VDLT containers
+/// carry in their final four bytes: CRC32 of everything before it. Call
+/// after mutating such a container to push hostile bytes *past* the
+/// checksum gate into the header/length parsing it protects. No-op on
+/// buffers too short to carry a trailer.
+pub fn refresh_crc32_trailer(buf: &mut [u8]) {
+    if buf.len() < 4 {
+        return;
+    }
+    let crc = crc32fast::hash(&buf[..buf.len() - 4]);
+    let at = buf.len() - 4;
+    buf[at..].copy_from_slice(&crc.to_le_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutations_are_deterministic() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        for seed in 0..50u64 {
+            let (m1, a) = mutate(&data, seed);
+            let (m2, b) = mutate(&data, seed);
+            assert_eq!(m1, m2);
+            assert_eq!(a, b, "seed {seed} must reproduce exactly");
+        }
+    }
+
+    #[test]
+    fn families_all_reachable_and_mostly_mutate() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(400).collect();
+        let mut seen = std::collections::BTreeSet::new();
+        let mut changed = 0usize;
+        for seed in 0..200u64 {
+            let (m, out) = mutate(&data, seed);
+            seen.insert(m.name());
+            if out != data {
+                changed += 1;
+            }
+        }
+        assert_eq!(seen.len(), Mutation::ALL.len(), "families seen: {seen:?}");
+        assert!(changed > 150, "only {changed}/200 seeds mutated");
+    }
+
+    #[test]
+    fn tiny_inputs_never_panic() {
+        for len in 0..6usize {
+            let data = vec![0xA5u8; len];
+            for seed in 0..64u64 {
+                let _ = mutate(&data, seed);
+            }
+            for m in Mutation::ALL {
+                let mut rng = Rng::new(9);
+                let _ = apply(&data, m, &mut rng);
+            }
+        }
+    }
+
+    #[test]
+    fn reorder_preserves_multiset_and_length() {
+        let data: Vec<u8> = (0..100u8).collect();
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let out = apply(&data, Mutation::Reorder, &mut rng);
+            assert_eq!(out.len(), data.len());
+            let mut a = out.clone();
+            let mut b = data.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn crc_trailer_refresh_matches_format_convention() {
+        let mut buf = b"VAGGxxxxyyyyzzzz0000".to_vec();
+        refresh_crc32_trailer(&mut buf);
+        let stored = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        assert_eq!(stored, crc32fast::hash(&buf[..buf.len() - 4]));
+    }
+}

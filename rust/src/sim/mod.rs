@@ -23,13 +23,23 @@
 //!   from their embedded spec.
 //! - [`runner`] — the orchestrator; every failing exploration shrinks to
 //!   the one-line repro `veloc sim --json '<spec>'`.
+//! - [`corrupt`] — the seeded byte-mutation engine behind the hostile
+//!   corruption suite (`rust/tests/hostile.rs`) and the fuzz corpus.
+//! - [`soak`] — the budgeted randomized chaos runner (`veloc soak`):
+//!   round 0 covers the whole injection catalog, then randomized rounds
+//!   until the wall-clock budget is spent, one-line seed repro per
+//!   failure.
 
+pub mod corrupt;
 pub mod injection;
 pub mod runner;
 pub mod scenario;
+pub mod soak;
 pub mod trace;
 
+pub use corrupt::{mutate, refresh_crc32_trailer, Mutation};
 pub use injection::{BoundaryPlan, FaultGate, FaultState};
+pub use soak::{run_soak, SoakConfig, SoakFailure, SoakOutcome};
 pub use runner::{
     replay_file, run_scenario, run_scenario_traced, run_scenario_with_tracer,
     ScenarioReport, SCENARIO_APP,

@@ -1,0 +1,253 @@
+//! Budgeted randomized chaos soak (`veloc soak`).
+//!
+//! The scenario matrix answers "does every known failure class recover?";
+//! the soak answers the question behind ROADMAP item 5's last bullet:
+//! *keep* answering it, for hours, across randomized seeds, until the
+//! budget runs out. Round 0 always runs the full
+//! [`standard_matrix`] at the base seed — every injection point in the
+//! catalog (restart-storm and tier-outage included) is covered even under
+//! the smallest budget. Every later round re-derives a fresh base seed,
+//! shuffles the catalog order, and keeps going until wall-clock budget
+//! exhaustion.
+//!
+//! Failures never stop the soak: each one prints a single line carrying
+//! the exact `veloc sim --json '…'` repro (the same one-line-repro
+//! contract the matrix runner has), optionally saves its event trace, and
+//! the run continues. The final summary serializes to JSON for CI
+//! artifact upload.
+
+use crate::sim::runner::run_scenario_traced;
+use crate::sim::scenario::{standard_matrix, ScenarioSpec};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Soak run parameters (the `veloc soak` CLI flags).
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// Wall-clock budget. Round 0 (the full catalog) always completes,
+    /// even if it overruns a tiny budget — coverage beats punctuality.
+    pub budget: Duration,
+    /// Base seed; every scenario seed derives deterministically from it.
+    pub base_seed: u64,
+    /// Save the event trace of every failing scenario here.
+    pub trace_dir: Option<PathBuf>,
+    /// Run only scenarios whose injection-point name contains this
+    /// substring (test hook; `None` = the whole catalog).
+    pub filter: Option<String>,
+    /// Print per-scenario progress lines, not just failures.
+    pub verbose: bool,
+}
+
+/// One scenario failure observed during the soak.
+#[derive(Clone, Debug)]
+pub struct SoakFailure {
+    /// The exact failing spec — `spec.repro()` is the one-line repro.
+    pub spec: ScenarioSpec,
+    /// The scenario error, formatted.
+    pub error: String,
+    /// Where the event trace was saved, if a trace dir was configured.
+    pub trace_path: Option<PathBuf>,
+}
+
+/// Aggregate outcome of a soak run.
+#[derive(Clone, Debug)]
+pub struct SoakOutcome {
+    /// Catalog rounds started (round 0 is the unshuffled full matrix).
+    pub rounds: usize,
+    /// Scenarios executed.
+    pub runs: usize,
+    /// Scenarios that failed (soak continues past failures).
+    pub failures: Vec<SoakFailure>,
+    /// Runs per injection-point family (name up to the first `:`).
+    pub coverage: BTreeMap<String, usize>,
+    /// Wall-clock actually spent.
+    pub elapsed: Duration,
+}
+
+impl SoakOutcome {
+    /// Every injection family the catalog declares that this run covered
+    /// at least once? (Round 0 guarantees it; the summary asserts it.)
+    pub fn full_coverage(&self, catalog: &[ScenarioSpec]) -> bool {
+        catalog
+            .iter()
+            .map(|s| family(&s.inject.name()))
+            .all(|f| self.coverage.get(&f).copied().unwrap_or(0) > 0)
+    }
+
+    /// Serialize for the CI artifact (`soak-summary.json`).
+    pub fn to_json(&self) -> Json {
+        let failures: Vec<Json> = self
+            .failures
+            .iter()
+            .map(|f| {
+                let j = Json::obj()
+                    .set("inject", f.spec.inject.name())
+                    .set("repro", f.spec.repro())
+                    .set("error", f.error.as_str());
+                match &f.trace_path {
+                    Some(p) => j.set("trace", p.to_string_lossy().as_ref()),
+                    None => j,
+                }
+            })
+            .collect();
+        let mut cov = Json::obj();
+        for (k, v) in &self.coverage {
+            cov = cov.set(k, *v);
+        }
+        Json::obj()
+            .set("rounds", self.rounds)
+            .set("runs", self.runs)
+            .set("failures", Json::Arr(failures))
+            .set("coverage", cov)
+            .set("elapsed_ms", self.elapsed.as_millis() as u64)
+    }
+}
+
+fn family(inject_name: &str) -> String {
+    inject_name
+        .split(':')
+        .next()
+        .unwrap_or(inject_name)
+        .to_string()
+}
+
+/// Run the soak. Deterministic given `(base_seed, filter)` up to *which*
+/// scenarios fit the budget; every executed scenario is individually
+/// reproducible from its printed seed line regardless.
+pub fn run_soak(cfg: &SoakConfig) -> SoakOutcome {
+    let started = Instant::now();
+    let mut rng = Rng::new(cfg.base_seed);
+    let mut outcome = SoakOutcome {
+        rounds: 0,
+        runs: 0,
+        failures: Vec::new(),
+        coverage: BTreeMap::new(),
+        elapsed: Duration::ZERO,
+    };
+    if let Some(dir) = &cfg.trace_dir {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    loop {
+        let round = outcome.rounds;
+        // Round 0: the exact standard matrix, catalog order, base seed —
+        // guaranteed full injection coverage. Later rounds: fresh seeds,
+        // shuffled order.
+        let mut specs = if round == 0 {
+            standard_matrix(cfg.base_seed)
+        } else {
+            let mut s = standard_matrix(rng.next_u64());
+            rng.shuffle(&mut s);
+            s
+        };
+        if let Some(f) = &cfg.filter {
+            specs.retain(|s| s.inject.name().contains(f.as_str()));
+        }
+        if specs.is_empty() {
+            // A filter that matches nothing: report zero coverage rather
+            // than spinning forever.
+            break;
+        }
+        outcome.rounds += 1;
+        for spec in &specs {
+            // Between scenarios (never mid-scenario), honor the budget —
+            // but round 0 always completes for coverage.
+            if round > 0 && started.elapsed() >= cfg.budget {
+                break;
+            }
+            let fam = family(&spec.inject.name());
+            let (result, trace) = run_scenario_traced(spec);
+            outcome.runs += 1;
+            *outcome.coverage.entry(fam).or_insert(0) += 1;
+            match result {
+                Ok(report) => {
+                    if cfg.verbose {
+                        println!("soak ok   {}", report.summary());
+                    }
+                }
+                Err(e) => {
+                    let trace_path = cfg.trace_dir.as_ref().map(|dir| {
+                        let p = dir.join(format!(
+                            "soak-fail-{}-{}.json",
+                            spec.seed,
+                            family(&spec.inject.name())
+                        ));
+                        let _ = trace.save(spec, &p);
+                        p
+                    });
+                    // The one-line seed repro contract: everything needed
+                    // to replay this exact failure, on one line.
+                    println!("soak FAIL [{}] {:#} | repro: {}", spec.inject.name(), e, spec.repro());
+                    outcome.failures.push(SoakFailure {
+                        spec: spec.clone(),
+                        error: format!("{e:#}"),
+                        trace_path,
+                    });
+                }
+            }
+        }
+        if started.elapsed() >= cfg.budget {
+            break;
+        }
+    }
+    outcome.elapsed = started.elapsed();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_budget_still_covers_the_full_catalog_once() {
+        // Round 0 ignores the budget: every injection family in the
+        // catalog must appear in coverage even with budget zero.
+        let cfg = SoakConfig {
+            budget: Duration::ZERO,
+            base_seed: 9000,
+            trace_dir: None,
+            filter: None,
+            verbose: false,
+        };
+        let out = run_soak(&cfg);
+        assert_eq!(out.rounds, 1, "zero budget = exactly the coverage round");
+        let catalog = standard_matrix(9000);
+        assert_eq!(out.runs, catalog.len());
+        assert!(out.full_coverage(&catalog), "coverage: {:?}", out.coverage);
+        assert!(
+            out.failures.is_empty(),
+            "standard matrix must pass: {:?}",
+            out.failures
+                .iter()
+                .map(|f| f.spec.repro())
+                .collect::<Vec<_>>()
+        );
+        // Summary JSON round-trips through the parser.
+        let j = Json::parse(&out.to_json().to_string()).unwrap();
+        assert_eq!(j.usize_or("runs", 0), out.runs);
+        assert_eq!(j.get("failures").and_then(Json::as_arr).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn filter_restricts_and_empty_filter_terminates() {
+        let cfg = SoakConfig {
+            budget: Duration::ZERO,
+            base_seed: 41,
+            trace_dir: None,
+            filter: Some("after-checkpoint".to_string()),
+            verbose: false,
+        };
+        let out = run_soak(&cfg);
+        assert!(out.runs > 0);
+        assert!(out.coverage.keys().all(|k| k == "after-checkpoint"));
+
+        let none = run_soak(&SoakConfig {
+            filter: Some("no-such-injection".to_string()),
+            ..cfg
+        });
+        assert_eq!(none.runs, 0);
+        assert_eq!(none.rounds, 0);
+    }
+}

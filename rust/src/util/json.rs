@@ -18,6 +18,12 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum container nesting the parser accepts. Every on-disk and wire
+/// format embeds a JSON header, so a hostile `[[[[…` document must hit a
+/// typed error long before it can exhaust the thread stack through the
+/// recursive-descent parser.
+pub const MAX_DEPTH: usize = 128;
+
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub pos: usize,
@@ -140,6 +146,7 @@ impl Json {
         let mut p = Parser {
             b: s.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.ws();
         let v = p.value()?;
@@ -281,6 +288,7 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -289,6 +297,16 @@ impl<'a> Parser<'a> {
             pos: self.pos,
             msg: msg.to_string(),
         }
+    }
+
+    /// Bounded recursion: called on entering a container. Errors abort
+    /// the whole parse, so only the `Ok` exits need to unwind `depth`.
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -342,10 +360,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, ParseError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -359,7 +379,10 @@ impl<'a> Parser<'a> {
             self.ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(m)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(m));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -367,10 +390,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, ParseError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -379,7 +404,10 @@ impl<'a> Parser<'a> {
             self.ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(v)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(v));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -493,9 +521,14 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // Reject overflow-to-infinity (e.g. "1e999"): a non-finite Num
+        // would re-serialize as "inf", which no parser reads back — every
+        // parsed value must round-trip canonically.
         text.parse::<f64>()
+            .ok()
+            .filter(|n| n.is_finite())
             .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+            .ok_or_else(|| self.err("bad number"))
     }
 }
 
@@ -520,6 +553,18 @@ mod tests {
             Json::parse("\"hi\\n\"").unwrap(),
             Json::Str("hi\n".to_string())
         );
+    }
+
+    #[test]
+    fn overflowing_exponents_are_parse_errors_not_infinities() {
+        // "inf" has no JSON spelling, so a value that overflows f64 could
+        // never re-serialize canonically — reject it at the door.
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        assert!(Json::parse("{\"n\":1e999}").is_err());
+        // Large-but-finite values still round-trip.
+        let j = Json::parse("1e20").unwrap();
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 
     #[test]
@@ -553,6 +598,22 @@ mod tests {
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_a_parse_error_not_a_stack_overflow() {
+        // One past the cap fails; exactly at the cap still parses.
+        let over = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let err = Json::parse(&over).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        let at = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&at).is_ok());
+        // Mixed object/array nesting counts every container level.
+        let mixed = "{\"k\":[".repeat(80) + &"]}".repeat(80);
+        assert!(Json::parse(&mixed).unwrap_err().msg.contains("nesting"));
+        // Sibling containers do not accumulate depth.
+        let siblings = format!("[{}]", ["[[1]]"; 200].join(","));
+        assert!(Json::parse(&siblings).is_ok());
     }
 
     #[test]
