@@ -7,8 +7,9 @@
 //!
 //! E1c gates the CRC32 kernel: slice-by-16 [`crc32_wide`] must beat the
 //! byte-serial table baseline by >= 3x. E1d gates the observability
-//! plane: the same collective wave with span tracing enabled must cost
-//! <= 5% over the untraced baseline. The run emits
+//! plane: the same collective wave with span tracing enabled — and then
+//! with the crash-durable flight recorder mirroring every closed span to
+//! disk — must each cost <= 5% over the untraced baseline. The run emits
 //! `BENCH_throughput.json` when `VELOC_BENCH_JSON_DIR` is set.
 
 #[path = "harness.rs"]
@@ -130,19 +131,26 @@ fn main() {
         "acceptance: crc32_wide must be >= 3x the scalar baseline, got {speedup:.2}x"
     );
 
-    harness::section("E1d: span tracing overhead — traced vs untraced wave");
+    harness::section("E1d: observability overhead — untraced vs traced vs traced+flight");
     let wave_bytes = 1usize << 20;
+    let pid = std::process::id();
+    let flight_dir = std::env::temp_dir().join(format!("veloc-bench-flight-{pid}"));
+    let _ = std::fs::remove_dir_all(&flight_dir);
     let mut wave_secs = [
         veloc::util::stats::Samples::new(), // [0] tracing off
         veloc::util::stats::Samples::new(), // [1] tracing on
+        veloc::util::stats::Samples::new(), // [2] tracing + flight recorder
     ];
-    // Interleave the two modes across reps so machine drift cancels out
+    // Interleave the modes across reps so machine drift cancels out
     // of the comparison instead of landing on one side.
     for _rep in 0..harness::scaled(6).max(2) {
-        for (slot, trace) in [(0usize, false), (1, true)] {
+        for (slot, trace, flight) in [(0usize, false, false), (1, true, false), (2, true, true)] {
             let mut cfg = VelocConfig::default().with_nodes(2, 2);
             cfg.stack.erasure_group = 0;
             cfg.obs.trace = trace;
+            if flight {
+                cfg.obs.flight_dir = Some(flight_dir.clone());
+            }
             cfg.fabric.dram_capacity = (wave_bytes as u64) * 8;
             let rt = VelocRuntime::new(cfg).unwrap();
             world_checkpoint(&rt, 1, wave_bytes); // warmup
@@ -158,17 +166,31 @@ fn main() {
             }
         }
     }
-    let (off_p50, on_p50) = (wave_secs[0].p50(), wave_secs[1].p50());
+    // The flight dump itself must read back clean before it is deleted.
+    {
+        let scans = veloc::obs::flight::read_dir(&flight_dir)
+            .expect("flight dump readable after bench waves");
+        veloc::obs::flight::verify(&scans)
+            .unwrap_or_else(|e| panic!("bench flight dump failed verify: {e}"));
+    }
+    let _ = std::fs::remove_dir_all(&flight_dir);
+    let (off_p50, on_p50, fl_p50) = (wave_secs[0].p50(), wave_secs[1].p50(), wave_secs[2].p50());
     let ratio = on_p50 / off_p50.max(1e-12);
+    let fl_ratio = fl_p50 / off_p50.max(1e-12);
     println!(
-        "untraced p50 {:.2} ms | traced p50 {:.2} ms | overhead {:+.2}% (gate: <= 5%)",
+        "untraced p50 {:.2} ms | traced p50 {:.2} ms ({:+.2}%) | traced+flight p50 {:.2} ms \
+         ({:+.2}%) (gate: <= 5% each)",
         off_p50 * 1e3,
         on_p50 * 1e3,
-        (ratio - 1.0) * 100.0
+        (ratio - 1.0) * 100.0,
+        fl_p50 * 1e3,
+        (fl_ratio - 1.0) * 100.0
     );
     report.scalar("wave_untraced_p50_ms", off_p50 * 1e3);
     report.scalar("wave_traced_p50_ms", on_p50 * 1e3);
     report.scalar("trace_overhead_ratio", ratio);
+    report.scalar("wave_flight_p50_ms", fl_p50 * 1e3);
+    report.scalar("flight_overhead_ratio", fl_ratio);
     // Sub-millisecond absolute slack absorbs timer jitter on waves this
     // short; anything past it must stay inside the 5% budget.
     assert!(
@@ -178,6 +200,14 @@ fn main() {
         (ratio - 1.0) * 100.0,
         off_p50 * 1e3,
         on_p50 * 1e3
+    );
+    assert!(
+        fl_ratio <= 1.05 || fl_p50 - off_p50 <= 1e-3,
+        "acceptance: the flight recorder must cost <= 5% of the wave, got {:+.2}% \
+         ({:.2} ms -> {:.2} ms)",
+        (fl_ratio - 1.0) * 100.0,
+        off_p50 * 1e3,
+        fl_p50 * 1e3
     );
     report.write();
 }

@@ -291,6 +291,14 @@ impl VelocConfig {
                 cfg.obs.http = Some(h.to_string());
             }
             cfg.obs.span_capacity = o.usize_or("span_capacity", cfg.obs.span_capacity);
+            if let Some(d) = o.get("flight_dir").and_then(Json::as_str) {
+                cfg.obs.flight_dir = Some(std::path::PathBuf::from(d));
+            }
+            if let Some(b) = o.get("flight_max_bytes").and_then(Json::as_u64) {
+                cfg.obs.flight_max_bytes = b;
+            }
+            cfg.obs.signals_capacity =
+                o.usize_or("signals_capacity", cfg.obs.signals_capacity);
         }
         // KV module needs the KV tier; a burst-buffer drain target needs
         // the burst-buffer tier.
@@ -759,6 +767,31 @@ mod tests {
         let j = Json::parse(r#"{"obs": {"span_capacity": 0}}"#).unwrap();
         assert!(VelocConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"obs": {"http": ""}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn flight_and_signals_settings_parsed_and_validated() {
+        let j = Json::parse(
+            r#"{"obs": {"flight_dir": "/tmp/fr", "flight_max_bytes": 65536,
+                         "signals_capacity": 32}}"#,
+        )
+        .unwrap();
+        let c = VelocConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.obs.flight_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/fr"))
+        );
+        assert_eq!(c.obs.flight_max_bytes, 65536);
+        assert_eq!(c.obs.signals_capacity, 32);
+        // Defaults: flight recorder off, bounded ring.
+        let c = VelocConfig::default();
+        assert!(c.obs.flight_dir.is_none());
+        assert!(c.obs.flight_max_bytes >= 4096);
+        // A segment bound below one frame's worth of headroom is rejected.
+        let j = Json::parse(r#"{"obs": {"flight_max_bytes": 16}}"#).unwrap();
+        assert!(VelocConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"obs": {"signals_capacity": 0}}"#).unwrap();
         assert!(VelocConfig::from_json(&j).is_err());
     }
 

@@ -28,7 +28,8 @@ use crate::aggregation::Aggregator;
 use crate::cluster::{KillSwitch, Topology};
 use crate::metrics::Metrics;
 use crate::modules::{build_stack, ChecksumBackend, Env, FlushGate, VersionRegistry};
-use crate::obs::{ObsHandle, SpanId, TraceRecorder};
+use crate::obs::signals::SIG_DEDUP_RATIO;
+use crate::obs::{FlightRecorder, ObsHandle, SignalsBus, SpanId, TraceRecorder};
 use crate::pipeline::{BoundaryHook, CkptContext, CkptStatus, Engine};
 use crate::recovery::{Recovery, Restored};
 use crate::runtime::PjrtEngine;
@@ -143,6 +144,11 @@ pub struct VelocRuntime {
     monitor: Arc<UtilizationMonitor>,
     metrics: Arc<Metrics>,
     tracer: Arc<TraceRecorder>,
+    signals: Arc<SignalsBus>,
+    flight: Option<Arc<FlightRecorder>>,
+    /// Highest wave version whose critical path already fed the
+    /// histograms (drain-time dedup).
+    critpath_recorded: Mutex<Option<u64>>,
     /// Keeps the aggregation age ticker alive for the runtime's lifetime;
     /// dropping the runtime stops the ticker thread immediately.
     _age_ticker: Option<AgeTicker>,
@@ -212,6 +218,19 @@ impl VelocRuntime {
             Some(t) => t,
             None => TraceRecorder::with_capacity(config.obs.trace, config.obs.span_capacity),
         };
+        // Post-mortem plane: the signals bus always exists (sampling into
+        // it is cheap and the view API is useful in-process); the flight
+        // recorder only with `obs.flight_dir`. Closed spans mirror into
+        // the flight stream the moment the sink is armed.
+        let signals = SignalsBus::new(config.obs.signals_capacity);
+        let flight = match &config.obs.flight_dir {
+            Some(dir) => {
+                let f = FlightRecorder::open(dir, "runtime", config.obs.flight_max_bytes)?;
+                tracer.set_flight(Arc::clone(&f));
+                Some(f)
+            }
+            None => None,
+        };
         // Adaptive tier placement: the candidate pool is every shared
         // tier, ordered primary-first (the level-4 flush target leads, so
         // the static policy reproduces the legacy routing). The KV tier
@@ -246,11 +265,13 @@ impl VelocRuntime {
                 }
                 pool.push(t);
             }
-            Some(crate::storage::PlacementEngine::new(
+            let eng = crate::storage::PlacementEngine::new(
                 pool,
                 config.placement.clone(),
                 Some(Arc::clone(&metrics)),
-            )?)
+            )?;
+            eng.set_signals(Arc::clone(&signals));
+            Some(eng)
         } else {
             None
         };
@@ -356,6 +377,9 @@ impl VelocRuntime {
             monitor,
             metrics,
             tracer,
+            signals,
+            flight,
+            critpath_recorded: Mutex::new(None),
             _age_ticker: age_ticker,
         }))
     }
@@ -384,6 +408,17 @@ impl VelocRuntime {
     /// adopted sim tracer — enabled it).
     pub fn tracer(&self) -> &Arc<TraceRecorder> {
         &self.tracer
+    }
+
+    /// Runtime-wide signals bus (failure inter-arrival, tier health,
+    /// queue depth, dedup ratio — see [`crate::obs::signals`]).
+    pub fn signals(&self) -> &Arc<SignalsBus> {
+        &self.signals
+    }
+
+    /// The crash-durable flight recorder, when `obs.flight_dir` is set.
+    pub fn flight(&self) -> Option<&Arc<FlightRecorder>> {
+        self.flight.as_ref()
     }
 
     /// Application-utilization monitor feeding the predictive scheduler.
@@ -488,6 +523,15 @@ impl VelocRuntime {
             }
         }
         self.metrics.incr("failures.injected", 1);
+        // Post-mortem trail: sample the failure inter-arrival series and
+        // leave a durable injection marker + signals snapshot, so a dump
+        // cut right here still carries the failure history.
+        self.signals.note_failure();
+        if let Some(f) = &self.flight {
+            f.event("failure.injected", &[("scope", &format!("{scope:?}"))]);
+            f.signals(&self.signals.snapshot());
+            f.flush();
+        }
     }
 
     /// Revive killed ranks (model of the job scheduler respawning them).
@@ -518,6 +562,35 @@ impl VelocRuntime {
         // Every command of the drained waves has settled: close their
         // root spans so the timeline validates/exports cleanly.
         self.tracer.close_open_waves();
+        // Surface span loss (bounded ring overflow) as a gauge, sample the
+        // dedup ratio off the delta counters, and persist a signals
+        // snapshot + critical-path metrics now that the waves are whole.
+        self.metrics.set("obs.spans.dropped", self.tracer.dropped());
+        let logical = self.metrics.counter("delta.bytes.logical");
+        let physical = self.metrics.counter("delta.bytes.physical");
+        if physical > 0 {
+            self.signals
+                .sample(SIG_DEDUP_RATIO, logical as f64 / physical as f64);
+        }
+        if self.tracer.is_enabled() {
+            // Repeated drains re-analyze the same retained spans; only
+            // waves newer than the last recorded version feed the
+            // histograms, so a drain per wave does not double-observe.
+            let waves = crate::obs::critpath::analyze(&self.tracer.snapshot());
+            let mut last = self.critpath_recorded.lock().unwrap();
+            let fresh: Vec<_> = waves
+                .into_iter()
+                .filter(|w| *last < Some(w.version))
+                .collect();
+            if let Some(max) = fresh.iter().map(|w| w.version).max() {
+                *last = Some(max);
+            }
+            crate::obs::critpath::record_metrics(&self.metrics, &fresh);
+        }
+        if let Some(f) = &self.flight {
+            f.signals(&self.signals.snapshot());
+            f.flush();
+        }
     }
 
     /// Cold restart: reload the persisted lineage of `name` into the

@@ -35,7 +35,7 @@ use crate::api::{SimHooks, Transport, VelocClient, VelocConfig, VelocRuntime};
 use crate::backend::journal::Journal;
 use crate::backend::queue::{FairQueue, Submission};
 use crate::backend::{scoped_name, valid_job_id, Backpressure, BackendConfig};
-use crate::obs::{ObsHandle, ObsServer, ObsState, SpanId};
+use crate::obs::{FlightRecorder, ObsHandle, ObsServer, ObsState, SpanId};
 use crate::pipeline::{CkptContext, CkptStatus};
 use crate::recovery::Restored;
 use crate::util::bytes::Checkpoint;
@@ -118,6 +118,10 @@ pub struct BackendDaemon {
     ready: Arc<AtomicBool>,
     /// The `/metrics` + health HTTP endpoint, when `obs.http` configured.
     obs_server: Mutex<Option<ObsServer>>,
+    /// The daemon's own flight stream (`<flight_dir>/daemon.vfr`):
+    /// lifecycle transitions, ack/settle edges and replay markers — the
+    /// durable record `veloc postmortem` pairs into the crash story.
+    flight: Option<Arc<FlightRecorder>>,
 }
 
 /// Take the daemon-home flock, retrying briefly: a crashed predecessor's
@@ -206,11 +210,21 @@ impl BackendDaemon {
         }
 
         let obs_http = config.obs.http.clone();
+        let flight_dir = config.obs.flight_dir.clone();
+        let flight_max = config.obs.flight_max_bytes;
         let runtime = VelocRuntime::new_with_hooks(config, hooks)?;
         let metrics = Arc::clone(runtime.metrics());
+        let flight = match &flight_dir {
+            Some(dir) => Some(FlightRecorder::open(dir, "daemon", flight_max)?),
+            None => None,
+        };
+        if let Some(f) = &flight {
+            f.event("daemon.start", &[("dir", &cfg.dir.display().to_string())]);
+        }
         let (journal, pending) = Journal::open(&cfg.dir.join("journal"), cfg.fsync)?;
         let journal = Arc::new(journal);
         let queue = FairQueue::new(cfg.queue_depth, Some(Arc::clone(&metrics)));
+        queue.set_signals(Arc::clone(runtime.signals()));
 
         // Cold start with pending work: merge whatever lineage the previous
         // incarnation persisted *before* re-running the pipeline, so the
@@ -238,6 +252,19 @@ impl BackendDaemon {
                 queued_at: std::time::Instant::now(),
             });
             metrics.incr("backend.journal.replayed", 1);
+            if let Some(f) = &flight {
+                f.event(
+                    "journal.replayed",
+                    &[
+                        ("id", &e.id.to_string()),
+                        ("job", &e.job),
+                        // "ckpt", not "name": a "name" label would shadow
+                        // the event's own name in the frame body.
+                        ("ckpt", &e.name),
+                        ("version", &e.version.to_string()),
+                    ],
+                );
+            }
         }
 
         let daemon = Arc::new(BackendDaemon {
@@ -257,6 +284,7 @@ impl BackendDaemon {
             _dir_lock: dir_lock,
             ready: Arc::new(AtomicBool::new(false)),
             obs_server: Mutex::new(None),
+            flight,
         });
         if let Some(bind) = obs_http {
             let state = ObsState {
@@ -269,6 +297,10 @@ impl BackendDaemon {
         daemon.spawn_settler();
         // Journal replayed, queues accepting, workers live: ready.
         daemon.ready.store(true, Ordering::SeqCst);
+        if let Some(f) = &daemon.flight {
+            f.event("daemon.ready", &[("replayed", &pending.len().to_string())]);
+            f.flush();
+        }
         Ok(daemon)
     }
 
@@ -306,6 +338,7 @@ impl BackendDaemon {
         let queue = Arc::clone(&self.queue);
         let watches = Arc::clone(&self.watches);
         let stop = Arc::clone(&self.stop);
+        let flight = self.flight.clone();
         let handle = std::thread::Builder::new()
             .name("veloc-settle".to_string())
             .spawn(move || {
@@ -329,8 +362,10 @@ impl BackendDaemon {
                             }
                         });
                     }
+                    let any_settled = !settled.is_empty();
                     for (x, failure) in settled {
                         runtime.tracer().close(x.span);
+                        let ok = failure.is_none();
                         match failure {
                             None => {
                                 let _ = journal.settle(x.id, true);
@@ -351,6 +386,26 @@ impl BackendDaemon {
                             }
                         }
                         queue.settled(&x.job);
+                        if let Some(f) = &flight {
+                            f.event(
+                                "backend.settle",
+                                &[
+                                    ("id", &x.id.to_string()),
+                                    ("job", &x.job),
+                                    ("version", &x.version.to_string()),
+                                    ("ok", if ok { "true" } else { "false" }),
+                                ],
+                            );
+                        }
+                    }
+                    if any_settled {
+                        // Settlement activity paces the durable trail:
+                        // span-loss gauge, signals snapshot, fsync.
+                        metrics.set("obs.spans.dropped", runtime.tracer().dropped());
+                        if let Some(f) = &flight {
+                            f.signals(&runtime.signals().snapshot());
+                            f.flush();
+                        }
                     }
                     std::thread::sleep(Duration::from_millis(5));
                 }
@@ -367,6 +422,11 @@ impl BackendDaemon {
     /// The hosted runtime (metrics, recovery, fabric).
     pub fn runtime(&self) -> &Arc<VelocRuntime> {
         &self.runtime
+    }
+
+    /// The daemon's own flight stream, when `obs.flight_dir` is set.
+    pub fn flight(&self) -> Option<&Arc<FlightRecorder>> {
+        self.flight.as_ref()
     }
 
     /// Where clients stage large payloads for handoff (canonicalized).
@@ -461,6 +521,12 @@ impl BackendDaemon {
         }
         if let Err(depth) = self.queue.try_admit(job) {
             discard_staged(&payload);
+            if let Some(f) = &self.flight {
+                f.event(
+                    "backend.busy",
+                    &[("job", job), ("unsettled", &depth.to_string())],
+                );
+            }
             // The depth try_admit observed at rejection time — not a
             // racy re-read that a concurrent settle could undercut below
             // the documented bound.
@@ -489,6 +555,24 @@ impl BackendDaemon {
                 return Err(e);
             }
         };
+        // The ack edge is durable *before* the client learns of it: a
+        // crash after this line leaves both the journal entry and the
+        // flight-stream ack for the post-mortem pairing.
+        if let Some(f) = &self.flight {
+            f.event(
+                "backend.ack",
+                &[
+                    ("id", &entry.id.to_string()),
+                    ("job", job),
+                    ("rank", &rank.to_string()),
+                    // "ckpt", not "name": a "name" label would shadow the
+                    // event's own name and break the post-mortem pairing.
+                    ("ckpt", &scoped),
+                    ("version", &version.to_string()),
+                ],
+            );
+            f.flush();
+        }
         self.queue.push(Submission {
             id: entry.id,
             job: job.to_string(),
@@ -617,6 +701,14 @@ impl BackendDaemon {
         if let Some(mut s) = self.obs_server.lock().unwrap().take() {
             s.stop();
         }
+        if let Some(f) = &self.flight {
+            f.event(
+                "daemon.shutdown",
+                &[("idle", if idle { "true" } else { "false" })],
+            );
+            f.signals(&self.runtime.signals().snapshot());
+            f.flush();
+        }
         idle
     }
 
@@ -635,6 +727,15 @@ impl BackendDaemon {
         self.join_workers();
         // In-flight and queued pipeline tails die mid-drain.
         self.runtime.backend().kill();
+        // The death marker and the last signals snapshot go out *after*
+        // the workers stopped — everything the stream holds past this
+        // point is what the post-mortem must explain.
+        self.runtime.signals().note_failure();
+        if let Some(f) = &self.flight {
+            f.event("daemon.crash", &[]);
+            f.signals(&self.runtime.signals().snapshot());
+            f.flush();
+        }
     }
 
     /// Build an ordinary [`VelocClient`] wired straight into this daemon

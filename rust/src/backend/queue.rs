@@ -16,9 +16,11 @@
 //! per job — the drain-pacing distribution).
 
 use crate::metrics::Metrics;
+use crate::obs::signals::{SignalsBus, SIG_QUEUE_DEPTH, SIG_QUEUE_REJECTED};
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// One journaled checkpoint waiting for dispatch into the pipeline.
@@ -65,6 +67,8 @@ pub struct FairQueue {
     state: Mutex<QState>,
     cv: Condvar,
     metrics: Option<Arc<Metrics>>,
+    signals: OnceLock<Arc<SignalsBus>>,
+    rejected: AtomicU64,
 }
 
 impl FairQueue {
@@ -79,12 +83,31 @@ impl FairQueue {
             }),
             cv: Condvar::new(),
             metrics,
+            signals: OnceLock::new(),
+            rejected: AtomicU64::new(0),
         })
+    }
+
+    /// Attach a signals bus: depth changes then also sample `queue.depth`
+    /// (aggregate unsettled across jobs) and rejections `queue.rejected`
+    /// (cumulative count). One-shot — later calls are ignored.
+    pub fn set_signals(&self, bus: Arc<SignalsBus>) {
+        let _ = self.signals.set(bus);
     }
 
     fn gauge(&self, job: &str, unsettled: usize) {
         if let Some(m) = &self.metrics {
             m.set_with("backend.queue_depth", &[("job", job)], unsettled as u64);
+        }
+    }
+
+    /// Sample the aggregate unsettled depth into the signals bus. Called
+    /// with the state lock held so a concurrent settle cannot interleave
+    /// and record a stale depth as the latest point.
+    fn sample_depth(&self, st: &QState) {
+        if let Some(bus) = self.signals.get() {
+            let depth: usize = st.jobs.values().map(|j| j.unsettled).sum();
+            bus.sample(SIG_QUEUE_DEPTH, depth as f64);
         }
     }
 
@@ -100,6 +123,10 @@ impl FairQueue {
             if let Some(m) = &self.metrics {
                 m.incr("backend.rejected", 1);
             }
+            let total = self.rejected.fetch_add(1, Ordering::Relaxed) + 1;
+            if let Some(bus) = self.signals.get() {
+                bus.sample(SIG_QUEUE_REJECTED, total as f64);
+            }
             return Err(depth);
         }
         js.unsettled += 1;
@@ -107,6 +134,7 @@ impl FairQueue {
         // Gauge published under the lock: a concurrent settle must not be
         // able to interleave and leave a stale value as the last write.
         self.gauge(job, unsettled);
+        self.sample_depth(&st);
         drop(st);
         Ok(())
     }
@@ -119,6 +147,7 @@ impl FairQueue {
         js.unsettled += 1;
         let unsettled = js.unsettled;
         self.gauge(job, unsettled);
+        self.sample_depth(&st);
         drop(st);
     }
 
@@ -206,6 +235,7 @@ impl FairQueue {
             js.unsettled
         };
         self.gauge(job, unsettled);
+        self.sample_depth(&st);
         let idle = unsettled == 0
             && st
                 .jobs
@@ -371,6 +401,24 @@ mod tests {
         // Re-admission recreates the state transparently.
         q.try_admit("j").unwrap();
         assert_eq!(q.unsettled_of("j"), 1);
+    }
+
+    #[test]
+    fn signals_bus_sees_depth_and_rejections() {
+        let q = FairQueue::new(2, None);
+        let bus = SignalsBus::new(16);
+        q.set_signals(Arc::clone(&bus));
+        q.try_admit("j").unwrap();
+        q.try_admit("j").unwrap();
+        assert!(q.try_admit("j").is_err());
+        assert!(q.try_admit("j").is_err());
+        q.settled("j");
+        let view = bus.view();
+        let depth = view.queue_depth().expect("depth sampled");
+        let values: Vec<f64> = depth.points.iter().map(|p| p.value).collect();
+        assert_eq!(values, vec![1.0, 2.0, 1.0]);
+        let rejected = view.queue_rejected().expect("rejections sampled");
+        assert_eq!(rejected.latest(), Some(2.0), "cumulative rejection count");
     }
 
     #[test]

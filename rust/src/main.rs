@@ -15,6 +15,10 @@
 //!              span timeline as Chrome trace-event JSON
 //!   report     same run, summarized: per-stage latency percentiles
 //!   scrape     fetch and validate a daemon's /metrics exposition
+//!   postmortem reconstruct a cross-process timeline from a crash's
+//!              flight-recorder dumps (`--verify` checks well-formedness)
+//!   analyze    attribute each wave's wall-clock to its critical path and
+//!              stragglers (from a flight dump or a fresh traced run)
 //!
 //! Examples live in `examples/` (quickstart, hacc_sim, dnn_training,
 //! interval_tuning); this binary is the thin operational front-end.
@@ -37,7 +41,8 @@ fn main() {
     .opt(
         "cmd",
         "info",
-        "info | run | daemon | interval | sim | soak | trace | report | scrape",
+        "info | run | daemon | interval | sim | soak | trace | report | scrape \
+         | postmortem | analyze",
     )
     .opt("config", "", "JSON config file (empty = defaults)")
     .opt("nodes", "4", "simulated nodes")
@@ -86,6 +91,14 @@ fn main() {
     .opt("out", "veloc-trace.json", "trace: Chrome trace-event output file")
     .opt("addr", "", "scrape: observability endpoint (host:port)")
     .flag("wait-ready", "scrape: poll /readyz until ready before scraping")
+    .opt("timeout", "10", "scrape: --wait-ready deadline in seconds")
+    .opt(
+        "flight-dir",
+        "",
+        "crash-durable flight recorder directory (run/daemon/sim/soak; \
+         also: postmortem/analyze input)",
+    )
+    .flag("verify", "postmortem: check dump well-formedness, exit nonzero on failure")
     .parse();
 
     let cmd = cli.positional().first().cloned().unwrap_or(cli.get("cmd"));
@@ -99,10 +112,12 @@ fn main() {
         "trace" => cmd_trace(&cli),
         "report" => cmd_report(&cli),
         "scrape" => cmd_scrape(&cli),
+        "postmortem" => cmd_postmortem(&cli),
+        "analyze" => cmd_analyze(&cli),
         other => {
             eprintln!(
                 "unknown command '{other}' (try info | run | daemon | interval | \
-                 sim | soak | trace | report | scrape)"
+                 sim | soak | trace | report | scrape | postmortem | analyze)"
             );
             std::process::exit(2);
         }
@@ -170,6 +185,10 @@ fn config_from(cli: &Cli) -> Result<VelocConfig> {
     let obs_http = cli.get("obs-http");
     if !obs_http.is_empty() {
         cfg.obs.http = Some(obs_http);
+    }
+    let flight_dir = cli.get("flight-dir");
+    if !flight_dir.is_empty() {
+        cfg.obs.flight_dir = Some(std::path::PathBuf::from(&flight_dir));
     }
     Ok(cfg)
 }
@@ -404,7 +423,7 @@ fn cmd_daemon(cli: &Cli) -> Result<()> {
 fn cmd_sim(cli: &Cli) -> Result<()> {
     use veloc::obs::TraceRecorder;
     use veloc::sim::{
-        base_spec, replay_file, run_scenario_with_tracer, standard_matrix, ScenarioSpec,
+        base_spec, replay_file, run_scenario_with_obs, standard_matrix, ScenarioSpec,
     };
 
     let replay = cli.get("replay");
@@ -416,6 +435,10 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
     let trace_dir = cli.get("trace-dir");
     if !trace_dir.is_empty() {
         std::fs::create_dir_all(&trace_dir)?;
+    }
+    let flight_dir = cli.get("flight-dir");
+    if !flight_dir.is_empty() {
+        std::fs::create_dir_all(&flight_dir)?;
     }
 
     if cli.get_bool("matrix") {
@@ -433,15 +456,23 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
         for (i, spec) in specs.iter().enumerate() {
             // Span recording rides along so a failure ships a timeline
             // artifact; span timestamps never enter the event trace, so
-            // replay comparison stays exact.
+            // replay comparison stays exact. With --flight-dir each row
+            // gets its own crash-durable dump directory.
             let tracer = TraceRecorder::new(true);
+            let row_flight = (!flight_dir.is_empty()).then(|| {
+                std::path::Path::new(&flight_dir)
+                    .join(format!("scenario-{i:02}-seed{}", spec.seed))
+            });
             let (result, trace) =
-                run_scenario_with_tracer(spec, Some(Arc::clone(&tracer)));
+                run_scenario_with_obs(spec, Some(Arc::clone(&tracer)), row_flight.as_deref());
             match result {
                 Ok(report) => println!("  ok   [{i:>2}] {}", report.summary()),
                 Err(e) => {
                     failed += 1;
                     eprintln!("  FAIL [{i:>2}] {e:#}");
+                    if let Some(fd) = &row_flight {
+                        eprintln!("         flight: {}", fd.display());
+                    }
                     if !trace_dir.is_empty() {
                         let path = std::path::Path::new(&trace_dir)
                             .join(format!("scenario-{i:02}-seed{}.json", spec.seed));
@@ -477,7 +508,10 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
         base_spec(cli.get_u64("seed"))
     };
     let tracer = TraceRecorder::new(true);
-    let (result, trace) = run_scenario_with_tracer(&spec, Some(Arc::clone(&tracer)));
+    let single_flight =
+        (!flight_dir.is_empty()).then(|| std::path::PathBuf::from(&flight_dir));
+    let (result, trace) =
+        run_scenario_with_obs(&spec, Some(Arc::clone(&tracer)), single_flight.as_deref());
     let trace_out = cli.get("trace-out");
     if !trace_out.is_empty() {
         trace.save(&spec, std::path::Path::new(&trace_out))?;
@@ -489,6 +523,9 @@ fn cmd_sim(cli: &Cli) -> Result<()> {
             Ok(())
         }
         Err(e) => {
+            if let Some(fd) = &single_flight {
+                eprintln!("failing flight dump: {}", fd.display());
+            }
             if !trace_dir.is_empty() {
                 let path = std::path::Path::new(&trace_dir)
                     .join(format!("scenario-seed{}.json", spec.seed));
@@ -519,10 +556,12 @@ fn cmd_soak(cli: &Cli) -> Result<()> {
     let budget = Duration::from_secs(cli.get_u64("budget"));
     let filter = cli.get("filter");
     let trace_dir = cli.get("trace-dir");
+    let flight_dir = cli.get("flight-dir");
     let cfg = SoakConfig {
         budget,
         base_seed: cli.get_u64("seed"),
         trace_dir: (!trace_dir.is_empty()).then(|| std::path::PathBuf::from(&trace_dir)),
+        flight_dir: (!flight_dir.is_empty()).then(|| std::path::PathBuf::from(&flight_dir)),
         filter: (!filter.is_empty()).then(|| filter.clone()),
         verbose: cli.get_bool("verbose"),
     };
@@ -641,7 +680,12 @@ fn cmd_scrape(cli: &Cli) -> Result<()> {
     let addr = cli.get("addr");
     ensure!(!addr.is_empty(), "--addr host:port required (see daemon --obs-http)");
     if cli.get_bool("wait-ready") {
-        wait_ready(&addr, Duration::from_secs(10))?;
+        // A daemon that never comes up must fail the scrape (nonzero
+        // exit), not hang CI: the deadline is explicit and configurable.
+        let timeout = Duration::from_secs(cli.get_u64("timeout").max(1));
+        wait_ready(&addr, timeout).map_err(|e| {
+            anyhow!("daemon not ready within {}s: {e:#}", timeout.as_secs())
+        })?;
     }
     let (code, body) = http_get(&addr, "/metrics", Duration::from_secs(5))?;
     ensure!(code == 200, "GET /metrics returned {code}");
@@ -651,6 +695,140 @@ fn cmd_scrape(cli: &Cli) -> Result<()> {
     for f in &families {
         println!("  {:<40} {} ({} samples)", f.name, f.typ, f.samples.len());
     }
+    Ok(())
+}
+
+/// Reconstruct the cross-process timeline from a flight-dump directory:
+/// one `.vfr` stream (plus its rotated `.old` generation) per process,
+/// merged by timestamp. `--verify` additionally checks well-formedness —
+/// meta-led streams, per-segment timestamp monotonicity, span parent
+/// closure — and exits nonzero on any violation. Either way the command
+/// lists the acked-but-unsettled submissions the crash stranded.
+fn cmd_postmortem(cli: &Cli) -> Result<()> {
+    use veloc::obs::flight;
+    use veloc::obs::FlightKind;
+
+    let dir = cli
+        .positional()
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| cli.get("flight-dir"));
+    ensure!(
+        !dir.is_empty(),
+        "usage: veloc postmortem <dump-dir> [--verify] (or --flight-dir <dir>)"
+    );
+    let dir = std::path::PathBuf::from(&dir);
+    let scans = flight::read_dir(&dir)?;
+    ensure!(
+        !scans.is_empty(),
+        "no .vfr flight streams under {}",
+        dir.display()
+    );
+    for (path, scan) in &scans {
+        let torn = match &scan.truncated {
+            Some(t) => format!("  [torn tail: {t}]"),
+            None => String::new(),
+        };
+        println!(
+            "stream {}: {} record(s), {} bytes{torn}",
+            path.display(),
+            scan.entries.len(),
+            scan.bytes_scanned
+        );
+    }
+
+    if cli.get_bool("verify") {
+        let report = flight::verify(&scans).map_err(|e| anyhow!("verify FAILED: {e}"))?;
+        println!(
+            "verify ok: {} stream(s), {} record(s) ({} spans, {} events, {} snapshots), \
+             processes [{}], {} torn tail(s), {} unsettled",
+            report.files,
+            report.entries,
+            report.spans,
+            report.events,
+            report.snapshots,
+            report.processes.join(", "),
+            report.torn,
+            report.unsettled.len()
+        );
+    }
+
+    let merged = flight::merge(&scans);
+    println!("-- timeline ({} record(s)) --", merged.len());
+    for e in &merged {
+        let desc = match e.kind {
+            FlightKind::Span => {
+                let name = e.body.str_or("name", "?");
+                match e.body.get("end_us").and_then(veloc::util::json::Json::as_u64) {
+                    Some(end) => {
+                        let start =
+                            e.body.get("start_us").and_then(veloc::util::json::Json::as_u64);
+                        format!(
+                            "{name} ({} us)",
+                            end.saturating_sub(start.unwrap_or(end))
+                        )
+                    }
+                    None => format!("{name} (open)"),
+                }
+            }
+            _ => e.body.to_string(),
+        };
+        println!(
+            "{:>16} {:<8} {:<7} {desc}",
+            e.t_us,
+            e.process,
+            e.kind.name()
+        );
+    }
+
+    let stranded = flight::unsettled(&merged);
+    if stranded.is_empty() {
+        println!("no acked-but-unsettled submissions");
+    } else {
+        println!("-- acked but never settled ({}) --", stranded.len());
+        for u in &stranded {
+            println!("  {}", u.to_string());
+        }
+    }
+    Ok(())
+}
+
+/// Wave critical-path attribution: reconstruct spans either from a flight
+/// dump (`--flight-dir`) or from a fresh traced multi-rank run (the
+/// `trace`/`report` wave driver), then attribute each wave's wall-clock
+/// to the stages on its critical path and flag stragglers.
+fn cmd_analyze(cli: &Cli) -> Result<()> {
+    use veloc::obs::{critpath, flight};
+
+    let dir = cli
+        .positional()
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| cli.get("flight-dir"));
+    let spans = if !dir.is_empty() {
+        let dir = std::path::PathBuf::from(&dir);
+        let scans = flight::read_dir(&dir)?;
+        ensure!(
+            !scans.is_empty(),
+            "no .vfr flight streams under {}",
+            dir.display()
+        );
+        let spans: Vec<_> = flight::merge(&scans)
+            .iter()
+            .filter_map(flight::entry_to_span)
+            .collect();
+        ensure!(
+            !spans.is_empty(),
+            "{}: flight dump holds no span records (was tracing enabled?)",
+            dir.display()
+        );
+        spans
+    } else {
+        run_traced_waves(cli)?.tracer().snapshot()
+    };
+    let waves = critpath::analyze(&spans);
+    ensure!(!waves.is_empty(), "no complete checkpoint waves to analyze");
+    print!("{}", critpath::render(&waves));
     Ok(())
 }
 

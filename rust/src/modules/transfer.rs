@@ -162,9 +162,13 @@ impl Module for TransferModule {
                 self.env
                     .registry
                     .set_destination(&ctx.name, ctx.version, ctx.rank, &dest);
+                ctx.route_tier = Some(dest);
                 stat
             }
-            None => self.env.fabric.pfs().put_bytes(&key, &data)?,
+            None => {
+                ctx.route_tier = Some("pfs".to_string());
+                self.env.fabric.pfs().put_bytes(&key, &data)?
+            }
         };
         ctx.record(self.name(), LEVEL_PFS, t0.elapsed().max(stat.modeled), stat.bytes);
         Ok(Outcome::Done)

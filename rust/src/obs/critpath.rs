@@ -1,0 +1,360 @@
+//! Per-wave critical-path attribution over a span timeline.
+//!
+//! Wave-level interference is where asynchronous checkpointing's real
+//! overhead hides: the collective wave ends when its *slowest* rank
+//! does, so one straggling rank — or one degraded tier behind it — costs
+//! every rank the difference. Given a traced timeline (live from the
+//! [`super::TraceRecorder`] or replayed from a flight dump), this module
+//! finds, per wave: the critical rank (the one whose `ckpt` command
+//! closed last), the per-stage blame shares along that rank's path, and
+//! a straggler report — each rank's slowdown against the wave median
+//! with its dominant stage and, when placement routed the flush, the
+//! tier that served it.
+//!
+//! Surfaced by `veloc analyze` and as the
+//! `ckpt.wave.critical_path{stage}` / `ckpt.wave.straggler_slowdown`
+//! metrics (recorded on runtime drain when tracing is on).
+
+use crate::metrics::Metrics;
+use crate::obs::span::SpanRec;
+use std::collections::BTreeMap;
+
+/// A rank whose command ran notably slower than the wave median.
+pub const STRAGGLER_THRESHOLD: f64 = 1.5;
+
+/// One stage's share of the critical rank's command time.
+#[derive(Clone, Debug)]
+pub struct StageBlame {
+    /// Stage name (`capture`, `local`, `partner`, `erasure`, `transfer`).
+    pub stage: String,
+    /// Stage duration on the critical path, microseconds.
+    pub us: u64,
+    /// Fraction of the critical command's stage time.
+    pub share: f64,
+    /// Tier that served the stage, when recorded (`tier` span label).
+    pub tier: Option<String>,
+}
+
+/// One straggling rank.
+#[derive(Clone, Debug)]
+pub struct Straggler {
+    /// Rank id (from the command span's `rank` label).
+    pub rank: u64,
+    /// Command duration / wave median command duration.
+    pub slowdown: f64,
+    /// The rank's dominant (longest) stage.
+    pub stage: String,
+    /// Tier label of that stage, when recorded.
+    pub tier: Option<String>,
+    /// Command duration, microseconds.
+    pub dur_us: u64,
+}
+
+/// Full attribution for one traced wave.
+#[derive(Clone, Debug)]
+pub struct WaveAnalysis {
+    /// Checkpoint version (the wave root's `version` label).
+    pub version: u64,
+    /// Wave wall-clock: root start to the last command close, µs.
+    pub wall_us: u64,
+    /// The rank whose command closed last.
+    pub critical_rank: u64,
+    /// Critical rank's stage blame, largest share first.
+    pub blame: Vec<StageBlame>,
+    /// Median command duration across ranks, µs.
+    pub median_us: f64,
+    /// Ranks at or past [`STRAGGLER_THRESHOLD`], worst first.
+    pub stragglers: Vec<Straggler>,
+}
+
+fn label<'a>(s: &'a SpanRec, key: &str) -> Option<&'a str> {
+    s.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn dur_us(s: &SpanRec) -> u64 {
+    s.end_us.unwrap_or(s.start_us).saturating_sub(s.start_us)
+}
+
+/// Analyze every wave in a span timeline. Open spans and waves without
+/// commands are skipped (a torn dump yields the analyses its valid
+/// prefix supports).
+pub fn analyze(spans: &[SpanRec]) -> Vec<WaveAnalysis> {
+    let mut out = Vec::new();
+    // A flight dump carries each span twice (open edge + close); keep one
+    // root per id, preferring the closed record's final interval.
+    let mut roots: std::collections::BTreeMap<u64, &SpanRec> = std::collections::BTreeMap::new();
+    for s in spans.iter().filter(|s| s.parent == 0 && s.name.starts_with("wave v")) {
+        let slot = roots.entry(s.id).or_insert(s);
+        if s.end_us.is_some() {
+            *slot = s;
+        }
+    }
+    for root in roots.into_values() {
+        let Some(version) = label(root, "version").and_then(|v| v.parse::<u64>().ok()) else {
+            continue;
+        };
+        let cmds: Vec<&SpanRec> = spans
+            .iter()
+            .filter(|s| s.parent == root.id && s.name == "ckpt" && s.end_us.is_some())
+            .collect();
+        if cmds.is_empty() {
+            continue;
+        }
+        let mut durs: Vec<f64> = cmds.iter().map(|c| dur_us(c) as f64).collect();
+        durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if durs.len() % 2 == 1 {
+            durs[durs.len() / 2]
+        } else {
+            (durs[durs.len() / 2 - 1] + durs[durs.len() / 2]) / 2.0
+        };
+
+        // The critical rank ends the wave.
+        let critical = cmds
+            .iter()
+            .max_by_key(|c| c.end_us.unwrap_or(0))
+            .expect("non-empty cmds");
+        let critical_rank = label(critical, "rank")
+            .and_then(|r| r.parse::<u64>().ok())
+            .unwrap_or(critical.tid);
+
+        // Blame: the critical command's child stages, share of stage time.
+        let stages: Vec<&SpanRec> = spans
+            .iter()
+            .filter(|s| s.parent == critical.id && !s.instant && s.end_us.is_some())
+            .collect();
+        let total: u64 = stages.iter().map(|s| dur_us(s)).sum();
+        let mut blame: Vec<StageBlame> = stages
+            .iter()
+            .map(|s| StageBlame {
+                stage: s.name.clone(),
+                us: dur_us(s),
+                share: if total > 0 {
+                    dur_us(s) as f64 / total as f64
+                } else {
+                    0.0
+                },
+                tier: label(s, "tier").map(str::to_string),
+            })
+            .collect();
+        blame.sort_by(|a, b| b.us.cmp(&a.us));
+
+        // Stragglers: every rank against the wave median, dominant stage
+        // carried for attribution.
+        let mut stragglers = Vec::new();
+        for cmd in &cmds {
+            let d = dur_us(cmd);
+            let slowdown = if median > 0.0 { d as f64 / median } else { 1.0 };
+            if slowdown < STRAGGLER_THRESHOLD {
+                continue;
+            }
+            let dominant = spans
+                .iter()
+                .filter(|s| s.parent == cmd.id && !s.instant && s.end_us.is_some())
+                .max_by_key(|s| dur_us(s));
+            stragglers.push(Straggler {
+                rank: label(cmd, "rank")
+                    .and_then(|r| r.parse::<u64>().ok())
+                    .unwrap_or(cmd.tid),
+                slowdown,
+                stage: dominant.map(|s| s.name.clone()).unwrap_or_default(),
+                tier: dominant.and_then(|s| label(s, "tier").map(str::to_string)),
+                dur_us: d,
+            });
+        }
+        stragglers.sort_by(|a, b| b.slowdown.partial_cmp(&a.slowdown).unwrap());
+
+        let last_end = cmds.iter().map(|c| c.end_us.unwrap_or(0)).max().unwrap_or(0);
+        out.push(WaveAnalysis {
+            version,
+            wall_us: last_end.saturating_sub(root.start_us),
+            critical_rank,
+            blame,
+            median_us: median,
+            stragglers,
+        });
+    }
+    out.sort_by_key(|w| w.version);
+    out
+}
+
+/// Record the wave metrics: per-stage critical-path seconds into
+/// `ckpt.wave.critical_path{stage}` and each straggler's slowdown ratio
+/// into `ckpt.wave.straggler_slowdown`.
+pub fn record_metrics(metrics: &Metrics, waves: &[WaveAnalysis]) {
+    for w in waves {
+        for b in &w.blame {
+            metrics.observe_hist(
+                "ckpt.wave.critical_path",
+                &[("stage", b.stage.as_str())],
+                b.us as f64 / 1e6,
+            );
+        }
+        for s in &w.stragglers {
+            metrics.observe_hist("ckpt.wave.straggler_slowdown", &[], s.slowdown);
+        }
+    }
+}
+
+/// Render the human report `veloc analyze` prints.
+pub fn render(waves: &[WaveAnalysis]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    if waves.is_empty() {
+        out.push_str("no complete traced waves found\n");
+        return out;
+    }
+    for w in waves {
+        let _ = writeln!(
+            out,
+            "wave v{}: wall {:.2} ms, critical rank {}, median rank {:.2} ms",
+            w.version,
+            w.wall_us as f64 / 1e3,
+            w.critical_rank,
+            w.median_us / 1e3
+        );
+        let _ = writeln!(out, "  critical path blame:");
+        for b in &w.blame {
+            let tier = b.tier.as_deref().map(|t| format!(" tier={t}")).unwrap_or_default();
+            let _ = writeln!(
+                out,
+                "    {:>10}  {:>9.2} ms  {:>5.1}%{}",
+                b.stage,
+                b.us as f64 / 1e3,
+                b.share * 100.0,
+                tier
+            );
+        }
+        if w.stragglers.is_empty() {
+            let _ = writeln!(out, "  stragglers: none (all ranks within {STRAGGLER_THRESHOLD}x of median)");
+        } else {
+            let _ = writeln!(out, "  stragglers (>= {STRAGGLER_THRESHOLD}x median):");
+            for s in &w.stragglers {
+                let tier = s.tier.as_deref().map(|t| format!(" tier={t}")).unwrap_or_default();
+                let _ = writeln!(
+                    out,
+                    "    rank {:>3}  {:>5.2}x  {:>9.2} ms  dominant stage {}{}",
+                    s.rank,
+                    s.slowdown,
+                    s.dur_us as f64 / 1e3,
+                    s.stage,
+                    tier
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(
+        id: u64,
+        parent: u64,
+        name: &str,
+        start: u64,
+        end: u64,
+        labels: &[(&str, &str)],
+    ) -> SpanRec {
+        SpanRec {
+            id,
+            parent,
+            name: name.to_string(),
+            start_us: start,
+            end_us: Some(end),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            tid: 0,
+            instant: false,
+        }
+    }
+
+    /// 3-rank wave: ranks 0/1 take 100 µs, rank 2 takes 400 µs with the
+    /// transfer stage (tier "pfs") dominating.
+    fn sample_wave() -> Vec<SpanRec> {
+        let mut spans = vec![span(1, 0, "wave v7", 0, 500, &[("version", "7")])];
+        for (i, (rank, end)) in [("0", 100u64), ("1", 110), ("2", 400)].iter().enumerate() {
+            let cid = 10 + i as u64;
+            spans.push(span(cid, 1, "ckpt", 0, *end, &[("rank", *rank)]));
+            spans.push(span(cid * 10, cid, "capture", 0, 20, &[]));
+            let t_end = if *rank == "2" { 390 } else { 60 };
+            spans.push(span(
+                cid * 10 + 1,
+                cid,
+                "transfer",
+                25,
+                t_end,
+                &[("level", "pfs"), ("tier", "pfs")],
+            ));
+        }
+        spans
+    }
+
+    #[test]
+    fn critical_rank_blame_and_stragglers() {
+        let waves = analyze(&sample_wave());
+        assert_eq!(waves.len(), 1);
+        let w = &waves[0];
+        assert_eq!(w.version, 7);
+        assert_eq!(w.critical_rank, 2);
+        assert_eq!(w.wall_us, 400);
+        assert_eq!(w.blame[0].stage, "transfer");
+        assert!(w.blame[0].share > 0.9, "transfer dominates: {}", w.blame[0].share);
+        assert_eq!(w.blame[0].tier.as_deref(), Some("pfs"));
+        assert_eq!(w.stragglers.len(), 1);
+        let s = &w.stragglers[0];
+        assert_eq!(s.rank, 2);
+        assert!(s.slowdown > 3.0, "{}", s.slowdown);
+        assert_eq!(s.stage, "transfer");
+        assert_eq!(s.tier.as_deref(), Some("pfs"));
+    }
+
+    #[test]
+    fn uniform_wave_has_no_stragglers() {
+        let mut spans = vec![span(1, 0, "wave v3", 0, 120, &[("version", "3")])];
+        for i in 0..4u64 {
+            let rank = i.to_string();
+            spans.push(span(10 + i, 1, "ckpt", 0, 100 + i, &[("rank", rank.as_str())]));
+        }
+        let waves = analyze(&spans);
+        assert_eq!(waves.len(), 1);
+        assert!(waves[0].stragglers.is_empty());
+        // Render still produces a readable report.
+        assert!(render(&waves).contains("stragglers: none"));
+    }
+
+    #[test]
+    fn metrics_record_blame_and_slowdowns() {
+        let m = crate::metrics::Metrics::new();
+        let waves = analyze(&sample_wave());
+        record_metrics(&m, &waves);
+        let h = m
+            .histogram("ckpt.wave.critical_path", &[("stage", "transfer")])
+            .expect("critical path histogram");
+        assert_eq!(h.count(), 1);
+        let s = m
+            .histogram("ckpt.wave.straggler_slowdown", &[])
+            .expect("slowdown histogram");
+        assert_eq!(s.count(), 1);
+    }
+
+    #[test]
+    fn open_spans_and_empty_waves_are_skipped() {
+        let mut spans = sample_wave();
+        spans.push(SpanRec {
+            id: 99,
+            parent: 0,
+            name: "wave v9".to_string(),
+            start_us: 0,
+            end_us: None,
+            labels: vec![("version".to_string(), "9".to_string())],
+            tid: 0,
+            instant: false,
+        });
+        let waves = analyze(&spans);
+        assert_eq!(waves.len(), 1, "wave v9 has no commands and is skipped");
+    }
+}

@@ -1,0 +1,821 @@
+//! Crash-durable flight recorder: a bounded on-disk ring of structured
+//! records (spans, state transitions, injection events, queue edges,
+//! signals snapshots) that survives the process that wrote it.
+//!
+//! The in-memory span ring and `/metrics` endpoint evaporate with the
+//! daemon — precisely the moment an exascale operator needs them. The
+//! flight recorder is the post-mortem twin: every record is appended to
+//! `<dir>/<process>.vfr` as a CRC-trailed binary frame, the file is
+//! bounded by segment rotation (`.vfr` → `.vfr.old`, one previous
+//! generation kept), and the reader tolerates a torn tail the same way
+//! the journal WAL does — it returns the valid prefix and names where it
+//! stopped, never panicking and never allocating off an untrusted length
+//! (the PR 9 hostile-parser contract; `rust/tests/hostile.rs` sweeps the
+//! scanner with the full `sim/corrupt` mutation catalog).
+//!
+//! Frame layout, after the 8-byte file header (`b"VFR1"` + LE u32
+//! format version):
+//!
+//! ```text
+//! [u32 len][u8 kind][u64 t_us][body: len-9 bytes][u32 crc32]
+//! ```
+//!
+//! `len` counts kind + timestamp + body and is bounded by
+//! [`MAX_FRAME`]; the CRC covers the same range. Timestamps are unix
+//! microseconds so streams from different processes merge into one
+//! causal timeline. Bodies are UTF-8 JSON — self-describing enough for
+//! `veloc postmortem` to render a dump from a build that no longer
+//! matches the writer.
+
+use crate::obs::signals::SignalsSnapshot;
+use crate::obs::span::SpanRec;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// File header magic; bump the trailing digit on incompatible layout
+/// changes.
+pub const FLIGHT_MAGIC: &[u8; 4] = b"VFR1";
+/// On-disk format version written after the magic.
+pub const FLIGHT_VERSION: u32 = 1;
+/// Hard bound on one frame's payload (kind + timestamp + body): a
+/// hostile or torn length field can never drive a larger allocation.
+pub const MAX_FRAME: usize = 1 << 20;
+/// Default per-stream size bound before segment rotation.
+pub const FLIGHT_MAX_BYTES_DEFAULT: u64 = 8 << 20;
+/// Flight stream file extension.
+pub const FLIGHT_EXT: &str = "vfr";
+
+const HEADER_LEN: usize = 8;
+/// kind byte + u64 timestamp.
+const FRAME_FIXED: usize = 9;
+
+/// Record kind discriminants (the frame's kind byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlightKind {
+    /// Stream metadata: process name, pid, wall-clock start. Written at
+    /// every open, so one file appended by two daemon incarnations
+    /// carries one meta record per segment.
+    Meta,
+    /// A closed span mirrored from the in-memory [`super::TraceRecorder`].
+    Span,
+    /// A state transition / injection / queue edge instant.
+    Event,
+    /// A persisted [`SignalsSnapshot`].
+    Signals,
+}
+
+impl FlightKind {
+    fn from_byte(b: u8) -> Option<FlightKind> {
+        match b {
+            0 => Some(FlightKind::Meta),
+            1 => Some(FlightKind::Span),
+            2 => Some(FlightKind::Event),
+            3 => Some(FlightKind::Signals),
+            _ => None,
+        }
+    }
+
+    fn byte(self) -> u8 {
+        match self {
+            FlightKind::Meta => 0,
+            FlightKind::Span => 1,
+            FlightKind::Event => 2,
+            FlightKind::Signals => 3,
+        }
+    }
+
+    /// Stable lowercase name (postmortem rendering, verify reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightKind::Meta => "meta",
+            FlightKind::Span => "span",
+            FlightKind::Event => "event",
+            FlightKind::Signals => "signals",
+        }
+    }
+}
+
+/// Current unix time in microseconds.
+pub fn unix_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+#[derive(Debug)]
+struct FlightFile {
+    file: File,
+    written: u64,
+    /// Highest frame timestamp appended so far; appends clamp against it
+    /// so the stream stays monotone even when writers race to the lock
+    /// or a span's close is recorded after a later event.
+    last_t: u64,
+}
+
+/// Append-only, size-bounded writer for one process's flight stream.
+/// Cheap to share (`Arc`); all methods are best-effort — a full disk
+/// must degrade observability, never the checkpoint path — with dropped
+/// writes counted in [`FlightRecorder::lost`].
+#[derive(Debug)]
+pub struct FlightRecorder {
+    dir: PathBuf,
+    process: String,
+    max_bytes: u64,
+    inner: Mutex<FlightFile>,
+    lost: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// Open (creating or appending) `<dir>/<process>.vfr` and write a
+    /// meta record for this incarnation.
+    pub fn open(dir: &Path, process: &str, max_bytes: u64) -> Result<Arc<FlightRecorder>> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("flight: create {}", dir.display()))?;
+        let path = dir.join(format!("{process}.{FLIGHT_EXT}"));
+        let fresh = !path.exists();
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("flight: open {}", path.display()))?;
+        if fresh {
+            let mut header = Vec::with_capacity(HEADER_LEN);
+            header.extend_from_slice(FLIGHT_MAGIC);
+            header.extend_from_slice(&FLIGHT_VERSION.to_le_bytes());
+            file.write_all(&header)?;
+        }
+        let written = file.metadata().map(|m| m.len()).unwrap_or(0);
+        let rec = Arc::new(FlightRecorder {
+            dir: dir.to_path_buf(),
+            process: process.to_string(),
+            max_bytes: max_bytes.max(4096),
+            inner: Mutex::new(FlightFile {
+                file,
+                written,
+                last_t: 0,
+            }),
+            lost: AtomicU64::new(0),
+        });
+        rec.append(
+            FlightKind::Meta,
+            unix_us(),
+            &Json::obj()
+                .set("process", process)
+                .set("pid", std::process::id() as u64)
+                .set("start_unix_us", unix_us()),
+        );
+        Ok(rec)
+    }
+
+    /// The stream this recorder appends to.
+    pub fn path(&self) -> PathBuf {
+        self.dir.join(format!("{}.{FLIGHT_EXT}", self.process))
+    }
+
+    /// The directory holding this stream (and its peers).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Records dropped because of I/O errors or oversized bodies.
+    pub fn lost(&self) -> u64 {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// Record an instantaneous event (state transition, injection,
+    /// queue/backpressure edge).
+    pub fn event(&self, name: &str, labels: &[(&str, &str)]) {
+        let mut body = Json::obj().set("name", name);
+        for (k, v) in labels {
+            body = body.set(k, *v);
+        }
+        self.append(FlightKind::Event, unix_us(), &body);
+    }
+
+    /// Record an event from a pre-built JSON body (the sim runner mirrors
+    /// its trace events this way). A body carrying an `ev` key but no
+    /// `name` is normalized to `name = "sim.<ev>"`, so the post-mortem
+    /// timeline renders trace events uniformly.
+    pub fn event_json(&self, body: &Json) {
+        let named = match (body.get("name"), body.get("ev").and_then(Json::as_str)) {
+            (None, Some(ev)) => body.clone().set("name", format!("sim.{ev}")),
+            _ => body.clone(),
+        };
+        self.append(FlightKind::Event, unix_us(), &named);
+    }
+
+    /// Mirror one span — an open edge (no `end_us`) or a finished span.
+    /// `unix_offset_us` converts the recorder's epoch-relative
+    /// microseconds to unix microseconds (the tracer computes it once
+    /// when the sink is attached). The frame is stamped at record time
+    /// (close time for finished spans), so stream order stays monotone.
+    pub fn span(&self, s: &SpanRec, unix_offset_us: u64) {
+        let start = s.start_us.saturating_add(unix_offset_us);
+        let mut labels = Json::obj();
+        for (k, v) in &s.labels {
+            labels = labels.set(k, v.as_str());
+        }
+        let mut body = Json::obj()
+            .set("id", s.id)
+            .set("parent", s.parent)
+            .set("name", s.name.as_str())
+            .set("start_us", start)
+            .set("tid", s.tid)
+            .set("instant", s.instant)
+            .set("labels", labels);
+        let mut stamp = start;
+        if let Some(end) = s.end_us {
+            let end = end.saturating_add(unix_offset_us);
+            body = body.set("end_us", end);
+            stamp = end;
+        }
+        self.append(FlightKind::Span, stamp, &body);
+    }
+
+    /// Persist a signals snapshot into the stream.
+    pub fn signals(&self, snap: &SignalsSnapshot) {
+        self.append(FlightKind::Signals, snap.taken_us, &snap.to_json());
+    }
+
+    /// Flush and fsync the stream (the daemon calls this on crash and
+    /// shutdown paths; records in between are one buffered write each).
+    pub fn flush(&self) {
+        let inner = self.inner.lock().unwrap();
+        let _ = inner.file.sync_all();
+    }
+
+    fn append(&self, kind: FlightKind, t_us: u64, body: &Json) {
+        let text = body.to_string().into_bytes();
+        if FRAME_FIXED + text.len() > MAX_FRAME {
+            self.lost.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let len = (FRAME_FIXED + text.len()) as u32;
+
+        let mut inner = self.inner.lock().unwrap();
+        if inner.written + (4 + len as u64 + 4) > self.max_bytes {
+            if self.rotate(&mut inner).is_err() {
+                self.lost.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        // Clamp the frame stamp monotone under the append lock: callers
+        // compute their timestamps outside it, so two racing writers (or
+        // a span close recorded after a later event) would otherwise
+        // leave a regression for `verify` to trip on. Record bodies keep
+        // their true times; only the frame ordering stamp is clamped.
+        let t = t_us.max(inner.last_t);
+        inner.last_t = t;
+        let mut frame = Vec::with_capacity(4 + len as usize + 4);
+        frame.extend_from_slice(&len.to_le_bytes());
+        frame.push(kind.byte());
+        frame.extend_from_slice(&t.to_le_bytes());
+        frame.extend_from_slice(&text);
+        let crc = crc32fast::hash(&frame[4..]);
+        frame.extend_from_slice(&crc.to_le_bytes());
+        match inner.file.write_all(&frame) {
+            Ok(()) => inner.written += frame.len() as u64,
+            Err(_) => {
+                self.lost.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Segment rotation: the current stream becomes `.vfr.old` (replacing
+    /// any previous generation) and a fresh segment starts with a header
+    /// and meta record. Two generations bound the ring at ~2x
+    /// `max_bytes` while always retaining the newest records.
+    fn rotate(&self, inner: &mut FlightFile) -> Result<()> {
+        let path = self.path();
+        let old = path.with_extension(format!("{FLIGHT_EXT}.old"));
+        let _ = inner.file.sync_all();
+        std::fs::rename(&path, &old)?;
+        let mut file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let mut header = Vec::with_capacity(HEADER_LEN);
+        header.extend_from_slice(FLIGHT_MAGIC);
+        header.extend_from_slice(&FLIGHT_VERSION.to_le_bytes());
+        file.write_all(&header)?;
+        inner.file = file;
+        inner.written = HEADER_LEN as u64;
+        // A fresh segment re-identifies its process.
+        let meta_t = unix_us().max(inner.last_t);
+        inner.last_t = meta_t;
+        let meta = Json::obj()
+            .set("process", self.process.as_str())
+            .set("pid", std::process::id() as u64)
+            .set("start_unix_us", meta_t);
+        let text = meta.to_string().into_bytes();
+        let len = (FRAME_FIXED + text.len()) as u32;
+        let mut frame = Vec::with_capacity(4 + len as usize + 4);
+        frame.extend_from_slice(&len.to_le_bytes());
+        frame.push(FlightKind::Meta.byte());
+        frame.extend_from_slice(&meta_t.to_le_bytes());
+        frame.extend_from_slice(&text);
+        let crc = crc32fast::hash(&frame[4..]);
+        frame.extend_from_slice(&crc.to_le_bytes());
+        inner.file.write_all(&frame)?;
+        inner.written += frame.len() as u64;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- reader
+
+/// One decoded record, tagged with the process that wrote it (from the
+/// nearest preceding meta record in its stream).
+#[derive(Clone, Debug)]
+pub struct FlightEntry {
+    /// Writing process (empty until the stream's first meta record).
+    pub process: String,
+    /// Writer pid from the same meta record.
+    pub pid: u64,
+    /// Record kind.
+    pub kind: FlightKind,
+    /// Unix microseconds.
+    pub t_us: u64,
+    /// Decoded JSON body.
+    pub body: Json,
+}
+
+/// Result of scanning one stream: the valid prefix plus, when the scan
+/// stopped early, the reason — a torn tail after a crash is expected and
+/// is *not* an error.
+#[derive(Clone, Debug, Default)]
+pub struct FlightScan {
+    /// Every record decoded before the first bad frame.
+    pub entries: Vec<FlightEntry>,
+    /// Why the scan stopped before the end of the input, if it did.
+    pub truncated: Option<String>,
+    /// Bytes consumed by valid frames (including the file header).
+    pub bytes_scanned: u64,
+}
+
+/// Scan one stream image. Never panics; every allocation is bounded by
+/// [`MAX_FRAME`] and the input length — hostile length fields stop the
+/// scan instead of sizing a buffer.
+pub fn scan_bytes(data: &[u8]) -> FlightScan {
+    let mut scan = FlightScan::default();
+    if data.len() < HEADER_LEN || &data[..4] != FLIGHT_MAGIC {
+        scan.truncated = Some("missing VFR1 header".to_string());
+        return scan;
+    }
+    let ver = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if ver != FLIGHT_VERSION {
+        scan.truncated = Some(format!("unsupported format version {ver}"));
+        return scan;
+    }
+    let mut off = HEADER_LEN;
+    let (mut process, mut pid) = (String::new(), 0u64);
+    loop {
+        if off == data.len() {
+            break; // clean end
+        }
+        if data.len() - off < 4 {
+            scan.truncated = Some(format!("torn length field at offset {off}"));
+            break;
+        }
+        let len = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
+        if !(FRAME_FIXED..=MAX_FRAME).contains(&len) {
+            scan.truncated = Some(format!("frame length {len} out of bounds at offset {off}"));
+            break;
+        }
+        if data.len() - off < 4 + len + 4 {
+            scan.truncated = Some(format!("torn frame at offset {off}"));
+            break;
+        }
+        let payload = &data[off + 4..off + 4 + len];
+        let stored = u32::from_le_bytes(data[off + 4 + len..off + 8 + len].try_into().unwrap());
+        if crc32fast::hash(payload) != stored {
+            scan.truncated = Some(format!("crc mismatch at offset {off}"));
+            break;
+        }
+        let Some(kind) = FlightKind::from_byte(payload[0]) else {
+            scan.truncated = Some(format!("unknown record kind {} at offset {off}", payload[0]));
+            break;
+        };
+        let t_us = u64::from_le_bytes(payload[1..9].try_into().unwrap());
+        let Ok(text) = std::str::from_utf8(&payload[9..]) else {
+            scan.truncated = Some(format!("non-UTF-8 body at offset {off}"));
+            break;
+        };
+        let Ok(body) = Json::parse(text) else {
+            scan.truncated = Some(format!("malformed body at offset {off}"));
+            break;
+        };
+        if kind == FlightKind::Meta {
+            process = body.str_or("process", "").to_string();
+            pid = body.get("pid").and_then(Json::as_u64).unwrap_or(0);
+        }
+        scan.entries.push(FlightEntry {
+            process: process.clone(),
+            pid,
+            kind,
+            t_us,
+            body,
+        });
+        off += 4 + len + 4;
+        scan.bytes_scanned = off as u64;
+    }
+    scan
+}
+
+/// Scan one stream file (I/O errors are the only hard failures).
+pub fn scan_file(path: &Path) -> Result<FlightScan> {
+    let data =
+        std::fs::read(path).with_context(|| format!("flight: read {}", path.display()))?;
+    Ok(scan_bytes(&data))
+}
+
+/// Read every flight stream under `dir` (the `.vfr.old` generation of a
+/// stream is scanned before its current segment so rotation preserves
+/// order). Returns `(path, scan)` per file, sorted by path.
+pub fn read_dir(dir: &Path) -> Result<Vec<(PathBuf, FlightScan)>> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("flight: read dir {}", dir.display()))?
+    {
+        let p = entry?.path();
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.ends_with(&format!(".{FLIGHT_EXT}")) || name.ends_with(&format!(".{FLIGHT_EXT}.old"))
+        {
+            paths.push(p);
+        }
+    }
+    // `<p>.vfr.old` sorts after `<p>.vfr` lexically; order by (stem, age)
+    // so the old generation comes first.
+    paths.sort_by_key(|p| {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+        let old = name.ends_with(".old");
+        (name.trim_end_matches(".old").to_string(), !old)
+    });
+    let mut out = Vec::with_capacity(paths.len());
+    for p in paths {
+        let scan = scan_file(&p)?;
+        out.push((p, scan));
+    }
+    Ok(out)
+}
+
+/// Merge scans into one cross-process timeline ordered by timestamp
+/// (stable: ties keep per-stream order).
+pub fn merge(scans: &[(PathBuf, FlightScan)]) -> Vec<FlightEntry> {
+    let mut all: Vec<FlightEntry> = scans
+        .iter()
+        .flat_map(|(_, s)| s.entries.iter().cloned())
+        .collect();
+    all.sort_by_key(|e| e.t_us);
+    all
+}
+
+/// Rebuild a [`SpanRec`] from a span-kind entry (postmortem analysis
+/// feeds these straight into [`super::critpath`]).
+pub fn entry_to_span(e: &FlightEntry) -> Option<SpanRec> {
+    if e.kind != FlightKind::Span {
+        return None;
+    }
+    let b = &e.body;
+    let labels = b
+        .get("labels")
+        .and_then(Json::as_obj)
+        .map(|m| {
+            m.iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect()
+        })
+        .unwrap_or_default();
+    Some(SpanRec {
+        id: b.get("id").and_then(Json::as_u64)?,
+        parent: b.get("parent").and_then(Json::as_u64).unwrap_or(0),
+        name: b.str_or("name", "").to_string(),
+        start_us: b.get("start_us").and_then(Json::as_u64)?,
+        end_us: b.get("end_us").and_then(Json::as_u64),
+        labels,
+        tid: b.get("tid").and_then(Json::as_u64).unwrap_or(0),
+        instant: b.bool_or("instant", false),
+    })
+}
+
+/// `veloc postmortem --verify` report over one dump directory.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    /// Streams scanned.
+    pub files: usize,
+    /// Records across all streams.
+    pub entries: usize,
+    /// Span records.
+    pub spans: usize,
+    /// Event records.
+    pub events: usize,
+    /// Signals snapshots.
+    pub snapshots: usize,
+    /// Distinct writing processes.
+    pub processes: Vec<String>,
+    /// Streams that ended in a torn tail (expected after a crash).
+    pub torn: usize,
+    /// Acked submissions with no matching settle record — the work a
+    /// crash left in flight (`backend.ack` without `backend.settle`).
+    pub unsettled: Vec<Json>,
+}
+
+/// Check well-formedness of a dump: every stream leads with a meta
+/// record, timestamps are monotonic within each meta segment, and span
+/// parent/child links close (parents resolve within the stream and
+/// children's intervals are sane). A torn tail is reported, not failed.
+pub fn verify(scans: &[(PathBuf, FlightScan)]) -> Result<VerifyReport, String> {
+    let mut report = VerifyReport {
+        files: scans.len(),
+        ..VerifyReport::default()
+    };
+    if scans.is_empty() {
+        return Err("no flight streams found".to_string());
+    }
+    // Span ids per writing process, pooled across every segment: rotation
+    // splits one logical stream over `.vfr.old` + `.vfr`, so a span's
+    // parent may live in the previous generation.
+    let mut span_ids: std::collections::BTreeMap<String, std::collections::BTreeSet<u64>> =
+        std::collections::BTreeMap::new();
+    for (_, scan) in scans {
+        for e in &scan.entries {
+            if e.kind == FlightKind::Span {
+                if let Some(id) = e.body.get("id").and_then(Json::as_u64) {
+                    span_ids.entry(e.process.clone()).or_default().insert(id);
+                }
+            }
+        }
+    }
+    for (path, scan) in scans {
+        let name = path.display();
+        if scan.entries.is_empty() {
+            return Err(format!("{name}: no decodable records"));
+        }
+        if scan.entries[0].kind != FlightKind::Meta {
+            return Err(format!("{name}: stream does not lead with a meta record"));
+        }
+        if scan.truncated.is_some() {
+            report.torn += 1;
+        }
+        let mut last_t = 0u64;
+        for e in &scan.entries {
+            if e.kind == FlightKind::Meta {
+                // A new incarnation restarts the monotonic clock domain.
+                last_t = e.t_us;
+            } else if e.t_us < last_t {
+                return Err(format!(
+                    "{name}: timestamp regression {} -> {} ({})",
+                    last_t,
+                    e.t_us,
+                    e.kind.name()
+                ));
+            } else {
+                last_t = e.t_us;
+            }
+        }
+        for e in &scan.entries {
+            match e.kind {
+                FlightKind::Span => {
+                    report.spans += 1;
+                    let s = entry_to_span(e)
+                        .ok_or_else(|| format!("{name}: span record missing id/start"))?;
+                    if let Some(end) = s.end_us {
+                        if end < s.start_us {
+                            return Err(format!(
+                                "{name}: span {} ({}) ends before it starts",
+                                s.id, s.name
+                            ));
+                        }
+                    }
+                    let resolved = s.parent == 0
+                        || span_ids
+                            .get(&e.process)
+                            .is_some_and(|ids| ids.contains(&s.parent));
+                    if !resolved {
+                        return Err(format!(
+                            "{name}: span {} ({}) has unresolved parent {}",
+                            s.id, s.name, s.parent
+                        ));
+                    }
+                }
+                FlightKind::Event => report.events += 1,
+                FlightKind::Signals => report.snapshots += 1,
+                FlightKind::Meta => {}
+            }
+            report.entries += 1;
+            if !e.process.is_empty() && !report.processes.contains(&e.process) {
+                report.processes.push(e.process.clone());
+            }
+        }
+    }
+    report.unsettled = unsettled(&merge(scans));
+    Ok(report)
+}
+
+/// Pair `backend.ack` events with their `backend.settle`: the leftovers
+/// are the acked-but-unsettled submissions a crash stranded — exactly
+/// what the journal replay must finish.
+pub fn unsettled(entries: &[FlightEntry]) -> Vec<Json> {
+    // Event labels arrive as strings; accept a numeric id too so hand-built
+    // bodies pair the same way.
+    fn id_of(body: &Json) -> Option<u64> {
+        let id = body.get("id")?;
+        id.as_u64().or_else(|| id.as_str()?.parse().ok())
+    }
+    let mut acked: std::collections::BTreeMap<u64, Json> = std::collections::BTreeMap::new();
+    for e in entries {
+        if e.kind != FlightKind::Event {
+            continue;
+        }
+        match e.body.str_or("name", "") {
+            "backend.ack" => {
+                if let Some(id) = id_of(&e.body) {
+                    acked.insert(id, e.body.clone());
+                }
+            }
+            "backend.settle" => {
+                if let Some(id) = id_of(&e.body) {
+                    acked.remove(&id);
+                }
+            }
+            _ => {}
+        }
+    }
+    acked.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::signals::SignalsBus;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "veloc-flight-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn records_roundtrip_through_the_scanner() {
+        let dir = tmp("roundtrip");
+        let f = FlightRecorder::open(&dir, "daemon", FLIGHT_MAX_BYTES_DEFAULT).unwrap();
+        f.event("backend.ack", &[("id", "7"), ("job", "train-a")]);
+        let span = SpanRec {
+            id: 3,
+            parent: 0,
+            name: "ckpt".to_string(),
+            start_us: 10,
+            end_us: Some(30),
+            labels: vec![("rank".to_string(), "1".to_string())],
+            tid: 1,
+            instant: false,
+        };
+        f.span(&span, 1_000_000);
+        let bus = SignalsBus::new(8);
+        bus.sample("queue.depth", 4.0);
+        f.signals(&bus.snapshot());
+        f.flush();
+
+        let scan = scan_file(&f.path()).unwrap();
+        assert!(scan.truncated.is_none(), "{:?}", scan.truncated);
+        assert_eq!(scan.entries.len(), 4); // meta + event + span + signals
+        assert_eq!(scan.entries[0].kind, FlightKind::Meta);
+        assert!(scan.entries.iter().all(|e| e.process == "daemon"));
+        let ev = &scan.entries[1];
+        assert_eq!(ev.body.str_or("name", ""), "backend.ack");
+        let back = entry_to_span(&scan.entries[2]).unwrap();
+        assert_eq!(back.name, "ckpt");
+        assert_eq!(back.start_us, 1_000_010);
+        assert_eq!(back.end_us, Some(1_000_030));
+        assert_eq!(scan.entries[3].kind, FlightKind::Signals);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_yields_the_valid_prefix() {
+        let dir = tmp("torn");
+        let f = FlightRecorder::open(&dir, "client", FLIGHT_MAX_BYTES_DEFAULT).unwrap();
+        for i in 0..5 {
+            f.event("tick", &[("i", &i.to_string())]);
+        }
+        f.flush();
+        let mut data = std::fs::read(f.path()).unwrap();
+        data.truncate(data.len() - 3); // torn final frame
+        let scan = scan_bytes(&data);
+        assert_eq!(scan.entries.len(), 5); // meta + 4 intact ticks
+        assert!(scan.truncated.is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_bounds_the_stream_and_keeps_one_old_generation() {
+        let dir = tmp("rotate");
+        let f = FlightRecorder::open(&dir, "sim", 4096).unwrap();
+        let filler = "x".repeat(200);
+        for _ in 0..200 {
+            f.event("fill", &[("pad", &filler)]);
+        }
+        f.flush();
+        let cur = std::fs::metadata(f.path()).unwrap().len();
+        assert!(cur <= 4096, "current segment must stay bounded: {cur}");
+        let old = f.path().with_extension(format!("{FLIGHT_EXT}.old"));
+        assert!(old.exists(), "previous generation must be retained");
+
+        // Both generations scan clean and the old one precedes the
+        // current one in read_dir order.
+        let scans = read_dir(&dir).unwrap();
+        assert_eq!(scans.len(), 2);
+        assert!(scans[0].0.to_string_lossy().ends_with(".old"));
+        for (_, s) in &scans {
+            assert!(s.truncated.is_none());
+            assert_eq!(s.entries[0].kind, FlightKind::Meta);
+        }
+        assert_eq!(f.lost(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn second_incarnation_appends_a_new_meta_segment() {
+        let dir = tmp("reopen");
+        {
+            let f = FlightRecorder::open(&dir, "daemon", FLIGHT_MAX_BYTES_DEFAULT).unwrap();
+            f.event("daemon.start", &[]);
+            f.flush();
+        }
+        let f2 = FlightRecorder::open(&dir, "daemon", FLIGHT_MAX_BYTES_DEFAULT).unwrap();
+        f2.event("daemon.start", &[]);
+        f2.flush();
+        let scan = scan_file(&f2.path()).unwrap();
+        let metas = scan
+            .entries
+            .iter()
+            .filter(|e| e.kind == FlightKind::Meta)
+            .count();
+        assert_eq!(metas, 2, "one meta record per incarnation");
+        let scans = vec![(f2.path(), scan)];
+        verify(&scans).expect("two-segment stream must verify");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unsettled_pairs_acks_with_settles() {
+        let dir = tmp("unsettled");
+        let f = FlightRecorder::open(&dir, "daemon", FLIGHT_MAX_BYTES_DEFAULT).unwrap();
+        f.event("backend.ack", &[("id", "1"), ("version", "5")]);
+        f.event("backend.ack", &[("id", "2"), ("version", "6")]);
+        f.event("backend.settle", &[("id", "1"), ("ok", "true")]);
+        f.flush();
+        let scans = read_dir(&dir).unwrap();
+        let left = unsettled(&merge(&scans));
+        assert_eq!(left.len(), 1);
+        assert_eq!(left[0].str_or("id", ""), "2");
+        assert_eq!(left[0].str_or("version", ""), "6");
+        let report = verify(&scans).unwrap();
+        assert_eq!(report.unsettled.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_rejects_unresolved_span_parents() {
+        let dir = tmp("verify-parent");
+        let f = FlightRecorder::open(&dir, "client", FLIGHT_MAX_BYTES_DEFAULT).unwrap();
+        let orphan = SpanRec {
+            id: 9,
+            parent: 77, // never recorded
+            name: "stage".to_string(),
+            start_us: 5,
+            end_us: Some(6),
+            labels: Vec::new(),
+            tid: 0,
+            instant: false,
+        };
+        f.span(&orphan, 0);
+        f.flush();
+        let scans = read_dir(&dir).unwrap();
+        let err = verify(&scans).unwrap_err();
+        assert!(err.contains("unresolved parent"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hostile_length_fields_never_size_an_allocation() {
+        // A frame claiming u32::MAX bytes must stop the scan, not drive
+        // a huge Vec. Build a valid header + one bent length field.
+        let mut data = Vec::new();
+        data.extend_from_slice(FLIGHT_MAGIC);
+        data.extend_from_slice(&FLIGHT_VERSION.to_le_bytes());
+        data.extend_from_slice(&u32::MAX.to_le_bytes());
+        data.extend_from_slice(&[0u8; 64]);
+        let scan = scan_bytes(&data);
+        assert!(scan.entries.is_empty());
+        assert!(scan.truncated.unwrap().contains("out of bounds"));
+    }
+}

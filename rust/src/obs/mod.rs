@@ -1,6 +1,9 @@
 //! Observability plane: span tracing ([`span`]), Prometheus text
-//! exposition + validation ([`prom`]) and the embedded HTTP endpoint
-//! serving `/metrics`, `/healthz` and `/readyz` ([`http`]).
+//! exposition + validation ([`prom`]), the embedded HTTP endpoint
+//! serving `/metrics`, `/healthz` and `/readyz` ([`http`]), the
+//! crash-durable flight recorder ([`flight`]), wave critical-path
+//! attribution ([`critpath`]) and the persisted signals bus
+//! ([`signals`]).
 //!
 //! The span recorder threads through the checkpoint pipeline (capture →
 //! checksum → delta → local → partner → erasure → transfer → daemon
@@ -10,13 +13,28 @@
 //! registry — counters, gauges, labeled histograms, reservoir summaries —
 //! in the Prometheus text format, served by the daemon when
 //! `obs.http` is configured.
+//!
+//! Everything above evaporates with the process; the post-mortem side
+//! does not. With `obs.flight_dir` configured, closed spans, state
+//! transitions, queue edges and signals snapshots also append to a
+//! bounded on-disk ring that survives a crash — `veloc postmortem`
+//! reconstructs the cross-process timeline from the dumps, and
+//! `veloc analyze` attributes each wave's wall-clock to its critical
+//! path and stragglers.
 
+pub mod critpath;
+pub mod flight;
 pub mod http;
 pub mod prom;
+pub mod signals;
 pub mod span;
 
+pub use flight::{FlightEntry, FlightKind, FlightRecorder, FlightScan};
 pub use http::{http_get, wait_ready, ObsServer, ObsState};
+pub use signals::{SignalsBus, SignalsSnapshot, SignalsView};
 pub use span::{stage_summary, ObsHandle, SpanId, SpanRec, TraceRecorder};
+
+use std::path::PathBuf;
 
 /// Observability configuration (the `obs` section of the config file).
 #[derive(Clone, Debug)]
@@ -28,6 +46,14 @@ pub struct ObsConfig {
     pub http: Option<String>,
     /// Retained-span bound for the recorder.
     pub span_capacity: usize,
+    /// Directory for crash-durable flight-recorder streams; `None`
+    /// disables the flight recorder.
+    pub flight_dir: Option<PathBuf>,
+    /// Per-stream size bound before segment rotation (the ring keeps the
+    /// current segment plus one previous generation).
+    pub flight_max_bytes: u64,
+    /// Retained points per signals-bus series.
+    pub signals_capacity: usize,
 }
 
 impl Default for ObsConfig {
@@ -36,6 +62,9 @@ impl Default for ObsConfig {
             trace: false,
             http: None,
             span_capacity: span::SPAN_CAPACITY_DEFAULT,
+            flight_dir: None,
+            flight_max_bytes: flight::FLIGHT_MAX_BYTES_DEFAULT,
+            signals_capacity: signals::SIGNALS_CAPACITY_DEFAULT,
         }
     }
 }
@@ -50,6 +79,12 @@ impl ObsConfig {
             if h.is_empty() {
                 anyhow::bail!("obs.http must be a bind address like 127.0.0.1:9090");
             }
+        }
+        if self.flight_max_bytes < 4096 {
+            anyhow::bail!("obs.flight_max_bytes must be >= 4096 (one rotation segment)");
+        }
+        if self.signals_capacity == 0 {
+            anyhow::bail!("obs.signals_capacity must be > 0");
         }
         Ok(())
     }

@@ -1,0 +1,401 @@
+//! Signals bus: the small time-series registry ROADMAP item 4's control
+//! loop will consume.
+//!
+//! Each series is a fixed-capacity ring of `(unix µs, f64)` points, so
+//! the bus is bounded no matter how long the daemon runs. Producers are
+//! scattered through the stack — the sim/cluster layer notes observed
+//! failures ([`SignalsBus::note_failure`] turns them into inter-arrival
+//! samples), the placement engine samples per-tier EWMA health
+//! multipliers, the backend queue samples depth and backpressure, and
+//! the runtime samples the delta plane's dedup ratio on drain.
+//!
+//! Snapshots ([`SignalsBus::snapshot`]) persist into the flight-recorder
+//! stream, so the series survive the process: after a crash,
+//! [`SignalsView::from_entries`] replays the dumped snapshots into the
+//! same typed read API a live control loop would use — consumers never
+//! touch collection internals.
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Default ring capacity per series.
+pub const SIGNALS_CAPACITY_DEFAULT: usize = 256;
+
+/// Bounds on snapshot decode (hostile or torn dumps must not size
+/// allocations): series per snapshot and points per series.
+const MAX_SERIES: usize = 4096;
+const MAX_POINTS: usize = 65_536;
+
+/// Observed failure inter-arrival, seconds. The first failure samples
+/// the time since the bus was created (process start).
+pub const SIG_FAILURE_INTERARRIVAL: &str = "failure.interarrival_s";
+/// Per-tier EWMA health multiplier (1.0 = spec speed); one series per
+/// tier, `tier.health.<id>`.
+pub const SIG_TIER_HEALTH_PREFIX: &str = "tier.health.";
+/// Backend queue depth (queued, unsettled submissions).
+pub const SIG_QUEUE_DEPTH: &str = "queue.depth";
+/// Cumulative backpressure rejections at the admission gate.
+pub const SIG_QUEUE_REJECTED: &str = "queue.rejected";
+/// Delta plane logical/physical byte ratio (>= 1.0 once dedup bites).
+pub const SIG_DEDUP_RATIO: &str = "dedup.ratio";
+
+/// One sample: unix microseconds and a value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SignalPoint {
+    /// Sample time, unix µs.
+    pub t_us: u64,
+    /// Sample value (units are per-series, see the `SIG_*` docs).
+    pub value: f64,
+}
+
+/// One named series, oldest point first.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SignalSeries {
+    /// Series name (`SIG_*` constants plus the tier-health family).
+    pub name: String,
+    /// Retained points, oldest first.
+    pub points: Vec<SignalPoint>,
+}
+
+impl SignalSeries {
+    /// The most recent value, if any.
+    pub fn latest(&self) -> Option<f64> {
+        self.points.last().map(|p| p.value)
+    }
+}
+
+struct BusState {
+    series: BTreeMap<String, VecDeque<SignalPoint>>,
+    last_failure_us: Option<u64>,
+}
+
+/// The live registry (see the [module docs](self)). Cheap to share;
+/// sampling takes one mutex over a bounded map.
+pub struct SignalsBus {
+    cap: usize,
+    created_us: u64,
+    state: Mutex<BusState>,
+}
+
+impl SignalsBus {
+    /// Build a bus whose series each retain at most `cap` points.
+    pub fn new(cap: usize) -> Arc<SignalsBus> {
+        Arc::new(SignalsBus {
+            cap: cap.max(2),
+            created_us: super::flight::unix_us(),
+            state: Mutex::new(BusState {
+                series: BTreeMap::new(),
+                last_failure_us: None,
+            }),
+        })
+    }
+
+    /// Append a sample stamped now.
+    pub fn sample(&self, name: &str, value: f64) {
+        self.sample_at(name, super::flight::unix_us(), value);
+    }
+
+    /// Append a sample with an explicit timestamp.
+    pub fn sample_at(&self, name: &str, t_us: u64, value: f64) {
+        let mut st = self.state.lock().unwrap();
+        let ring = st.series.entry(name.to_string()).or_default();
+        if ring.len() >= self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(SignalPoint { t_us, value });
+    }
+
+    /// Record an observed failure (rank/node loss, daemon crash): one
+    /// inter-arrival sample measured against the previous failure, or —
+    /// for the first — against bus creation.
+    pub fn note_failure(&self) {
+        let now = super::flight::unix_us();
+        let since = {
+            let mut st = self.state.lock().unwrap();
+            let prev = st.last_failure_us.replace(now).unwrap_or(self.created_us);
+            now.saturating_sub(prev)
+        };
+        self.sample_at(SIG_FAILURE_INTERARRIVAL, now, since as f64 / 1e6);
+    }
+
+    /// Point-in-time copy of every series.
+    pub fn snapshot(&self) -> SignalsSnapshot {
+        let st = self.state.lock().unwrap();
+        SignalsSnapshot {
+            taken_us: super::flight::unix_us(),
+            series: st
+                .series
+                .iter()
+                .map(|(name, ring)| SignalSeries {
+                    name: name.clone(),
+                    points: ring.iter().copied().collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Typed read view over the current state.
+    pub fn view(&self) -> SignalsView {
+        SignalsView::from_snapshot(self.snapshot())
+    }
+}
+
+/// A persisted copy of the bus at one instant; this is what rides in the
+/// flight-recorder stream.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SignalsSnapshot {
+    /// When the snapshot was taken, unix µs.
+    pub taken_us: u64,
+    /// Every series, name-ordered.
+    pub series: Vec<SignalSeries>,
+}
+
+impl SignalsSnapshot {
+    /// Serialize (flight-record body, `veloc postmortem` rendering).
+    pub fn to_json(&self) -> Json {
+        let series: Vec<Json> = self
+            .series
+            .iter()
+            .map(|s| {
+                let pts: Vec<Json> = s
+                    .points
+                    .iter()
+                    .map(|p| Json::obj().set("t", p.t_us).set("v", p.value))
+                    .collect();
+                Json::obj()
+                    .set("name", s.name.as_str())
+                    .set("points", Json::Arr(pts))
+            })
+            .collect();
+        Json::obj()
+            .set("taken_us", self.taken_us)
+            .set("series", Json::Arr(series))
+    }
+
+    /// Decode with bounded allocation: series/point counts past the
+    /// caps or missing fields are a typed error, never a panic.
+    pub fn from_json(j: &Json) -> Result<SignalsSnapshot, String> {
+        let taken_us = j
+            .get("taken_us")
+            .and_then(Json::as_u64)
+            .ok_or("snapshot missing taken_us")?;
+        let arr = j
+            .get("series")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing series")?;
+        if arr.len() > MAX_SERIES {
+            return Err(format!("snapshot claims {} series (cap {MAX_SERIES})", arr.len()));
+        }
+        let mut series = Vec::with_capacity(arr.len());
+        for s in arr {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("series missing name")?
+                .to_string();
+            let pts = s
+                .get("points")
+                .and_then(Json::as_arr)
+                .ok_or("series missing points")?;
+            if pts.len() > MAX_POINTS {
+                return Err(format!(
+                    "series {name} claims {} points (cap {MAX_POINTS})",
+                    pts.len()
+                ));
+            }
+            let mut points = Vec::with_capacity(pts.len());
+            for p in pts {
+                let t_us = p.get("t").and_then(Json::as_u64).ok_or("point missing t")?;
+                let value = p.get("v").and_then(Json::as_f64).ok_or("point missing v")?;
+                points.push(SignalPoint { t_us, value });
+            }
+            series.push(SignalSeries { name, points });
+        }
+        Ok(SignalsSnapshot { taken_us, series })
+    }
+}
+
+/// Typed read API over a set of signals — live (from the bus) or
+/// replayed from flight-recorder dumps. The future control loop codes
+/// against this, not against collection internals.
+#[derive(Clone, Debug, Default)]
+pub struct SignalsView {
+    series: BTreeMap<String, SignalSeries>,
+}
+
+impl SignalsView {
+    /// View over one snapshot.
+    pub fn from_snapshot(snap: SignalsSnapshot) -> SignalsView {
+        let mut v = SignalsView::default();
+        v.absorb(snap);
+        v
+    }
+
+    /// Replay every signals record in a merged flight timeline. Later
+    /// snapshots extend earlier ones (points are merged by timestamp and
+    /// deduplicated), so the view spans daemon incarnations.
+    pub fn from_entries(entries: &[super::flight::FlightEntry]) -> SignalsView {
+        let mut v = SignalsView::default();
+        for e in entries {
+            if e.kind != super::flight::FlightKind::Signals {
+                continue;
+            }
+            if let Ok(snap) = SignalsSnapshot::from_json(&e.body) {
+                v.absorb(snap);
+            }
+        }
+        v
+    }
+
+    fn absorb(&mut self, snap: SignalsSnapshot) {
+        for s in snap.series {
+            let dst = self.series.entry(s.name.clone()).or_insert_with(|| SignalSeries {
+                name: s.name.clone(),
+                points: Vec::new(),
+            });
+            for p in s.points {
+                if !dst.points.contains(&p) {
+                    dst.points.push(p);
+                }
+            }
+            dst.points.sort_by(|a, b| {
+                a.t_us.cmp(&b.t_us).then(a.value.partial_cmp(&b.value).unwrap_or(std::cmp::Ordering::Equal))
+            });
+        }
+    }
+
+    /// Every series name, ordered.
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(String::as_str).collect()
+    }
+
+    /// One series by exact name.
+    pub fn series(&self, name: &str) -> Option<&SignalSeries> {
+        self.series.get(name)
+    }
+
+    /// Latest value of a series.
+    pub fn latest(&self, name: &str) -> Option<f64> {
+        self.series.get(name).and_then(SignalSeries::latest)
+    }
+
+    /// Observed failure inter-arrival series (seconds).
+    pub fn failure_interarrival(&self) -> Option<&SignalSeries> {
+        self.series(SIG_FAILURE_INTERARRIVAL)
+    }
+
+    /// Every per-tier health series (`tier.health.<id>`).
+    pub fn tier_health(&self) -> Vec<&SignalSeries> {
+        self.series
+            .iter()
+            .filter(|(k, _)| k.starts_with(SIG_TIER_HEALTH_PREFIX))
+            .map(|(_, s)| s)
+            .collect()
+    }
+
+    /// One tier's health series.
+    pub fn tier_health_of(&self, tier: &str) -> Option<&SignalSeries> {
+        self.series(&format!("{SIG_TIER_HEALTH_PREFIX}{tier}"))
+    }
+
+    /// Backend queue depth series.
+    pub fn queue_depth(&self) -> Option<&SignalSeries> {
+        self.series(SIG_QUEUE_DEPTH)
+    }
+
+    /// Cumulative admission rejections (backpressure) series.
+    pub fn queue_rejected(&self) -> Option<&SignalSeries> {
+        self.series(SIG_QUEUE_REJECTED)
+    }
+
+    /// Delta dedup ratio series.
+    pub fn dedup_ratio(&self) -> Option<&SignalSeries> {
+        self.series(SIG_DEDUP_RATIO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rings_are_bounded_and_keep_the_newest_points() {
+        let bus = SignalsBus::new(4);
+        for i in 0..10 {
+            bus.sample_at(SIG_QUEUE_DEPTH, i, i as f64);
+        }
+        let v = bus.view();
+        let s = v.queue_depth().unwrap();
+        assert_eq!(s.points.len(), 4);
+        assert_eq!(s.points[0].value, 6.0);
+        assert_eq!(s.latest(), Some(9.0));
+    }
+
+    #[test]
+    fn first_failure_samples_time_since_creation() {
+        let bus = SignalsBus::new(8);
+        bus.note_failure();
+        bus.note_failure();
+        let v = bus.view();
+        let s = v.failure_interarrival().expect("series after failures");
+        assert_eq!(s.points.len(), 2);
+        assert!(s.points.iter().all(|p| p.value >= 0.0));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let bus = SignalsBus::new(8);
+        bus.sample_at("tier.health.pfs", 100, 1.5);
+        bus.sample_at("tier.health.pfs", 200, 2.5);
+        bus.sample_at(SIG_DEDUP_RATIO, 150, 5.2);
+        let snap = bus.snapshot();
+        let j = Json::parse(&snap.to_json().to_string()).unwrap();
+        let back = SignalsSnapshot::from_json(&j).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn from_json_rejects_inflated_counts_with_typed_errors() {
+        // Claimed sizes are irrelevant (JSON arrays carry their real
+        // length), but real oversize arrays must be refused, not
+        // absorbed.
+        let many: Vec<Json> = (0..MAX_SERIES + 1)
+            .map(|i| {
+                Json::obj()
+                    .set("name", format!("s{i}"))
+                    .set("points", Json::Arr(Vec::new()))
+            })
+            .collect();
+        let j = Json::obj().set("taken_us", 1u64).set("series", Json::Arr(many));
+        assert!(SignalsSnapshot::from_json(&j).unwrap_err().contains("cap"));
+        assert!(SignalsSnapshot::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn view_replays_and_merges_flight_snapshots() {
+        use crate::obs::flight::{self, FlightRecorder};
+        let dir = std::env::temp_dir().join(format!(
+            "veloc-signals-replay-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let f = FlightRecorder::open(&dir, "daemon", flight::FLIGHT_MAX_BYTES_DEFAULT).unwrap();
+        let bus = SignalsBus::new(8);
+        bus.sample_at("tier.health.ssd", 10, 1.0);
+        f.signals(&bus.snapshot());
+        bus.sample_at("tier.health.ssd", 20, 3.0);
+        bus.note_failure();
+        f.signals(&bus.snapshot());
+        f.flush();
+
+        let scans = flight::read_dir(&dir).unwrap();
+        let v = SignalsView::from_entries(&flight::merge(&scans));
+        let health = v.tier_health_of("ssd").expect("replayed tier health");
+        assert_eq!(health.points.len(), 2, "snapshots merge without duplicates");
+        assert_eq!(health.latest(), Some(3.0));
+        assert!(v.failure_interarrival().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -70,6 +70,15 @@ struct TraceState {
     dropped: u64,
 }
 
+/// Crash-durable mirror: closed spans and instants forward here so they
+/// survive the process (see [`crate::obs::flight`]).
+struct FlightSink {
+    flight: Arc<crate::obs::flight::FlightRecorder>,
+    /// Converts this recorder's epoch-relative microseconds to unix
+    /// microseconds (computed once when the sink is attached).
+    unix_offset_us: u64,
+}
+
 /// The span recorder. One per runtime; shared by every rank's pipeline,
 /// the restore plane and the daemon. Cheap to clone via `Arc`.
 pub struct TraceRecorder {
@@ -78,6 +87,12 @@ pub struct TraceRecorder {
     epoch: Instant,
     capacity: usize,
     state: Mutex<TraceState>,
+    /// Set once the first span is dropped at the capacity bound, so the
+    /// warning prints once per run (the count itself is surfaced as the
+    /// `obs.spans.dropped` gauge).
+    drop_warned: AtomicBool,
+    has_sink: AtomicBool,
+    sink: Mutex<Option<FlightSink>>,
 }
 
 impl TraceRecorder {
@@ -99,7 +114,45 @@ impl TraceRecorder {
                 waves: BTreeMap::new(),
                 dropped: 0,
             }),
+            drop_warned: AtomicBool::new(false),
+            has_sink: AtomicBool::new(false),
+            sink: Mutex::new(None),
         })
+    }
+
+    /// Attach a flight-recorder sink: from now on every closed span and
+    /// instant is also appended, crash-durably, to the flight stream.
+    pub fn set_flight(&self, flight: Arc<crate::obs::flight::FlightRecorder>) {
+        let unix_offset_us =
+            crate::obs::flight::unix_us().saturating_sub(self.epoch.elapsed().as_micros() as u64);
+        *self.sink.lock().unwrap() = Some(FlightSink {
+            flight,
+            unix_offset_us,
+        });
+        self.has_sink.store(true, Ordering::Relaxed);
+    }
+
+    /// Forward one finished span to the flight sink, if attached.
+    fn sink_span(&self, rec: &SpanRec) {
+        if !self.has_sink.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Some(sink) = self.sink.lock().unwrap().as_ref() {
+            sink.flight.span(rec, sink.unix_offset_us);
+        }
+    }
+
+    /// Count one dropped span and warn exactly once per run — silent
+    /// overflow hides exactly the spans a post-mortem needs.
+    fn note_drop(&self, st: &mut TraceState) {
+        st.dropped += 1;
+        if !self.drop_warned.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "veloc: obs: span ring full ({} retained); further spans are dropped \
+                 (see the obs.spans.dropped metric)",
+                self.capacity
+            );
+        }
     }
 
     /// Whether spans are currently recorded (one relaxed load).
@@ -168,12 +221,18 @@ impl TraceRecorder {
             tid,
             instant: false,
         };
-        let mut st = self.state.lock().unwrap();
-        if st.spans.len() >= self.capacity {
-            st.dropped += 1;
-            return SpanId::NONE;
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.spans.len() >= self.capacity {
+                self.note_drop(&mut st);
+                return SpanId::NONE;
+            }
+            st.spans.push(rec.clone());
         }
-        st.spans.push(rec);
+        // Mirror the open edge too: a crash that never closes this span
+        // must still leave a record for its already-mirrored children to
+        // resolve their parent against.
+        self.sink_span(&rec);
         SpanId(id)
     }
 
@@ -183,10 +242,33 @@ impl TraceRecorder {
             return;
         }
         let end = self.now_us();
+        let closed = {
+            let mut st = self.state.lock().unwrap();
+            match st.spans.iter_mut().rev().find(|s| s.id == id.0) {
+                Some(s) if s.end_us.is_none() => {
+                    s.end_us = Some(end.max(s.start_us));
+                    Some(s.clone())
+                }
+                _ => None,
+            }
+        };
+        if let Some(rec) = closed {
+            self.sink_span(&rec);
+        }
+    }
+
+    /// Attach one label to an already-open span (the pipeline engine
+    /// adds the serving tier after a stage routed through placement).
+    pub fn add_label(&self, id: SpanId, key: &str, value: &str) {
+        if !id.is_some() {
+            return;
+        }
         let mut st = self.state.lock().unwrap();
         if let Some(s) = st.spans.iter_mut().rev().find(|s| s.id == id.0) {
-            if s.end_us.is_none() {
-                s.end_us = Some(end.max(s.start_us));
+            if let Some(l) = s.labels.iter_mut().find(|(k, _)| k == key) {
+                l.1 = value.to_string();
+            } else {
+                s.labels.push((key.to_string(), value.to_string()));
             }
         }
     }
@@ -211,12 +293,15 @@ impl TraceRecorder {
             tid,
             instant: true,
         };
-        let mut st = self.state.lock().unwrap();
-        if st.spans.len() >= self.capacity {
-            st.dropped += 1;
-            return;
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.spans.len() >= self.capacity {
+                self.note_drop(&mut st);
+                return;
+            }
+            st.spans.push(rec.clone());
         }
-        st.spans.push(rec);
+        self.sink_span(&rec);
     }
 
     /// Get (or open) the root span of checkpoint wave `version`. All
@@ -255,11 +340,11 @@ impl TraceRecorder {
             return id;
         }
         if st.spans.len() >= self.capacity {
-            st.dropped += 1;
+            self.note_drop(&mut st);
             return SpanId::NONE;
         }
         let id = self.next.fetch_add(1, Ordering::Relaxed);
-        st.spans.push(SpanRec {
+        let rec = SpanRec {
             id,
             parent: 0,
             name: format!("wave v{version}"),
@@ -268,9 +353,14 @@ impl TraceRecorder {
             labels: vec![("version".to_string(), version.to_string())],
             tid: 0,
             instant: false,
-        });
+        };
+        st.spans.push(rec.clone());
         let sid = SpanId(id);
         st.waves.insert(version, sid);
+        drop(st);
+        // Open-edge mirror, same as open_at_us: children mirrored before
+        // this root closes must find their parent in the flight stream.
+        self.sink_span(&rec);
         sid
     }
 
@@ -396,6 +486,13 @@ impl ObsHandle {
         }
     }
 
+    /// Attach a label to an open span (no-op without a tracer).
+    pub fn label(&self, id: SpanId, key: &str, value: &str) {
+        if let Some(t) = &self.tracer {
+            t.add_label(id, key, value);
+        }
+    }
+
     /// Record one per-stage latency observation into the labeled
     /// `ckpt.stage` histogram.
     pub fn stage_latency(&self, stage: &str, level: &str, d: std::time::Duration) {
@@ -506,6 +603,61 @@ mod tests {
             t.close(id);
         }
         assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn add_label_sets_and_replaces() {
+        let t = TraceRecorder::new(true);
+        let s = t.open("transfer", SpanId::NONE, &[("level", "pfs")], 0);
+        t.add_label(s, "tier", "pfs");
+        t.add_label(s, "tier", "ssd"); // replaced, not duplicated
+        t.close(s);
+        let spans = t.snapshot();
+        let labels = &spans[0].labels;
+        assert_eq!(labels.iter().filter(|(k, _)| k == "tier").count(), 1);
+        assert!(labels.contains(&("tier".to_string(), "ssd".to_string())));
+        // Labeling NONE or an unknown id is a no-op.
+        t.add_label(SpanId::NONE, "x", "y");
+        t.add_label(SpanId(999), "x", "y");
+    }
+
+    #[test]
+    fn flight_sink_mirrors_closed_spans_and_instants() {
+        use crate::obs::flight::{self, FlightKind, FlightRecorder};
+        let dir = std::env::temp_dir().join(format!(
+            "veloc-span-sink-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = TraceRecorder::new(true);
+        let f = FlightRecorder::open(&dir, "client", flight::FLIGHT_MAX_BYTES_DEFAULT).unwrap();
+        t.set_flight(Arc::clone(&f));
+        let s = t.open("ckpt", SpanId::NONE, &[("rank", "0")], 0);
+        t.event("cache.hit", s, &[], 0);
+        t.close(s);
+        f.flush();
+        let scan = flight::scan_file(&f.path()).unwrap();
+        let spans: Vec<_> = scan
+            .entries
+            .iter()
+            .filter(|e| e.kind == FlightKind::Span)
+            .collect();
+        assert_eq!(
+            spans.len(),
+            3,
+            "open edge + instant + closed span all mirrored"
+        );
+        let names: Vec<&str> = spans.iter().map(|e| e.body.str_or("name", "")).collect();
+        assert!(names.contains(&"ckpt") && names.contains(&"cache.hit"));
+        // The open-edge record carries no end; the close record does.
+        let ckpt_ends: Vec<bool> = spans
+            .iter()
+            .filter(|e| e.body.str_or("name", "") == "ckpt")
+            .map(|e| e.body.get("end_us").is_some())
+            .collect();
+        assert_eq!(ckpt_ends, vec![false, true]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

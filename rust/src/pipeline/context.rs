@@ -85,6 +85,10 @@ pub struct CkptContext {
     /// parent span every stage span nests under. Defaults to fully inert;
     /// the transport (or daemon dispatch) arms it.
     pub obs: ObsHandle,
+    /// Storage tier the most recent transfer stage routed to (set by the
+    /// transfer module, consumed by the engine as a `tier` span label for
+    /// critical-path attribution).
+    pub route_tier: Option<String>,
 }
 
 impl CkptContext {
@@ -111,6 +115,7 @@ impl CkptContext {
             encoding: "raw",
             results: Vec::new(),
             obs: ObsHandle::default(),
+            route_tier: None,
         }
     }
 
@@ -136,6 +141,7 @@ impl CkptContext {
             encoding: "raw",
             results: Vec::new(),
             obs: ObsHandle::default(),
+            route_tier: None,
         }
     }
 

@@ -262,8 +262,12 @@ impl Engine {
             let level = level_name(m.level());
             let span = ctx.obs.open(m.name(), &[("level", level)], ctx.rank as u64);
             let t0 = Instant::now();
+            ctx.route_tier = None;
             let res = Self::run_stage(m, ctx);
             ctx.obs.stage_latency(m.name(), level, t0.elapsed());
+            if let Some(tier) = ctx.route_tier.take() {
+                ctx.obs.label(span, "tier", &tier);
+            }
             ctx.obs.close(span);
             if let Err(e) = res {
                 if first_err.is_none() {

@@ -41,8 +41,8 @@ pub use corrupt::{mutate, refresh_crc32_trailer, Mutation};
 pub use injection::{BoundaryPlan, FaultGate, FaultState};
 pub use soak::{run_soak, SoakConfig, SoakFailure, SoakOutcome};
 pub use runner::{
-    replay_file, run_scenario, run_scenario_traced, run_scenario_with_tracer,
-    ScenarioReport, SCENARIO_APP,
+    replay_file, run_scenario, run_scenario_traced, run_scenario_with_obs,
+    run_scenario_with_tracer, ScenarioReport, SCENARIO_APP,
 };
 pub use scenario::{
     base_spec, standard_matrix, ContractMode, InjectionPoint, ScenarioSpec, ScopeKind,

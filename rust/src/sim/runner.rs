@@ -113,8 +113,33 @@ pub fn run_scenario_with_tracer(
     spec: &ScenarioSpec,
     tracer: Option<Arc<crate::obs::TraceRecorder>>,
 ) -> (Result<ScenarioReport>, Trace) {
+    run_scenario_with_obs(spec, tracer, None)
+}
+
+/// Like [`run_scenario_with_tracer`], with an optional flight-recorder
+/// directory. When set, the run becomes crash-durable: the runner mirrors
+/// its trace events into a `sim` flight stream, and the runtime/daemon
+/// incarnations under test write their own `runtime`/`daemon` streams
+/// into the same directory — `veloc postmortem <dir>` reconstructs the
+/// whole cross-process story afterwards. The trace the function returns
+/// is identical with or without a flight dir (replay stays exact).
+pub fn run_scenario_with_obs(
+    spec: &ScenarioSpec,
+    tracer: Option<Arc<crate::obs::TraceRecorder>>,
+    flight_dir: Option<&Path>,
+) -> (Result<ScenarioReport>, Trace) {
     let mut trace = Trace::new();
-    let result = run_inner(spec, &mut trace, tracer)
+    if let Some(dir) = flight_dir {
+        match crate::obs::FlightRecorder::open(
+            dir,
+            "sim",
+            crate::obs::flight::FLIGHT_MAX_BYTES_DEFAULT,
+        ) {
+            Ok(f) => trace.set_mirror(f),
+            Err(e) => eprintln!("veloc sim: flight stream unavailable: {e:#}"),
+        }
+    }
+    let result = run_inner(spec, &mut trace, tracer, flight_dir)
         .map_err(|e| {
             anyhow!(
                 "scenario failed (seed {}): {e:#}\n  repro: {}",
@@ -131,6 +156,9 @@ pub fn run_scenario_with_tracer(
             verified_ranks: o.verified_ranks,
             index_rebuilds: o.index_rebuilds,
         });
+    if let Some(f) = trace.mirror() {
+        f.flush();
+    }
     (result, trace)
 }
 
@@ -182,16 +210,17 @@ fn run_inner(
     spec: &ScenarioSpec,
     trace: &mut Trace,
     tracer: Option<Arc<crate::obs::TraceRecorder>>,
+    flight_dir: Option<&Path>,
 ) -> Result<RunOutcome> {
     spec.validate()?;
     // The backend-crash family kills the *daemon*, not ranks: it runs a
     // dedicated two-incarnation lifetime instead of the failure-scope
     // machinery below.
     if matches!(spec.inject, InjectionPoint::BackendCrash) {
-        return run_backend_crash(spec, trace, tracer);
+        return run_backend_crash(spec, trace, tracer, flight_dir);
     }
     if matches!(spec.inject, InjectionPoint::RestartStorm(_)) {
-        return run_restart_storm(spec, trace, tracer);
+        return run_restart_storm(spec, trace, tracer, flight_dir);
     }
     let topo = spec.topology();
     let world = topo.world_size();
@@ -218,7 +247,11 @@ fn run_inner(
             wrapped
         }));
     }
-    let rt = VelocRuntime::new_with_hooks(spec.to_config(), hooks)?;
+    let mut cfg = spec.to_config();
+    if let Some(dir) = flight_dir {
+        cfg.obs.flight_dir = Some(dir.to_path_buf());
+    }
+    let rt = VelocRuntime::new_with_hooks(cfg, hooks)?;
 
     // Delta GC crash window: armed just before the last wave; fires on
     // every release a victim rank attempts while armed (a dead writer
@@ -687,6 +720,7 @@ fn run_backend_crash(
     spec: &ScenarioSpec,
     trace: &mut Trace,
     tracer: Option<Arc<crate::obs::TraceRecorder>>,
+    flight_dir: Option<&Path>,
 ) -> Result<RunOutcome> {
     use crate::backend::{scoped_name, BackendDaemon};
 
@@ -696,6 +730,9 @@ fn run_backend_crash(
     let wait_t = Duration::from_secs(30);
 
     let mut cfg = spec.to_config();
+    if let Some(d) = flight_dir {
+        cfg.obs.flight_dir = Some(d.to_path_buf());
+    }
     let dir = std::env::temp_dir().join(format!(
         "veloc-sim-backend-{}-{}-{}",
         spec.seed,
@@ -949,6 +986,7 @@ fn run_restart_storm(
     spec: &ScenarioSpec,
     trace: &mut Trace,
     tracer: Option<Arc<crate::obs::TraceRecorder>>,
+    flight_dir: Option<&Path>,
 ) -> Result<RunOutcome> {
     use crate::backend::{scoped_name, BackendDaemon};
 
@@ -963,6 +1001,9 @@ fn run_restart_storm(
 
     let mut cfg = spec.to_config();
     cfg.restore.enabled = true; // the storm exercises the serving plane
+    if let Some(d) = flight_dir {
+        cfg.obs.flight_dir = Some(d.to_path_buf());
+    }
     let dir = std::env::temp_dir().join(format!(
         "veloc-sim-storm-{}-{}-{}",
         spec.seed,

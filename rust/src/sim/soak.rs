@@ -16,7 +16,7 @@
 //! the run continues. The final summary serializes to JSON for CI
 //! artifact upload.
 
-use crate::sim::runner::run_scenario_traced;
+use crate::sim::runner::{run_scenario_traced, run_scenario_with_obs};
 use crate::sim::scenario::{standard_matrix, ScenarioSpec};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -34,6 +34,11 @@ pub struct SoakConfig {
     pub base_seed: u64,
     /// Save the event trace of every failing scenario here.
     pub trace_dir: Option<PathBuf>,
+    /// Record a crash-durable flight stream per scenario under this dir.
+    /// Dumps are kept only for *failing* scenarios (one subdirectory per
+    /// failure, named like the saved trace); passing scenarios delete
+    /// theirs so a long soak does not accumulate gigabytes of rings.
+    pub flight_dir: Option<PathBuf>,
     /// Run only scenarios whose injection-point name contains this
     /// substring (test hook; `None` = the whole catalog).
     pub filter: Option<String>,
@@ -50,6 +55,8 @@ pub struct SoakFailure {
     pub error: String,
     /// Where the event trace was saved, if a trace dir was configured.
     pub trace_path: Option<PathBuf>,
+    /// Where the flight dump was kept, if a flight dir was configured.
+    pub flight_path: Option<PathBuf>,
 }
 
 /// Aggregate outcome of a soak run.
@@ -87,8 +94,12 @@ impl SoakOutcome {
                     .set("inject", f.spec.inject.name())
                     .set("repro", f.spec.repro())
                     .set("error", f.error.as_str());
-                match &f.trace_path {
+                let j = match &f.trace_path {
                     Some(p) => j.set("trace", p.to_string_lossy().as_ref()),
+                    None => j,
+                };
+                match &f.flight_path {
+                    Some(p) => j.set("flight", p.to_string_lossy().as_ref()),
                     None => j,
                 }
             })
@@ -130,6 +141,9 @@ pub fn run_soak(cfg: &SoakConfig) -> SoakOutcome {
     if let Some(dir) = &cfg.trace_dir {
         let _ = std::fs::create_dir_all(dir);
     }
+    if let Some(dir) = &cfg.flight_dir {
+        let _ = std::fs::create_dir_all(dir);
+    }
     loop {
         let round = outcome.rounds;
         // Round 0: the exact standard matrix, catalog order, base seed —
@@ -158,32 +172,45 @@ pub fn run_soak(cfg: &SoakConfig) -> SoakOutcome {
                 break;
             }
             let fam = family(&spec.inject.name());
-            let (result, trace) = run_scenario_traced(spec);
+            // Each scenario flies with its own flight-dump directory; the
+            // dump is kept only when the scenario fails (CI uploads it),
+            // otherwise deleted so long soaks stay disk-bounded.
+            let scenario_flight = cfg
+                .flight_dir
+                .as_ref()
+                .map(|dir| dir.join(format!("soak-flight-{}-{}", spec.seed, fam)));
+            let (result, trace) = match &scenario_flight {
+                Some(fd) => run_scenario_with_obs(spec, None, Some(fd)),
+                None => run_scenario_traced(spec),
+            };
             outcome.runs += 1;
-            *outcome.coverage.entry(fam).or_insert(0) += 1;
+            *outcome.coverage.entry(fam.clone()).or_insert(0) += 1;
             match result {
                 Ok(report) => {
+                    if let Some(fd) = &scenario_flight {
+                        let _ = std::fs::remove_dir_all(fd);
+                    }
                     if cfg.verbose {
                         println!("soak ok   {}", report.summary());
                     }
                 }
                 Err(e) => {
                     let trace_path = cfg.trace_dir.as_ref().map(|dir| {
-                        let p = dir.join(format!(
-                            "soak-fail-{}-{}.json",
-                            spec.seed,
-                            family(&spec.inject.name())
-                        ));
+                        let p = dir.join(format!("soak-fail-{}-{}.json", spec.seed, fam));
                         let _ = trace.save(spec, &p);
                         p
                     });
                     // The one-line seed repro contract: everything needed
                     // to replay this exact failure, on one line.
                     println!("soak FAIL [{}] {:#} | repro: {}", spec.inject.name(), e, spec.repro());
+                    if let Some(fd) = &scenario_flight {
+                        println!("soak FAIL flight dump kept: {}", fd.display());
+                    }
                     outcome.failures.push(SoakFailure {
                         spec: spec.clone(),
                         error: format!("{e:#}"),
                         trace_path,
+                        flight_path: scenario_flight,
                     });
                 }
             }
@@ -208,6 +235,7 @@ mod tests {
             budget: Duration::ZERO,
             base_seed: 9000,
             trace_dir: None,
+            flight_dir: None,
             filter: None,
             verbose: false,
         };
@@ -236,6 +264,7 @@ mod tests {
             budget: Duration::ZERO,
             base_seed: 41,
             trace_dir: None,
+            flight_dir: None,
             filter: Some("after-checkpoint".to_string()),
             verbose: false,
         };
@@ -249,5 +278,29 @@ mod tests {
         });
         assert_eq!(none.runs, 0);
         assert_eq!(none.rounds, 0);
+    }
+
+    #[test]
+    fn passing_scenarios_delete_their_flight_dumps() {
+        let dir = std::env::temp_dir().join("veloc-soak-flight-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = run_soak(&SoakConfig {
+            budget: Duration::ZERO,
+            base_seed: 77,
+            trace_dir: None,
+            flight_dir: Some(dir.clone()),
+            filter: Some("after-checkpoint".to_string()),
+            verbose: false,
+        });
+        assert!(out.runs > 0);
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        // Every scenario passed, so every per-scenario dump was deleted:
+        // the flight root exists but holds nothing.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert!(leftovers.is_empty(), "kept dumps for passing runs: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

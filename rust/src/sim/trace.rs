@@ -4,14 +4,21 @@
 //! traces replay exactly: re-running the embedded spec must reproduce the
 //! event list byte for byte.
 
+use crate::obs::FlightRecorder;
 use crate::sim::scenario::ScenarioSpec;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
     events: Vec<Json>,
+    /// Optional crash-durable mirror: every pushed event also appends to
+    /// this flight stream (as a `sim.<ev>` record). The mirror is pure
+    /// output — saved traces, diffs and replay comparisons never read it,
+    /// so replay determinism is untouched.
+    mirror: Option<Arc<FlightRecorder>>,
 }
 
 impl Trace {
@@ -19,7 +26,20 @@ impl Trace {
         Trace::default()
     }
 
+    /// Attach a flight-stream mirror for all subsequently pushed events.
+    pub fn set_mirror(&mut self, flight: Arc<FlightRecorder>) {
+        self.mirror = Some(flight);
+    }
+
+    /// The attached flight mirror, if any.
+    pub fn mirror(&self) -> Option<&Arc<FlightRecorder>> {
+        self.mirror.as_ref()
+    }
+
     pub fn push(&mut self, event: Json) {
+        if let Some(f) = &self.mirror {
+            f.event_json(&event);
+        }
         self.events.push(event);
     }
 
@@ -59,7 +79,13 @@ impl Trace {
             .and_then(Json::as_arr)
             .ok_or_else(|| anyhow!("{}: no \"events\" array", path.display()))?
             .to_vec();
-        Ok((spec, Trace { events }))
+        Ok((
+            spec,
+            Trace {
+                events,
+                mirror: None,
+            },
+        ))
     }
 
     /// First divergence between this (recorded) trace and another

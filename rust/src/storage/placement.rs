@@ -82,11 +82,12 @@
 //! ```
 
 use crate::metrics::Metrics;
+use crate::obs::signals::{SignalsBus, SIG_TIER_HEALTH_PREFIX};
 use crate::storage::{StorageTier, TransferStat};
 use crate::util::bufpool::Bytes;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// How the engine ranks eligible tiers for a flush.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -238,6 +239,7 @@ pub struct PlacementEngine {
     metrics: Option<Arc<Metrics>>,
     failovers: AtomicU64,
     breaker_trips: AtomicU64,
+    signals: OnceLock<Arc<SignalsBus>>,
 }
 
 impl PlacementEngine {
@@ -260,7 +262,16 @@ impl PlacementEngine {
             metrics,
             failovers: AtomicU64::new(0),
             breaker_trips: AtomicU64::new(0),
+            signals: OnceLock::new(),
         }))
+    }
+
+    /// Attach a signals bus: every EWMA health update then also samples
+    /// `tier.health.<id>`. One-shot — later calls are ignored (the engine
+    /// is shared via `Arc`, so constructor threading would churn every
+    /// call site).
+    pub fn set_signals(&self, bus: Arc<SignalsBus>) {
+        let _ = self.signals.set(bus);
     }
 
     /// The configured knobs.
@@ -408,6 +419,12 @@ impl PlacementEngine {
             let obs = (stat.modeled.as_secs_f64() / predicted).max(1e-3);
             let mut m = self.states[i].mult.lock().unwrap();
             *m = self.cfg.ewma_alpha * obs + (1.0 - self.cfg.ewma_alpha) * *m;
+            let mult = *m;
+            drop(m);
+            if let Some(bus) = self.signals.get() {
+                let id = self.tiers[i].id();
+                bus.sample(&format!("{SIG_TIER_HEALTH_PREFIX}{id}"), mult);
+            }
         }
         self.states[i].consec_errors.store(0, Ordering::SeqCst);
         if self.states[i].breaker_open.swap(false, Ordering::SeqCst) {
@@ -653,6 +670,28 @@ mod tests {
             "routing must adapt away from the degraded tier: {dests:?}"
         );
         assert!(e.health("burst-buffer").unwrap().multiplier > 4.0);
+    }
+
+    #[test]
+    fn signals_bus_samples_tier_health_on_observations() {
+        let e = engine(PlacementPolicy::Static, pool(5e9, 20e9));
+        let bus = SignalsBus::new(16);
+        e.set_signals(Arc::clone(&bus));
+        for i in 0..3 {
+            e.put(&format!("k{i}"), &payload(1 << 16)).unwrap();
+        }
+        let view = bus.view();
+        let series = view
+            .series(&format!("{SIG_TIER_HEALTH_PREFIX}pfs"))
+            .expect("routed tier sampled");
+        assert_eq!(series.points.len(), 3);
+        assert!(series.points.iter().all(|p| p.value > 0.0));
+        // A second set_signals is a no-op — the first bus keeps receiving.
+        e.set_signals(SignalsBus::new(16));
+        e.put("k-extra", &payload(1 << 16)).unwrap();
+        let view = bus.view();
+        let series = view.series(&format!("{SIG_TIER_HEALTH_PREFIX}pfs")).unwrap();
+        assert_eq!(series.points.len(), 4);
     }
 
     #[test]

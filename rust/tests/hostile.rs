@@ -23,6 +23,8 @@ use veloc::backend::scan_records;
 use veloc::backend::wire::{self, WireError};
 use veloc::delta::chunker::Fingerprint;
 use veloc::delta::manifest::{self, ChunkRef, DeltaManifest, RegionChunks};
+use veloc::obs::flight;
+use veloc::obs::SpanRec;
 use veloc::sim::{mutate, refresh_crc32_trailer};
 use veloc::util::json::Json;
 use veloc::util::rng::Rng;
@@ -556,4 +558,133 @@ fn corrupted_wal_on_disk_replays_clean_for_every_seed() {
         assert!(pending.len() <= 2, "seed {seed}: invented pending entries");
     }
     let _ = std::fs::remove_dir_all(&base);
+}
+
+// -------------------------------------------------- flight-recorder streams
+
+/// A realistic `.vfr` stream image: meta, events (an ack/settle pair plus
+/// a stranded ack), a closed span, and a signals snapshot — written by
+/// the real recorder so the sample tracks the format.
+fn sample_flight_stream() -> Vec<u8> {
+    let dir = std::env::temp_dir().join(format!(
+        "veloc-hostile-flight-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let f = flight::FlightRecorder::open(&dir, "daemon", 1 << 20).unwrap();
+    f.event("backend.ack", &[("id", "1"), ("job", "train-a"), ("version", "3")]);
+    f.event("backend.settle", &[("id", "1"), ("ok", "true")]);
+    f.event("backend.ack", &[("id", "2"), ("job", "train-a"), ("version", "4")]);
+    f.span(
+        &SpanRec {
+            id: 1,
+            parent: 0,
+            name: "ckpt".to_string(),
+            start_us: 10,
+            end_us: Some(90),
+            labels: vec![("rank".to_string(), "0".to_string())],
+            tid: 0,
+            instant: false,
+        },
+        flight::unix_us(),
+    );
+    let bus = veloc::obs::SignalsBus::new(8);
+    bus.sample("tier.health.pfs", 1.0);
+    f.signals(&bus.snapshot());
+    f.flush();
+    let bytes = std::fs::read(f.path()).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    bytes
+}
+
+#[test]
+fn flight_one_bit_flip_keeps_a_clean_prefix() {
+    let stream = sample_flight_stream();
+    let clean = flight::scan_bytes(&stream);
+    assert!(clean.truncated.is_none(), "{:?}", clean.truncated);
+    assert!(clean.entries.len() >= 6, "meta + 3 events + span + snapshot");
+    for seed in 0..SWEEP {
+        let bent = flip_one_bit(&stream, seed);
+        let scan = no_panic("flight 1-bit", seed, || flight::scan_bytes(&bent));
+        // Frames are CRC-trailed: a single-bit error can never decode, so
+        // whatever the scan returns is an intact prefix of the original.
+        assert!(scan.entries.len() <= clean.entries.len(), "seed {seed}");
+        for (i, e) in scan.entries.iter().enumerate() {
+            assert_eq!(
+                e.body.to_string(),
+                clean.entries[i].body.to_string(),
+                "seed {seed}: record {i} silently altered"
+            );
+        }
+    }
+}
+
+#[test]
+fn flight_streams_survive_the_mutation_catalog() {
+    let stream = sample_flight_stream();
+    for seed in 0..SWEEP {
+        let (m, bent) = mutate(&stream, seed);
+        no_panic(m.name(), seed, || {
+            let scan = flight::scan_bytes(&bent);
+            // The whole postmortem read path must also hold: span
+            // reconstruction, ack pairing and verify all run over
+            // whatever decoded.
+            for e in &scan.entries {
+                let _ = flight::entry_to_span(e);
+            }
+            let _ = flight::unsettled(&scan.entries);
+            let scans = vec![(std::path::PathBuf::from("bent.vfr"), scan)];
+            let _ = flight::verify(&scans);
+        });
+    }
+}
+
+#[test]
+fn flight_inflated_length_fields_never_size_an_allocation() {
+    // A hostile length field must stop the scan with a typed reason, not
+    // reach an allocator. Overwrite the first frame's length with
+    // escalating lies, including the classic 0xFFFFFFFF.
+    let stream = sample_flight_stream();
+    let header = 8; // magic + version
+    for lie in [0u32, 1, 8, (1 << 20) + 1, u32::MAX / 2, u32::MAX] {
+        let mut bent = stream.clone();
+        bent[header..header + 4].copy_from_slice(&lie.to_le_bytes());
+        let scan = no_panic("flight length-lie", lie as u64, || flight::scan_bytes(&bent));
+        assert!(scan.entries.is_empty(), "len {lie}: decoded a lying frame");
+        assert!(scan.truncated.is_some(), "len {lie}: no typed truncation reason");
+    }
+    // A length that stays in bounds but points past the real frame end:
+    // the CRC trailer is recomputed over the wrong bytes and must miss.
+    let mut bent = stream.clone();
+    let real = u32::from_le_bytes(bent[header..header + 4].try_into().unwrap());
+    bent[header..header + 4].copy_from_slice(&(real + 4).to_le_bytes());
+    let scan = flight::scan_bytes(&bent);
+    assert!(scan.entries.is_empty());
+    assert!(scan.truncated.is_some());
+}
+
+#[test]
+fn flight_torn_tail_is_reported_not_fatal() {
+    // Truncate at every byte boundary inside the last frame: the scan
+    // keeps everything before it and names the tear.
+    let stream = sample_flight_stream();
+    let clean = flight::scan_bytes(&stream);
+    let last_start = {
+        // Walk frames to find where the final one begins.
+        let mut off = 8usize;
+        let mut start = off;
+        while off < stream.len() {
+            let len =
+                u32::from_le_bytes(stream[off..off + 4].try_into().unwrap()) as usize;
+            start = off;
+            off += 4 + len + 4;
+        }
+        start
+    };
+    for cut in last_start + 1..stream.len() {
+        let scan = flight::scan_bytes(&stream[..cut]);
+        assert_eq!(scan.entries.len(), clean.entries.len() - 1, "cut {cut}");
+        assert!(scan.truncated.is_some(), "cut {cut}: tear not reported");
+    }
 }

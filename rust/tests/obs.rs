@@ -105,6 +105,85 @@ fn traced_wave_timeline_is_well_formed() {
     assert_eq!(events.len(), spans.len());
 }
 
+/// The Chrome trace-event export is an external contract
+/// (`chrome://tracing`, Perfetto, CI tooling all parse it): pin the
+/// exact schema with a golden file. Wall-clock fields (`ts`, `dur`) are
+/// zeroed before comparison; everything else — key set, event phases,
+/// tree metadata in `args`, label placement — must match the checked-in
+/// golden byte for byte.
+#[test]
+fn chrome_trace_export_matches_golden_schema() {
+    use veloc::obs::{SpanId, TraceRecorder};
+    use veloc::util::json::Json;
+
+    let t = TraceRecorder::new(true);
+    let root = t.open("wave v1", SpanId::NONE, &[("version", "1")], 0);
+    let cmd = t.open("ckpt", root, &[("level", "local"), ("rank", "0")], 3);
+    t.event("cache.hit", cmd, &[("key", "app/1/0")], 3);
+    t.close(cmd);
+    t.close(root);
+
+    let exported = t.to_chrome_json();
+    let events = exported.get("traceEvents").unwrap().as_arr().unwrap();
+    let normalized: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut n = e.clone().set("ts", 0u64);
+            if n.get("dur").is_some() {
+                n = n.set("dur", 0u64);
+            }
+            n
+        })
+        .collect();
+    let normalized = Json::obj()
+        .set("displayTimeUnit", "ms")
+        .set("traceEvents", Json::Arr(normalized));
+
+    let golden_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/chrome_trace.json");
+    let golden = std::fs::read_to_string(&golden_path).unwrap();
+    assert_eq!(
+        Json::parse(&golden).expect("golden file parses"),
+        normalized,
+        "chrome trace schema drifted from tests/golden/chrome_trace.json"
+    );
+    assert_eq!(
+        normalized.to_pretty(),
+        golden.trim_end(),
+        "chrome trace serialization drifted from the golden file"
+    );
+}
+
+/// Span-ring overflow is *surfaced*, never silent: past capacity the
+/// recorder counts drops, the runtime publishes them as the
+/// `obs.spans.dropped` gauge on drain, and the one-per-run warning has
+/// fired (the counter is the part a test can see).
+#[test]
+fn span_overflow_surfaces_as_dropped_metric() {
+    let mut cfg = VelocConfig::default().with_nodes(2, 2);
+    cfg.obs.trace = true;
+    cfg.obs.span_capacity = 16; // floor capacity: a 4-rank wave overflows
+    let rt = VelocRuntime::new(cfg).unwrap();
+    let clients: Vec<_> = (0..4).map(|r| rt.client(r)).collect();
+    for c in &clients {
+        c.mem_protect(0, vec![(c.rank() + 1) as u8; 32 << 10]);
+    }
+    for c in &clients {
+        c.checkpoint("app", 1).unwrap();
+    }
+    for c in &clients {
+        c.checkpoint_wait_done("app", 1).unwrap();
+    }
+    rt.drain();
+    let dropped = rt.tracer().dropped();
+    assert!(dropped > 0, "16-span ring must overflow under a 4-rank wave");
+    assert_eq!(
+        rt.metrics().gauge("obs.spans.dropped"),
+        dropped,
+        "drain must publish the drop count as a gauge"
+    );
+}
+
 /// Tracing off (the default) records nothing and costs nothing, while
 /// the metrics plane keeps flowing.
 #[test]

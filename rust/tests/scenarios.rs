@@ -9,8 +9,8 @@
 
 use veloc::pipeline::EngineMode;
 use veloc::sim::{
-    base_spec, replay_file, run_scenario, run_scenario_traced, standard_matrix,
-    InjectionPoint, ScopeKind,
+    base_spec, replay_file, run_scenario, run_scenario_traced, run_scenario_with_obs,
+    run_scenario_with_tracer, standard_matrix, InjectionPoint, ScopeKind,
 };
 
 /// The full sweep: >= 24 distinct (stack-permutation x injection-point)
@@ -172,6 +172,140 @@ fn placement_tier_outage_and_degradation_scenarios_pass() {
             spec.inject.name()
         );
     }
+}
+
+/// Tentpole acceptance: a backend-crash scenario run with a flight
+/// directory leaves a crash-durable dump that `postmortem --verify` can
+/// fully reconstruct — sim + daemon streams verify clean across both
+/// daemon incarnations, the timeline shows the final wave acked but
+/// unsettled at the instant of the crash (and settled after replay), and
+/// the persisted signals survive with live failure-interarrival and
+/// tier-health series.
+#[test]
+fn backend_crash_flight_dump_reconstructs_the_crash() {
+    use veloc::obs::flight;
+    use veloc::obs::{FlightKind, SignalsView};
+
+    let spec = {
+        let mut s = standard_matrix(0xF117)
+            .into_iter()
+            .find(|s| matches!(s.inject, InjectionPoint::BackendCrash))
+            .expect("matrix carries a backend-crash scenario");
+        // Adaptive placement so the tier-health signal has live series.
+        s.placement = Some("fastest-eligible".to_string());
+        s
+    };
+    let dir = std::env::temp_dir().join(format!("veloc-flight-crash-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (result, _trace) = run_scenario_with_obs(&spec, None, Some(&dir));
+    result.unwrap_or_else(|e| panic!("{e:#}"));
+
+    let scans = flight::read_dir(&dir).unwrap();
+    let report = flight::verify(&scans).unwrap_or_else(|e| panic!("verify FAILED: {e}"));
+    assert!(
+        report.processes.iter().any(|p| p == "daemon"),
+        "daemon stream missing: {:?}",
+        report.processes
+    );
+    assert!(
+        report.processes.iter().any(|p| p == "sim"),
+        "sim stream missing: {:?}",
+        report.processes
+    );
+    assert!(report.snapshots > 0, "no persisted signals snapshots");
+
+    let merged = flight::merge(&scans);
+    let crash_at = merged
+        .iter()
+        .position(|e| {
+            e.kind == FlightKind::Event && e.body.str_or("name", "") == "daemon.crash"
+        })
+        .expect("daemon.crash event on the timeline");
+    // At the instant of the crash the final wave is acked, journaled and
+    // unsettled — one stranded submission per rank, at the last version.
+    let world = spec.nodes * spec.ranks_per_node;
+    let last_version = (spec.waves * spec.steps_per_wave).to_string();
+    let stranded = flight::unsettled(&merged[..=crash_at]);
+    assert_eq!(
+        stranded.len(),
+        world,
+        "one acked-but-unsettled submission per rank: {stranded:?}"
+    );
+    for s in &stranded {
+        assert_eq!(s.str_or("version", "?"), last_version, "{s:?}");
+    }
+    // After the second incarnation's journal replay, the books balance.
+    assert!(
+        flight::unsettled(&merged).is_empty(),
+        "replay must settle every stranded ack"
+    );
+
+    let view = SignalsView::from_entries(&merged);
+    let failures = view
+        .failure_interarrival()
+        .expect("failure inter-arrival series persisted");
+    assert!(!failures.points.is_empty());
+    assert!(
+        !view.tier_health().is_empty(),
+        "tier health series persisted; got {:?}",
+        view.names()
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tentpole acceptance: critical-path attribution over a traced
+/// tier-degraded run names the injected slow tier. The degradation lands
+/// before the penultimate wave; that wave's transfer rides the degraded
+/// tier and must dominate its critical path with the tier label carried
+/// through for blame.
+#[test]
+fn tier_degraded_analyze_names_the_slow_tier() {
+    use veloc::obs::{critpath, TraceRecorder};
+
+    let spec = standard_matrix(0x71E77)
+        .into_iter()
+        .find(|s| matches!(s.inject, InjectionPoint::TierDegraded(_, _)))
+        .expect("matrix carries a tier-degraded scenario");
+    let InjectionPoint::TierDegraded(ref slow_tier, _) = spec.inject else {
+        unreachable!()
+    };
+    let tracer = TraceRecorder::new(true);
+    let (result, _trace) = run_scenario_with_tracer(&spec, Some(std::sync::Arc::clone(&tracer)));
+    result.unwrap_or_else(|e| panic!("{e:#}"));
+
+    let waves = critpath::analyze(&tracer.snapshot());
+    assert!(
+        waves.len() >= spec.waves as usize,
+        "every completed wave analyzes: got {} of {}",
+        waves.len(),
+        spec.waves
+    );
+    let blamed = waves.iter().find(|w| {
+        w.blame
+            .iter()
+            .any(|b| b.tier.as_deref() == Some(slow_tier.as_str()))
+    });
+    let blamed = blamed.unwrap_or_else(|| {
+        panic!(
+            "no wave blames the injected slow tier {slow_tier}: {:?}",
+            waves
+                .iter()
+                .map(|w| (w.version, w.blame.first().map(|b| (b.stage.clone(), b.tier.clone()))))
+                .collect::<Vec<_>>()
+        )
+    });
+    // The degraded tier is blamed through the transfer stage, and the
+    // human report carries the attribution.
+    assert!(
+        blamed
+            .blame
+            .iter()
+            .any(|b| b.stage == "transfer" && b.tier.as_deref() == Some(slow_tier.as_str())),
+        "blame: {:?}",
+        blamed.blame
+    );
+    assert!(critpath::render(&waves).contains(&format!("tier={slow_tier}")));
 }
 
 /// A failing exploration shrinks to `seed + spec`: the error message
